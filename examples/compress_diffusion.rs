@@ -1,0 +1,40 @@
+//! Diffusion scenario — compress the DDPM-style U-Net, then generate
+//! images with DDIM sampling through the gated graph and score them with
+//! FDD (the Table 4 workload).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example compress_diffusion
+//! ```
+
+use layermerge::experiments::{figures, Ctx};
+use layermerge::pipeline::{Method, PipelineCfg};
+
+fn main() -> anyhow::Result<()> {
+    let ctx = Ctx::new(std::path::Path::new("artifacts"),
+                       std::env::current_dir()?, PipelineCfg::default())?;
+    let mut pipe = ctx.pipeline("ddpmish")?;
+    println!(
+        "ddpmish: {} convs, diffusion loss {:.4}, eager {:.2}ms",
+        pipe.model.spec.len(), -pipe.orig_metric, pipe.orig_lat_eager
+    );
+    let fdd0 = figures::fdd_of_gates(
+        &ctx, &pipe, &pipe.pretrained.clone(), &pipe.model.spec.pristine_gates())?;
+    println!("original FDD (8-step DDIM samples vs data): {fdd0:.3}\n");
+
+    for budget in [0.9, 0.75] {
+        let c = pipe.run(Method::LayerMerge, budget)?;
+        let fdd = figures::fdd_of_gates(&ctx, &pipe, &c.finetuned, &c.gates)?;
+        println!(
+            "LayerMerge-{:.0}%: depth {} -> {}, diff loss {:.4}, FDD {:.3}, \
+             eager {:.2}x, fused {:.2}x\n",
+            budget * 100.0,
+            pipe.model.spec.len(),
+            c.depth,
+            -c.merged_metric,
+            fdd,
+            pipe.orig_lat_eager / c.lat_eager_ms,
+            pipe.orig_lat_fused / c.lat_fused_ms,
+        );
+    }
+    Ok(())
+}

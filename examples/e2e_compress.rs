@@ -1,0 +1,81 @@
+//! End-to-end validation driver (the DESIGN.md §5 headline run).
+//!
+//! Exercises every layer of the stack on a real small workload:
+//!   1. pretrain the resnetish classifier on the synthetic task through
+//!      the AOT train-step graph (L2+L1 lowered, L3 driving),
+//!   2. build the measured latency + importance tables through PJRT,
+//!   3. solve Algorithm 1 at three budgets,
+//!   4. fine-tune each pruned network, merge (parameter-space convolution
+//!      with Dirac folding), deploy,
+//!   5. verify merged-vs-pruned numerics and fused-vs-eager equivalence,
+//!   6. measure real wall-clock latency in both formats,
+//!   7. record the Table-1-shaped rows into EXPERIMENTS.md §e2e.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_compress
+//! ```
+
+use layermerge::exec::{Format, Plan};
+use layermerge::experiments::Ctx;
+use layermerge::pipeline::{Method, PipelineCfg};
+use layermerge::report;
+use layermerge::train;
+
+fn main() -> anyhow::Result<()> {
+    let repo = std::env::current_dir()?;
+    let ctx = Ctx::new(std::path::Path::new("artifacts"), repo.clone(),
+                       PipelineCfg::default())?;
+    let mut pipe = ctx.pipeline("resnetish")?;
+    let mut t = report::compression_table(
+        "E2E — resnetish compressed at three budgets (measured latencies)",
+        true,
+    );
+    t.row(vec![
+        "resnetish (original)".into(),
+        format!("{:.2}", pipe.orig_metric * 100.0),
+        "1.00x".into(),
+        "1.00x".into(),
+        format!("{}", pipe.model.spec.len()),
+        "0.00".into(),
+    ]);
+
+    let mut verify_lines = String::new();
+    for budget in [0.8, 0.65, 0.5] {
+        let sol = pipe.solve(Method::LayerMerge, budget)?;
+        println!("budget {budget}: {}", sol.summary());
+        let c = pipe.finetune_and_deploy(Method::LayerMerge, budget, &sol, None, false)?;
+
+        // numerics: pruned gated graph vs deployed merged plan
+        let a_set: std::collections::BTreeSet<usize> = sol.a.iter().copied().collect();
+        let gates = pipe.model.spec.solution_gates(&a_set, &sol.c, &sol.spans);
+        let plan = Plan::from_solution(&pipe.model.spec, &c.finetuned, &sol.a,
+                                       &sol.c, &sol.spans)?;
+        let batch = pipe.gen.batch(train::STREAM_EVAL, 0);
+        let x = match &batch {
+            layermerge::model::Batch::Classify { x, .. } => x.clone(),
+            _ => unreachable!(),
+        };
+        let gated = pipe.model.forward(&c.finetuned, &gates, &batch)?;
+        let eager = plan.forward(&pipe.model.rt, &ctx.man, &x, None, Format::Eager)?;
+        let fused = plan.forward(&pipe.model.rt, &ctx.man, &x, None, Format::Fused)?;
+        let pad_dev = eager.rel_l2(&gated);
+        let fmt_dev = fused.rel_l2(&eager);
+        anyhow::ensure!(fmt_dev < 1e-4,
+            "fused and eager formats must agree, got rel_l2 {fmt_dev}");
+        verify_lines.push_str(&format!(
+            "- budget {budget}: merged-vs-pruned logits rel_l2 {pad_dev:.4} \
+             (SAME-padding reorder boundary effect, DESIGN.md §4); \
+             fused-vs-eager rel_l2 {fmt_dev:.2e}; \
+             pruned acc {:.2}%, merged acc {:.2}%\n",
+            c.pruned_metric * 100.0, c.merged_metric * 100.0,
+        ));
+        t.row(report::row(&c, pipe.orig_metric, pipe.orig_lat_eager,
+                          pipe.orig_lat_fused, true));
+    }
+    t.print();
+    println!("{verify_lines}");
+    let body = format!("{}\n**Numerics verification**\n\n{}", t.markdown(), verify_lines);
+    report::record(&repo.join("EXPERIMENTS.md"), "e2e", &body)?;
+    println!("recorded to EXPERIMENTS.md §e2e");
+    Ok(())
+}

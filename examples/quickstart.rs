@@ -1,0 +1,51 @@
+//! Quickstart — compress one model with LayerMerge in a few lines.
+//!
+//! ```bash
+//! make artifacts                       # once: AOT-lower the gated models
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Fast mode (analytical latency + short schedules) keeps this under a
+//! couple of minutes; drop `LM_FAST` for measured latencies.
+
+use layermerge::experiments::Ctx;
+use layermerge::pipeline::{Method, PipelineCfg};
+
+fn main() -> anyhow::Result<()> {
+    std::env::set_var("LM_FAST", "1"); // quickstart: fast mode
+    let ctx = Ctx::new(
+        std::path::Path::new("artifacts"),
+        std::env::current_dir()?,
+        PipelineCfg::default(),
+    )?;
+
+    // 1. load + pretrain (cached across runs) the ResNet-34 analogue
+    let mut pipe = ctx.pipeline("resnetish")?;
+    println!(
+        "original: {} conv layers, eval acc {:.1}%, latency {:.2} ms",
+        pipe.model.spec.len(),
+        pipe.orig_metric * 100.0,
+        pipe.orig_lat_eager
+    );
+
+    // 2. build the T/I lookup tables (Sec. 3.2) and solve Algorithm 1
+    //    for 65% of the original latency
+    let sol = pipe.solve(Method::LayerMerge, 0.65)?;
+    println!("solution: {}", sol.summary());
+
+    // 3. fine-tune the pruned network, merge (Algorithm 2), deploy
+    let c = pipe.run(Method::LayerMerge, 0.65)?;
+    println!(
+        "compressed: depth {} -> {}, acc {:.1}% (pruned {:.1}%), \
+         eager {:.2} ms ({:.2}x), fused {:.2} ms ({:.2}x)",
+        pipe.model.spec.len(),
+        c.depth,
+        c.merged_metric * 100.0,
+        c.pruned_metric * 100.0,
+        c.lat_eager_ms,
+        pipe.orig_lat_eager / c.lat_eager_ms,
+        c.lat_fused_ms,
+        pipe.orig_lat_fused / c.lat_fused_ms,
+    );
+    Ok(())
+}

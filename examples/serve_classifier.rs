@@ -1,0 +1,79 @@
+//! Serving scenario — deploy a compressed classifier and serve a request
+//! stream, reporting throughput and latency percentiles before/after
+//! compression.  This is the "latency-critical application" workload the
+//! paper's introduction motivates (mobile / self-driving inference).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_classifier
+//! ```
+
+use std::time::Instant;
+
+use layermerge::exec::{Format, Plan};
+use layermerge::experiments::Ctx;
+use layermerge::pipeline::{host_accuracy, Method, PipelineCfg};
+use layermerge::train;
+
+const REQUESTS: usize = 40;
+
+fn serve(
+    name: &str,
+    plan: &Plan,
+    pipe: &layermerge::pipeline::Pipeline,
+    ctx: &Ctx,
+) -> anyhow::Result<(f64, f64, f64, f32)> {
+    // warm-up
+    for i in 0..3 {
+        let b = pipe.gen.batch(train::STREAM_EVAL, i);
+        if let layermerge::model::Batch::Classify { x, .. } = &b {
+            plan.forward(&pipe.model.rt, &ctx.man, x, None, Format::Fused)?;
+        }
+    }
+    let mut lat = Vec::with_capacity(REQUESTS);
+    let mut correct = 0.0f32;
+    let t0 = Instant::now();
+    for i in 0..REQUESTS {
+        let b = pipe.gen.batch(train::STREAM_EVAL, i as u64);
+        if let layermerge::model::Batch::Classify { x, y } = &b {
+            let t = Instant::now();
+            let logits = plan.forward(&pipe.model.rt, &ctx.man, x, None, Format::Fused)?;
+            lat.push(t.elapsed().as_secs_f64() * 1e3);
+            correct += host_accuracy(&logits, y);
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p50 = lat[lat.len() / 2];
+    let p95 = lat[(lat.len() as f64 * 0.95) as usize];
+    let imgs_per_s = (REQUESTS * pipe.model.spec.batch) as f64 / wall;
+    println!(
+        "{name:<28} p50 {p50:>7.2}ms  p95 {p95:>7.2}ms  {imgs_per_s:>8.0} img/s  acc {:.1}%",
+        correct / REQUESTS as f32 * 100.0
+    );
+    Ok((p50, p95, imgs_per_s, correct / REQUESTS as f32))
+}
+
+fn main() -> anyhow::Result<()> {
+    let ctx = Ctx::new(std::path::Path::new("artifacts"),
+                       std::env::current_dir()?, PipelineCfg::default())?;
+    let mut pipe = ctx.pipeline("mnv2ish-1.0")?;
+
+    println!("serving {} batched requests (batch {})\n", REQUESTS, pipe.model.spec.batch);
+    let orig = Plan::original(&pipe.model.spec, &pipe.pretrained)?;
+    let (p50_o, _, thr_o, _) = serve("original mnv2ish-1.0", &orig, &pipe, &ctx)?;
+
+    for budget in [0.65, 0.5] {
+        let c = pipe.run(Method::LayerMerge, budget)?;
+        let plan = Plan::from_solution(
+            &pipe.model.spec, &c.finetuned, &c.solution.a, &c.solution.c,
+            &c.solution.spans,
+        )?;
+        let (p50, _, thr, _) =
+            serve(&format!("LayerMerge-{:.0}%", budget * 100.0), &plan, &pipe, &ctx)?;
+        println!(
+            "  -> speedup p50 {:.2}x, throughput {:.2}x, depth {} -> {}\n",
+            p50_o / p50, thr / thr_o, pipe.model.spec.len(), plan.depth(),
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,310 @@
+"""AOT compile path: lower every artifact the Rust coordinator needs.
+
+Run once by ``make artifacts``; Python never executes after this.  The
+interchange format is **HLO text**, not serialized HloModuleProto — jax
+>= 0.5 emits protos with 64-bit instruction ids that xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Artifact inventory (consumed by rust/src/runtime + exec + train):
+
+  specs/<model>.spec.json      network IR (single source of truth)
+  <model>/init.bin             flat f32 init parameters (little-endian)
+  <model>/fwd.hlo.txt          gated forward
+  <model>/loss_eval.hlo.txt    gated loss + metric
+  <model>/train_step.hlo.txt   gated SGD-momentum step
+  <model>/distill_step.hlo.txt gated KD step            (classify)
+  <model>/embed.hlo.txt        penultimate features     (resnetish: FDD)
+  <model>/sample_step.hlo.txt  one DDIM step            (diffusion)
+  conv/<sig>.<variant>.hlo.txt merged-conv modules for the latency table
+                               and the merged-network executor:
+                                 plain    (x,w,b) -> conv+b          ("PyTorch format" op)
+                                 fa_<act> (x,w,b) -> act(conv+b)     ("TensorRT format" op)
+                                 far_<act>(x,w,b,r) -> act(conv+b+r)
+  conv/<sig>.pallas.hlo.txt    same conv through the L1 Pallas kernel
+                               (structure/correctness flavor)
+  ew/<key>.hlo.txt             elementwise ops for the layerwise executor
+                               (act/add/gn/attn/upsample/head)
+  manifest.json                index of all of the above
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model, specs
+from .kernels import conv as pallas_conv
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower(fn, *shapes) -> str:
+    args = [jax.ShapeDtypeStruct(s, F32) for s in shapes]
+    # keep_unused: the Rust caller passes every declared argument — e.g.
+    # the gn gate vector even for norm-free models — so the compiled
+    # signature must not drop unused parameters.
+    return to_hlo_text(jax.jit(fn, keep_unused=True).lower(*args))
+
+
+def write(path: str, text: str, force: bool) -> None:
+    if not force and os.path.exists(path):
+        return
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(text)
+
+
+# ---------------------------------------------------------------------------
+# Per-model artifacts
+# ---------------------------------------------------------------------------
+
+
+def model_artifacts(sp: specs.Spec, out: str, force: bool) -> dict:
+    B, H, W, C = sp.batch, sp.h, sp.w, sp.c
+    P, L = sp.param_count, sp.L
+    g = (L,)
+    arts = {}
+
+    def emit(name, fn, *shapes):
+        path = f"{sp.name}/{name}.hlo.txt"
+        write(os.path.join(out, path), lower(fn, *shapes), force)
+        arts[name] = path
+
+    if sp.task == "classify":
+        x = (B, H, W, C)
+        y = (B, sp.num_classes)
+        emit("fwd", model.fwd(sp), (P,), g, g, g, x)
+        emit("loss_eval", model.loss_eval(sp), (P,), g, g, g, x, y)
+        emit("train_step", model.train_step(sp), (P,), (P,), g, g, g, x, y, ())
+        emit("distill_step", model.distill_step(sp),
+             (P,), (P,), (P,), g, g, g, x, y, ())
+        emit("embed", model.embed(sp), (P,), g, g, g, x)
+    else:
+        x = (B, H, W, C)
+        bs = (B,)
+        emit("fwd", model.fwd(sp), (P,), g, g, g, x, bs)
+        emit("loss_eval", model.loss_eval(sp), (P,), g, g, g, x, x, bs, bs)
+        emit("train_step", model.train_step(sp),
+             (P,), (P,), g, g, g, x, x, bs, bs, ())
+        emit("sample_step", model.sample_step(sp),
+             (P,), g, g, g, x, bs, bs, bs)
+
+    # deterministic init params
+    init_path = os.path.join(out, sp.name, "init.bin")
+    if force or not os.path.exists(init_path):
+        os.makedirs(os.path.dirname(init_path), exist_ok=True)
+        flat = np.asarray(model.init_params(sp), dtype="<f4")
+        flat.tofile(init_path)
+    arts["init"] = f"{sp.name}/init.bin"
+
+    spec_path = os.path.join(out, "specs", f"{sp.name}.spec.json")
+    os.makedirs(os.path.dirname(spec_path), exist_ok=True)
+    with open(spec_path, "w") as f:
+        json.dump(sp.to_json(), f, indent=1)
+    arts["spec"] = f"specs/{sp.name}.spec.json"
+    return arts
+
+
+def cross_distill_artifact(out: str, force: bool) -> str:
+    """KD baseline of Table 10: mnv2ish-1.0 teacher -> mnv2ish-0.75 student."""
+    t = specs.mnv2ish(1.0)
+    s = specs.mnv2ish(0.75)
+    fn = model.distill_cross(t, s)
+    B, H, W, C = s.batch, s.h, s.w, s.c
+    path = "kd/mnv2ish-0.75_from_1.0.hlo.txt"
+    write(os.path.join(out, path),
+          lower(fn, (t.param_count,), (s.param_count,), (s.param_count,),
+                (B, H, W, C), (B, s.num_classes), ()), force)
+    return path
+
+
+# ---------------------------------------------------------------------------
+# Conv + elementwise module families
+# ---------------------------------------------------------------------------
+
+
+def sig_str(sig) -> str:
+    b, h, w, ci, co, k, s, dw = sig
+    return f"b{b}h{h}w{w}i{ci}o{co}k{k}s{s}" + ("dw" if dw else "")
+
+
+def conv_module(sig, variant: str):
+    b, h, w, ci, co, k, s, dw = sig
+
+    def act(kind, y):
+        if kind == "relu":
+            return jax.nn.relu(y)
+        if kind == "swish":
+            return y * jax.nn.sigmoid(y)
+        return y
+
+    def base(x, wgt, bias):
+        return model.conv2d(x, wgt, s, dw) + bias
+
+    if variant == "plain":
+        return (lambda x, wgt, bias: (base(x, wgt, bias),)), \
+            [(b, h, w, ci), (co, 1 if dw else ci, k, k), (co,)]
+    if variant.startswith("fa_"):
+        kind = variant[3:]
+        return (lambda x, wgt, bias: (act(kind, base(x, wgt, bias)),)), \
+            [(b, h, w, ci), (co, 1 if dw else ci, k, k), (co,)]
+    if variant.startswith("far_"):
+        kind = variant[4:]
+        ho, wo = -(-h // s), -(-w // s)
+        return (lambda x, wgt, bias, r: (act(kind, base(x, wgt, bias) + r),)), \
+            [(b, h, w, ci), (co, 1 if dw else ci, k, k), (co,),
+             (b, ho, wo, co)]
+    if variant == "pallas":
+        return (lambda x, wgt, bias:
+                (pallas_conv.conv2d_same(x, wgt, s, dw) + bias,)), \
+            [(b, h, w, ci), (co, 1 if dw else ci, k, k), (co,)]
+    raise ValueError(variant)
+
+
+def conv_artifacts(all_sigs, acts_by_sig, out: str, force: bool) -> dict:
+    entries = {}
+    for sig in sorted(all_sigs):
+        ss = sig_str(sig)
+        variants = ["plain"]
+        for a in sorted(acts_by_sig.get(sig, {"relu", "none"})):
+            variants += [f"fa_{a}", f"far_{a}"]
+        ent = {}
+        for v in variants:
+            fn, shapes = conv_module(sig, v)
+            path = f"conv/{ss}.{v}.hlo.txt"
+            write(os.path.join(out, path), lower(fn, *shapes), force)
+            ent[v] = path
+        entries[ss] = ent
+    return entries
+
+
+def ew_artifacts(models, out: str, force: bool) -> dict:
+    """Elementwise / structural ops for the layerwise executor."""
+    entries = {}
+
+    def emit(key, fn, *shapes):
+        if key in entries:
+            return
+        path = f"ew/{key}.hlo.txt"
+        write(os.path.join(out, path), lower(fn, *shapes), force)
+        entries[key] = path
+
+    for sp in models:
+        B = sp.batch
+        shapes = set()
+        for c in sp.convs:
+            shapes.add((B, c.h_out, c.w_out, c.cout))
+            shapes.add((B, c.h_in, c.w_in, c.cin))
+        for (b, h, w, ch) in sorted(shapes):
+            base = f"b{b}h{h}w{w}c{ch}"
+            emit(f"relu_{base}", lambda x: (jax.nn.relu(x),), (b, h, w, ch))
+            emit(f"swish_{base}",
+                 lambda x: (x * jax.nn.sigmoid(x),), (b, h, w, ch))
+            emit(f"add_{base}", lambda x, y: (x + y,),
+                 (b, h, w, ch), (b, h, w, ch))
+        if sp.task == "classify":
+            emit(f"head_{sp.name}",
+                 lambda x, w_, b_: (x.mean(axis=(1, 2)) @ w_ + b_,),
+                 (B, sp.convs[-1].h_out, sp.convs[-1].w_out, sp.head_hidden),
+                 (sp.head_hidden, sp.num_classes), (sp.num_classes,))
+        else:
+            for c in sp.convs:
+                if c.gn:
+                    b, h, w, ch = B, c.h_out, c.w_out, c.cout
+                    emit(f"gn{c.gn_groups}_b{b}h{h}w{w}c{ch}",
+                         lambda x, s_, bi, g=c.gn_groups:
+                         (model.group_norm(x, s_, bi, g),),
+                         (b, h, w, ch), (ch,), (ch,))
+                if c.barrier_reason == "attention":
+                    b, h, w, ch = B, c.h_out, c.w_out, c.cout
+                    emit(f"attn_b{b}h{h}w{w}c{ch}",
+                         lambda x, q, o: (model.attention(x, q, o),),
+                         (b, h, w, ch), (ch, 3 * ch), (ch, ch))
+                if c.barrier_reason == "upsample":
+                    b, h, w, ch = B, c.h_out, c.w_out, c.cout
+                    emit(f"up_b{b}h{h}w{w}c{ch}",
+                         lambda x: (model.upsample2x(x),), (b, h, w, ch))
+    return entries
+
+
+# ---------------------------------------------------------------------------
+# main
+# ---------------------------------------------------------------------------
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="all",
+                    help="comma list or 'all' or 'smoke'")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    if args.models == "all":
+        names = list(specs.ALL_SPECS)
+    elif args.models == "smoke":
+        names = ["resnetish"]
+    else:
+        names = args.models.split(",")
+
+    manifest = {"models": {}, "convs": {}, "ew": {}, "kd": {}}
+    mans = os.path.join(args.out, "manifest.json")
+    if os.path.exists(mans) and not args.force:
+        with open(mans) as f:
+            manifest = json.load(f)
+
+    built = []
+    all_sigs = set()
+    acts_by_sig = {}
+    for name in names:
+        sp = specs.ALL_SPECS[name]()
+        built.append(sp)
+        manifest["models"][name] = model_artifacts(sp, args.out, args.force)
+        print(f"[aot] {name}: L={sp.L} params={sp.param_count}")
+        for sig in specs.merge_signatures(sp):
+            all_sigs.add(sig)
+            acts = acts_by_sig.setdefault(sig, set())
+            acts.add("none")
+            if sp.task == "diffusion":
+                acts.add("swish")
+            acts.add("relu")
+
+    manifest["convs"].update(conv_artifacts(all_sigs, acts_by_sig,
+                                            args.out, args.force))
+    print(f"[aot] {len(all_sigs)} conv signatures")
+    manifest["ew"].update(ew_artifacts(built, args.out, args.force))
+
+    # Pallas flavor for a fixed signature test set (rust cross-checks).
+    pallas_set = [s for s in sorted(all_sigs)
+                  if s[5] <= 7 and s[3] <= 32 and s[4] <= 32][:8]
+    for sig in pallas_set:
+        ss = sig_str(sig)
+        fn, shapes = conv_module(sig, "pallas")
+        path = f"conv/{ss}.pallas.hlo.txt"
+        write(os.path.join(args.out, path), lower(fn, *shapes), args.force)
+        manifest["convs"].setdefault(ss, {})["pallas"] = path
+
+    if "mnv2ish-1.0" in names and "mnv2ish-0.75" in names:
+        manifest["kd"]["mnv2ish-0.75_from_1.0"] = \
+            cross_distill_artifact(args.out, args.force)
+
+    with open(mans, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] manifest -> {mans}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""L1 — merged-conv2d as a Pallas kernel (TPU-shaped, interpret-mode here).
+
+Hardware adaptation of the paper's hot loop (DESIGN.md §3).  The paper's
+merged layers are ordinary cuDNN convs whose kernel size k grows as layers
+merge (Eq. 1) — the very effect LayerMerge controls.  On a TPU-like target
+we express the k x k conv as **tap-accumulated MXU matmuls**:
+
+    for each tap (dy, dx) in k x k:
+        acc += X[dy::s, dx::s, :] . reshape(H'*W', Cin)
+                 @  W[:, :, dy, dx] . T                    # (Cin, Cout)
+
+so the MXU sees (H'W' x Cin) @ (Cin x Cout) matmuls — systolic-array
+shaped; VMEM plays the role the paper's baselines give to cuDNN workspace.
+Cost grows linearly in k^2 taps while HBM traffic stays ~constant (one
+input read, one output write) — exactly the trade-off the latency tables
+capture.
+
+Schedule: at this repo's feature-map sizes (<= 32x32, <= 192 ch) one whole
+image plus the accumulator fits comfortably in VMEM (~1.3 MB of a 16 MB
+budget), so the grid is one program per batch element with full-image
+blocks.  For ImageNet-scale inputs the same kernel row-tiles: BlockSpec
+(TILE_H*s + k - 1) halo rows per program, accumulator (TILE_H*W' x Cout)
+resident across the tap loop.  The §Perf analysis in EXPERIMENTS.md
+reports VMEM footprint and MXU utilization estimates for both schedules.
+
+interpret=True throughout: the CPU PJRT plugin cannot run Mosaic
+custom-calls; correctness is enforced against ``ref.py`` by pytest +
+hypothesis, and real-TPU performance is *estimated* from the schedule.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-tile height of the ImageNet-scale schedule (documented above; the
+# interpret-mode grid below uses whole-image blocks instead).
+TILE_H = 8
+
+
+def _conv_kernel(x_ref, w_ref, o_ref, *, k: int, stride: int):
+    """One batch element: tap-accumulated matmul conv, VALID padding."""
+    x = x_ref[...]          # (H, W, Cin) block, resident in VMEM
+    w = w_ref[...]          # (Cout, Cin, k, k)
+    h, wd, cin = x.shape
+    cout = w.shape[0]
+    h_out = (h - k) // stride + 1
+    w_out = (wd - k) // stride + 1
+    acc = jnp.zeros((h_out * w_out, cout), jnp.float32)
+    for dy in range(k):
+        for dx in range(k):
+            patch = jax.lax.slice(
+                x, (dy, dx, 0),
+                (dy + (h_out - 1) * stride + 1, dx + (w_out - 1) * stride + 1,
+                 cin),
+                (stride, stride, 1))
+            acc = acc + patch.reshape(h_out * w_out, cin) @ w[:, :, dy, dx].T
+    o_ref[...] = acc.reshape(h_out, w_out, cout)
+
+
+def conv2d_valid(x, w, stride: int = 1):
+    """VALID dense conv via the Pallas kernel.  x: NHWC, w: OIHW."""
+    b, h, wd, cin = x.shape
+    cout, cin2, k, _ = w.shape
+    assert cin2 == cin, (x.shape, w.shape)
+    h_out = (h - k) // stride + 1
+    w_out = (wd - k) // stride + 1
+    out = pl.pallas_call(
+        functools.partial(_conv_kernel, k=k, stride=stride),
+        out_shape=jax.ShapeDtypeStruct((b, h_out, w_out, cout), jnp.float32),
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((None, h, wd, cin), lambda nb: (nb, 0, 0, 0)),
+            pl.BlockSpec((cout, cin, k, k), lambda nb: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, h_out, w_out, cout),
+                               lambda nb: (nb, 0, 0, 0)),
+        interpret=True,
+    )(x, w)
+    return out
+
+
+def conv2d_same(x, w, stride: int = 1, depthwise: bool = False):
+    """SAME conv through the Pallas kernel (depthwise is expanded to a
+    diagonal dense kernel — correctness path only)."""
+    k = w.shape[2]
+    if depthwise:
+        w = _expand_dw(w, x.shape[-1])
+    h = x.shape[1]
+    out_h = -(-h // stride)
+    pad_total = max((out_h - 1) * stride + k - h, 0)
+    lo = pad_total // 2
+    hi = pad_total - lo
+    x = jnp.pad(x, ((0, 0), (lo, hi), (lo, hi), (0, 0)))
+    return conv2d_valid(x, w, stride)
+
+
+def _expand_dw(w, c):
+    """[C,1,k,k] depthwise kernel -> diagonal dense [C,C,k,k]."""
+    eye = jnp.eye(c, dtype=w.dtype)[:, :, None, None]
+    return eye * w[:, 0:1]

@@ -1,0 +1,63 @@
+"""L1 — the merge operator theta_2 * theta_1 as a Pallas kernel.
+
+This is the paper's Sec. 2 parameter-space convolution: the single kernel
+equivalent to composing two convolutions (with stride s1 on the inner one).
+The merged weight is
+
+    wm[o, i, dy, dx] = sum_{c,e,f} w2[o,c,e,f] * w1[c,i, dy - e*s1, dx - f*s1]
+
+which we compute as k2^2 MXU matmuls over the channel dimensions: for each
+outer tap (e, f), a (Cout x C) @ (C x Cin*k1*k1) matmul scattered into the
+(dy, dx) window it affects.  The accumulator (the whole merged kernel,
+Cout x Cin x km x km) stays resident in VMEM across the tap loop — merged
+kernels are small (<= 13 x 13 here), so this is a pure compute kernel.
+
+Oracle: ``ref.merge_kernels`` (numpy loops), itself validated against
+actually composing the convs; pytest + hypothesis sweep shapes/strides.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _merge_kernel(w1_ref, w2_ref, o_ref, *, s1: int):
+    w1 = w1_ref[...]        # (C, Cin, k1, k1)
+    w2 = w2_ref[...]        # (Cout, C, k2, k2)
+    c, cin, k1, _ = w1.shape
+    cout, _, k2, _ = w2.shape
+    km = (k2 - 1) * s1 + k1
+    w1f = w1.reshape(c, cin * k1 * k1)
+    acc = jnp.zeros((cout, cin, km, km), jnp.float32)
+    for e in range(k2):
+        for f in range(k2):
+            contrib = (w2[:, :, e, f] @ w1f).reshape(cout, cin, k1, k1)
+            acc = jax.lax.dynamic_update_slice(
+                acc,
+                jax.lax.dynamic_slice(
+                    acc, (0, 0, e * s1, f * s1), (cout, cin, k1, k1))
+                + contrib,
+                (0, 0, e * s1, f * s1))
+    o_ref[...] = acc
+
+
+def merge_kernels(w1, w2, s1: int = 1):
+    """Pallas merged kernel; w1: (C,Cin,k1,k1), w2: (Cout,C,k2,k2)."""
+    c, cin, k1, _ = w1.shape
+    cout, c2, k2, _ = w2.shape
+    assert c == c2
+    km = (k2 - 1) * s1 + k1
+    return pl.pallas_call(
+        functools.partial(_merge_kernel, s1=s1),
+        out_shape=jax.ShapeDtypeStruct((cout, cin, km, km), jnp.float32),
+        interpret=True,
+    )(w1, w2)
+
+
+def merge_bias(w2, b1, b2):
+    """bm = b2 + (sum over w2 taps) @ b1 — small; plain jnp."""
+    return b2 + jnp.einsum("ocef,c->o", w2, b1)

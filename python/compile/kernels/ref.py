@@ -1,0 +1,95 @@
+"""Pure-jnp / numpy oracles for the L1 Pallas kernels.
+
+These are the correctness ground truth for:
+
+  * ``conv.py``  — the merged-conv2d Pallas kernel (vs lax.conv);
+  * ``merge.py`` — the parameter-space convolution theta_2 * theta_1
+                   (vs actually composing the two convolutions).
+
+``merge_kernels``/``merge_bias`` also define the exact algebra the Rust
+``merge`` module re-implements; ``python/tests`` pins fixtures so the two
+implementations can never drift silently.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+from jax import lax
+
+
+def conv2d_valid(x, w, stride: int = 1, depthwise: bool = False):
+    """Reference VALID conv, NHWC x OIHW -> NHWC."""
+    groups = x.shape[-1] if depthwise else 1
+    return lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="VALID",
+        dimension_numbers=("NHWC", "OIHW", "NHWC"),
+        feature_group_count=groups)
+
+
+def conv2d_same(x, w, stride: int = 1, depthwise: bool = False):
+    groups = x.shape[-1] if depthwise else 1
+    return lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "OIHW", "NHWC"),
+        feature_group_count=groups)
+
+
+def merge_kernels(w1: np.ndarray, w2: np.ndarray, s1: int = 1) -> np.ndarray:
+    """Parameter-space convolution: the single kernel equivalent to
+    ``conv(conv(x, w1, stride=s1, VALID), w2, stride=s2, VALID)``.
+
+    Derivation (Sec. 2 / App. A).  With
+      y1[c1, u, v]   = sum_{i,a,b} w1[c1,i,a,b] x[i, u*s1+a, v*s1+b]
+      y2[o, p, q]    = sum_{c1,e,f} w2[o,c1,e,f] y1[c1, p*s2+e, q*s2+f]
+    substituting gives a single conv with stride s1*s2 and
+
+      wm[o,i,dy,dx] = sum_{c1,e,f} w2[o,c1,e,f] * w1[c1,i, dy-e*s1, dx-f*s1]
+
+    so Ker(wm) = (Ker(w2)-1)*s1 + Ker(w1)   (the paper's strided Eq. 1).
+    """
+    o2, c1b, k2, _ = w2.shape
+    c1a, ci, k1, _ = w1.shape
+    assert c1a == c1b, (w1.shape, w2.shape)
+    km = (k2 - 1) * s1 + k1
+    wm = np.zeros((o2, ci, km, km), dtype=np.float64)
+    for e in range(k2):
+        for f in range(k2):
+            # wm[:, :, e*s1 : e*s1+k1, f*s1 : f*s1+k1] += w2[:,:,e,f] @ w1
+            contrib = np.einsum("oc,cikl->oikl", w2[:, :, e, f], w1)
+            wm[:, :, e * s1:e * s1 + k1, f * s1:f * s1 + k1] += contrib
+    return wm.astype(w1.dtype)
+
+
+def merge_bias(w2: np.ndarray, b1: np.ndarray, b2: np.ndarray) -> np.ndarray:
+    """Bias of the composed conv: b2 + (sum over taps of w2) @ b1."""
+    return b2 + np.einsum("ocef,c->o", w2, b1)
+
+
+def dirac_kernel(c: int, k: int, dtype=np.float32) -> np.ndarray:
+    """Identity conv kernel of size k (used to fold skip-addition, App. A)."""
+    w = np.zeros((c, c, k, k), dtype=dtype)
+    for i in range(c):
+        w[i, i, k // 2, k // 2] = 1.0
+    return w
+
+
+def expand_depthwise(w: np.ndarray) -> np.ndarray:
+    """Expand a depthwise kernel [C,1,k,k] to dense [C,C,k,k] (for merging
+    a depthwise conv with a dense neighbour — the merged layer is dense)."""
+    c, one, kh, kw = w.shape
+    assert one == 1
+    out = np.zeros((c, c, kh, kw), dtype=w.dtype)
+    for i in range(c):
+        out[i, i] = w[i, 0]
+    return out
+
+
+def embed_kernel(w: np.ndarray, k: int) -> np.ndarray:
+    """Zero-pad a conv kernel spatially (centered) to size k x k."""
+    o, i, kh, kw = w.shape
+    assert k >= kh and (k - kh) % 2 == 0
+    out = np.zeros((o, i, k, k), dtype=w.dtype)
+    p = (k - kh) // 2
+    out[:, :, p:p + kh, p:p + kw] = w
+    return out

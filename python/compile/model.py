@@ -1,0 +1,344 @@
+"""L2 — the gated JAX model (build-time only; lowered once by aot.py).
+
+The central trick that keeps Python off the runtime path: every layer whose
+removal LayerMerge searches over is *gated* by a runtime input, so a single
+AOT-compiled HLO graph represents **every** (A, C) configuration of the
+paper's Problem (2):
+
+    conv   (l reducible):  y = gc[l] * (conv(x, w_l) + b_l) + (1 - gc[l]) * x
+    act    (l < L):        z = ga[l] * sigma(y)            + (1 - ga[l]) * y
+    gnorm  (ddpm):         z = gn[l] * GN(y)               + (1 - gn[l]) * y
+
+With gates in {0,1} this is exactly the paper's sigma_{A,l} / f_{C,theta,l}
+replacement (Sec. 3.1).  The Rust coordinator therefore evaluates and
+fine-tunes arbitrary table entries (A~_ij, C~_ijk of Eq. 3/4) by feeding
+gate vectors — zero recompilation in the table-construction hot loop.
+
+Parameters travel as ONE flat f32 vector; ``specs.ParamEntry`` gives every
+tensor's offset so Rust can slice/merge without Python.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import specs
+from .kernels import conv as pallas_conv
+
+MOMENTUM = 0.9
+WEIGHT_DECAY = 5e-4
+DISTILL_ALPHA = 0.5
+DISTILL_TEMP = 2.0
+
+
+# ---------------------------------------------------------------------------
+# Parameter handling
+# ---------------------------------------------------------------------------
+
+
+def unflatten(spec: specs.Spec, flat):
+    """Slice the flat parameter vector into named tensors."""
+    out = {}
+    for p in spec.params:
+        out[p.name] = lax.dynamic_slice(flat, (p.offset,), (p.size,)).reshape(p.shape)
+    return out
+
+
+def init_params(spec: specs.Spec, seed: int = 0):
+    """He-init (zero biases, unit scales); returns the flat f32 vector."""
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for p in spec.params:
+        key, sub = jax.random.split(key)
+        if p.name.endswith(".b") or p.name.endswith(".bias"):
+            chunks.append(jnp.zeros((p.size,), jnp.float32))
+        elif p.name.endswith(".scale"):
+            chunks.append(jnp.ones((p.size,), jnp.float32))
+        elif len(p.shape) == 4:
+            cout, cin, kh, kw = p.shape
+            std = math.sqrt(2.0 / (cin * kh * kw))
+            w = jax.random.normal(sub, p.shape, jnp.float32) * std
+            chunks.append(w.reshape(-1))
+        else:
+            std = math.sqrt(1.0 / p.shape[0])
+            w = jax.random.normal(sub, p.shape, jnp.float32) * std
+            chunks.append(w.reshape(-1))
+    return jnp.concatenate(chunks)
+
+
+# ---------------------------------------------------------------------------
+# Layer primitives
+# ---------------------------------------------------------------------------
+
+
+def conv2d(x, w, stride: int, depthwise: bool):
+    """SAME conv, NHWC activations, OIHW weights."""
+    groups = x.shape[-1] if depthwise else 1
+    return lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "OIHW", "NHWC"),
+        feature_group_count=groups)
+
+
+def act_fn(kind: str, x):
+    if kind == "swish":
+        return x * jax.nn.sigmoid(x)
+    return jax.nn.relu(x)  # "relu" and the act added after merged layers
+
+
+def group_norm(x, scale, bias, groups: int, eps: float = 1e-5):
+    b, h, w, c = x.shape
+    xg = x.reshape(b, h, w, groups, c // groups)
+    mean = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mean) * lax.rsqrt(var + eps)
+    return xg.reshape(b, h, w, c) * scale + bias
+
+
+def attention(x, wqkv, wout):
+    """Single-head self-attention over spatial positions, residual."""
+    b, h, w, c = x.shape
+    seq = x.reshape(b, h * w, c)
+    qkv = seq @ wqkv
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    att = jax.nn.softmax(q @ jnp.swapaxes(k, 1, 2) / math.sqrt(c), axis=-1)
+    out = (att @ v) @ wout
+    return x + out.reshape(b, h, w, c)
+
+
+def upsample2x(x):
+    return jnp.repeat(jnp.repeat(x, 2, axis=1), 2, axis=2)
+
+
+def time_embedding(t, dim: int):
+    """Sinusoidal timestep embedding, t: f32[B]."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half) / half)
+    ang = t[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Gated forward pass
+# ---------------------------------------------------------------------------
+
+
+def gated_forward(spec: specs.Spec, flat, ga, gc, gn, x, t=None,
+                  use_pallas: bool = False):
+    """Run the gated network.
+
+    Returns (output, feats): logits + penultimate features for classifiers,
+    predicted noise + None for the diffusion model.
+
+    ``ga``, ``gc``, ``gn`` are f32[L] gate vectors (1.0 = keep the original
+    layer, 0.0 = replace by identity).  ``use_pallas`` routes the stem conv
+    through the L1 Pallas kernel so it lowers into the same HLO (DESIGN §3).
+    """
+    P = unflatten(spec, flat)
+    temb = None
+    if spec.task == "diffusion":
+        temb = time_embedding(t, spec.time_dim)
+        temb = act_fn("swish", temb @ P["temb.w1"] + P["temb.b1"])
+
+    stash = {}
+    boundary = {0: x}  # boundary[i] = feature map entering conv i+1
+    cur = x
+    for c in spec.convs:
+        li = c.idx - 1
+        if c.concat_from is not None:
+            cur = jnp.concatenate([cur, stash[c.concat_from]], axis=-1)
+        if c.time_bias:
+            tb = temb @ P[f"temb{c.idx}.w"] + P[f"temb{c.idx}.b"]
+            cur = cur + tb[:, None, None, :]
+        w = P[f"conv{c.idx}.w"]
+        b = P[f"conv{c.idx}.b"]
+        if use_pallas and c.idx == 1:
+            y = pallas_conv.conv2d_same(cur, w, c.stride, c.depthwise) + b
+        else:
+            y = conv2d(cur, w, c.stride, c.depthwise) + b
+        if c.conv_gated:
+            g = gc[li]
+            cur = g * y + (1.0 - g) * cur
+        else:
+            cur = y
+        if c.gn:
+            gng = gn[li]
+            gy = group_norm(cur, P[f"gn{c.idx}.scale"], P[f"gn{c.idx}.bias"],
+                            c.gn_groups)
+            cur = gng * gy + (1.0 - gng) * cur
+        if c.add_from is not None:
+            skip = boundary[c.add_from - 1]
+            if c.add_proj is not None:
+                pw = P[f"proj{c.add_from}.w"]
+                pb = P[f"proj{c.add_from}.b"]
+                skip = conv2d(skip, pw, c.add_proj["stride"], False) + pb
+            cur = cur + skip
+        if c.act != "none" or c.act_gated:
+            g = ga[li] if c.act_gated else (0.0 if c.act == "none" else 1.0)
+            cur = g * act_fn(c.act if c.act != "none" else "relu", cur) \
+                + (1.0 - g) * cur
+        if c.stash_as is not None:
+            stash[c.stash_as] = cur
+        if c.barrier_reason == "attention":
+            cur = attention(cur, P["attn.qkv.w"], P["attn.out.w"])
+        if c.barrier_reason == "upsample":
+            cur = upsample2x(cur)
+        boundary[c.idx] = cur
+
+    if spec.task == "classify":
+        feats = cur.mean(axis=(1, 2))
+        logits = feats @ P["head.w"] + P["head.b"]
+        return logits, feats
+    return cur, None
+
+
+# ---------------------------------------------------------------------------
+# Losses / steps (each returns a tuple — lowered with return_tuple=True)
+# ---------------------------------------------------------------------------
+
+
+def _cls_loss(spec, flat, ga, gc, gn, x, y1h):
+    logits, _ = gated_forward(spec, flat, ga, gc, gn, x)
+    logp = jax.nn.log_softmax(logits)
+    loss = -(y1h * logp).sum(axis=-1).mean()
+    acc = (jnp.argmax(logits, -1) == jnp.argmax(y1h, -1)).astype(jnp.float32).mean()
+    return loss, acc
+
+
+def _diff_loss(spec, flat, ga, gc, gn, x0, eps, t, abar):
+    """Denoising loss on x_t = sqrt(abar) x0 + sqrt(1-abar) eps."""
+    sq = jnp.sqrt(abar)[:, None, None, None]
+    sq1 = jnp.sqrt(1.0 - abar)[:, None, None, None]
+    xt = sq * x0 + sq1 * eps
+    pred, _ = gated_forward(spec, flat, ga, gc, gn, xt, t)
+    loss = jnp.mean((pred - eps) ** 2)
+    return loss, -loss  # "acc" slot carries negative diffusion loss
+
+
+def loss_eval(spec):
+    if spec.task == "classify":
+        def f(flat, ga, gc, gn, x, y1h):
+            return _cls_loss(spec, flat, ga, gc, gn, x, y1h)
+    else:
+        def f(flat, ga, gc, gn, x0, eps, t, abar):
+            return _diff_loss(spec, flat, ga, gc, gn, x0, eps, t, abar)
+    return f
+
+
+def _clip(g, max_norm=1.0):
+    """Global-norm gradient clipping — keeps the norm-free nets stable
+    across every gate configuration the table builder visits."""
+    n = jnp.sqrt(jnp.sum(g * g) + 1e-12)
+    return g * jnp.minimum(1.0, max_norm / n)
+
+
+def train_step(spec):
+    """One SGD-with-momentum step on the gated network."""
+    if spec.task == "classify":
+        def f(flat, mom, ga, gc, gn, x, y1h, lr):
+            (loss, acc), g = jax.value_and_grad(
+                lambda p: _cls_loss(spec, p, ga, gc, gn, x, y1h),
+                has_aux=True)(flat)
+            g = _clip(g) + WEIGHT_DECAY * flat
+            mom2 = MOMENTUM * mom + g
+            return (flat - lr * mom2, mom2, loss, acc)
+    else:
+        def f(flat, mom, ga, gc, gn, x0, eps, t, abar, lr):
+            (loss, acc), g = jax.value_and_grad(
+                lambda p: _diff_loss(spec, p, ga, gc, gn, x0, eps, t, abar),
+                has_aux=True)(flat)
+            mom2 = MOMENTUM * mom + _clip(g)
+            return (flat - lr * mom2, mom2, loss, acc)
+    return f
+
+
+def distill_step(spec):
+    """KD fine-tuning step (Hinton et al. 2014); teacher = pristine net."""
+    ones = jnp.ones((spec.L,), jnp.float32)
+
+    def f(tflat, flat, mom, ga, gc, gn, x, y1h, lr):
+        tlogits, _ = gated_forward(spec, tflat, ones, ones, ones, x)
+        tprob = jax.nn.softmax(tlogits / DISTILL_TEMP)
+
+        def loss_fn(p):
+            logits, _ = gated_forward(spec, p, ga, gc, gn, x)
+            logp = jax.nn.log_softmax(logits)
+            ce = -(y1h * logp).sum(-1).mean()
+            logps = jax.nn.log_softmax(logits / DISTILL_TEMP)
+            kd = -(tprob * logps).sum(-1).mean() * DISTILL_TEMP ** 2
+            acc = (jnp.argmax(logits, -1) == jnp.argmax(y1h, -1)) \
+                .astype(jnp.float32).mean()
+            return (1 - DISTILL_ALPHA) * ce + DISTILL_ALPHA * kd, acc
+
+        (loss, acc), g = jax.value_and_grad(loss_fn, has_aux=True)(flat)
+        g = _clip(g) + WEIGHT_DECAY * flat
+        mom2 = MOMENTUM * mom + g
+        return (flat - lr * mom2, mom2, loss, acc)
+
+    return f
+
+
+def distill_cross(teacher_spec, student_spec):
+    """KD with a *different* (smaller) student — paper Table 10 baseline."""
+    tones = jnp.ones((teacher_spec.L,), jnp.float32)
+    sones = jnp.ones((student_spec.L,), jnp.float32)
+
+    def f(tflat, flat, mom, x, y1h, lr):
+        tlogits, _ = gated_forward(teacher_spec, tflat, tones, tones, tones, x)
+        tprob = jax.nn.softmax(tlogits / DISTILL_TEMP)
+
+        def loss_fn(p):
+            logits, _ = gated_forward(student_spec, p, sones, sones, sones, x)
+            logp = jax.nn.log_softmax(logits)
+            ce = -(y1h * logp).sum(-1).mean()
+            logps = jax.nn.log_softmax(logits / DISTILL_TEMP)
+            kd = -(tprob * logps).sum(-1).mean() * DISTILL_TEMP ** 2
+            acc = (jnp.argmax(logits, -1) == jnp.argmax(y1h, -1)) \
+                .astype(jnp.float32).mean()
+            return (1 - DISTILL_ALPHA) * ce + DISTILL_ALPHA * kd, acc
+
+        (loss, acc), g = jax.value_and_grad(loss_fn, has_aux=True)(flat)
+        g = _clip(g) + WEIGHT_DECAY * flat
+        mom2 = MOMENTUM * mom + g
+        return (flat - lr * mom2, mom2, loss, acc)
+
+    return f
+
+
+def embed(spec):
+    """Penultimate features — the FDD embedder (classifiers only)."""
+    def f(flat, ga, gc, gn, x):
+        _, feats = gated_forward(spec, flat, ga, gc, gn, x)
+        return (feats,)
+    return f
+
+
+def sample_step(spec):
+    """One DDIM step (Song et al. 2021); the schedule lives in Rust."""
+    def f(flat, ga, gc, gn, xt, t, abar_t, abar_prev):
+        eps, _ = gated_forward(spec, flat, ga, gc, gn, xt, t)
+        sq = jnp.sqrt(abar_t)[:, None, None, None]
+        sq1 = jnp.sqrt(1.0 - abar_t)[:, None, None, None]
+        x0 = jnp.clip((xt - sq1 * eps) / sq, -1.0, 1.0)
+        sp = jnp.sqrt(abar_prev)[:, None, None, None]
+        sp1 = jnp.sqrt(1.0 - abar_prev)[:, None, None, None]
+        return (sp * x0 + sp1 * eps,)
+    return f
+
+
+def fwd(spec, use_pallas: bool = False):
+    if spec.task == "classify":
+        def f(flat, ga, gc, gn, x):
+            logits, _ = gated_forward(spec, flat, ga, gc, gn, x,
+                                      use_pallas=use_pallas)
+            return (logits,)
+    else:
+        def f(flat, ga, gc, gn, x, t):
+            out, _ = gated_forward(spec, flat, ga, gc, gn, x, t,
+                                   use_pallas=use_pallas)
+            return (out,)
+    return f

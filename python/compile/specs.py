@@ -1,0 +1,529 @@
+"""Model family specifications — the single source of truth for network structure.
+
+Each spec describes an L-layer CNN as the paper's alternating sequence of
+convolution layers ``f_{theta_l}`` and activation layers ``sigma_l`` (Sec. 2),
+plus the structural side information LayerMerge needs:
+
+  * the irreducible set R (layers whose input/output shapes differ, Sec. 3.1),
+  * merge barriers (self-attention, upsampling, skip-concatenation, and the
+    strided-conv restriction of App. A),
+  * skip-addition descriptors (mergeable via Dirac folding, App. A),
+  * gated-GroupNorm positions (DDPM only, App. A "normalization layers"),
+  * the flat parameter layout used by every AOT artifact.
+
+The spec is serialized to ``artifacts/specs/<name>.spec.json`` and consumed by
+the Rust coordinator (``rust/src/ir``).  Python never re-enters the loop after
+``make artifacts``.
+
+Architectures are scaled-down but structurally faithful versions of the
+paper's models (see DESIGN.md §2):
+
+  * ``resnetish``   — ResNet-34-style basic blocks with skip-addition and
+                       strided projection shortcuts.
+  * ``mnv2ish-1.0`` / ``mnv2ish-1.4`` / ``mnv2ish-0.75``
+                    — MobileNetV2-style inverted residuals with depthwise
+                       convs and no activation after the block (App. A).
+  * ``ddpmish``     — DDPM-style U-Net: GroupNorm, time embedding,
+                       self-attention barrier, upsample barrier and
+                       skip-concatenation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Optional
+
+
+# ---------------------------------------------------------------------------
+# Layer records
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Conv:
+    """One main-chain convolution layer and its surrounding structure.
+
+    ``idx`` is 1-based, matching the paper's ``l in [L]`` indexing.
+    """
+
+    idx: int
+    cin: int
+    cout: int
+    k: int
+    stride: int
+    depthwise: bool
+    h_in: int          # spatial resolution of the *input* feature map
+    w_in: int
+    act: str           # "relu" | "swish" | "none" — activation sigma_l after it
+    act_gated: bool    # True if sigma_l may be replaced by id (l in A search)
+    conv_gated: bool   # True if f_theta may be replaced by id (l not in R)
+    barrier_after: bool  # no merging across the gap after this layer
+    barrier_reason: str
+    # Skip-addition: after this conv's output, add the *input* of conv
+    # ``add_from`` (1-based; the tensor feeding that conv).  ``add_proj``
+    # optionally names a projection conv applied to the skip branch.
+    add_from: Optional[int] = None
+    add_proj: Optional[dict] = None   # {"k":1,"stride":s,"cin":..,"cout":..}
+    # Skip-concatenation: this conv's input is concat(prev_output, stash[tag]).
+    concat_from: Optional[str] = None
+    stash_as: Optional[str] = None    # stash this conv's post-act output
+    # Gated GroupNorm applied after the conv (before act) when gate is 1.
+    gn: bool = False
+    gn_groups: int = 0
+    # Time-embedding bias injected into this conv's input (ddpm only).  Time
+    # injection points are barriers (DESIGN.md §2), so merging never crosses
+    # a dynamic bias.
+    time_bias: bool = False
+
+    @property
+    def h_out(self) -> int:
+        return self.h_in // self.stride
+
+    @property
+    def w_out(self) -> int:
+        return self.w_in // self.stride
+
+
+@dataclass
+class ParamEntry:
+    name: str
+    shape: list
+    offset: int
+    size: int
+
+
+@dataclass
+class Spec:
+    name: str
+    task: str                  # "classify" | "diffusion"
+    h: int
+    w: int
+    c: int
+    batch: int
+    num_classes: int
+    convs: list = field(default_factory=list)      # list[Conv]
+    params: list = field(default_factory=list)     # list[ParamEntry]
+    param_count: int = 0
+    head_hidden: int = 0       # classifier feature dim (penultimate, for FDD)
+    time_dim: int = 0          # time embedding dim (diffusion)
+    attn_dim: int = 0
+
+    # ----- construction helpers -------------------------------------------
+
+    def add_param(self, name: str, shape) -> ParamEntry:
+        size = 1
+        for s in shape:
+            size *= int(s)
+        e = ParamEntry(name, [int(s) for s in shape], self.param_count, size)
+        self.params.append(e)
+        self.param_count += size
+        return e
+
+    # ----- derived structure ----------------------------------------------
+
+    @property
+    def L(self) -> int:
+        return len(self.convs)
+
+    def irreducible(self) -> list:
+        """The set R: 1-based indices where input/output shapes differ."""
+        return [c.idx for c in self.convs if not c.conv_gated]
+
+    def finalize(self) -> None:
+        """Apply the strided-conv restriction of App. A.
+
+        Merging a stride>1 conv with a following conv of kernel size > 1
+        blows up the merged kernel ((k2-1)*s1 + k1), so the activation after
+        the strided conv is force-kept: we mark a barrier after it unless the
+        next conv is 1x1.
+        """
+        for i, c in enumerate(self.convs[:-1]):
+            nxt = self.convs[i + 1]
+            if c.stride > 1 and nxt.k > 1 and not c.barrier_after:
+                c.barrier_after = True
+                c.barrier_reason = "stride"
+        # Stashed tensors (skip-concat sources) must stay materialized in
+        # the merged network, so a stash point is a merge barrier.
+        for c in self.convs:
+            if c.stash_as is not None and not c.barrier_after:
+                c.barrier_after = True
+                c.barrier_reason = "stash"
+        # The last layer's activation is identity by definition (sigma_L=id).
+        self.convs[-1].act_gated = False
+
+    def to_json(self) -> dict:
+        return {
+            "name": self.name,
+            "task": self.task,
+            "input": {"h": self.h, "w": self.w, "c": self.c, "batch": self.batch},
+            "num_classes": self.num_classes,
+            "head_hidden": self.head_hidden,
+            "time_dim": self.time_dim,
+            "param_count": self.param_count,
+            "L": self.L,
+            "convs": [dataclasses.asdict(c) for c in self.convs],
+            "params": [dataclasses.asdict(p) for p in self.params],
+        }
+
+
+# ---------------------------------------------------------------------------
+# resnetish — ResNet-34-style, scaled for the 32x32 synthetic task
+# ---------------------------------------------------------------------------
+
+
+def resnetish(batch: int = 32) -> Spec:
+    sp = Spec(name="resnetish", task="classify", h=32, w=32, c=3,
+              batch=batch, num_classes=10)
+    widths = [16, 32, 64, 128]
+    blocks = [2, 2, 2, 2]
+    h = 32
+    idx = 0
+    cin = 3
+
+    def conv(cin, cout, k, stride, h, act, act_gated, conv_gated, **kw):
+        nonlocal idx
+        idx += 1
+        c = Conv(idx=idx, cin=cin, cout=cout, k=k, stride=stride,
+                 depthwise=False, h_in=h, w_in=h, act=act,
+                 act_gated=act_gated, conv_gated=conv_gated,
+                 barrier_after=False, barrier_reason="", **kw)
+        sp.convs.append(c)
+        sp.add_param(f"conv{idx}.w", [cout, cin, k, k])
+        sp.add_param(f"conv{idx}.b", [cout])
+        return c
+
+    # Stem.
+    conv(cin, widths[0], 3, 1, h, "relu", True, False)
+    cin = widths[0]
+    for stage, (w_, nb) in enumerate(zip(widths, blocks)):
+        for b in range(nb):
+            stride = 2 if (stage > 0 and b == 0) else 1
+            proj = None
+            if stride != 1 or cin != w_:
+                proj = {"k": 1, "stride": stride, "cin": cin, "cout": w_}
+                sp.add_param(f"proj{idx+1}.w", [w_, cin, 1, 1])
+                sp.add_param(f"proj{idx+1}.b", [w_])
+            add_from = idx + 1  # input of the first conv in the block
+            c1 = conv(cin, w_, 3, stride, h, "relu", True, stride == 1 and cin == w_)
+            h2 = h // stride
+            c2 = conv(w_, w_, 3, 1, h2, "relu", True, True,
+                      add_from=add_from, add_proj=proj)
+            h = h2
+            cin = w_
+    sp.head_hidden = cin
+    sp.add_param("head.w", [cin, sp.num_classes])
+    sp.add_param("head.b", [sp.num_classes])
+    sp.finalize()
+    return sp
+
+
+# ---------------------------------------------------------------------------
+# mnv2ish — MobileNetV2-style inverted residuals
+# ---------------------------------------------------------------------------
+
+
+def mnv2ish(width_mult: float = 1.0, batch: int = 32) -> Spec:
+    def ch(v):
+        # round to multiple of 4, MobileNet-style channel rounding
+        return max(4, int(round(v * width_mult / 4)) * 4)
+
+    name = f"mnv2ish-{width_mult}"
+    sp = Spec(name=name, task="classify", h=32, w=32, c=3,
+              batch=batch, num_classes=10)
+    idx = 0
+    h = 32
+
+    def conv(cin, cout, k, stride, h, act, act_gated, conv_gated,
+             depthwise=False, **kw):
+        nonlocal idx
+        idx += 1
+        c = Conv(idx=idx, cin=cin, cout=cout, k=k, stride=stride,
+                 depthwise=depthwise, h_in=h, w_in=h, act=act,
+                 act_gated=act_gated, conv_gated=conv_gated,
+                 barrier_after=False, barrier_reason="", **kw)
+        sp.convs.append(c)
+        if depthwise:
+            sp.add_param(f"conv{idx}.w", [cout, 1, k, k])
+        else:
+            sp.add_param(f"conv{idx}.w", [cout, cin, k, k])
+        sp.add_param(f"conv{idx}.b", [cout])
+        return c
+
+    # Stem: 3x3 s1 (CIFAR-resolution stem).
+    cin = ch(16)
+    conv(3, cin, 3, 1, h, "relu", True, False)
+
+    # (expansion t, out channels, num blocks, stride of first block)
+    cfg = [
+        (1, ch(8), 1, 1),
+        (4, ch(12), 2, 2),
+        (4, ch(16), 2, 2),
+        (4, ch(24), 2, 1),
+    ]
+    for (t, co, nb, s0) in cfg:
+        for b in range(nb):
+            stride = s0 if b == 0 else 1
+            cexp = cin * t
+            add_from = idx + 1 if (stride == 1 and cin == co) else None
+            if t != 1:
+                conv(cin, cexp, 1, 1, h, "relu", True, False)
+            # depthwise 3x3 — replaceable by identity only at stride 1
+            conv(cexp, cexp, 3, stride, h, "relu", True, stride == 1,
+                 depthwise=True)
+            h = h // stride
+            # linear projection 1x1; inverted-residual add lands here.
+            # MobileNetV2 has *no* activation after the block (App. A) — the
+            # depth-compression trick of adding one after merged layers is
+            # handled on the Rust side via the act gate (it exists in the
+            # graph but its pristine value is 0 -> "none", gate can enable).
+            conv(cexp, co, 1, 1, h, "none", True, False,
+                 add_from=add_from)
+            cin = co
+    # Final 1x1 expansion before the head.
+    cfin = ch(48)
+    conv(cin, cfin, 1, 1, h, "relu", True, False)
+    sp.head_hidden = cfin
+    sp.add_param("head.w", [cfin, sp.num_classes])
+    sp.add_param("head.b", [sp.num_classes])
+    sp.finalize()
+    return sp
+
+
+# ---------------------------------------------------------------------------
+# ddpmish — DDPM-style U-Net (diffusion task)
+# ---------------------------------------------------------------------------
+
+
+def ddpmish(batch: int = 16) -> Spec:
+    sp = Spec(name="ddpmish", task="diffusion", h=16, w=16, c=3,
+              batch=batch, num_classes=0)
+    base = 16
+    sp.time_dim = 32
+    sp.attn_dim = base * 2
+    idx = 0
+    h = 16
+
+    sp.add_param("temb.w1", [sp.time_dim, sp.time_dim])
+    sp.add_param("temb.b1", [sp.time_dim])
+
+    def conv(cin, cout, k, stride, h, act, act_gated, conv_gated, **kw):
+        nonlocal idx
+        idx += 1
+        barrier_after = kw.pop("barrier_after", False)
+        barrier_reason = kw.pop("barrier_reason", "")
+        c = Conv(idx=idx, cin=cin, cout=cout, k=k, stride=stride,
+                 depthwise=False, h_in=h, w_in=h, act=act,
+                 act_gated=act_gated, conv_gated=conv_gated,
+                 barrier_after=barrier_after, barrier_reason=barrier_reason,
+                 **kw)
+        sp.convs.append(c)
+        sp.add_param(f"conv{idx}.w", [cout, cin, k, k])
+        sp.add_param(f"conv{idx}.b", [cout])
+        if kw.get("gn"):
+            sp.add_param(f"gn{idx}.scale", [cout])
+            sp.add_param(f"gn{idx}.bias", [cout])
+        if kw.get("time_bias"):
+            sp.add_param(f"temb{idx}.w", [sp.time_dim, cin])
+            sp.add_param(f"temb{idx}.b", [cin])
+        return c
+
+    c1, c2 = base, base * 2
+
+    # --- encoder ---
+    conv(3, c1, 3, 1, 16, "swish", True, False, gn=True, gn_groups=4)
+    # res block at 16x16 (two convs; time bias enters the second => barrier
+    # in front of it, see DESIGN.md §2: injection points are barriers)
+    a = idx + 1
+    conv(c1, c1, 3, 1, 16, "swish", True, True, gn=True, gn_groups=4,
+         barrier_after=True, barrier_reason="time")
+    conv(c1, c1, 3, 1, 16, "none", True, True, add_from=a, time_bias=True,
+         stash_as="e1")
+    # downsample (irreducible, stride 2)
+    conv(c1, c2, 3, 2, 16, "swish", True, False)
+    h = 8
+    # res block at 8x8, then self-attention barrier (paper: attention at the
+    # 16x16 resolution of CIFAR; here the coarser level plays that role).
+    a = idx + 1
+    conv(c2, c2, 3, 1, 8, "swish", True, True, gn=True, gn_groups=4,
+         barrier_after=True, barrier_reason="time")
+    conv(c2, c2, 3, 1, 8, "none", True, True, add_from=a, time_bias=True,
+         barrier_after=True, barrier_reason="attention", stash_as="e2")
+    sp.add_param("attn.qkv.w", [c2, 3 * c2])
+    sp.add_param("attn.out.w", [c2, c2])
+
+    # --- middle ---
+    a = idx + 1
+    conv(c2, c2, 3, 1, 8, "swish", True, True, gn=True, gn_groups=4)
+    conv(c2, c2, 3, 1, 8, "none", True, True, add_from=a,
+         barrier_after=True, barrier_reason="mid")
+
+    # --- decoder ---
+    # skip-concat with e2, then res block; concat is a barrier by definition.
+    conv(2 * c2, c2, 3, 1, 8, "swish", True, False, concat_from="e2",
+         gn=True, gn_groups=4)
+    conv(c2, c2, 3, 1, 8, "none", True, True,
+         barrier_after=True, barrier_reason="upsample")
+    # upsample 8->16 (nearest) then the paper's post-upsample 3x3 s1 conv —
+    # explicitly a pruning candidate (App. A: "we include these convolution
+    # layers as potential pruning candidates").
+    conv(c2, c2, 3, 1, 16, "swish", True, True)
+    # skip-concat with e1
+    conv(c2 + c1, c1, 3, 1, 16, "swish", True, False, concat_from="e1",
+         gn=True, gn_groups=4)
+    a = idx + 1
+    conv(c1, c1, 3, 1, 16, "swish", True, True, gn=True, gn_groups=4,
+         barrier_after=True, barrier_reason="time")
+    conv(c1, c1, 3, 1, 16, "swish", True, True, add_from=a, time_bias=True)
+    # output head conv
+    conv(c1, 3, 3, 1, 16, "none", False, False)
+    sp.finalize()
+    return sp
+
+
+ALL_SPECS = {
+    "resnetish": resnetish,
+    "mnv2ish-1.0": lambda: mnv2ish(1.0),
+    "mnv2ish-1.4": lambda: mnv2ish(1.4),
+    "mnv2ish-0.75": lambda: mnv2ish(0.75),
+    "ddpmish": ddpmish,
+}
+
+
+# ---------------------------------------------------------------------------
+# Merge-signature enumeration (superset; exact K_ij logic lives in rust/ir).
+# ---------------------------------------------------------------------------
+
+
+def segments(spec: Spec):
+    """Maximal merge-allowed spans [i, j] of 1-based conv indices.
+
+    A span may not cross a barrier_after gap or a concat input boundary.
+    """
+    segs = []
+    start = 1
+    for c in spec.convs:
+        nxt = None
+        for d in spec.convs:
+            if d.idx == c.idx + 1:
+                nxt = d
+        end_here = c.barrier_after or c.idx == spec.L or (
+            nxt is not None and nxt.concat_from is not None)
+        if end_here:
+            segs.append((start, c.idx))
+            start = c.idx + 1
+    return segs
+
+
+# Largest merged kernel size considered anywhere in the stack (see
+# merge_signatures).  rust/src/ir/mod.rs K_MAX must match.
+K_MAX = 13
+
+
+def valid_span(spec: Spec, i: int, j: int) -> bool:
+    """Whether the span ``(i, j]`` may become a single merged layer.
+
+    Beyond barriers (handled by ``segments``), a span must nest with respect
+    to every skip-addition (the paper merges across a skip-add only when
+    every intermediate convolution merges into a single layer, App. A).  For
+    an add whose source tensor is boundary ``p-1`` (the input of conv ``p``)
+    and whose add point follows conv ``q``:
+
+      * ``p-1 < i < q < j``   — the add lands strictly inside the merged
+        layer but its source is outside: not expressible as one conv.
+        (``q == j`` is fine: the add executes *after* the merged conv, on
+        materialized boundary tensors.)
+      * ``i < p-1 < j < q``   — an add beyond the span would need a tensor
+        internal to the merged layer.  Note this rule also guarantees
+        globally that any span ending exactly at ``q`` finds its source
+        boundary materialized: no other span may swallow ``p-1``.
+      * otherwise valid — the branch is fully inside (Dirac folding), fully
+        outside, or cut exactly at boundaries.
+    """
+    for c in spec.convs:
+        if c.add_from is None:
+            continue
+        p_src, q = c.add_from - 1, c.idx   # source boundary, add point
+        if p_src < i < q < j:
+            return False
+        if i < p_src < j < q:
+            return False
+    return True
+
+
+def merge_signatures(spec: Spec):
+    """All conv shape signatures any merged layer could take (superset).
+
+    A merged layer over the span ``(i, j]`` consumes the input of conv
+    ``i+1`` and produces the output of conv ``j``; its stride is the product
+    of strides and its kernel size is ``1 + sum over kept convs of (k-1)``
+    (Eq. 1, with the stride-dilation generalization of App. A).  We
+    enumerate all achievable k via subset sums with irreducible layers
+    forced in, mirroring the Rust IR (cross-checked by an integration test).
+    """
+    sigs = set()
+    for (s, e) in segments(spec):
+        for i in range(s - 1, e):          # i: 0-based "merge-from" boundary
+            stride = 1
+            dw = True
+            for j in range(i + 1, e + 1):  # j: 1-based end conv
+                c = spec.convs[j - 1]
+                stride *= c.stride
+                dw = dw and c.depthwise
+                if not valid_span(spec, i, j):
+                    continue
+                first = spec.convs[i]      # conv i+1, 1-based
+                cin = first.cin
+                cout = c.cout
+                hin, win = first.h_in, first.w_in
+                # achievable merged kernel sizes: subset sums of (k_l - 1)
+                # with irreducible layers forced in.
+                sums = {0}
+                forced = 0
+                for l in range(i + 1, j + 1):
+                    cl = spec.convs[l - 1]
+                    inc = (cl.k - 1) * _stride_prefix(spec, i, l)
+                    if not cl.conv_gated:
+                        forced += inc
+                    else:
+                        sums = sums | {ss + inc for ss in sums}
+                for ssum in sums:
+                    k = 1 + ssum + forced
+                    # Merged kernels beyond K_MAX are never latency-optimal
+                    # (conv cost grows ~k^2 — the paper's Fig. 1 point), so
+                    # both sides of the stack exclude them.  Mirrored by
+                    # rust/src/ir (K_MAX there must match).
+                    if k > K_MAX:
+                        continue
+                    sigs.add((spec.batch, hin, win, cin, cout, k, stride,
+                              dw and cin == cout))
+    # every original layer is also a signature (for per-layer execution)
+    for c in spec.convs:
+        sigs.add((spec.batch, c.h_in, c.w_in, c.cin, c.cout, c.k, c.stride,
+                  c.depthwise))
+        # projection shortcuts execute as standalone convs in the merged
+        # network whenever their residual add is not folded into a span
+        if c.add_proj is not None:
+            src = spec.convs[c.add_from - 1]
+            sigs.add((spec.batch, src.h_in, src.w_in, c.add_proj["cin"],
+                      c.add_proj["cout"], c.add_proj["k"],
+                      c.add_proj["stride"], False))
+    return sorted(sigs)
+
+
+def _stride_prefix(spec: Spec, i: int, l: int) -> int:
+    """Product of strides of convs i+1 .. l-1 (the dilation factor a later
+    kernel's taps acquire when pulled back to the span input, App. A)."""
+    p = 1
+    for m in range(i + 1, l):
+        p *= spec.convs[m - 1].stride
+    return p
+
+
+if __name__ == "__main__":
+    for name, fn in ALL_SPECS.items():
+        sp = fn()
+        print(name, "L =", sp.L, "params =", sp.param_count,
+              "R =", sp.irreducible(), "segments =", segments(sp),
+              "#sigs =", len(merge_signatures(sp)))

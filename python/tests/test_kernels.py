@@ -1,0 +1,199 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp/numpy oracles.
+
+hypothesis sweeps shapes/strides/kernel sizes; every property is the exact
+contract the Rust side relies on (the merge algebra here is re-implemented
+in rust/src/merge and pinned by fixtures in test_fixtures.py).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv as pconv
+from compile.kernels import merge as pmerge
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# Pallas conv vs lax.conv
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 2), st.integers(6, 14), st.integers(1, 5),
+       st.integers(1, 6), st.integers(1, 6), st.sampled_from([1, 3, 5]),
+       st.sampled_from([1, 2]), st.integers(0, 10 ** 6))
+def test_pallas_conv_valid_matches_ref(b, h, w_extra, ci, co, k, s, seed):
+    w_sz = k + w_extra
+    r = rng(seed)
+    x = jnp.asarray(r.normal(size=(b, h + k, w_sz + k, ci)), jnp.float32)
+    w = jnp.asarray(r.normal(size=(co, ci, k, k)), jnp.float32)
+    got = pconv.conv2d_valid(x, w, s)
+    want = ref.conv2d_valid(x, w, s)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(4, 10), st.integers(2, 8), st.integers(2, 8),
+       st.sampled_from([1, 3, 5, 7]), st.sampled_from([1, 2]),
+       st.integers(0, 10 ** 6))
+def test_pallas_conv_same_matches_ref(h, ci, co, k, s, seed):
+    r = rng(seed)
+    x = jnp.asarray(r.normal(size=(2, h, h, ci)), jnp.float32)
+    w = jnp.asarray(r.normal(size=(co, ci, k, k)), jnp.float32)
+    got = pconv.conv2d_same(x, w, s)
+    want = ref.conv2d_same(x, w, s)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(4, 10), st.integers(2, 6), st.sampled_from([1, 3]),
+       st.sampled_from([1, 2]), st.integers(0, 10 ** 6))
+def test_pallas_conv_depthwise(h, c, k, s, seed):
+    r = rng(seed)
+    x = jnp.asarray(r.normal(size=(2, h, h, c)), jnp.float32)
+    w = jnp.asarray(r.normal(size=(c, 1, k, k)), jnp.float32)
+    got = pconv.conv2d_same(x, w, s, depthwise=True)
+    want = ref.conv2d_same(x, w, s, depthwise=True)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_pallas_conv_1x1_is_channel_matmul():
+    r = rng(0)
+    x = jnp.asarray(r.normal(size=(2, 5, 5, 3)), jnp.float32)
+    w = jnp.asarray(r.normal(size=(4, 3, 1, 1)), jnp.float32)
+    got = pconv.conv2d_valid(x, w, 1)
+    want = jnp.einsum("bhwc,oc->bhwo", x, w[:, :, 0, 0])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Merge algebra: the Sec. 2 equivalence f2 o f1 == f_{theta2 * theta1}
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 4), st.integers(1, 4),
+       st.sampled_from([1, 3, 5]), st.sampled_from([1, 3]),
+       st.sampled_from([1, 2]), st.sampled_from([1, 2]),
+       st.integers(0, 10 ** 6))
+def test_ref_merge_equals_composition(ci, c, co, k1, k2, s1, s2, seed):
+    r = rng(seed)
+    km = (k2 - 1) * s1 + k1
+    h = km + 5 * s1 * s2
+    x = jnp.asarray(r.normal(size=(2, h, h, ci)), jnp.float32)
+    w1 = r.normal(size=(c, ci, k1, k1)).astype(np.float32)
+    w2 = r.normal(size=(co, c, k2, k2)).astype(np.float32)
+    composed = ref.conv2d_valid(ref.conv2d_valid(x, jnp.asarray(w1), s1),
+                                jnp.asarray(w2), s2)
+    wm = ref.merge_kernels(w1, w2, s1)
+    assert wm.shape == (co, ci, km, km)  # Eq. 1 / App. A kernel-size law
+    merged = ref.conv2d_valid(x, jnp.asarray(wm), s1 * s2)
+    np.testing.assert_allclose(merged, composed, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 3), st.integers(1, 3), st.integers(1, 3),
+       st.sampled_from([1, 3]), st.sampled_from([1, 3]),
+       st.integers(0, 10 ** 6))
+def test_merge_bias_equals_composition(ci, c, co, k1, k2, seed):
+    r = rng(seed)
+    h = k1 + k2 + 4
+    x = jnp.asarray(r.normal(size=(1, h, h, ci)), jnp.float32)
+    w1 = r.normal(size=(c, ci, k1, k1)).astype(np.float32)
+    w2 = r.normal(size=(co, c, k2, k2)).astype(np.float32)
+    b1 = r.normal(size=(c,)).astype(np.float32)
+    b2 = r.normal(size=(co,)).astype(np.float32)
+    composed = ref.conv2d_valid(
+        ref.conv2d_valid(x, jnp.asarray(w1)) + b1, jnp.asarray(w2)) + b2
+    wm = ref.merge_kernels(w1, w2)
+    bm = ref.merge_bias(w2, b1, b2)
+    merged = ref.conv2d_valid(x, jnp.asarray(wm)) + bm
+    np.testing.assert_allclose(merged, composed, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 3), st.integers(1, 3), st.integers(1, 3),
+       st.sampled_from([1, 3, 5]), st.sampled_from([1, 3]),
+       st.sampled_from([1, 2]), st.integers(0, 10 ** 6))
+def test_pallas_merge_matches_ref(ci, c, co, k1, k2, s1, seed):
+    r = rng(seed)
+    w1 = r.normal(size=(c, ci, k1, k1)).astype(np.float32)
+    w2 = r.normal(size=(co, c, k2, k2)).astype(np.float32)
+    got = pmerge.merge_kernels(jnp.asarray(w1), jnp.asarray(w2), s1)
+    want = ref.merge_kernels(w1, w2, s1)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_merge_associative():
+    """(w3 * w2) * w1 == w3 * (w2 * w1) — the iterated merge of Eq. 2."""
+    r = rng(7)
+    w1 = r.normal(size=(3, 2, 3, 3)).astype(np.float32)
+    w2 = r.normal(size=(4, 3, 3, 3)).astype(np.float32)
+    w3 = r.normal(size=(2, 4, 3, 3)).astype(np.float32)
+    a = ref.merge_kernels(ref.merge_kernels(w1, w2), w3)
+    b = ref.merge_kernels(w1, ref.merge_kernels(w2, w3))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_merge_with_identity_is_noop():
+    """theta_id does not grow the kernel (Sec. 3.1): id * w == w."""
+    r = rng(3)
+    w = r.normal(size=(4, 3, 3, 3)).astype(np.float32)
+    ident = ref.dirac_kernel(4, 1)
+    np.testing.assert_allclose(ref.merge_kernels(w, ident), w, rtol=1e-5)
+    ident_in = ref.dirac_kernel(3, 1)
+    np.testing.assert_allclose(ref.merge_kernels(ident_in, w), w, rtol=1e-5)
+
+
+def test_dirac_fold_equals_residual_add():
+    """x + conv(x, w) == conv(x, w + dirac) — the skip-addition fold."""
+    r = rng(11)
+    x = jnp.asarray(r.normal(size=(2, 8, 8, 4)), jnp.float32)
+    w = r.normal(size=(4, 4, 3, 3)).astype(np.float32)
+    lhs = ref.conv2d_same(x, jnp.asarray(w)) + x
+    fold = w + ref.dirac_kernel(4, 3)
+    rhs = ref.conv2d_same(x, jnp.asarray(fold))
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-4)
+
+
+def test_expand_depthwise_equivalence():
+    r = rng(5)
+    x = jnp.asarray(r.normal(size=(2, 8, 8, 4)), jnp.float32)
+    wdw = r.normal(size=(4, 1, 3, 3)).astype(np.float32)
+    dw = ref.conv2d_same(x, jnp.asarray(wdw), depthwise=True)
+    dense = ref.conv2d_same(x, jnp.asarray(ref.expand_depthwise(wdw)))
+    np.testing.assert_allclose(dw, dense, rtol=1e-4, atol=1e-4)
+
+
+def test_embed_kernel_padding_preserves_valid_interior():
+    """Embedding a kernel into a larger one == the same conv on a padded
+    input window (the alignment used when summing Dirac into a span)."""
+    r = rng(9)
+    x = jnp.asarray(r.normal(size=(1, 12, 12, 2)), jnp.float32)
+    w = r.normal(size=(3, 2, 3, 3)).astype(np.float32)
+    w5 = ref.embed_kernel(w, 5)
+    small = ref.conv2d_valid(x, jnp.asarray(w))
+    big = ref.conv2d_valid(x, jnp.asarray(w5))
+    np.testing.assert_allclose(big, small[:, 1:-1, 1:-1, :],
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_kernel_size_law():
+    """Eq. 1: Ker = 1 + sum (Ker_l - 1) under stride 1."""
+    sizes = [3, 1, 5, 3]
+    r = rng(1)
+    c = 2
+    ws = [r.normal(size=(c, c, k, k)).astype(np.float32) for k in sizes]
+    acc = ws[0]
+    for w in ws[1:]:
+        acc = ref.merge_kernels(acc, w)
+    assert acc.shape[-1] == 1 + sum(k - 1 for k in sizes)

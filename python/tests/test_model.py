@@ -1,0 +1,258 @@
+"""L2 correctness: the gated graph implements the paper's replacement
+operators sigma_{A,l} / f_{C,theta_l,l} exactly, for every model family."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model, specs
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def tiny_batch(sp, seed=0):
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.normal(size=(sp.batch, sp.h, sp.w, sp.c)), jnp.float32)
+    if sp.task == "classify":
+        y = jax.nn.one_hot(
+            jnp.asarray(r.integers(0, sp.num_classes, size=(sp.batch,))),
+            sp.num_classes)
+        return x, y
+    eps = jnp.asarray(r.normal(size=x.shape), jnp.float32)
+    t = jnp.asarray(r.uniform(0, 1000, size=(sp.batch,)), jnp.float32)
+    abar = jnp.asarray(r.uniform(0.1, 0.99, size=(sp.batch,)), jnp.float32)
+    return x, (eps, t, abar)
+
+
+def gates(sp, ga=1.0, gc=1.0, gn=1.0):
+    L = sp.L
+    return (jnp.full((L,), ga, jnp.float32),
+            jnp.full((L,), gc, jnp.float32),
+            jnp.full((L,), gn, jnp.float32))
+
+
+ALL = ["resnetish", "mnv2ish-1.0", "ddpmish"]
+
+
+@pytest.fixture(scope="module")
+def built():
+    out = {}
+    for name in ALL:
+        sp = specs.ALL_SPECS[name]()
+        flat = model.init_params(sp, seed=1)
+        out[name] = (sp, flat)
+    return out
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_forward_shapes(built, name):
+    sp, flat = built[name]
+    x, aux = tiny_batch(sp)
+    ga, gc, gn = gates(sp)
+    if sp.task == "classify":
+        out, feats = model.gated_forward(sp, flat, ga, gc, gn, x)
+        assert out.shape == (sp.batch, sp.num_classes)
+        assert feats.shape == (sp.batch, sp.head_hidden)
+    else:
+        eps, t, abar = aux
+        out, _ = model.gated_forward(sp, flat, ga, gc, gn, x, t)
+        assert out.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_conv_gate_zero_removes_layer(built, name):
+    """gc[l] = 0 must make the output independent of theta_l — exactly the
+    f_{C,theta,l} -> f_{theta_id} substitution of Problem (2)."""
+    sp, flat = built[name]
+    x, aux = tiny_batch(sp)
+    t = aux[1] if sp.task == "diffusion" else None
+    ga, gc, gn = gates(sp)
+    reducible = [c for c in sp.convs if c.conv_gated]
+    assert reducible, "spec has no reducible conv?"
+    c = reducible[len(reducible) // 2]
+    gc0 = gc.at[c.idx - 1].set(0.0)
+    out0, _ = model.gated_forward(sp, flat, ga, gc0, gn, x, t)
+    # perturb that conv's weights: output must not change
+    pw = [p for p in sp.params if p.name == f"conv{c.idx}.w"][0]
+    noise = jnp.zeros_like(flat).at[pw.offset:pw.offset + pw.size].set(7.7)
+    out1, _ = model.gated_forward(sp, flat + noise, ga, gc0, gn, x, t)
+    np.testing.assert_allclose(out0, out1, rtol=1e-5, atol=1e-5)
+    # with the gate on, the same perturbation must change the output
+    out2, _ = model.gated_forward(sp, flat + noise, ga, gc, gn, x, t)
+    assert float(jnp.abs(out2 - out0).max()) > 1e-3
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_act_gate_zero_linearizes(built, name):
+    """ga[l] = 0 replaces sigma_l by id: for a net with ALL act/gn gates
+    off, scaling the input scales the pre-head features linearly
+    (classifier head aside, the net is one big linear conv — the
+    depth-compression premise)."""
+    sp, flat = built[name]
+    if sp.task == "diffusion":
+        pytest.skip("attention keeps ddpmish nonlinear by design")
+    x, _ = tiny_batch(sp)
+    ga, gc, gn = gates(sp, ga=0.0, gn=0.0)
+    # remove biases to make the map exactly linear
+    flat_nb = flat
+    for p in sp.params:
+        if p.name.endswith(".b"):
+            flat_nb = flat_nb.at[p.offset:p.offset + p.size].set(0.0)
+    _, f1 = model.gated_forward(sp, flat_nb, ga, gc, gn, x)
+    _, f2 = model.gated_forward(sp, flat_nb, ga, gc, gn, 2.0 * x)
+    np.testing.assert_allclose(2.0 * f1, f2, rtol=1e-3, atol=1e-3)
+
+
+def test_two_conv_span_matches_merged_kernel_interior():
+    """End-to-end depth-compression equivalence at the graph level: with
+    the activation between resnetish convs 2,3 gated off, the two convs
+    equal the single merged conv theta_3 * theta_2 on the interior
+    (SAME-padding boundary rows differ by construction; the executor
+    handles deployment padding — see DESIGN.md)."""
+    sp = specs.resnetish()
+    flat = model.init_params(sp, seed=3)
+    P = model.unflatten(sp, flat)
+    r = np.random.default_rng(0)
+    x = jnp.asarray(r.normal(size=(2, 12, 12, 16)), jnp.float32)
+    w2, b2 = P["conv2.w"], P["conv2.b"]
+    w3, b3 = P["conv3.w"], P["conv3.b"]
+    seq = ref.conv2d_same(ref.conv2d_same(x, w2) + b2, w3) + b3
+    wm = ref.merge_kernels(np.asarray(w2), np.asarray(w3))
+    bm = ref.merge_bias(np.asarray(w3), np.asarray(b2), np.asarray(b3))
+    merged = ref.conv2d_same(x, jnp.asarray(wm)) + bm
+    np.testing.assert_allclose(merged[:, 2:-2, 2:-2, :],
+                               seq[:, 2:-2, 2:-2, :], rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_train_step_reduces_loss(built, name):
+    sp, flat = built[name]
+    x, aux = tiny_batch(sp)
+    ga, gc, gn = gates(sp)
+    step = jax.jit(model.train_step(sp))
+    mom = jnp.zeros_like(flat)
+    lr = jnp.float32(0.05 if sp.task == "classify" else 1e-3)
+    if sp.task == "classify":
+        args = (x, aux)
+    else:
+        eps, t, abar = aux
+        args = (x, eps, t, abar)
+    p = flat
+    first = None
+    for i in range(12):
+        p, mom, loss, metric = step(p, mom, ga, gc, gn, *args, lr)
+        if first is None:
+            first = float(loss)
+    assert float(loss) < first, (float(loss), first)
+    assert np.isfinite(float(loss))
+
+
+def test_distill_step_runs_and_improves():
+    sp = specs.resnetish()
+    flat = model.init_params(sp, seed=1)
+    tflat = model.init_params(sp, seed=2)
+    x, y = tiny_batch(sp)
+    ga, gc, gn = gates(sp)
+    step = jax.jit(model.distill_step(sp))
+    mom = jnp.zeros_like(flat)
+    p = flat
+    first = None
+    for _ in range(8):
+        p, mom, loss, acc = step(tflat, p, mom, ga, gc, gn, x, y,
+                                 jnp.float32(0.05))
+        if first is None:
+            first = float(loss)
+    assert float(loss) < first
+
+
+def test_sample_step_is_contractive_toward_clip_range():
+    sp = specs.ddpmish()
+    flat = model.init_params(sp, seed=1)
+    ga, gc, gn = gates(sp)
+    r = np.random.default_rng(0)
+    xt = jnp.asarray(3.0 * r.normal(size=(sp.batch, sp.h, sp.w, sp.c)),
+                     jnp.float32)
+    t = jnp.full((sp.batch,), 900.0, jnp.float32)
+    ab_t = jnp.full((sp.batch,), 0.05, jnp.float32)
+    ab_p = jnp.full((sp.batch,), 0.3, jnp.float32)
+    (x_prev,) = model.sample_step(sp)(flat, ga, gc, gn, xt, t, ab_t, ab_p)
+    assert x_prev.shape == xt.shape
+    assert bool(jnp.all(jnp.isfinite(x_prev)))
+
+
+# ---------------------------------------------------------------------------
+# Spec invariants the Rust IR depends on
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", list(specs.ALL_SPECS))
+def test_spec_shape_chain(name):
+    sp = specs.ALL_SPECS[name]()
+    prev_c, prev_h = sp.c, sp.h
+    stash = {}
+    for c in sp.convs:
+        cin = c.cin
+        if c.concat_from is not None:
+            cin = c.cin  # declared post-concat
+            assert c.concat_from in stash
+            assert cin == prev_c + stash[c.concat_from]
+        else:
+            assert cin == prev_c, (c.idx, cin, prev_c)
+        assert c.h_in == prev_h, (c.idx, c.h_in, prev_h)
+        if c.conv_gated:
+            assert c.cin == c.cout and c.stride == 1, \
+                f"irreducible layer {c.idx} marked reducible"
+        prev_c, prev_h = c.cout, c.h_out
+        if c.stash_as:
+            stash[c.stash_as] = c.cout
+        if c.barrier_reason == "upsample":
+            prev_h *= 2
+
+
+@pytest.mark.parametrize("name", list(specs.ALL_SPECS))
+def test_spec_R_matches_reducibility(name):
+    sp = specs.ALL_SPECS[name]()
+    for c in sp.convs:
+        shape_preserving = (c.cin == c.cout and c.stride == 1
+                            and c.concat_from is None)
+        if c.conv_gated:
+            assert shape_preserving
+    assert sp.convs[-1].act_gated is False  # sigma_L = id
+
+
+@pytest.mark.parametrize("name", list(specs.ALL_SPECS))
+def test_merge_signatures_wellformed(name):
+    sp = specs.ALL_SPECS[name]()
+    sigs = specs.merge_signatures(sp)
+    assert sigs
+    for (b, h, w, ci, co, k, s, dw) in sigs:
+        assert k % 2 == 1 and k <= specs.K_MAX
+        assert s in (1, 2, 4)
+        if dw:
+            assert ci == co
+
+
+def test_valid_span_nesting_rule():
+    sp = specs.resnetish()
+    adds = [(c.add_from, c.idx) for c in sp.convs if c.add_from]
+    assert adds
+    p, q = adds[0]  # residual branch: source boundary p-1, add point q
+    # a span that swallows the source boundary while the add point lies
+    # beyond it would leave the add without its tensor -> invalid
+    assert not specs.valid_span(sp, p - 2, q - 1)
+    # covering the whole branch folds the add via Dirac -> valid
+    assert specs.valid_span(sp, p - 1, q)
+    # add landing exactly at the span end executes externally -> valid
+    assert specs.valid_span(sp, p, q)
+
+
+def test_stride_rule_applied():
+    """App. A: stride>1 conv followed by k>1 conv forces a barrier."""
+    sp = specs.resnetish()
+    for i, c in enumerate(sp.convs[:-1]):
+        nxt = sp.convs[i + 1]
+        if c.stride > 1 and nxt.k > 1:
+            assert c.barrier_after

@@ -1,0 +1,54 @@
+//! Bench: Figure 1 — the latency cost of merged-kernel growth, measured
+//! end-to-end through PJRT on the same conv modules the latency table
+//! uses.  Prints the same series as `layermerge fig1`.
+
+use layermerge::bench::bench;
+use layermerge::model::{sig_str, Manifest};
+use layermerge::runtime::Runtime;
+use layermerge::util::rng::Rng;
+use layermerge::util::tensor::Tensor;
+
+fn main() -> anyhow::Result<()> {
+    let root = std::path::Path::new("artifacts");
+    if !root.join("manifest.json").exists() {
+        println!("(skipping fig1 bench: run `make artifacts` first)");
+        return Ok(());
+    }
+    let rt = Runtime::new(root)?;
+    let man = Manifest::load(root)?;
+    let (b, h, w, c) = (32usize, 32usize, 32usize, 16usize);
+    let mut rng = Rng::new(3);
+    println!("== Figure 1: merged conv latency vs kernel size (b{b} {h}x{w} c{c}) ==");
+    let mut base3 = None;
+    for k in (1..=13usize).step_by(2) {
+        let sig = sig_str(b, h, w, c, c, k, 1, false);
+        let Some(rel) = man.conv_art(&sig, "plain") else {
+            println!("k={k}: no artifact ({sig})");
+            continue;
+        };
+        let exec = rt.load(&rel)?;
+        let n = b * h * w * c;
+        let x = Tensor::new(vec![b, h, w, c], (0..n).map(|_| rng.normal()).collect());
+        let wt = Tensor::new(vec![c, c, k, k], (0..c * c * k * k).map(|_| rng.normal()).collect());
+        let bias = Tensor::zeros(&[c]);
+        let s = bench(&format!("conv k={k}"), 3, 400.0, || {
+            std::hint::black_box(exec.run(&[&x, &wt, &bias]).unwrap());
+        });
+        if k == 3 {
+            base3 = Some(s.p50_ms);
+        }
+        let note = match (k, base3) {
+            (k, Some(b3)) if k > 3 => {
+                let n_merged = (k - 1) / 2;
+                format!(
+                    "  (merges {n_merged} 3x3 layers; unmerged chain ~{:.3}ms -> {})",
+                    b3 * n_merged as f64,
+                    if s.p50_ms < b3 * n_merged as f64 { "merge WINS" } else { "merge loses" }
+                )
+            }
+            _ => String::new(),
+        };
+        println!("{}{}", s.row(), note);
+    }
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Bench: parameter-space merging (Sec. 2's theta_2 * theta_1 operator and
+//! the full span composition of Algorithm 2) — the deployment-time hot
+//! path of the merge engine.
+
+use std::collections::BTreeSet;
+
+use layermerge::bench::bench;
+use layermerge::merge::{dirac, expand_depthwise, merge_kernels};
+use layermerge::util::rng::Rng;
+use layermerge::util::tensor::Tensor;
+
+fn randt(rng: &mut Rng, dims: &[usize]) -> Tensor {
+    let n: usize = dims.iter().product();
+    Tensor::new(dims.to_vec(), (0..n).map(|_| rng.normal()).collect())
+}
+
+fn main() {
+    println!("== merge-operator benches ==");
+    let mut rng = Rng::new(1);
+    for &(c, k1, k2) in &[(16usize, 3usize, 3usize), (64, 3, 3), (64, 7, 3), (128, 11, 3)] {
+        let w1 = randt(&mut rng, &[c, c, k1, k1]);
+        let w2 = randt(&mut rng, &[c, c, k2, k2]);
+        let s = bench(
+            &format!("merge_kernels c={c} k1={k1} k2={k2}"),
+            2,
+            300.0,
+            || {
+                std::hint::black_box(merge_kernels(&w1, &w2, 1));
+            },
+        );
+        println!("{}", s.row());
+    }
+
+    // inverted-residual merge: 1x1 -> dw3x3 -> 1x1 (+Dirac), the
+    // DepthShrinker-style case MobileNetV2 spans hit constantly
+    let (cin, cexp) = (24usize, 96usize);
+    let w_exp = randt(&mut rng, &[cexp, cin, 1, 1]);
+    let w_dw = expand_depthwise(&randt(&mut rng, &[cexp, 1, 3, 3]));
+    let w_proj = randt(&mut rng, &[cin, cexp, 1, 1]);
+    let s = bench("merge_inverted_residual 24->96dw->24 (+dirac)", 2, 300.0, || {
+        let m1 = merge_kernels(&w_exp, &w_dw, 1);
+        let mut m2 = merge_kernels(&m1, &w_proj, 1);
+        let d = dirac(cin, m2.dims[2]);
+        for (a, b) in m2.data.iter_mut().zip(&d.data) {
+            *a += *b;
+        }
+        std::hint::black_box(&m2);
+    });
+    println!("{}", s.row());
+
+    // full span composition on the real resnetish spec, if artifacts exist
+    let spec_path = std::path::Path::new("artifacts/specs/resnetish.spec.json");
+    if spec_path.exists() {
+        let spec = layermerge::ir::Spec::load(spec_path).unwrap();
+        let flat: Vec<f32> = (0..spec.param_count).map(|_| rng.normal() * 0.1).collect();
+        let kept: BTreeSet<usize> = [2usize, 3].into_iter().collect();
+        let s = bench("span_merge resnetish (1,3] residual block", 2, 300.0, || {
+            std::hint::black_box(layermerge::merge::span_merge(&spec, &flat, 1, 3, &kept));
+        });
+        println!("{}", s.row());
+    } else {
+        println!("(skipping span_merge bench: run `make artifacts` first)");
+    }
+    println!("done");
+}

@@ -1,0 +1,41 @@
+//! Bench: end-to-end table regeneration in fast mode — times each phase
+//! of the pipeline (pretrain reuse, table build, solve, fine-tune, deploy)
+//! for the Table-1/2 workloads.  The full paper-fidelity tables are
+//! produced by `layermerge table1..table11`; this target proves the
+//! regeneration path and reports its cost.
+
+use layermerge::experiments::Ctx;
+use layermerge::pipeline::{Method, PipelineCfg};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let root = std::path::Path::new("artifacts");
+    if !root.join("manifest.json").exists() {
+        println!("(skipping paper_tables bench: run `make artifacts` first)");
+        return Ok(());
+    }
+    std::env::set_var("LM_FAST", "1");
+    let cfg = PipelineCfg::default();
+    let ctx = Ctx::new(root, std::env::current_dir()?, cfg)?;
+    println!("== paper-table pipeline phases (LM_FAST mode) ==");
+    for model in ["resnetish", "mnv2ish-1.0"] {
+        let t0 = Instant::now();
+        let mut pipe = ctx.pipeline(model)?;
+        let t_pre = t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        pipe.ensure_tables()?;
+        let t_tab = t1.elapsed().as_secs_f64();
+        let t2 = Instant::now();
+        let sol = pipe.solve(Method::LayerMerge, 0.65)?;
+        let t_solve = t2.elapsed().as_secs_f64();
+        let t3 = Instant::now();
+        let c = pipe.finetune_and_deploy(Method::LayerMerge, 0.65, &sol, Some(5), false)?;
+        let t_dep = t3.elapsed().as_secs_f64();
+        println!(
+            "{model:<14} pretrain+orig {t_pre:>7.2}s | tables {t_tab:>7.2}s | solve {t_solve:>7.4}s | finetune+deploy {t_dep:>7.2}s | depth {} -> {}",
+            pipe.model.spec.len(),
+            c.depth
+        );
+    }
+    Ok(())
+}

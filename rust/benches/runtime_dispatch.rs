@@ -1,0 +1,60 @@
+//! Bench: PJRT runtime dispatch costs — the per-op overhead that makes
+//! depth reduction pay (the "PyTorch format" premise of Tables 1-5), plus
+//! the gated train/eval step the importance builder hammers.
+
+use layermerge::bench::bench;
+use layermerge::ir::Task;
+use layermerge::model::{Manifest, Model};
+use layermerge::runtime::Runtime;
+use layermerge::train::{self, Gen};
+use layermerge::util::rng::Rng;
+use layermerge::util::tensor::Tensor;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let root = std::path::Path::new("artifacts");
+    if !root.join("manifest.json").exists() {
+        println!("(skipping runtime bench: run `make artifacts` first)");
+        return Ok(());
+    }
+    let rt = Arc::new(Runtime::new(root)?);
+    let man = Manifest::load(root)?;
+    println!("== runtime dispatch benches ==");
+
+    // smallest elementwise op == pure dispatch + transfer overhead
+    if let Some(rel) = man.ew_art("relu_b32h4w4c128") {
+        let exec = rt.load(&rel)?;
+        let mut rng = Rng::new(5);
+        let x = Tensor::new(vec![32, 4, 4, 128], (0..32 * 4 * 4 * 128).map(|_| rng.normal()).collect());
+        let s = bench("dispatch relu 32x4x4x128 (overhead floor)", 5, 300.0, || {
+            std::hint::black_box(exec.run(&[&x]).unwrap());
+        });
+        println!("{}", s.row());
+    }
+
+    for name in ["resnetish", "mnv2ish-1.0", "ddpmish"] {
+        let Ok(model) = Model::load(rt.clone(), &man, name) else {
+            println!("(skipping {name})");
+            continue;
+        };
+        let gen = Gen::for_model(&model, 0xda7a);
+        let gates = model.spec.pristine_gates();
+        let batch = gen.batch(train::STREAM_TRAIN, 0);
+        let mut params = model.init.clone();
+        let mut mom = vec![0.0f32; params.len()];
+        let s = bench(&format!("{name} gated eval step"), 2, 500.0, || {
+            std::hint::black_box(model.eval(&params, &gates, &batch).unwrap());
+        });
+        println!("{}", s.row());
+        let s = bench(&format!("{name} gated train step"), 2, 500.0, || {
+            std::hint::black_box(
+                model.step(&mut params, &mut mom, &gates, &batch, 0.01).unwrap(),
+            );
+        });
+        println!("{}", s.row());
+        let _ = match model.spec.task {
+            Task::Classify | Task::Diffusion => (),
+        };
+    }
+    Ok(())
+}

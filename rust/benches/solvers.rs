@@ -1,0 +1,72 @@
+//! Bench: the paper's solver complexity claims (Sec. 3.4 — "the DP
+//! algorithm is highly efficient, typically completing within a few
+//! seconds on CPU").  Times Algorithm 1, the LayerOnly knapsack (Eq. 8)
+//! and the \hat{C}_{ijk} selection (Eq. 3) at paper-scale instances
+//! (L = 17..34, P = 10 * T0 as in App. C).
+
+use layermerge::bench::bench;
+use layermerge::solver::dp::{self, DpInput, SpanArc};
+use layermerge::solver::layeronly::{self, KnapsackInput};
+use layermerge::util::rng::Rng;
+
+fn synthetic_arcs(l: usize, seg: usize, rng: &mut Rng) -> Vec<Vec<SpanArc>> {
+    let mut arcs = vec![Vec::new(); l + 1];
+    for j in 1..=l {
+        let lo = j.saturating_sub(seg);
+        for i in lo..j {
+            for k in (1..=13).step_by(2) {
+                if rng.uniform() < 0.6 {
+                    arcs[j].push(SpanArc {
+                        i,
+                        k,
+                        lat_ms: rng.range(0.05, 2.0) as f64,
+                        imp: rng.uniform() * 2.0,
+                    });
+                }
+            }
+        }
+    }
+    arcs
+}
+
+fn main() {
+    println!("== solver benches (paper Sec. 3.4 complexity) ==");
+    let mut rng = Rng::new(42);
+    for (l, p) in [(17usize, 1000usize), (34, 1000), (34, 10000), (64, 10000)] {
+        let arcs = synthetic_arcs(l, 8, &mut rng);
+        let n_arcs: usize = arcs.iter().map(|a| a.len()).sum();
+        let input = DpInput { l_max: l, budget_ms: 10.0, p, arcs };
+        let s = bench(
+            &format!("alg1_dp L={l} P={p} arcs={n_arcs}"),
+            2,
+            400.0,
+            || {
+                let sol = dp::solve(&input);
+                std::hint::black_box(&sol);
+            },
+        );
+        println!("{}", s.row());
+    }
+
+    for l in [17usize, 34, 64] {
+        let mut rng2 = Rng::new(7);
+        let input = KnapsackInput {
+            lat_ms: std::iter::once(0.0)
+                .chain((0..l).map(|_| rng2.range(0.05, 1.0) as f64))
+                .collect(),
+            imp: std::iter::once(0.0)
+                .chain((0..l).map(|_| rng2.uniform()))
+                .collect(),
+            forced: std::iter::once(false)
+                .chain((0..l).map(|_| rng2.uniform() < 0.2))
+                .collect(),
+            budget_ms: 8.0,
+            p: 10000,
+        };
+        let s = bench(&format!("layeronly_knapsack L={l} P=10000"), 2, 300.0, || {
+            std::hint::black_box(layeronly::solve(&input));
+        });
+        println!("{}", s.row());
+    }
+    println!("done");
+}

@@ -1,0 +1,12 @@
+//! Baselines the paper compares against (Sec. 4):
+//!
+//! * [`channel`]    — HALP-style latency-saliency channel-pruning knapsack
+//!                    (and the Diff-Pruning-style uniform variant for the
+//!                    diffusion model).
+//! * [`sequential`] — the Table-6 ablation: Depth then LayerOnly,
+//!                    optimized independently.
+//! * Knowledge distillation lives in `train::train_distill` (Table 10/11)
+//!   plus the cross-architecture KD artifact for the smaller student.
+
+pub mod channel;
+pub mod sequential;

@@ -1,0 +1,101 @@
+//! The Table-6 ablation: sequential Depth -> LayerOnly optimization.
+//!
+//! The paper's baseline first runs the Depth method at ratio p1, fine-tunes,
+//! then prunes whole *merged* layers of the result with LayerOnly at ratio
+//! p2, splitting the fine-tuning budget equally (App. D).  Joint
+//! optimization (LayerMerge) needs none of these extra hyper-parameters —
+//! that is precisely the point of Table 6.
+
+use std::collections::BTreeSet;
+
+use anyhow::{Context, Result};
+
+use crate::pipeline::{Compressed, Method, Pipeline};
+use crate::solver::{layeronly, Solution};
+use crate::train;
+
+/// Run Depth at `p1`, fine-tune half the budget, then LayerOnly over the
+/// resulting merged layers at `p2` (relative to the depth-pruned model),
+/// fine-tune the other half, and deploy.
+pub fn run(
+    pipe: &mut Pipeline,
+    p1: f64,
+    p2: f64,
+) -> Result<Compressed> {
+    let half = pipe.cfg.finetune_steps / 2;
+    // ---- phase 1: Depth ---------------------------------------------------
+    let depth_sol = pipe.solve(Method::Depth, p1)?;
+    let stage1 = pipe.finetune_and_deploy(Method::Depth, p1, &depth_sol, Some(half), false)?;
+
+    // ---- phase 2: LayerOnly over merged spans -----------------------------
+    // Each Depth span is one merged layer; droppable iff shape-preserving
+    // (every conv in it reducible).
+    let spec = pipe.model.spec.clone();
+    let t = pipe.tables.as_ref().context("tables")?.clone();
+    let spans = depth_sol.spans.clone();
+    let n = spans.len();
+    let mut lat = vec![0.0f64; n + 1];
+    let mut imp = vec![0.0f64; n + 1];
+    let mut forced = vec![false; n + 1];
+    for (s_idx, &(i, j, k)) in spans.iter().enumerate() {
+        let droppable = ((i + 1)..=j).all(|l| spec.conv(l).conv_gated);
+        forced[s_idx + 1] = !droppable;
+        lat[s_idx + 1] = t.entries.get(&(i, j, k)).map(|e| e.lat_ms).unwrap_or(0.1);
+        if droppable {
+            // keep-importance: how much dropping this merged span hurts,
+            // measured on the depth-compressed fine-tuned weights.
+            let mut a_set: BTreeSet<usize> = depth_sol.a.iter().copied().collect();
+            a_set.remove(&j);
+            let mut c_set = depth_sol.c.clone();
+            for l in (i + 1)..=j {
+                c_set.remove(&l);
+            }
+            let gates = spec.solution_gates(&a_set, &c_set, &[]);
+            let perf = train::proxy_perf(
+                &pipe.model, &pipe.gen, &stage1.finetuned, &gates,
+                pipe.cfg.build.proxy_steps, pipe.cfg.build.proxy_lr,
+                pipe.cfg.build.eval_batches,
+            )?;
+            imp[s_idx + 1] = ((stage1.pruned_metric - perf) as f64).exp();
+        }
+    }
+    let depth_lat: f64 = lat.iter().sum();
+    let ksol = layeronly::solve(&layeronly::KnapsackInput {
+        lat_ms: lat,
+        imp,
+        forced,
+        budget_ms: p2 * depth_lat,
+        p: pipe.cfg.p_disc,
+    })
+    .context("sequential: phase-2 knapsack infeasible")?;
+
+    // materialize the final solution
+    let mut a: Vec<usize> = Vec::new();
+    let mut c: BTreeSet<usize> = BTreeSet::new();
+    let mut out_spans = Vec::new();
+    for (s_idx, &(i, j, k)) in spans.iter().enumerate() {
+        if ksol.kept.contains(&(s_idx + 1)) {
+            out_spans.push((i, j, k));
+            c.extend((i + 1)..=j);
+        } else {
+            out_spans.push((i, j, 1)); // dropped merged layer -> identity
+        }
+        if j != spec.len() {
+            a.push(j);
+        }
+    }
+    let sol = Solution {
+        a,
+        c,
+        spans: out_spans,
+        objective: ksol.objective,
+        latency_est: ksol.latency_est + t.fixed_ms,
+    };
+    // ---- phase 2 fine-tune + deploy (continues from the stage-1 weights) --
+    let mut result = pipe.finetune_and_deploy_from(
+        Method::LayerOnly, p1 * p2, &sol, Some(half), false,
+        Some(&stage1.finetuned),
+    )?;
+    result.method = format!("Depth-{:.0}% -> LayerOnly-{:.0}%", p1 * 100.0, p2 * 100.0);
+    Ok(result)
+}

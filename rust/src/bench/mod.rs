@@ -1,0 +1,115 @@
+//! In-tree micro-benchmark harness (criterion substitute; DESIGN.md §2).
+//!
+//! `cargo bench` targets under `rust/benches/` use `harness = false` and
+//! drive this module.  Each paper table/figure also has a renderer here so
+//! `layermerge tableN` and the bench targets print identical rows.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub min_ms: f64,
+}
+
+impl BenchStats {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>8} iters  mean {:>9.4}ms  p50 {:>9.4}ms  p95 {:>9.4}ms  min {:>9.4}ms",
+            self.name, self.iters, self.mean_ms, self.p50_ms, self.p95_ms, self.min_ms
+        )
+    }
+}
+
+/// Time `f` with warm-up; iteration count adapts to hit ~`budget_ms` of
+/// total measurement time (criterion-ish behaviour without the crate).
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, budget_ms: f64, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    // estimate per-iter cost
+    let t0 = Instant::now();
+    f();
+    let per = t0.elapsed().as_secs_f64() * 1e3;
+    let iters = ((budget_ms / per.max(1e-6)) as usize).clamp(5, 2000);
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    BenchStats {
+        name: name.to_string(),
+        iters,
+        mean_ms: times.iter().sum::<f64>() / times.len() as f64,
+        p50_ms: times[times.len() / 2],
+        p95_ms: times[((times.len() as f64 * 0.95) as usize).min(times.len() - 1)],
+        min_ms: times[0],
+    }
+}
+
+/// Render a paper-style table to stdout and return it as markdown lines.
+pub struct TableOut {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl TableOut {
+    pub fn new(title: &str, header: &[&str]) -> TableOut {
+        TableOut {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+
+    pub fn markdown(&self) -> String {
+        let mut out = format!("\n### {}\n\n", self.title);
+        out.push_str(&format!("| {} |\n", self.header.join(" | ")));
+        out.push_str(&format!(
+            "|{}\n",
+            self.header.iter().map(|_| "---|").collect::<String>()
+        ));
+        for r in &self.rows {
+            out.push_str(&format!("| {} |\n", r.join(" | ")));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.markdown());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let s = bench("noop-ish", 2, 5.0, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(s.iters >= 5);
+        assert!(s.p50_ms >= 0.0 && s.mean_ms >= s.min_ms);
+    }
+
+    #[test]
+    fn table_markdown_shape() {
+        let mut t = TableOut::new("Table X", &["Network", "Acc", "Speed-up"]);
+        t.row(vec!["net".into(), "0.9".into(), "1.5x".into()]);
+        let md = t.markdown();
+        assert!(md.contains("| Network | Acc | Speed-up |"));
+        assert!(md.contains("| net | 0.9 | 1.5x |"));
+    }
+}

@@ -1,0 +1,562 @@
+//! Merged-network executor — runs the *deployed* compressed model.
+//!
+//! After Algorithm 1 picks (A*, C*) and fine-tuning finishes, `Plan`
+//! materializes the merged network: one `span_merge`d conv per span plus
+//! the structural ops (residual adds whose branch wasn't folded, group
+//! norm, attention, upsampling, skip-concat, classifier head, time-bias
+//! injection).  Two execution formats mirror the paper's measurement
+//! targets (DESIGN.md §2):
+//!
+//! * `Format::Eager` ("PyTorch format") — one PJRT dispatch per op:
+//!   conv, then act, then add, each its own executable.
+//! * `Format::Fused` ("TensorRT format") — conv+bias+act(+residual) as a
+//!   single fused executable per merged layer (XLA fuses internally).
+//!
+//! The plan is also the ground truth for end-to-end latency measurements
+//! (Tables 1-5) and for the merged-vs-pruned numerics report.
+
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::ir::{Spec, Task};
+use crate::merge::{span_merge, MergedConv};
+use crate::model::{sig_str, Manifest};
+use crate::runtime::Runtime;
+use crate::util::tensor::Tensor;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Format {
+    Eager,
+    Fused,
+}
+
+#[derive(Debug, Clone)]
+pub struct ProjParams {
+    pub w: Tensor,
+    pub b: Vec<f32>,
+    pub stride: usize,
+}
+
+#[derive(Debug, Clone)]
+pub enum Post {
+    Attention { wqkv: Tensor, wout: Tensor },
+    Upsample,
+}
+
+#[derive(Debug, Clone)]
+pub struct Step {
+    pub i: usize,
+    pub j: usize,
+    pub merged: MergedConv,
+    /// input feature-map geometry (after concat)
+    pub h_in: usize,
+    pub w_in: usize,
+    pub cin: usize,
+    /// activation applied at the boundary ("relu"/"swish"), if any
+    pub act: Option<String>,
+    /// group norm applied at the boundary: (scale, bias, groups)
+    pub gn: Option<(Vec<f32>, Vec<f32>, usize)>,
+    /// unfolded residual: (source boundary index, optional projection)
+    pub res: Option<(usize, Option<ProjParams>)>,
+    /// concat the stash tag onto the span input
+    pub concat: Option<String>,
+    /// time-bias injection at the span input: (w [tdim,cin], b [cin])
+    pub time_bias: Option<(Tensor, Vec<f32>)>,
+    pub stash_as: Option<String>,
+    pub post: Vec<Post>,
+}
+
+pub struct Plan {
+    pub spec_name: String,
+    pub task: Task,
+    pub batch: usize,
+    pub steps: Vec<Step>,
+    /// classifier head (w, b)
+    pub head: Option<(Tensor, Vec<f32>)>,
+    /// diffusion time embedding MLP (w1, b1) and dim
+    pub temb: Option<(Tensor, Vec<f32>, usize)>,
+    pub l_total: usize,
+}
+
+impl Plan {
+    /// Plan for the ORIGINAL network: every layer its own span, all convs
+    /// and activations kept.
+    pub fn original(spec: &Spec, flat: &[f32]) -> Result<Plan> {
+        let a: Vec<usize> = (1..spec.len()).collect(); // singleton spans: acts stay pristine
+        let c: BTreeSet<usize> = (1..=spec.len()).collect();
+        let spans: Vec<(usize, usize, usize)> =
+            (1..=spec.len()).map(|j| (j - 1, j, spec.conv(j).k)).collect();
+        Plan::from_solution(spec, flat, &a, &c, &spans)
+    }
+
+    /// Build the deployed network from a solution.
+    ///
+    /// `a` = kept interior boundaries; `c` = kept conv set (superset of R);
+    /// `spans` = (i, j, k) from the solver (k recorded for bookkeeping).
+    pub fn from_solution(
+        spec: &Spec,
+        flat: &[f32],
+        a: &[usize],
+        c: &BTreeSet<usize>,
+        spans: &[(usize, usize, usize)],
+    ) -> Result<Plan> {
+        let a_set: BTreeSet<usize> = a.iter().copied().collect();
+        let mut steps: Vec<Step> = Vec::new();
+        // canonical boundary resolution: spans that reduce to an exact
+        // identity (e.g. a layer dropped by LayerOnly) are elided — the
+        // deployed network genuinely skips them.
+        let mut canon: BTreeMap<usize, usize> = BTreeMap::new();
+        canon.insert(0, 0);
+        for &(i, j, _k) in spans {
+            let kept: BTreeSet<usize> =
+                ((i + 1)..=j).filter(|l| c.contains(l) || !spec.conv(*l).conv_gated).collect();
+            let merged = span_merge(spec, flat, i, j, &kept);
+            let first = spec.conv(i + 1);
+            let cj = spec.conv(j);
+            // boundary activation: pristine act, or — for multi-layer
+            // merged spans ending at a pristine-linear position — the
+            // App. A added activation (mirrors ir::solution_gates).
+            let act = if !cj.act_gated {
+                if cj.act == "none" { None } else { Some(cj.act.clone()) }
+            } else if j == spec.len() || !a_set.contains(&j) {
+                None // sigma_L = id / activation pruned by the solver
+            } else if cj.act != "none" {
+                Some(cj.act.clone())
+            } else if j - i > 1 {
+                Some("relu".to_string())
+            } else {
+                None
+            };
+            let gn = if cj.gn {
+                Some((
+                    spec.param_slice(flat, &format!("gn{j}.scale")).to_vec(),
+                    spec.param_slice(flat, &format!("gn{j}.bias")).to_vec(),
+                    cj.gn_groups,
+                ))
+            } else {
+                None
+            };
+            // external residual: add point at j with source before span
+            let res = match cj.add_from {
+                Some(af) if af - 1 < i => {
+                    let proj = cj.add_proj.as_ref().map(|p| ProjParams {
+                        w: Tensor::new(
+                            spec.param(&format!("proj{af}.w")).shape.clone(),
+                            spec.param_slice(flat, &format!("proj{af}.w")).to_vec(),
+                        ),
+                        b: spec.param_slice(flat, &format!("proj{af}.b")).to_vec(),
+                        stride: p.stride,
+                    });
+                    Some((af - 1, proj))
+                }
+                _ => None,
+            };
+            let time_bias = if first.time_bias {
+                Some((
+                    Tensor::new(
+                        spec.param(&format!("temb{}.w", i + 1)).shape.clone(),
+                        spec.param_slice(flat, &format!("temb{}.w", i + 1)).to_vec(),
+                    ),
+                    spec.param_slice(flat, &format!("temb{}.b", i + 1)).to_vec(),
+                ))
+            } else {
+                None
+            };
+            let mut post = Vec::new();
+            if cj.barrier_reason == "attention" {
+                post.push(Post::Attention {
+                    wqkv: Tensor::new(
+                        spec.param("attn.qkv.w").shape.clone(),
+                        spec.param_slice(flat, "attn.qkv.w").to_vec(),
+                    ),
+                    wout: Tensor::new(
+                        spec.param("attn.out.w").shape.clone(),
+                        spec.param_slice(flat, "attn.out.w").to_vec(),
+                    ),
+                });
+            }
+            if cj.barrier_reason == "upsample" {
+                post.push(Post::Upsample);
+            }
+            // identity elision: dropped layer -> no dispatch at all
+            let is_identity = merged.k == 1
+                && merged.stride == 1
+                && !merged.depthwise
+                && act.is_none()
+                && gn.is_none()
+                && res.is_none()
+                && first.concat_from.is_none()
+                && time_bias.is_none()
+                && cj.stash_as.is_none()
+                && post.is_empty()
+                && {
+                    let d = crate::merge::dirac(first.cin, 1);
+                    merged.weight.dims == d.dims
+                        && merged.weight.max_abs_diff(&d) < 1e-7
+                        && merged.bias.iter().all(|b| b.abs() < 1e-7)
+                };
+            let src = *canon.get(&i).unwrap_or(&i);
+            if is_identity {
+                canon.insert(j, src);
+                continue;
+            }
+            canon.insert(j, j);
+            steps.push(Step {
+                i: src,
+                j,
+                merged,
+                h_in: first.h_in,
+                w_in: first.w_in,
+                cin: first.cin,
+                act,
+                gn,
+                res,
+                concat: first.concat_from.clone(),
+                time_bias,
+                stash_as: cj.stash_as.clone(),
+                post,
+            });
+        }
+        // remap residual sources through the canonical boundary map
+        for s in &mut steps {
+            if let Some((src, _)) = &mut s.res {
+                *src = *canon.get(src).unwrap_or(src);
+            }
+        }
+        let head = match spec.task {
+            Task::Classify => Some((
+                Tensor::new(
+                    spec.param("head.w").shape.clone(),
+                    spec.param_slice(flat, "head.w").to_vec(),
+                ),
+                spec.param_slice(flat, "head.b").to_vec(),
+            )),
+            Task::Diffusion => None,
+        };
+        let temb = match spec.task {
+            Task::Diffusion => Some((
+                Tensor::new(
+                    spec.param("temb.w1").shape.clone(),
+                    spec.param_slice(flat, "temb.w1").to_vec(),
+                ),
+                spec.param_slice(flat, "temb.b1").to_vec(),
+                spec.time_dim,
+            )),
+            Task::Classify => None,
+        };
+        Ok(Plan {
+            spec_name: spec.name.clone(),
+            task: spec.task,
+            batch: spec.batch,
+            steps,
+            head,
+            temb,
+            l_total: spec.len(),
+        })
+    }
+
+    pub fn depth(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// Sinusoidal + MLP time embedding (host side; 32-dim — negligible).
+    fn temb_vec(&self, t: &Tensor) -> Vec<f32> {
+        let (w1, b1, dim) = self.temb.as_ref().expect("diffusion only");
+        let b = t.dims[0];
+        let half = dim / 2;
+        let mut emb = vec![0.0f32; b * dim];
+        for n in 0..b {
+            for i in 0..half {
+                let freq = (-(10000.0f32.ln()) * i as f32 / half as f32).exp();
+                let ang = t.data[n] * freq;
+                emb[n * dim + i] = ang.sin();
+                emb[n * dim + half + i] = ang.cos();
+            }
+        }
+        // dense + swish
+        let mut out = vec![0.0f32; b * dim];
+        for n in 0..b {
+            for o in 0..*dim {
+                let mut acc = b1[o];
+                for i in 0..*dim {
+                    acc += emb[n * dim + i] * w1.data[i * dim + o];
+                }
+                out[n * dim + o] = acc / (1.0 + (-acc).exp());
+            }
+        }
+        out
+    }
+
+    /// Forward through the merged network.
+    pub fn forward(
+        &self,
+        rt: &Runtime,
+        man: &Manifest,
+        x: &Tensor,
+        t: Option<&Tensor>,
+        fmt: Format,
+    ) -> Result<Tensor> {
+        self.forward_inner(rt, man, x, t, fmt, None)
+    }
+
+    /// Forward with per-dispatch timing accumulation (ms).
+    pub fn forward_timed(
+        &self,
+        rt: &Runtime,
+        man: &Manifest,
+        x: &Tensor,
+        t: Option<&Tensor>,
+        fmt: Format,
+    ) -> Result<(Tensor, f64)> {
+        let mut ms = 0.0;
+        let out = self.forward_inner(rt, man, x, t, fmt, Some(&mut ms))?;
+        Ok((out, ms))
+    }
+
+    fn forward_inner(
+        &self,
+        rt: &Runtime,
+        man: &Manifest,
+        x: &Tensor,
+        t: Option<&Tensor>,
+        fmt: Format,
+        mut timing: Option<&mut f64>,
+    ) -> Result<Tensor> {
+        let temb = t.map(|tt| self.temb_vec(tt));
+        let mut boundaries: BTreeMap<usize, Tensor> = BTreeMap::new();
+        boundaries.insert(0, x.clone());
+        let mut stash: HashMap<String, Tensor> = HashMap::new();
+        let b = self.batch;
+
+        let run = |rel: &str, args: &[&Tensor], timing: &mut Option<&mut f64>|
+         -> Result<Tensor> {
+            let exec = rt.load(rel)?;
+            let t0 = Instant::now();
+            let out = exec.run(args)?;
+            if let Some(ms) = timing.as_deref_mut() {
+                *ms += t0.elapsed().as_secs_f64() * 1e3;
+            }
+            Ok(out.into_iter().next().unwrap())
+        };
+
+        let mut cur = x.clone();
+        for step in &self.steps {
+            let mut input = boundaries
+                .get(&step.i)
+                .cloned()
+                .with_context(|| format!("boundary {} not materialized", step.i))?;
+            // skip-concat (host; see DESIGN.md §4)
+            if let Some(tag) = &step.concat {
+                let other = stash.get(tag).context("missing stash")?;
+                input = concat_channels(&input, other);
+            }
+            // time-bias injection (host; 32-dim MLP output)
+            if let Some((tw, tb)) = &step.time_bias {
+                let temb = temb.as_ref().context("t required")?;
+                let dim = tw.dims[0];
+                let cin = tw.dims[1];
+                for n in 0..b {
+                    let mut bias = vec![0.0f32; cin];
+                    for o in 0..cin {
+                        let mut acc = tb[o];
+                        for i in 0..dim {
+                            acc += temb[n * dim + i] * tw.data[i * cin + o];
+                        }
+                        bias[o] = acc;
+                    }
+                    let hw = input.dims[1] * input.dims[2];
+                    for p in 0..hw {
+                        for o in 0..cin {
+                            let idx = (n * hw + p) * cin + o;
+                            input.data[idx] += bias[o];
+                        }
+                    }
+                }
+            }
+            let m = &step.merged;
+            let sig = sig_str(
+                b, input.dims[1], input.dims[2], input.dims[3], m.bias.len(),
+                m.k, m.stride, m.depthwise,
+            );
+            let wt = &m.weight;
+            let bt = Tensor::new(vec![m.bias.len()], m.bias.clone());
+            // resolve the residual input (shape = conv output shape)
+            let res_t: Option<Tensor> = match &step.res {
+                Some((src, proj)) => {
+                    let base = boundaries
+                        .get(src)
+                        .cloned()
+                        .with_context(|| format!("res boundary {src}"))?;
+                    Some(match proj {
+                        Some(p) => {
+                            let psig = sig_str(
+                                b, base.dims[1], base.dims[2], base.dims[3],
+                                p.b.len(), 1, p.stride, false,
+                            );
+                            let rel = man
+                                .conv_art(&psig, "plain")
+                                .with_context(|| format!("proj artifact {psig}"))?;
+                            let pb = Tensor::new(vec![p.b.len()], p.b.clone());
+                            run(&rel, &[&base, &p.w, &pb], &mut timing)?
+                        }
+                        None => base,
+                    })
+                }
+                None => None,
+            };
+
+            // op order mirrors the gated graph: conv -> gn -> add -> act.
+            // Fused format collapses conv(+add)(+act) into one dispatch
+            // whenever no group norm sits in between.
+            let can_fuse = fmt == Format::Fused && step.gn.is_none();
+            cur = if can_fuse {
+                let variant = match (&step.act, &res_t) {
+                    (Some(a), Some(_)) => format!("far_{a}"),
+                    (Some(a), None) => format!("fa_{a}"),
+                    (None, Some(_)) => "far_none".to_string(),
+                    (None, None) => "plain".to_string(),
+                };
+                let rel = man
+                    .conv_art(&sig, &variant)
+                    .with_context(|| format!("conv artifact {sig}.{variant}"))?;
+                match &res_t {
+                    Some(r) => run(&rel, &[&input, wt, &bt, r], &mut timing)?,
+                    None => run(&rel, &[&input, wt, &bt], &mut timing)?,
+                }
+            } else {
+                let rel = man
+                    .conv_art(&sig, "plain")
+                    .with_context(|| format!("conv artifact {sig}"))?;
+                let mut y = run(&rel, &[&input, wt, &bt], &mut timing)?;
+                if let Some((scale, bias, groups)) = &step.gn {
+                    let base = format!(
+                        "b{}h{}w{}c{}", b, y.dims[1], y.dims[2], y.dims[3]
+                    );
+                    let gnrel = man
+                        .ew_art(&format!("gn{groups}_{base}"))
+                        .with_context(|| format!("gn artifact gn{groups}_{base}"))?;
+                    let st = Tensor::new(vec![scale.len()], scale.clone());
+                    let bt2 = Tensor::new(vec![bias.len()], bias.clone());
+                    y = run(&gnrel, &[&y, &st, &bt2], &mut timing)?;
+                }
+                if let Some(r) = &res_t {
+                    let base = format!(
+                        "b{}h{}w{}c{}", b, y.dims[1], y.dims[2], y.dims[3]
+                    );
+                    if let Some(addrel) = man.ew_art(&format!("add_{base}")) {
+                        y = run(&addrel, &[&y, r], &mut timing)?;
+                    } else {
+                        for (a, bb) in y.data.iter_mut().zip(&r.data) {
+                            *a += *bb;
+                        }
+                    }
+                }
+                if let Some(a) = &step.act {
+                    let base = format!(
+                        "b{}h{}w{}c{}", b, y.dims[1], y.dims[2], y.dims[3]
+                    );
+                    let rel = man
+                        .ew_art(&format!("{a}_{base}"))
+                        .with_context(|| format!("act artifact {a}_{base}"))?;
+                    y = run(&rel, &[&y], &mut timing)?;
+                }
+                y
+            };
+            if let Some(tag) = &step.stash_as {
+                stash.insert(tag.clone(), cur.clone());
+            }
+            for p in &step.post {
+                let base =
+                    format!("b{}h{}w{}c{}", b, cur.dims[1], cur.dims[2], cur.dims[3]);
+                match p {
+                    Post::Attention { wqkv, wout } => {
+                        let rel = man
+                            .ew_art(&format!("attn_{base}"))
+                            .context("attn artifact")?;
+                        cur = run(&rel, &[&cur, wqkv, wout], &mut timing)?;
+                    }
+                    Post::Upsample => {
+                        let rel =
+                            man.ew_art(&format!("up_{base}")).context("up artifact")?;
+                        cur = run(&rel, &[&cur], &mut timing)?;
+                    }
+                }
+            }
+            boundaries.insert(step.j, cur.clone());
+        }
+
+        // classifier head
+        if let Some((hw, hb)) = &self.head {
+            let rel = man
+                .ew_art(&format!("head_{}", self.spec_name))
+                .context("head artifact")?;
+            let hbt = Tensor::new(vec![hb.len()], hb.clone());
+            cur = run(&rel, &[&cur, hw, &hbt], &mut timing)?;
+        }
+        Ok(cur)
+    }
+
+    /// End-to-end latency with the App. C protocol.
+    pub fn measure(
+        &self,
+        rt: &Runtime,
+        man: &Manifest,
+        fmt: Format,
+        warmup: usize,
+        iters: usize,
+    ) -> Result<f64> {
+        let mut rng = crate::util::rng::Rng::new(0xbe9c);
+        let first = &self.steps[0];
+        let n = self.batch * first.h_in * first.w_in * first.cin;
+        let x = Tensor::new(
+            vec![self.batch, first.h_in, first.w_in, first.cin],
+            (0..n).map(|_| rng.normal()).collect(),
+        );
+        let t = match self.task {
+            Task::Diffusion => Some(Tensor::full(&[self.batch], 500.0)),
+            Task::Classify => None,
+        };
+        for _ in 0..warmup {
+            self.forward(rt, man, &x, t.as_ref(), fmt)?;
+        }
+        let mut times = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            self.forward(rt, man, &x, t.as_ref(), fmt)?;
+            times.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Ok(times[times.len() / 2])
+    }
+}
+
+/// Channel-dim concat of two NHWC tensors (host side).
+pub fn concat_channels(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(&a.dims[..3], &b.dims[..3]);
+    let (n, h, w, ca) = (a.dims[0], a.dims[1], a.dims[2], a.dims[3]);
+    let cb = b.dims[3];
+    let mut out = Tensor::zeros(&[n, h, w, ca + cb]);
+    for i in 0..n * h * w {
+        out.data[i * (ca + cb)..i * (ca + cb) + ca]
+            .copy_from_slice(&a.data[i * ca..(i + 1) * ca]);
+        out.data[i * (ca + cb) + ca..(i + 1) * (ca + cb)]
+            .copy_from_slice(&b.data[i * cb..(i + 1) * cb]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn concat_layout() {
+        let a = Tensor::new(vec![1, 1, 2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::new(vec![1, 1, 2, 1], vec![9.0, 8.0]);
+        let c = concat_channels(&a, &b);
+        assert_eq!(c.dims, vec![1, 1, 2, 3]);
+        assert_eq!(c.data, vec![1.0, 2.0, 9.0, 3.0, 4.0, 8.0]);
+    }
+}

@@ -1,0 +1,280 @@
+//! Figure drivers (Figures 1-5 of the paper).
+
+use anyhow::{Context, Result};
+
+use super::Ctx;
+use crate::bench::TableOut;
+use crate::ir::Gates;
+use crate::model::sig_str;
+use crate::pipeline::{Method, Pipeline};
+use crate::report;
+use crate::runtime::measure;
+use crate::train::{self, Gen};
+use crate::util::rng::Rng;
+use crate::util::tensor::Tensor;
+
+/// Figure 1 — merged kernel growth vs latency: the motivating measurement.
+/// We time the same (channels, resolution) conv at k = 1..K_MAX and report
+/// per-layer latency next to the cumulative "merge n 3x3 layers" cost.
+pub fn fig1(ctx: &Ctx) -> Result<()> {
+    let mut t = TableOut::new(
+        "Figure 1 — kernel size growth vs measured latency (b32, 32x32, 16ch)",
+        &["Merged layers (3x3 each)", "Merged kernel", "Merged conv (ms)",
+          "Unmerged chain (ms)", "Merging wins?"],
+    );
+    let (b, h, w, c) = (32, 32, 32, 16); // richest k-family in the manifest
+    let mut rng = Rng::new(0xf19);
+    let mut lat_k = |k: usize| -> Result<Option<f64>> {
+        let sig = sig_str(b, h, w, c, c, k, 1, false);
+        let Some(rel) = ctx.man.conv_art(&sig, "plain") else {
+            return Ok(None); // kernel size unreachable by any model span
+        };
+        let exec = ctx.rt.load(&rel)?;
+        let n = b * h * w * c;
+        let x = Tensor::new(vec![b, h, w, c], (0..n).map(|_| rng.normal()).collect());
+        let wt = Tensor::new(vec![c, c, k, k],
+            (0..c * c * k * k).map(|_| rng.normal()).collect());
+        let bias = Tensor::zeros(&[c]);
+        Ok(Some(
+            measure(&exec, &[&x, &wt, &bias], ctx.cfg.lat_warmup, ctx.cfg.lat_iters)?
+                .p50_ms,
+        ))
+    };
+    let l3 = lat_k(3)?.context("k=3 module must exist")?;
+    for n in 1..=6usize {
+        let k = 1 + 2 * n;
+        if k > crate::ir::K_MAX {
+            break;
+        }
+        let Some(merged) = lat_k(k)? else { continue };
+        let chain = l3 * n as f64;
+        t.row(vec![
+            format!("{n}"),
+            format!("{k}x{k}"),
+            format!("{merged:.3}"),
+            format!("{chain:.3}"),
+            if merged < chain { "yes".into() } else { "NO — kernel blow-up".into() },
+        ]);
+    }
+    t.print();
+    report::record(&ctx.experiments_md(), "fig1", &t.markdown())?;
+    Ok(())
+}
+
+/// Figure 2 — qualitative selection diagram: which activations and convs
+/// LayerMerge keeps vs the Depth baseline, as ASCII.
+pub fn fig2(ctx: &Ctx) -> Result<()> {
+    let mut pipe = ctx.pipeline("mnv2ish-1.0")?;
+    let budget = 0.6;
+    let lm = pipe.solve(Method::LayerMerge, budget)?;
+    let dp = pipe.solve(Method::Depth, budget)?;
+    let spec = &pipe.model.spec;
+    let render = |a: &[usize], c: &std::collections::BTreeSet<usize>| -> String {
+        let aset: std::collections::BTreeSet<usize> = a.iter().copied().collect();
+        let mut line_c = String::from("conv: ");
+        let mut line_a = String::from("act : ");
+        for l in 1..=spec.len() {
+            let conv = spec.conv(l);
+            line_c.push_str(if c.contains(&l) || !conv.conv_gated {
+                if conv.depthwise { "D " } else { "C " }
+            } else {
+                ". "
+            });
+            line_a.push_str(if l == spec.len() {
+                "  "
+            } else if aset.contains(&l) {
+                "| "
+            } else {
+                ". "
+            });
+        }
+        format!("{line_c}\n{line_a}")
+    };
+    let body = format!(
+        "### Figure 2 — qualitative selection @ {budget} budget (mnv2ish-1.0)\n\n\
+         `C`/`D` = kept (dense/depthwise) conv, `.` = pruned; `|` = kept activation (merge boundary)\n\n\
+         **LayerMerge (ours)** — {} merged layers, est {:.2} ms:\n```\n{}\n```\n\
+         **Depth (Kim et al. 2023)** — {} merged layers, est {:.2} ms:\n```\n{}\n```\n",
+        lm.spans.len(), lm.latency_est, render(&lm.a, &lm.c),
+        dp.spans.len(), dp.latency_est, render(&dp.a, &dp.c),
+    );
+    println!("{body}");
+    report::record(&ctx.experiments_md(), "fig2", &body)?;
+    Ok(())
+}
+
+/// Figure 3 — test-metric recovery curves across fine-tuning.
+pub fn fig3(ctx: &Ctx) -> Result<()> {
+    let mut pipe = ctx.pipeline("mnv2ish-1.0")?;
+    let budget = 0.65;
+    let every = (ctx.cfg.finetune_steps / 8).max(1);
+    let mut t = TableOut::new(
+        "Figure 3 — recovery curves (eval accuracy vs fine-tune step, mnv2ish-1.0)",
+        &["Step", "LayerMerge", "Depth", "LayerOnly"],
+    );
+    let mut curves = Vec::new();
+    for m in [Method::LayerMerge, Method::Depth, Method::LayerOnly] {
+        let sol = pipe.solve(m, budget)?;
+        let a_set: std::collections::BTreeSet<usize> = sol.a.iter().copied().collect();
+        let gates = pipe.model.spec.solution_gates(&a_set, &sol.c, &sol.spans);
+        let mut params = pipe.pretrained.clone();
+        let log = train::train(
+            &pipe.model, &pipe.gen, &mut params, &gates,
+            ctx.cfg.finetune_steps, ctx.cfg.finetune_lr, every,
+        )?;
+        curves.push(log.curve);
+    }
+    let steps: Vec<usize> = curves[0].iter().map(|c| c.0).collect();
+    for (row_i, &s) in steps.iter().enumerate() {
+        t.row(vec![
+            format!("{s}"),
+            format!("{:.2}", curves[0].get(row_i).map(|c| c.2 * 100.0).unwrap_or(0.0)),
+            format!("{:.2}", curves[1].get(row_i).map(|c| c.2 * 100.0).unwrap_or(0.0)),
+            format!("{:.2}", curves[2].get(row_i).map(|c| c.2 * 100.0).unwrap_or(0.0)),
+        ]);
+    }
+    t.print();
+    report::record(&ctx.experiments_md(), "fig3", &t.markdown())?;
+    Ok(())
+}
+
+/// Figure 4 — KD recovery curve vs LayerMerge recovery curve.
+pub fn fig4(ctx: &Ctx) -> Result<()> {
+    let mut pipe = ctx.pipeline("mnv2ish-1.0")?;
+    let budget = 0.65;
+    let every = (ctx.cfg.finetune_steps / 8).max(1);
+    let sol = pipe.solve(Method::LayerMerge, budget)?;
+    let a_set: std::collections::BTreeSet<usize> = sol.a.iter().copied().collect();
+    let gates = pipe.model.spec.solution_gates(&a_set, &sol.c, &sol.spans);
+    let mut params = pipe.pretrained.clone();
+    let lm = train::train(&pipe.model, &pipe.gen, &mut params, &gates,
+                          ctx.cfg.finetune_steps, ctx.cfg.finetune_lr, every)?;
+    // KD-from-scratch curve on the student (same step budget)
+    let student = crate::model::Model::load(ctx.rt.clone(), &ctx.man, "mnv2ish-0.75")?;
+    let sgen = Gen::for_model(&student, ctx.cfg.seed ^ 0xda7a);
+    let sgates = student.spec.pristine_gates();
+    let mut sparams = student.init.clone();
+    let slog = train::train(&student, &sgen, &mut sparams, &sgates,
+                            ctx.cfg.finetune_steps, ctx.cfg.pretrain_lr, every)?;
+    let mut t = TableOut::new(
+        "Figure 4 — recovery: LayerMerge fine-tune vs small-net training",
+        &["Step", "LayerMerge-65%", "mnv2ish-0.75 from scratch"],
+    );
+    for (i, c) in lm.curve.iter().enumerate() {
+        t.row(vec![
+            format!("{}", c.0),
+            format!("{:.2}", c.2 * 100.0),
+            format!("{:.2}", slog.curve.get(i).map(|x| x.2 * 100.0).unwrap_or(0.0)),
+        ]);
+    }
+    t.print();
+    report::record(&ctx.experiments_md(), "fig4", &t.markdown())?;
+    Ok(())
+}
+
+/// Figure 5 — Pareto curves: metric vs measured speed-up per method.
+pub fn fig5(ctx: &Ctx) -> Result<()> {
+    let budgets = [0.85, 0.75, 0.65, 0.55, 0.45];
+    let mut body = String::from("### Figure 5 — Pareto curves (eager-format speed-up)\n");
+    for model in ["resnetish", "mnv2ish-1.0"] {
+        let mut pipe = ctx.pipeline(model)?;
+        let mut t = TableOut::new(
+            &format!("Pareto — {model}"),
+            &["Method", "Budget", "Acc (%)", "Speed-up"],
+        );
+        for m in [Method::LayerMerge, Method::Depth, Method::LayerOnly] {
+            for &b in &budgets {
+                match pipe.solve(m, b).and_then(|sol| {
+                    pipe.finetune_and_deploy(m, b, &sol, None, false)
+                }) {
+                    Ok(c) => t.row(vec![
+                        m.name().into(),
+                        format!("{b:.2}"),
+                        format!("{:.2}", c.merged_metric * 100.0),
+                        format!("{:.2}x", pipe.orig_lat_eager / c.lat_eager_ms),
+                    ]),
+                    Err(_) => {}
+                }
+            }
+        }
+        t.print();
+        body.push_str(&t.markdown());
+    }
+    report::record(&ctx.experiments_md(), "fig5", &body)?;
+    Ok(())
+}
+
+/// FDD of a (params, gates) configuration: DDIM-sample a batch from the
+/// gated graph and compare resnetish-embedder stats against clean data.
+pub fn fdd_of_gates(
+    ctx: &Ctx,
+    pipe: &Pipeline,
+    params: &[f32],
+    gates: &Gates,
+) -> Result<f64> {
+    let spec = &pipe.model.spec;
+    let dg = match &pipe.gen {
+        Gen::Diffusion(d) => d.clone(),
+        _ => anyhow::bail!("fdd needs the diffusion model"),
+    };
+    // DDIM sampling with 8 steps on the gated graph
+    let b = spec.batch;
+    let mut rng = Rng::new(0x5a3e);
+    let n = b * spec.h * spec.w * spec.c;
+    let mut xt = Tensor::new(vec![b, spec.h, spec.w, spec.c],
+        (0..n).map(|_| rng.normal()).collect());
+    let steps = 8usize;
+    let tmax = dg.t_max as f32;
+    for s in (1..=steps).rev() {
+        let t_cur = tmax * s as f32 / steps as f32 - 1.0;
+        let t_prev = (tmax * (s - 1) as f32 / steps as f32 - 1.0).max(0.0);
+        let tt = Tensor::full(&[b], t_cur.max(0.0));
+        let ab_t = Tensor::full(&[b], dg.abar(t_cur.max(0.0)));
+        let ab_p = Tensor::full(&[b], dg.abar(t_prev));
+        xt = pipe.model.sample_step(params, gates, &xt, &tt, &ab_t, &ab_p)?;
+    }
+    // embed generated + real through the resnetish embedder
+    let emb_model = crate::model::Model::load(ctx.rt.clone(), &ctx.man, "resnetish")?;
+    let emb_pre = ctx.repo.join("cache").join(format!(
+        "resnetish.pretrained.s{}.bin", ctx.cfg.pretrain_steps));
+    let emb_params = if emb_pre.exists() {
+        Tensor::read_f32_file(&emb_pre)?
+    } else {
+        emb_model.init.clone()
+    };
+    let eg = emb_model.spec.pristine_gates();
+    // resize 16x16 samples up to the embedder's 32x32 input (nearest)
+    let up = |t: &Tensor| -> Tensor {
+        let (bb, h, w, c) = (t.dims[0], t.dims[1], t.dims[2], t.dims[3]);
+        let (fh, fw) = (emb_model.spec.h / h, emb_model.spec.w / w);
+        let mut out = Tensor::zeros(&[bb, h * fh, w * fw, c]);
+        for n2 in 0..bb {
+            for i in 0..h * fh {
+                for j in 0..w * fw {
+                    for cc in 0..c {
+                        let v = t.at4(n2, i / fh, j / fw, cc);
+                        out.set4(n2, i, j, cc, v);
+                    }
+                }
+            }
+        }
+        out
+    };
+    let gen_feats = emb_model.embed(&emb_params, &eg, &up(&xt))?;
+    // real batch
+    let real = match dg.batch(train::STREAM_EVAL, 0) {
+        crate::model::Batch::Diffusion { x0, .. } => x0,
+        _ => unreachable!(),
+    };
+    let real_feats = emb_model.embed(&emb_params, &eg, &up(&real))?;
+    Ok(crate::train::metrics::fdd(&real_feats, &gen_feats))
+}
+
+pub fn all(ctx: &Ctx) -> Result<()> {
+    fig1(ctx)?;
+    fig2(ctx)?;
+    fig3(ctx)?;
+    fig4(ctx)?;
+    fig5(ctx)?;
+    Ok(())
+}

@@ -1,0 +1,74 @@
+//! Experiment drivers — one function per paper table/figure (DESIGN.md §5).
+//! Each prints the table and records it into EXPERIMENTS.md.
+
+pub mod figures;
+pub mod tables;
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::model::Manifest;
+use crate::pipeline::{Pipeline, PipelineCfg};
+use crate::runtime::Runtime;
+use crate::tables::LatencyMode;
+
+/// Shared experiment context: runtime, manifest, output paths.
+pub struct Ctx {
+    pub rt: Arc<Runtime>,
+    pub man: Arc<Manifest>,
+    pub repo: PathBuf,
+    pub cfg: PipelineCfg,
+}
+
+impl Ctx {
+    pub fn new(artifacts: &std::path::Path, repo: PathBuf, mut cfg: PipelineCfg) -> Result<Ctx> {
+        let rt = Arc::new(Runtime::new(artifacts)?);
+        let man = Arc::new(Manifest::load(artifacts)?);
+        // CI / quick mode can force the analytical latency model.
+        // Explicit LM_PRETRAIN / LM_FINETUNE override the fast caps.
+        if std::env::var("LM_FAST").is_ok() {
+            cfg.build.mode = LatencyMode::Analytical;
+            cfg.pretrain_steps = cfg.pretrain_steps.min(60);
+            cfg.finetune_steps = cfg.finetune_steps.min(20);
+            cfg.build.proxy_steps = cfg.build.proxy_steps.min(2);
+            cfg.build.iters = cfg.build.iters.min(5);
+            cfg.lat_iters = cfg.lat_iters.min(5);
+        }
+        if let Ok(v) = std::env::var("LM_PRETRAIN") {
+            if let Ok(n) = v.parse() {
+                cfg.pretrain_steps = n;
+            }
+        }
+        if let Ok(v) = std::env::var("LM_FINETUNE") {
+            if let Ok(n) = v.parse() {
+                cfg.finetune_steps = n;
+            }
+        }
+        Ok(Ctx { rt, man, repo, cfg })
+    }
+
+    pub fn experiments_md(&self) -> PathBuf {
+        self.repo.join("EXPERIMENTS.md")
+    }
+
+    /// Suffix appended to table titles so EXPERIMENTS.md records which
+    /// latency protocol produced each section.
+    pub fn mode_tag(&self) -> &'static str {
+        match self.cfg.build.mode {
+            LatencyMode::Measured => " [measured latency]",
+            LatencyMode::Analytical => " [fast mode: analytical latency]",
+        }
+    }
+
+    pub fn pipeline(&self, model: &str) -> Result<Pipeline> {
+        Pipeline::new(
+            self.rt.clone(),
+            self.man.clone(),
+            model,
+            self.cfg.clone(),
+            self.repo.clone(),
+        )
+    }
+}

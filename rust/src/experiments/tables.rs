@@ -1,0 +1,458 @@
+//! Table drivers (Tables 1-11 of the paper).
+
+use anyhow::{Context, Result};
+
+use super::Ctx;
+use crate::baselines::{channel, sequential};
+use crate::bench::TableOut;
+use crate::ir::Task;
+use crate::pipeline::{Compressed, Method, Pipeline};
+use crate::report;
+use crate::train;
+
+/// Budget fractions (T0 / T_orig) per compression level; chosen to produce
+/// paper-comparable speed-up ranges on this testbed.
+pub const BUDGETS_CLS: [f64; 3] = [0.8, 0.65, 0.5];
+pub const BUDGETS_DDPM: [f64; 3] = [0.9, 0.8, 0.65];
+
+fn push_rows(
+    t: &mut TableOut,
+    pipe: &Pipeline,
+    results: &[Compressed],
+    classify: bool,
+) {
+    t.row(vec![
+        pipe.model.name.clone(),
+        if classify {
+            format!("{:.2}", pipe.orig_metric * 100.0)
+        } else {
+            format!("{:.4}", -pipe.orig_metric)
+        },
+        "1.00x".into(),
+        "1.00x".into(),
+        format!("{}", pipe.model.spec.len()),
+        "0.00".into(),
+    ]);
+    for c in results {
+        t.row(report::row(
+            c,
+            pipe.orig_metric,
+            pipe.orig_lat_eager,
+            pipe.orig_lat_fused,
+            classify,
+        ));
+    }
+}
+
+/// Generic classification compression table (Tables 1-3 pattern): every
+/// method at every budget, plus the channel-pruning reference.
+pub fn classification_table(
+    ctx: &Ctx,
+    id: &str,
+    title: &str,
+    model: &str,
+    budgets: &[f64],
+) -> Result<()> {
+    let title = format!("{title}{}", ctx.mode_tag());
+    let mut pipe = ctx.pipeline(model)?;
+    let mut results = Vec::new();
+    for &b in budgets {
+        for m in [Method::LayerMerge, Method::Depth, Method::LayerOnly] {
+            match pipe.solve_relaxed(m, b).and_then(|(sol, b_used)| {
+                pipe.finetune_and_deploy(m, b_used, &sol, None, false)
+            }) {
+                Ok(c) => results.push(c),
+                Err(e) => eprintln!("[{id}] {} @{b}: {e:#}", m.name()),
+            }
+        }
+    }
+    // channel-pruning reference (HALP-style) at the middle budget
+    let halp = channel_reference(&mut pipe, budgets[budgets.len() / 2])?;
+    let mut t = report::compression_table(&title, true);
+    push_rows(&mut t, &pipe, &results, true);
+    t.row(halp);
+    t.print();
+    report::record(&ctx.experiments_md(), id, &t.markdown())?;
+    Ok(())
+}
+
+/// HALP-style channel-pruning row: masked fine-tune for accuracy,
+/// analytical latency for the sliced network (DESIGN.md §2).
+fn channel_reference(pipe: &mut Pipeline, budget: f64) -> Result<Vec<String>> {
+    let spec = pipe.model.spec.clone();
+    let plan = channel::solve_halp(&spec, &pipe.pretrained, budget, pipe.cfg.p_disc);
+    let masks = channel::masks(&spec, &pipe.pretrained, &plan);
+    let (_, metric) = channel::finetune_masked(
+        &pipe.model, &pipe.gen, &pipe.pretrained, &masks,
+        pipe.cfg.finetune_steps, pipe.cfg.finetune_lr, pipe.cfg.eval_batches,
+    )?;
+    let full: f64 = (1..=spec.len())
+        .map(|l| channel::layer_latency(&spec, l, 1.0, 1.0))
+        .sum();
+    let speedup = full / plan.latency_ms;
+    Ok(vec![
+        format!("HALP-{:.0}% (channel ref)", budget * 100.0),
+        format!("{:.2}", metric * 100.0),
+        format!("{speedup:.2}x*"),
+        format!("{speedup:.2}x*"),
+        format!("{}", spec.len()),
+        format!("{:.2}", (metric - pipe.orig_metric) * 100.0),
+    ])
+}
+
+pub fn table1(ctx: &Ctx) -> Result<()> {
+    classification_table(
+        ctx, "table1",
+        "Table 1 — resnetish (ResNet-34 analogue) on synthetic classification",
+        "resnetish", &BUDGETS_CLS,
+    )
+}
+
+pub fn table2(ctx: &Ctx) -> Result<()> {
+    classification_table(
+        ctx, "table2",
+        "Table 2 — mnv2ish-1.0 (MobileNetV2-1.0 analogue)",
+        "mnv2ish-1.0", &BUDGETS_CLS,
+    )
+}
+
+pub fn table3(ctx: &Ctx) -> Result<()> {
+    classification_table(
+        ctx, "table3",
+        "Table 3 — mnv2ish-1.4 (MobileNetV2-1.4 analogue)",
+        "mnv2ish-1.4", &BUDGETS_CLS,
+    )
+}
+
+/// Table 4 — DDPM compression: diffusion loss (Perf proxy) + FDD vs speed-up.
+pub fn table4(ctx: &Ctx) -> Result<()> {
+    let mut pipe = ctx.pipeline("ddpmish")?;
+    let mut t = TableOut::new(
+        "Table 4 — ddpmish (DDPM analogue) on the synthetic image manifold",
+        &["Network", "DiffLoss ↓", "FDD ↓", "Eager Speed-up ↑", "Fused Speed-up ↑", "Depth"],
+    );
+    let fdd0 = super::figures::fdd_of_gates(
+        ctx, &pipe, &pipe.pretrained.clone(), &pipe.model.spec.pristine_gates(),
+    )?;
+    t.row(vec![
+        "ddpmish".into(),
+        format!("{:.4}", -pipe.orig_metric),
+        format!("{fdd0:.3}"),
+        "1.00x".into(), "1.00x".into(),
+        format!("{}", pipe.model.spec.len()),
+    ]);
+    for &b in &BUDGETS_DDPM {
+        for m in [Method::LayerMerge, Method::Depth, Method::LayerOnly] {
+            match pipe.solve(m, b).and_then(|sol| {
+                pipe.finetune_and_deploy(m, b, &sol, None, false)
+            }) {
+                Ok(c) => {
+                    let fdd = super::figures::fdd_of_gates(
+                        ctx, &pipe, &c.finetuned, &c.gates,
+                    )?;
+                    t.row(vec![
+                        format!("{}-{:.0}%", c.method, b * 100.0),
+                        format!("{:.4}", -c.merged_metric),
+                        format!("{fdd:.3}"),
+                        format!("{:.2}x", pipe.orig_lat_eager / c.lat_eager_ms),
+                        format!("{:.2}x", pipe.orig_lat_fused / c.lat_fused_ms),
+                        format!("{}", c.depth),
+                    ]);
+                }
+                Err(e) => eprintln!("[table4] {} @{b}: {e:#}", m.name()),
+            }
+        }
+    }
+    t.print();
+    report::record(&ctx.experiments_md(), "table4", &t.markdown())?;
+    Ok(())
+}
+
+/// Table 5 — channel-pruned DDPM (Diff-style) combined with depth methods.
+pub fn table5(ctx: &Ctx) -> Result<()> {
+    let mut pipe = ctx.pipeline("ddpmish")?;
+    let spec = pipe.model.spec.clone();
+    let mut t = TableOut::new(
+        "Table 5 — Diff-style channel pruning + depth compression on ddpmish",
+        &["Network", "DiffLoss ↓", "Est. Speed-up ↑", "Depth"],
+    );
+    t.row(vec!["ddpmish".into(), format!("{:.4}", -pipe.orig_metric),
+               "1.00x".into(), format!("{}", spec.len())]);
+    // Diff-style uniform channel pruning
+    let cplan = channel::solve_uniform(&spec, &pipe.pretrained, 0.6);
+    let masks = channel::masks(&spec, &pipe.pretrained, &cplan);
+    let (masked_params, metric) = channel::finetune_masked(
+        &pipe.model, &pipe.gen, &pipe.pretrained, &masks,
+        pipe.cfg.finetune_steps, pipe.cfg.finetune_lr, pipe.cfg.eval_batches,
+    )?;
+    let full: f64 = (1..=spec.len())
+        .map(|l| channel::layer_latency(&spec, l, 1.0, 1.0))
+        .sum();
+    let ch_scale = full / cplan.latency_ms;
+    t.row(vec![
+        "Diff-60% (channel)".into(),
+        format!("{:.4}", -metric),
+        format!("{ch_scale:.2}x*"),
+        format!("{}", spec.len()),
+    ]);
+    // depth methods on top of the channel-pruned weights: swap the
+    // pipeline's pretrained for the masked checkpoint and re-run.
+    pipe.pretrained = masked_params;
+    pipe.tables = None; // rebuild importance on the masked model
+    for m in [Method::LayerMerge, Method::Depth, Method::LayerOnly] {
+        let b = 0.8;
+        match pipe.solve(m, b).and_then(|sol| {
+            pipe.finetune_and_deploy(m, b, &sol, None, false)
+        }) {
+            Ok(c) => {
+                let depth_speed = pipe.orig_lat_eager / c.lat_eager_ms;
+                t.row(vec![
+                    format!("Diff-60% -> {}-{:.0}%", c.method, b * 100.0),
+                    format!("{:.4}", -c.merged_metric),
+                    format!("{:.2}x*", depth_speed * ch_scale),
+                    format!("{}", c.depth),
+                ]);
+            }
+            Err(e) => eprintln!("[table5] {}: {e:#}", m.name()),
+        }
+    }
+    t.print();
+    report::record(&ctx.experiments_md(), "table5", &t.markdown())?;
+    Ok(())
+}
+
+/// Table 6 — joint (LayerMerge) vs sequential (Depth -> LayerOnly).
+pub fn table6(ctx: &Ctx) -> Result<()> {
+    let mut pipe = ctx.pipeline("mnv2ish-1.0")?;
+    let mut t = report::compression_table(
+        "Table 6 — joint vs sequential optimization (mnv2ish-1.0)", true);
+    let mut results = Vec::new();
+    for &(p1, p2, joint) in &[(0.8, 0.8, 0.64), (0.8, 0.65, 0.52)] {
+        match sequential::run(&mut pipe, p1, p2) {
+            Ok(c) => results.push(c),
+            Err(e) => eprintln!("[table6] sequential {p1}x{p2}: {e:#}"),
+        }
+        let m = Method::LayerMerge;
+        match pipe.solve(m, joint).and_then(|sol| {
+            pipe.finetune_and_deploy(m, joint, &sol, None, false)
+        }) {
+            Ok(c) => results.push(c),
+            Err(e) => eprintln!("[table6] joint @{joint}: {e:#}"),
+        }
+    }
+    push_rows(&mut t, &pipe, &results, true);
+    t.print();
+    report::record(&ctx.experiments_md(), "table6", &t.markdown())?;
+    Ok(())
+}
+
+/// Table 7 — wall-clock for constructing the lookup tables per model.
+pub fn table7(ctx: &Ctx) -> Result<()> {
+    let mut t = TableOut::new(
+        "Table 7 — lookup-table construction wall-clock (this testbed)",
+        &["Network", "Importance table (s)", "Latency table (s)", "# entries"],
+    );
+    for model in ["resnetish", "mnv2ish-1.0", "mnv2ish-1.4", "ddpmish"] {
+        let mut pipe = match ctx.pipeline(model) {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("[table7] {model}: {e:#}");
+                continue;
+            }
+        };
+        let tb = pipe.ensure_tables()?;
+        t.row(vec![
+            model.into(),
+            format!("{:.1}", tb.imp_build_s),
+            format!("{:.1}", tb.lat_build_s),
+            format!("{}", tb.entries.len()),
+        ]);
+    }
+    t.print();
+    report::record(&ctx.experiments_md(), "table7", &t.markdown())?;
+    Ok(())
+}
+
+/// Table 8 — importance-table cost: Depth vs LayerOnly vs LayerMerge.
+/// Depth needs only the k_full entries, LayerOnly only per-layer entries;
+/// LayerMerge pays for the full (i, j, k) family (but each entry is cheap
+/// — the point of App. C Table 8).
+pub fn table8(ctx: &Ctx) -> Result<()> {
+    let mut t = TableOut::new(
+        "Table 8 — importance-table size per method",
+        &["Model", "Method", "# table entries", "est. build share"],
+    );
+    for model in ["resnetish", "mnv2ish-1.0"] {
+        let mut pipe = ctx.pipeline(model)?;
+        let spec = pipe.model.spec.clone();
+        let tb = pipe.ensure_tables()?;
+        let total = tb.entries.len();
+        let depth_entries = tb
+            .entries
+            .keys()
+            .filter(|&&(i, j, k)| k == crate::solver::depth::k_full(&spec, i, j))
+            .count();
+        let layeronly_entries = spec.convs.iter().filter(|c| c.conv_gated).count();
+        for (m, n) in [
+            ("Depth (Kim et al. 2023)", depth_entries),
+            ("LayerOnly (ours)", layeronly_entries),
+            ("LayerMerge (ours)", total),
+        ] {
+            t.row(vec![
+                model.into(),
+                m.into(),
+                format!("{n}"),
+                format!("{:.0}%", 100.0 * n as f64 / total.max(1) as f64),
+            ]);
+        }
+    }
+    t.print();
+    report::record(&ctx.experiments_md(), "table8", &t.markdown())?;
+    Ok(())
+}
+
+/// Table 9 — effect of shorter fine-tuning budgets (90/30/20-epoch analogue:
+/// full / one-third / one-fifth of the step budget).
+pub fn table9(ctx: &Ctx) -> Result<()> {
+    let mut pipe = ctx.pipeline("mnv2ish-1.0")?;
+    let full = pipe.cfg.finetune_steps;
+    let mut t = report::compression_table(
+        "Table 9 — shorter fine-tuning (steps analogue of 90/30/20 epochs)", true);
+    let mut results = Vec::new();
+    for steps in [full, full / 3, full / 5] {
+        for m in [Method::LayerMerge, Method::Depth, Method::LayerOnly] {
+            let b = 0.65;
+            match pipe.solve(m, b).and_then(|sol| {
+                pipe.finetune_and_deploy(m, b, &sol, Some(steps.max(1)), false)
+            }) {
+                Ok(mut c) => {
+                    c.method = format!("{} ({}st)", c.method, steps.max(1));
+                    results.push(c);
+                }
+                Err(e) => eprintln!("[table9] {} {steps}: {e:#}", m.name()),
+            }
+        }
+    }
+    push_rows(&mut t, &pipe, &results, true);
+    t.print();
+    report::record(&ctx.experiments_md(), "table9", &t.markdown())?;
+    Ok(())
+}
+
+/// Table 10 — knowledge distillation into a smaller net vs LayerMerge.
+pub fn table10(ctx: &Ctx) -> Result<()> {
+    let teacher_pipe = ctx.pipeline("mnv2ish-1.0")?;
+    let student = crate::model::Model::load(ctx.rt.clone(), &ctx.man, "mnv2ish-0.75")?;
+    let rel = ctx
+        .man
+        .json
+        .req("kd")
+        .get("mnv2ish-0.75_from_1.0")
+        .and_then(|j| j.as_str())
+        .context("kd artifact missing (needs mnv2ish-1.0 + -0.75 in aot)")?
+        .to_string();
+    let kd = ctx.rt.load(&rel)?;
+
+    // KD training loop: teacher weights fixed, student trained from scratch
+    // (the paper's point: same budget, distillation must train from init).
+    let gen = train::Gen::for_model(&student, ctx.cfg.seed ^ 0xda7a);
+    let mut sparams = student.init.clone();
+    let mut smom = vec![0.0f32; sparams.len()];
+    let steps = ctx.cfg.pretrain_steps; // same budget as pretraining
+    let tflat = crate::util::tensor::Tensor::new(
+        vec![teacher_pipe.pretrained.len()], teacher_pipe.pretrained.clone());
+    for s in 0..steps {
+        let batch = gen.batch(train::STREAM_TRAIN, s as u64);
+        let (x, y) = match &batch {
+            crate::model::Batch::Classify { x, y } => (x.clone(), y.clone()),
+            _ => unreachable!(),
+        };
+        let lr = train::cosine_lr(ctx.cfg.pretrain_lr, s, steps);
+        let p = crate::util::tensor::Tensor::new(vec![sparams.len()],
+            std::mem::take(&mut sparams));
+        let m = crate::util::tensor::Tensor::new(vec![smom.len()],
+            std::mem::take(&mut smom));
+        let lrt = crate::util::tensor::Tensor::scalar(lr);
+        let out = kd.run(&[&tflat, &p, &m, &x, &y, &lrt])?;
+        let mut it = out.into_iter();
+        sparams = it.next().unwrap().data;
+        smom = it.next().unwrap().data;
+    }
+    let sgates = student.spec.pristine_gates();
+    let (_, kd_acc) = train::evaluate(&student, &gen, &sparams, &sgates,
+                                      ctx.cfg.eval_batches)?;
+    let splan = crate::exec::Plan::original(&student.spec, &sparams)?;
+    let slat = splan.measure(&ctx.rt, &ctx.man, crate::exec::Format::Eager,
+                             ctx.cfg.lat_warmup, ctx.cfg.lat_iters)?;
+
+    let mut pipe = teacher_pipe;
+    let mut t = report::compression_table(
+        "Table 10 — KD into mnv2ish-0.75 vs LayerMerge on mnv2ish-1.0", true);
+    let mut results = Vec::new();
+    let m = Method::LayerMerge;
+    if let Ok(sol) = pipe.solve(m, 0.65) {
+        if let Ok(c) = pipe.finetune_and_deploy(m, 0.65, &sol, None, false) {
+            results.push(c);
+        }
+    }
+    push_rows(&mut t, &pipe, &results, true);
+    t.row(vec![
+        "KD (mnv2ish-0.75 student)".into(),
+        format!("{:.2}", kd_acc * 100.0),
+        format!("{:.2}x", pipe.orig_lat_eager / slat),
+        "-".into(),
+        format!("{}", student.spec.len()),
+        format!("{:.2}", (kd_acc - pipe.orig_metric) * 100.0),
+    ]);
+    t.print();
+    report::record(&ctx.experiments_md(), "table10", &t.markdown())?;
+    Ok(())
+}
+
+/// Table 11 — applying KD *during* pruned-network fine-tuning.
+pub fn table11(ctx: &Ctx) -> Result<()> {
+    let mut pipe = ctx.pipeline("mnv2ish-1.0")?;
+    let mut t = report::compression_table(
+        "Table 11 — KD-assisted fine-tuning of pruned mnv2ish-1.0", true);
+    let mut results = Vec::new();
+    for &b in &[0.8, 0.65] {
+        for m in [Method::LayerMerge, Method::Depth, Method::LayerOnly] {
+            match pipe.solve(m, b).and_then(|sol| {
+                pipe.finetune_and_deploy(m, b, &sol, None, true) // distill=true
+            }) {
+                Ok(mut c) => {
+                    c.method = format!("{} +KD", c.method);
+                    results.push(c);
+                }
+                Err(e) => eprintln!("[table11] {} @{b}: {e:#}", m.name()),
+            }
+        }
+    }
+    push_rows(&mut t, &pipe, &results, true);
+    t.print();
+    report::record(&ctx.experiments_md(), "table11", &t.markdown())?;
+    Ok(())
+}
+
+/// All-tables convenience driver.
+pub fn all(ctx: &Ctx) -> Result<()> {
+    table1(ctx)?;
+    table2(ctx)?;
+    table3(ctx)?;
+    table4(ctx)?;
+    table5(ctx)?;
+    table6(ctx)?;
+    table7(ctx)?;
+    table8(ctx)?;
+    table9(ctx)?;
+    table10(ctx)?;
+    table11(ctx)?;
+    Ok(())
+}
+
+#[allow(unused)]
+fn unused_task_guard(t: Task) {
+    match t {
+        Task::Classify | Task::Diffusion => {}
+    }
+}

@@ -1,0 +1,564 @@
+//! Network IR — the Rust-side view of `artifacts/specs/<model>.spec.json`.
+//!
+//! The spec is the single source of truth emitted by `python/compile/specs.py`;
+//! this module adds the combinatorics LayerMerge needs on top of it:
+//!
+//! * the irreducible set R and the merge-barrier segments (Sec. 3.1 / App. A),
+//! * `valid_span` — the skip-addition nesting rule (App. A),
+//! * `kernel_options` — the achievable merged kernel sizes K_ij (Eq. 1 with
+//!   the stride-dilation generalization),
+//! * gate-vector construction for the table entries (A~_ij, C~_ijk of Eq. 3/4)
+//!   and for full solutions (A*, C*).
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// Largest merged kernel size considered anywhere in the stack.
+/// MUST match `python/compile/specs.py::K_MAX` (cross-checked by
+/// `tests/ir_python_parity.rs` against the artifact manifest).
+pub const K_MAX: usize = 13;
+
+#[derive(Debug, Clone)]
+pub struct AddProj {
+    pub k: usize,
+    pub stride: usize,
+    pub cin: usize,
+    pub cout: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ConvLayer {
+    pub idx: usize, // 1-based, the paper's l
+    pub cin: usize,
+    pub cout: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub depthwise: bool,
+    pub h_in: usize,
+    pub w_in: usize,
+    pub act: String,
+    pub act_gated: bool,
+    pub conv_gated: bool,
+    pub barrier_after: bool,
+    pub barrier_reason: String,
+    pub add_from: Option<usize>,
+    pub add_proj: Option<AddProj>,
+    pub concat_from: Option<String>,
+    pub stash_as: Option<String>,
+    pub gn: bool,
+    pub gn_groups: usize,
+    pub time_bias: bool,
+}
+
+impl ConvLayer {
+    pub fn h_out(&self) -> usize {
+        self.h_in / self.stride
+    }
+
+    pub fn w_out(&self) -> usize {
+        self.w_in / self.stride
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Task {
+    Classify,
+    Diffusion,
+}
+
+#[derive(Debug, Clone)]
+pub struct Spec {
+    pub name: String,
+    pub task: Task,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub batch: usize,
+    pub num_classes: usize,
+    pub head_hidden: usize,
+    pub time_dim: usize,
+    pub param_count: usize,
+    pub convs: Vec<ConvLayer>,
+    pub params: Vec<ParamEntry>,
+}
+
+impl Spec {
+    pub fn load(path: &Path) -> anyhow::Result<Spec> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+        Ok(Spec::from_json(&j))
+    }
+
+    pub fn from_json(j: &Json) -> Spec {
+        let inp = j.req("input");
+        let convs = j
+            .req("convs")
+            .as_arr()
+            .expect("convs[]")
+            .iter()
+            .map(|c| ConvLayer {
+                idx: c.req("idx").as_usize().unwrap(),
+                cin: c.req("cin").as_usize().unwrap(),
+                cout: c.req("cout").as_usize().unwrap(),
+                k: c.req("k").as_usize().unwrap(),
+                stride: c.req("stride").as_usize().unwrap(),
+                depthwise: c.req("depthwise").as_bool().unwrap(),
+                h_in: c.req("h_in").as_usize().unwrap(),
+                w_in: c.req("w_in").as_usize().unwrap(),
+                act: c.req("act").as_str().unwrap().to_string(),
+                act_gated: c.req("act_gated").as_bool().unwrap(),
+                conv_gated: c.req("conv_gated").as_bool().unwrap(),
+                barrier_after: c.req("barrier_after").as_bool().unwrap(),
+                barrier_reason: c.req("barrier_reason").as_str().unwrap().to_string(),
+                add_from: c.req("add_from").as_usize(),
+                add_proj: c.get("add_proj").and_then(|p| {
+                    p.as_obj().map(|_| AddProj {
+                        k: p.req("k").as_usize().unwrap(),
+                        stride: p.req("stride").as_usize().unwrap(),
+                        cin: p.req("cin").as_usize().unwrap(),
+                        cout: p.req("cout").as_usize().unwrap(),
+                    })
+                }),
+                concat_from: c.req("concat_from").as_str().map(String::from),
+                stash_as: c.req("stash_as").as_str().map(String::from),
+                gn: c.req("gn").as_bool().unwrap(),
+                gn_groups: c.req("gn_groups").as_usize().unwrap(),
+                time_bias: c.req("time_bias").as_bool().unwrap(),
+            })
+            .collect();
+        let params = j
+            .req("params")
+            .as_arr()
+            .expect("params[]")
+            .iter()
+            .map(|p| ParamEntry {
+                name: p.req("name").as_str().unwrap().to_string(),
+                shape: p
+                    .req("shape")
+                    .as_arr()
+                    .unwrap()
+                    .iter()
+                    .map(|d| d.as_usize().unwrap())
+                    .collect(),
+                offset: p.req("offset").as_usize().unwrap(),
+                size: p.req("size").as_usize().unwrap(),
+            })
+            .collect();
+        Spec {
+            name: j.req("name").as_str().unwrap().to_string(),
+            task: match j.req("task").as_str().unwrap() {
+                "classify" => Task::Classify,
+                "diffusion" => Task::Diffusion,
+                t => panic!("unknown task {t}"),
+            },
+            h: inp.req("h").as_usize().unwrap(),
+            w: inp.req("w").as_usize().unwrap(),
+            c: inp.req("c").as_usize().unwrap(),
+            batch: inp.req("batch").as_usize().unwrap(),
+            num_classes: j.req("num_classes").as_usize().unwrap(),
+            head_hidden: j.req("head_hidden").as_usize().unwrap(),
+            time_dim: j.req("time_dim").as_usize().unwrap(),
+            param_count: j.req("param_count").as_usize().unwrap(),
+            convs,
+            params,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.convs.len()
+    }
+
+    pub fn conv(&self, idx: usize) -> &ConvLayer {
+        &self.convs[idx - 1]
+    }
+
+    pub fn param(&self, name: &str) -> &ParamEntry {
+        self.params
+            .iter()
+            .find(|p| p.name == name)
+            .unwrap_or_else(|| panic!("no param {name}"))
+    }
+
+    pub fn param_slice<'a>(&self, flat: &'a [f32], name: &str) -> &'a [f32] {
+        let p = self.param(name);
+        &flat[p.offset..p.offset + p.size]
+    }
+
+    /// The irreducible set R (Sec. 3.1).
+    pub fn irreducible(&self) -> Vec<usize> {
+        self.convs.iter().filter(|c| !c.conv_gated).map(|c| c.idx).collect()
+    }
+
+    // ------------------------------------------------------------------
+    // Segments and spans
+    // ------------------------------------------------------------------
+
+    /// Maximal merge-allowed segments [s, e] of 1-based conv indices
+    /// (cut at barriers and skip-concatenation inputs).
+    pub fn segments(&self) -> Vec<(usize, usize)> {
+        let mut segs = Vec::new();
+        let mut start = 1;
+        for c in &self.convs {
+            let next_concat = self
+                .convs
+                .get(c.idx) // idx is 1-based => convs[idx] is the next layer
+                .map(|n| n.concat_from.is_some())
+                .unwrap_or(false);
+            if c.barrier_after || c.idx == self.len() || next_concat {
+                segs.push((start, c.idx));
+                start = c.idx + 1;
+            }
+        }
+        segs
+    }
+
+    /// Skip-addition nesting rule (App. A; mirrors specs.py::valid_span).
+    /// A span is invalid if an add lands strictly inside it with an
+    /// external source, or if it swallows a source boundary whose add
+    /// point lies beyond the span.  An add landing exactly at the span
+    /// end executes externally on materialized boundary tensors.
+    pub fn valid_span(&self, i: usize, j: usize) -> bool {
+        for c in &self.convs {
+            if let Some(af) = c.add_from {
+                let (p_src, q) = (af - 1, c.idx);
+                if p_src < i && i < q && q < j {
+                    return false;
+                }
+                if i < p_src && p_src < j && j < q {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// All (i, j) span boundaries within one segment with i < j, valid.
+    pub fn spans(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        for (s, e) in self.segments() {
+            for i in (s - 1)..e {
+                for j in (i + 1)..=e {
+                    if self.valid_span(i, j) {
+                        out.push((i, j));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Stride product of convs i+1 .. l-1 — the dilation factor layer l's
+    /// taps acquire pulled back to the span input (App. A).
+    pub fn stride_prefix(&self, i: usize, l: usize) -> usize {
+        (i + 1..l).map(|m| self.conv(m).stride).product()
+    }
+
+    /// Total stride of the span (i, j].
+    pub fn span_stride(&self, i: usize, j: usize) -> usize {
+        (i + 1..=j).map(|m| self.conv(m).stride).product()
+    }
+
+    /// Is the merged layer over (i, j] depthwise? (true iff every layer in
+    /// the span is depthwise — merging a depthwise conv with a dense one
+    /// produces a dense layer; tracked per App. A.)
+    pub fn span_depthwise(&self, i: usize, j: usize) -> bool {
+        (i + 1..=j).all(|l| self.conv(l).depthwise)
+            && self.conv(i + 1).cin == self.conv(j).cout
+    }
+
+    /// Kernel-size increment layer l contributes if kept in span starting
+    /// at i: (k_l - 1) * prod(strides before it in the span).
+    pub fn k_increment(&self, i: usize, l: usize) -> usize {
+        (self.conv(l).k - 1) * self.stride_prefix(i, l)
+    }
+
+    /// K_ij: achievable merged kernel sizes over span (i, j], as subset
+    /// sums of increments with irreducible layers forced (Sec. 3.2),
+    /// capped at K_MAX.
+    pub fn kernel_options(&self, i: usize, j: usize) -> Vec<usize> {
+        let mut sums: BTreeSet<usize> = BTreeSet::new();
+        sums.insert(0);
+        let mut forced = 0usize;
+        for l in (i + 1)..=j {
+            let inc = self.k_increment(i, l);
+            if !self.conv(l).conv_gated {
+                forced += inc;
+            } else if inc > 0 {
+                let cur: Vec<usize> = sums.iter().copied().collect();
+                for s in cur {
+                    sums.insert(s + inc);
+                }
+            }
+        }
+        sums.iter()
+            .map(|s| 1 + s + forced)
+            .filter(|&k| k <= K_MAX)
+            .collect()
+    }
+
+    // ------------------------------------------------------------------
+    // Gate vectors
+    // ------------------------------------------------------------------
+
+    /// Pristine gates: the original network. For acts this is 1 where an
+    /// activation exists (act != "none") and 0 otherwise; convs and gn all 1.
+    pub fn pristine_gates(&self) -> Gates {
+        Gates {
+            act: self
+                .convs
+                .iter()
+                .map(|c| if c.act == "none" { 0.0 } else { 1.0 })
+                .collect(),
+            conv: vec![1.0; self.len()],
+            gn: vec![1.0; self.len()],
+        }
+    }
+
+    /// Gates realizing a full solution (A: kept activation indices,
+    /// C: kept conv indices, spans: the solver's merged spans).
+    ///
+    /// * GroupNorm layers inside merged spans are pruned (gate 0); only
+    ///   boundary norms survive (our variant of App. A's norm move).
+    /// * The MobileNetV2 trick (App. A): a *multi-layer* span ending at a
+    ///   pristine-linear position gets an activation added.  Singleton
+    ///   spans keep their pristine (possibly absent) activation — an
+    ///   unmerged layer is not "a merged layer" in the paper's sense.
+    pub fn solution_gates(
+        &self,
+        a_set: &BTreeSet<usize>,
+        c_set: &BTreeSet<usize>,
+        spans: &[(usize, usize, usize)],
+    ) -> Gates {
+        let multi_end: BTreeSet<usize> =
+            spans.iter().filter(|(i, j, _)| j - i > 1).map(|&(_, j, _)| j).collect();
+        let mut g = self.pristine_gates();
+        for c in &self.convs {
+            let li = c.idx - 1;
+            if c.act_gated {
+                let kept = a_set.contains(&c.idx) && c.idx != self.len();
+                g.act[li] = if kept && (c.act != "none" || multi_end.contains(&c.idx))
+                {
+                    1.0
+                } else {
+                    0.0
+                };
+            }
+            if c.conv_gated {
+                g.conv[li] = if c_set.contains(&c.idx) { 1.0 } else { 0.0 };
+            }
+            if c.gn {
+                // keep gn only at span boundaries (kept activations count
+                // as boundaries, as does the end of each segment)
+                let boundary = !c.act_gated || a_set.contains(&c.idx)
+                    || c.barrier_after
+                    || c.idx == self.len();
+                g.gn[li] = if boundary { 1.0 } else { 0.0 };
+            }
+        }
+        g
+    }
+
+    /// Gates for a table entry: everything outside the span (i, j] pristine,
+    /// inside the span activations removed (A~_ij of Eq. 3) and convs kept
+    /// per `kept` (C~_ijk).  Multi-layer spans get the App. A added
+    /// activation at their boundary when the pristine position is linear.
+    pub fn entry_gates(&self, i: usize, j: usize, kept: &BTreeSet<usize>) -> Gates {
+        let mut g = self.pristine_gates();
+        for l in (i + 1)..=j {
+            let c = self.conv(l);
+            let li = l - 1;
+            if l < j && c.act_gated {
+                g.act[li] = 0.0;
+            }
+            if c.gn && l < j {
+                g.gn[li] = 0.0;
+            }
+            if c.conv_gated {
+                g.conv[li] = if kept.contains(&l) { 1.0 } else { 0.0 };
+            }
+        }
+        let cj = self.conv(j);
+        if j - i > 1 && j < self.len() && cj.act_gated && cj.act == "none" {
+            g.act[j - 1] = 1.0;
+        }
+        g
+    }
+}
+
+/// Gate vectors fed to the AOT gated graph (f32, 1.0 = keep).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Gates {
+    pub act: Vec<f32>,
+    pub conv: Vec<f32>,
+    pub gn: Vec<f32>,
+}
+
+impl Gates {
+    /// Number of surviving merged layers implied by the act gates within
+    /// segment structure — used for quick sanity reporting.
+    pub fn kept_act_count(&self) -> usize {
+        self.act.iter().filter(|&&g| g > 0.5).count()
+    }
+
+    pub fn kept_conv_count(&self) -> usize {
+        self.conv.iter().filter(|&&g| g > 0.5).count()
+    }
+}
+
+#[cfg(test)]
+pub mod tests {
+    use super::*;
+
+    /// A hand-built 4-layer toy spec: conv1 (irreducible stem), conv2-3
+    /// residual block, conv4.
+    pub fn toy_spec() -> Spec {
+        let mk = |idx, cin, cout, k, stride, gated, add_from: Option<usize>| ConvLayer {
+            idx,
+            cin,
+            cout,
+            k,
+            stride,
+            depthwise: false,
+            h_in: 8,
+            w_in: 8,
+            act: "relu".into(),
+            act_gated: idx != 4,
+            conv_gated: gated,
+            barrier_after: false,
+            barrier_reason: String::new(),
+            add_from,
+            add_proj: None,
+            concat_from: None,
+            stash_as: None,
+            gn: false,
+            gn_groups: 0,
+            time_bias: false,
+        };
+        let mut convs = vec![
+            mk(1, 3, 4, 3, 1, false, None),
+            mk(2, 4, 4, 3, 1, true, None),
+            mk(3, 4, 4, 3, 1, true, Some(2)),
+            mk(4, 4, 4, 1, 1, true, None),
+        ];
+        convs[3].act = "none".into(); // sigma_L = id
+        Spec {
+            name: "toy".into(),
+            task: Task::Classify,
+            h: 8,
+            w: 8,
+            c: 3,
+            batch: 2,
+            num_classes: 10,
+            head_hidden: 4,
+            time_dim: 0,
+            param_count: 0,
+            convs,
+            params: vec![],
+        }
+    }
+
+    /// Toy spec plus a deterministic flat parameter vector whose layout
+    /// registers conv{l}.w / conv{l}.b — shared by the merge-module tests.
+    pub fn toy_spec_with_params() -> (Spec, Vec<f32>) {
+        let mut sp = toy_spec();
+        let mut rng = crate::util::rng::Rng::new(0xbeef);
+        let mut flat = Vec::new();
+        let mut params = Vec::new();
+        for c in &sp.convs {
+            let wshape = vec![c.cout, c.cin, c.k, c.k];
+            let wsize: usize = wshape.iter().product();
+            params.push(ParamEntry {
+                name: format!("conv{}.w", c.idx),
+                shape: wshape,
+                offset: flat.len(),
+                size: wsize,
+            });
+            for _ in 0..wsize {
+                flat.push(rng.normal() * 0.5);
+            }
+            params.push(ParamEntry {
+                name: format!("conv{}.b", c.idx),
+                shape: vec![c.cout],
+                offset: flat.len(),
+                size: c.cout,
+            });
+            for _ in 0..c.cout {
+                flat.push(rng.normal() * 0.1);
+            }
+        }
+        sp.params = params;
+        sp.param_count = flat.len();
+        (sp, flat)
+    }
+
+    #[test]
+    fn segments_single() {
+        let sp = toy_spec();
+        assert_eq!(sp.segments(), vec![(1, 4)]);
+        assert_eq!(sp.irreducible(), vec![1]);
+    }
+
+    #[test]
+    fn valid_span_nesting() {
+        let sp = toy_spec();
+        // residual branch: source boundary 1, add point after conv 3
+        assert!(sp.valid_span(1, 3)); // whole branch inside -> Dirac fold
+        assert!(sp.valid_span(0, 4)); // superset -> fold
+        assert!(sp.valid_span(2, 3)); // add at span end: external add, ok
+        assert!(sp.valid_span(1, 2)); // source at boundary 1 == i+? ok:
+                                      // i=1 < p_src=1 is false -> valid
+        assert!(!sp.valid_span(0, 2)); // swallows source boundary 1, add
+                                       // point 3 beyond the span
+        assert!(!sp.valid_span(0, 3) == false); // q == j: fold, valid
+    }
+
+    #[test]
+    fn kernel_options_subset_sums() {
+        let sp = toy_spec();
+        // span (1, 4]: layers 2,3,4 all gated, increments 2,2,0
+        assert_eq!(sp.kernel_options(1, 4), vec![1, 3, 5]);
+        // span (0, 4]: layer 1 forced (k=3 -> +2)
+        assert_eq!(sp.kernel_options(0, 4), vec![3, 5, 7]);
+    }
+
+    #[test]
+    fn entry_gates_match_paper_tilde_sets() {
+        let sp = toy_spec();
+        let kept: BTreeSet<usize> = [3].into_iter().collect();
+        let g = sp.entry_gates(1, 4, &kept);
+        // acts 2,3 removed, act 4 is sigma_L
+        assert_eq!(g.act, vec![1.0, 0.0, 0.0, 0.0]);
+        // conv 2 dropped, conv 3 kept, conv 4 dropped, conv1 untouched
+        assert_eq!(g.conv, vec![1.0, 0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn solution_gates_roundtrip() {
+        let sp = toy_spec();
+        let a: BTreeSet<usize> = [3].into_iter().collect();
+        let c: BTreeSet<usize> = [1, 3].into_iter().collect();
+        let g = sp.solution_gates(&a, &c, &[]);
+        assert_eq!(g.act, vec![0.0, 0.0, 1.0, 0.0]);
+        assert_eq!(g.conv, vec![1.0, 0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn stride_dilation() {
+        let mut sp = toy_spec();
+        sp.convs[1].stride = 2; // conv2 strided
+        sp.convs[1].conv_gated = false;
+        assert_eq!(sp.stride_prefix(0, 3), 2);
+        assert_eq!(sp.k_increment(0, 3), 4); // (3-1) * 2
+        assert_eq!(sp.span_stride(0, 4), 2);
+    }
+}

@@ -1,0 +1,37 @@
+//! LayerMerge — depth compression through joint layer pruning and merging.
+//!
+//! A from-scratch reproduction of *LayerMerge: Neural Network Depth
+//! Compression through Layer Pruning and Merging* (ICML 2024) as a
+//! three-layer Rust + JAX + Pallas stack: Python authors and AOT-lowers
+//! the gated model and kernels once (`make artifacts`); this crate owns
+//! the entire pipeline afterwards — table construction, the DP solvers,
+//! fine-tuning, merging, deployment and every experiment in the paper.
+//!
+//! Start at [`pipeline`] for the end-to-end flow, [`solver`] for the
+//! paper's algorithms, and DESIGN.md for the system inventory.
+
+pub mod baselines;
+pub mod bench;
+pub mod exec;
+pub mod experiments;
+pub mod ir;
+pub mod merge;
+pub mod model;
+pub mod pipeline;
+pub mod report;
+pub mod runtime;
+pub mod solver;
+pub mod tables;
+pub mod train;
+pub mod util;
+
+pub mod prelude {
+    pub use crate::exec::{Format, Plan};
+    pub use crate::ir::{Gates, Spec, Task};
+    pub use crate::model::{Batch, Manifest, Model};
+    pub use crate::pipeline::{Pipeline, PipelineCfg};
+    pub use crate::runtime::Runtime;
+    pub use crate::solver::Solution;
+    pub use crate::tables::{BuildCfg, LatencyMode, Tables};
+    pub use crate::util::tensor::Tensor;
+}

@@ -1,0 +1,245 @@
+//! `layermerge` — CLI entrypoint for the LayerMerge reproduction.
+//!
+//! Subcommands:
+//!   compress --model M --budget F [--method layermerge|depth|layeronly]
+//!   tables   --model M                 build lookup tables
+//!   table1..table11, fig1..fig5, all   regenerate paper tables/figures
+//!   verify   --model M                 merged-vs-pruned numerics report
+//!
+//! Global flags: --artifacts DIR, --fast (analytical latency + short
+//! schedules), --workers N, --pretrain N, --finetune N, --seed N.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use layermerge::experiments::{figures, tables as exp_tables, Ctx};
+use layermerge::pipeline::{Method, PipelineCfg};
+use layermerge::tables::LatencyMode;
+
+/// Minimal flag parser (clap substitute; DESIGN.md §2).
+struct Args {
+    cmd: String,
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Result<Args> {
+        let mut it = std::env::args().skip(1);
+        let cmd = it.next().unwrap_or_else(|| "help".to_string());
+        let mut flags = std::collections::HashMap::new();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let looks_bool = matches!(key, "fast" | "measured" | "force");
+                let val = if looks_bool {
+                    "1".to_string()
+                } else {
+                    it.next().with_context(|| format!("--{key} needs a value"))?
+                };
+                flags.insert(key.to_string(), val);
+            } else {
+                bail!("unexpected argument {a}");
+            }
+        }
+        Ok(Args { cmd, flags })
+    }
+
+    fn get(&self, k: &str) -> Option<&str> {
+        self.flags.get(k).map(|s| s.as_str())
+    }
+
+    fn usize_or(&self, k: &str, d: usize) -> usize {
+        self.get(k).and_then(|v| v.parse().ok()).unwrap_or(d)
+    }
+
+    fn f64_or(&self, k: &str, d: f64) -> f64 {
+        self.get(k).and_then(|v| v.parse().ok()).unwrap_or(d)
+    }
+}
+
+fn usage() -> &'static str {
+    "layermerge <cmd> [flags]\n\
+     \n\
+     commands:\n\
+       compress   --model M --budget F [--method layermerge|depth|layeronly]\n\
+       tables     --model M              build/load lookup tables\n\
+       verify     --model M              merged-vs-pruned numerics check\n\
+       table1..table11                   regenerate a paper table\n\
+       fig1..fig5                        regenerate a paper figure\n\
+       all                               every table and figure\n\
+     flags:\n\
+       --artifacts DIR   (default ./artifacts)\n\
+       --fast            analytical latency + short schedules (CI)\n\
+       --workers N       importance-table worker threads\n\
+       --pretrain N --finetune N --seed N --budget F --p N\n"
+}
+
+fn build_cfg(args: &Args) -> PipelineCfg {
+    let mut cfg = PipelineCfg::default();
+    cfg.seed = args.usize_or("seed", 0) as u64;
+    cfg.pretrain_steps = args.usize_or("pretrain", cfg.pretrain_steps);
+    cfg.finetune_steps = args.usize_or("finetune", cfg.finetune_steps);
+    cfg.p_disc = args.usize_or("p", cfg.p_disc);
+    cfg.build.workers = args.usize_or("workers", cfg.build.workers);
+    if args.get("fast").is_some() {
+        std::env::set_var("LM_FAST", "1");
+        cfg.build.mode = LatencyMode::Analytical;
+    }
+    cfg
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse()?;
+    if args.cmd == "help" || args.cmd == "--help" {
+        println!("{}", usage());
+        return Ok(());
+    }
+    let repo = std::env::current_dir()?;
+    let artifacts = PathBuf::from(
+        args.get("artifacts").unwrap_or("artifacts"),
+    );
+    let cfg = build_cfg(&args);
+    let ctx = Ctx::new(&artifacts, repo, cfg)?;
+
+    match args.cmd.as_str() {
+        "compress" => {
+            let model = args.get("model").context("--model required")?;
+            let budget = args.f64_or("budget", 0.65);
+            let method = match args.get("method").unwrap_or("layermerge") {
+                "layermerge" => Method::LayerMerge,
+                "depth" => Method::Depth,
+                "layeronly" => Method::LayerOnly,
+                m => bail!("unknown method {m}"),
+            };
+            let mut pipe = ctx.pipeline(model)?;
+            let c = pipe.run(method, budget)?;
+            println!(
+                "{} {}@{budget}: metric {:.4} (pruned {:.4}), depth {} -> {}, \
+                 eager {:.2}ms ({:.2}x), fused {:.2}ms ({:.2}x)",
+                model, c.method, c.merged_metric, c.pruned_metric,
+                pipe.model.spec.len(), c.depth,
+                c.lat_eager_ms, pipe.orig_lat_eager / c.lat_eager_ms,
+                c.lat_fused_ms, pipe.orig_lat_fused / c.lat_fused_ms,
+            );
+        }
+        "tables" => {
+            let model = args.get("model").context("--model required")?;
+            let mut pipe = ctx.pipeline(model)?;
+            let t = pipe.ensure_tables()?;
+            println!(
+                "{model}: {} entries, orig ~{:.2}ms (fixed {:.2}ms), built lat {:.1}s imp {:.1}s",
+                t.entries.len(), t.orig_ms(), t.fixed_ms, t.lat_build_s, t.imp_build_s
+            );
+        }
+        "verify" => {
+            let model = args.get("model").context("--model required")?;
+            verify(&ctx, model, args.f64_or("budget", 0.65))?;
+        }
+        "profile" => {
+            let model = args.get("model").context("--model required")?;
+            profile(&ctx, model, args.f64_or("budget", 0.65))?;
+        }
+        "table1" => exp_tables::table1(&ctx)?,
+        "table2" => exp_tables::table2(&ctx)?,
+        "table3" => exp_tables::table3(&ctx)?,
+        "table4" => exp_tables::table4(&ctx)?,
+        "table5" => exp_tables::table5(&ctx)?,
+        "table6" => exp_tables::table6(&ctx)?,
+        "table7" => exp_tables::table7(&ctx)?,
+        "table8" => exp_tables::table8(&ctx)?,
+        "table9" => exp_tables::table9(&ctx)?,
+        "table10" => exp_tables::table10(&ctx)?,
+        "table11" => exp_tables::table11(&ctx)?,
+        "fig1" => figures::fig1(&ctx)?,
+        "fig2" => figures::fig2(&ctx)?,
+        "fig3" => figures::fig3(&ctx)?,
+        "fig4" => figures::fig4(&ctx)?,
+        "fig5" => figures::fig5(&ctx)?,
+        "all" => {
+            exp_tables::all(&ctx)?;
+            figures::all(&ctx)?;
+        }
+        other => {
+            eprintln!("unknown command {other}\n{}", usage());
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}
+
+/// Per-plan latency breakdown: original vs compressed, both formats, with
+/// per-step device time — the §Perf profiling entrypoint for L3.
+fn profile(ctx: &Ctx, model: &str, budget: f64) -> Result<()> {
+    use layermerge::exec::{Format, Plan};
+    use layermerge::util::tensor::Tensor;
+    let mut pipe = ctx.pipeline(model)?;
+    let sol = pipe.solve(Method::LayerMerge, budget)?;
+    let orig = Plan::original(&pipe.model.spec, &pipe.pretrained)?;
+    let comp = Plan::from_solution(&pipe.model.spec, &pipe.pretrained, &sol.a,
+                                   &sol.c, &sol.spans)?;
+    let sp = &pipe.model.spec;
+    let mut rng = layermerge::util::rng::Rng::new(9);
+    let n = sp.batch * sp.h * sp.w * sp.c;
+    let x = Tensor::new(vec![sp.batch, sp.h, sp.w, sp.c],
+                        (0..n).map(|_| rng.normal()).collect());
+    let t = match sp.task {
+        layermerge::ir::Task::Diffusion => Some(Tensor::full(&[sp.batch], 500.0)),
+        _ => None,
+    };
+    for (name, plan) in [("original", &orig), ("compressed", &comp)] {
+        for fmt in [Format::Eager, Format::Fused] {
+            // warm
+            for _ in 0..3 {
+                plan.forward(&pipe.model.rt, &ctx.man, &x, t.as_ref(), fmt)?;
+            }
+            let mut best_total = f64::INFINITY;
+            let mut best_dev = 0.0;
+            for _ in 0..10 {
+                let t0 = std::time::Instant::now();
+                let (_, dev_ms) =
+                    plan.forward_timed(&pipe.model.rt, &ctx.man, &x, t.as_ref(), fmt)?;
+                let total = t0.elapsed().as_secs_f64() * 1e3;
+                if total < best_total {
+                    best_total = total;
+                    best_dev = dev_ms;
+                }
+            }
+            println!(
+                "{name:<12} {:?}: steps {:>2}, total {best_total:>8.2}ms, device {best_dev:>8.2}ms, host/glue {:>8.2}ms",
+                fmt, plan.depth(), best_total - best_dev
+            );
+        }
+    }
+    println!("solution spans: {:?}", sol.spans);
+    Ok(())
+}
+
+/// Merged-vs-pruned numerics: run the gated graph and the deployed plan on
+/// the same batch and report the deviation (SAME-padding boundary effect —
+/// DESIGN.md §4).
+fn verify(ctx: &Ctx, model: &str, budget: f64) -> Result<()> {
+    use layermerge::exec::{Format, Plan};
+    let mut pipe = ctx.pipeline(model)?;
+    let sol = pipe.solve(Method::LayerMerge, budget)?;
+    let a_set: std::collections::BTreeSet<usize> = sol.a.iter().copied().collect();
+    let gates = pipe.model.spec.solution_gates(&a_set, &sol.c, &sol.spans);
+    let plan = Plan::from_solution(&pipe.model.spec, &pipe.pretrained, &sol.a,
+                                   &sol.c, &sol.spans)?;
+    let batch = pipe.gen.batch(layermerge::train::STREAM_EVAL, 0);
+    let (x, t) = match &batch {
+        layermerge::model::Batch::Classify { x, .. } => (x.clone(), None),
+        layermerge::model::Batch::Diffusion { x0, t, .. } => {
+            (x0.clone(), Some(t.clone()))
+        }
+    };
+    let gated = pipe.model.forward(&pipe.pretrained, &gates, &batch)?;
+    let merged = plan.forward(&pipe.model.rt, &ctx.man, &x, t.as_ref(), Format::Eager)?;
+    let fused = plan.forward(&pipe.model.rt, &ctx.man, &x, t.as_ref(), Format::Fused)?;
+    println!(
+        "verify {model} @{budget}: spans {:?}\n  merged-vs-gated  rel_l2 {:.4} max {:.4}\n  fused-vs-eager   rel_l2 {:.6} max {:.6}",
+        sol.spans,
+        merged.rel_l2(&gated), merged.max_abs_diff(&gated),
+        fused.rel_l2(&merged), fused.max_abs_diff(&merged),
+    );
+    Ok(())
+}

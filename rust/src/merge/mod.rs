@@ -1,0 +1,485 @@
+//! Parameter-space merging — the paper's Sec. 2 operator and its App. A
+//! generalizations, implemented on host tensors at deployment time.
+//!
+//! `conv(conv(x, w1, s1), w2, s2) == conv(x, merge_kernels(w1, w2, s1), s1*s2)`
+//! (VALID padding), with
+//!
+//!   wm[o,i,dy,dx] = sum_{c,e,f} w2[o,c,e,f] * w1[c,i, dy - e*s1, dx - f*s1]
+//!   Ker(wm)       = (Ker(w2) - 1) * s1 + Ker(w1)          (App. A)
+//!
+//! `span_merge` composes an arbitrary valid span (i, j] of the IR into one
+//! conv: dropped convs become theta_id, depthwise kernels are expanded when
+//! they meet dense neighbours, interior skip-additions fold via Dirac (or
+//! projection) kernels, and biases propagate as b2 + (sum w2 taps) @ b1.
+//!
+//! The algebra here mirrors `python/compile/kernels/ref.py` exactly;
+//! `tests/merge_parity.rs` pins cross-language fixtures.
+
+use std::collections::BTreeSet;
+
+use crate::ir::Spec;
+use crate::util::tensor::Tensor;
+
+/// Compose two conv kernels: w1 [C, Cin, k1, k1] (inner, stride s1),
+/// w2 [Cout, C, k2, k2] (outer) -> [Cout, Cin, (k2-1)*s1 + k1, ...].
+pub fn merge_kernels(w1: &Tensor, w2: &Tensor, s1: usize) -> Tensor {
+    let (c1, cin, k1) = (w1.dims[0], w1.dims[1], w1.dims[2]);
+    let (co, c2, k2) = (w2.dims[0], w2.dims[1], w2.dims[2]);
+    assert_eq!(c1, c2, "channel mismatch: {:?} vs {:?}", w1.dims, w2.dims);
+    let km = (k2 - 1) * s1 + k1;
+    let mut wm = Tensor::zeros(&[co, cin, km, km]);
+    for e in 0..k2 {
+        for f in 0..k2 {
+            for o in 0..co {
+                for c in 0..c1 {
+                    let w2v = w2.at4(o, c, e, f);
+                    if w2v == 0.0 {
+                        continue;
+                    }
+                    for a in 0..k1 {
+                        for b in 0..k1 {
+                            let i0 = wm.idx4(o, 0, e * s1 + a, f * s1 + b);
+                            let stride_i = wm.dims[2] * wm.dims[3];
+                            for ci in 0..cin {
+                                wm.data[i0 + ci * stride_i] +=
+                                    w2v * w1.at4(c, ci, a, b);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    wm
+}
+
+/// Bias of the composed conv: bm = b2 + (sum over taps of w2) @ b1.
+pub fn merge_bias(w2: &Tensor, b1: &[f32], b2: &[f32]) -> Vec<f32> {
+    let (co, c, k2) = (w2.dims[0], w2.dims[1], w2.dims[2]);
+    let mut out = b2.to_vec();
+    for o in 0..co {
+        let mut acc = 0.0f32;
+        for cc in 0..c {
+            let mut taps = 0.0f32;
+            for e in 0..k2 {
+                for f in 0..k2 {
+                    taps += w2.at4(o, cc, e, f);
+                }
+            }
+            acc += taps * b1[cc];
+        }
+        out[o] += acc;
+    }
+    out
+}
+
+/// Identity conv kernel of size k (theta_id of Sec. 3.1, embedded to k x k).
+pub fn dirac(c: usize, k: usize) -> Tensor {
+    let mut w = Tensor::zeros(&[c, c, k, k]);
+    for i in 0..c {
+        w.set4(i, i, k / 2, k / 2, 1.0);
+    }
+    w
+}
+
+/// Expand a depthwise kernel [C,1,k,k] to dense diagonal [C,C,k,k].
+pub fn expand_depthwise(w: &Tensor) -> Tensor {
+    let (c, one, k) = (w.dims[0], w.dims[1], w.dims[2]);
+    assert_eq!(one, 1);
+    let mut out = Tensor::zeros(&[c, c, k, k]);
+    for i in 0..c {
+        for a in 0..k {
+            for b in 0..k {
+                out.set4(i, i, a, b, w.at4(i, 0, a, b));
+            }
+        }
+    }
+    out
+}
+
+/// Extract the diagonal of a dense kernel back to depthwise [C,1,k,k];
+/// panics if any off-diagonal weight exceeds `tol` (sanity guard when a
+/// span is known to be all-depthwise).
+pub fn extract_depthwise(w: &Tensor, tol: f32) -> Tensor {
+    let (co, ci, k) = (w.dims[0], w.dims[1], w.dims[2]);
+    assert_eq!(co, ci);
+    let mut out = Tensor::zeros(&[co, 1, k, k]);
+    for o in 0..co {
+        for c in 0..ci {
+            for a in 0..k {
+                for b in 0..k {
+                    let v = w.at4(o, c, a, b);
+                    if o == c {
+                        out.set4(o, 0, a, b, v);
+                    } else {
+                        assert!(v.abs() <= tol,
+                            "off-diagonal weight {v} in depthwise span");
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Zero-pad a kernel spatially (centered) to size k x k.
+pub fn embed_kernel(w: &Tensor, k: usize) -> Tensor {
+    let (co, ci, kh) = (w.dims[0], w.dims[1], w.dims[2]);
+    assert!(k >= kh && (k - kh) % 2 == 0, "cannot embed {kh} into {k}");
+    let p = (k - kh) / 2;
+    let mut out = Tensor::zeros(&[co, ci, k, k]);
+    for o in 0..co {
+        for c in 0..ci {
+            for a in 0..kh {
+                for b in 0..kh {
+                    out.set4(o, c, p + a, p + b, w.at4(o, c, a, b));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Fold a BatchNorm (gamma, beta, running mean/var) into conv weights —
+/// the App. A inference-time BN fusion.  The runtime models here are
+/// norm-free (DESIGN.md §2), so this is exercised by unit tests and kept
+/// as part of the public deployment API.
+pub fn fold_batchnorm(
+    w: &Tensor,
+    b: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    mean: &[f32],
+    var: &[f32],
+    eps: f32,
+) -> (Tensor, Vec<f32>) {
+    let co = w.dims[0];
+    let mut w2 = w.clone();
+    let mut b2 = vec![0.0; co];
+    let per = w.dims[1] * w.dims[2] * w.dims[3];
+    for o in 0..co {
+        let scale = gamma[o] / (var[o] + eps).sqrt();
+        for t in 0..per {
+            w2.data[o * per + t] *= scale;
+        }
+        b2[o] = beta[o] + (b[o] - mean[o]) * scale;
+    }
+    (w2, b2)
+}
+
+/// The merged layer produced from a span of the IR.
+#[derive(Debug, Clone)]
+pub struct MergedConv {
+    pub i: usize,
+    pub j: usize,
+    pub weight: Tensor, // dense [Cout, Cin, k, k] (or depthwise [C,1,k,k])
+    pub bias: Vec<f32>,
+    pub k: usize,
+    pub stride: usize,
+    pub depthwise: bool,
+}
+
+/// Compose span (i, j] with kept conv set `kept` into a single conv
+/// (Algorithm 2's theta-hat construction, plus the App. A Dirac folding
+/// of interior skip-additions).  `flat` is the fine-tuned flat parameter
+/// vector.  Requires `kept` to contain every irreducible layer in the span.
+pub fn span_merge(
+    spec: &Spec,
+    flat: &[f32],
+    i: usize,
+    j: usize,
+    kept: &BTreeSet<usize>,
+) -> MergedConv {
+    assert!(spec.valid_span(i, j), "invalid span ({i}, {j}]");
+    let cin_span = spec.conv(i + 1).cin;
+
+    // Running merged map (W, B) from span input to the current layer
+    // output; snapshots[l - i] holds it right after layer l (for adds).
+    let mut w = dirac(cin_span, 1);
+    let mut b = vec![0.0f32; cin_span];
+    let mut s_acc = 1usize;
+    let mut snapshots: Vec<(Tensor, Vec<f32>, usize)> =
+        vec![(w.clone(), b.clone(), s_acc)];
+
+    for l in (i + 1)..=j {
+        let c = spec.conv(l);
+        let (wl, bl) = if !c.conv_gated || kept.contains(&l) {
+            let raw = spec.param_slice(flat, &format!("conv{l}.w"));
+            let dims = spec.param(&format!("conv{l}.w")).shape.clone();
+            let mut t = Tensor::new(dims, raw.to_vec());
+            if c.depthwise {
+                t = expand_depthwise(&t);
+            }
+            (t, spec.param_slice(flat, &format!("conv{l}.b")).to_vec())
+        } else {
+            assert!(c.conv_gated, "dropping irreducible layer {l}");
+            (dirac(c.cin, 1), vec![0.0; c.cout])
+        };
+        b = merge_bias(&wl, &b, &bl);
+        w = merge_kernels(&w, &wl, s_acc);
+        s_acc *= c.stride;
+
+        // interior skip-addition: fold the branch from boundary add_from-1.
+        // A source *before* the span (src < i) is only legal when the add
+        // lands exactly at the span end — the executor then performs it on
+        // materialized boundary tensors, so we skip folding here.
+        if let Some(af) = c.add_from.filter(|af| af - 1 >= i) {
+            let src = af - 1;
+            let (mut ws, mut bs, s_src) = snapshots[src - i].clone();
+            let mut s_skip = s_src;
+            if let Some(proj) = &c.add_proj {
+                let pw = Tensor::new(
+                    spec.param(&format!("proj{af}.w")).shape.clone(),
+                    spec.param_slice(flat, &format!("proj{af}.w")).to_vec(),
+                );
+                let pb = spec.param_slice(flat, &format!("proj{af}.b"));
+                bs = merge_bias(&pw, &bs, pb);
+                ws = merge_kernels(&ws, &pw, s_src);
+                s_skip *= proj.stride;
+            }
+            // both branches must land at the same total stride to add
+            assert_eq!(s_acc, s_skip, "residual branches disagree on stride");
+            // align kernel sizes and add
+            let km = w.dims[2].max(ws.dims[2]);
+            w = embed_kernel(&w, km);
+            ws = embed_kernel(&ws, km);
+            for (x, y) in w.data.iter_mut().zip(&ws.data) {
+                *x += *y;
+            }
+            for (x, y) in b.iter_mut().zip(&bs) {
+                *x += *y;
+            }
+        }
+        snapshots.push((w.clone(), b.clone(), s_acc));
+    }
+
+    // Eq. 1 / App. A invariant: merged kernel size is exactly
+    // 1 + sum over kept convs of (k_l - 1) * stride_prefix, except when a
+    // projection/Dirac fold embedded it wider (it cannot shrink).
+    let expect: usize = 1 + (i + 1..=j)
+        .filter(|l| !spec.conv(*l).conv_gated || kept.contains(l))
+        .map(|l| spec.k_increment(i, l))
+        .sum::<usize>();
+    assert!(w.dims[2] >= 1 && w.dims[2] <= expect.max(w.dims[2]),
+        "kernel growth law violated: got {} expected <= {}", w.dims[2], expect);
+
+    let depthwise = spec.span_depthwise(i, j)
+        && (i + 1..=j).all(|l| spec.conv(l).add_from.is_none());
+    let (weight, k) = if depthwise {
+        let t = extract_depthwise(&w, 1e-6);
+        let k = t.dims[2];
+        (t, k)
+    } else {
+        let k = w.dims[2];
+        (w, k)
+    };
+    MergedConv {
+        i,
+        j,
+        weight,
+        bias: b,
+        k,
+        stride: s_acc,
+        depthwise,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randt(r: &mut Rng, dims: &[usize]) -> Tensor {
+        let n: usize = dims.iter().product();
+        Tensor::new(dims.to_vec(), (0..n).map(|_| r.normal()).collect())
+    }
+
+    /// Direct VALID conv on host — test oracle only.
+    pub fn conv2d_valid(x: &Tensor, w: &Tensor, stride: usize) -> Tensor {
+        let (b, h, wd, ci) = (x.dims[0], x.dims[1], x.dims[2], x.dims[3]);
+        let (co, ci2, k) = (w.dims[0], w.dims[1], w.dims[2]);
+        assert_eq!(ci, ci2);
+        let ho = (h - k) / stride + 1;
+        let wo = (wd - k) / stride + 1;
+        let mut y = Tensor::zeros(&[b, ho, wo, co]);
+        for n in 0..b {
+            for p in 0..ho {
+                for q in 0..wo {
+                    for o in 0..co {
+                        let mut acc = 0.0;
+                        for c in 0..ci {
+                            for a in 0..k {
+                                for bb in 0..k {
+                                    acc += x.at4(n, p * stride + a, q * stride + bb, c)
+                                        * w.at4(o, c, a, bb);
+                                }
+                            }
+                        }
+                        y.set4(n, p, q, o, acc);
+                    }
+                }
+            }
+        }
+        y
+    }
+
+    #[test]
+    fn merge_matches_composition() {
+        let mut r = Rng::new(1);
+        for &(ci, c, co, k1, k2, s1) in
+            &[(2, 3, 2, 3, 3, 1), (1, 2, 3, 1, 3, 1), (2, 2, 2, 3, 1, 2), (3, 1, 2, 5, 3, 2)]
+        {
+            let km = (k2 - 1) * s1 + k1;
+            let h = km + 4 * s1;
+            let x = randt(&mut r, &[2, h, h, ci]);
+            let w1 = randt(&mut r, &[c, ci, k1, k1]);
+            let w2 = randt(&mut r, &[co, c, k2, k2]);
+            let composed = conv2d_valid(&conv2d_valid(&x, &w1, s1), &w2, 1);
+            let wm = merge_kernels(&w1, &w2, s1);
+            assert_eq!(wm.dims[2], km);
+            let merged = conv2d_valid(&x, &wm, s1);
+            assert!(composed.max_abs_diff(&merged) < 1e-3,
+                "diff {}", composed.max_abs_diff(&merged));
+        }
+    }
+
+    #[test]
+    fn bias_propagates() {
+        let mut r = Rng::new(2);
+        let (ci, c, co, k1, k2) = (2, 3, 2, 3, 3);
+        let h = 10;
+        let x = randt(&mut r, &[1, h, h, ci]);
+        let w1 = randt(&mut r, &[c, ci, k1, k1]);
+        let w2 = randt(&mut r, &[co, c, k2, k2]);
+        let b1: Vec<f32> = (0..c).map(|_| r.normal()).collect();
+        let b2: Vec<f32> = (0..co).map(|_| r.normal()).collect();
+        let mut y1 = conv2d_valid(&x, &w1, 1);
+        for n in 0..y1.data.len() {
+            y1.data[n] += b1[n % c];
+        }
+        let mut y2 = conv2d_valid(&y1, &w2, 1);
+        for n in 0..y2.data.len() {
+            y2.data[n] += b2[n % co];
+        }
+        let wm = merge_kernels(&w1, &w2, 1);
+        let bm = merge_bias(&w2, &b1, &b2);
+        let mut ym = conv2d_valid(&x, &wm, 1);
+        for n in 0..ym.data.len() {
+            ym.data[n] += bm[n % co];
+        }
+        assert!(y2.max_abs_diff(&ym) < 1e-3);
+    }
+
+    #[test]
+    fn dirac_is_identity() {
+        let mut r = Rng::new(3);
+        let w = randt(&mut r, &[3, 2, 3, 3]);
+        let id_out = dirac(3, 1);
+        let m = merge_kernels(&w, &id_out, 1);
+        assert!(m.max_abs_diff(&w) < 1e-6);
+        let id_in = dirac(2, 1);
+        let m2 = merge_kernels(&id_in, &w, 1);
+        assert!(m2.max_abs_diff(&w) < 1e-6);
+    }
+
+    #[test]
+    fn depthwise_roundtrip() {
+        let mut r = Rng::new(4);
+        let wdw = randt(&mut r, &[4, 1, 3, 3]);
+        let dense = expand_depthwise(&wdw);
+        let back = extract_depthwise(&dense, 0.0);
+        assert!(back.max_abs_diff(&wdw) < 1e-9);
+    }
+
+    #[test]
+    fn bn_fold_matches_normalization() {
+        let mut r = Rng::new(5);
+        let w = randt(&mut r, &[3, 2, 3, 3]);
+        let b: Vec<f32> = (0..3).map(|_| r.normal()).collect();
+        let gamma: Vec<f32> = (0..3).map(|_| r.range(0.5, 1.5)).collect();
+        let beta: Vec<f32> = (0..3).map(|_| r.normal()).collect();
+        let mean: Vec<f32> = (0..3).map(|_| r.normal()).collect();
+        let var: Vec<f32> = (0..3).map(|_| r.range(0.2, 2.0)).collect();
+        let x = randt(&mut r, &[1, 6, 6, 2]);
+        let y = conv2d_valid(&x, &w, 1);
+        let mut want = y.clone();
+        for n in 0..want.data.len() {
+            let o = n % 3;
+            let v = y.data[n] + b[o];
+            want.data[n] = gamma[o] * (v - mean[o]) / (var[o] + 1e-5).sqrt() + beta[o];
+        }
+        let (wf, bf) = fold_batchnorm(&w, &b, &gamma, &beta, &mean, &var, 1e-5);
+        let mut got = conv2d_valid(&x, &wf, 1);
+        for n in 0..got.data.len() {
+            got.data[n] += bf[n % 3];
+        }
+        assert!(got.max_abs_diff(&want) < 1e-3);
+    }
+
+    #[test]
+    fn span_merge_toy_residual() {
+        // toy spec from ir::tests: conv2-conv3 residual block, all kept;
+        // merged (1,3] must equal conv3(conv2(x)) + x on VALID interior.
+        let sp = crate::ir::tests::toy_spec_with_params();
+        let (spec, flat) = (&sp.0, &sp.1);
+        let kept: BTreeSet<usize> = [2, 3].into_iter().collect();
+        let m = span_merge(spec, flat, 1, 3, &kept);
+        assert_eq!(m.k, 5); // 1 + 2 + 2
+        assert_eq!(m.stride, 1);
+        let mut r = Rng::new(9);
+        let x = randt(&mut r, &[1, 9, 9, 4]);
+        let w2 = Tensor::new(vec![4, 4, 3, 3],
+            spec.param_slice(flat, "conv2.w").to_vec());
+        let b2 = spec.param_slice(flat, "conv2.b");
+        let w3 = Tensor::new(vec![4, 4, 3, 3],
+            spec.param_slice(flat, "conv3.w").to_vec());
+        let b3 = spec.param_slice(flat, "conv3.b");
+        let mut y1 = conv2d_valid(&x, &w2, 1);
+        for n in 0..y1.data.len() {
+            y1.data[n] += b2[n % 4];
+        }
+        let mut y2 = conv2d_valid(&y1, &w3, 1);
+        for n in 0..y2.data.len() {
+            y2.data[n] += b3[n % 4];
+        }
+        // add the residual (center crop of x by 2 on each side)
+        let mut want = y2.clone();
+        for n in 0..1 {
+            for p in 0..5 {
+                for q in 0..5 {
+                    for c in 0..4 {
+                        let v = want.at4(n, p, q, c) + x.at4(n, p + 2, q + 2, c);
+                        want.set4(n, p, q, c, v);
+                    }
+                }
+            }
+        }
+        let mut got = conv2d_valid(&x, &m.weight, 1);
+        for n in 0..got.data.len() {
+            got.data[n] += m.bias[n % 4];
+        }
+        assert!(got.max_abs_diff(&want) < 1e-3,
+            "residual fold diff {}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn span_merge_drops_layer_to_identity() {
+        let sp = crate::ir::tests::toy_spec_with_params();
+        let (spec, flat) = (&sp.0, &sp.1);
+        // drop conv2 (kept = {3}): merged (1,3] = conv3 + dirac (residual)
+        let kept: BTreeSet<usize> = [3].into_iter().collect();
+        let m = span_merge(spec, flat, 1, 3, &kept);
+        assert_eq!(m.k, 3); // only conv3 contributes
+        let w3 = Tensor::new(vec![4, 4, 3, 3],
+            spec.param_slice(flat, "conv3.w").to_vec());
+        let with_dirac = {
+            let mut t = embed_kernel(&w3, 3);
+            let d = dirac(4, 3);
+            for (a, b) in t.data.iter_mut().zip(&d.data) {
+                *a += *b;
+            }
+            t
+        };
+        assert!(m.weight.max_abs_diff(&with_dirac) < 1e-5);
+    }
+}

@@ -1,0 +1,260 @@
+//! High-level handle over one AOT-compiled model family: the spec, the
+//! gated-graph executables, and typed step/eval wrappers.
+//!
+//! Everything runs through the *single* gated graph (DESIGN.md §4): the
+//! coordinator changes (A, C) configurations by feeding gate vectors, so
+//! the table-construction hot loop never recompiles.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::ir::{Gates, Spec, Task};
+use crate::runtime::{Exec, Runtime};
+use crate::util::json::Json;
+use crate::util::tensor::Tensor;
+
+/// Parsed artifacts/manifest.json.
+pub struct Manifest {
+    pub json: Json,
+}
+
+impl Manifest {
+    pub fn load(root: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(root.join("manifest.json"))
+            .context("manifest.json (run `make artifacts`)")?;
+        Ok(Manifest { json: Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))? })
+    }
+
+    pub fn model_art(&self, model: &str, name: &str) -> Result<String> {
+        Ok(self
+            .json
+            .req("models")
+            .get(model)
+            .with_context(|| format!("model {model} not in manifest"))?
+            .req(name)
+            .as_str()
+            .with_context(|| format!("artifact {model}/{name}"))?
+            .to_string())
+    }
+
+    /// Conv module path for a shape signature + variant, if emitted.
+    pub fn conv_art(&self, sig: &str, variant: &str) -> Option<String> {
+        self.json
+            .req("convs")
+            .get(sig)?
+            .get(variant)?
+            .as_str()
+            .map(String::from)
+    }
+
+    pub fn ew_art(&self, key: &str) -> Option<String> {
+        self.json.req("ew").get(key)?.as_str().map(String::from)
+    }
+
+    pub fn conv_sigs(&self) -> Vec<String> {
+        self.json
+            .req("convs")
+            .as_obj()
+            .map(|m| m.keys().cloned().collect())
+            .unwrap_or_default()
+    }
+}
+
+/// The canonical conv-signature key (must match aot.py::sig_str).
+pub fn sig_str(
+    b: usize,
+    h: usize,
+    w: usize,
+    ci: usize,
+    co: usize,
+    k: usize,
+    s: usize,
+    dw: bool,
+) -> String {
+    format!("b{b}h{h}w{w}i{ci}o{co}k{k}s{s}{}", if dw { "dw" } else { "" })
+}
+
+/// One batch of training/eval data, already in model layout.
+#[derive(Debug, Clone)]
+pub enum Batch {
+    /// x: [B,H,W,C], y: one-hot [B,num_classes]
+    Classify { x: Tensor, y: Tensor },
+    /// x0, eps: [B,H,W,C]; t, abar: [B]
+    Diffusion { x0: Tensor, eps: Tensor, t: Tensor, abar: Tensor },
+}
+
+pub struct Model {
+    pub spec: Spec,
+    pub rt: Arc<Runtime>,
+    pub name: String,
+    fwd: Arc<Exec>,
+    loss_eval: Arc<Exec>,
+    train_step: Arc<Exec>,
+    distill_step: Option<Arc<Exec>>,
+    embed: Option<Arc<Exec>>,
+    sample_step: Option<Arc<Exec>>,
+    pub init: Vec<f32>,
+}
+
+impl Model {
+    pub fn load(rt: Arc<Runtime>, man: &Manifest, name: &str) -> Result<Model> {
+        let spec = Spec::load(&rt.root().join(man.model_art(name, "spec")?))?;
+        let init =
+            Tensor::read_f32_file(&rt.root().join(man.model_art(name, "init")?))?;
+        anyhow::ensure!(init.len() == spec.param_count, "init size mismatch");
+        let fwd = rt.load(&man.model_art(name, "fwd")?)?;
+        let loss_eval = rt.load(&man.model_art(name, "loss_eval")?)?;
+        let train_step = rt.load(&man.model_art(name, "train_step")?)?;
+        let distill_step = match spec.task {
+            Task::Classify => Some(rt.load(&man.model_art(name, "distill_step")?)?),
+            Task::Diffusion => None,
+        };
+        let embed = match spec.task {
+            Task::Classify => Some(rt.load(&man.model_art(name, "embed")?)?),
+            Task::Diffusion => None,
+        };
+        let sample_step = match spec.task {
+            Task::Diffusion => Some(rt.load(&man.model_art(name, "sample_step")?)?),
+            Task::Classify => None,
+        };
+        Ok(Model {
+            spec,
+            rt,
+            name: name.to_string(),
+            fwd,
+            loss_eval,
+            train_step,
+            distill_step,
+            embed,
+            sample_step,
+            init,
+        })
+    }
+
+    fn gate_tensors(&self, g: &Gates) -> (Tensor, Tensor, Tensor) {
+        let l = self.spec.len();
+        (
+            Tensor::new(vec![l], g.act.clone()),
+            Tensor::new(vec![l], g.conv.clone()),
+            Tensor::new(vec![l], g.gn.clone()),
+        )
+    }
+
+    /// Forward pass: logits (classify) or predicted noise (diffusion).
+    pub fn forward(&self, params: &[f32], g: &Gates, batch: &Batch) -> Result<Tensor> {
+        let p = Tensor::new(vec![params.len()], params.to_vec());
+        let (ga, gc, gn) = self.gate_tensors(g);
+        let out = match batch {
+            Batch::Classify { x, .. } => self.fwd.run(&[&p, &ga, &gc, &gn, x])?,
+            Batch::Diffusion { x0, t, .. } => {
+                self.fwd.run(&[&p, &ga, &gc, &gn, x0, t])?
+            }
+        };
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    /// (loss, metric): metric is accuracy for classify, negative diffusion
+    /// loss for diffusion (the paper's Perf definition, Sec. 3.1).
+    pub fn eval(&self, params: &[f32], g: &Gates, batch: &Batch) -> Result<(f32, f32)> {
+        let p = Tensor::new(vec![params.len()], params.to_vec());
+        let (ga, gc, gn) = self.gate_tensors(g);
+        let out = match batch {
+            Batch::Classify { x, y } => {
+                self.loss_eval.run(&[&p, &ga, &gc, &gn, x, y])?
+            }
+            Batch::Diffusion { x0, eps, t, abar } => {
+                self.loss_eval.run(&[&p, &ga, &gc, &gn, x0, eps, t, abar])?
+            }
+        };
+        Ok((out[0].data[0], out[1].data[0]))
+    }
+
+    /// One SGD-momentum step; updates `params` and `mom` in place.
+    pub fn step(
+        &self,
+        params: &mut Vec<f32>,
+        mom: &mut Vec<f32>,
+        g: &Gates,
+        batch: &Batch,
+        lr: f32,
+    ) -> Result<(f32, f32)> {
+        let p = Tensor::new(vec![params.len()], std::mem::take(params));
+        let m = Tensor::new(vec![mom.len()], std::mem::take(mom));
+        let (ga, gc, gn) = self.gate_tensors(g);
+        let lrt = Tensor::scalar(lr);
+        let out = match batch {
+            Batch::Classify { x, y } => {
+                self.train_step.run(&[&p, &m, &ga, &gc, &gn, x, y, &lrt])?
+            }
+            Batch::Diffusion { x0, eps, t, abar } => self
+                .train_step
+                .run(&[&p, &m, &ga, &gc, &gn, x0, eps, t, abar, &lrt])?,
+        };
+        let mut it = out.into_iter();
+        *params = it.next().unwrap().data;
+        *mom = it.next().unwrap().data;
+        let loss = it.next().unwrap().data[0];
+        let metric = it.next().unwrap().data[0];
+        Ok((loss, metric))
+    }
+
+    /// One KD step (teacher = pristine parameters).
+    pub fn distill(
+        &self,
+        teacher: &[f32],
+        params: &mut Vec<f32>,
+        mom: &mut Vec<f32>,
+        g: &Gates,
+        batch: &Batch,
+        lr: f32,
+    ) -> Result<(f32, f32)> {
+        let ds = self
+            .distill_step
+            .as_ref()
+            .context("distill_step only exists for classifiers")?;
+        let (x, y) = match batch {
+            Batch::Classify { x, y } => (x, y),
+            _ => anyhow::bail!("distill needs a classify batch"),
+        };
+        let tp = Tensor::new(vec![teacher.len()], teacher.to_vec());
+        let p = Tensor::new(vec![params.len()], std::mem::take(params));
+        let m = Tensor::new(vec![mom.len()], std::mem::take(mom));
+        let (ga, gc, gn) = self.gate_tensors(g);
+        let lrt = Tensor::scalar(lr);
+        let out = ds.run(&[&tp, &p, &m, &ga, &gc, &gn, x, y, &lrt])?;
+        let mut it = out.into_iter();
+        *params = it.next().unwrap().data;
+        *mom = it.next().unwrap().data;
+        Ok((it.next().unwrap().data[0], it.next().unwrap().data[0]))
+    }
+
+    /// Penultimate features (FDD embedder).
+    pub fn embed(&self, params: &[f32], g: &Gates, x: &Tensor) -> Result<Tensor> {
+        let e = self.embed.as_ref().context("embed is classifier-only")?;
+        let p = Tensor::new(vec![params.len()], params.to_vec());
+        let (ga, gc, gn) = self.gate_tensors(g);
+        Ok(e.run(&[&p, &ga, &gc, &gn, x])?.into_iter().next().unwrap())
+    }
+
+    /// One DDIM step on the gated graph.
+    pub fn sample_step(
+        &self,
+        params: &[f32],
+        g: &Gates,
+        xt: &Tensor,
+        t: &Tensor,
+        abar_t: &Tensor,
+        abar_prev: &Tensor,
+    ) -> Result<Tensor> {
+        let s = self.sample_step.as_ref().context("diffusion-only")?;
+        let p = Tensor::new(vec![params.len()], params.to_vec());
+        let (ga, gc, gn) = self.gate_tensors(g);
+        Ok(s
+            .run(&[&p, &ga, &gc, &gn, xt, t, abar_t, abar_prev])?
+            .into_iter()
+            .next()
+            .unwrap())
+    }
+}

@@ -1,0 +1,87 @@
+//! Experiment reporting: renders paper-style tables and appends them to
+//! EXPERIMENTS.md with a stable section marker per experiment, so reruns
+//! replace rather than duplicate.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::bench::TableOut;
+use crate::pipeline::Compressed;
+
+/// Replace (or append) the section `<!-- exp:ID -->...<!-- /exp:ID -->` in
+/// EXPERIMENTS.md with `body`.
+pub fn record(path: &Path, id: &str, body: &str) -> Result<()> {
+    let begin = format!("<!-- exp:{id} -->");
+    let end = format!("<!-- /exp:{id} -->");
+    let existing = std::fs::read_to_string(path).unwrap_or_default();
+    let section = format!("{begin}\n{}\n{end}", body.trim_end());
+    let updated = if let (Some(b), Some(e)) = (existing.find(&begin), existing.find(&end)) {
+        let mut s = existing.clone();
+        s.replace_range(b..e + end.len(), &section);
+        s
+    } else {
+        let mut s = existing;
+        if !s.is_empty() && !s.ends_with('\n') {
+            s.push('\n');
+        }
+        s.push_str(&section);
+        s.push('\n');
+        s
+    };
+    std::fs::write(path, updated)?;
+    Ok(())
+}
+
+/// Format one Compressed result as a paper-table row.
+pub fn row(c: &Compressed, orig_metric: f32, _orig_eager: f64, _orig_fused: f64,
+           classify: bool) -> Vec<String> {
+    let metric = if classify {
+        format!("{:.2}", c.merged_metric * 100.0)
+    } else {
+        // diffusion: report FDD-style "lower is better" proxy = positive loss
+        format!("{:.4}", -c.merged_metric)
+    };
+    vec![
+        format!("{}-{:.0}%", c.method, c.budget_frac * 100.0),
+        metric,
+        // contemporaneous baselines (measured back-to-back with the plan)
+        format!("{:.2}x", c.base_eager_ms / c.lat_eager_ms),
+        format!("{:.2}x", c.base_fused_ms / c.lat_fused_ms),
+        format!("{}", c.depth),
+        format!("{:.2}", (c.merged_metric - orig_metric) * if classify { 100.0 } else { 1.0 }),
+    ]
+}
+
+/// Standard header for compression tables.
+pub fn compression_table(title: &str, classify: bool) -> TableOut {
+    let metric = if classify { "Acc (%) ↑" } else { "DiffLoss ↓" };
+    TableOut::new(
+        title,
+        &[
+            "Network", metric, "Eager Speed-up ↑", "Fused Speed-up ↑",
+            "Depth", "Δ vs orig",
+        ],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_replaces_section() {
+        let dir = std::env::temp_dir().join("lm_report_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("EXPERIMENTS.md");
+        let _ = std::fs::remove_file(&p);
+        record(&p, "t1", "first body").unwrap();
+        record(&p, "t2", "other").unwrap();
+        record(&p, "t1", "second body").unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert!(s.contains("second body"));
+        assert!(!s.contains("first body"));
+        assert!(s.contains("other"));
+        assert_eq!(s.matches("exp:t1").count(), 2); // begin + end markers
+    }
+}

@@ -1,0 +1,188 @@
+//! PJRT runtime — loads AOT HLO-text artifacts and executes them on the
+//! CPU PJRT client.  This is the only module that touches the `xla` crate;
+//! everything above it speaks `util::tensor::Tensor`.
+//!
+//! Pattern from /opt/xla-example/load_hlo: HLO *text* -> HloModuleProto
+//! (text parser reassigns 64-bit instruction ids) -> XlaComputation ->
+//! client.compile -> execute.  All artifacts are lowered with
+//! `return_tuple=True`, so every output is a 1+-tuple literal.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::util::tensor::Tensor;
+
+/// A compiled executable plus its artifact identity.
+pub struct Exec {
+    exe: xla::PjRtLoadedExecutable,
+    client: xla::PjRtClient,
+    pub path: PathBuf,
+}
+
+// SAFETY: PJRT executables and clients are thread-safe in the underlying
+// C++ runtime (PJRT mandates thread-safe Execute); the Rust wrapper only
+// lacks the marker because it holds raw pointers.  We serialize *compiles*
+// through the cache mutex and allow concurrent executes, matching PJRT's
+// documented contract.
+unsafe impl Send for Exec {}
+unsafe impl Sync for Exec {}
+
+impl Exec {
+    /// Execute with host tensors; returns the decomposed output tuple.
+    ///
+    /// Inputs go through `execute_b` with Rust-owned device buffers: the
+    /// crate's literal-based `execute` leaks every input device buffer
+    /// (xla_rs.cc `buffer.release()` with no reclamation), which at
+    /// training-loop rates exhausts memory in minutes.  Buffers created
+    /// here are freed by their Drop impl once the call returns.
+    pub fn run(&self, args: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let bufs: Vec<xla::PjRtBuffer> = args
+            .iter()
+            .map(|t| {
+                self.client
+                    .buffer_from_host_buffer::<f32>(&t.data, &t.dims, None)
+                    .map_err(|e| anyhow::anyhow!("host->device: {e:?}"))
+            })
+            .collect::<Result<_>>()?;
+        let out_bufs = self.exe.execute_b::<xla::PjRtBuffer>(&bufs)?;
+        let mut out = out_bufs[0][0].to_literal_sync()?;
+        let parts = out.decompose_tuple()?;
+        parts.into_iter().map(from_literal).collect()
+    }
+
+    /// Execute and return only wall time (for the latency tables); the
+    /// output is materialized to host to include transfer like the
+    /// paper's PyTorch-format protocol does.
+    pub fn run_timed(&self, args: &[&Tensor]) -> Result<(Vec<Tensor>, f64)> {
+        let t0 = Instant::now();
+        let out = self.run(args)?;
+        Ok((out, t0.elapsed().as_secs_f64() * 1e3))
+    }
+}
+
+fn to_literal(t: &Tensor) -> xla::Literal {
+    let lit = xla::Literal::vec1(&t.data[..]);
+    if t.dims.is_empty() {
+        // scalar: reshape to rank-0
+        lit.reshape(&[]).expect("scalar reshape")
+    } else {
+        let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
+        lit.reshape(&dims).expect("reshape")
+    }
+}
+
+fn from_literal(lit: xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit.to_vec::<f32>()?;
+    Ok(Tensor::new(dims, data))
+}
+
+/// Client + executable cache.  Compilation happens once per artifact path;
+/// executes are lock-free (Arc-shared Execs).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    root: PathBuf,
+    cache: Mutex<HashMap<PathBuf, Arc<Exec>>>,
+    pub compile_count: Mutex<usize>,
+}
+
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    /// `root` is the artifacts directory (contains manifest.json).
+    pub fn new(root: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            root: root.to_path_buf(),
+            cache: Mutex::new(HashMap::new()),
+            compile_count: Mutex::new(0),
+        })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Load + compile an artifact by manifest-relative path, with caching.
+    pub fn load(&self, rel: &str) -> Result<Arc<Exec>> {
+        let path = self.root.join(rel);
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(e) = cache.get(&path) {
+                return Ok(e.clone());
+            }
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("utf-8 path")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {path:?}: {e:?}"))?;
+        let exec = Arc::new(Exec {
+            exe,
+            client: self.client.clone(),
+            path: path.clone(),
+        });
+        *self.compile_count.lock().unwrap() += 1;
+        self.cache.lock().unwrap().insert(path, exec.clone());
+        Ok(exec)
+    }
+
+    /// Number of executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Drop compiled executables (frees device memory between phases).
+    pub fn clear_cache(&self) {
+        self.cache.lock().unwrap().clear();
+    }
+}
+
+/// Latency statistics from the measurement protocol.
+#[derive(Debug, Clone, Copy)]
+pub struct LatencyStats {
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub iters: usize,
+}
+
+/// The paper's measurement protocol (App. C): warm up, then average over
+/// timed iterations.  Counts are configurable because the paper's
+/// 300/200 split is overkill for CPU microbenches in CI.
+pub fn measure(
+    exec: &Exec,
+    args: &[&Tensor],
+    warmup: usize,
+    iters: usize,
+) -> Result<LatencyStats> {
+    for _ in 0..warmup {
+        exec.run(args)?;
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        exec.run(args)?;
+        times.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    Ok(LatencyStats {
+        mean_ms: mean,
+        p50_ms: times[times.len() / 2],
+        p95_ms: times[((times.len() as f64 * 0.95) as usize).min(times.len() - 1)],
+        iters,
+    })
+}

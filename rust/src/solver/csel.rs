@@ -1,0 +1,196 @@
+//! Eq. (3): the kept-conv selection \hat{C}_{ijk}.
+//!
+//! Among subsets C_ij ⊆ (i, j] with  1 + Σ_{l∈C_ij} inc(l) = k  and
+//! R ∩ (i, j] ⊆ C_ij, keep the one maximizing Σ ||theta_l||_1.  Here
+//! inc(l) = (Ker(theta_l) - 1) · stride_prefix (App. A dilation), so this
+//! is an exact-sum knapsack solved by DP over (layer, kernel budget) —
+//! "computing C~_ijk has a negligible cost" (Sec. 3.2).
+
+use std::collections::BTreeSet;
+
+use crate::ir::Spec;
+
+/// l1 norms of each conv layer's weight, indexed by 1-based layer id.
+pub fn layer_l1_norms(spec: &Spec, flat: &[f32]) -> Vec<f64> {
+    let mut out = vec![0.0; spec.len() + 1];
+    for c in &spec.convs {
+        let w = spec.param_slice(flat, &format!("conv{}.w", c.idx));
+        out[c.idx] = w.iter().map(|x| x.abs() as f64).sum();
+    }
+    out
+}
+
+/// Solve Eq. (3) exactly: returns the kept set achieving merged kernel
+/// size exactly `k` over span (i, j], or None if `k` is unachievable.
+pub fn select(
+    spec: &Spec,
+    l1: &[f64],
+    i: usize,
+    j: usize,
+    k: usize,
+) -> Option<BTreeSet<usize>> {
+    let target = k.checked_sub(1)?;
+
+    // forced (irreducible) layers contribute unconditionally
+    let mut forced_sum = 0usize;
+    let mut optional: Vec<(usize, usize)> = Vec::new(); // (layer, inc)
+    let mut kept: BTreeSet<usize> = BTreeSet::new();
+    for l in (i + 1)..=j {
+        let inc = spec.k_increment(i, l);
+        if !spec.conv(l).conv_gated {
+            forced_sum += inc;
+            kept.insert(l);
+        } else {
+            optional.push((l, inc));
+        }
+    }
+    let rem = target.checked_sub(forced_sum)?;
+
+    // DP over optional layers: best[s] = (sum_l1, chosen bitset path)
+    // Reconstruct via parent pointers to keep memory linear in |optional|·rem.
+    let n = optional.len();
+    let mut best = vec![vec![f64::NEG_INFINITY; rem + 1]; n + 1];
+    let mut take = vec![vec![false; rem + 1]; n + 1];
+    best[0][0] = 0.0;
+    for (t, &(l, inc)) in optional.iter().enumerate() {
+        for s in 0..=rem {
+            // skip layer l (replace by theta_id)
+            let mut b = best[t][s];
+            // keep layer l
+            if s >= inc && best[t][s - inc] != f64::NEG_INFINITY {
+                let v = best[t][s - inc] + l1[l];
+                if v > b {
+                    b = v;
+                    take[t + 1][s] = true;
+                }
+            }
+            best[t + 1][s] = b;
+        }
+    }
+    if best[n][rem] == f64::NEG_INFINITY {
+        return None;
+    }
+    // reconstruct
+    let mut s = rem;
+    for t in (0..n).rev() {
+        if take[t + 1][s] {
+            let (l, inc) = optional[t];
+            kept.insert(l);
+            s -= inc;
+        }
+    }
+    debug_assert_eq!(s, 0);
+    Some(kept)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::tests::toy_spec;
+    use crate::util::prop::check_res;
+    use crate::util::rng::Rng;
+
+    fn norms(n: usize, rng: &mut Rng) -> Vec<f64> {
+        (0..=n).map(|_| rng.uniform() * 10.0).collect()
+    }
+
+    #[test]
+    fn selects_exact_kernel_sum() {
+        let sp = toy_spec();
+        let l1 = vec![0.0, 1.0, 5.0, 2.0, 3.0];
+        // span (1,4]: optional layers 2,3 (inc 2 each), 4 (inc 0)
+        // k=3 -> keep exactly one of {2,3}; layer 2 has higher l1.
+        let kept = select(&sp, &l1, 1, 4, 3).unwrap();
+        assert!(kept.contains(&2) && !kept.contains(&3));
+        // layer 4 has inc 0 and positive l1 -> keeping it is free mass
+        assert!(kept.contains(&4));
+    }
+
+    #[test]
+    fn unachievable_kernel_returns_none() {
+        let sp = toy_spec();
+        let l1 = vec![0.0; 5];
+        assert!(select(&sp, &l1, 1, 4, 4).is_none()); // even k impossible
+        assert!(select(&sp, &l1, 1, 4, 9).is_none()); // too large
+    }
+
+    #[test]
+    fn forced_layers_always_kept() {
+        let sp = toy_spec();
+        let l1 = vec![0.0, 0.0, 1.0, 1.0, 1.0];
+        // span (0,4] includes irreducible layer 1 (inc 2)
+        for &k in &[3usize, 5, 7] {
+            if let Some(kept) = select(&sp, &l1, 0, 4, k) {
+                assert!(kept.contains(&1), "R ⊆ C violated at k={k}");
+            }
+        }
+        assert!(select(&sp, &l1, 0, 4, 1).is_none(),
+            "k=1 cannot drop the irreducible stem");
+    }
+
+    /// Exhaustive optimality check against brute force on the toy spec.
+    #[test]
+    fn matches_bruteforce() {
+        let sp = toy_spec();
+        check_res("csel == bruteforce", 200, |r| norms(4, r), |l1| {
+            for (i, j) in [(0usize, 4usize), (1, 4), (1, 3), (3, 4)] {
+                if !sp.valid_span(i, j) {
+                    continue;
+                }
+                for k in sp.kernel_options(i, j) {
+                    let got = select(&sp, l1, i, j, k);
+                    let want = brute(&sp, l1, i, j, k);
+                    match (got, want) {
+                        (None, None) => {}
+                        (Some(g), Some((wsum, _))) => {
+                            let gsum: f64 =
+                                g.iter().filter(|l| sp.conv(**l).conv_gated)
+                                    .map(|l| l1[*l]).sum();
+                            if (gsum - wsum).abs() > 1e-9 {
+                                return Err(format!(
+                                    "span ({i},{j}] k={k}: got {gsum} want {wsum}"));
+                            }
+                        }
+                        (g, w) => {
+                            return Err(format!(
+                                "span ({i},{j}] k={k}: feasibility mismatch {g:?} vs {w:?}"))
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    fn brute(
+        spec: &Spec,
+        l1: &[f64],
+        i: usize,
+        j: usize,
+        k: usize,
+    ) -> Option<(f64, BTreeSet<usize>)> {
+        let opts: Vec<usize> =
+            ((i + 1)..=j).filter(|l| spec.conv(*l).conv_gated).collect();
+        let forced: usize = ((i + 1)..=j)
+            .filter(|l| !spec.conv(*l).conv_gated)
+            .map(|l| spec.k_increment(i, l))
+            .sum();
+        let mut best: Option<(f64, BTreeSet<usize>)> = None;
+        for mask in 0..(1u32 << opts.len()) {
+            let mut sum = forced;
+            let mut v = 0.0;
+            let mut set = BTreeSet::new();
+            for (t, &l) in opts.iter().enumerate() {
+                if mask & (1 << t) != 0 {
+                    sum += spec.k_increment(i, l);
+                    v += l1[l];
+                    set.insert(l);
+                }
+            }
+            if 1 + sum == k && best.as_ref().map_or(true, |(b, _)| v > *b) {
+                best = Some((v, set));
+            }
+        }
+        best
+    }
+}

@@ -1,0 +1,75 @@
+//! The *Depth* baseline (Kim et al. 2023): depth compression that only
+//! removes activation layers and keeps every convolution (C = [L]).
+//!
+//! In our formulation this is Algorithm 1 restricted to arcs whose kernel
+//! size is the *full* merged kernel k_full(i, j) = 1 + Σ_{l∈(i,j]} inc(l)
+//! — precisely the restriction whose kernel-size growth Fig. 1 of the
+//! paper diagnoses.  Spans whose k_full exceeds K_MAX are unavailable
+//! (they are never latency-optimal; DESIGN.md §2).
+
+use crate::ir::Spec;
+use crate::solver::dp::{self, DpInput, SpanArc};
+
+/// Full merged kernel size of span (i, j] when every conv is kept.
+pub fn k_full(spec: &Spec, i: usize, j: usize) -> usize {
+    1 + ((i + 1)..=j).map(|l| spec.k_increment(i, l)).sum::<usize>()
+}
+
+/// Restrict a LayerMerge arc set to the Depth baseline's search space.
+pub fn restrict_arcs(spec: &Spec, arcs: &[Vec<SpanArc>]) -> Vec<Vec<SpanArc>> {
+    let mut out = vec![Vec::new(); arcs.len()];
+    for (j, list) in arcs.iter().enumerate() {
+        for arc in list {
+            if j >= 1 && arc.k == k_full(spec, arc.i, j) {
+                out[j].push(*arc);
+            }
+        }
+    }
+    out
+}
+
+/// Solve the Depth baseline over the shared tables.
+pub fn solve(
+    spec: &Spec,
+    l_max: usize,
+    budget_ms: f64,
+    p: usize,
+    arcs: &[Vec<SpanArc>],
+) -> Option<dp::DpSolution> {
+    let restricted = restrict_arcs(spec, arcs);
+    dp::solve(&DpInput { l_max, budget_ms, p, arcs: restricted })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::tests::toy_spec;
+
+    #[test]
+    fn k_full_matches_eq1() {
+        let sp = toy_spec();
+        // layers 2..=4 have kernels 3,3,1 -> k_full(1,4) = 1 + 2 + 2 + 0
+        assert_eq!(k_full(&sp, 1, 4), 5);
+        assert_eq!(k_full(&sp, 0, 4), 7); // stem k=3 adds 2
+        assert_eq!(k_full(&sp, 3, 4), 1); // only the 1x1
+    }
+
+    #[test]
+    fn restriction_drops_pruned_kernels() {
+        let sp = toy_spec();
+        let arcs = vec![
+            vec![],
+            vec![SpanArc { i: 0, k: 3, lat_ms: 1.0, imp: 1.0 }],
+            vec![],
+            vec![],
+            vec![
+                SpanArc { i: 1, k: 3, lat_ms: 1.0, imp: 9.0 }, // pruned-conv arc
+                SpanArc { i: 1, k: 5, lat_ms: 2.0, imp: 1.0 }, // full-kernel arc
+            ],
+        ];
+        let r = restrict_arcs(&sp, &arcs);
+        assert_eq!(r[4].len(), 1);
+        assert_eq!(r[4][0].k, 5);
+        assert_eq!(r[1].len(), 1); // single-layer span: k == k_full trivially
+    }
+}

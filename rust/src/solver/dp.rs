@@ -1,0 +1,241 @@
+//! Algorithm 1 — the exact DP for the surrogate Problem (5).
+//!
+//! State: M[l][t] = max importance sum covering layers 1..l within
+//! discretized latency budget t (Eq. 6/7).  Latencies are rounded *down*
+//! to multiples of T0/P, matching the paper's protocol (App. C: multiply
+//! by 10 and floor, i.e. P = 10·T0).  Theorem 3.1 (optimality) is pinned
+//! by `matches_bruteforce` below.
+
+use std::time::Instant;
+
+/// One feasible merged layer: span (i, j] realized at kernel size k.
+#[derive(Debug, Clone, Copy)]
+pub struct SpanArc {
+    pub i: usize,
+    pub k: usize,
+    pub lat_ms: f64,
+    pub imp: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct DpInput {
+    pub l_max: usize,
+    /// Latency budget for the DP (T0 minus the model's fixed costs).
+    pub budget_ms: f64,
+    /// Discretization level P.
+    pub p: usize,
+    /// arcs[j] (1-based j, index 0 unused) = feasible spans ending at j.
+    pub arcs: Vec<Vec<SpanArc>>,
+}
+
+#[derive(Debug, Clone)]
+pub struct DpSolution {
+    /// Interior boundaries (the kept-activation set A*, ascending).
+    pub a: Vec<usize>,
+    /// Chosen spans (i, j, k).
+    pub spans: Vec<(usize, usize, usize)>,
+    pub objective: f64,
+    pub latency_est: f64,
+    pub solve_ms: f64,
+}
+
+/// Solve Problem (5). Returns None when no full cover fits the budget.
+pub fn solve(input: &DpInput) -> Option<DpSolution> {
+    let t0 = Instant::now();
+    let (l_max, p) = (input.l_max, input.p);
+    assert!(p > 0 && input.arcs.len() == l_max + 1);
+    let unit = input.budget_ms / p as f64;
+    if unit <= 0.0 {
+        return None;
+    }
+    let disc = |ms: f64| -> usize { (ms / unit).floor() as usize };
+
+    const NEG: f64 = f64::NEG_INFINITY;
+    // M[l][t]; parent[l][t] = (l', k, t') for reconstruction
+    let mut m = vec![vec![NEG; p + 1]; l_max + 1];
+    let mut parent = vec![vec![(usize::MAX, 0usize, 0usize); p + 1]; l_max + 1];
+    for t in 0..=p {
+        m[0][t] = 0.0;
+    }
+    for j in 1..=l_max {
+        for arc in &input.arcs[j] {
+            let cost = disc(arc.lat_ms);
+            for t in cost..=p {
+                let prev = m[arc.i][t - cost];
+                if prev == NEG {
+                    continue;
+                }
+                let v = prev + arc.imp;
+                if v > m[j][t] {
+                    m[j][t] = v;
+                    parent[j][t] = (arc.i, arc.k, t - cost);
+                }
+            }
+        }
+        // budget monotonicity: a larger t is always at least as good
+        for t in 1..=p {
+            if m[j][t - 1] > m[j][t] {
+                m[j][t] = m[j][t - 1];
+                parent[j][t] = parent[j][t - 1];
+            }
+        }
+    }
+    if m[l_max][p] == NEG {
+        return None;
+    }
+
+    // Reconstruct the chain of spans from (L, P).
+    let mut spans = Vec::new();
+    let mut latency = 0.0;
+    let (mut j, mut t) = (l_max, p);
+    while j > 0 {
+        let (i, k, tp) = parent[j][t];
+        assert_ne!(i, usize::MAX, "broken parent chain at ({j},{t})");
+        let arc = input.arcs[j]
+            .iter()
+            .find(|a| a.i == i && a.k == k)
+            .expect("arc vanished");
+        latency += arc.lat_ms;
+        spans.push((i, j, k));
+        j = i;
+        t = tp;
+    }
+    spans.reverse();
+    let a: Vec<usize> = spans[..spans.len().saturating_sub(1)]
+        .iter()
+        .map(|&(_, j, _)| j)
+        .collect();
+    Some(DpSolution {
+        a,
+        objective: m[l_max][p],
+        spans,
+        latency_est: latency,
+        solve_ms: t0.elapsed().as_secs_f64() * 1e3,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check_res;
+    use crate::util::rng::Rng;
+
+    /// Random chain instances solved both by the DP and by brute-force
+    /// enumeration over all boundary sets and kernel choices — the
+    /// executable form of Theorem 3.1.
+    #[test]
+    fn matches_bruteforce() {
+        check_res("alg1 == bruteforce", 120, gen_instance, |inst| {
+            let got = solve(inst);
+            let want = brute(inst);
+            match (got, want) {
+                (None, None) => Ok(()),
+                (Some(g), Some(wobj)) => {
+                    if (g.objective - wobj).abs() > 1e-9 {
+                        Err(format!("obj {} vs brute {}", g.objective, wobj))
+                    } else if g.latency_est >= inst.budget_ms + 1e-9 + slack(inst) {
+                        Err(format!("latency {} over budget {}", g.latency_est,
+                            inst.budget_ms))
+                    } else {
+                        Ok(())
+                    }
+                }
+                (g, w) => Err(format!("feasibility mismatch: {:?} vs {:?}",
+                    g.map(|s| s.objective), w)),
+            }
+        });
+    }
+
+    /// Discretization rounds each arc down by < unit, so the true latency may
+    /// exceed the budget by at most (#spans)·unit — the standard DP-
+    /// discretization slack the paper accepts via P large.
+    fn slack(inst: &DpInput) -> f64 {
+        inst.l_max as f64 * inst.budget_ms / inst.p as f64
+    }
+
+    fn gen_instance(r: &mut Rng) -> DpInput {
+        let l = 2 + r.below(4);
+        let p = 40 + r.below(60);
+        let mut arcs = vec![Vec::new(); l + 1];
+        for j in 1..=l {
+            for i in 0..j {
+                // random subset of kernel options per span
+                for k in [1usize, 3, 5] {
+                    if r.uniform() < 0.7 {
+                        arcs[j].push(SpanArc {
+                            i,
+                            k,
+                            lat_ms: r.range(0.1, 2.0) as f64,
+                            imp: r.uniform() * 3.0,
+                        });
+                    }
+                }
+            }
+        }
+        DpInput { l_max: l, budget_ms: r.range(0.5, 5.0) as f64, p, arcs }
+    }
+
+    fn brute(inst: &DpInput) -> Option<f64> {
+        // enumerate all chains 0 = b0 < b1 < ... < bm = L and per-span arcs
+        let unit = inst.budget_ms / inst.p as f64;
+        fn rec(inst: &DpInput, unit: f64, at: usize, used: usize, obj: f64,
+               best: &mut Option<f64>) {
+            if at == inst.l_max {
+                if best.map_or(true, |b| obj > b) {
+                    *best = Some(obj);
+                }
+                return;
+            }
+            for j in (at + 1)..=inst.l_max {
+                for arc in &inst.arcs[j] {
+                    if arc.i != at {
+                        continue;
+                    }
+                    let cost = (arc.lat_ms / unit).floor() as usize;
+                    if used + cost <= inst.p {
+                        rec(inst, unit, j, used + cost, obj + arc.imp, best);
+                    }
+                }
+            }
+        }
+        let mut best = None;
+        rec(inst, unit, 0, 0, 0.0, &mut best);
+        best
+    }
+
+    #[test]
+    fn simple_chain() {
+        // two layers; merging both (span (0,2]) is cheap and valuable
+        let arcs = vec![
+            vec![],
+            vec![SpanArc { i: 0, k: 3, lat_ms: 1.0, imp: 1.0 }],
+            vec![
+                SpanArc { i: 1, k: 3, lat_ms: 1.0, imp: 1.0 },
+                SpanArc { i: 0, k: 5, lat_ms: 1.2, imp: 2.5 },
+            ],
+        ];
+        let inst = DpInput { l_max: 2, budget_ms: 1.5, p: 100, arcs };
+        let sol = solve(&inst).unwrap();
+        assert_eq!(sol.spans, vec![(0, 2, 5)]);
+        assert!(sol.a.is_empty());
+
+        // tighter budget forbids nothing (1.2 < 1.5) but a 0.9 budget
+        // forces... nothing fits (needs >= 1.0+1.0 or 1.2) -> None
+        let inst2 = DpInput { l_max: 2, budget_ms: 0.9, p: 100, ..inst };
+        assert!(solve(&inst2).is_none());
+    }
+
+    #[test]
+    fn prefers_higher_importance_within_budget() {
+        let arcs = vec![
+            vec![],
+            vec![
+                SpanArc { i: 0, k: 1, lat_ms: 0.2, imp: 0.5 },
+                SpanArc { i: 0, k: 3, lat_ms: 0.8, imp: 2.0 },
+            ],
+        ];
+        let inst = DpInput { l_max: 1, budget_ms: 1.0, p: 50, arcs };
+        let sol = solve(&inst).unwrap();
+        assert_eq!(sol.spans[0].2, 3);
+    }
+}

@@ -1,0 +1,177 @@
+//! Eq. (8) — the LayerOnly baseline: latency-constrained layer pruning as
+//! a 0-1 knapsack, solved exactly for discretized latencies in O(L·P).
+//!
+//! Items are reducible conv layers; keeping layer l costs its latency
+//! T[l] and earns importance I[l] (how much the network suffers when l is
+//! replaced by theta_id).  Irreducible layers (R) are forced in.
+
+use std::collections::BTreeSet;
+
+/// Per-layer knapsack input; index 0 unused (layers are 1-based).
+#[derive(Debug, Clone)]
+pub struct KnapsackInput {
+    pub lat_ms: Vec<f64>,
+    pub imp: Vec<f64>,
+    /// forced[l] = layer must be kept (l in R).
+    pub forced: Vec<bool>,
+    pub budget_ms: f64,
+    pub p: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct KnapsackSolution {
+    pub kept: BTreeSet<usize>,
+    pub objective: f64,
+    pub latency_est: f64,
+}
+
+pub fn solve(input: &KnapsackInput) -> Option<KnapsackSolution> {
+    let l_max = input.lat_ms.len() - 1;
+    let p = input.p;
+    let unit = input.budget_ms / p as f64;
+    if unit <= 0.0 {
+        return None;
+    }
+    let disc = |ms: f64| (ms / unit).floor() as usize;
+
+    // forced layers consume budget unconditionally
+    let forced_cost: usize =
+        (1..=l_max).filter(|&l| input.forced[l]).map(|l| disc(input.lat_ms[l])).sum();
+    if forced_cost > p {
+        return None;
+    }
+    let cap = p - forced_cost;
+
+    const NEG: f64 = f64::NEG_INFINITY;
+    let optional: Vec<usize> = (1..=l_max).filter(|&l| !input.forced[l]).collect();
+    let n = optional.len();
+    let mut best = vec![vec![NEG; cap + 1]; n + 1];
+    let mut take = vec![vec![false; cap + 1]; n + 1];
+    for t in 0..=cap {
+        best[0][t] = 0.0;
+    }
+    for (t_i, &l) in optional.iter().enumerate() {
+        let cost = disc(input.lat_ms[l]);
+        for t in 0..=cap {
+            let mut b = best[t_i][t]; // drop layer l
+            if t >= cost && best[t_i][t - cost] != NEG {
+                let v = best[t_i][t - cost] + input.imp[l];
+                if v > b {
+                    b = v;
+                    take[t_i + 1][t] = true;
+                }
+            }
+            best[t_i + 1][t] = b;
+        }
+    }
+    // reconstruct at full capacity
+    let mut kept: BTreeSet<usize> =
+        (1..=l_max).filter(|&l| input.forced[l]).collect();
+    let mut t = cap;
+    for t_i in (0..n).rev() {
+        if take[t_i + 1][t] {
+            let l = optional[t_i];
+            kept.insert(l);
+            t -= disc(input.lat_ms[l]);
+        }
+    }
+    let objective: f64 = kept
+        .iter()
+        .filter(|l| !input.forced[**l])
+        .map(|&l| input.imp[l])
+        .sum();
+    let latency_est: f64 = kept.iter().map(|&l| input.lat_ms[l]).sum();
+    Some(KnapsackSolution { kept, objective, latency_est })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check_res;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn forced_layers_always_kept() {
+        let input = KnapsackInput {
+            lat_ms: vec![0.0, 1.0, 1.0, 1.0],
+            imp: vec![0.0, 5.0, 1.0, 1.0],
+            forced: vec![false, true, false, false],
+            budget_ms: 2.0,
+            p: 100,
+        };
+        let sol = solve(&input).unwrap();
+        assert!(sol.kept.contains(&1));
+        assert!(sol.latency_est <= 2.0 + 1e-9);
+    }
+
+    #[test]
+    fn infeasible_when_forced_exceed_budget() {
+        let input = KnapsackInput {
+            lat_ms: vec![0.0, 3.0],
+            imp: vec![0.0, 1.0],
+            forced: vec![false, true],
+            budget_ms: 2.0,
+            p: 10,
+        };
+        assert!(solve(&input).is_none());
+    }
+
+    #[test]
+    fn matches_bruteforce() {
+        check_res("knapsack == bruteforce", 150, |r| gen(r), |input| {
+            let got = solve(input).map(|s| s.objective);
+            let want = brute(input);
+            match (got, want) {
+                (None, None) => Ok(()),
+                (Some(g), Some(w)) if (g - w).abs() < 1e-9 => Ok(()),
+                (g, w) => Err(format!("{g:?} vs {w:?}")),
+            }
+        });
+    }
+
+    fn gen(r: &mut Rng) -> KnapsackInput {
+        let l = 1 + r.below(8);
+        KnapsackInput {
+            lat_ms: std::iter::once(0.0)
+                .chain((0..l).map(|_| r.range(0.1, 1.5) as f64))
+                .collect(),
+            imp: std::iter::once(0.0)
+                .chain((0..l).map(|_| r.uniform() * 2.0))
+                .collect(),
+            forced: std::iter::once(false)
+                .chain((0..l).map(|_| r.uniform() < 0.3))
+                .collect(),
+            budget_ms: r.range(0.5, 4.0) as f64,
+            p: 60 + r.below(60),
+        }
+    }
+
+    fn brute(input: &KnapsackInput) -> Option<f64> {
+        let l_max = input.lat_ms.len() - 1;
+        let unit = input.budget_ms / input.p as f64;
+        let disc = |ms: f64| (ms / unit).floor() as usize;
+        let mut best = None;
+        for mask in 0..(1u32 << l_max) {
+            let mut ok = true;
+            let mut cost = 0usize;
+            let mut obj = 0.0;
+            for l in 1..=l_max {
+                let kept = mask & (1 << (l - 1)) != 0;
+                if input.forced[l] && !kept {
+                    ok = false;
+                    break;
+                }
+                if kept {
+                    cost += disc(input.lat_ms[l]);
+                    if !input.forced[l] {
+                        obj += input.imp[l];
+                    }
+                }
+            }
+            if ok && cost <= input.p && best.map_or(true, |b: f64| obj > b) {
+                best = Some(obj);
+            }
+        }
+        best
+    }
+}

@@ -1,0 +1,45 @@
+//! Solvers — the paper's combinatorial core.
+//!
+//! * [`csel`]     — Eq. (3): exact subset-sum DP selecting which convs to
+//!                  keep for a given merged kernel size (max l1-norm).
+//! * [`dp`]       — Algorithm 1: the surrogate Problem (5) DP over
+//!                  (layer, discretized latency budget).
+//! * [`layeronly`]— Eq. (8): the 0-1 knapsack layer-pruning variant.
+//! * [`depth`]    — Kim et al. 2023 baseline: activations only, C = [L]
+//!                  (expressed as the k = k_max restriction of our tables).
+
+pub mod csel;
+pub mod depth;
+pub mod dp;
+pub mod layeronly;
+
+use std::collections::BTreeSet;
+
+/// A solved compression plan: the paper's (A*, C*, (k_i*)).
+#[derive(Debug, Clone)]
+pub struct Solution {
+    /// Kept activation indices (ascending) — the set A*.
+    pub a: Vec<usize>,
+    /// Kept conv indices — the set C* (always contains R).
+    pub c: BTreeSet<usize>,
+    /// Merged spans (i, j, k): consecutive boundaries of {0} ∪ A* ∪ {L}
+    /// with the chosen merged kernel size.
+    pub spans: Vec<(usize, usize, usize)>,
+    /// Objective value (sum of importance).
+    pub objective: f64,
+    /// Sum of table latencies (the surrogate latency estimate, ms).
+    pub latency_est: f64,
+}
+
+impl Solution {
+    pub fn summary(&self) -> String {
+        format!(
+            "A*={:?} |C*|={} spans={:?} obj={:.4} lat~{:.3}ms",
+            self.a,
+            self.c.len(),
+            self.spans,
+            self.objective,
+            self.latency_est
+        )
+    }
+}

@@ -1,0 +1,576 @@
+//! Lookup-table construction — the paper's Sec. 3.2 machinery.
+//!
+//! * Latency table T[i,j,k]: wall-clock of the merged layer's conv module,
+//!   measured through PJRT with the warm-up/average protocol (App. C), or
+//!   an analytical roofline model (fast mode / CI).
+//! * Importance table I[i,j,k] (Eq. 4): fine-tune the gated network for a
+//!   few steps with the (A~_ij, C~_ijk) gate configuration on a proxy data
+//!   stream, evaluate, and exponentiate the perf delta.
+//! * Per-layer tables for the LayerOnly baseline (Eq. 8).
+//!
+//! Construction is embarrassingly parallel (the paper parallelizes across
+//! GPUs; we fan out across a thread pool sharing the PJRT client) and the
+//! result is cached to JSON keyed by a parameter-vector fingerprint.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::ir::Spec;
+use crate::model::{sig_str, Manifest, Model};
+use crate::runtime::measure;
+use crate::solver::csel;
+use crate::solver::dp::SpanArc;
+use crate::train::{proxy_perf, Gen};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::tensor::Tensor;
+
+/// One (i, j, k) table entry.
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub lat_ms: f64,
+    pub imp: f64,
+    /// \hat{C}_{ijk} — the kept convs realizing kernel size k (Eq. 3).
+    pub kept: BTreeSet<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Tables {
+    pub model: String,
+    pub entries: BTreeMap<(usize, usize, usize), Entry>,
+    /// Per-original-layer latency (1-based; [0] unused).
+    pub layer_lat: Vec<f64>,
+    /// Keep-importance per layer for LayerOnly (1-based).
+    pub layer_imp: Vec<f64>,
+    /// Latency of everything outside the merged-conv sum: head, attention,
+    /// upsample, norm and unfolded residual adds (sum-approximation, Sec 3.2).
+    pub fixed_ms: f64,
+    pub base_perf: f64,
+    pub lat_build_s: f64,
+    pub imp_build_s: f64,
+}
+
+impl Tables {
+    /// Original-model latency estimate under the same sum approximation.
+    pub fn orig_ms(&self) -> f64 {
+        self.layer_lat.iter().sum::<f64>() + self.fixed_ms
+    }
+
+    /// Arc set for Algorithm 1 (and, restricted, the Depth baseline).
+    pub fn arcs(&self, l_max: usize) -> Vec<Vec<SpanArc>> {
+        let mut arcs = vec![Vec::new(); l_max + 1];
+        for (&(i, j, k), e) in &self.entries {
+            arcs[j].push(SpanArc { i, k, lat_ms: e.lat_ms, imp: e.imp });
+        }
+        arcs
+    }
+
+    // ---------------- cache ------------------------------------------------
+
+    pub fn cache_path(root: &Path, model: &str, mode: LatencyMode) -> PathBuf {
+        root.join("cache").join(format!("{model}.{}.tables.json", mode.tag()))
+    }
+
+    pub fn save(&self, path: &Path, fingerprint: u64) -> Result<()> {
+        let entries: Vec<Json> = self
+            .entries
+            .iter()
+            .map(|(&(i, j, k), e)| {
+                Json::obj(vec![
+                    ("i", Json::num(i as f64)),
+                    ("j", Json::num(j as f64)),
+                    ("k", Json::num(k as f64)),
+                    ("lat", Json::num(e.lat_ms)),
+                    ("imp", Json::num(e.imp)),
+                    (
+                        "kept",
+                        Json::Arr(e.kept.iter().map(|&l| Json::num(l as f64)).collect()),
+                    ),
+                ])
+            })
+            .collect();
+        let j = Json::obj(vec![
+            ("model", Json::str(&self.model)),
+            ("fingerprint", Json::num(fingerprint as f64)),
+            ("entries", Json::Arr(entries)),
+            (
+                "layer_lat",
+                Json::Arr(self.layer_lat.iter().map(|&v| Json::num(v)).collect()),
+            ),
+            (
+                "layer_imp",
+                Json::Arr(self.layer_imp.iter().map(|&v| Json::num(v)).collect()),
+            ),
+            ("fixed_ms", Json::num(self.fixed_ms)),
+            ("base_perf", Json::num(self.base_perf)),
+            ("lat_build_s", Json::num(self.lat_build_s)),
+            ("imp_build_s", Json::num(self.imp_build_s)),
+        ]);
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, j.to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path, expect_fingerprint: u64) -> Option<Tables> {
+        let text = std::fs::read_to_string(path).ok()?;
+        let j = Json::parse(&text).ok()?;
+        if j.req("fingerprint").as_f64()? as u64 != expect_fingerprint {
+            return None;
+        }
+        let mut entries = BTreeMap::new();
+        for e in j.req("entries").as_arr()? {
+            let key = (
+                e.req("i").as_usize()?,
+                e.req("j").as_usize()?,
+                e.req("k").as_usize()?,
+            );
+            entries.insert(
+                key,
+                Entry {
+                    lat_ms: e.req("lat").as_f64()?,
+                    imp: e.req("imp").as_f64()?,
+                    kept: e
+                        .req("kept")
+                        .as_arr()?
+                        .iter()
+                        .filter_map(|v| v.as_usize())
+                        .collect(),
+                },
+            );
+        }
+        Some(Tables {
+            model: j.req("model").as_str()?.to_string(),
+            entries,
+            layer_lat: j
+                .req("layer_lat")
+                .as_arr()?
+                .iter()
+                .filter_map(|v| v.as_f64())
+                .collect(),
+            layer_imp: j
+                .req("layer_imp")
+                .as_arr()?
+                .iter()
+                .filter_map(|v| v.as_f64())
+                .collect(),
+            fixed_ms: j.req("fixed_ms").as_f64()?,
+            base_perf: j.req("base_perf").as_f64()?,
+            lat_build_s: j.req("lat_build_s").as_f64()?,
+            imp_build_s: j.req("imp_build_s").as_f64()?,
+        })
+    }
+}
+
+/// FNV-1a over the pretrained parameter bytes — cache key.
+pub fn fingerprint(params: &[f32]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for v in params {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LatencyMode {
+    /// Real wall-clock through PJRT (the paper's protocol).
+    Measured,
+    /// FLOPs + dispatch-overhead roofline model (fast mode / tests).
+    Analytical,
+}
+
+impl LatencyMode {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            LatencyMode::Measured => "measured",
+            LatencyMode::Analytical => "analytical",
+        }
+    }
+}
+
+/// Builder knobs; the defaults match the scaled-down App. C protocol.
+#[derive(Debug, Clone)]
+pub struct BuildCfg {
+    pub mode: LatencyMode,
+    pub warmup: usize,
+    pub iters: usize,
+    /// Fine-tune steps per importance entry ("a few steps", App. C).
+    pub proxy_steps: usize,
+    pub proxy_lr: f32,
+    pub eval_batches: usize,
+    pub workers: usize,
+}
+
+impl Default for BuildCfg {
+    fn default() -> Self {
+        BuildCfg {
+            mode: LatencyMode::Measured,
+            warmup: 5,
+            iters: 30,
+            proxy_steps: 8,
+            proxy_lr: 0.01,
+            eval_batches: 2,
+            workers: 1,
+        }
+    }
+}
+
+/// Analytical per-op latency: max(compute, bandwidth) + dispatch overhead.
+/// Calibrated once against CPU-XLA convs; the *shape* (k^2 growth, per-op
+/// overhead rewarding depth reduction) is what the solver consumes.
+pub fn analytical_conv_ms(
+    b: usize,
+    h: usize,
+    w: usize,
+    ci: usize,
+    co: usize,
+    k: usize,
+    s: usize,
+    dw: bool,
+) -> f64 {
+    let (ho, wo) = (h.div_ceil(s), w.div_ceil(s));
+    let flops = if dw {
+        2.0 * (b * ho * wo * co * k * k) as f64
+    } else {
+        2.0 * (b * ho * wo * co * ci * k * k) as f64
+    };
+    let bytes = 4.0 * (b * h * w * ci + b * ho * wo * co + co * ci * k * k) as f64;
+    const GFLOPS: f64 = 40.0e9; // effective CPU-XLA conv throughput
+    const GBPS: f64 = 25.0e9;
+    const DISPATCH_MS: f64 = 0.05;
+    (flops / GFLOPS).max(bytes / GBPS) * 1e3 + DISPATCH_MS
+}
+
+/// Measure (or model) one conv signature's latency.
+fn conv_latency(
+    model: &Model,
+    man: &Manifest,
+    cfg: &BuildCfg,
+    b: usize,
+    h: usize,
+    w: usize,
+    ci: usize,
+    co: usize,
+    k: usize,
+    s: usize,
+    dw: bool,
+    act: &str,
+) -> Result<f64> {
+    if cfg.mode == LatencyMode::Analytical {
+        return Ok(analytical_conv_ms(b, h, w, ci, co, k, s, dw));
+    }
+    // Measure the `plain` module — the op the Eager ("PyTorch format")
+    // deployment actually dispatches.  (On XLA-CPU the act-fused variants
+    // compile to loop fusions that bypass the fast Eigen conv path, which
+    // would skew T against exactly the layers the solver merges.)
+    let _ = act;
+    let sig = sig_str(b, h, w, ci, co, k, s, dw);
+    let rel = man
+        .conv_art(&sig, "plain")
+        .with_context(|| format!("no conv artifact for {sig}"))?;
+    let exec = model.rt.load(&rel)?;
+    let mut rng = Rng::new(0x1a7e ^ (k as u64) << 8 ^ ci as u64);
+    let x = rand_tensor(&mut rng, &[b, h, w, ci]);
+    let wgt = rand_tensor(&mut rng, &[co, if dw { 1 } else { ci }, k, k]);
+    let bias = rand_tensor(&mut rng, &[co]);
+    let stats = measure(&exec, &[&x, &wgt, &bias], cfg.warmup, cfg.iters)?;
+    Ok(stats.p50_ms)
+}
+
+fn rand_tensor(rng: &mut Rng, dims: &[usize]) -> Tensor {
+    let n: usize = dims.iter().product();
+    Tensor::new(dims.to_vec(), (0..n).map(|_| rng.normal()).collect())
+}
+
+/// Fixed (non-conv) latency of a model: head / attention / upsample /
+/// group-norm / residual-add ops, summed once.
+fn fixed_latency(model: &Model, man: &Manifest, cfg: &BuildCfg) -> Result<f64> {
+    let sp = &model.spec;
+    let b = sp.batch;
+    if cfg.mode == LatencyMode::Analytical {
+        // ops are bandwidth-bound elementwise kernels
+        let mut ms = 0.0;
+        for c in &sp.convs {
+            let bytes = 4.0 * (b * c.h_out() * c.w_out() * c.cout) as f64;
+            if c.add_from.is_some() {
+                ms += bytes * 2.0 / 25.0e9 * 1e3 + 0.02;
+            }
+            if c.gn {
+                ms += bytes * 2.0 / 25.0e9 * 1e3 + 0.02;
+            }
+            if c.barrier_reason == "attention" || c.barrier_reason == "upsample" {
+                ms += bytes * 3.0 / 25.0e9 * 1e3 + 0.05;
+            }
+        }
+        return Ok(ms + 0.05);
+    }
+    let mut ms = 0.0;
+    let mut rng = Rng::new(0xf1);
+    // classifier head
+    if sp.num_classes > 0 {
+        if let Some(rel) = man.ew_art(&format!("head_{}", sp.name)) {
+            let exec = model.rt.load(&rel)?;
+            let last = sp.convs.last().unwrap();
+            let x = rand_tensor(&mut rng, &[b, last.h_out(), last.w_out(), sp.head_hidden]);
+            let w = rand_tensor(&mut rng, &[sp.head_hidden, sp.num_classes]);
+            let bias = rand_tensor(&mut rng, &[sp.num_classes]);
+            ms += measure(&exec, &[&x, &w, &bias], cfg.warmup, cfg.iters)?.p50_ms;
+        }
+    }
+    for c in &sp.convs {
+        let shape = [b, c.h_out(), c.w_out(), c.cout];
+        let base = format!("b{}h{}w{}c{}", b, c.h_out(), c.w_out(), c.cout);
+        if c.add_from.is_some() {
+            if let Some(rel) = man.ew_art(&format!("add_{base}")) {
+                let exec = model.rt.load(&rel)?;
+                let x = rand_tensor(&mut rng, &shape);
+                let y = rand_tensor(&mut rng, &shape);
+                ms += measure(&exec, &[&x, &y], cfg.warmup, cfg.iters)?.p50_ms;
+            }
+        }
+        if c.gn {
+            if let Some(rel) = man.ew_art(&format!("gn{}_{base}", c.gn_groups)) {
+                let exec = model.rt.load(&rel)?;
+                let x = rand_tensor(&mut rng, &shape);
+                let s1 = rand_tensor(&mut rng, &[c.cout]);
+                let s2 = rand_tensor(&mut rng, &[c.cout]);
+                ms += measure(&exec, &[&x, &s1, &s2], cfg.warmup, cfg.iters)?.p50_ms;
+            }
+        }
+        if c.barrier_reason == "attention" {
+            if let Some(rel) = man.ew_art(&format!("attn_{base}")) {
+                let exec = model.rt.load(&rel)?;
+                let x = rand_tensor(&mut rng, &shape);
+                let q = rand_tensor(&mut rng, &[c.cout, 3 * c.cout]);
+                let o = rand_tensor(&mut rng, &[c.cout, c.cout]);
+                ms += measure(&exec, &[&x, &q, &o], cfg.warmup, cfg.iters)?.p50_ms;
+            }
+        }
+        if c.barrier_reason == "upsample" {
+            if let Some(rel) = man.ew_art(&format!("up_{base}")) {
+                let exec = model.rt.load(&rel)?;
+                let x = rand_tensor(&mut rng, &shape);
+                ms += measure(&exec, &[&x], cfg.warmup, cfg.iters)?.p50_ms;
+            }
+        }
+    }
+    Ok(ms)
+}
+
+/// Build (or load from cache) the full table set for a model.
+pub fn build(
+    model: &Model,
+    man: &Manifest,
+    gen: &Gen,
+    pretrained: &[f32],
+    cfg: &BuildCfg,
+    cache_root: &Path,
+) -> Result<Tables> {
+    let fp = fingerprint(pretrained)
+        ^ (cfg.proxy_steps as u64) << 32
+        ^ cfg.iters as u64;
+    let cache = Tables::cache_path(cache_root, &model.name, cfg.mode);
+    if let Some(t) = Tables::load(&cache, fp) {
+        eprintln!("[tables] {}: loaded cache ({} entries)", model.name, t.entries.len());
+        return Ok(t);
+    }
+    let sp = &model.spec;
+    let l_max = sp.len();
+
+    // ---- latency ----------------------------------------------------------
+    let t0 = Instant::now();
+    let mut layer_lat = vec![0.0f64; l_max + 1];
+    for c in &sp.convs {
+        layer_lat[c.idx] = conv_latency(
+            model, man, cfg, sp.batch, c.h_in, c.w_in, c.cin, c.cout, c.k,
+            c.stride, c.depthwise, if c.act == "none" { "none" } else { &c.act },
+        )?;
+    }
+    let fixed_ms = fixed_latency(model, man, cfg)?;
+
+    // span entries
+    let spans = sp.spans();
+    let mut lat_map: BTreeMap<(usize, usize, usize), f64> = BTreeMap::new();
+    for &(i, j) in &spans {
+        let first = sp.conv(i + 1);
+        let act = {
+            let cj = sp.conv(j);
+            if cj.act == "none" { "relu" } else { cj.act.as_str() }
+        };
+        for k in sp.kernel_options(i, j) {
+            let lat = conv_latency(
+                model, man, cfg, sp.batch, first.h_in, first.w_in, first.cin,
+                sp.conv(j).cout, k, sp.span_stride(i, j),
+                sp.span_depthwise(i, j), act,
+            )?;
+            lat_map.insert((i, j, k), lat);
+        }
+    }
+    let lat_build_s = t0.elapsed().as_secs_f64();
+
+    // ---- importance (parallel over entries) -------------------------------
+    let t1 = Instant::now();
+    let (base_loss, base_metric) = crate::train::evaluate(
+        model, gen, pretrained, &sp.pristine_gates(), cfg.eval_batches * 2,
+    )?;
+    let _ = base_loss;
+    let base_perf = normalize_perf(sp, base_metric, base_metric) as f64;
+
+    let l1 = csel::layer_l1_norms(sp, pretrained);
+    let keys: Vec<(usize, usize, usize)> = lat_map.keys().copied().collect();
+    let results: Mutex<BTreeMap<(usize, usize, usize), Entry>> =
+        Mutex::new(BTreeMap::new());
+    let next: Mutex<usize> = Mutex::new(0);
+    let workers = cfg.workers.max(1).min(keys.len().max(1));
+    std::thread::scope(|scope| -> Result<()> {
+        let mut handles = Vec::new();
+        for _ in 0..workers {
+            handles.push(scope.spawn(|| -> Result<()> {
+                loop {
+                    let idx = {
+                        let mut n = next.lock().unwrap();
+                        let i = *n;
+                        *n += 1;
+                        i
+                    };
+                    if idx >= keys.len() {
+                        return Ok(());
+                    }
+                    let (i, j, k) = keys[idx];
+                    let kept = csel::select(sp, &l1, i, j, k)
+                        .with_context(|| format!("csel infeasible ({i},{j},{k})"))?;
+                    let gates = sp.entry_gates(i, j, &kept);
+                    let perf = proxy_perf(
+                        model, gen, pretrained, &gates, cfg.proxy_steps,
+                        cfg.proxy_lr, cfg.eval_batches,
+                    )?;
+                    let perf = normalize_perf(sp, perf, base_metric) as f64;
+                    let imp = (perf - base_perf).exp();
+                    // A span whose every conv is dropped deploys as a pure
+                    // identity — the executor elides it entirely, so its
+                    // true latency is ~0, not the k=1 conv module's cost.
+                    let elidable = kept.is_empty()
+                        && sp.conv(j).add_from.is_none()
+                        && !sp.conv(j).gn
+                        && sp.conv(j).barrier_reason.is_empty();
+                    let lat = if elidable { 0.0 } else { lat_map[&(i, j, k)] };
+                    results.lock().unwrap().insert(
+                        (i, j, k),
+                        Entry { lat_ms: lat, imp, kept },
+                    );
+                }
+            }));
+        }
+        for h in handles {
+            h.join().expect("worker panicked")?;
+        }
+        Ok(())
+    })?;
+    let entries = results.into_inner().unwrap();
+
+    // ---- per-layer keep-importance for LayerOnly ---------------------------
+    let mut layer_imp = vec![0.0f64; l_max + 1];
+    for c in &sp.convs {
+        if !c.conv_gated {
+            continue; // forced in the knapsack
+        }
+        // removing just layer l == entry (l-1, l, 1)
+        let key = (c.idx - 1, c.idx, 1usize);
+        let perf_without = if let Some(e) = entries.get(&key) {
+            base_perf + e.imp.ln()
+        } else {
+            let gates = sp.entry_gates(c.idx - 1, c.idx, &BTreeSet::new());
+            let p = proxy_perf(
+                model, gen, pretrained, &gates, cfg.proxy_steps, cfg.proxy_lr,
+                cfg.eval_batches,
+            )?;
+            normalize_perf(sp, p, base_metric) as f64
+        };
+        layer_imp[c.idx] = (base_perf - perf_without).exp();
+    }
+    let imp_build_s = t1.elapsed().as_secs_f64();
+
+    let tables = Tables {
+        model: model.name.clone(),
+        entries,
+        layer_lat,
+        layer_imp,
+        fixed_ms,
+        base_perf,
+        lat_build_s,
+        imp_build_s,
+    };
+    tables.save(&cache, fp)?;
+    eprintln!(
+        "[tables] {}: {} entries, lat {:.1}s, imp {:.1}s",
+        model.name,
+        tables.entries.len(),
+        lat_build_s,
+        imp_build_s
+    );
+    Ok(tables)
+}
+
+/// The paper's diffusion normalization (App. A): divide negative diffusion
+/// loss by the pretrained loss.  Classification metrics pass through.
+fn normalize_perf(spec: &Spec, metric: f32, base_metric: f32) -> f32 {
+    match spec.task {
+        crate::ir::Task::Classify => metric,
+        crate::ir::Task::Diffusion => {
+            // metric = -loss; base_metric = -loss_pre  =>  -loss/loss_pre
+            -(-metric) / (-base_metric).max(1e-8)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn analytical_latency_grows_with_kernel() {
+        let l3 = analytical_conv_ms(32, 16, 16, 64, 64, 3, 1, false);
+        let l7 = analytical_conv_ms(32, 16, 16, 64, 64, 7, 1, false);
+        let l13 = analytical_conv_ms(32, 16, 16, 64, 64, 13, 1, false);
+        assert!(l3 < l7 && l7 < l13, "{l3} {l7} {l13}");
+    }
+
+    /// Fig. 1's premise: merging wins where per-dispatch overhead dominates
+    /// (small convs), and loses once the merged kernel's k^2 compute
+    /// outgrows the saved overhead — the crossover LayerMerge exploits.
+    #[test]
+    fn analytical_merge_crossover() {
+        // tiny conv: overhead-dominated -> merging two 3x3 into one 5x5 wins
+        let s3 = analytical_conv_ms(32, 4, 4, 8, 8, 3, 1, false);
+        let s5 = analytical_conv_ms(32, 4, 4, 8, 8, 5, 1, false);
+        assert!(s5 < 2.0 * s3, "small: {s5} !< {}", 2.0 * s3);
+        // big conv: compute-dominated -> the merged kernel loses
+        let b3 = analytical_conv_ms(32, 16, 16, 64, 64, 3, 1, false);
+        let b5 = analytical_conv_ms(32, 16, 16, 64, 64, 5, 1, false);
+        assert!(b5 > 2.0 * b3 * 25.0 / 36.0, "sanity");
+        assert!(2.0 * b3 < analytical_conv_ms(32, 16, 16, 64, 64, 13, 1, false));
+    }
+
+    #[test]
+    fn analytical_depthwise_cheaper() {
+        let dense = analytical_conv_ms(32, 16, 16, 64, 64, 3, 1, false);
+        let dw = analytical_conv_ms(32, 16, 16, 64, 64, 3, 1, true);
+        assert!(dw < dense);
+    }
+
+    #[test]
+    fn fingerprint_sensitive() {
+        let a = fingerprint(&[1.0, 2.0, 3.0]);
+        let b = fingerprint(&[1.0, 2.0, 3.0001]);
+        assert_ne!(a, b);
+        assert_eq!(a, fingerprint(&[1.0, 2.0, 3.0]));
+    }
+}

@@ -1,0 +1,254 @@
+//! Procedural synthetic datasets (DESIGN.md §2 substitution for
+//! ImageNet / CIFAR-10).  Deterministic given (seed, batch index), so the
+//! table builder, fine-tuning and evaluation all see the same
+//! distribution and every experiment row reproduces exactly.
+//!
+//! * `ClassifyGen` — 10-class oriented-texture + shape task: class encodes
+//!   (stripe orientation, spatial frequency, blob presence).  Solving it
+//!   requires multi-scale spatial filters, so deeper/wider networks
+//!   genuinely help — the property the paper's accuracy-vs-latency
+//!   comparisons rely on.
+//! * `DiffusionGen` — a smooth image manifold (random low-frequency blobs
+//!   and gradients) for the DDPM-style denoising task.
+
+use crate::model::Batch;
+use crate::util::rng::Rng;
+use crate::util::tensor::Tensor;
+
+pub const NUM_CLASSES: usize = 10;
+
+#[derive(Debug, Clone)]
+pub struct ClassifyGen {
+    pub seed: u64,
+    pub batch: usize,
+    pub h: usize,
+    pub w: usize,
+    pub noise: f32,
+}
+
+impl ClassifyGen {
+    pub fn new(seed: u64, batch: usize, h: usize, w: usize) -> Self {
+        // noise level tuned so the pristine scaled-down nets land in the
+        // ~85-95% accuracy band after a few hundred steps — compression
+        // must have measurable headroom to hurt (cf. paper Tables 1-3).
+        // LM_NOISE overrides for calibration sweeps.
+        let noise = std::env::var("LM_NOISE")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0.5);
+        ClassifyGen { seed, batch, h, w, noise }
+    }
+
+    /// Deterministic batch `idx` (train stream); use a disjoint stream tag
+    /// for eval so train/eval never overlap.
+    pub fn batch(&self, stream: u64, idx: u64) -> Batch {
+        let mut rng = Rng::new(
+            self.seed ^ stream.wrapping_mul(0x9e37_79b9) ^ idx.wrapping_mul(0x85eb_ca6b),
+        );
+        let (b, h, w) = (self.batch, self.h, self.w);
+        let mut x = Tensor::zeros(&[b, h, w, 3]);
+        let mut y = Tensor::zeros(&[b, NUM_CLASSES]);
+        for n in 0..b {
+            let cls = rng.below(NUM_CLASSES);
+            self.render(&mut rng, &mut x, n, cls);
+            y.data[n * NUM_CLASSES + cls] = 1.0;
+        }
+        Batch::Classify { x, y }
+    }
+
+    fn render(&self, rng: &mut Rng, x: &mut Tensor, n: usize, cls: usize) {
+        let (h, w) = (self.h, self.w);
+        // class -> orientation in {0..4} x frequency in {low, high};
+        // neighbouring orientations are only 36 degrees apart and the two
+        // frequencies are deliberately close, so the decision boundary
+        // needs genuine multi-scale filtering (not a single edge detector).
+        let orient = (cls % 5) as f32 * std::f32::consts::PI / 5.0
+            + rng.range(-0.08, 0.08);
+        let freq = (if cls < 5 { 0.45 } else { 0.72 }) * rng.range(0.92, 1.08);
+        let phase = rng.range(0.0, std::f32::consts::TAU);
+        let (sa, ca) = orient.sin_cos();
+        // a faint blob adds a second cue correlated with class parity
+        let blob = cls % 2 == 0;
+        let (bx, by) = (rng.range(6.0, w as f32 - 6.0), rng.range(6.0, h as f32 - 6.0));
+        let br = rng.range(2.5, 4.0);
+        // distractor texture: an uncorrelated second grating
+        let d_or = rng.range(0.0, std::f32::consts::PI);
+        let (dsa, dca) = d_or.sin_cos();
+        let d_freq = rng.range(0.3, 0.9);
+        let d_phase = rng.range(0.0, std::f32::consts::TAU);
+        for i in 0..h {
+            for j in 0..w {
+                let (fi, fj) = (i as f32, j as f32);
+                let t = (fi * ca + fj * sa) * freq + phase;
+                let stripe = t.sin() * 0.8;
+                let distract = ((fi * dca + fj * dsa) * d_freq + d_phase).sin() * 0.45;
+                let mut v = [stripe + distract, stripe * 0.6 - distract * 0.3,
+                             -stripe * 0.4 + distract * 0.2];
+                if blob {
+                    let d2 = (fi - by).powi(2) + (fj - bx).powi(2);
+                    let g = (-d2 / (2.0 * br * br)).exp();
+                    v[0] += 0.9 * g;
+                    v[2] += 0.7 * g;
+                }
+                for (c, val) in v.iter().enumerate() {
+                    let noise = rng.normal() * self.noise;
+                    x.set4(n, i, j, c, (val + noise).clamp(-2.5, 2.5));
+                }
+            }
+        }
+    }
+}
+
+/// Diffusion-task data: clean images x0 plus the noise/timestep tensors
+/// the AOT train/eval graphs expect.  The cosine abar schedule lives here
+/// (mirrored by `DiffusionGen::abar`).
+#[derive(Debug, Clone)]
+pub struct DiffusionGen {
+    pub seed: u64,
+    pub batch: usize,
+    pub h: usize,
+    pub w: usize,
+    pub t_max: usize,
+}
+
+impl DiffusionGen {
+    pub fn new(seed: u64, batch: usize, h: usize, w: usize) -> Self {
+        DiffusionGen { seed, batch, h, w, t_max: 1000 }
+    }
+
+    /// Cosine cumulative alpha-bar schedule (Nichol & Dhariwal).
+    pub fn abar(&self, t: f32) -> f32 {
+        let s = 0.008f32;
+        let f = |u: f32| (((u / self.t_max as f32 + s) / (1.0 + s))
+            * std::f32::consts::FRAC_PI_2)
+            .cos()
+            .powi(2);
+        (f(t) / f(0.0)).clamp(1e-4, 0.9999)
+    }
+
+    pub fn clean(&self, rng: &mut Rng) -> Vec<f32> {
+        let (h, w) = (self.h, self.w);
+        let mut img = vec![0.0f32; h * w * 3];
+        // smooth background gradient
+        let (gx, gy) = (rng.range(-0.5, 0.5), rng.range(-0.5, 0.5));
+        let base = [rng.range(-0.4, 0.4), rng.range(-0.4, 0.4), rng.range(-0.4, 0.4)];
+        let nblobs = 1 + rng.below(3);
+        let blobs: Vec<(f32, f32, f32, [f32; 3])> = (0..nblobs)
+            .map(|_| {
+                (
+                    rng.range(2.0, w as f32 - 2.0),
+                    rng.range(2.0, h as f32 - 2.0),
+                    rng.range(1.5, 4.5),
+                    [rng.range(-1.0, 1.0), rng.range(-1.0, 1.0), rng.range(-1.0, 1.0)],
+                )
+            })
+            .collect();
+        for i in 0..h {
+            for j in 0..w {
+                for c in 0..3 {
+                    let mut v = base[c]
+                        + gx * (j as f32 / w as f32 - 0.5)
+                        + gy * (i as f32 / h as f32 - 0.5);
+                    for (bx, by, r, col) in &blobs {
+                        let d2 = (i as f32 - by).powi(2) + (j as f32 - bx).powi(2);
+                        v += col[c] * (-d2 / (2.0 * r * r)).exp();
+                    }
+                    img[(i * w + j) * 3 + c] = v.clamp(-1.0, 1.0);
+                }
+            }
+        }
+        img
+    }
+
+    pub fn batch(&self, stream: u64, idx: u64) -> Batch {
+        let mut rng = Rng::new(
+            self.seed ^ stream.wrapping_mul(0xc2b2_ae35) ^ idx.wrapping_mul(0x2545_f491),
+        );
+        let (b, h, w) = (self.batch, self.h, self.w);
+        let mut x0 = Tensor::zeros(&[b, h, w, 3]);
+        let mut eps = Tensor::zeros(&[b, h, w, 3]);
+        let mut t = Tensor::zeros(&[b]);
+        let mut ab = Tensor::zeros(&[b]);
+        for n in 0..b {
+            let img = self.clean(&mut rng);
+            let off = n * h * w * 3;
+            x0.data[off..off + img.len()].copy_from_slice(&img);
+            for v in &mut eps.data[off..off + img.len()] {
+                *v = rng.normal();
+            }
+            let tt = rng.range(1.0, self.t_max as f32 - 1.0);
+            t.data[n] = tt;
+            ab.data[n] = self.abar(tt);
+        }
+        Batch::Diffusion { x0, eps, t, abar: ab }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classify_batches_deterministic() {
+        let g = ClassifyGen::new(7, 4, 16, 16);
+        let a = g.batch(0, 3);
+        let b = g.batch(0, 3);
+        match (a, b) {
+            (Batch::Classify { x: xa, y: ya }, Batch::Classify { x: xb, y: yb }) => {
+                assert_eq!(xa.data, xb.data);
+                assert_eq!(ya.data, yb.data);
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn classify_streams_differ() {
+        let g = ClassifyGen::new(7, 4, 16, 16);
+        let (a, b) = (g.batch(0, 1), g.batch(1, 1));
+        match (a, b) {
+            (Batch::Classify { x: xa, .. }, Batch::Classify { x: xb, .. }) => {
+                assert!(xa.max_abs_diff(&xb) > 1e-3);
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn labels_one_hot() {
+        let g = ClassifyGen::new(1, 8, 16, 16);
+        if let Batch::Classify { y, .. } = g.batch(0, 0) {
+            for n in 0..8 {
+                let row = &y.data[n * NUM_CLASSES..(n + 1) * NUM_CLASSES];
+                assert_eq!(row.iter().filter(|&&v| v == 1.0).count(), 1);
+                assert_eq!(row.iter().sum::<f32>(), 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn abar_monotone_decreasing() {
+        let g = DiffusionGen::new(1, 2, 8, 8);
+        let mut prev = g.abar(0.0);
+        for t in (50..1000).step_by(50) {
+            let a = g.abar(t as f32);
+            assert!(a <= prev + 1e-6, "abar not decreasing at t={t}");
+            assert!((1e-5..=1.0).contains(&a));
+            prev = a;
+        }
+    }
+
+    #[test]
+    fn diffusion_batch_shapes() {
+        let g = DiffusionGen::new(3, 2, 8, 8);
+        if let Batch::Diffusion { x0, eps, t, abar } = g.batch(0, 0) {
+            assert_eq!(x0.dims, vec![2, 8, 8, 3]);
+            assert_eq!(eps.dims, x0.dims);
+            assert_eq!(t.dims, vec![2]);
+            assert_eq!(abar.dims, vec![2]);
+            assert!(x0.data.iter().all(|v| (-1.0..=1.0).contains(v)));
+        } else {
+            unreachable!()
+        }
+    }
+}

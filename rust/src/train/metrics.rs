@@ -1,0 +1,107 @@
+//! Evaluation metrics beyond loss/accuracy.
+//!
+//! FDD — Fréchet Descriptor Distance: the FID substitution of DESIGN.md §2.
+//! FID is the Fréchet distance between Gaussians fitted to Inception-V3
+//! features of real vs generated images; we keep the metric and swap the
+//! embedder for our pretrained `resnetish` classifier's penultimate
+//! features.  We use the diagonal-covariance form
+//!
+//!   FDD = ||mu_r - mu_g||^2 + sum_d (sqrt(var_r,d) - sqrt(var_g,d))^2
+//!
+//! (the full-covariance matrix-sqrt term degenerates to this for diagonal
+//! fits; with feature dims >> sample counts here, diagonal estimation is
+//! the statistically sane choice).
+
+use crate::util::tensor::Tensor;
+
+/// Per-dimension mean and variance over a set of feature rows [N, D].
+pub fn feature_stats(feats: &Tensor) -> (Vec<f64>, Vec<f64>) {
+    let (n, d) = (feats.dims[0], feats.dims[1]);
+    assert!(n > 1, "need > 1 sample for variance");
+    let mut mean = vec![0.0f64; d];
+    for r in 0..n {
+        for c in 0..d {
+            mean[c] += feats.data[r * d + c] as f64;
+        }
+    }
+    for m in &mut mean {
+        *m /= n as f64;
+    }
+    let mut var = vec![0.0f64; d];
+    for r in 0..n {
+        for c in 0..d {
+            let diff = feats.data[r * d + c] as f64 - mean[c];
+            var[c] += diff * diff;
+        }
+    }
+    for v in &mut var {
+        *v /= (n - 1) as f64;
+    }
+    (mean, var)
+}
+
+/// Fréchet distance between diagonal Gaussians.
+pub fn frechet_diag(mu1: &[f64], var1: &[f64], mu2: &[f64], var2: &[f64]) -> f64 {
+    mu1.iter()
+        .zip(mu2)
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum::<f64>()
+        + var1
+            .iter()
+            .zip(var2)
+            .map(|(a, b)| (a.max(0.0).sqrt() - b.max(0.0).sqrt()).powi(2))
+            .sum::<f64>()
+}
+
+/// FDD between two feature sets.
+pub fn fdd(real: &Tensor, gen: &Tensor) -> f64 {
+    let (m1, v1) = feature_stats(real);
+    let (m2, v2) = feature_stats(gen);
+    frechet_diag(&m1, &v1, &m2, &v2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sample(rng: &mut Rng, n: usize, d: usize, mu: f32, sd: f32) -> Tensor {
+        Tensor::new(
+            vec![n, d],
+            (0..n * d).map(|_| mu + sd * rng.normal()).collect(),
+        )
+    }
+
+    #[test]
+    fn identical_distributions_near_zero() {
+        let mut r = Rng::new(1);
+        let a = sample(&mut r, 400, 8, 0.0, 1.0);
+        let b = sample(&mut r, 400, 8, 0.0, 1.0);
+        assert!(fdd(&a, &b) < 0.1, "fdd = {}", fdd(&a, &b));
+    }
+
+    #[test]
+    fn mean_shift_detected() {
+        let mut r = Rng::new(2);
+        let a = sample(&mut r, 400, 8, 0.0, 1.0);
+        let b = sample(&mut r, 400, 8, 2.0, 1.0);
+        let d = fdd(&a, &b);
+        assert!(d > 8.0 * 3.0, "fdd = {d}"); // ~ 8 dims * (2)^2 = 32
+    }
+
+    #[test]
+    fn scale_shift_detected() {
+        let mut r = Rng::new(3);
+        let a = sample(&mut r, 500, 4, 0.0, 1.0);
+        let b = sample(&mut r, 500, 4, 0.0, 3.0);
+        assert!(fdd(&a, &b) > 4.0 * 2.0, "fdd = {}", fdd(&a, &b));
+    }
+
+    #[test]
+    fn symmetric() {
+        let mut r = Rng::new(4);
+        let a = sample(&mut r, 100, 4, 0.5, 1.0);
+        let b = sample(&mut r, 100, 4, -0.5, 2.0);
+        assert!((fdd(&a, &b) - fdd(&b, &a)).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,170 @@
+//! Training substrate: synthetic data, pretrain/fine-tune drivers with the
+//! paper's cosine schedule, and evaluation metrics (accuracy, diffusion
+//! loss, FDD).
+
+pub mod data;
+pub mod metrics;
+
+use anyhow::Result;
+
+use crate::ir::{Gates, Task};
+use crate::model::{Batch, Model};
+use crate::train::data::{ClassifyGen, DiffusionGen};
+
+/// Train/eval stream tags (disjoint data).
+pub const STREAM_TRAIN: u64 = 0;
+pub const STREAM_EVAL: u64 = 1;
+/// The importance builder's fine-tuning subset (App. C uses a small random
+/// subset of train; a distinct stream models that).
+pub const STREAM_PROXY: u64 = 2;
+
+/// Data source matching a model's task.
+pub enum Gen {
+    Classify(ClassifyGen),
+    Diffusion(DiffusionGen),
+}
+
+impl Gen {
+    pub fn for_model(m: &Model, seed: u64) -> Gen {
+        match m.spec.task {
+            Task::Classify => Gen::Classify(ClassifyGen::new(
+                seed, m.spec.batch, m.spec.h, m.spec.w,
+            )),
+            Task::Diffusion => Gen::Diffusion(DiffusionGen::new(
+                seed, m.spec.batch, m.spec.h, m.spec.w,
+            )),
+        }
+    }
+
+    pub fn batch(&self, stream: u64, idx: u64) -> Batch {
+        match self {
+            Gen::Classify(g) => g.batch(stream, idx),
+            Gen::Diffusion(g) => g.batch(stream, idx),
+        }
+    }
+}
+
+/// Cosine learning-rate decay with a short linear warmup — the App. E
+/// fine-tuning schedule plus the warmup that keeps the norm-free nets out
+/// of the dead-ReLU basin at high LR.
+pub fn cosine_lr(base: f32, step: usize, total: usize) -> f32 {
+    let total = total.max(1);
+    let warm = (total / 20).max(3).min(total);
+    let scale = ((step + 1) as f32 / warm as f32).min(1.0);
+    let p = step as f32 / total as f32;
+    0.5 * base * scale * (1.0 + (std::f32::consts::PI * p).cos())
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainLog {
+    pub steps: usize,
+    pub final_loss: f32,
+    pub final_metric: f32,
+    /// (step, eval_loss, eval_metric) checkpoints — Fig. 3/4 recovery curves.
+    pub curve: Vec<(usize, f32, f32)>,
+}
+
+/// Run `steps` SGD steps with cosine LR; evaluates every `eval_every`
+/// steps on the eval stream (0 disables the curve).
+pub fn train(
+    model: &Model,
+    gen: &Gen,
+    params: &mut Vec<f32>,
+    gates: &Gates,
+    steps: usize,
+    base_lr: f32,
+    eval_every: usize,
+) -> Result<TrainLog> {
+    let mut mom = vec![0.0f32; params.len()];
+    let mut log = TrainLog { steps, final_loss: 0.0, final_metric: 0.0, curve: vec![] };
+    for s in 0..steps {
+        let batch = gen.batch(STREAM_TRAIN, s as u64);
+        let lr = cosine_lr(base_lr, s, steps);
+        let (loss, metric) = model.step(params, &mut mom, gates, &batch, lr)?;
+        log.final_loss = loss;
+        log.final_metric = metric;
+        if eval_every > 0 && (s + 1) % eval_every == 0 {
+            let (el, em) = evaluate(model, gen, params, gates, 4)?;
+            log.curve.push((s + 1, el, em));
+        }
+    }
+    Ok(log)
+}
+
+/// KD fine-tuning (Table 11): same loop through the distill_step graph.
+pub fn train_distill(
+    model: &Model,
+    gen: &Gen,
+    teacher: &[f32],
+    params: &mut Vec<f32>,
+    gates: &Gates,
+    steps: usize,
+    base_lr: f32,
+) -> Result<TrainLog> {
+    let mut mom = vec![0.0f32; params.len()];
+    let mut log = TrainLog { steps, final_loss: 0.0, final_metric: 0.0, curve: vec![] };
+    for s in 0..steps {
+        let batch = gen.batch(STREAM_TRAIN, s as u64);
+        let lr = cosine_lr(base_lr, s, steps);
+        let (loss, metric) =
+            model.distill(teacher, params, &mut mom, gates, &batch, lr)?;
+        log.final_loss = loss;
+        log.final_metric = metric;
+    }
+    Ok(log)
+}
+
+/// Mean (loss, metric) over `n` eval-stream batches.
+pub fn evaluate(
+    model: &Model,
+    gen: &Gen,
+    params: &[f32],
+    gates: &Gates,
+    n: usize,
+) -> Result<(f32, f32)> {
+    let (mut l, mut m) = (0.0, 0.0);
+    for i in 0..n {
+        let batch = gen.batch(STREAM_EVAL, i as u64);
+        let (li, mi) = model.eval(params, gates, &batch)?;
+        l += li;
+        m += mi;
+    }
+    Ok((l / n as f32, m / n as f32))
+}
+
+/// Few-step fine-tune + evaluate for the importance tables (Eq. 4's inner
+/// max, estimated per App. C "fine-tuning for a few steps on a subset").
+/// Returns the post-fine-tune metric (Perf).
+pub fn proxy_perf(
+    model: &Model,
+    gen: &Gen,
+    pretrained: &[f32],
+    gates: &Gates,
+    steps: usize,
+    lr: f32,
+    eval_batches: usize,
+) -> Result<f32> {
+    let mut params = pretrained.to_vec();
+    let mut mom = vec![0.0f32; params.len()];
+    for s in 0..steps {
+        let batch = gen.batch(STREAM_PROXY, s as u64);
+        model.step(&mut params, &mut mom, gates, &batch, lr)?;
+    }
+    let (_, metric) = evaluate(model, gen, &params, gates, eval_batches)?;
+    Ok(metric)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cosine_schedule_endpoints() {
+        // warmup ramps linearly over the first ~5% of steps
+        assert!(cosine_lr(0.1, 0, 100) < 0.05);
+        assert!((cosine_lr(0.1, 4, 100) - 0.1 * 0.5 * (1.0 + (0.04 * std::f32::consts::PI).cos())).abs() < 1e-5);
+        assert!(cosine_lr(0.1, 100, 100) < 1e-6);
+        assert!(cosine_lr(0.1, 50, 100) > 0.04);
+        assert!(cosine_lr(0.1, 50, 100) < 0.06);
+    }
+}

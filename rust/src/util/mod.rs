@@ -1,0 +1,7 @@
+//! In-tree substrates replacing crates unavailable in the offline vendor
+//! set (DESIGN.md §2): JSON, PRNG, tensors, property testing.
+
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod tensor;

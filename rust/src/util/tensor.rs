@@ -1,0 +1,148 @@
+//! Host-side dense f32 tensor — the lingua franca between the coordinator,
+//! the PJRT runtime and the merge algebra.  Deliberately simple: row-major,
+//! f32 only (everything this system exchanges with the AOT artifacts is f32).
+
+use std::fmt;
+
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}(n={})", self.dims, self.data.len())
+    }
+}
+
+impl Tensor {
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len(),
+                   "dims {dims:?} vs len {}", data.len());
+        Tensor { dims, data }
+    }
+
+    pub fn zeros(dims: &[usize]) -> Self {
+        let n = dims.iter().product();
+        Tensor { dims: dims.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn full(dims: &[usize], v: f32) -> Self {
+        let n = dims.iter().product();
+        Tensor { dims: dims.to_vec(), data: vec![v; n] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor { dims: vec![], data: vec![v] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Row-major linear index for a 4-d tensor.
+    #[inline]
+    pub fn idx4(&self, a: usize, b: usize, c: usize, d: usize) -> usize {
+        debug_assert_eq!(self.dims.len(), 4);
+        ((a * self.dims[1] + b) * self.dims[2] + c) * self.dims[3] + d
+    }
+
+    #[inline]
+    pub fn at4(&self, a: usize, b: usize, c: usize, d: usize) -> f32 {
+        self.data[self.idx4(a, b, c, d)]
+    }
+
+    #[inline]
+    pub fn set4(&mut self, a: usize, b: usize, c: usize, d: usize, v: f32) {
+        let i = self.idx4(a, b, c, d);
+        self.data[i] = v;
+    }
+
+    pub fn reshape(mut self, dims: Vec<usize>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), self.data.len());
+        self.dims = dims;
+        self
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.dims, other.dims);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Relative L2 distance ||a-b|| / (||b|| + eps).
+    pub fn rel_l2(&self, other: &Tensor) -> f32 {
+        let num: f32 = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum();
+        let den: f32 = other.data.iter().map(|b| b * b).sum();
+        (num.sqrt()) / (den.sqrt() + 1e-12)
+    }
+
+    pub fn l1_norm(&self) -> f32 {
+        self.data.iter().map(|x| x.abs()).sum()
+    }
+
+    // ---- binary IO (matches the <f4 layout of artifacts/<m>/init.bin) -----
+
+    pub fn read_f32_file(path: &std::path::Path) -> std::io::Result<Vec<f32>> {
+        let bytes = std::fs::read(path)?;
+        assert_eq!(bytes.len() % 4, 0, "{path:?} not f32-aligned");
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn write_f32_file(path: &std::path::Path, data: &[f32]) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut bytes = Vec::with_capacity(data.len() * 4);
+        for v in data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(path, bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_roundtrip() {
+        let mut t = Tensor::zeros(&[2, 3, 4, 5]);
+        t.set4(1, 2, 3, 4, 7.0);
+        assert_eq!(t.at4(1, 2, 3, 4), 7.0);
+        assert_eq!(t.data.iter().filter(|&&x| x != 0.0).count(), 1);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("lm_tensor_test");
+        let path = dir.join("t.bin");
+        let data = vec![1.0f32, -2.5, 3.25];
+        Tensor::write_f32_file(&path, &data).unwrap();
+        assert_eq!(Tensor::read_f32_file(&path).unwrap(), data);
+    }
+
+    #[test]
+    fn diff_metrics() {
+        let a = Tensor::new(vec![3], vec![1.0, 2.0, 3.0]);
+        let b = Tensor::new(vec![3], vec![1.0, 2.0, 4.0]);
+        assert_eq!(a.max_abs_diff(&b), 1.0);
+        assert!(a.rel_l2(&a) < 1e-9);
+    }
+}

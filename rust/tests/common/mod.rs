@@ -1,0 +1,37 @@
+//! Shared helpers for integration tests.  Tests that need the AOT
+//! artifacts skip (with a notice) when `make artifacts` has not run —
+//! `make test` always builds them first.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use layermerge::model::Manifest;
+use layermerge::runtime::Runtime;
+
+pub struct TestCtx {
+    pub rt: Arc<Runtime>,
+    pub man: Manifest,
+    pub root: PathBuf,
+}
+
+pub fn ctx() -> Option<TestCtx> {
+    let root = PathBuf::from("artifacts");
+    if !root.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return None;
+    }
+    let rt = Arc::new(Runtime::new(&root).expect("pjrt cpu client"));
+    let man = Manifest::load(&root).expect("manifest");
+    Some(TestCtx { rt, man, root })
+}
+
+pub fn rand_tensor(
+    rng: &mut layermerge::util::rng::Rng,
+    dims: &[usize],
+) -> layermerge::util::tensor::Tensor {
+    let n: usize = dims.iter().product();
+    layermerge::util::tensor::Tensor::new(
+        dims.to_vec(),
+        (0..n).map(|_| rng.normal()).collect(),
+    )
+}

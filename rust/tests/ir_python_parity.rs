@@ -1,0 +1,152 @@
+//! Integration: the Rust IR's combinatorics agree with the Python specs
+//! that generated the artifacts — every (i, j, k) the solver can pick has
+//! a conv artifact (the enumeration-parity contract of DESIGN.md §4), and
+//! structural invariants hold on all real model families.
+
+mod common;
+
+use common::ctx;
+use layermerge::ir::{Spec, K_MAX};
+use layermerge::model::sig_str;
+
+const MODELS: [&str; 5] =
+    ["resnetish", "mnv2ish-1.0", "mnv2ish-1.4", "mnv2ish-0.75", "ddpmish"];
+
+fn load(t: &common::TestCtx, name: &str) -> Spec {
+    Spec::load(&t.root.join(format!("specs/{name}.spec.json"))).unwrap()
+}
+
+#[test]
+fn every_solver_span_has_a_conv_artifact() {
+    let Some(t) = ctx() else { return };
+    for name in MODELS {
+        let spec = load(&t, name);
+        let mut missing = Vec::new();
+        for (i, j) in spec.spans() {
+            let first = spec.conv(i + 1);
+            for k in spec.kernel_options(i, j) {
+                let sig = sig_str(
+                    spec.batch, first.h_in, first.w_in, first.cin,
+                    spec.conv(j).cout, k, spec.span_stride(i, j),
+                    spec.span_depthwise(i, j),
+                );
+                if t.man.conv_art(&sig, "plain").is_none() {
+                    missing.push(sig);
+                }
+            }
+        }
+        assert!(missing.is_empty(), "{name}: missing artifacts {missing:?}");
+    }
+}
+
+#[test]
+fn projection_shortcuts_have_artifacts() {
+    let Some(t) = ctx() else { return };
+    for name in MODELS {
+        let spec = load(&t, name);
+        for c in &spec.convs {
+            if let (Some(af), Some(p)) = (c.add_from, &c.add_proj) {
+                let src = spec.conv(af);
+                let sig = sig_str(
+                    spec.batch, src.h_in, src.w_in, p.cin, p.cout, p.k,
+                    p.stride, false,
+                );
+                assert!(
+                    t.man.conv_art(&sig, "plain").is_some(),
+                    "{name}: missing projection artifact {sig}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn irreducible_set_matches_shape_preservation() {
+    let Some(t) = ctx() else { return };
+    for name in MODELS {
+        let spec = load(&t, name);
+        for c in &spec.convs {
+            let preserving =
+                c.cin == c.cout && c.stride == 1 && c.concat_from.is_none();
+            if c.conv_gated {
+                assert!(preserving, "{name} layer {} wrongly reducible", c.idx);
+            }
+        }
+        assert!(!spec.irreducible().is_empty(), "{name}: R empty?");
+    }
+}
+
+#[test]
+fn kernel_options_respect_cap_and_parity() {
+    let Some(t) = ctx() else { return };
+    for name in MODELS {
+        let spec = load(&t, name);
+        for (i, j) in spec.spans() {
+            let opts = spec.kernel_options(i, j);
+            assert!(!opts.is_empty() || {
+                // spans whose forced kernel exceeds K_MAX legitimately
+                // have no options — the solver then can't pick them
+                true
+            });
+            for k in opts {
+                assert!(k <= K_MAX && k % 2 == 1, "{name} ({i},{j}) k={k}");
+            }
+        }
+    }
+}
+
+#[test]
+fn segments_partition_the_chain() {
+    let Some(t) = ctx() else { return };
+    for name in MODELS {
+        let spec = load(&t, name);
+        let segs = spec.segments();
+        let mut expect = 1usize;
+        for (s, e) in &segs {
+            assert_eq!(*s, expect, "{name}: segment gap");
+            assert!(e >= s);
+            expect = e + 1;
+        }
+        assert_eq!(expect, spec.len() + 1, "{name}: segments don't cover L");
+    }
+}
+
+#[test]
+fn single_layer_spans_always_available() {
+    // the DP must always have the trivial cover (no merging at all)
+    let Some(t) = ctx() else { return };
+    for name in MODELS {
+        let spec = load(&t, name);
+        let spans = spec.spans();
+        for j in 1..=spec.len() {
+            assert!(
+                spans.contains(&(j - 1, j)),
+                "{name}: missing singleton span ({}, {j}]",
+                j - 1
+            );
+        }
+    }
+}
+
+#[test]
+fn init_params_finite_and_sized() {
+    let Some(t) = ctx() else { return };
+    for name in MODELS {
+        let spec = load(&t, name);
+        let init = layermerge::util::tensor::Tensor::read_f32_file(
+            &t.root.join(format!("{name}/init.bin")),
+        )
+        .unwrap();
+        assert_eq!(init.len(), spec.param_count, "{name}: init size");
+        assert!(init.iter().all(|v| v.is_finite()), "{name}: non-finite init");
+        // parameter layout covers the vector exactly, without overlap
+        let mut covered = 0usize;
+        let mut max_end = 0usize;
+        for p in &spec.params {
+            assert_eq!(p.offset, covered, "{name}: layout gap at {}", p.name);
+            covered += p.size;
+            max_end = max_end.max(p.offset + p.size);
+        }
+        assert_eq!(max_end, spec.param_count);
+    }
+}

@@ -1,0 +1,190 @@
+//! Integration: the deployed merged network (exec::Plan) agrees with the
+//! gated AOT graph that fine-tuning saw, across solution shapes — the
+//! load-bearing correctness property of the whole deployment path.
+//!
+//! * original plan (no compression) == gated graph with pristine gates
+//!   (exact: no padding reorder happens for singleton spans);
+//! * merged multi-layer spans == gated graph up to the SAME-padding
+//!   reorder boundary effect (small rel_l2; interior is exact — the
+//!   merge-module unit tests pin the exact VALID-conv algebra);
+//! * Fused format == Eager format (exact).
+
+mod common;
+
+use std::collections::BTreeSet;
+use std::sync::Arc;
+
+use common::ctx;
+use layermerge::exec::{Format, Plan};
+use layermerge::ir::Spec;
+use layermerge::model::{Batch, Model};
+use layermerge::train::{self, Gen};
+
+fn setup(t: &common::TestCtx, name: &str) -> (Model, Vec<f32>) {
+    let model = Model::load(Arc::clone(&t.rt), &Manifest_of(t), name).unwrap();
+    let params = model.init.clone();
+    (model, params)
+}
+
+// Manifest isn't Clone; reload it cheaply.
+fn Manifest_of(t: &common::TestCtx) -> layermerge::model::Manifest {
+    layermerge::model::Manifest::load(&t.root).unwrap()
+}
+
+#[test]
+fn original_plan_matches_gated_graph_exactly() {
+    let Some(t) = ctx() else { return };
+    for name in ["resnetish", "mnv2ish-1.0"] {
+        let man = Manifest_of(&t);
+        let (model, params) = setup(&t, name);
+        let gen = Gen::for_model(&model, 7);
+        let batch = gen.batch(train::STREAM_EVAL, 0);
+        let x = match &batch {
+            Batch::Classify { x, .. } => x.clone(),
+            _ => unreachable!(),
+        };
+        let gates = model.spec.pristine_gates();
+        let gated = model.forward(&params, &gates, &batch).unwrap();
+        let plan = Plan::original(&model.spec, &params).unwrap();
+        let eager = plan.forward(&model.rt, &man, &x, None, Format::Eager).unwrap();
+        assert!(
+            eager.rel_l2(&gated) < 1e-4,
+            "{name}: original plan deviates rel_l2 {}",
+            eager.rel_l2(&gated)
+        );
+        let fused = plan.forward(&model.rt, &man, &x, None, Format::Fused).unwrap();
+        assert!(fused.rel_l2(&eager) < 1e-5, "{name}: fused != eager");
+    }
+}
+
+/// Build a "merge everything in each segment, keep all convs" solution —
+/// the Depth baseline's extreme point — and check plan-vs-gated deviation
+/// stays small (boundary-only effect).
+#[test]
+fn segment_merged_plan_close_to_gated_graph() {
+    let Some(t) = ctx() else { return };
+    let man = Manifest_of(&t);
+    let (model, params) = setup(&t, "resnetish");
+    let spec: &Spec = &model.spec;
+    let mut a: Vec<usize> = Vec::new();
+    let mut spans: Vec<(usize, usize, usize)> = Vec::new();
+    for (s, e) in spec.segments() {
+        // cover the segment greedily with valid spans of full kernels
+        let mut i = s - 1;
+        while i < e {
+            let mut j_pick = i + 1;
+            for j in ((i + 1)..=e).rev() {
+                if spec.valid_span(i, j) {
+                    let kf = layermerge::solver::depth::k_full(spec, i, j);
+                    if spec.kernel_options(i, j).contains(&kf) {
+                        j_pick = j;
+                        break;
+                    }
+                }
+            }
+            let kf = layermerge::solver::depth::k_full(spec, i, j_pick);
+            spans.push((i, j_pick, kf));
+            if j_pick != spec.len() {
+                a.push(j_pick);
+            }
+            i = j_pick;
+        }
+    }
+    let c: BTreeSet<usize> = (1..=spec.len()).collect();
+    assert!(
+        spans.iter().any(|&(i, j, _)| j - i > 1),
+        "expected at least one real merge in {spans:?}"
+    );
+    let a_set: BTreeSet<usize> = a.iter().copied().collect();
+    let gates = spec.solution_gates(&a_set, &c, &spans);
+    let gen = Gen::for_model(&model, 7);
+    let batch = gen.batch(train::STREAM_EVAL, 1);
+    let x = match &batch {
+        Batch::Classify { x, .. } => x.clone(),
+        _ => unreachable!(),
+    };
+    let gated = model.forward(&params, &gates, &batch).unwrap();
+    let plan = Plan::from_solution(spec, &params, &a, &c, &spans).unwrap();
+    assert!(plan.depth() < spec.len(), "merging must reduce depth");
+    let eager = plan.forward(&model.rt, &man, &x, None, Format::Eager).unwrap();
+    let dev = eager.rel_l2(&gated);
+    // SAME-padding reorder: boundary rows differ, logits shift slightly.
+    assert!(dev < 0.35, "merged plan deviates too much: rel_l2 {dev}");
+    let fused = plan.forward(&model.rt, &man, &x, None, Format::Fused).unwrap();
+    assert!(fused.rel_l2(&eager) < 1e-4, "fused != eager: {}", fused.rel_l2(&eager));
+}
+
+/// LayerOnly-style dropped layers must be *elided* from the plan (true
+/// latency reduction), and numerics must match the gated graph exactly.
+#[test]
+fn dropped_layers_are_elided_and_exact() {
+    let Some(t) = ctx() else { return };
+    let man = Manifest_of(&t);
+    let (model, params) = setup(&t, "resnetish");
+    let spec = &model.spec;
+    // drop the first two reducible non-add layers
+    let droppable: Vec<usize> = spec
+        .convs
+        .iter()
+        .filter(|c| c.conv_gated && c.add_from.is_none())
+        .map(|c| c.idx)
+        .take(2)
+        .collect();
+    assert_eq!(droppable.len(), 2);
+    let c_set: BTreeSet<usize> =
+        (1..=spec.len()).filter(|l| !droppable.contains(l)).collect();
+    let a: Vec<usize> = (1..spec.len())
+        .filter(|l| !droppable.contains(l))
+        .collect();
+    let spans: Vec<(usize, usize, usize)> = (1..=spec.len())
+        .map(|j| (j - 1, j, if c_set.contains(&j) { spec.conv(j).k } else { 1 }))
+        .collect();
+    let plan = Plan::from_solution(spec, &params, &a, &c_set, &spans).unwrap();
+    assert_eq!(
+        plan.depth(),
+        spec.len() - droppable.len(),
+        "dropped layers not elided"
+    );
+    let a_set: BTreeSet<usize> = a.iter().copied().collect();
+    let gates = spec.solution_gates(&a_set, &c_set, &spans);
+    let gen = Gen::for_model(&model, 7);
+    let batch = gen.batch(train::STREAM_EVAL, 2);
+    let x = match &batch {
+        Batch::Classify { x, .. } => x.clone(),
+        _ => unreachable!(),
+    };
+    let gated = model.forward(&params, &gates, &batch).unwrap();
+    let eager = plan.forward(&model.rt, &man, &x, None, Format::Eager).unwrap();
+    assert!(
+        eager.rel_l2(&gated) < 1e-4,
+        "dropped-layer plan deviates: {}",
+        eager.rel_l2(&gated)
+    );
+}
+
+/// The diffusion plan must run end to end (concat, gn, attention,
+/// upsample, time bias) and agree with the gated graph on the original
+/// configuration.
+#[test]
+fn ddpm_original_plan_matches_gated_graph() {
+    let Some(t) = ctx() else { return };
+    let man = Manifest_of(&t);
+    let (model, params) = setup(&t, "ddpmish");
+    let gen = Gen::for_model(&model, 7);
+    let batch = gen.batch(train::STREAM_EVAL, 0);
+    let (x0, tt) = match &batch {
+        Batch::Diffusion { x0, t, .. } => (x0.clone(), t.clone()),
+        _ => unreachable!(),
+    };
+    let gates = model.spec.pristine_gates();
+    let gated = model.forward(&params, &gates, &batch).unwrap();
+    let plan = Plan::original(&model.spec, &params).unwrap();
+    let eager = plan
+        .forward(&model.rt, &man, &x0, Some(&tt), Format::Eager)
+        .unwrap();
+    assert!(
+        eager.rel_l2(&gated) < 1e-3,
+        "ddpm plan deviates rel_l2 {}",
+        eager.rel_l2(&gated)
+    );
+}

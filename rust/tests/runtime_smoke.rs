@@ -1,0 +1,141 @@
+//! Integration: the PJRT runtime loads and executes AOT artifacts with
+//! correct numerics — conv modules vs a host oracle, Pallas flavor vs XLA
+//! flavor, and the elementwise module family.
+
+mod common;
+
+use common::{ctx, rand_tensor};
+use layermerge::model::sig_str;
+use layermerge::util::rng::Rng;
+use layermerge::util::tensor::Tensor;
+
+/// Host SAME conv oracle (NHWC x OIHW), stride 1.
+fn host_conv_same(x: &Tensor, w: &Tensor, bias: &[f32]) -> Tensor {
+    let (b, h, wd, ci) = (x.dims[0], x.dims[1], x.dims[2], x.dims[3]);
+    let (co, _ci, k) = (w.dims[0], w.dims[1], w.dims[2]);
+    let p = k / 2;
+    let mut y = Tensor::zeros(&[b, h, wd, co]);
+    for n in 0..b {
+        for i in 0..h {
+            for j in 0..wd {
+                for o in 0..co {
+                    let mut acc = bias[o];
+                    for c in 0..ci {
+                        for a in 0..k {
+                            for bb in 0..k {
+                                let ii = i + a;
+                                let jj = j + bb;
+                                if ii >= p && jj >= p && ii - p < h && jj - p < wd {
+                                    acc += x.at4(n, ii - p, jj - p, c) * w.at4(o, c, a, bb);
+                                }
+                            }
+                        }
+                    }
+                    y.set4(n, i, j, o, acc);
+                }
+            }
+        }
+    }
+    y
+}
+
+#[test]
+fn conv_module_matches_host_oracle() {
+    let Some(t) = ctx() else { return };
+    // resnetish stem signature: b32 h32 w32 i3 o16 k3 s1
+    let sig = sig_str(32, 32, 32, 3, 16, 3, 1, false);
+    let rel = t.man.conv_art(&sig, "plain").expect("stem conv artifact");
+    let exec = t.rt.load(&rel).unwrap();
+    let mut rng = Rng::new(11);
+    let x = rand_tensor(&mut rng, &[32, 32, 32, 3]);
+    let w = rand_tensor(&mut rng, &[16, 3, 3, 3]);
+    let b = rand_tensor(&mut rng, &[16]);
+    let got = exec.run(&[&x, &w, &b]).unwrap().remove(0);
+    let want = host_conv_same(&x, &w, &b.data);
+    assert!(got.rel_l2(&want) < 1e-4, "rel_l2 {}", got.rel_l2(&want));
+}
+
+#[test]
+fn pallas_flavor_matches_xla_flavor() {
+    let Some(t) = ctx() else { return };
+    let mut rng = Rng::new(12);
+    let mut checked = 0;
+    for sig in t.man.conv_sigs() {
+        let Some(prel) = t.man.conv_art(&sig, "pallas") else { continue };
+        let xrel = t.man.conv_art(&sig, "plain").unwrap();
+        let pe = t.rt.load(&prel).unwrap();
+        let xe = t.rt.load(&xrel).unwrap();
+        // parse dims back out of the signature string
+        let parse = |tag: &str, next: &str| -> usize {
+            let s = &sig[sig.find(tag).unwrap() + tag.len()..];
+            let end = s.find(next).unwrap();
+            s[..end].parse().unwrap()
+        };
+        let (b, h, w) = (parse("b", "h"), parse("h", "w"), parse("w", "i"));
+        let (ci, co) = (parse("i", "o"), parse("o", "k"));
+        let k = parse("k", "s");
+        let dw = sig.ends_with("dw");
+        let x = rand_tensor(&mut rng, &[b, h, w, ci]);
+        let wt = rand_tensor(&mut rng, &[co, if dw { 1 } else { ci }, k, k]);
+        let bias = rand_tensor(&mut rng, &[co]);
+        let py = pe.run(&[&x, &wt, &bias]).unwrap().remove(0);
+        let xy = xe.run(&[&x, &wt, &bias]).unwrap().remove(0);
+        assert!(
+            py.rel_l2(&xy) < 1e-4,
+            "pallas vs xla mismatch on {sig}: rel_l2 {}",
+            py.rel_l2(&xy)
+        );
+        checked += 1;
+    }
+    assert!(checked >= 4, "expected several pallas test signatures, got {checked}");
+    eprintln!("pallas-vs-xla checked {checked} signatures");
+}
+
+#[test]
+fn fused_variant_equals_plain_plus_act() {
+    let Some(t) = ctx() else { return };
+    let sig = sig_str(32, 32, 32, 16, 16, 3, 1, false);
+    let plain = t.rt.load(&t.man.conv_art(&sig, "plain").unwrap()).unwrap();
+    let fused = t.rt.load(&t.man.conv_art(&sig, "fa_relu").unwrap()).unwrap();
+    let mut rng = Rng::new(13);
+    let x = rand_tensor(&mut rng, &[32, 32, 32, 16]);
+    let w = rand_tensor(&mut rng, &[16, 16, 3, 3]);
+    let b = rand_tensor(&mut rng, &[16]);
+    let mut y = plain.run(&[&x, &w, &b]).unwrap().remove(0);
+    for v in &mut y.data {
+        *v = v.max(0.0);
+    }
+    let yf = fused.run(&[&x, &w, &b]).unwrap().remove(0);
+    assert!(yf.rel_l2(&y) < 1e-5);
+}
+
+#[test]
+fn residual_variant_adds_input() {
+    let Some(t) = ctx() else { return };
+    let sig = sig_str(32, 32, 32, 16, 16, 3, 1, false);
+    let plain = t.rt.load(&t.man.conv_art(&sig, "plain").unwrap()).unwrap();
+    let farv = t.rt.load(&t.man.conv_art(&sig, "far_none").unwrap()).unwrap();
+    let mut rng = Rng::new(14);
+    let x = rand_tensor(&mut rng, &[32, 32, 32, 16]);
+    let w = rand_tensor(&mut rng, &[16, 16, 3, 3]);
+    let b = rand_tensor(&mut rng, &[16]);
+    let r = rand_tensor(&mut rng, &[32, 32, 32, 16]);
+    let mut y = plain.run(&[&x, &w, &b]).unwrap().remove(0);
+    for (a, bb) in y.data.iter_mut().zip(&r.data) {
+        *a += *bb;
+    }
+    let yf = farv.run(&[&x, &w, &b, &r]).unwrap().remove(0);
+    assert!(yf.rel_l2(&y) < 1e-5);
+}
+
+#[test]
+fn executable_cache_hits() {
+    let Some(t) = ctx() else { return };
+    let sig = sig_str(32, 32, 32, 3, 16, 3, 1, false);
+    let rel = t.man.conv_art(&sig, "plain").unwrap();
+    let before = *t.rt.compile_count.lock().unwrap();
+    let _a = t.rt.load(&rel).unwrap();
+    let _b = t.rt.load(&rel).unwrap();
+    let after = *t.rt.compile_count.lock().unwrap();
+    assert!(after <= before + 1, "cache miss on repeated load");
+}
