@@ -3,13 +3,18 @@
 //! compression.  This is the "latency-critical application" workload the
 //! paper's introduction motivates (mobile / self-driving inference).
 //!
+//! Each deployed network is lowered **once** to a [`CompiledPlan`] and the
+//! request loop runs on it: zero artifact lookups, cache-mutex
+//! acquisitions, or boundary-tensor clones per request — the serving hot
+//! path is nothing but PJRT dispatches.
+//!
 //! ```bash
 //! make artifacts && cargo run --release --example serve_classifier
 //! ```
 
 use std::time::Instant;
 
-use layermerge::exec::{Format, Plan};
+use layermerge::exec::{CompiledPlan, Format, Plan};
 use layermerge::experiments::Ctx;
 use layermerge::pipeline::{host_accuracy, Method, PipelineCfg};
 use layermerge::train;
@@ -18,15 +23,14 @@ const REQUESTS: usize = 40;
 
 fn serve(
     name: &str,
-    plan: &Plan,
+    plan: &CompiledPlan<'_>,
     pipe: &layermerge::pipeline::Pipeline,
-    ctx: &Ctx,
 ) -> anyhow::Result<(f64, f64, f64, f32)> {
     // warm-up
     for i in 0..3 {
         let b = pipe.gen.batch(train::STREAM_EVAL, i);
         if let layermerge::model::Batch::Classify { x, .. } = &b {
-            plan.forward(&pipe.model.rt, &ctx.man, x, None, Format::Fused)?;
+            plan.forward(x, None)?;
         }
     }
     let mut lat = Vec::with_capacity(REQUESTS);
@@ -36,7 +40,7 @@ fn serve(
         let b = pipe.gen.batch(train::STREAM_EVAL, i as u64);
         if let layermerge::model::Batch::Classify { x, y } = &b {
             let t = Instant::now();
-            let logits = plan.forward(&pipe.model.rt, &ctx.man, x, None, Format::Fused)?;
+            let logits = plan.forward(x, None)?;
             lat.push(t.elapsed().as_secs_f64() * 1e3);
             correct += host_accuracy(&logits, y);
         }
@@ -60,7 +64,8 @@ fn main() -> anyhow::Result<()> {
 
     println!("serving {} batched requests (batch {})\n", REQUESTS, pipe.model.spec.batch);
     let orig = Plan::original(&pipe.model.spec, &pipe.pretrained)?;
-    let (p50_o, _, thr_o, _) = serve("original mnv2ish-1.0", &orig, &pipe, &ctx)?;
+    let orig_cp = orig.compile(&pipe.model.rt, &ctx.man, Format::Fused)?;
+    let (p50_o, _, thr_o, _) = serve("original mnv2ish-1.0", &orig_cp, &pipe)?;
 
     for budget in [0.65, 0.5] {
         let c = pipe.run(Method::LayerMerge, budget)?;
@@ -68,11 +73,12 @@ fn main() -> anyhow::Result<()> {
             &pipe.model.spec, &c.finetuned, &c.solution.a, &c.solution.c,
             &c.solution.spans,
         )?;
+        let cp = plan.compile(&pipe.model.rt, &ctx.man, Format::Fused)?;
         let (p50, _, thr, _) =
-            serve(&format!("LayerMerge-{:.0}%", budget * 100.0), &plan, &pipe, &ctx)?;
+            serve(&format!("LayerMerge-{:.0}%", budget * 100.0), &cp, &pipe)?;
         println!(
             "  -> speedup p50 {:.2}x, throughput {:.2}x, depth {} -> {}\n",
-            p50_o / p50, thr / thr_o, pipe.model.spec.len(), plan.depth(),
+            p50_o / p50, thr / thr_o, pipe.model.spec.len(), cp.depth(),
         );
     }
     Ok(())

@@ -1,11 +1,24 @@
 //! Bench: parameter-space merging (Sec. 2's theta_2 * theta_1 operator and
 //! the full span composition of Algorithm 2) — the deployment-time hot
-//! path of the merge engine.
+//! path of the merge engine — plus the eager vs compiled-plan forward
+//! comparison.
+//!
+//! Emits a machine-readable perf record (`BENCH_merge.json` at the repo
+//! root, override with `BENCH_OUT`) in a stable schema so the trajectory
+//! of the GEMM merge path and the zero-overhead execution plans can be
+//! compared across PRs:
+//!
+//! ```json
+//! { "schema": "layermerge.bench.merge.v1",
+//!   "rows": [ {name, iters, mean_ms, p50_ms, p95_ms, min_ms}, ... ],
+//!   "derived": { "merge_speedup_c256": ..., ... } }
+//! ```
 
 use std::collections::BTreeSet;
 
-use layermerge::bench::bench;
-use layermerge::merge::{dirac, expand_depthwise, merge_kernels};
+use layermerge::bench::{bench, bench_iters, BenchStats};
+use layermerge::merge::{dirac, expand_depthwise, merge_kernels, merge_kernels_ref};
+use layermerge::util::json::Json;
 use layermerge::util::rng::Rng;
 use layermerge::util::tensor::Tensor;
 
@@ -14,21 +27,69 @@ fn randt(rng: &mut Rng, dims: &[usize]) -> Tensor {
     Tensor::new(dims.to_vec(), (0..n).map(|_| rng.normal()).collect())
 }
 
-fn main() {
-    println!("== merge-operator benches ==");
+fn stats_json(s: &BenchStats) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(&s.name)),
+        ("iters", Json::num(s.iters as f64)),
+        ("mean_ms", Json::num(s.mean_ms)),
+        ("p50_ms", Json::num(s.p50_ms)),
+        ("p95_ms", Json::num(s.p95_ms)),
+        ("min_ms", Json::num(s.min_ms)),
+    ])
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut rows: Vec<Json> = Vec::new();
+    let mut derived: Vec<(String, Json)> = Vec::new();
     let mut rng = Rng::new(1);
+
+    println!("== merge-operator benches (flat-GEMM vs naive oracle) ==");
     for &(c, k1, k2) in &[(16usize, 3usize, 3usize), (64, 3, 3), (64, 7, 3), (128, 11, 3)] {
         let w1 = randt(&mut rng, &[c, c, k1, k1]);
         let w2 = randt(&mut rng, &[c, c, k2, k2]);
-        let s = bench(
-            &format!("merge_kernels c={c} k1={k1} k2={k2}"),
+        let fast = bench(
+            &format!("merge_kernels_gemm c={c} k1={k1} k2={k2}"),
             2,
             300.0,
             || {
                 std::hint::black_box(merge_kernels(&w1, &w2, 1));
             },
         );
-        println!("{}", s.row());
+        println!("{}", fast.row());
+        let slow = bench_iters(
+            &format!("merge_kernels_naive c={c} k1={k1} k2={k2}"),
+            1,
+            5,
+            || {
+                std::hint::black_box(merge_kernels_ref(&w1, &w2, 1));
+            },
+        );
+        println!("{}  ({:.1}x vs naive)", slow.row(), slow.p50_ms / fast.p50_ms);
+        rows.push(stats_json(&fast));
+        rows.push(stats_json(&slow));
+    }
+
+    // Acceptance target: ResNet-scale 256-channel span, k1=k2=3, s1=1.
+    {
+        let (c, k1, k2) = (256usize, 3usize, 3usize);
+        let w1 = randt(&mut rng, &[c, c, k1, k1]);
+        let w2 = randt(&mut rng, &[c, c, k2, k2]);
+        // parity guard so the reported speedup is honest
+        let diff = merge_kernels(&w1, &w2, 1).max_abs_diff(&merge_kernels_ref(&w1, &w2, 1));
+        assert!(diff < 1e-3, "GEMM/naive parity broken: {diff}");
+        let fast = bench("merge_kernels_gemm c=256 k1=3 k2=3", 1, 500.0, || {
+            std::hint::black_box(merge_kernels(&w1, &w2, 1));
+        });
+        println!("{}", fast.row());
+        let slow = bench_iters("merge_kernels_naive c=256 k1=3 k2=3", 0, 3, || {
+            std::hint::black_box(merge_kernels_ref(&w1, &w2, 1));
+        });
+        let speedup = slow.p50_ms / fast.p50_ms;
+        println!("{}  ({speedup:.1}x vs naive)", slow.row());
+        rows.push(stats_json(&fast));
+        rows.push(stats_json(&slow));
+        derived.push(("merge_speedup_c256".into(), Json::num(speedup)));
+        derived.push(("merge_parity_max_abs_diff".into(), Json::num(diff as f64)));
     }
 
     // inverted-residual merge: 1x1 -> dw3x3 -> 1x1 (+Dirac), the
@@ -47,19 +108,81 @@ fn main() {
         std::hint::black_box(&m2);
     });
     println!("{}", s.row());
+    rows.push(stats_json(&s));
 
     // full span composition on the real resnetish spec, if artifacts exist
     let spec_path = std::path::Path::new("artifacts/specs/resnetish.spec.json");
     if spec_path.exists() {
-        let spec = layermerge::ir::Spec::load(spec_path).unwrap();
+        let spec = layermerge::ir::Spec::load(spec_path)?;
         let flat: Vec<f32> = (0..spec.param_count).map(|_| rng.normal() * 0.1).collect();
         let kept: BTreeSet<usize> = [2usize, 3].into_iter().collect();
         let s = bench("span_merge resnetish (1,3] residual block", 2, 300.0, || {
             std::hint::black_box(layermerge::merge::span_merge(&spec, &flat, 1, 3, &kept));
         });
         println!("{}", s.row());
+        rows.push(stats_json(&s));
     } else {
         println!("(skipping span_merge bench: run `make artifacts` first)");
     }
-    println!("done");
+
+    // eager one-shot (lower per call) vs compiled plan (lower once):
+    // the per-dispatch overhead the zero-overhead execution plans remove.
+    let root = std::path::Path::new("artifacts");
+    if root.join("manifest.json").exists() {
+        use layermerge::exec::{Format, Plan};
+        use layermerge::model::{Manifest, Model};
+        use layermerge::runtime::Runtime;
+        use std::sync::Arc;
+
+        println!("== forward benches (eager re-lower vs compiled plan) ==");
+        let rt = Arc::new(Runtime::new(root)?);
+        let man = Manifest::load(root)?;
+        let model = Model::load(rt.clone(), &man, "resnetish")?;
+        let spec = &model.spec;
+        let plan = Plan::original(spec, &model.init)?;
+        let x = randt(&mut rng, &[spec.batch, spec.h, spec.w, spec.c]);
+
+        let oneshot = bench("forward eager (re-lower each call)", 3, 500.0, || {
+            std::hint::black_box(
+                plan.forward(&rt, &man, &x, None, Format::Eager).unwrap(),
+            );
+        });
+        println!("{}", oneshot.row());
+        let cp = plan.compile(&rt, &man, Format::Eager)?;
+        let loads_before = rt.loads();
+        let compiled = bench("forward eager (compiled plan)", 3, 500.0, || {
+            std::hint::black_box(cp.forward(&x, None).unwrap());
+        });
+        println!("{}", compiled.row());
+        assert_eq!(
+            rt.loads(),
+            loads_before,
+            "compiled-plan forward must not touch the Runtime cache"
+        );
+        rows.push(stats_json(&oneshot));
+        rows.push(stats_json(&compiled));
+        derived.push(("forward_oneshot_p50_ms".into(), Json::num(oneshot.p50_ms)));
+        derived.push(("forward_compiled_p50_ms".into(), Json::num(compiled.p50_ms)));
+        derived.push((
+            "forward_overhead_saved_ms".into(),
+            Json::num(oneshot.p50_ms - compiled.p50_ms),
+        ));
+    } else {
+        println!("(skipping forward bench: run `make artifacts` first)");
+    }
+
+    let out = Json::obj(vec![
+        ("schema", Json::str("layermerge.bench.merge.v1")),
+        ("rows", Json::Arr(rows)),
+        (
+            "derived",
+            Json::obj(derived.iter().map(|(k, v)| (k.as_str(), v.clone())).collect()),
+        ),
+    ]);
+    let path = std::env::var("BENCH_OUT").unwrap_or_else(|_| {
+        format!("{}/../BENCH_merge.json", env!("CARGO_MANIFEST_DIR"))
+    });
+    std::fs::write(&path, out.to_string())?;
+    println!("wrote {path}");
+    Ok(())
 }

@@ -25,6 +25,30 @@ impl BenchStats {
     }
 }
 
+/// Sort the raw per-iteration timings and summarize — shared by both
+/// bench flavours so every BENCH row computes its quantiles identically.
+fn summarize(name: &str, mut times: Vec<f64>) -> BenchStats {
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    BenchStats {
+        name: name.to_string(),
+        iters: times.len(),
+        mean_ms: times.iter().sum::<f64>() / times.len() as f64,
+        p50_ms: times[times.len() / 2],
+        p95_ms: times[((times.len() as f64 * 0.95) as usize).min(times.len() - 1)],
+        min_ms: times[0],
+    }
+}
+
+fn timed_iters<F: FnMut()>(iters: usize, f: &mut F) -> Vec<f64> {
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    times
+}
+
 /// Time `f` with warm-up; iteration count adapts to hit ~`budget_ms` of
 /// total measurement time (criterion-ish behaviour without the crate).
 pub fn bench<F: FnMut()>(name: &str, warmup: usize, budget_ms: f64, mut f: F) -> BenchStats {
@@ -36,21 +60,17 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, budget_ms: f64, mut f: F) ->
     f();
     let per = t0.elapsed().as_secs_f64() * 1e3;
     let iters = ((budget_ms / per.max(1e-6)) as usize).clamp(5, 2000);
-    let mut times = Vec::with_capacity(iters);
-    for _ in 0..iters {
-        let t = Instant::now();
+    summarize(name, timed_iters(iters, &mut f))
+}
+
+/// Time `f` for exactly `iters` iterations — for costly baselines (e.g.
+/// the naive merge oracle at ResNet scale) where the adaptive budget of
+/// [`bench`] would run for minutes.
+pub fn bench_iters<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
         f();
-        times.push(t.elapsed().as_secs_f64() * 1e3);
     }
-    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    BenchStats {
-        name: name.to_string(),
-        iters,
-        mean_ms: times.iter().sum::<f64>() / times.len() as f64,
-        p50_ms: times[times.len() / 2],
-        p95_ms: times[((times.len() as f64 * 0.95) as usize).min(times.len() - 1)],
-        min_ms: times[0],
-    }
+    summarize(name, timed_iters(iters.max(1), &mut f))
 }
 
 /// Render a paper-style table to stdout and return it as markdown lines.

@@ -12,10 +12,20 @@
 //! * `Format::Fused` ("TensorRT format") — conv+bias+act(+residual) as a
 //!   single fused executable per merged layer (XLA fuses internally).
 //!
+//! Dispatch runs through [`CompiledPlan`], a one-time lowering of the
+//! plan: every artifact is resolved to its `Arc<Exec>` up front, bias and
+//! group-norm tensors are materialized once, and boundary activations
+//! flow through refcounted buffers that are released at their last use —
+//! the steady-state loop performs **zero** `Runtime` cache-mutex
+//! acquisitions, path hashes, or full-tensor boundary clones per step.
+//! `Plan::forward` lowers-then-runs for one-shot calls; latency
+//! measurement and serving hold a `CompiledPlan` across requests.
+//!
 //! The plan is also the ground truth for end-to-end latency measurements
 //! (Tables 1-5) and for the merged-vs-pruned numerics report.
 
-use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
@@ -23,7 +33,7 @@ use anyhow::{Context, Result};
 use crate::ir::{Spec, Task};
 use crate::merge::{span_merge, MergedConv};
 use crate::model::{sig_str, Manifest};
-use crate::runtime::Runtime;
+use crate::runtime::{Exec, Runtime};
 use crate::util::tensor::Tensor;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -261,35 +271,244 @@ impl Plan {
         self.steps.len()
     }
 
-    /// Sinusoidal + MLP time embedding (host side; 32-dim — negligible).
-    fn temb_vec(&self, t: &Tensor) -> Vec<f32> {
-        let (w1, b1, dim) = self.temb.as_ref().expect("diffusion only");
-        let b = t.dims[0];
-        let half = dim / 2;
-        let mut emb = vec![0.0f32; b * dim];
-        for n in 0..b {
-            for i in 0..half {
-                let freq = (-(10000.0f32.ln()) * i as f32 / half as f32).exp();
-                let ang = t.data[n] * freq;
-                emb[n * dim + i] = ang.sin();
-                emb[n * dim + half + i] = ang.cos();
+    /// Lower this plan against a runtime + manifest: resolve every
+    /// executable, pre-materialize operand tensors, and precompute the
+    /// boundary-buffer lifetimes.  One-time cost; the returned
+    /// [`CompiledPlan`] dispatches with no per-step artifact resolution.
+    pub fn compile<'p>(
+        &'p self,
+        rt: &Runtime,
+        man: &Manifest,
+        fmt: Format,
+    ) -> Result<CompiledPlan<'p>> {
+        let b = self.batch;
+
+        // Pass 1 — dataflow: which steps read their input from the running
+        // buffer vs a stored boundary, which boundaries need a slot at
+        // all, and where each slot's last read happens.
+        let mut from_cur = Vec::with_capacity(self.steps.len());
+        let mut prev_j = 0usize;
+        for step in &self.steps {
+            from_cur.push(step.i == prev_j);
+            prev_j = step.j;
+        }
+        let mut slot_of: BTreeMap<usize, usize> = BTreeMap::new();
+        let mut last_read: BTreeMap<usize, usize> = BTreeMap::new();
+        for (s, step) in self.steps.iter().enumerate() {
+            if !from_cur[s] {
+                slot_of.insert(step.i, 0);
+                last_read.insert(step.i, s);
+            }
+            if let Some((src, _)) = &step.res {
+                slot_of.insert(*src, 0);
+                last_read.insert(*src, s);
             }
         }
-        // dense + swish
-        let mut out = vec![0.0f32; b * dim];
-        for n in 0..b {
-            for o in 0..*dim {
-                let mut acc = b1[o];
-                for i in 0..*dim {
-                    acc += emb[n * dim + i] * w1.data[i * dim + o];
+        for (idx, slot) in slot_of.values_mut().enumerate() {
+            *slot = idx;
+        }
+
+        // Pass 2 — shape propagation + artifact resolution.  Shapes are
+        // derived exactly as the dispatch loop would observe them (SAME
+        // convs divide by stride; upsample doubles), so every signature
+        // matches what an eager forward would have requested.
+        let mut shapes: BTreeMap<usize, (usize, usize, usize)> = BTreeMap::new();
+        let input_dims = self.steps.first().map(|f| [b, f.h_in, f.w_in, f.cin]);
+        if let Some(f) = self.steps.first() {
+            anyhow::ensure!(
+                f.concat.is_none(),
+                "first step cannot read a stash (nothing stashed yet)"
+            );
+            shapes.insert(f.i, (f.h_in, f.w_in, f.cin));
+        }
+        let mut stash_of: BTreeMap<String, (usize, (usize, usize, usize))> = BTreeMap::new();
+        let mut csteps: Vec<CompiledStep<'p>> = Vec::with_capacity(self.steps.len());
+        for (s, step) in self.steps.iter().enumerate() {
+            let (h, w, mut c) = *shapes
+                .get(&step.i)
+                .with_context(|| format!("boundary {} shape unknown", step.i))?;
+            let concat_slot = match &step.concat {
+                Some(tag) => {
+                    let (slot, (hs, ws, cs)) = stash_of
+                        .get(tag)
+                        .with_context(|| format!("stash {tag} not materialized"))?
+                        .clone();
+                    anyhow::ensure!(
+                        hs == h && ws == w,
+                        "concat geometry mismatch at step {s}: {h}x{w} vs {hs}x{ws}"
+                    );
+                    c += cs;
+                    Some(slot)
                 }
-                out[n * dim + o] = acc / (1.0 + (-acc).exp());
+                None => None,
+            };
+            let m = &step.merged;
+            let co = m.bias.len();
+            let sig = sig_str(b, h, w, c, co, m.k, m.stride, m.depthwise);
+            // SAME padding: output spatial dims are ceil(in / stride)
+            let (ho, wo) = (h.div_ceil(m.stride), w.div_ceil(m.stride));
+            let ew_base = format!("b{b}h{ho}w{wo}c{co}");
+            let res = match &step.res {
+                Some((src, proj)) => {
+                    let (hs, ws, cs) = *shapes
+                        .get(src)
+                        .with_context(|| format!("res boundary {src} shape unknown"))?;
+                    let proj = match proj {
+                        Some(p) => {
+                            let psig =
+                                sig_str(b, hs, ws, cs, p.b.len(), 1, p.stride, false);
+                            let rel = man
+                                .conv_art(&psig, "plain")
+                                .with_context(|| format!("proj artifact {psig}"))?;
+                            Some((
+                                rt.load(&rel)?,
+                                &p.w,
+                                Tensor::new(vec![p.b.len()], p.b.clone()),
+                            ))
+                        }
+                        None => None,
+                    };
+                    Some(CompiledRes { slot: slot_of[src], proj })
+                }
+                None => None,
+            };
+            // op order mirrors the gated graph: conv -> gn -> add -> act.
+            // Fused format collapses conv(+add)(+act) into one dispatch
+            // whenever no group norm sits in between.
+            let can_fuse = fmt == Format::Fused && step.gn.is_none();
+            let (conv, fuse_res, gn, add, act) = if can_fuse {
+                let variant = match (&step.act, &res) {
+                    (Some(a), Some(_)) => format!("far_{a}"),
+                    (Some(a), None) => format!("fa_{a}"),
+                    (None, Some(_)) => "far_none".to_string(),
+                    (None, None) => "plain".to_string(),
+                };
+                let rel = man
+                    .conv_art(&sig, &variant)
+                    .with_context(|| format!("conv artifact {sig}.{variant}"))?;
+                (rt.load(&rel)?, res.is_some(), None, None, None)
+            } else {
+                let rel = man
+                    .conv_art(&sig, "plain")
+                    .with_context(|| format!("conv artifact {sig}"))?;
+                let conv = rt.load(&rel)?;
+                let gn = match &step.gn {
+                    Some((scale, bias, groups)) => {
+                        let rel = man
+                            .ew_art(&format!("gn{groups}_{ew_base}"))
+                            .with_context(|| format!("gn artifact gn{groups}_{ew_base}"))?;
+                        Some((
+                            rt.load(&rel)?,
+                            Tensor::new(vec![scale.len()], scale.clone()),
+                            Tensor::new(vec![bias.len()], bias.clone()),
+                        ))
+                    }
+                    None => None,
+                };
+                // missing add artifact falls back to a host-side add
+                let add = match (&res, man.ew_art(&format!("add_{ew_base}"))) {
+                    (Some(_), Some(rel)) => Some(rt.load(&rel)?),
+                    _ => None,
+                };
+                let act = match &step.act {
+                    Some(a) => {
+                        let rel = man
+                            .ew_art(&format!("{a}_{ew_base}"))
+                            .with_context(|| format!("act artifact {a}_{ew_base}"))?;
+                        Some(rt.load(&rel)?)
+                    }
+                    None => None,
+                };
+                (conv, false, gn, add, act)
+            };
+            // stash captures the pre-post-op output; posts then reshape
+            let (mut hc, mut wc, cc) = (ho, wo, co);
+            let stash_to = step.stash_as.as_ref().map(|tag| {
+                // re-stashing a tag overwrites in place (same slot), like
+                // the eager path's HashMap insert did
+                let slot = match stash_of.get(tag) {
+                    Some((slot, _)) => *slot,
+                    None => stash_of.len(),
+                };
+                stash_of.insert(tag.clone(), (slot, (hc, wc, cc)));
+                slot
+            });
+            let mut post = Vec::new();
+            for p in &step.post {
+                let base = format!("b{b}h{hc}w{wc}c{cc}");
+                match p {
+                    Post::Attention { wqkv, wout } => {
+                        let rel = man
+                            .ew_art(&format!("attn_{base}"))
+                            .context("attn artifact")?;
+                        post.push(CompiledPost::Attention(rt.load(&rel)?, wqkv, wout));
+                    }
+                    Post::Upsample => {
+                        let rel =
+                            man.ew_art(&format!("up_{base}")).context("up artifact")?;
+                        post.push(CompiledPost::Upsample(rt.load(&rel)?));
+                        hc *= 2;
+                        wc *= 2;
+                    }
+                }
             }
+            shapes.insert(step.j, (hc, wc, cc));
+            let release = last_read
+                .iter()
+                .filter(|&(_, &ls)| ls == s)
+                .map(|(bid, _)| slot_of[bid])
+                .collect();
+            csteps.push(CompiledStep {
+                src: if from_cur[s] {
+                    InputSrc::Cur
+                } else {
+                    InputSrc::Boundary(slot_of[&step.i])
+                },
+                concat_slot,
+                time_bias: step.time_bias.as_ref().map(|(tw, tb)| (tw, &tb[..])),
+                conv,
+                weight: &m.weight,
+                bias: Tensor::new(vec![co], m.bias.clone()),
+                fuse_res,
+                gn,
+                res,
+                add,
+                act,
+                stash_to,
+                post,
+                store_slot: slot_of.get(&step.j).copied(),
+                release,
+            });
         }
-        out
+        let head = match &self.head {
+            Some((hw, hb)) => {
+                let rel = man
+                    .ew_art(&format!("head_{}", self.spec_name))
+                    .context("head artifact")?;
+                Some((rt.load(&rel)?, hw, Tensor::new(vec![hb.len()], hb.clone())))
+            }
+            None => None,
+        };
+        Ok(CompiledPlan {
+            fmt,
+            task: self.task,
+            batch: b,
+            steps: csteps,
+            head,
+            temb: self.temb.as_ref().map(|(w1, b1, d)| (w1, &b1[..], *d)),
+            input_dims,
+            input_slot: self
+                .steps
+                .first()
+                .and_then(|f| slot_of.get(&f.i).copied()),
+            n_slots: slot_of.len(),
+            n_stash: stash_of.len(),
+        })
     }
 
-    /// Forward through the merged network.
+    /// Forward through the merged network (one-shot: lowers, then runs).
+    /// Hot loops should call [`Plan::compile`] once and reuse the
+    /// [`CompiledPlan`].
     pub fn forward(
         &self,
         rt: &Runtime,
@@ -298,7 +517,7 @@ impl Plan {
         t: Option<&Tensor>,
         fmt: Format,
     ) -> Result<Tensor> {
-        self.forward_inner(rt, man, x, t, fmt, None)
+        self.compile(rt, man, fmt)?.forward(x, t)
     }
 
     /// Forward with per-dispatch timing accumulation (ms).
@@ -310,53 +529,220 @@ impl Plan {
         t: Option<&Tensor>,
         fmt: Format,
     ) -> Result<(Tensor, f64)> {
+        self.compile(rt, man, fmt)?.forward_timed(x, t)
+    }
+
+    /// End-to-end latency with the App. C protocol (lowered once, so the
+    /// measured loop carries no artifact-resolution overhead).
+    pub fn measure(
+        &self,
+        rt: &Runtime,
+        man: &Manifest,
+        fmt: Format,
+        warmup: usize,
+        iters: usize,
+    ) -> Result<f64> {
+        self.compile(rt, man, fmt)?.measure(warmup, iters)
+    }
+}
+
+/// Sinusoidal + MLP time embedding (host side; 32-dim — negligible).
+fn temb_embed(w1: &Tensor, b1: &[f32], dim: usize, t: &Tensor) -> Vec<f32> {
+    let b = t.dims[0];
+    let half = dim / 2;
+    let mut emb = vec![0.0f32; b * dim];
+    for n in 0..b {
+        for i in 0..half {
+            let freq = (-(10000.0f32.ln()) * i as f32 / half as f32).exp();
+            let ang = t.data[n] * freq;
+            emb[n * dim + i] = ang.sin();
+            emb[n * dim + half + i] = ang.cos();
+        }
+    }
+    // dense + swish
+    let mut out = vec![0.0f32; b * dim];
+    for n in 0..b {
+        for o in 0..dim {
+            let mut acc = b1[o];
+            for i in 0..dim {
+                acc += emb[n * dim + i] * w1.data[i * dim + o];
+            }
+            out[n * dim + o] = acc / (1.0 + (-acc).exp());
+        }
+    }
+    out
+}
+
+/// Where a step reads its input from.
+enum InputSrc {
+    /// The running activation produced by the previous step.
+    Cur,
+    /// A stored boundary slot (non-chain dataflow).
+    Boundary(usize),
+}
+
+struct CompiledRes<'p> {
+    slot: usize,
+    /// resolved projection: (exec, weight, bias)
+    proj: Option<(Arc<Exec>, &'p Tensor, Tensor)>,
+}
+
+enum CompiledPost<'p> {
+    Attention(Arc<Exec>, &'p Tensor, &'p Tensor),
+    Upsample(Arc<Exec>),
+}
+
+struct CompiledStep<'p> {
+    src: InputSrc,
+    concat_slot: Option<usize>,
+    time_bias: Option<(&'p Tensor, &'p [f32])>,
+    conv: Arc<Exec>,
+    weight: &'p Tensor,
+    /// bias materialized once at lowering (was rebuilt per dispatch)
+    bias: Tensor,
+    /// Fused format: the conv executable consumes the residual directly.
+    fuse_res: bool,
+    gn: Option<(Arc<Exec>, Tensor, Tensor)>,
+    res: Option<CompiledRes<'p>>,
+    /// Eager residual add; `None` with `res` set means host-side add.
+    add: Option<Arc<Exec>>,
+    act: Option<Arc<Exec>>,
+    stash_to: Option<usize>,
+    post: Vec<CompiledPost<'p>>,
+    /// store the step output into this boundary slot (a later step reads it)
+    store_slot: Option<usize>,
+    /// boundary slots whose last reader is this step — freed afterwards
+    release: Vec<usize>,
+}
+
+/// A `Plan` lowered against a runtime + manifest: straight-line dispatch
+/// over pre-resolved executables and pre-materialized operands.  Borrows
+/// the plan's weight tensors (no copies); create with [`Plan::compile`].
+pub struct CompiledPlan<'p> {
+    pub fmt: Format,
+    task: Task,
+    batch: usize,
+    steps: Vec<CompiledStep<'p>>,
+    head: Option<(Arc<Exec>, &'p Tensor, Tensor)>,
+    temb: Option<(&'p Tensor, &'p [f32], usize)>,
+    input_dims: Option<[usize; 4]>,
+    /// slot for the network input, when some step's residual reads it
+    input_slot: Option<usize>,
+    n_slots: usize,
+    n_stash: usize,
+}
+
+fn run_one(
+    exec: &Exec,
+    args: &[&Tensor],
+    timing: &mut Option<&mut f64>,
+) -> Result<Tensor> {
+    let t0 = Instant::now();
+    let out = exec.run(args)?;
+    if let Some(ms) = timing.as_deref_mut() {
+        *ms += t0.elapsed().as_secs_f64() * 1e3;
+    }
+    Ok(out.into_iter().next().unwrap())
+}
+
+/// A boundary value flowing through the dispatch loop: either the
+/// caller's input tensor (borrowed — never copied unless mutated) or a
+/// refcounted intermediate.  Cloning is a pointer copy either way.
+#[derive(Clone)]
+enum Val<'a> {
+    X(&'a Tensor),
+    T(Arc<Tensor>),
+}
+
+impl<'a> Val<'a> {
+    fn as_ref(&self) -> &Tensor {
+        match self {
+            Val::X(x) => x,
+            Val::T(a) => a,
+        }
+    }
+
+    /// Mutable access, copy-on-write: borrowed input and shared
+    /// intermediates are cloned only at this point.
+    fn make_mut(&mut self) -> &mut Tensor {
+        if let Val::X(x) = *self {
+            *self = Val::T(Arc::new(x.clone()));
+        }
+        match self {
+            Val::T(a) => Arc::make_mut(a),
+            Val::X(_) => unreachable!(),
+        }
+    }
+
+    fn into_tensor(self) -> Tensor {
+        match self {
+            Val::X(x) => x.clone(),
+            Val::T(a) => Arc::try_unwrap(a).unwrap_or_else(|a| (*a).clone()),
+        }
+    }
+}
+
+impl<'p> CompiledPlan<'p> {
+    pub fn depth(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// Forward through the lowered network.
+    pub fn forward(&self, x: &Tensor, t: Option<&Tensor>) -> Result<Tensor> {
+        self.forward_inner(x, t, None)
+    }
+
+    /// Forward with per-dispatch timing accumulation (ms).
+    pub fn forward_timed(&self, x: &Tensor, t: Option<&Tensor>) -> Result<(Tensor, f64)> {
         let mut ms = 0.0;
-        let out = self.forward_inner(rt, man, x, t, fmt, Some(&mut ms))?;
+        let out = self.forward_inner(x, t, Some(&mut ms))?;
         Ok((out, ms))
     }
 
     fn forward_inner(
         &self,
-        rt: &Runtime,
-        man: &Manifest,
         x: &Tensor,
         t: Option<&Tensor>,
-        fmt: Format,
         mut timing: Option<&mut f64>,
     ) -> Result<Tensor> {
-        let temb = t.map(|tt| self.temb_vec(tt));
-        let mut boundaries: BTreeMap<usize, Tensor> = BTreeMap::new();
-        boundaries.insert(0, x.clone());
-        let mut stash: HashMap<String, Tensor> = HashMap::new();
+        if let Some(d) = &self.input_dims {
+            anyhow::ensure!(
+                x.dims.as_slice() == &d[..],
+                "input dims {:?} don't match the lowered plan ({:?})",
+                x.dims,
+                d
+            );
+        }
+        let temb = match (t, &self.temb) {
+            (Some(tt), Some((w1, b1, dim))) => Some(temb_embed(w1, b1, *dim, tt)),
+            _ => None,
+        };
+        let mut slots: Vec<Option<Val<'_>>> = vec![None; self.n_slots];
+        let mut stash: Vec<Option<Val<'_>>> = vec![None; self.n_stash];
+        let mut cur = Val::X(x);
+        if let Some(s0) = self.input_slot {
+            slots[s0] = Some(cur.clone());
+        }
         let b = self.batch;
 
-        let run = |rel: &str, args: &[&Tensor], timing: &mut Option<&mut f64>|
-         -> Result<Tensor> {
-            let exec = rt.load(rel)?;
-            let t0 = Instant::now();
-            let out = exec.run(args)?;
-            if let Some(ms) = timing.as_deref_mut() {
-                *ms += t0.elapsed().as_secs_f64() * 1e3;
-            }
-            Ok(out.into_iter().next().unwrap())
-        };
-
-        let mut cur = x.clone();
         for step in &self.steps {
-            let mut input = boundaries
-                .get(&step.i)
-                .cloned()
-                .with_context(|| format!("boundary {} not materialized", step.i))?;
+            let mut input: Val<'_> = match step.src {
+                InputSrc::Cur => cur.clone(),
+                InputSrc::Boundary(s) => {
+                    slots[s].clone().context("boundary not materialized")?
+                }
+            };
             // skip-concat (host; see DESIGN.md §4)
-            if let Some(tag) = &step.concat {
-                let other = stash.get(tag).context("missing stash")?;
-                input = concat_channels(&input, other);
+            if let Some(cs) = step.concat_slot {
+                let other = stash[cs].as_ref().context("missing stash")?;
+                input = Val::T(Arc::new(concat_channels(input.as_ref(), other.as_ref())));
             }
             // time-bias injection (host; 32-dim MLP output)
             if let Some((tw, tb)) = &step.time_bias {
                 let temb = temb.as_ref().context("t required")?;
                 let dim = tw.dims[0];
                 let cin = tw.dims[1];
+                let inp = input.make_mut();
                 for n in 0..b {
                     let mut bias = vec![0.0f32; cin];
                     for o in 0..cin {
@@ -366,165 +752,118 @@ impl Plan {
                         }
                         bias[o] = acc;
                     }
-                    let hw = input.dims[1] * input.dims[2];
+                    let hw = inp.dims[1] * inp.dims[2];
                     for p in 0..hw {
                         for o in 0..cin {
                             let idx = (n * hw + p) * cin + o;
-                            input.data[idx] += bias[o];
+                            inp.data[idx] += bias[o];
                         }
                     }
                 }
             }
-            let m = &step.merged;
-            let sig = sig_str(
-                b, input.dims[1], input.dims[2], input.dims[3], m.bias.len(),
-                m.k, m.stride, m.depthwise,
-            );
-            let wt = &m.weight;
-            let bt = Tensor::new(vec![m.bias.len()], m.bias.clone());
             // resolve the residual input (shape = conv output shape)
-            let res_t: Option<Tensor> = match &step.res {
-                Some((src, proj)) => {
-                    let base = boundaries
-                        .get(src)
-                        .cloned()
-                        .with_context(|| format!("res boundary {src}"))?;
-                    Some(match proj {
-                        Some(p) => {
-                            let psig = sig_str(
-                                b, base.dims[1], base.dims[2], base.dims[3],
-                                p.b.len(), 1, p.stride, false,
-                            );
-                            let rel = man
-                                .conv_art(&psig, "plain")
-                                .with_context(|| format!("proj artifact {psig}"))?;
-                            let pb = Tensor::new(vec![p.b.len()], p.b.clone());
-                            run(&rel, &[&base, &p.w, &pb], &mut timing)?
-                        }
+            let res_t: Option<Val<'_>> = match &step.res {
+                Some(r) => {
+                    let base = slots[r.slot]
+                        .clone()
+                        .context("res boundary not materialized")?;
+                    Some(match &r.proj {
+                        Some((exec, pw, pb)) => Val::T(Arc::new(run_one(
+                            exec,
+                            &[base.as_ref(), pw, pb],
+                            &mut timing,
+                        )?)),
                         None => base,
                     })
                 }
                 None => None,
             };
 
-            // op order mirrors the gated graph: conv -> gn -> add -> act.
-            // Fused format collapses conv(+add)(+act) into one dispatch
-            // whenever no group norm sits in between.
-            let can_fuse = fmt == Format::Fused && step.gn.is_none();
-            cur = if can_fuse {
-                let variant = match (&step.act, &res_t) {
-                    (Some(a), Some(_)) => format!("far_{a}"),
-                    (Some(a), None) => format!("fa_{a}"),
-                    (None, Some(_)) => "far_none".to_string(),
-                    (None, None) => "plain".to_string(),
-                };
-                let rel = man
-                    .conv_art(&sig, &variant)
-                    .with_context(|| format!("conv artifact {sig}.{variant}"))?;
-                match &res_t {
-                    Some(r) => run(&rel, &[&input, wt, &bt, r], &mut timing)?,
-                    None => run(&rel, &[&input, wt, &bt], &mut timing)?,
-                }
-            } else {
-                let rel = man
-                    .conv_art(&sig, "plain")
-                    .with_context(|| format!("conv artifact {sig}"))?;
-                let mut y = run(&rel, &[&input, wt, &bt], &mut timing)?;
-                if let Some((scale, bias, groups)) = &step.gn {
-                    let base = format!(
-                        "b{}h{}w{}c{}", b, y.dims[1], y.dims[2], y.dims[3]
-                    );
-                    let gnrel = man
-                        .ew_art(&format!("gn{groups}_{base}"))
-                        .with_context(|| format!("gn artifact gn{groups}_{base}"))?;
-                    let st = Tensor::new(vec![scale.len()], scale.clone());
-                    let bt2 = Tensor::new(vec![bias.len()], bias.clone());
-                    y = run(&gnrel, &[&y, &st, &bt2], &mut timing)?;
-                }
+            let mut y = match (&res_t, step.fuse_res) {
+                (Some(r), true) => run_one(
+                    &step.conv,
+                    &[input.as_ref(), step.weight, &step.bias, r.as_ref()],
+                    &mut timing,
+                )?,
+                _ => run_one(
+                    &step.conv,
+                    &[input.as_ref(), step.weight, &step.bias],
+                    &mut timing,
+                )?,
+            };
+            drop(input);
+            if let Some((exec, scale, bias)) = &step.gn {
+                y = run_one(exec, &[&y, scale, bias], &mut timing)?;
+            }
+            if !step.fuse_res {
                 if let Some(r) = &res_t {
-                    let base = format!(
-                        "b{}h{}w{}c{}", b, y.dims[1], y.dims[2], y.dims[3]
-                    );
-                    if let Some(addrel) = man.ew_art(&format!("add_{base}")) {
-                        y = run(&addrel, &[&y, r], &mut timing)?;
-                    } else {
-                        for (a, bb) in y.data.iter_mut().zip(&r.data) {
-                            *a += *bb;
+                    match &step.add {
+                        Some(exec) => {
+                            y = run_one(exec, &[&y, r.as_ref()], &mut timing)?
+                        }
+                        None => {
+                            for (a, bb) in y.data.iter_mut().zip(&r.as_ref().data) {
+                                *a += *bb;
+                            }
                         }
                     }
                 }
-                if let Some(a) = &step.act {
-                    let base = format!(
-                        "b{}h{}w{}c{}", b, y.dims[1], y.dims[2], y.dims[3]
-                    );
-                    let rel = man
-                        .ew_art(&format!("{a}_{base}"))
-                        .with_context(|| format!("act artifact {a}_{base}"))?;
-                    y = run(&rel, &[&y], &mut timing)?;
-                }
-                y
-            };
-            if let Some(tag) = &step.stash_as {
-                stash.insert(tag.clone(), cur.clone());
+            }
+            if let Some(exec) = &step.act {
+                y = run_one(exec, &[&y], &mut timing)?;
+            }
+            cur = Val::T(Arc::new(y));
+            if let Some(si) = step.stash_to {
+                stash[si] = Some(cur.clone());
             }
             for p in &step.post {
-                let base =
-                    format!("b{}h{}w{}c{}", b, cur.dims[1], cur.dims[2], cur.dims[3]);
-                match p {
-                    Post::Attention { wqkv, wout } => {
-                        let rel = man
-                            .ew_art(&format!("attn_{base}"))
-                            .context("attn artifact")?;
-                        cur = run(&rel, &[&cur, wqkv, wout], &mut timing)?;
+                cur = Val::T(Arc::new(match p {
+                    CompiledPost::Attention(exec, wqkv, wout) => {
+                        run_one(exec, &[cur.as_ref(), wqkv, wout], &mut timing)?
                     }
-                    Post::Upsample => {
-                        let rel =
-                            man.ew_art(&format!("up_{base}")).context("up artifact")?;
-                        cur = run(&rel, &[&cur], &mut timing)?;
+                    CompiledPost::Upsample(exec) => {
+                        run_one(exec, &[cur.as_ref()], &mut timing)?
                     }
-                }
+                }));
             }
-            boundaries.insert(step.j, cur.clone());
+            if let Some(slot) = step.store_slot {
+                slots[slot] = Some(cur.clone());
+            }
+            for &s in &step.release {
+                slots[s] = None;
+            }
         }
 
         // classifier head
-        if let Some((hw, hb)) = &self.head {
-            let rel = man
-                .ew_art(&format!("head_{}", self.spec_name))
-                .context("head artifact")?;
-            let hbt = Tensor::new(vec![hb.len()], hb.clone());
-            cur = run(&rel, &[&cur, hw, &hbt], &mut timing)?;
+        if let Some((exec, hw, hb)) = &self.head {
+            cur = Val::T(Arc::new(run_one(
+                exec,
+                &[cur.as_ref(), hw, hb],
+                &mut timing,
+            )?));
         }
-        Ok(cur)
+        Ok(cur.into_tensor())
     }
 
     /// End-to-end latency with the App. C protocol.
-    pub fn measure(
-        &self,
-        rt: &Runtime,
-        man: &Manifest,
-        fmt: Format,
-        warmup: usize,
-        iters: usize,
-    ) -> Result<f64> {
+    pub fn measure(&self, warmup: usize, iters: usize) -> Result<f64> {
+        let dims = self
+            .input_dims
+            .context("cannot measure an empty plan (no steps)")?;
         let mut rng = crate::util::rng::Rng::new(0xbe9c);
-        let first = &self.steps[0];
-        let n = self.batch * first.h_in * first.w_in * first.cin;
-        let x = Tensor::new(
-            vec![self.batch, first.h_in, first.w_in, first.cin],
-            (0..n).map(|_| rng.normal()).collect(),
-        );
+        let n: usize = dims.iter().product();
+        let x = Tensor::new(dims.to_vec(), (0..n).map(|_| rng.normal()).collect());
         let t = match self.task {
             Task::Diffusion => Some(Tensor::full(&[self.batch], 500.0)),
             Task::Classify => None,
         };
         for _ in 0..warmup {
-            self.forward(rt, man, &x, t.as_ref(), fmt)?;
+            self.forward(&x, t.as_ref())?;
         }
         let mut times = Vec::with_capacity(iters);
         for _ in 0..iters {
             let t0 = Instant::now();
-            self.forward(rt, man, &x, t.as_ref(), fmt)?;
+            self.forward(&x, t.as_ref())?;
             times.push(t0.elapsed().as_secs_f64() * 1e3);
         }
         times.sort_by(|a, b| a.partial_cmp(b).unwrap());

@@ -1,0 +1,281 @@
+//! Host compute kernels — cache-blocked parallel f32 GEMM and an
+//! im2col-based VALID convolution.
+//!
+//! This is the deployment-time *host* hot path: the merge algebra
+//! (`crate::merge`) composes span kernels out of per-tap matrix multiplies
+//! over flat slices, and the numerics reports/oracles convolve merged
+//! kernels on the host.  Both were 5–6-deep scalar loops before this
+//! module existed (billions of scalar ops for ResNet-scale 512-channel
+//! spans) — here they are expressed as GEMMs with contiguous,
+//! vectorizable inner loops, parallelized over rows with
+//! [`crate::util::par`].
+//!
+//! Layout conventions match the rest of the repo: activations are NHWC,
+//! kernels are OIHW, everything row-major f32 (`util::tensor::Tensor`).
+//! The naive reference implementations are retained as test oracles
+//! ([`conv2d_valid_ref`], and `merge::merge_kernels_ref`) and as the
+//! baseline side of `benches/merge_ops.rs`.
+
+use crate::util::par;
+use crate::util::tensor::Tensor;
+
+/// Below this many FLOPs a GEMM runs serially — thread spawn would
+/// dominate (scoped threads cost ~10µs each).
+const PAR_FLOP_MIN: usize = 1 << 21;
+
+/// Cache block over the contraction dimension: a block of B rows
+/// (`KC x n` floats) stays resident while every C row sweeps it.
+const KC: usize = 128;
+
+fn gemm_threads(flops: usize) -> usize {
+    if flops < PAR_FLOP_MIN {
+        1
+    } else {
+        par::max_threads()
+    }
+}
+
+/// `C += A · B` for row-major flat slices: A is `m x k`, B is `k x n`,
+/// C is `m x n`.  Accumulating (`+=`) so callers can fold multiple
+/// products into one buffer (the merge algebra's per-tap scatter does).
+///
+/// Parallel over row blocks of C, cache-blocked over k; the inner loop is
+/// a contiguous axpy the compiler auto-vectorizes.  Zero entries of A are
+/// skipped — identity/Dirac factors are common in span composition.
+pub fn gemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "A is {m}x{k}");
+    assert_eq!(b.len(), k * n, "B is {k}x{n}");
+    assert_eq!(c.len(), m * n, "C is {m}x{n}");
+    if m == 0 || k == 0 || n == 0 {
+        return;
+    }
+    let threads = gemm_threads(2 * m * k * n);
+    // ~4 chunks per thread keeps the atomic-claim queue balanced when row
+    // costs vary (sparse A rows finish early).
+    let rows_per = m.div_ceil(threads * 4).max(1);
+    par::par_chunks_mut(c, rows_per * n, threads, |ci, chunk| {
+        gemm_rows(ci * rows_per, chunk.len() / n, k, n, a, b, chunk);
+    });
+}
+
+/// Serial kernel: rows `[r0, r0 + rows)` of C (passed as `c_chunk`).
+fn gemm_rows(r0: usize, rows: usize, k: usize, n: usize, a: &[f32], b: &[f32], c_chunk: &mut [f32]) {
+    let mut kb = 0;
+    while kb < k {
+        let kend = (kb + KC).min(k);
+        for i in 0..rows {
+            let arow = &a[(r0 + i) * k + kb..(r0 + i) * k + kend];
+            let crow = &mut c_chunk[i * n..(i + 1) * n];
+            for (p, &av) in arow.iter().enumerate() {
+                if av != 0.0 {
+                    let brow = &b[(kb + p) * n..(kb + p) * n + n];
+                    for (cv, &bv) in crow.iter_mut().zip(brow) {
+                        *cv += av * bv;
+                    }
+                }
+            }
+        }
+        kb = kend;
+    }
+}
+
+/// VALID conv on host tensors via im2col + GEMM: `x` NHWC
+/// `[B, H, W, Ci]`, `w` OIHW `[Co, Ci, k, k]`, output NHWC.
+///
+/// The im2col patch layout is `(a, b, c)` so each kernel row gathers as a
+/// single contiguous `k*Ci` memcpy from the NHWC input, and the weight is
+/// transposed once to `[(a, b, c), o]` so the product lands directly in
+/// NHWC order.
+pub fn conv2d_valid(x: &Tensor, w: &Tensor, stride: usize) -> Tensor {
+    assert!(stride >= 1);
+    let (bn, h, wd, ci) = (x.dims[0], x.dims[1], x.dims[2], x.dims[3]);
+    let (co, ci2, k) = (w.dims[0], w.dims[1], w.dims[2]);
+    assert_eq!(ci, ci2, "channel mismatch: x {:?} vs w {:?}", x.dims, w.dims);
+    assert_eq!(w.dims[2], w.dims[3], "square kernels only");
+    assert!(h >= k && wd >= k, "input {h}x{wd} smaller than kernel {k}");
+    let ho = (h - k) / stride + 1;
+    let wo = (wd - k) / stride + 1;
+    let kk = k * k * ci;
+    let rows = bn * ho * wo;
+
+    // im2col: one contiguous k*ci run per kernel row a.  Rows are batched
+    // per parallel chunk (like gemm's row blocks) so the claim overhead
+    // stays negligible next to the memcpys.
+    let mut cols = vec![0.0f32; rows * kk];
+    let threads = gemm_threads(rows * kk * 4);
+    let rows_per = rows.div_ceil(threads * 4).max(1);
+    par::par_chunks_mut(&mut cols, rows_per * kk, threads, |chunk_idx, dst| {
+        let row0 = chunk_idx * rows_per;
+        for (ri, drow) in dst.chunks_mut(kk).enumerate() {
+            let row = row0 + ri;
+            let n = row / (ho * wo);
+            let r = row % (ho * wo);
+            let (p, q) = (r / wo, r % wo);
+            for a in 0..k {
+                let src = ((n * h + p * stride + a) * wd + q * stride) * ci;
+                drow[a * k * ci..(a + 1) * k * ci]
+                    .copy_from_slice(&x.data[src..src + k * ci]);
+            }
+        }
+    });
+
+    // weight: OIHW -> [(a, b, c), o]
+    let mut wt = vec![0.0f32; kk * co];
+    for o in 0..co {
+        for c in 0..ci {
+            for a in 0..k {
+                for b in 0..k {
+                    wt[((a * k + b) * ci + c) * co + o] = w.data[((o * ci + c) * k + a) * k + b];
+                }
+            }
+        }
+    }
+
+    let mut y = Tensor::zeros(&[bn, ho, wo, co]);
+    gemm(rows, kk, co, &cols, &wt, &mut y.data);
+    y
+}
+
+/// Naive triple-loop `C += A · B` — the GEMM test oracle (shared by the
+/// unit tests here and `tests/gemm_parity.rs`; same role as
+/// [`conv2d_valid_ref`]).  O(m·k·n) scalar ops; never call on hot paths.
+pub fn gemm_ref(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    for i in 0..m {
+        for p in 0..k {
+            for j in 0..n {
+                c[i * n + j] += a[i * k + p] * b[p * n + j];
+            }
+        }
+    }
+}
+
+/// Direct 6-loop VALID conv — retained as the test oracle and the naive
+/// baseline in `benches/merge_ops.rs` (formerly the `#[cfg(test)]` oracle
+/// inside `merge`).
+pub fn conv2d_valid_ref(x: &Tensor, w: &Tensor, stride: usize) -> Tensor {
+    let (b, h, wd, ci) = (x.dims[0], x.dims[1], x.dims[2], x.dims[3]);
+    let (co, ci2, k) = (w.dims[0], w.dims[1], w.dims[2]);
+    assert_eq!(ci, ci2);
+    let ho = (h - k) / stride + 1;
+    let wo = (wd - k) / stride + 1;
+    let mut y = Tensor::zeros(&[b, ho, wo, co]);
+    for n in 0..b {
+        for p in 0..ho {
+            for q in 0..wo {
+                for o in 0..co {
+                    let mut acc = 0.0;
+                    for c in 0..ci {
+                        for a in 0..k {
+                            for bb in 0..k {
+                                acc += x.at4(n, p * stride + a, q * stride + bb, c)
+                                    * w.at4(o, c, a, bb);
+                            }
+                        }
+                    }
+                    y.set4(n, p, q, o, acc);
+                }
+            }
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randt(r: &mut Rng, dims: &[usize]) -> Tensor {
+        let n: usize = dims.iter().product();
+        Tensor::new(dims.to_vec(), (0..n).map(|_| r.normal()).collect())
+    }
+
+    #[test]
+    fn gemm_matches_naive() {
+        let mut r = Rng::new(21);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 4), (17, 33, 9), (64, 200, 48)] {
+            let a: Vec<f32> = (0..m * k).map(|_| r.normal()).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| r.normal()).collect();
+            let mut want = vec![0.0f32; m * n];
+            gemm_ref(m, k, n, &a, &b, &mut want);
+            let mut got = vec![0.0f32; m * n];
+            gemm(m, k, n, &a, &b, &mut got);
+            let diff = want
+                .iter()
+                .zip(&got)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0f32, f32::max);
+            assert!(diff < 1e-4, "({m},{k},{n}) diff {diff}");
+        }
+    }
+
+    #[test]
+    fn gemm_accumulates() {
+        // C += A·B twice == 2·(A·B)
+        let mut r = Rng::new(22);
+        let (m, k, n) = (4, 6, 5);
+        let a: Vec<f32> = (0..m * k).map(|_| r.normal()).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| r.normal()).collect();
+        let mut once = vec![0.0f32; m * n];
+        gemm(m, k, n, &a, &b, &mut once);
+        let mut twice = vec![0.0f32; m * n];
+        gemm(m, k, n, &a, &b, &mut twice);
+        gemm(m, k, n, &a, &b, &mut twice);
+        for (x, y) in once.iter().zip(&twice) {
+            assert!((2.0 * x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn gemm_parallel_path_matches() {
+        // Large enough to cross PAR_FLOP_MIN with LM_THREADS unset.
+        let mut r = Rng::new(23);
+        let (m, k, n) = (96, 130, 97); // k > KC exercises the k-blocking
+        let a: Vec<f32> = (0..m * k).map(|_| r.normal()).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| r.normal()).collect();
+        let mut want = vec![0.0f32; m * n];
+        gemm_ref(m, k, n, &a, &b, &mut want);
+        let mut got = vec![0.0f32; m * n];
+        gemm(m, k, n, &a, &b, &mut got);
+        let diff = want
+            .iter()
+            .zip(&got)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        assert!(diff < 1e-3, "diff {diff}");
+    }
+
+    #[test]
+    fn conv_matches_oracle() {
+        let mut r = Rng::new(24);
+        for &(b, h, ci, co, k, s) in &[
+            (1, 8, 3, 4, 3, 1),
+            (2, 9, 2, 5, 3, 2),
+            (1, 11, 4, 4, 5, 3),
+            (2, 7, 1, 2, 1, 1),
+            (1, 13, 6, 3, 7, 2),
+        ] {
+            let x = randt(&mut r, &[b, h, h, ci]);
+            let w = randt(&mut r, &[co, ci, k, k]);
+            let want = conv2d_valid_ref(&x, &w, s);
+            let got = conv2d_valid(&x, &w, s);
+            assert_eq!(got.dims, want.dims);
+            assert!(
+                got.max_abs_diff(&want) < 1e-3,
+                "(b{b} h{h} ci{ci} co{co} k{k} s{s}) diff {}",
+                got.max_abs_diff(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn conv_rectangular_input() {
+        let mut r = Rng::new(25);
+        let x = randt(&mut r, &[2, 10, 6, 3]);
+        let w = randt(&mut r, &[4, 3, 3, 3]);
+        let want = conv2d_valid_ref(&x, &w, 2);
+        let got = conv2d_valid(&x, &w, 2);
+        assert_eq!(got.dims, vec![2, 4, 2, 4]);
+        assert!(got.max_abs_diff(&want) < 1e-3);
+    }
+}

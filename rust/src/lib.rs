@@ -15,6 +15,7 @@ pub mod bench;
 pub mod exec;
 pub mod experiments;
 pub mod ir;
+pub mod kernels;
 pub mod merge;
 pub mod model;
 pub mod pipeline;
@@ -26,7 +27,7 @@ pub mod train;
 pub mod util;
 
 pub mod prelude {
-    pub use crate::exec::{Format, Plan};
+    pub use crate::exec::{CompiledPlan, Format, Plan};
     pub use crate::ir::{Gates, Spec, Task};
     pub use crate::model::{Batch, Manifest, Model};
     pub use crate::pipeline::{Pipeline, PipelineCfg};

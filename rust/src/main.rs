@@ -188,16 +188,18 @@ fn profile(ctx: &Ctx, model: &str, budget: f64) -> Result<()> {
     };
     for (name, plan) in [("original", &orig), ("compressed", &comp)] {
         for fmt in [Format::Eager, Format::Fused] {
+            // lower once so the timed window is steady-state dispatch,
+            // not per-call plan re-lowering
+            let cp = plan.compile(&pipe.model.rt, &ctx.man, fmt)?;
             // warm
             for _ in 0..3 {
-                plan.forward(&pipe.model.rt, &ctx.man, &x, t.as_ref(), fmt)?;
+                cp.forward(&x, t.as_ref())?;
             }
             let mut best_total = f64::INFINITY;
             let mut best_dev = 0.0;
             for _ in 0..10 {
                 let t0 = std::time::Instant::now();
-                let (_, dev_ms) =
-                    plan.forward_timed(&pipe.model.rt, &ctx.man, &x, t.as_ref(), fmt)?;
+                let (_, dev_ms) = cp.forward_timed(&x, t.as_ref())?;
                 let total = t0.elapsed().as_secs_f64() * 1e3;
                 if total < best_total {
                     best_total = total;

@@ -7,22 +7,89 @@
 //!   wm[o,i,dy,dx] = sum_{c,e,f} w2[o,c,e,f] * w1[c,i, dy - e*s1, dx - f*s1]
 //!   Ker(wm)       = (Ker(w2) - 1) * s1 + Ker(w1)          (App. A)
 //!
+//! The composition is evaluated as **flat GEMM algebra** on
+//! [`crate::kernels`]: for every outer tap (e, f), the contraction over
+//! the shared channel dim is one `[Co x C] · [C x Ci·k1²]` matrix
+//! product whose rows scatter-add (contiguous `k1`-runs) into the merged
+//! kernel at that tap's spatial offset.  The historical 6-deep scalar
+//! loop is retained as [`merge_kernels_ref`], the test oracle and naive
+//! baseline of `benches/merge_ops.rs`.
+//!
 //! `span_merge` composes an arbitrary valid span (i, j] of the IR into one
 //! conv: dropped convs become theta_id, depthwise kernels are expanded when
 //! they meet dense neighbours, interior skip-additions fold via Dirac (or
 //! projection) kernels, and biases propagate as b2 + (sum w2 taps) @ b1.
 //!
 //! The algebra here mirrors `python/compile/kernels/ref.py` exactly;
-//! `tests/merge_parity.rs` pins cross-language fixtures.
+//! `tests/gemm_parity.rs` pins the GEMM path against the naive oracles
+//! across random span configurations.
 
-use std::collections::BTreeSet;
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::ir::Spec;
+use crate::kernels;
+use crate::util::par;
 use crate::util::tensor::Tensor;
 
 /// Compose two conv kernels: w1 [C, Cin, k1, k1] (inner, stride s1),
 /// w2 [Cout, C, k2, k2] (outer) -> [Cout, Cin, (k2-1)*s1 + k1, ...].
+///
+/// One `[Co x C] · [C x Ci·k1²]` GEMM per outer tap plus a contiguous
+/// scatter-add; parallel over output channels for ResNet-scale spans,
+/// with scratch bounded to a single tap's product.
 pub fn merge_kernels(w1: &Tensor, w2: &Tensor, s1: usize) -> Tensor {
+    let (c1, cin, k1) = (w1.dims[0], w1.dims[1], w1.dims[2]);
+    let (co, c2, k2) = (w2.dims[0], w2.dims[1], w2.dims[2]);
+    assert_eq!(c1, c2, "channel mismatch: {:?} vs {:?}", w1.dims, w2.dims);
+    let km = (k2 - 1) * s1 + k1;
+    let taps = k2 * k2;
+    let t = cin * k1 * k1;
+
+    // One GEMM per outer tap (e, f): A is that tap of w2 as a [co, c]
+    // matrix, B is w1's natural flat layout [c, (ci, a, b)].  Scratch is
+    // one tap's product (co * cin*k1² floats), reused across taps —
+    // batching all k2² taps into a single GEMM would be k2²x the
+    // transient memory (GB-scale on deep grown-kernel spans) for the
+    // same FLOPs.
+    let mut a_tap = vec![0.0f32; co * c1];
+    let mut prod = vec![0.0f32; co * t];
+    let mut wm = Tensor::zeros(&[co, cin, km, km]);
+    let per_o = cin * km * km;
+    let threads = if co * c1 * t < (1 << 20) { 1 } else { par::max_threads() };
+    for e in 0..k2 {
+        for f in 0..k2 {
+            let ef = e * k2 + f;
+            for o in 0..co {
+                for c in 0..c1 {
+                    a_tap[o * c1 + c] = w2.data[(o * c1 + c) * taps + ef];
+                }
+            }
+            prod.fill(0.0);
+            kernels::gemm(co, c1, t, &a_tap, &w1.data, &mut prod);
+            // Scatter: tap (e, f) lands at spatial offset
+            // (e*s1 + a, f*s1 + b) — each (ci, a) row of the product is
+            // a contiguous k1-run in wm.
+            par::par_chunks_mut(&mut wm.data, per_o, threads, |o, dst| {
+                let row = &prod[o * t..][..t];
+                for ci in 0..cin {
+                    for aa in 0..k1 {
+                        let src = &row[(ci * k1 + aa) * k1..][..k1];
+                        let d0 = (ci * km + e * s1 + aa) * km + f * s1;
+                        for (dv, &sv) in dst[d0..d0 + k1].iter_mut().zip(src) {
+                            *dv += sv;
+                        }
+                    }
+                }
+            });
+        }
+    }
+    wm
+}
+
+/// The original 6-deep scalar composition — **test oracle** for
+/// [`merge_kernels`] and the naive side of the merge benches.  O(co·c·cin·
+/// k1²·k2²) scalar ops; do not call on hot paths.
+pub fn merge_kernels_ref(w1: &Tensor, w2: &Tensor, s1: usize) -> Tensor {
     let (c1, cin, k1) = (w1.dims[0], w1.dims[1], w1.dims[2]);
     let (co, c2, k2) = (w2.dims[0], w2.dims[1], w2.dims[2]);
     assert_eq!(c1, c2, "channel mismatch: {:?} vs {:?}", w1.dims, w2.dims);
@@ -56,17 +123,13 @@ pub fn merge_kernels(w1: &Tensor, w2: &Tensor, s1: usize) -> Tensor {
 /// Bias of the composed conv: bm = b2 + (sum over taps of w2) @ b1.
 pub fn merge_bias(w2: &Tensor, b1: &[f32], b2: &[f32]) -> Vec<f32> {
     let (co, c, k2) = (w2.dims[0], w2.dims[1], w2.dims[2]);
+    let taps = k2 * w2.dims[3];
     let mut out = b2.to_vec();
     for o in 0..co {
         let mut acc = 0.0f32;
         for cc in 0..c {
-            let mut taps = 0.0f32;
-            for e in 0..k2 {
-                for f in 0..k2 {
-                    taps += w2.at4(o, cc, e, f);
-                }
-            }
-            acc += taps * b1[cc];
+            let tap_sum: f32 = w2.data[(o * c + cc) * taps..][..taps].iter().sum();
+            acc += tap_sum * b1[cc];
         }
         out[o] += acc;
     }
@@ -82,17 +145,15 @@ pub fn dirac(c: usize, k: usize) -> Tensor {
     w
 }
 
-/// Expand a depthwise kernel [C,1,k,k] to dense diagonal [C,C,k,k].
+/// Expand a depthwise kernel [C,1,k,k] to dense diagonal [C,C,k,k]
+/// (one contiguous k*k copy per channel).
 pub fn expand_depthwise(w: &Tensor) -> Tensor {
     let (c, one, k) = (w.dims[0], w.dims[1], w.dims[2]);
     assert_eq!(one, 1);
+    let kk = k * k;
     let mut out = Tensor::zeros(&[c, c, k, k]);
     for i in 0..c {
-        for a in 0..k {
-            for b in 0..k {
-                out.set4(i, i, a, b, w.at4(i, 0, a, b));
-            }
-        }
+        out.data[(i * c + i) * kk..][..kk].copy_from_slice(&w.data[i * kk..][..kk]);
     }
     out
 }
@@ -103,38 +164,33 @@ pub fn expand_depthwise(w: &Tensor) -> Tensor {
 pub fn extract_depthwise(w: &Tensor, tol: f32) -> Tensor {
     let (co, ci, k) = (w.dims[0], w.dims[1], w.dims[2]);
     assert_eq!(co, ci);
+    let kk = k * k;
     let mut out = Tensor::zeros(&[co, 1, k, k]);
     for o in 0..co {
         for c in 0..ci {
-            for a in 0..k {
-                for b in 0..k {
-                    let v = w.at4(o, c, a, b);
-                    if o == c {
-                        out.set4(o, 0, a, b, v);
-                    } else {
-                        assert!(v.abs() <= tol,
-                            "off-diagonal weight {v} in depthwise span");
-                    }
-                }
+            let src = &w.data[(o * ci + c) * kk..][..kk];
+            if o == c {
+                out.data[o * kk..][..kk].copy_from_slice(src);
+            } else if let Some(v) = src.iter().find(|v| v.abs() > tol) {
+                panic!("off-diagonal weight {v} in depthwise span");
             }
         }
     }
     out
 }
 
-/// Zero-pad a kernel spatially (centered) to size k x k.
+/// Zero-pad a kernel spatially (centered) to size k x k — contiguous
+/// row copies.
 pub fn embed_kernel(w: &Tensor, k: usize) -> Tensor {
     let (co, ci, kh) = (w.dims[0], w.dims[1], w.dims[2]);
     assert!(k >= kh && (k - kh) % 2 == 0, "cannot embed {kh} into {k}");
     let p = (k - kh) / 2;
     let mut out = Tensor::zeros(&[co, ci, k, k]);
-    for o in 0..co {
-        for c in 0..ci {
-            for a in 0..kh {
-                for b in 0..kh {
-                    out.set4(o, c, p + a, p + b, w.at4(o, c, a, b));
-                }
-            }
+    for oc in 0..co * ci {
+        for a in 0..kh {
+            let src = (oc * kh + a) * kh;
+            let dst = (oc * k + p + a) * k + p;
+            out.data[dst..dst + kh].copy_from_slice(&w.data[src..src + kh]);
         }
     }
     out
@@ -194,12 +250,22 @@ pub fn span_merge(
     let cin_span = spec.conv(i + 1).cin;
 
     // Running merged map (W, B) from span input to the current layer
-    // output; snapshots[l - i] holds it right after layer l (for adds).
+    // output.  Snapshots (the state right after a boundary, consumed by
+    // interior skip-additions) are only taken at boundaries some later
+    // add actually reads — cloning the running kernel at every layer is
+    // O(depth · |W|) of pure waste on long spans.
+    let needed: BTreeSet<usize> = ((i + 1)..=j)
+        .filter_map(|l| {
+            spec.conv(l).add_from.filter(|af| af - 1 >= i).map(|af| af - 1)
+        })
+        .collect();
     let mut w = dirac(cin_span, 1);
     let mut b = vec![0.0f32; cin_span];
     let mut s_acc = 1usize;
-    let mut snapshots: Vec<(Tensor, Vec<f32>, usize)> =
-        vec![(w.clone(), b.clone(), s_acc)];
+    let mut snapshots: BTreeMap<usize, (Tensor, Vec<f32>, usize)> = BTreeMap::new();
+    if needed.contains(&i) {
+        snapshots.insert(i, (w.clone(), b.clone(), s_acc));
+    }
 
     for l in (i + 1)..=j {
         let c = spec.conv(l);
@@ -225,7 +291,10 @@ pub fn span_merge(
         // materialized boundary tensors, so we skip folding here.
         if let Some(af) = c.add_from.filter(|af| af - 1 >= i) {
             let src = af - 1;
-            let (mut ws, mut bs, s_src) = snapshots[src - i].clone();
+            let (mut ws, mut bs, s_src) = snapshots
+                .get(&src)
+                .expect("snapshot for interior add source")
+                .clone();
             let mut s_skip = s_src;
             if let Some(proj) = &c.add_proj {
                 let pw = Tensor::new(
@@ -250,7 +319,9 @@ pub fn span_merge(
                 *x += *y;
             }
         }
-        snapshots.push((w.clone(), b.clone(), s_acc));
+        if needed.contains(&l) {
+            snapshots.insert(l, (w.clone(), b.clone(), s_acc));
+        }
     }
 
     // Eq. 1 / App. A invariant: merged kernel size is exactly
@@ -287,40 +358,12 @@ pub fn span_merge(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kernels::conv2d_valid_ref as conv2d_valid;
     use crate::util::rng::Rng;
 
     fn randt(r: &mut Rng, dims: &[usize]) -> Tensor {
         let n: usize = dims.iter().product();
         Tensor::new(dims.to_vec(), (0..n).map(|_| r.normal()).collect())
-    }
-
-    /// Direct VALID conv on host — test oracle only.
-    pub fn conv2d_valid(x: &Tensor, w: &Tensor, stride: usize) -> Tensor {
-        let (b, h, wd, ci) = (x.dims[0], x.dims[1], x.dims[2], x.dims[3]);
-        let (co, ci2, k) = (w.dims[0], w.dims[1], w.dims[2]);
-        assert_eq!(ci, ci2);
-        let ho = (h - k) / stride + 1;
-        let wo = (wd - k) / stride + 1;
-        let mut y = Tensor::zeros(&[b, ho, wo, co]);
-        for n in 0..b {
-            for p in 0..ho {
-                for q in 0..wo {
-                    for o in 0..co {
-                        let mut acc = 0.0;
-                        for c in 0..ci {
-                            for a in 0..k {
-                                for bb in 0..k {
-                                    acc += x.at4(n, p * stride + a, q * stride + bb, c)
-                                        * w.at4(o, c, a, bb);
-                                }
-                            }
-                        }
-                        y.set4(n, p, q, o, acc);
-                    }
-                }
-            }
-        }
-        y
     }
 
     #[test]
@@ -340,6 +383,27 @@ mod tests {
             let merged = conv2d_valid(&x, &wm, s1);
             assert!(composed.max_abs_diff(&merged) < 1e-3,
                 "diff {}", composed.max_abs_diff(&merged));
+        }
+    }
+
+    #[test]
+    fn gemm_merge_matches_naive_oracle() {
+        let mut r = Rng::new(6);
+        for &(ci, c, co, k1, k2, s1) in &[
+            (2, 3, 2, 3, 3, 1),
+            (4, 8, 4, 1, 3, 1),
+            (3, 5, 7, 3, 5, 2),
+            (1, 1, 1, 1, 1, 1),
+            (6, 2, 6, 5, 1, 3),
+        ] {
+            let w1 = randt(&mut r, &[c, ci, k1, k1]);
+            let w2 = randt(&mut r, &[co, c, k2, k2]);
+            let fast = merge_kernels(&w1, &w2, s1);
+            let slow = merge_kernels_ref(&w1, &w2, s1);
+            assert_eq!(fast.dims, slow.dims);
+            assert!(fast.max_abs_diff(&slow) < 1e-4,
+                "(ci{ci} c{c} co{co} k1{k1} k2{k2} s{s1}) diff {}",
+                fast.max_abs_diff(&slow));
         }
     }
 
@@ -389,6 +453,33 @@ mod tests {
         let dense = expand_depthwise(&wdw);
         let back = extract_depthwise(&dense, 0.0);
         assert!(back.max_abs_diff(&wdw) < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "off-diagonal")]
+    fn extract_depthwise_guards_off_diagonal() {
+        let mut dense = expand_depthwise(&Tensor::full(&[3, 1, 3, 3], 1.0));
+        dense.set4(0, 1, 1, 1, 0.5);
+        extract_depthwise(&dense, 1e-6);
+    }
+
+    #[test]
+    fn embed_kernel_centers() {
+        let mut r = Rng::new(8);
+        let w = randt(&mut r, &[2, 3, 3, 3]);
+        let e = embed_kernel(&w, 7);
+        assert_eq!(e.dims, vec![2, 3, 7, 7]);
+        for o in 0..2 {
+            for c in 0..3 {
+                for a in 0..3 {
+                    for b in 0..3 {
+                        assert_eq!(e.at4(o, c, a + 2, b + 2), w.at4(o, c, a, b));
+                    }
+                }
+                assert_eq!(e.at4(o, c, 0, 0), 0.0);
+                assert_eq!(e.at4(o, c, 6, 6), 0.0);
+            }
+        }
     }
 
     #[test]

@@ -339,13 +339,14 @@ impl Pipeline {
     /// diffusion loss (diffusion), on the eval stream.
     pub fn eval_plan(&self, plan: &Plan) -> Result<f32> {
         let n = self.cfg.eval_batches;
+        // lower once; the per-batch loop is pure dispatch
+        let cp = plan.compile(&self.model.rt, &self.man, Format::Eager)?;
         let mut acc = 0.0f32;
         for b in 0..n {
             let batch = self.gen.batch(train::STREAM_EVAL, b as u64);
             match (&batch, self.model.spec.task) {
                 (crate::model::Batch::Classify { x, y }, Task::Classify) => {
-                    let logits =
-                        plan.forward(&self.model.rt, &self.man, x, None, Format::Eager)?;
+                    let logits = cp.forward(x, None)?;
                     acc += host_accuracy(&logits, y);
                 }
                 (crate::model::Batch::Diffusion { x0, eps, t, abar }, Task::Diffusion) => {
@@ -359,8 +360,7 @@ impl Pipeline {
                                 s * x0.data[n2 * hw + i] + s1 * eps.data[n2 * hw + i];
                         }
                     }
-                    let pred =
-                        plan.forward(&self.model.rt, &self.man, &xt, Some(t), Format::Eager)?;
+                    let pred = cp.forward(&xt, Some(t))?;
                     let mse: f32 = pred
                         .data
                         .iter()

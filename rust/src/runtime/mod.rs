@@ -9,6 +9,7 @@
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -82,13 +83,18 @@ fn from_literal(lit: xla::Literal) -> Result<Tensor> {
     Ok(Tensor::new(dims, data))
 }
 
-/// Client + executable cache.  Compilation happens once per artifact path;
-/// executes are lock-free (Arc-shared Execs).
+/// Client + executable cache.  Compilation happens exactly once per
+/// artifact path — the cache holds a per-path *slot* that is created under
+/// the map lock but compiled under its own lock, so two threads racing on
+/// the same artifact serialize on that slot (second one reuses the first's
+/// result) while compilations of different artifacts proceed in parallel.
+/// Executes are lock-free (Arc-shared Execs).
 pub struct Runtime {
     client: xla::PjRtClient,
     root: PathBuf,
-    cache: Mutex<HashMap<PathBuf, Arc<Exec>>>,
+    cache: Mutex<HashMap<PathBuf, Arc<Mutex<Option<Arc<Exec>>>>>>,
     pub compile_count: Mutex<usize>,
+    load_count: AtomicUsize,
 }
 
 unsafe impl Send for Runtime {}
@@ -104,6 +110,7 @@ impl Runtime {
             root: root.to_path_buf(),
             cache: Mutex::new(HashMap::new()),
             compile_count: Mutex::new(0),
+            load_count: AtomicUsize::new(0),
         })
     }
 
@@ -112,13 +119,22 @@ impl Runtime {
     }
 
     /// Load + compile an artifact by manifest-relative path, with caching.
+    ///
+    /// Racing loads of the same path compile it exactly once: the per-path
+    /// slot is claimed under the map lock, then compilation happens under
+    /// the slot's own lock, so a second requester blocks on the slot (not
+    /// the whole cache) and wakes up to the finished executable.  A failed
+    /// compile leaves the slot empty so the next caller retries.
     pub fn load(&self, rel: &str) -> Result<Arc<Exec>> {
+        self.load_count.fetch_add(1, Ordering::Relaxed);
         let path = self.root.join(rel);
-        {
-            let cache = self.cache.lock().unwrap();
-            if let Some(e) = cache.get(&path) {
-                return Ok(e.clone());
-            }
+        let slot = {
+            let mut cache = self.cache.lock().unwrap();
+            cache.entry(path.clone()).or_default().clone()
+        };
+        let mut guard = slot.lock().unwrap();
+        if let Some(e) = guard.as_ref() {
+            return Ok(e.clone());
         }
         let proto = xla::HloModuleProto::from_text_file(
             path.to_str().context("utf-8 path")?,
@@ -132,19 +148,30 @@ impl Runtime {
         let exec = Arc::new(Exec {
             exe,
             client: self.client.clone(),
-            path: path.clone(),
+            path,
         });
         *self.compile_count.lock().unwrap() += 1;
-        self.cache.lock().unwrap().insert(path, exec.clone());
+        *guard = Some(exec.clone());
         Ok(exec)
     }
 
-    /// Number of executables currently cached.
+    /// Total `load` calls served (cache hits included) — lets callers
+    /// assert that a hot loop performs zero cache lookups.
+    pub fn loads(&self) -> usize {
+        self.load_count.load(Ordering::Relaxed)
+    }
+
+    /// Number of executables currently cached (compiled slots only).
+    /// Slot Arcs are cloned out first so the map lock is never held
+    /// while waiting on an in-flight compile's slot lock.
     pub fn cached(&self) -> usize {
-        self.cache.lock().unwrap().len()
+        let slots: Vec<_> = self.cache.lock().unwrap().values().cloned().collect();
+        slots.iter().filter(|s| s.lock().unwrap().is_some()).count()
     }
 
     /// Drop compiled executables (frees device memory between phases).
+    /// An in-flight compile keeps its orphaned slot alive and finishes
+    /// harmlessly; the next `load` of that path recompiles.
     pub fn clear_cache(&self) {
         self.cache.lock().unwrap().clear();
     }

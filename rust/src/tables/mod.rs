@@ -428,52 +428,48 @@ pub fn build(
     let keys: Vec<(usize, usize, usize)> = lat_map.keys().copied().collect();
     let results: Mutex<BTreeMap<(usize, usize, usize), Entry>> =
         Mutex::new(BTreeMap::new());
-    let next: Mutex<usize> = Mutex::new(0);
+    let first_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
     let workers = cfg.workers.max(1).min(keys.len().max(1));
-    std::thread::scope(|scope| -> Result<()> {
-        let mut handles = Vec::new();
-        for _ in 0..workers {
-            handles.push(scope.spawn(|| -> Result<()> {
-                loop {
-                    let idx = {
-                        let mut n = next.lock().unwrap();
-                        let i = *n;
-                        *n += 1;
-                        i
-                    };
-                    if idx >= keys.len() {
-                        return Ok(());
-                    }
-                    let (i, j, k) = keys[idx];
-                    let kept = csel::select(sp, &l1, i, j, k)
-                        .with_context(|| format!("csel infeasible ({i},{j},{k})"))?;
-                    let gates = sp.entry_gates(i, j, &kept);
-                    let perf = proxy_perf(
-                        model, gen, pretrained, &gates, cfg.proxy_steps,
-                        cfg.proxy_lr, cfg.eval_batches,
-                    )?;
-                    let perf = normalize_perf(sp, perf, base_metric) as f64;
-                    let imp = (perf - base_perf).exp();
-                    // A span whose every conv is dropped deploys as a pure
-                    // identity — the executor elides it entirely, so its
-                    // true latency is ~0, not the k=1 conv module's cost.
-                    let elidable = kept.is_empty()
-                        && sp.conv(j).add_from.is_none()
-                        && !sp.conv(j).gn
-                        && sp.conv(j).barrier_reason.is_empty();
-                    let lat = if elidable { 0.0 } else { lat_map[&(i, j, k)] };
-                    results.lock().unwrap().insert(
-                        (i, j, k),
-                        Entry { lat_ms: lat, imp, kept },
-                    );
+    crate::util::par::par_for_n(keys.len(), workers, |idx| {
+        if first_err.lock().unwrap().is_some() {
+            return; // an earlier entry failed; drain remaining work fast
+        }
+        let (i, j, k) = keys[idx];
+        let entry = || -> Result<Entry> {
+            let kept = csel::select(sp, &l1, i, j, k)
+                .with_context(|| format!("csel infeasible ({i},{j},{k})"))?;
+            let gates = sp.entry_gates(i, j, &kept);
+            let perf = proxy_perf(
+                model, gen, pretrained, &gates, cfg.proxy_steps,
+                cfg.proxy_lr, cfg.eval_batches,
+            )?;
+            let perf = normalize_perf(sp, perf, base_metric) as f64;
+            let imp = (perf - base_perf).exp();
+            // A span whose every conv is dropped deploys as a pure
+            // identity — the executor elides it entirely, so its
+            // true latency is ~0, not the k=1 conv module's cost.
+            let elidable = kept.is_empty()
+                && sp.conv(j).add_from.is_none()
+                && !sp.conv(j).gn
+                && sp.conv(j).barrier_reason.is_empty();
+            let lat = if elidable { 0.0 } else { lat_map[&(i, j, k)] };
+            Ok(Entry { lat_ms: lat, imp, kept })
+        };
+        match entry() {
+            Ok(e) => {
+                results.lock().unwrap().insert((i, j, k), e);
+            }
+            Err(e) => {
+                let mut fe = first_err.lock().unwrap();
+                if fe.is_none() {
+                    *fe = Some(e);
                 }
-            }));
+            }
         }
-        for h in handles {
-            h.join().expect("worker panicked")?;
-        }
-        Ok(())
-    })?;
+    });
+    if let Some(e) = first_err.into_inner().unwrap() {
+        return Err(e);
+    }
     let entries = results.into_inner().unwrap();
 
     // ---- per-layer keep-importance for LayerOnly ---------------------------

@@ -1,7 +1,10 @@
 //! In-tree substrates replacing crates unavailable in the offline vendor
-//! set (DESIGN.md §2): JSON, PRNG, tensors, property testing.
+//! set (DESIGN.md §2): JSON, PRNG, tensors, property testing, and
+//! scoped-thread data parallelism (`par`, the rayon substitute powering
+//! the GEMM kernels and table construction).
 
 pub mod json;
+pub mod par;
 pub mod prop;
 pub mod rng;
 pub mod tensor;

@@ -1,0 +1,141 @@
+//! Scoped-thread data-parallel helpers (rayon substitute — offline vendor
+//! set, DESIGN.md §2).  Two primitives cover every hot loop in the repo:
+//! disjoint-chunk iteration over a mutable slice (GEMM rows, kernel
+//! scatter) and a work-stealing indexed for-loop (table construction).
+//!
+//! Threads are spawned per call via `std::thread::scope`; spawn cost is
+//! ~10µs/thread, so callers gate on problem size (see
+//! [`crate::kernels::gemm`]) and stay serial below it.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Hardware parallelism, clamped by the `LM_THREADS` env override.
+pub fn max_threads() -> usize {
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    match std::env::var("LM_THREADS").ok().and_then(|v| v.parse::<usize>().ok()) {
+        Some(n) if n >= 1 => n.min(hw.max(1) * 4),
+        _ => hw,
+    }
+}
+
+/// Run `f(chunk_index, chunk)` over `chunk_len`-sized disjoint chunks of
+/// `data`, distributing chunks across up to `threads` workers.  Chunks are
+/// claimed atomically, so uneven per-chunk cost balances itself.
+pub fn par_chunks_mut<T, F>(data: &mut [T], chunk_len: usize, threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk_len > 0, "chunk_len must be positive");
+    let n_chunks = data.len().div_ceil(chunk_len.max(1)).max(1);
+    let threads = threads.min(n_chunks).max(1);
+    if threads <= 1 || data.is_empty() {
+        for (i, c) in data.chunks_mut(chunk_len).enumerate() {
+            f(i, c);
+        }
+        return;
+    }
+    let slots: Vec<std::sync::Mutex<Option<(usize, &mut [T])>>> = data
+        .chunks_mut(chunk_len)
+        .enumerate()
+        .map(|c| std::sync::Mutex::new(Some(c)))
+        .collect();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= slots.len() {
+                    return;
+                }
+                if let Some((idx, chunk)) = slots[i].lock().unwrap().take() {
+                    f(idx, chunk);
+                }
+            });
+        }
+    });
+}
+
+/// Work-stealing parallel for over `0..n` with up to `threads` workers.
+/// `f` must be safe to call concurrently from multiple threads.
+pub fn par_for_n<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let threads = threads.min(n).max(1);
+    if threads <= 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    return;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn chunks_cover_all_elements() {
+        let mut v: Vec<u32> = vec![0; 1003];
+        par_chunks_mut(&mut v, 64, 4, |idx, chunk| {
+            for (off, x) in chunk.iter_mut().enumerate() {
+                *x = (idx * 64 + off) as u32;
+            }
+        });
+        for (i, &x) in v.iter().enumerate() {
+            assert_eq!(x, i as u32);
+        }
+    }
+
+    #[test]
+    fn chunks_serial_fallback() {
+        let mut v = vec![1u8; 10];
+        par_chunks_mut(&mut v, 4, 1, |_, c| {
+            for x in c {
+                *x += 1;
+            }
+        });
+        assert!(v.iter().all(|&x| x == 2));
+    }
+
+    #[test]
+    fn for_n_visits_each_index_once() {
+        let hits = AtomicU64::new(0);
+        let sum = AtomicU64::new(0);
+        par_for_n(100, 8, |i| {
+            hits.fetch_add(1, Ordering::Relaxed);
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 100);
+        assert_eq!(sum.load(Ordering::Relaxed), 99 * 100 / 2);
+    }
+
+    #[test]
+    fn for_n_empty_and_tiny() {
+        par_for_n(0, 4, |_| panic!("must not run"));
+        let hits = AtomicU64::new(0);
+        par_for_n(1, 4, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn max_threads_positive() {
+        assert!(max_threads() >= 1);
+    }
+}

@@ -1,0 +1,151 @@
+//! Property parity: the flat-GEMM kernel/merge path against the retained
+//! naive oracles, across random configurations (dense, depthwise,
+//! strided) — the load-bearing guarantee that the fast host path computes
+//! the paper's Sec. 2 operator exactly.  Host-only: no artifacts needed.
+
+use layermerge::kernels::{conv2d_valid, conv2d_valid_ref, gemm, gemm_ref};
+use layermerge::merge::{expand_depthwise, merge_kernels, merge_kernels_ref};
+use layermerge::util::prop::check_res;
+use layermerge::util::rng::Rng;
+use layermerge::util::tensor::Tensor;
+
+fn randt(r: &mut Rng, dims: &[usize]) -> Tensor {
+    let n: usize = dims.iter().product();
+    Tensor::new(dims.to_vec(), (0..n).map(|_| r.normal()).collect())
+}
+
+#[test]
+fn gemm_matches_naive_over_random_shapes() {
+    check_res(
+        "gemm == naive triple loop",
+        25,
+        |r| {
+            let (m, k, n) = (1 + r.below(24), 1 + r.below(40), 1 + r.below(24));
+            let a: Vec<f32> = (0..m * k).map(|_| r.normal()).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| r.normal()).collect();
+            (m, k, n, a, b)
+        },
+        |(m, k, n, a, b)| {
+            let mut want = vec![0.0f32; m * n];
+            gemm_ref(*m, *k, *n, a, b, &mut want);
+            let mut got = vec![0.0f32; m * n];
+            gemm(*m, *k, *n, a, b, &mut got);
+            let diff = want
+                .iter()
+                .zip(&got)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0f32, f32::max);
+            if diff < 1e-3 {
+                Ok(())
+            } else {
+                Err(format!("({m},{k},{n}) diff {diff}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn conv2d_valid_matches_oracle_over_random_configs() {
+    check_res(
+        "im2col conv == direct conv",
+        20,
+        |r| {
+            let k = [1usize, 3, 5][r.below(3)];
+            let s = 1 + r.below(3);
+            let h = k + s * (1 + r.below(4));
+            let w = k + s * (1 + r.below(4));
+            let (b, ci, co) = (1 + r.below(2), 1 + r.below(5), 1 + r.below(5));
+            let x = randt(r, &[b, h, w, ci]);
+            let wt = randt(r, &[co, ci, k, k]);
+            (x, wt, s)
+        },
+        |(x, w, s)| {
+            let want = conv2d_valid_ref(x, w, *s);
+            let got = conv2d_valid(x, w, *s);
+            if got.dims != want.dims {
+                return Err(format!("dims {:?} vs {:?}", got.dims, want.dims));
+            }
+            let diff = got.max_abs_diff(&want);
+            if diff < 1e-3 {
+                Ok(())
+            } else {
+                Err(format!("x {:?} w {:?} s {s}: diff {diff}", x.dims, w.dims))
+            }
+        },
+    );
+}
+
+#[test]
+fn merge_kernels_matches_oracle_over_random_spans() {
+    check_res(
+        "GEMM merge == naive merge (incl. depthwise, strided)",
+        25,
+        |r| {
+            let k1 = [1usize, 3, 5][r.below(3)];
+            let k2 = [1usize, 3][r.below(2)];
+            let s1 = 1 + r.below(2);
+            let depthwise = r.below(3) == 0;
+            let (w1, c) = if depthwise {
+                // a depthwise inner layer expands to a diagonal dense
+                // kernel before composing — the span_merge path
+                let ch = 1 + r.below(6);
+                (expand_depthwise(&randt(r, &[ch, 1, k1, k1])), ch)
+            } else {
+                let ci = 1 + r.below(4);
+                let c = 1 + r.below(6);
+                (randt(r, &[c, ci, k1, k1]), c)
+            };
+            let co = 1 + r.below(4);
+            let w2 = randt(r, &[co, c, k2, k2]);
+            (w1, w2, s1)
+        },
+        |(w1, w2, s1)| {
+            let fast = merge_kernels(w1, w2, *s1);
+            let slow = merge_kernels_ref(w1, w2, *s1);
+            if fast.dims != slow.dims {
+                return Err(format!("dims {:?} vs {:?}", fast.dims, slow.dims));
+            }
+            let diff = fast.max_abs_diff(&slow);
+            if diff < 1e-3 {
+                Ok(())
+            } else {
+                Err(format!("w1 {:?} w2 {:?} s {s1}: diff {diff}", w1.dims, w2.dims))
+            }
+        },
+    );
+}
+
+/// End-to-end algebra property on the fast path only: convolving with the
+/// GEMM-merged kernel equals the two-conv composition (both convs on the
+/// im2col path), across strides — merged-network numerics don't depend on
+/// which host path produced the kernel.
+#[test]
+fn merged_kernel_reproduces_composition_on_fast_path() {
+    check_res(
+        "conv(x, merge(w1,w2,s)) == conv(conv(x,w1,s), w2)",
+        15,
+        |r| {
+            let k1 = [1usize, 3][r.below(2)];
+            let k2 = [1usize, 3][r.below(2)];
+            let s1 = 1 + r.below(2);
+            let (ci, c, co) = (1 + r.below(3), 1 + r.below(4), 1 + r.below(3));
+            let km = (k2 - 1) * s1 + k1;
+            let h = km + s1 * (1 + r.below(3));
+            let x = randt(r, &[1 + r.below(2), h, h, ci]);
+            let w1 = randt(r, &[c, ci, k1, k1]);
+            let w2 = randt(r, &[co, c, k2, k2]);
+            (x, w1, w2, s1)
+        },
+        |(x, w1, w2, s1)| {
+            let composed = conv2d_valid(&conv2d_valid(x, w1, *s1), w2, 1);
+            let wm = merge_kernels(w1, w2, *s1);
+            let merged = conv2d_valid(x, &wm, *s1);
+            let diff = composed.max_abs_diff(&merged);
+            if diff < 1e-3 {
+                Ok(())
+            } else {
+                Err(format!("x {:?} s {s1}: diff {diff}", x.dims))
+            }
+        },
+    );
+}

@@ -7,7 +7,9 @@
 //! * merged multi-layer spans == gated graph up to the SAME-padding
 //!   reorder boundary effect (small rel_l2; interior is exact — the
 //!   merge-module unit tests pin the exact VALID-conv algebra);
-//! * Fused format == Eager format (exact).
+//! * Fused format == Eager format (exact);
+//! * `CompiledPlan` (the one-time lowering) == `Plan::forward`, with
+//!   zero `Runtime` cache lookups per forward after lowering.
 
 mod common;
 
@@ -21,13 +23,13 @@ use layermerge::model::{Batch, Model};
 use layermerge::train::{self, Gen};
 
 fn setup(t: &common::TestCtx, name: &str) -> (Model, Vec<f32>) {
-    let model = Model::load(Arc::clone(&t.rt), &Manifest_of(t), name).unwrap();
+    let model = Model::load(Arc::clone(&t.rt), &manifest_of(t), name).unwrap();
     let params = model.init.clone();
     (model, params)
 }
 
 // Manifest isn't Clone; reload it cheaply.
-fn Manifest_of(t: &common::TestCtx) -> layermerge::model::Manifest {
+fn manifest_of(t: &common::TestCtx) -> layermerge::model::Manifest {
     layermerge::model::Manifest::load(&t.root).unwrap()
 }
 
@@ -35,7 +37,7 @@ fn Manifest_of(t: &common::TestCtx) -> layermerge::model::Manifest {
 fn original_plan_matches_gated_graph_exactly() {
     let Some(t) = ctx() else { return };
     for name in ["resnetish", "mnv2ish-1.0"] {
-        let man = Manifest_of(&t);
+        let man = manifest_of(&t);
         let (model, params) = setup(&t, name);
         let gen = Gen::for_model(&model, 7);
         let batch = gen.batch(train::STREAM_EVAL, 0);
@@ -63,7 +65,7 @@ fn original_plan_matches_gated_graph_exactly() {
 #[test]
 fn segment_merged_plan_close_to_gated_graph() {
     let Some(t) = ctx() else { return };
-    let man = Manifest_of(&t);
+    let man = manifest_of(&t);
     let (model, params) = setup(&t, "resnetish");
     let spec: &Spec = &model.spec;
     let mut a: Vec<usize> = Vec::new();
@@ -119,7 +121,7 @@ fn segment_merged_plan_close_to_gated_graph() {
 #[test]
 fn dropped_layers_are_elided_and_exact() {
     let Some(t) = ctx() else { return };
-    let man = Manifest_of(&t);
+    let man = manifest_of(&t);
     let (model, params) = setup(&t, "resnetish");
     let spec = &model.spec;
     // drop the first two reducible non-add layers
@@ -162,13 +164,93 @@ fn dropped_layers_are_elided_and_exact() {
     );
 }
 
+/// The lowered plan must be bit-equivalent to the one-shot forward (same
+/// executables, same operand tensors, same op order), and its steady-state
+/// loop must not touch the Runtime cache at all.
+#[test]
+fn compiled_plan_matches_forward_with_zero_runtime_loads() {
+    let Some(t) = ctx() else { return };
+    for name in ["resnetish", "mnv2ish-1.0"] {
+        let man = manifest_of(&t);
+        let (model, params) = setup(&t, name);
+        let gen = Gen::for_model(&model, 7);
+        let batch = gen.batch(train::STREAM_EVAL, 3);
+        let x = match &batch {
+            Batch::Classify { x, .. } => x.clone(),
+            _ => unreachable!(),
+        };
+        let plan = Plan::original(&model.spec, &params).unwrap();
+        for fmt in [Format::Eager, Format::Fused] {
+            let oneshot = plan.forward(&model.rt, &man, &x, None, fmt).unwrap();
+            let cp = plan.compile(&model.rt, &man, fmt).unwrap();
+            let loads_before = model.rt.loads();
+            let got = cp.forward(&x, None).unwrap();
+            let got2 = cp.forward(&x, None).unwrap();
+            assert_eq!(
+                model.rt.loads(),
+                loads_before,
+                "{name} {fmt:?}: compiled forward touched the Runtime cache"
+            );
+            assert!(
+                got.rel_l2(&oneshot) < 1e-6,
+                "{name} {fmt:?}: compiled != one-shot, rel_l2 {}",
+                got.rel_l2(&oneshot)
+            );
+            assert!(got2.rel_l2(&got) < 1e-7, "{name} {fmt:?}: not deterministic");
+        }
+    }
+}
+
+/// Same equivalence for a *merged* solution (residual slots, canonical
+/// boundary remapping, elided steps) — the dataflow cases the lowering's
+/// slot/release analysis must get right.
+#[test]
+fn compiled_plan_matches_forward_on_merged_solution() {
+    let Some(t) = ctx() else { return };
+    let man = manifest_of(&t);
+    let (model, params) = setup(&t, "resnetish");
+    let spec: &Spec = &model.spec;
+    // drop one reducible layer and merge the rest of its segment where
+    // possible: exercises elision + non-chain boundary reads together
+    let droppable: Vec<usize> = spec
+        .convs
+        .iter()
+        .filter(|c| c.conv_gated && c.add_from.is_none())
+        .map(|c| c.idx)
+        .take(1)
+        .collect();
+    let c_set: BTreeSet<usize> =
+        (1..=spec.len()).filter(|l| !droppable.contains(l)).collect();
+    let a: Vec<usize> = (1..spec.len()).filter(|l| !droppable.contains(l)).collect();
+    let spans: Vec<(usize, usize, usize)> = (1..=spec.len())
+        .map(|j| (j - 1, j, if c_set.contains(&j) { spec.conv(j).k } else { 1 }))
+        .collect();
+    let plan = Plan::from_solution(spec, &params, &a, &c_set, &spans).unwrap();
+    let gen = Gen::for_model(&model, 11);
+    let batch = gen.batch(train::STREAM_EVAL, 4);
+    let x = match &batch {
+        Batch::Classify { x, .. } => x.clone(),
+        _ => unreachable!(),
+    };
+    let oneshot = plan.forward(&model.rt, &man, &x, None, Format::Eager).unwrap();
+    let cp = plan.compile(&model.rt, &man, Format::Eager).unwrap();
+    let loads_before = model.rt.loads();
+    let got = cp.forward(&x, None).unwrap();
+    assert_eq!(model.rt.loads(), loads_before, "compiled forward must be load-free");
+    assert!(
+        got.rel_l2(&oneshot) < 1e-6,
+        "merged compiled != one-shot: rel_l2 {}",
+        got.rel_l2(&oneshot)
+    );
+}
+
 /// The diffusion plan must run end to end (concat, gn, attention,
 /// upsample, time bias) and agree with the gated graph on the original
 /// configuration.
 #[test]
 fn ddpm_original_plan_matches_gated_graph() {
     let Some(t) = ctx() else { return };
-    let man = Manifest_of(&t);
+    let man = manifest_of(&t);
     let (model, params) = setup(&t, "ddpmish");
     let gen = Gen::for_model(&model, 7);
     let batch = gen.batch(train::STREAM_EVAL, 0);
@@ -186,5 +268,16 @@ fn ddpm_original_plan_matches_gated_graph() {
         eager.rel_l2(&gated) < 1e-3,
         "ddpm plan deviates rel_l2 {}",
         eager.rel_l2(&gated)
+    );
+    // lowered form covers the full structural-op set: stash/concat slots,
+    // time-bias injection, attention and upsample posts
+    let cp = plan.compile(&model.rt, &man, Format::Eager).unwrap();
+    let loads_before = model.rt.loads();
+    let compiled = cp.forward(&x0, Some(&tt)).unwrap();
+    assert_eq!(model.rt.loads(), loads_before, "ddpm compiled forward load-free");
+    assert!(
+        compiled.rel_l2(&eager) < 1e-6,
+        "ddpm compiled != one-shot: rel_l2 {}",
+        compiled.rel_l2(&eager)
     );
 }

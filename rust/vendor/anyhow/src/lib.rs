@@ -1,0 +1,196 @@
+//! Minimal in-tree substitute for the `anyhow` crate (DESIGN.md §2: the
+//! offline vendor set ships no third-party registry, so the few external
+//! APIs this repo leans on are reimplemented as path dependencies).
+//!
+//! Implements exactly the surface the repo uses: `Error`, `Result`,
+//! `anyhow!`, `bail!`, `ensure!`, and the `Context` extension trait on
+//! `Result` and `Option`.  Like the real crate, `Error` intentionally does
+//! **not** implement `std::error::Error` — that is what lets the blanket
+//! `From<E: std::error::Error>` conversion coexist with the reflexive
+//! `From<Error>` used by `?`.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A string-backed error with an optional source chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Construct from any displayable message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string(), source: None }
+    }
+
+    /// Prepend a context line (what `Context::context` delegates to).
+    pub fn context<C: fmt::Display>(self, c: C) -> Error {
+        Error { msg: format!("{c}: {}", self.msg), source: self.source }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        let mut src = self.source.as_deref().and_then(StdError::source);
+        while let Some(s) = src {
+            write!(f, "\n  caused by: {s}")?;
+            src = s.source();
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string(), source: Some(Box::new(e)) }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Anything convertible into [`Error`] — implemented for std errors and
+/// for `Error` itself so `Context` works on both (the real crate's
+/// `ext::StdError` trick).
+#[doc(hidden)]
+pub trait IntoError {
+    fn into_error(self) -> Error;
+}
+
+impl<E: StdError + Send + Sync + 'static> IntoError for E {
+    fn into_error(self) -> Error {
+        Error::from(self)
+    }
+}
+
+impl IntoError for Error {
+    fn into_error(self) -> Error {
+        self
+    }
+}
+
+/// `anyhow::Context` — attach context to errors and missing options.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: IntoError> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into_error().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($($t:tt)*) => {
+        $crate::Error::msg(format!($($t)*))
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($t:tt)+) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($t)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::result::Result<(), std::io::Error> {
+        Err(std::io::Error::new(std::io::ErrorKind::Other, "disk on fire"))
+    }
+
+    #[test]
+    fn context_chains() {
+        let e = io_err().context("reading manifest").unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest: disk on fire");
+        let e2 = io_err()
+            .with_context(|| format!("pass {}", 2))
+            .unwrap_err()
+            .context("outer");
+        assert_eq!(format!("{e2}"), "outer: pass 2: disk on fire");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing").unwrap_err();
+        assert_eq!(format!("{e}"), "missing");
+        assert_eq!(Some(3u32).context("fine").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros() {
+        fn f(ok: bool) -> Result<u32> {
+            ensure!(ok, "wanted {}", "true");
+            if !ok {
+                bail!("unreachable");
+            }
+            Ok(7)
+        }
+        assert_eq!(f(true).unwrap(), 7);
+        assert_eq!(format!("{}", f(false).unwrap_err()), "wanted true");
+        let e: Error = anyhow!("x = {}", 5);
+        assert_eq!(format!("{e}"), "x = 5");
+    }
+
+    #[test]
+    fn ensure_bare() {
+        fn f(x: u32) -> Result<()> {
+            ensure!(x > 1);
+            Ok(())
+        }
+        assert!(f(2).is_ok());
+        assert!(format!("{}", f(0).unwrap_err()).contains("x > 1"));
+    }
+
+    #[test]
+    fn question_mark_conversion() {
+        fn f() -> Result<()> {
+            io_err()?;
+            Ok(())
+        }
+        assert!(f().is_err());
+    }
+}

@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# Run the merge/forward perf benches and write BENCH_merge.json at the
+# repo root (stable schema "layermerge.bench.merge.v1" — one record per
+# PR lets the perf trajectory be compared across sessions).
+#
+# Usage:
+#   scripts/bench.sh              # merge benches (host-only, no artifacts)
+#   make artifacts && scripts/bench.sh   # adds span_merge + forward rows
+#   BENCH_OUT=/tmp/b.json scripts/bench.sh
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+cargo bench --bench merge_ops ${1:+"$@"}
