@@ -15,6 +15,8 @@
 //! make artifacts && cargo run --release --example e2e_compress
 //! ```
 
+use std::sync::Arc;
+
 use layermerge::exec::{Format, Plan};
 use layermerge::experiments::Ctx;
 use layermerge::pipeline::{Method, PipelineCfg};
@@ -25,6 +27,7 @@ fn main() -> anyhow::Result<()> {
     let repo = std::env::current_dir()?;
     let ctx = Ctx::new(std::path::Path::new("artifacts"), repo.clone(),
                        PipelineCfg::default())?;
+    let engine = ctx.engine();
     let mut pipe = ctx.pipeline("resnetish")?;
     let mut t = report::compression_table(
         "E2E — resnetish compressed at three budgets (measured latencies)",
@@ -48,16 +51,16 @@ fn main() -> anyhow::Result<()> {
         // numerics: pruned gated graph vs deployed merged plan
         let a_set: std::collections::BTreeSet<usize> = sol.a.iter().copied().collect();
         let gates = pipe.model.spec.solution_gates(&a_set, &sol.c, &sol.spans);
-        let plan = Plan::from_solution(&pipe.model.spec, &c.finetuned, &sol.a,
-                                       &sol.c, &sol.spans)?;
+        let plan = Arc::new(Plan::from_solution(&pipe.model.spec, &c.finetuned,
+                                                &sol.a, &sol.c, &sol.spans)?);
         let batch = pipe.gen.batch(train::STREAM_EVAL, 0);
         let x = match &batch {
             layermerge::model::Batch::Classify { x, .. } => x.clone(),
             _ => unreachable!(),
         };
         let gated = pipe.model.forward(&c.finetuned, &gates, &batch)?;
-        let eager = plan.forward(&pipe.model.rt, &ctx.man, &x, None, Format::Eager)?;
-        let fused = plan.forward(&pipe.model.rt, &ctx.man, &x, None, Format::Fused)?;
+        let eager = engine.infer(&plan, &x, None, Format::Eager)?;
+        let fused = engine.infer(&plan, &x, None, Format::Fused)?;
         let pad_dev = eager.rel_l2(&gated);
         let fmt_dev = fused.rel_l2(&eager);
         anyhow::ensure!(fmt_dev < 1e-4,

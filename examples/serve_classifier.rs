@@ -1,85 +1,132 @@
-//! Serving scenario — deploy a compressed classifier and serve a request
-//! stream, reporting throughput and latency percentiles before/after
-//! compression.  This is the "latency-critical application" workload the
-//! paper's introduction motivates (mobile / self-driving inference).
+//! Serving scenario — deploy a compressed classifier behind the
+//! micro-batched [`Session`] queue and serve a concurrent request stream,
+//! reporting p50/p95 latency and throughput before/after compression.
+//! This is the "latency-critical application" workload the paper's
+//! introduction motivates (mobile / self-driving inference).
 //!
-//! Each deployed network is lowered **once** to a [`CompiledPlan`] and the
-//! request loop runs on it: zero artifact lookups, cache-mutex
-//! acquisitions, or boundary-tensor clones per request — the serving hot
-//! path is nothing but PJRT dispatches.
+//! Each deployed network is lowered **once** (`Engine::deploy`) into an
+//! owned, `Send + Sync` [`CompiledPlan`]; a pool of worker threads
+//! coalesces single-image client requests up to the spec batch size and
+//! splits the results back per ticket.  The serving hot path is nothing
+//! but PJRT dispatches — zero artifact lookups or cache-mutex
+//! acquisitions per request.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example serve_classifier
 //! ```
 
-use std::time::Instant;
+use std::sync::Arc;
 
-use layermerge::exec::{CompiledPlan, Format, Plan};
+use layermerge::exec::{Format, Plan};
 use layermerge::experiments::Ctx;
-use layermerge::pipeline::{host_accuracy, Method, PipelineCfg};
-use layermerge::train;
+use layermerge::pipeline::{host_accuracy, Method, Pipeline, PipelineCfg};
+use layermerge::serve::{self, Engine, ServeCfg, Session};
 
-const REQUESTS: usize = 40;
+/// Requests per client at each concurrency level.
+const REQUESTS: usize = 32;
+const CLIENT_LEVELS: [usize; 3] = [1, 4, 16];
 
-fn serve(
+/// Drive `clients` concurrent single-image submitters and print one row.
+fn load_row(
     name: &str,
-    plan: &CompiledPlan<'_>,
-    pipe: &layermerge::pipeline::Pipeline,
-) -> anyhow::Result<(f64, f64, f64, f32)> {
-    // warm-up
-    for i in 0..3 {
-        let b = pipe.gen.batch(train::STREAM_EVAL, i);
-        if let layermerge::model::Batch::Classify { x, .. } = &b {
-            plan.forward(x, None)?;
-        }
+    sess: &Session,
+    pool: &[(layermerge::util::tensor::Tensor, layermerge::util::tensor::Tensor)],
+    clients: usize,
+) -> anyhow::Result<serve::LoadReport> {
+    let r = serve::drive(sess, clients, REQUESTS, |c, i| {
+        (pool[(c * REQUESTS + i) % pool.len()].0.clone(), None)
+    })?;
+    println!("{}", r.row(name));
+    Ok(r)
+}
+
+/// Accuracy through the queue: submit every pooled row, score each ticket
+/// against its label (also exercises sub-batch ticket delivery).
+fn queued_accuracy(
+    sess: &Session,
+    pool: &[(layermerge::util::tensor::Tensor, layermerge::util::tensor::Tensor)],
+) -> anyhow::Result<f32> {
+    let tickets: Vec<_> = pool
+        .iter()
+        .map(|(x, _)| sess.submit(x.clone()))
+        .collect::<anyhow::Result<_>>()?;
+    let mut acc = 0.0f32;
+    for (t, (_, y)) in tickets.into_iter().zip(pool) {
+        acc += host_accuracy(&t.wait()?, y);
     }
-    let mut lat = Vec::with_capacity(REQUESTS);
-    let mut correct = 0.0f32;
-    let t0 = Instant::now();
-    for i in 0..REQUESTS {
-        let b = pipe.gen.batch(train::STREAM_EVAL, i as u64);
-        if let layermerge::model::Batch::Classify { x, y } = &b {
-            let t = Instant::now();
-            let logits = plan.forward(x, None)?;
-            lat.push(t.elapsed().as_secs_f64() * 1e3);
-            correct += host_accuracy(&logits, y);
-        }
+    Ok(acc / pool.len() as f32)
+}
+
+fn serve_network(
+    name: &str,
+    engine: &Engine,
+    plan: Arc<Plan>,
+    pipe: &Pipeline,
+) -> anyhow::Result<Vec<serve::LoadReport>> {
+    let sess = engine.deploy_cfg(plan, Format::Fused, ServeCfg::default())?;
+    let pool = serve::classify_request_pool(&pipe.gen, 4);
+    // warm the executables before timing
+    for (x, _) in pool.iter().take(sess.batch()) {
+        sess.submit(x.clone())?.wait()?;
     }
-    let wall = t0.elapsed().as_secs_f64();
-    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let p50 = lat[lat.len() / 2];
-    let p95 = lat[(lat.len() as f64 * 0.95) as usize];
-    let imgs_per_s = (REQUESTS * pipe.model.spec.batch) as f64 / wall;
+    let acc = queued_accuracy(&sess, &pool)?;
+    let mut reports = Vec::new();
+    for clients in CLIENT_LEVELS {
+        reports.push(load_row(
+            &format!("{name} c{clients}"),
+            &sess,
+            &pool,
+            clients,
+        )?);
+    }
+    let s = sess.stats();
     println!(
-        "{name:<28} p50 {p50:>7.2}ms  p95 {p95:>7.2}ms  {imgs_per_s:>8.0} img/s  acc {:.1}%",
-        correct / REQUESTS as f32 * 100.0
+        "  acc {:.1}%  |  {} requests in {} batches, {} padded rows, queue peak {}\n",
+        acc * 100.0,
+        s.requests,
+        s.batches,
+        s.padded_rows,
+        s.max_queue
     );
-    Ok((p50, p95, imgs_per_s, correct / REQUESTS as f32))
+    sess.shutdown();
+    Ok(reports)
 }
 
 fn main() -> anyhow::Result<()> {
     let ctx = Ctx::new(std::path::Path::new("artifacts"),
                        std::env::current_dir()?, PipelineCfg::default())?;
+    let engine = ctx.engine();
     let mut pipe = ctx.pipeline("mnv2ish-1.0")?;
 
-    println!("serving {} batched requests (batch {})\n", REQUESTS, pipe.model.spec.batch);
-    let orig = Plan::original(&pipe.model.spec, &pipe.pretrained)?;
-    let orig_cp = orig.compile(&pipe.model.rt, &ctx.man, Format::Fused)?;
-    let (p50_o, _, thr_o, _) = serve("original mnv2ish-1.0", &orig_cp, &pipe)?;
+    println!(
+        "micro-batched serving: {:?} concurrent clients x {REQUESTS} single-image \
+         requests (spec batch {})\n",
+        CLIENT_LEVELS, pipe.model.spec.batch
+    );
+    let orig = Arc::new(Plan::original(&pipe.model.spec, &pipe.pretrained)?);
+    let base = serve_network("original mnv2ish-1.0", &engine, orig, &pipe)?;
 
     for budget in [0.65, 0.5] {
         let c = pipe.run(Method::LayerMerge, budget)?;
-        let plan = Plan::from_solution(
+        let plan = Arc::new(Plan::from_solution(
             &pipe.model.spec, &c.finetuned, &c.solution.a, &c.solution.c,
             &c.solution.spans,
-        )?;
-        let cp = plan.compile(&pipe.model.rt, &ctx.man, Format::Fused)?;
-        let (p50, _, thr, _) =
-            serve(&format!("LayerMerge-{:.0}%", budget * 100.0), &cp, &pipe)?;
-        println!(
-            "  -> speedup p50 {:.2}x, throughput {:.2}x, depth {} -> {}\n",
-            p50_o / p50, thr / thr_o, pipe.model.spec.len(), cp.depth(),
-        );
+        )?);
+        let depth = plan.depth();
+        let name = format!("LayerMerge-{:.0}%", budget * 100.0);
+        let comp = serve_network(&name, &engine, plan, &pipe)?;
+        for (b, r) in base.iter().zip(&comp) {
+            println!(
+                "  {name} c{}: p50 {:.2}x, p95 {:.2}x, throughput {:.2}x \
+                 (depth {} -> {depth})",
+                r.clients,
+                b.p50_ms / r.p50_ms,
+                b.p95_ms / r.p95_ms,
+                r.rows_per_s / b.rows_per_s,
+                pipe.model.spec.len(),
+            );
+        }
+        println!();
     }
     Ok(())
 }

@@ -1,0 +1,207 @@
+//! Bench: micro-batched worker-pool serving (`layermerge::serve`) —
+//! throughput at 1/4/16 concurrent closed-loop clients.
+//!
+//! Extends `BENCH_merge.json` (schema `layermerge.bench.merge.v1`) with a
+//! `serving` record: read-modify-write so the merge/forward rows written
+//! by `cargo bench --bench merge_ops` are preserved, per the ROADMAP rule
+//! that perf records are extended, never replaced.
+//!
+//! The host-mock session exercises the real queue machinery (bounded
+//! queue, coalescing, padding, ticket split) against a backend with a
+//! fixed per-dispatch overhead plus per-row compute — the cost shape that
+//! makes micro-batching pay: concurrent clients amortize the dispatch
+//! overhead, so multi-client throughput must come out >= single-client.
+//! With `make artifacts` + real XLA bindings, a second section drives a
+//! deployed `resnetish` plan the same way.
+
+use layermerge::serve::{self, Engine, LoadReport, ServeCfg, Session};
+use layermerge::util::json::Json;
+use layermerge::util::tensor::Tensor;
+
+const MOCK_BATCH: usize = 8;
+const MOCK_TAIL: [usize; 1] = [64];
+const CLIENT_LEVELS: [usize; 3] = [1, 4, 16];
+const REQUESTS: usize = 64;
+
+/// Deterministic compute ballast (black-boxed so it isn't optimized out).
+fn spin(units: usize) -> f32 {
+    let mut acc = 0.0f32;
+    for i in 0..units {
+        acc += std::hint::black_box((i as f32) * 1e-3).sin();
+    }
+    acc
+}
+
+/// Mock "device": ~fixed dispatch overhead + per-row work; row r of the
+/// output depends only on row r of the input.
+fn mock_backend(x: &Tensor, _t: Option<&Tensor>) -> anyhow::Result<Tensor> {
+    std::hint::black_box(spin(120_000)); // per-dispatch overhead
+    let rl: usize = x.dims[1..].iter().product();
+    let b = x.dims[0];
+    let mut out = Tensor::zeros(&[b, 2]);
+    for r in 0..b {
+        std::hint::black_box(spin(8_000)); // per-row work
+        let row = &x.data[r * rl..(r + 1) * rl];
+        out.data[r * 2] = row.iter().sum();
+        out.data[r * 2 + 1] = row.iter().map(|v| v * v).sum();
+    }
+    Ok(out)
+}
+
+fn report_json(name: &str, r: &LoadReport) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(name)),
+        ("iters", Json::num(r.requests as f64)),
+        ("mean_ms", Json::num(r.mean_ms)),
+        ("p50_ms", Json::num(r.p50_ms)),
+        ("p95_ms", Json::num(r.p95_ms)),
+        ("min_ms", Json::num(r.min_ms)),
+    ])
+}
+
+fn drive_levels(
+    sess: &Session,
+    tag: &str,
+    rows: &mut Vec<Json>,
+    derived: &mut Vec<(String, Json)>,
+) -> anyhow::Result<Vec<LoadReport>> {
+    let mut reports = Vec::new();
+    for clients in CLIENT_LEVELS {
+        let r = serve::drive(sess, clients, REQUESTS, |c, i| {
+            let rl: usize = MOCK_TAIL.iter().product();
+            let seed = (c * 7919 + i) as f32;
+            (
+                Tensor::new(
+                    vec![1, MOCK_TAIL[0]],
+                    (0..rl).map(|k| seed + k as f32 * 0.125).collect(),
+                ),
+                None,
+            )
+        })?;
+        println!("{}", r.row(&format!("{tag} clients={clients}")));
+        rows.push(report_json(&format!("{tag} clients={clients}"), &r));
+        derived.push((
+            format!("serving_rows_per_s_c{clients}"),
+            Json::num(r.rows_per_s),
+        ));
+        reports.push(r);
+    }
+    Ok(reports)
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut rows: Vec<Json> = Vec::new();
+    let mut derived: Vec<(String, Json)> = Vec::new();
+
+    println!("== serving benches (micro-batched Session, host mock) ==");
+    let sess = Session::from_fn(
+        MOCK_BATCH,
+        &MOCK_TAIL,
+        false,
+        ServeCfg { workers: 2, queue_cap: 256 },
+        mock_backend,
+    );
+    let reports = drive_levels(&sess, "serve mock", &mut rows, &mut derived)?;
+    let single = reports[0].rows_per_s;
+    let best_multi = reports[1..]
+        .iter()
+        .map(|r| r.rows_per_s)
+        .fold(f64::NEG_INFINITY, f64::max);
+    derived.push((
+        "serving_multi_vs_single".into(),
+        Json::num(best_multi / single.max(1e-12)),
+    ));
+    let s = sess.stats();
+    derived.push((
+        "serving_coalesce_rows_per_batch".into(),
+        Json::num(s.rows as f64 / (s.batches.max(1)) as f64),
+    ));
+    println!(
+        "  multi-vs-single throughput {:.2}x, {:.2} rows/batch coalesced",
+        best_multi / single.max(1e-12),
+        s.rows as f64 / s.batches.max(1) as f64
+    );
+    sess.shutdown();
+
+    // a deployed plan, when the artifacts + real XLA runtime are present
+    let root = std::path::Path::new("artifacts");
+    if root.join("manifest.json").exists() {
+        match Engine::open(root) {
+            Ok(engine) => {
+                use layermerge::exec::{Format, Plan};
+                use std::sync::Arc;
+                println!("== serving benches (deployed resnetish plan) ==");
+                let model = engine.load_model("resnetish")?;
+                let plan = Arc::new(Plan::original(&model.spec, &model.init)?);
+                let sess = engine.deploy_cfg(
+                    plan,
+                    Format::Fused,
+                    ServeCfg { workers: 2, queue_cap: 256 },
+                )?;
+                let gen = layermerge::train::Gen::for_model(&model, 5);
+                let pool = serve::classify_request_pool(&gen, 2);
+                for clients in CLIENT_LEVELS {
+                    let r = serve::drive(&sess, clients, REQUESTS.min(32), |c, i| {
+                        (pool[(c * 31 + i) % pool.len()].0.clone(), None)
+                    })?;
+                    let name = format!("serve resnetish clients={clients}");
+                    println!("{}", r.row(&name));
+                    rows.push(report_json(&name, &r));
+                    derived.push((
+                        format!("serving_plan_rows_per_s_c{clients}"),
+                        Json::num(r.rows_per_s),
+                    ));
+                }
+                sess.shutdown();
+            }
+            Err(e) => println!("(skipping deployed-plan serving bench: {e})"),
+        }
+    } else {
+        println!("(skipping deployed-plan serving bench: run `make artifacts` first)");
+    }
+
+    // merge into BENCH_merge.json: keep every non-serving row and derived
+    // key from previous bench runs, replace the serving ones
+    let path = std::env::var("BENCH_OUT").unwrap_or_else(|_| {
+        format!("{}/../BENCH_merge.json", env!("CARGO_MANIFEST_DIR"))
+    });
+    let (mut all_rows, mut all_derived): (Vec<Json>, Vec<(String, Json)>) =
+        (Vec::new(), Vec::new());
+    if let Ok(text) = std::fs::read_to_string(&path) {
+        if let Ok(prev) = Json::parse(&text) {
+            if let Some(prev_rows) = prev.get("rows").and_then(|r| r.as_arr()) {
+                for r in prev_rows {
+                    let name = r.get("name").and_then(|n| n.as_str()).unwrap_or("");
+                    if !name.starts_with("serve ") {
+                        all_rows.push(r.clone());
+                    }
+                }
+            }
+            if let Some(prev_d) = prev.get("derived").and_then(|d| d.as_obj()) {
+                for (k, v) in prev_d {
+                    if !k.starts_with("serving_") {
+                        all_derived.push((k.clone(), v.clone()));
+                    }
+                }
+            }
+        }
+    }
+    all_rows.extend(rows);
+    all_derived.extend(derived);
+    let out = Json::obj(vec![
+        ("schema", Json::str("layermerge.bench.merge.v1")),
+        ("rows", Json::Arr(all_rows)),
+        (
+            "derived",
+            Json::obj(
+                all_derived
+                    .iter()
+                    .map(|(k, v)| (k.as_str(), v.clone()))
+                    .collect(),
+            ),
+        ),
+    ]);
+    std::fs::write(&path, out.to_string())?;
+    println!("wrote {path}");
+    Ok(())
+}

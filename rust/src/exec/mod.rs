@@ -18,8 +18,12 @@
 //! flow through refcounted buffers that are released at their last use —
 //! the steady-state loop performs **zero** `Runtime` cache-mutex
 //! acquisitions, path hashes, or full-tensor boundary clones per step.
-//! `Plan::forward` lowers-then-runs for one-shot calls; latency
-//! measurement and serving hold a `CompiledPlan` across requests.
+//!
+//! `CompiledPlan` **owns** its plan (`Arc<Plan>`): it has no lifetime
+//! parameter, is `Send + Sync`, and can be handed to worker threads.
+//! Deployment goes through [`crate::serve::Engine::deploy`] (worker-pool
+//! serving) or [`crate::serve::Engine::lower`] (a bare compiled plan for
+//! hot loops); `CompiledPlan::lower` is the underlying constructor.
 //!
 //! The plan is also the ground truth for end-to-end latency measurements
 //! (Tables 1-5) and for the merged-vs-pruned numerics report.
@@ -271,30 +275,40 @@ impl Plan {
         self.steps.len()
     }
 
-    /// Lower this plan against a runtime + manifest: resolve every
+    /// Does a forward through this plan require a timestep tensor?
+    pub fn needs_time(&self) -> bool {
+        self.task == Task::Diffusion
+    }
+}
+
+impl CompiledPlan {
+    /// Lower a plan against a runtime + manifest: resolve every
     /// executable, pre-materialize operand tensors, and precompute the
     /// boundary-buffer lifetimes.  One-time cost; the returned
-    /// [`CompiledPlan`] dispatches with no per-step artifact resolution.
-    pub fn compile<'p>(
-        &'p self,
+    /// `CompiledPlan` dispatches with no per-step artifact resolution and
+    /// keeps the plan alive through its `Arc` (weight tensors are shared,
+    /// not copied).  Callers normally reach this through
+    /// [`crate::serve::Engine::lower`] / [`crate::serve::Engine::deploy`].
+    pub fn lower(
+        plan: Arc<Plan>,
         rt: &Runtime,
         man: &Manifest,
         fmt: Format,
-    ) -> Result<CompiledPlan<'p>> {
-        let b = self.batch;
+    ) -> Result<CompiledPlan> {
+        let b = plan.batch;
 
         // Pass 1 — dataflow: which steps read their input from the running
         // buffer vs a stored boundary, which boundaries need a slot at
         // all, and where each slot's last read happens.
-        let mut from_cur = Vec::with_capacity(self.steps.len());
+        let mut from_cur = Vec::with_capacity(plan.steps.len());
         let mut prev_j = 0usize;
-        for step in &self.steps {
+        for step in &plan.steps {
             from_cur.push(step.i == prev_j);
             prev_j = step.j;
         }
         let mut slot_of: BTreeMap<usize, usize> = BTreeMap::new();
         let mut last_read: BTreeMap<usize, usize> = BTreeMap::new();
-        for (s, step) in self.steps.iter().enumerate() {
+        for (s, step) in plan.steps.iter().enumerate() {
             if !from_cur[s] {
                 slot_of.insert(step.i, 0);
                 last_read.insert(step.i, s);
@@ -313,8 +327,8 @@ impl Plan {
         // convs divide by stride; upsample doubles), so every signature
         // matches what an eager forward would have requested.
         let mut shapes: BTreeMap<usize, (usize, usize, usize)> = BTreeMap::new();
-        let input_dims = self.steps.first().map(|f| [b, f.h_in, f.w_in, f.cin]);
-        if let Some(f) = self.steps.first() {
+        let input_dims = plan.steps.first().map(|f| [b, f.h_in, f.w_in, f.cin]);
+        if let Some(f) = plan.steps.first() {
             anyhow::ensure!(
                 f.concat.is_none(),
                 "first step cannot read a stash (nothing stashed yet)"
@@ -322,8 +336,8 @@ impl Plan {
             shapes.insert(f.i, (f.h_in, f.w_in, f.cin));
         }
         let mut stash_of: BTreeMap<String, (usize, (usize, usize, usize))> = BTreeMap::new();
-        let mut csteps: Vec<CompiledStep<'p>> = Vec::with_capacity(self.steps.len());
-        for (s, step) in self.steps.iter().enumerate() {
+        let mut csteps: Vec<CompiledStep> = Vec::with_capacity(plan.steps.len());
+        for (s, step) in plan.steps.iter().enumerate() {
             let (h, w, mut c) = *shapes
                 .get(&step.i)
                 .with_context(|| format!("boundary {} shape unknown", step.i))?;
@@ -353,6 +367,8 @@ impl Plan {
                     let (hs, ws, cs) = *shapes
                         .get(src)
                         .with_context(|| format!("res boundary {src} shape unknown"))?;
+                    // projection weight is read from the plan at dispatch;
+                    // only the exec + materialized bias live here
                     let proj = match proj {
                         Some(p) => {
                             let psig =
@@ -362,7 +378,6 @@ impl Plan {
                                 .with_context(|| format!("proj artifact {psig}"))?;
                             Some((
                                 rt.load(&rel)?,
-                                &p.w,
                                 Tensor::new(vec![p.b.len()], p.b.clone()),
                             ))
                         }
@@ -437,11 +452,11 @@ impl Plan {
             for p in &step.post {
                 let base = format!("b{b}h{hc}w{wc}c{cc}");
                 match p {
-                    Post::Attention { wqkv, wout } => {
+                    Post::Attention { .. } => {
                         let rel = man
                             .ew_art(&format!("attn_{base}"))
                             .context("attn artifact")?;
-                        post.push(CompiledPost::Attention(rt.load(&rel)?, wqkv, wout));
+                        post.push(CompiledPost::Attention(rt.load(&rel)?));
                     }
                     Post::Upsample => {
                         let rel =
@@ -465,9 +480,7 @@ impl Plan {
                     InputSrc::Boundary(slot_of[&step.i])
                 },
                 concat_slot,
-                time_bias: step.time_bias.as_ref().map(|(tw, tb)| (tw, &tb[..])),
                 conv,
-                weight: &m.weight,
                 bias: Tensor::new(vec![co], m.bias.clone()),
                 fuse_res,
                 gn,
@@ -480,69 +493,28 @@ impl Plan {
                 release,
             });
         }
-        let head = match &self.head {
-            Some((hw, hb)) => {
+        let head = match &plan.head {
+            Some((_, hb)) => {
                 let rel = man
-                    .ew_art(&format!("head_{}", self.spec_name))
+                    .ew_art(&format!("head_{}", plan.spec_name))
                     .context("head artifact")?;
-                Some((rt.load(&rel)?, hw, Tensor::new(vec![hb.len()], hb.clone())))
+                Some((rt.load(&rel)?, Tensor::new(vec![hb.len()], hb.clone())))
             }
             None => None,
         };
+        let input_slot = plan.steps.first().and_then(|f| slot_of.get(&f.i).copied());
         Ok(CompiledPlan {
             fmt,
-            task: self.task,
+            task: plan.task,
             batch: b,
             steps: csteps,
             head,
-            temb: self.temb.as_ref().map(|(w1, b1, d)| (w1, &b1[..], *d)),
             input_dims,
-            input_slot: self
-                .steps
-                .first()
-                .and_then(|f| slot_of.get(&f.i).copied()),
+            input_slot,
             n_slots: slot_of.len(),
             n_stash: stash_of.len(),
+            plan,
         })
-    }
-
-    /// Forward through the merged network (one-shot: lowers, then runs).
-    /// Hot loops should call [`Plan::compile`] once and reuse the
-    /// [`CompiledPlan`].
-    pub fn forward(
-        &self,
-        rt: &Runtime,
-        man: &Manifest,
-        x: &Tensor,
-        t: Option<&Tensor>,
-        fmt: Format,
-    ) -> Result<Tensor> {
-        self.compile(rt, man, fmt)?.forward(x, t)
-    }
-
-    /// Forward with per-dispatch timing accumulation (ms).
-    pub fn forward_timed(
-        &self,
-        rt: &Runtime,
-        man: &Manifest,
-        x: &Tensor,
-        t: Option<&Tensor>,
-        fmt: Format,
-    ) -> Result<(Tensor, f64)> {
-        self.compile(rt, man, fmt)?.forward_timed(x, t)
-    }
-
-    /// End-to-end latency with the App. C protocol (lowered once, so the
-    /// measured loop carries no artifact-resolution overhead).
-    pub fn measure(
-        &self,
-        rt: &Runtime,
-        man: &Manifest,
-        fmt: Format,
-        warmup: usize,
-        iters: usize,
-    ) -> Result<f64> {
-        self.compile(rt, man, fmt)?.measure(warmup, iters)
     }
 }
 
@@ -581,34 +553,37 @@ enum InputSrc {
     Boundary(usize),
 }
 
-struct CompiledRes<'p> {
+struct CompiledRes {
     slot: usize,
-    /// resolved projection: (exec, weight, bias)
-    proj: Option<(Arc<Exec>, &'p Tensor, Tensor)>,
+    /// resolved projection: (exec, bias); the projection weight is read
+    /// from the owning plan's step at dispatch
+    proj: Option<(Arc<Exec>, Tensor)>,
 }
 
-enum CompiledPost<'p> {
-    Attention(Arc<Exec>, &'p Tensor, &'p Tensor),
+enum CompiledPost {
+    Attention(Arc<Exec>),
     Upsample(Arc<Exec>),
 }
 
-struct CompiledStep<'p> {
+/// One lowered step.  Weight-scale operand tensors (merged conv weight,
+/// time-bias MLP, attention projections) are NOT duplicated here — the
+/// dispatch loop reads them from the plan step at the same index, which
+/// the `CompiledPlan`'s `Arc<Plan>` keeps alive.
+struct CompiledStep {
     src: InputSrc,
     concat_slot: Option<usize>,
-    time_bias: Option<(&'p Tensor, &'p [f32])>,
     conv: Arc<Exec>,
-    weight: &'p Tensor,
     /// bias materialized once at lowering (was rebuilt per dispatch)
     bias: Tensor,
     /// Fused format: the conv executable consumes the residual directly.
     fuse_res: bool,
     gn: Option<(Arc<Exec>, Tensor, Tensor)>,
-    res: Option<CompiledRes<'p>>,
+    res: Option<CompiledRes>,
     /// Eager residual add; `None` with `res` set means host-side add.
     add: Option<Arc<Exec>>,
     act: Option<Arc<Exec>>,
     stash_to: Option<usize>,
-    post: Vec<CompiledPost<'p>>,
+    post: Vec<CompiledPost>,
     /// store the step output into this boundary slot (a later step reads it)
     store_slot: Option<usize>,
     /// boundary slots whose last reader is this step — freed afterwards
@@ -616,15 +591,20 @@ struct CompiledStep<'p> {
 }
 
 /// A `Plan` lowered against a runtime + manifest: straight-line dispatch
-/// over pre-resolved executables and pre-materialized operands.  Borrows
-/// the plan's weight tensors (no copies); create with [`Plan::compile`].
-pub struct CompiledPlan<'p> {
+/// over pre-resolved executables and pre-materialized operands.
+///
+/// Owns its plan (`Arc<Plan>`), so it is `'static` and `Send + Sync` —
+/// a deployed network can be shared across worker threads (see
+/// [`crate::serve::Session`]).  Create with [`CompiledPlan::lower`] or
+/// [`crate::serve::Engine::lower`].
+pub struct CompiledPlan {
+    plan: Arc<Plan>,
     pub fmt: Format,
     task: Task,
     batch: usize,
-    steps: Vec<CompiledStep<'p>>,
-    head: Option<(Arc<Exec>, &'p Tensor, Tensor)>,
-    temb: Option<(&'p Tensor, &'p [f32], usize)>,
+    steps: Vec<CompiledStep>,
+    /// classifier head: (exec, bias); weight read from the plan
+    head: Option<(Arc<Exec>, Tensor)>,
     input_dims: Option<[usize; 4]>,
     /// slot for the network input, when some step's residual reads it
     input_slot: Option<usize>,
@@ -682,9 +662,27 @@ impl<'a> Val<'a> {
     }
 }
 
-impl<'p> CompiledPlan<'p> {
+impl CompiledPlan {
     pub fn depth(&self) -> usize {
         self.steps.len()
+    }
+
+    /// The plan this compiled form was lowered from.
+    pub fn plan(&self) -> &Arc<Plan> {
+        &self.plan
+    }
+
+    /// Expected input tensor dims `[batch, h, w, c]` (None: empty plan).
+    pub fn input_dims(&self) -> Option<[usize; 4]> {
+        self.input_dims
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn task(&self) -> Task {
+        self.task
     }
 
     /// Forward through the lowered network.
@@ -713,7 +711,7 @@ impl<'p> CompiledPlan<'p> {
                 d
             );
         }
-        let temb = match (t, &self.temb) {
+        let temb = match (t, &self.plan.temb) {
             (Some(tt), Some((w1, b1, dim))) => Some(temb_embed(w1, b1, *dim, tt)),
             _ => None,
         };
@@ -725,7 +723,10 @@ impl<'p> CompiledPlan<'p> {
         }
         let b = self.batch;
 
-        for step in &self.steps {
+        // compiled steps are 1:1 with plan steps (lowering never skips);
+        // the plan step carries the weight-scale operand tensors
+        debug_assert_eq!(self.steps.len(), self.plan.steps.len());
+        for (step, pstep) in self.steps.iter().zip(&self.plan.steps) {
             let mut input: Val<'_> = match step.src {
                 InputSrc::Cur => cur.clone(),
                 InputSrc::Boundary(s) => {
@@ -738,7 +739,7 @@ impl<'p> CompiledPlan<'p> {
                 input = Val::T(Arc::new(concat_channels(input.as_ref(), other.as_ref())));
             }
             // time-bias injection (host; 32-dim MLP output)
-            if let Some((tw, tb)) = &step.time_bias {
+            if let Some((tw, tb)) = &pstep.time_bias {
                 let temb = temb.as_ref().context("t required")?;
                 let dim = tw.dims[0];
                 let cin = tw.dims[1];
@@ -761,33 +762,36 @@ impl<'p> CompiledPlan<'p> {
                     }
                 }
             }
-            // resolve the residual input (shape = conv output shape)
+            // resolve the residual input (shape = conv output shape);
+            // the projection weight lives in the plan step
             let res_t: Option<Val<'_>> = match &step.res {
                 Some(r) => {
                     let base = slots[r.slot]
                         .clone()
                         .context("res boundary not materialized")?;
-                    Some(match &r.proj {
-                        Some((exec, pw, pb)) => Val::T(Arc::new(run_one(
+                    let pproj = pstep.res.as_ref().and_then(|(_, p)| p.as_ref());
+                    Some(match (&r.proj, pproj) {
+                        (Some((exec, pb)), Some(p)) => Val::T(Arc::new(run_one(
                             exec,
-                            &[base.as_ref(), pw, pb],
+                            &[base.as_ref(), &p.w, pb],
                             &mut timing,
                         )?)),
-                        None => base,
+                        _ => base,
                     })
                 }
                 None => None,
             };
 
+            let weight = &pstep.merged.weight;
             let mut y = match (&res_t, step.fuse_res) {
                 (Some(r), true) => run_one(
                     &step.conv,
-                    &[input.as_ref(), step.weight, &step.bias, r.as_ref()],
+                    &[input.as_ref(), weight, &step.bias, r.as_ref()],
                     &mut timing,
                 )?,
                 _ => run_one(
                     &step.conv,
-                    &[input.as_ref(), step.weight, &step.bias],
+                    &[input.as_ref(), weight, &step.bias],
                     &mut timing,
                 )?,
             };
@@ -816,14 +820,15 @@ impl<'p> CompiledPlan<'p> {
             if let Some(si) = step.stash_to {
                 stash[si] = Some(cur.clone());
             }
-            for p in &step.post {
-                cur = Val::T(Arc::new(match p {
-                    CompiledPost::Attention(exec, wqkv, wout) => {
+            for (p, pp) in step.post.iter().zip(&pstep.post) {
+                cur = Val::T(Arc::new(match (p, pp) {
+                    (CompiledPost::Attention(exec), Post::Attention { wqkv, wout }) => {
                         run_one(exec, &[cur.as_ref(), wqkv, wout], &mut timing)?
                     }
-                    CompiledPost::Upsample(exec) => {
+                    (CompiledPost::Upsample(exec), _) => {
                         run_one(exec, &[cur.as_ref()], &mut timing)?
                     }
+                    _ => unreachable!("compiled post order diverged from plan"),
                 }));
             }
             if let Some(slot) = step.store_slot {
@@ -834,8 +839,13 @@ impl<'p> CompiledPlan<'p> {
             }
         }
 
-        // classifier head
-        if let Some((exec, hw, hb)) = &self.head {
+        // classifier head (weight from the plan, bias materialized)
+        if let Some((exec, hb)) = &self.head {
+            let (hw, _) = self
+                .plan
+                .head
+                .as_ref()
+                .context("compiled head without plan head")?;
             cur = Val::T(Arc::new(run_one(
                 exec,
                 &[cur.as_ref(), hw, hb],
@@ -889,6 +899,15 @@ pub fn concat_channels(a: &Tensor, b: &Tensor) -> Tensor {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn compiled_plan_is_send_sync_and_static() {
+        // the load-bearing property of the owning redesign: a deployed
+        // network can cross thread boundaries (serve::Session workers)
+        fn check<T: Send + Sync + 'static>() {}
+        check::<CompiledPlan>();
+        check::<Plan>();
+    }
 
     #[test]
     fn concat_layout() {

@@ -150,7 +150,7 @@ pub fn fig4(ctx: &Ctx) -> Result<()> {
     let lm = train::train(&pipe.model, &pipe.gen, &mut params, &gates,
                           ctx.cfg.finetune_steps, ctx.cfg.finetune_lr, every)?;
     // KD-from-scratch curve on the student (same step budget)
-    let student = crate::model::Model::load(ctx.rt.clone(), &ctx.man, "mnv2ish-0.75")?;
+    let student = ctx.engine().load_model("mnv2ish-0.75")?;
     let sgen = Gen::for_model(&student, ctx.cfg.seed ^ 0xda7a);
     let sgates = student.spec.pristine_gates();
     let mut sparams = student.init.clone();
@@ -234,7 +234,7 @@ pub fn fdd_of_gates(
         xt = pipe.model.sample_step(params, gates, &xt, &tt, &ab_t, &ab_p)?;
     }
     // embed generated + real through the resnetish embedder
-    let emb_model = crate::model::Model::load(ctx.rt.clone(), &ctx.man, "resnetish")?;
+    let emb_model = ctx.engine().load_model("resnetish")?;
     let emb_pre = ctx.repo.join("cache").join(format!(
         "resnetish.pretrained.s{}.bin", ctx.cfg.pretrain_steps));
     let emb_params = if emb_pre.exists() {

@@ -12,6 +12,7 @@ use anyhow::Result;
 use crate::model::Manifest;
 use crate::pipeline::{Pipeline, PipelineCfg};
 use crate::runtime::Runtime;
+use crate::serve::Engine;
 use crate::tables::LatencyMode;
 
 /// Shared experiment context: runtime, manifest, output paths.
@@ -27,7 +28,9 @@ impl Ctx {
         let rt = Arc::new(Runtime::new(artifacts)?);
         let man = Arc::new(Manifest::load(artifacts)?);
         // CI / quick mode can force the analytical latency model.
-        // Explicit LM_PRETRAIN / LM_FINETUNE override the fast caps.
+        // Explicit LM_PRETRAIN / LM_FINETUNE override the fast caps, and
+        // LM_MEASURED (the `--measured` flag) pins measured latency even
+        // under LM_FAST.
         if std::env::var("LM_FAST").is_ok() {
             cfg.build.mode = LatencyMode::Analytical;
             cfg.pretrain_steps = cfg.pretrain_steps.min(60);
@@ -35,6 +38,9 @@ impl Ctx {
             cfg.build.proxy_steps = cfg.build.proxy_steps.min(2);
             cfg.build.iters = cfg.build.iters.min(5);
             cfg.lat_iters = cfg.lat_iters.min(5);
+        }
+        if std::env::var("LM_MEASURED").is_ok() {
+            cfg.build.mode = LatencyMode::Measured;
         }
         if let Ok(v) = std::env::var("LM_PRETRAIN") {
             if let Ok(n) = v.parse() {
@@ -47,6 +53,11 @@ impl Ctx {
             }
         }
         Ok(Ctx { rt, man, repo, cfg })
+    }
+
+    /// Owning deployment handle over this context's runtime + manifest.
+    pub fn engine(&self) -> Engine {
+        Engine::new(self.rt.clone(), self.man.clone())
     }
 
     pub fn experiments_md(&self) -> PathBuf {
@@ -63,12 +74,6 @@ impl Ctx {
     }
 
     pub fn pipeline(&self, model: &str) -> Result<Pipeline> {
-        Pipeline::new(
-            self.rt.clone(),
-            self.man.clone(),
-            model,
-            self.cfg.clone(),
-            self.repo.clone(),
-        )
+        Pipeline::new(self.engine(), model, self.cfg.clone(), self.repo.clone())
     }
 }

@@ -342,7 +342,7 @@ pub fn table9(ctx: &Ctx) -> Result<()> {
 /// Table 10 — knowledge distillation into a smaller net vs LayerMerge.
 pub fn table10(ctx: &Ctx) -> Result<()> {
     let teacher_pipe = ctx.pipeline("mnv2ish-1.0")?;
-    let student = crate::model::Model::load(ctx.rt.clone(), &ctx.man, "mnv2ish-0.75")?;
+    let student = ctx.engine().load_model("mnv2ish-0.75")?;
     let rel = ctx
         .man
         .json
@@ -381,9 +381,9 @@ pub fn table10(ctx: &Ctx) -> Result<()> {
     let sgates = student.spec.pristine_gates();
     let (_, kd_acc) = train::evaluate(&student, &gen, &sparams, &sgates,
                                       ctx.cfg.eval_batches)?;
-    let splan = crate::exec::Plan::original(&student.spec, &sparams)?;
-    let slat = splan.measure(&ctx.rt, &ctx.man, crate::exec::Format::Eager,
-                             ctx.cfg.lat_warmup, ctx.cfg.lat_iters)?;
+    let splan = std::sync::Arc::new(crate::exec::Plan::original(&student.spec, &sparams)?);
+    let slat = ctx.engine().measure(&splan, crate::exec::Format::Eager,
+                                    ctx.cfg.lat_warmup, ctx.cfg.lat_iters)?;
 
     let mut pipe = teacher_pipe;
     let mut t = report::compression_table(

@@ -8,7 +8,9 @@
 //! fine-tuning, merging, deployment and every experiment in the paper.
 //!
 //! Start at [`pipeline`] for the end-to-end flow, [`solver`] for the
-//! paper's algorithms, and DESIGN.md for the system inventory.
+//! paper's algorithms, [`serve`] for the owning Engine/Session deployment
+//! API (micro-batched worker-pool serving), and DESIGN.md for the system
+//! inventory.
 
 pub mod baselines;
 pub mod bench;
@@ -21,6 +23,7 @@ pub mod model;
 pub mod pipeline;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod solver;
 pub mod tables;
 pub mod train;
@@ -32,6 +35,7 @@ pub mod prelude {
     pub use crate::model::{Batch, Manifest, Model};
     pub use crate::pipeline::{Pipeline, PipelineCfg};
     pub use crate::runtime::Runtime;
+    pub use crate::serve::{Engine, ServeCfg, Session, Ticket};
     pub use crate::solver::Solution;
     pub use crate::tables::{BuildCfg, LatencyMode, Tables};
     pub use crate::util::tensor::Tensor;

@@ -5,16 +5,23 @@
 //!   tables   --model M                 build lookup tables
 //!   table1..table11, fig1..fig5, all   regenerate paper tables/figures
 //!   verify   --model M                 merged-vs-pruned numerics report
+//!   profile  --model M                 per-format latency breakdown
+//!   serve    --model M                 micro-batched serving load test
 //!
 //! Global flags: --artifacts DIR, --fast (analytical latency + short
-//! schedules), --workers N, --pretrain N, --finetune N, --seed N.
+//! schedules), --measured (pin measured latency, overrides --fast),
+//! --force (ignore pretrain/table caches), --workers N, --pretrain N,
+//! --finetune N, --seed N, --lat-warmup N, --lat-iters N,
+//! --eval-batches N.
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use layermerge::experiments::{figures, tables as exp_tables, Ctx};
 use layermerge::pipeline::{Method, PipelineCfg};
+use layermerge::serve::{self, ServeCfg};
 use layermerge::tables::LatencyMode;
 
 /// Minimal flag parser (clap substitute; DESIGN.md §2).
@@ -64,14 +71,25 @@ fn usage() -> &'static str {
        compress   --model M --budget F [--method layermerge|depth|layeronly]\n\
        tables     --model M              build/load lookup tables\n\
        verify     --model M              merged-vs-pruned numerics check\n\
+       profile    --model M              per-format latency breakdown\n\
+       serve      --model M              micro-batched serving load test\n\
        table1..table11                   regenerate a paper table\n\
        fig1..fig5                        regenerate a paper figure\n\
        all                               every table and figure\n\
      flags:\n\
        --artifacts DIR   (default ./artifacts)\n\
        --fast            analytical latency + short schedules (CI)\n\
+       --measured        pin measured latency (overrides --fast)\n\
+       --force           ignore cached pretrained weights and tables\n\
        --workers N       importance-table worker threads\n\
-       --pretrain N --finetune N --seed N --budget F --p N\n"
+       --lat-warmup N --lat-iters N      deployed-plan latency protocol\n\
+       --eval-batches N                  eval-stream batches per metric\n\
+       --pretrain N --finetune N --seed N --budget F --p N\n\
+     serve flags:\n\
+       --clients N       concurrent closed-loop clients (default 4)\n\
+       --requests N      requests per client (default 32)\n\
+       --serve-workers N worker threads draining the queue\n\
+       --queue-cap N     bounded request queue (backpressure)\n"
 }
 
 fn build_cfg(args: &Args) -> PipelineCfg {
@@ -81,9 +99,21 @@ fn build_cfg(args: &Args) -> PipelineCfg {
     cfg.finetune_steps = args.usize_or("finetune", cfg.finetune_steps);
     cfg.p_disc = args.usize_or("p", cfg.p_disc);
     cfg.build.workers = args.usize_or("workers", cfg.build.workers);
+    cfg.lat_warmup = args.usize_or("lat-warmup", cfg.lat_warmup);
+    cfg.lat_iters = args.usize_or("lat-iters", cfg.lat_iters).max(1);
+    cfg.eval_batches = args.usize_or("eval-batches", cfg.eval_batches).max(1);
     if args.get("fast").is_some() {
         std::env::set_var("LM_FAST", "1");
         cfg.build.mode = LatencyMode::Analytical;
+    }
+    if args.get("measured").is_some() {
+        // wins over --fast: Ctx::new re-pins Measured via LM_MEASURED
+        std::env::set_var("LM_MEASURED", "1");
+        cfg.build.mode = LatencyMode::Measured;
+    }
+    if args.get("force").is_some() {
+        cfg.force = true;
+        cfg.build.force = true;
     }
     cfg
 }
@@ -139,6 +169,10 @@ fn main() -> Result<()> {
             let model = args.get("model").context("--model required")?;
             profile(&ctx, model, args.f64_or("budget", 0.65))?;
         }
+        "serve" => {
+            let model = args.get("model").context("--model required")?;
+            serve_cmd(&ctx, model, &args)?;
+        }
         "table1" => exp_tables::table1(&ctx)?,
         "table2" => exp_tables::table2(&ctx)?,
         "table3" => exp_tables::table3(&ctx)?,
@@ -173,10 +207,11 @@ fn profile(ctx: &Ctx, model: &str, budget: f64) -> Result<()> {
     use layermerge::exec::{Format, Plan};
     use layermerge::util::tensor::Tensor;
     let mut pipe = ctx.pipeline(model)?;
+    let engine = ctx.engine();
     let sol = pipe.solve(Method::LayerMerge, budget)?;
-    let orig = Plan::original(&pipe.model.spec, &pipe.pretrained)?;
-    let comp = Plan::from_solution(&pipe.model.spec, &pipe.pretrained, &sol.a,
-                                   &sol.c, &sol.spans)?;
+    let orig = Arc::new(Plan::original(&pipe.model.spec, &pipe.pretrained)?);
+    let comp = Arc::new(Plan::from_solution(&pipe.model.spec, &pipe.pretrained,
+                                            &sol.a, &sol.c, &sol.spans)?);
     let sp = &pipe.model.spec;
     let mut rng = layermerge::util::rng::Rng::new(9);
     let n = sp.batch * sp.h * sp.w * sp.c;
@@ -190,7 +225,7 @@ fn profile(ctx: &Ctx, model: &str, budget: f64) -> Result<()> {
         for fmt in [Format::Eager, Format::Fused] {
             // lower once so the timed window is steady-state dispatch,
             // not per-call plan re-lowering
-            let cp = plan.compile(&pipe.model.rt, &ctx.man, fmt)?;
+            let cp = engine.lower(plan, fmt)?;
             // warm
             for _ in 0..3 {
                 cp.forward(&x, t.as_ref())?;
@@ -222,11 +257,12 @@ fn profile(ctx: &Ctx, model: &str, budget: f64) -> Result<()> {
 fn verify(ctx: &Ctx, model: &str, budget: f64) -> Result<()> {
     use layermerge::exec::{Format, Plan};
     let mut pipe = ctx.pipeline(model)?;
+    let engine = ctx.engine();
     let sol = pipe.solve(Method::LayerMerge, budget)?;
     let a_set: std::collections::BTreeSet<usize> = sol.a.iter().copied().collect();
     let gates = pipe.model.spec.solution_gates(&a_set, &sol.c, &sol.spans);
-    let plan = Plan::from_solution(&pipe.model.spec, &pipe.pretrained, &sol.a,
-                                   &sol.c, &sol.spans)?;
+    let plan = Arc::new(Plan::from_solution(&pipe.model.spec, &pipe.pretrained,
+                                            &sol.a, &sol.c, &sol.spans)?);
     let batch = pipe.gen.batch(layermerge::train::STREAM_EVAL, 0);
     let (x, t) = match &batch {
         layermerge::model::Batch::Classify { x, .. } => (x.clone(), None),
@@ -235,13 +271,67 @@ fn verify(ctx: &Ctx, model: &str, budget: f64) -> Result<()> {
         }
     };
     let gated = pipe.model.forward(&pipe.pretrained, &gates, &batch)?;
-    let merged = plan.forward(&pipe.model.rt, &ctx.man, &x, t.as_ref(), Format::Eager)?;
-    let fused = plan.forward(&pipe.model.rt, &ctx.man, &x, t.as_ref(), Format::Fused)?;
+    let merged = engine.infer(&plan, &x, t.as_ref(), Format::Eager)?;
+    let fused = engine.infer(&plan, &x, t.as_ref(), Format::Fused)?;
     println!(
         "verify {model} @{budget}: spans {:?}\n  merged-vs-gated  rel_l2 {:.4} max {:.4}\n  fused-vs-eager   rel_l2 {:.6} max {:.6}",
         sol.spans,
         merged.rel_l2(&gated), merged.max_abs_diff(&gated),
         fused.rel_l2(&merged), fused.max_abs_diff(&merged),
     );
+    Ok(())
+}
+
+/// Deploy the original and a compressed network as micro-batched serving
+/// sessions and drive concurrent closed-loop clients against both,
+/// reporting p50/p95/throughput before vs after compression.
+fn serve_cmd(ctx: &Ctx, model: &str, args: &Args) -> Result<()> {
+    use layermerge::exec::{Format, Plan};
+    let budget = args.f64_or("budget", 0.65);
+    let clients = args.usize_or("clients", 4).max(1);
+    let requests = args.usize_or("requests", 32).max(1);
+    let defaults = ServeCfg::default();
+    let scfg = ServeCfg {
+        workers: args.usize_or("serve-workers", defaults.workers).max(1),
+        queue_cap: args.usize_or("queue-cap", defaults.queue_cap).max(1),
+    };
+    let engine = ctx.engine();
+    let mut pipe = ctx.pipeline(model)?;
+    let pool = layermerge::serve::classify_request_pool(&pipe.gen, 4);
+    anyhow::ensure!(
+        !pool.is_empty(),
+        "serve drives classifier models; {model} produced no classify rows"
+    );
+    println!(
+        "serving {model}: {clients} clients x {requests} single-row requests \
+         (spec batch {}, {} workers, queue {})",
+        pipe.model.spec.batch, scfg.workers, scfg.queue_cap
+    );
+    let make = |c: usize, i: usize| {
+        let (x, _) = &pool[(c * requests + i) % pool.len()];
+        (x.clone(), None)
+    };
+
+    let orig_plan = Arc::new(Plan::original(&pipe.model.spec, &pipe.pretrained)?);
+    let orig_sess = engine.deploy_cfg(orig_plan, Format::Fused, scfg)?;
+    let r0 = serve::drive(&orig_sess, clients, requests, &make)?;
+    println!("{}", r0.row(&format!("original {model}")));
+    orig_sess.shutdown();
+
+    let c = pipe.run(Method::LayerMerge, budget)?;
+    let plan = Arc::new(Plan::from_solution(
+        &pipe.model.spec, &c.finetuned, &c.solution.a, &c.solution.c,
+        &c.solution.spans,
+    )?);
+    let sess = engine.deploy_cfg(plan, Format::Fused, scfg)?;
+    let r1 = serve::drive(&sess, clients, requests, &make)?;
+    println!("{}", r1.row(&format!("LayerMerge-{:.0}%", budget * 100.0)));
+    println!(
+        "  -> p50 {:.2}x, p95 {:.2}x, throughput {:.2}x",
+        r0.p50_ms / r1.p50_ms,
+        r0.p95_ms / r1.p95_ms,
+        r1.rows_per_s / r0.rows_per_s,
+    );
+    sess.shutdown();
     Ok(())
 }

@@ -10,7 +10,8 @@ use anyhow::{Context, Result};
 
 use crate::exec::{Format, Plan};
 use crate::ir::{Gates, Task};
-use crate::model::{Manifest, Model};
+use crate::model::Model;
+use crate::serve::Engine;
 use crate::solver::{self, depth, dp, layeronly};
 use crate::tables::{self, BuildCfg, Tables};
 use crate::train::{self, Gen};
@@ -51,6 +52,8 @@ pub struct PipelineCfg {
     /// Latency measurement protocol for deployed plans.
     pub lat_warmup: usize,
     pub lat_iters: usize,
+    /// Ignore cached pretrained weights / tables and rebuild (`--force`).
+    pub force: bool,
 }
 
 impl Default for PipelineCfg {
@@ -66,6 +69,7 @@ impl Default for PipelineCfg {
             eval_batches: 8,
             lat_warmup: 5,
             lat_iters: 15,
+            force: false,
         }
     }
 }
@@ -93,8 +97,10 @@ pub struct Compressed {
 }
 
 pub struct Pipeline {
+    /// Owning deployment handle (runtime + manifest) — every lower /
+    /// deploy / measure in the pipeline goes through it.
+    pub engine: Engine,
     pub model: Model,
-    pub man: Arc<Manifest>,
     pub gen: Gen,
     pub cfg: PipelineCfg,
     pub pretrained: Vec<f32>,
@@ -110,13 +116,12 @@ impl Pipeline {
     /// Load the model, pretrain (or reuse the cached pretrained weights),
     /// and measure the original network.
     pub fn new(
-        rt: Arc<crate::runtime::Runtime>,
-        man: Arc<Manifest>,
+        engine: Engine,
         name: &str,
         cfg: PipelineCfg,
         cache_root: PathBuf,
     ) -> Result<Pipeline> {
-        let model = Model::load(rt, &man, name)?;
+        let model = engine.load_model(name)?;
         let gen = Gen::for_model(&model, cfg.seed ^ 0xda7a);
 
         let pre_path = cache_root.join("cache").join(format!(
@@ -124,7 +129,7 @@ impl Pipeline {
             cfg.pretrain_steps
         ));
         let pristine = model.spec.pristine_gates();
-        let pretrained = if pre_path.exists() {
+        let pretrained = if pre_path.exists() && !cfg.force {
             let p = Tensor::read_f32_file(&pre_path)?;
             anyhow::ensure!(p.len() == model.spec.param_count);
             eprintln!("[pipeline] {name}: reusing cached pretrained weights");
@@ -145,19 +150,17 @@ impl Pipeline {
         };
         let (_, orig_metric) =
             train::evaluate(&model, &gen, &pretrained, &pristine, cfg.eval_batches)?;
-        let orig_plan = Plan::original(&model.spec, &pretrained)?;
-        let orig_lat_eager = orig_plan.measure(
-            &model.rt, &man, Format::Eager, cfg.lat_warmup, cfg.lat_iters,
-        )?;
-        let orig_lat_fused = orig_plan.measure(
-            &model.rt, &man, Format::Fused, cfg.lat_warmup, cfg.lat_iters,
-        )?;
+        let orig_plan = Arc::new(Plan::original(&model.spec, &pretrained)?);
+        let orig_lat_eager =
+            engine.measure(&orig_plan, Format::Eager, cfg.lat_warmup, cfg.lat_iters)?;
+        let orig_lat_fused =
+            engine.measure(&orig_plan, Format::Fused, cfg.lat_warmup, cfg.lat_iters)?;
         eprintln!(
             "[pipeline] {name}: orig metric {orig_metric:.4}, lat eager {orig_lat_eager:.2}ms fused {orig_lat_fused:.2}ms"
         );
         Ok(Pipeline {
+            engine,
             model,
-            man,
             gen,
             cfg,
             pretrained,
@@ -174,7 +177,7 @@ impl Pipeline {
         if self.tables.is_none() {
             let t = tables::build(
                 &self.model,
-                &self.man,
+                self.engine.manifest(),
                 &self.gen,
                 &self.pretrained,
                 &self.cfg.build,
@@ -232,17 +235,8 @@ impl Pipeline {
                     p: p_disc,
                 })
                 .context("LayerOnly: no solution")?;
-                let a: Vec<usize> = (1..l_max)
-                    .filter(|l| {
-                        !spec.conv(*l).act_gated || sol.kept.contains(l)
-                    })
-                    .collect();
-                let spans: Vec<(usize, usize, usize)> = (1..=l_max)
-                    .map(|j| {
-                        let k = if sol.kept.contains(&j) { spec.conv(j).k } else { 1 };
-                        (j - 1, j, k)
-                    })
-                    .collect();
+                let a = layeronly::deploy_a(&spec, &sol.kept);
+                let spans = layeronly::deploy_spans(&spec, &sol.kept);
                 Ok(solver::Solution {
                     a,
                     c: sol.kept,
@@ -299,26 +293,16 @@ impl Pipeline {
             &self.model, &self.gen, &params, &gates, self.cfg.eval_batches,
         )?;
 
-        let plan = Plan::from_solution(spec, &params, &sol.a, &sol.c, &sol.spans)?;
+        let plan =
+            Arc::new(Plan::from_solution(spec, &params, &sol.a, &sol.c, &sol.spans)?);
         let merged_metric = self.eval_plan(&plan)?;
         // interleave compressed and original measurements (A/B fairness)
-        let orig_plan = Plan::original(spec, &self.pretrained)?;
-        let lat_eager = plan.measure(
-            &self.model.rt, &self.man, Format::Eager,
-            self.cfg.lat_warmup, self.cfg.lat_iters,
-        )?;
-        let base_eager = orig_plan.measure(
-            &self.model.rt, &self.man, Format::Eager,
-            self.cfg.lat_warmup, self.cfg.lat_iters,
-        )?;
-        let lat_fused = plan.measure(
-            &self.model.rt, &self.man, Format::Fused,
-            self.cfg.lat_warmup, self.cfg.lat_iters,
-        )?;
-        let base_fused = orig_plan.measure(
-            &self.model.rt, &self.man, Format::Fused,
-            self.cfg.lat_warmup, self.cfg.lat_iters,
-        )?;
+        let orig_plan = Arc::new(Plan::original(spec, &self.pretrained)?);
+        let (w, it) = (self.cfg.lat_warmup, self.cfg.lat_iters);
+        let lat_eager = self.engine.measure(&plan, Format::Eager, w, it)?;
+        let base_eager = self.engine.measure(&orig_plan, Format::Eager, w, it)?;
+        let lat_fused = self.engine.measure(&plan, Format::Fused, w, it)?;
+        let base_fused = self.engine.measure(&orig_plan, Format::Fused, w, it)?;
         Ok(Compressed {
             method: method.name().to_string(),
             budget_frac,
@@ -337,10 +321,10 @@ impl Pipeline {
 
     /// Task metric of a deployed plan: accuracy (classify) or negative
     /// diffusion loss (diffusion), on the eval stream.
-    pub fn eval_plan(&self, plan: &Plan) -> Result<f32> {
+    pub fn eval_plan(&self, plan: &Arc<Plan>) -> Result<f32> {
         let n = self.cfg.eval_batches;
         // lower once; the per-batch loop is pure dispatch
-        let cp = plan.compile(&self.model.rt, &self.man, Format::Eager)?;
+        let cp = self.engine.lower(plan, Format::Eager)?;
         let mut acc = 0.0f32;
         for b in 0..n {
             let batch = self.gen.batch(train::STREAM_EVAL, b as u64);
@@ -385,14 +369,8 @@ impl Pipeline {
         method: Method,
         budget_frac: f64,
     ) -> Result<(solver::Solution, f64)> {
-        let mut b = budget_frac;
-        for _ in 0..12 {
-            match self.solve(method, b) {
-                Ok(sol) => return Ok((sol, b)),
-                Err(_) => b *= 1.1,
-            }
-        }
-        anyhow::bail!("{}: infeasible even at {:.2}x budget", method.name(), b)
+        relax_budget(budget_frac, 12, |b| self.solve(method, b))
+            .with_context(|| format!("{}: budget relaxation failed", method.name()))
     }
 
     /// Convenience: solve + fine-tune + deploy in one call.
@@ -406,6 +384,28 @@ impl Pipeline {
         );
         self.finetune_and_deploy(method, budget_frac, &sol, None, false)
     }
+}
+
+/// The budget relaxation ladder behind [`Pipeline::solve_relaxed`]: try
+/// `solve` at `budget_frac`, relaxing by 10% steps up to `tries` times,
+/// and report the budget fraction that finally succeeded.  Errors when
+/// every rung is infeasible.
+pub fn relax_budget<T>(
+    budget_frac: f64,
+    tries: usize,
+    mut solve: impl FnMut(f64) -> Result<T>,
+) -> Result<(T, f64)> {
+    let mut b = budget_frac;
+    for _ in 0..tries {
+        match solve(b) {
+            Ok(sol) => return Ok((sol, b)),
+            Err(_) => b *= 1.1,
+        }
+    }
+    anyhow::bail!(
+        "infeasible even after {tries} relaxations (up to {:.2}x the original budget)",
+        b / budget_frac.max(f64::MIN_POSITIVE)
+    )
 }
 
 /// Host-side top-1 accuracy from logits + one-hot labels.
@@ -448,5 +448,41 @@ mod tests {
     fn csel_reexport_reachable() {
         // keep the module wiring honest
         let _ = crate::solver::csel::select;
+    }
+
+    #[test]
+    fn relax_budget_climbs_the_ladder() {
+        // infeasible below 0.8, feasible at or above: three 10% steps
+        let mut calls = 0usize;
+        let (sol, b) = relax_budget(0.65, 12, |b| {
+            calls += 1;
+            if b >= 0.8 {
+                Ok(b)
+            } else {
+                anyhow::bail!("infeasible at {b}")
+            }
+        })
+        .unwrap();
+        assert_eq!(calls, 4); // 0.65, 0.715, 0.7865, 0.86515
+        assert!((b - 0.65 * 1.1f64.powi(3)).abs() < 1e-12);
+        assert_eq!(sol, b);
+    }
+
+    #[test]
+    fn relax_budget_returns_first_feasible_unchanged() {
+        let (sol, b) = relax_budget(0.5, 12, |b| Ok::<f64, anyhow::Error>(b)).unwrap();
+        assert_eq!((sol, b), (0.5, 0.5));
+    }
+
+    #[test]
+    fn relax_budget_errors_when_always_infeasible() {
+        let mut calls = 0usize;
+        let err = relax_budget(1.0, 5, |_| -> Result<()> {
+            calls += 1;
+            anyhow::bail!("no")
+        })
+        .unwrap_err();
+        assert_eq!(calls, 5);
+        assert!(format!("{err}").contains("infeasible"), "{err}");
     }
 }

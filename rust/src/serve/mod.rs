@@ -1,0 +1,686 @@
+//! `layermerge::serve` — the owning deployment API and micro-batched
+//! worker-pool serving (the paper's "latency-critical application"
+//! workload: many small clients, one deployed compressed network).
+//!
+//! Two layers:
+//!
+//! * [`Engine`] owns the runtime + manifest (`Arc<Runtime>` +
+//!   `Arc<Manifest>`) and replaces the `(&Runtime, &Manifest)`
+//!   parameter-threading the execution API used to require at every call
+//!   site.  `Engine::lower` produces an owned [`CompiledPlan`] for hot
+//!   loops; `Engine::deploy` produces a [`Session`].
+//!
+//! * [`Session`] is a `'static`, `Send + Sync` handle over a deployed
+//!   network.  `Session::infer` is the synchronous one-shot path
+//!   (full-batch tensors, zero queueing).  `Session::submit` enqueues a
+//!   sub-batch request (1..=B rows) into a bounded queue and returns a
+//!   [`Ticket`]; a pool of [`crate::util::par::Pool`] worker threads
+//!   coalesces queued requests up to the spec batch size B, zero-pads the
+//!   tail, dispatches one forward, and splits the output rows back onto
+//!   the tickets.  The queue bound gives backpressure (`submit` blocks
+//!   when full); `close`/drop drains the queue and joins the workers.
+//!
+//! Padding rows are sound because every per-row computation in the
+//! deployed networks (convs, per-sample group norm / attention, the host
+//! glue ops) is independent of the other rows in the batch — so a
+//! micro-batched result is bit-identical to a one-shot forward over the
+//! same rows in the same batch positions (pinned by `tests/serve_queue.rs`).
+
+use std::collections::VecDeque;
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::exec::{CompiledPlan, Format, Plan};
+use crate::ir::Task;
+use crate::model::{Manifest, Model};
+use crate::runtime::Runtime;
+use crate::util::par;
+use crate::util::tensor::Tensor;
+
+// ---------------------------------------------------------------------------
+// Engine
+// ---------------------------------------------------------------------------
+
+/// Owning handle over one artifact set: the PJRT runtime and the manifest.
+/// Cheap to clone (two `Arc`s); every deployment-side API hangs off it.
+#[derive(Clone)]
+pub struct Engine {
+    rt: Arc<Runtime>,
+    man: Arc<Manifest>,
+}
+
+impl Engine {
+    pub fn new(rt: Arc<Runtime>, man: Arc<Manifest>) -> Engine {
+        Engine { rt, man }
+    }
+
+    /// Open an artifacts directory: PJRT client + manifest in one call.
+    pub fn open(artifacts: &Path) -> Result<Engine> {
+        Ok(Engine::new(
+            Arc::new(Runtime::new(artifacts)?),
+            Arc::new(Manifest::load(artifacts)?),
+        ))
+    }
+
+    pub fn runtime(&self) -> &Arc<Runtime> {
+        &self.rt
+    }
+
+    pub fn manifest(&self) -> &Arc<Manifest> {
+        &self.man
+    }
+
+    /// Load a model family by manifest name.
+    pub fn load_model(&self, name: &str) -> Result<Model> {
+        Model::load(self.rt.clone(), &self.man, name)
+    }
+
+    /// Lower a plan to an owned [`CompiledPlan`] (one-time cost; reuse it
+    /// across calls).  The old `plan.compile(rt, man, fmt)` entry point.
+    pub fn lower(&self, plan: &Arc<Plan>, fmt: Format) -> Result<CompiledPlan> {
+        CompiledPlan::lower(Arc::clone(plan), &self.rt, &self.man, fmt)
+    }
+
+    /// One-shot forward: lowers, then runs.  Hot loops should [`Engine::lower`]
+    /// once instead.
+    pub fn infer(
+        &self,
+        plan: &Arc<Plan>,
+        x: &Tensor,
+        t: Option<&Tensor>,
+        fmt: Format,
+    ) -> Result<Tensor> {
+        self.lower(plan, fmt)?.forward(x, t)
+    }
+
+    /// End-to-end latency with the App. C protocol (lowered once, so the
+    /// measured loop carries no artifact-resolution overhead).
+    pub fn measure(
+        &self,
+        plan: &Arc<Plan>,
+        fmt: Format,
+        warmup: usize,
+        iters: usize,
+    ) -> Result<f64> {
+        self.lower(plan, fmt)?.measure(warmup, iters)
+    }
+
+    /// Deploy a plan as a micro-batched serving [`Session`] with default
+    /// worker/queue sizing.
+    pub fn deploy(&self, plan: Arc<Plan>, fmt: Format) -> Result<Session> {
+        self.deploy_cfg(plan, fmt, ServeCfg::default())
+    }
+
+    pub fn deploy_cfg(&self, plan: Arc<Plan>, fmt: Format, cfg: ServeCfg) -> Result<Session> {
+        Session::new(Arc::new(self.lower(&plan, fmt)?), cfg)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Session
+// ---------------------------------------------------------------------------
+
+/// Worker-pool and queue sizing for a [`Session`].
+#[derive(Debug, Clone, Copy)]
+pub struct ServeCfg {
+    /// Worker threads draining the queue.  PJRT executes are thread-safe,
+    /// so several batches can be in flight at once.
+    pub workers: usize,
+    /// Bounded queue capacity in *requests*; `submit` blocks (backpressure)
+    /// when the queue is full.
+    pub queue_cap: usize,
+}
+
+impl Default for ServeCfg {
+    fn default() -> Self {
+        ServeCfg { workers: par::max_threads().min(4), queue_cap: 256 }
+    }
+}
+
+/// Cumulative serving counters (monotonic; snapshot with [`Session::stats`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServeStats {
+    /// Requests fully served (tickets resolved).
+    pub requests: usize,
+    /// Input rows served (excludes padding).
+    pub rows: usize,
+    /// Device batches dispatched.
+    pub batches: usize,
+    /// Zero rows padded onto batch tails.
+    pub padded_rows: usize,
+    /// High-water mark of the request queue.
+    pub max_queue: usize,
+}
+
+#[derive(Default)]
+struct StatsInner {
+    requests: AtomicUsize,
+    rows: AtomicUsize,
+    batches: AtomicUsize,
+    padded_rows: AtomicUsize,
+    max_queue: AtomicUsize,
+}
+
+#[derive(Default)]
+struct TicketInner {
+    slot: Mutex<Option<Result<Tensor>>>,
+    cv: Condvar,
+}
+
+/// A pending micro-batched request.  `wait` blocks until a worker has
+/// dispatched the batch containing this request and split its rows back.
+pub struct Ticket {
+    inner: Arc<TicketInner>,
+}
+
+impl Ticket {
+    pub fn wait(self) -> Result<Tensor> {
+        let mut g = self.inner.slot.lock().unwrap();
+        while g.is_none() {
+            g = self.inner.cv.wait(g).unwrap();
+        }
+        g.take().unwrap()
+    }
+
+    /// Non-blocking poll; returns the result if the batch has completed.
+    pub fn try_wait(self) -> std::result::Result<Result<Tensor>, Ticket> {
+        let done = self.inner.slot.lock().unwrap().take();
+        match done {
+            Some(r) => Ok(r),
+            None => Err(self),
+        }
+    }
+}
+
+fn fulfill(t: &TicketInner, r: Result<Tensor>) {
+    *t.slot.lock().unwrap() = Some(r);
+    t.cv.notify_all();
+}
+
+struct Request {
+    x: Tensor,
+    t: Option<Tensor>,
+    ticket: Arc<TicketInner>,
+}
+
+struct QState {
+    items: VecDeque<Request>,
+    closed: bool,
+}
+
+struct Shared {
+    state: Mutex<QState>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    stats: StatsInner,
+}
+
+/// The dispatchable side of a session: a lowered plan, or an arbitrary
+/// host function (tests / mock serving benches run the queue machinery
+/// without a PJRT runtime).
+#[derive(Clone)]
+enum Backend {
+    Plan(Arc<CompiledPlan>),
+    Host(Arc<dyn Fn(&Tensor, Option<&Tensor>) -> Result<Tensor> + Send + Sync>),
+}
+
+impl Backend {
+    fn run(&self, x: &Tensor, t: Option<&Tensor>) -> Result<Tensor> {
+        match self {
+            Backend::Plan(cp) => cp.forward(x, t),
+            Backend::Host(f) => f(x, t),
+        }
+    }
+}
+
+/// A deployed network: `'static`, `Send + Sync`, shareable across client
+/// threads.  Dropping (or [`Session::shutdown`]) closes the queue, serves
+/// every already-accepted request, and joins the workers.
+pub struct Session {
+    backend: Backend,
+    shared: Arc<Shared>,
+    pool: par::Pool,
+    batch: usize,
+    in_tail: Vec<usize>,
+    needs_t: bool,
+    queue_cap: usize,
+}
+
+impl Session {
+    /// Serve a lowered plan.  Fails on an empty plan (nothing to dispatch).
+    pub fn new(cp: Arc<CompiledPlan>, cfg: ServeCfg) -> Result<Session> {
+        let dims = cp
+            .input_dims()
+            .context("cannot serve an empty plan (no steps)")?;
+        let batch = cp.batch();
+        let needs_t = cp.task() == Task::Diffusion;
+        let backend = Backend::Plan(cp);
+        Ok(Session::start(backend, batch, dims[1..].to_vec(), needs_t, cfg))
+    }
+
+    /// Serve an arbitrary host function with the same queue machinery —
+    /// the function receives full `[batch, in_tail..]` tensors and must
+    /// return `[batch, ..]` outputs.  Used by the serve test-suite and the
+    /// host-only serving bench; also handy for mocking a deployment.
+    pub fn from_fn<F>(
+        batch: usize,
+        in_tail: &[usize],
+        needs_t: bool,
+        cfg: ServeCfg,
+        f: F,
+    ) -> Session
+    where
+        F: Fn(&Tensor, Option<&Tensor>) -> Result<Tensor> + Send + Sync + 'static,
+    {
+        assert!(batch >= 1, "batch must be positive");
+        Session::start(Backend::Host(Arc::new(f)), batch, in_tail.to_vec(), needs_t, cfg)
+    }
+
+    fn start(
+        backend: Backend,
+        batch: usize,
+        in_tail: Vec<usize>,
+        needs_t: bool,
+        cfg: ServeCfg,
+    ) -> Session {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(QState { items: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            stats: StatsInner::default(),
+        });
+        let (ws, wb) = (Arc::clone(&shared), backend.clone());
+        let pool = par::Pool::spawn(cfg.workers, "lm-serve", move |_| {
+            worker_loop(&ws, &wb, batch);
+        });
+        Session {
+            backend,
+            shared,
+            pool,
+            batch,
+            in_tail,
+            needs_t,
+            queue_cap: cfg.queue_cap.max(1),
+        }
+    }
+
+    /// Spec batch size B — the coalescing target and the `infer` batch dim.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn workers(&self) -> usize {
+        self.pool.len()
+    }
+
+    pub fn stats(&self) -> ServeStats {
+        let s = &self.shared.stats;
+        ServeStats {
+            requests: s.requests.load(Ordering::Relaxed),
+            rows: s.rows.load(Ordering::Relaxed),
+            batches: s.batches.load(Ordering::Relaxed),
+            padded_rows: s.padded_rows.load(Ordering::Relaxed),
+            max_queue: s.max_queue.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Synchronous one-shot inference: full `[B, ..]` input, no queue.
+    pub fn infer(&self, x: &Tensor, t: Option<&Tensor>) -> Result<Tensor> {
+        self.backend.run(x, t)
+    }
+
+    /// Enqueue a sub-batch request of `1..=B` rows (`[rows, in_tail..]`).
+    /// Blocks while the queue is at capacity (backpressure); errors once
+    /// the session is closed.
+    pub fn submit(&self, x: Tensor) -> Result<Ticket> {
+        self.submit_with(x, None)
+    }
+
+    /// [`Session::submit`] with a per-row timestep tensor `[rows]`
+    /// (required iff the deployed plan is a diffusion model).
+    pub fn submit_with(&self, x: Tensor, t: Option<Tensor>) -> Result<Ticket> {
+        anyhow::ensure!(
+            !x.dims.is_empty() && x.dims[0] >= 1,
+            "request must have a leading batch dim"
+        );
+        let rows = x.dims[0];
+        anyhow::ensure!(
+            rows <= self.batch,
+            "request rows {rows} exceed the deployed batch size {}",
+            self.batch
+        );
+        anyhow::ensure!(
+            x.dims[1..] == self.in_tail[..],
+            "request dims {:?} don't match the deployed input [b, {:?}]",
+            x.dims,
+            self.in_tail
+        );
+        match (&t, self.needs_t) {
+            (None, true) => anyhow::bail!("deployed plan requires a timestep tensor"),
+            (Some(_), false) => anyhow::bail!("deployed plan takes no timestep tensor"),
+            (Some(tt), true) => anyhow::ensure!(
+                tt.dims == vec![rows],
+                "timestep dims {:?} must be [{rows}]",
+                tt.dims
+            ),
+            (None, false) => {}
+        }
+        let ticket = Arc::new(TicketInner::default());
+        {
+            let mut g = self.shared.state.lock().unwrap();
+            loop {
+                anyhow::ensure!(!g.closed, "session is closed");
+                if g.items.len() < self.queue_cap {
+                    break;
+                }
+                g = self.shared.not_full.wait(g).unwrap();
+            }
+            g.items.push_back(Request { x, t, ticket: Arc::clone(&ticket) });
+            let depth = g.items.len();
+            let mq = &self.shared.stats.max_queue;
+            let mut cur = mq.load(Ordering::Relaxed);
+            while depth > cur {
+                match mq.compare_exchange_weak(cur, depth, Ordering::Relaxed, Ordering::Relaxed)
+                {
+                    Ok(_) => break,
+                    Err(seen) => cur = seen,
+                }
+            }
+        }
+        self.shared.not_empty.notify_one();
+        Ok(Ticket { inner: ticket })
+    }
+
+    /// Stop accepting new requests.  Already-queued requests are still
+    /// served; workers exit once the queue drains.
+    pub fn close(&self) {
+        self.shared.state.lock().unwrap().closed = true;
+        self.shared.not_empty.notify_all();
+        self.shared.not_full.notify_all();
+    }
+
+    /// Clean shutdown: close, drain, join the workers.
+    pub fn shutdown(mut self) {
+        self.close();
+        self.pool.join();
+    }
+}
+
+impl Drop for Session {
+    fn drop(&mut self) {
+        self.close();
+        self.pool.join();
+    }
+}
+
+fn worker_loop(shared: &Shared, backend: &Backend, b: usize) {
+    loop {
+        let taken = {
+            let mut g = shared.state.lock().unwrap();
+            loop {
+                if !g.items.is_empty() {
+                    break;
+                }
+                if g.closed {
+                    return;
+                }
+                g = shared.not_empty.wait(g).unwrap();
+            }
+            // coalesce whole requests (submit bounds each to <= b rows)
+            let mut taken: Vec<Request> = Vec::new();
+            let mut rows = 0usize;
+            while let Some(front) = g.items.front() {
+                let r = front.x.dims[0];
+                if rows + r > b {
+                    break;
+                }
+                rows += r;
+                taken.push(g.items.pop_front().unwrap());
+                if rows == b {
+                    break;
+                }
+            }
+            taken
+        };
+        shared.not_full.notify_all();
+        if !taken.is_empty() {
+            run_batch(shared, backend, b, taken);
+        }
+    }
+}
+
+fn run_batch(shared: &Shared, backend: &Backend, b: usize, reqs: Vec<Request>) {
+    let total_rows: usize = reqs.iter().map(|r| r.x.dims[0]).sum();
+    // a panicking backend must not strand the batch's tickets (waiters
+    // would block forever and the worker thread would die silently) —
+    // unwind is converted into a per-ticket error instead
+    let dispatch = || {
+        if reqs.len() == 1 && total_rows == b {
+            // full-batch request: dispatch as-is, zero copies
+            backend.run(&reqs[0].x, reqs[0].t.as_ref())
+        } else {
+            let in_tail = &reqs[0].x.dims[1..];
+            let row_len: usize = in_tail.iter().product();
+            let mut data = vec![0.0f32; b * row_len];
+            let mut off = 0usize;
+            for r in &reqs {
+                data[off..off + r.x.data.len()].copy_from_slice(&r.x.data);
+                off += r.x.data.len();
+            }
+            let mut dims = vec![b];
+            dims.extend_from_slice(in_tail);
+            let xb = Tensor::new(dims, data);
+            let tb = match reqs[0].t {
+                Some(_) => {
+                    let mut td = vec![0.0f32; b];
+                    let mut o = 0usize;
+                    for r in &reqs {
+                        let tt =
+                            r.t.as_ref().expect("submit enforces uniform t presence");
+                        td[o..o + tt.data.len()].copy_from_slice(&tt.data);
+                        o += tt.data.len();
+                    }
+                    Some(Tensor::new(vec![b], td))
+                }
+                None => None,
+            };
+            backend.run(&xb, tb.as_ref())
+        }
+    };
+    let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(dispatch))
+        .unwrap_or_else(|p| {
+            let msg = p
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| p.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "opaque panic payload".to_string());
+            Err(anyhow::anyhow!("serve backend panicked: {msg}"))
+        });
+    let st = &shared.stats;
+    st.batches.fetch_add(1, Ordering::Relaxed);
+    st.padded_rows.fetch_add(b - total_rows, Ordering::Relaxed);
+    st.requests.fetch_add(reqs.len(), Ordering::Relaxed);
+    st.rows.fetch_add(total_rows, Ordering::Relaxed);
+    match out {
+        Ok(y) if y.dims.first() == Some(&b) && y.data.len() % b == 0 => {
+            if reqs.len() == 1 && total_rows == b {
+                // full-batch request: move the output straight to its ticket
+                let r = reqs.into_iter().next().unwrap();
+                fulfill(&r.ticket, Ok(y));
+                return;
+            }
+            let out_row = y.data.len() / b;
+            let out_tail = y.dims[1..].to_vec();
+            let mut off = 0usize;
+            for r in reqs {
+                let rows = r.x.dims[0];
+                let mut dims = vec![rows];
+                dims.extend_from_slice(&out_tail);
+                let part =
+                    Tensor::new(dims, y.data[off..off + rows * out_row].to_vec());
+                off += rows * out_row;
+                fulfill(&r.ticket, Ok(part));
+            }
+        }
+        Ok(y) => {
+            let msg = format!(
+                "serve batch produced dims {:?}, expected leading batch {b}",
+                y.dims
+            );
+            for r in reqs {
+                fulfill(&r.ticket, Err(anyhow::anyhow!("{msg}")));
+            }
+        }
+        Err(e) => {
+            let msg = format!("serve batch failed: {e}");
+            for r in reqs {
+                fulfill(&r.ticket, Err(anyhow::anyhow!("{msg}")));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Concurrent-client load driver
+// ---------------------------------------------------------------------------
+
+/// One load run against a session: client-perceived latency percentiles
+/// (queue wait included) and throughput, plus coalescing counters.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    pub clients: usize,
+    pub requests: usize,
+    pub rows: usize,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub mean_ms: f64,
+    pub min_ms: f64,
+    pub wall_s: f64,
+    pub rows_per_s: f64,
+    pub batches: usize,
+    pub padded_rows: usize,
+}
+
+impl LoadReport {
+    pub fn row(&self, name: &str) -> String {
+        format!(
+            "{name:<26} clients {:>3}  p50 {:>8.2}ms  p95 {:>8.2}ms  {:>9.1} rows/s  \
+             {:>4} batches ({} padded rows)",
+            self.clients, self.p50_ms, self.p95_ms, self.rows_per_s, self.batches,
+            self.padded_rows
+        )
+    }
+}
+
+/// Drive `clients` concurrent submitters, each issuing
+/// `requests_per_client` requests produced by `make_input(client, i)`.
+/// Every ticket is awaited by its submitter (closed-loop load).
+pub fn drive<F>(
+    session: &Session,
+    clients: usize,
+    requests_per_client: usize,
+    make_input: F,
+) -> Result<LoadReport>
+where
+    F: Fn(usize, usize) -> (Tensor, Option<Tensor>) + Sync,
+{
+    let before = session.stats();
+    let lat = Mutex::new(Vec::with_capacity(clients * requests_per_client));
+    let rows = AtomicUsize::new(0);
+    let fail: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let (lat, rows, fail, make_input) = (&lat, &rows, &fail, &make_input);
+            s.spawn(move || {
+                for i in 0..requests_per_client {
+                    let (x, t) = make_input(c, i);
+                    rows.fetch_add(x.dims[0], Ordering::Relaxed);
+                    let tq = Instant::now();
+                    match session.submit_with(x, t).and_then(Ticket::wait) {
+                        Ok(_) => lat
+                            .lock()
+                            .unwrap()
+                            .push(tq.elapsed().as_secs_f64() * 1e3),
+                        Err(e) => {
+                            *fail.lock().unwrap() = Some(e);
+                            return;
+                        }
+                    }
+                }
+            });
+        }
+    });
+    if let Some(e) = fail.into_inner().unwrap() {
+        return Err(e);
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let mut lat = lat.into_inner().unwrap();
+    anyhow::ensure!(!lat.is_empty(), "drive: no requests completed");
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let after = session.stats();
+    let rows = rows.load(Ordering::Relaxed);
+    Ok(LoadReport {
+        clients,
+        requests: lat.len(),
+        rows,
+        p50_ms: lat[lat.len() / 2],
+        p95_ms: lat[((lat.len() as f64 * 0.95) as usize).min(lat.len() - 1)],
+        mean_ms: lat.iter().sum::<f64>() / lat.len() as f64,
+        min_ms: lat[0],
+        wall_s,
+        rows_per_s: rows as f64 / wall_s.max(1e-9),
+        batches: after.batches - before.batches,
+        padded_rows: after.padded_rows - before.padded_rows,
+    })
+}
+
+/// Slice the classify eval stream into single-row `(x, y)` request pairs
+/// (`x: [1,h,w,c]`, `y: [1,classes]`) — the "many small clients" workload
+/// the serving CLI and example drive against a [`Session`].  Returns an
+/// empty pool for non-classify models.
+pub fn classify_request_pool(gen: &crate::train::Gen, batches: usize) -> Vec<(Tensor, Tensor)> {
+    let mut pool = Vec::new();
+    for bi in 0..batches {
+        let batch = gen.batch(crate::train::STREAM_EVAL, bi as u64);
+        if let crate::model::Batch::Classify { x, y } = batch {
+            let b = x.dims[0];
+            let xl: usize = x.dims[1..].iter().product();
+            let yl: usize = y.dims[1..].iter().product();
+            for r in 0..b {
+                let mut xd = vec![1];
+                xd.extend_from_slice(&x.dims[1..]);
+                let mut yd = vec![1];
+                yd.extend_from_slice(&y.dims[1..]);
+                pool.push((
+                    Tensor::new(xd, x.data[r * xl..(r + 1) * xl].to_vec()),
+                    Tensor::new(yd, y.data[r * yl..(r + 1) * yl].to_vec()),
+                ));
+            }
+        }
+    }
+    pool
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handles_are_send_sync_and_static() {
+        fn check<T: Send + Sync + 'static>() {}
+        check::<Engine>();
+        check::<Session>();
+        check::<Ticket>();
+    }
+
+    #[test]
+    fn serve_cfg_default_is_sane() {
+        let c = ServeCfg::default();
+        assert!(c.workers >= 1 && c.queue_cap >= 1);
+    }
+}

@@ -7,6 +7,8 @@
 
 use std::collections::BTreeSet;
 
+use crate::ir::Spec;
+
 /// Per-layer knapsack input; index 0 unused (layers are 1-based).
 #[derive(Debug, Clone)]
 pub struct KnapsackInput {
@@ -84,6 +86,28 @@ pub fn solve(input: &KnapsackInput) -> Option<KnapsackSolution> {
     Some(KnapsackSolution { kept, objective, latency_est })
 }
 
+/// Deployment spans for a LayerOnly solution: every layer stays its own
+/// singleton span `(j-1, j, k)`; a conv dropped from `kept` (only gated
+/// layers can be) deploys as the identity, recorded as `k = 1` so the
+/// plan builder elides it.
+pub fn deploy_spans(spec: &Spec, kept: &BTreeSet<usize>) -> Vec<(usize, usize, usize)> {
+    (1..=spec.len())
+        .map(|j| {
+            let keep = kept.contains(&j) || !spec.conv(j).conv_gated;
+            (j - 1, j, if keep { spec.conv(j).k } else { 1 })
+        })
+        .collect()
+}
+
+/// Kept interior activation boundaries for a LayerOnly solution: every
+/// pristine (ungated) activation survives; gated ones survive iff their
+/// conv does.  The final boundary L is never in A (sigma_L = id).
+pub fn deploy_a(spec: &Spec, kept: &BTreeSet<usize>) -> Vec<usize> {
+    (1..spec.len())
+        .filter(|l| !spec.conv(*l).act_gated || kept.contains(l))
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -144,6 +168,49 @@ mod tests {
             budget_ms: r.range(0.5, 4.0) as f64,
             p: 60 + r.below(60),
         }
+    }
+
+    #[test]
+    fn deploy_spans_gate_dropped_layers_to_identity() {
+        // toy spec: conv1 irreducible (conv_gated=false), conv2..4 gated
+        let sp = crate::ir::tests::toy_spec();
+        let kept: BTreeSet<usize> = [1usize, 2, 4].into_iter().collect();
+        let spans = deploy_spans(&sp, &kept);
+        assert_eq!(spans.len(), sp.len());
+        for (j, &(i, jj, k)) in spans.iter().enumerate() {
+            // every span is a singleton (j-1, j, _)
+            assert_eq!((i, jj), (j, j + 1));
+            let keep = kept.contains(&jj) || !sp.conv(jj).conv_gated;
+            assert_eq!(k, if keep { sp.conv(jj).k } else { 1 }, "span {jj}");
+        }
+        // conv3 dropped -> identity (k = 1); conv2 kept -> its own kernel
+        assert_eq!(spans[2], (2, 3, 1));
+        assert_eq!(spans[1], (1, 2, sp.conv(2).k));
+    }
+
+    #[test]
+    fn deploy_spans_force_irreducible_layers() {
+        let sp = crate::ir::tests::toy_spec();
+        // conv1 is irreducible: even absent from `kept` it keeps its kernel
+        let kept: BTreeSet<usize> = BTreeSet::new();
+        let spans = deploy_spans(&sp, &kept);
+        assert_eq!(spans[0], (0, 1, sp.conv(1).k));
+        for &(_, j, k) in &spans[1..] {
+            assert_eq!(k, 1, "gated layer {j} must deploy as identity");
+        }
+    }
+
+    #[test]
+    fn deploy_a_keeps_pristine_and_kept_activations_only() {
+        let sp = crate::ir::tests::toy_spec();
+        // acts 1..3 are gated in the toy spec; 4 is the final boundary
+        let kept: BTreeSet<usize> = [1usize, 3].into_iter().collect();
+        assert_eq!(deploy_a(&sp, &kept), vec![1, 3]);
+        // final boundary never appears even if "kept"
+        let all: BTreeSet<usize> = (1..=sp.len()).collect();
+        let a = deploy_a(&sp, &all);
+        assert!(!a.contains(&sp.len()));
+        assert_eq!(a, vec![1, 2, 3]);
     }
 
     fn brute(input: &KnapsackInput) -> Option<f64> {

@@ -207,6 +207,8 @@ pub struct BuildCfg {
     pub proxy_lr: f32,
     pub eval_batches: usize,
     pub workers: usize,
+    /// Skip the on-disk cache and rebuild from scratch (`--force`).
+    pub force: bool,
 }
 
 impl Default for BuildCfg {
@@ -219,6 +221,7 @@ impl Default for BuildCfg {
             proxy_lr: 0.01,
             eval_batches: 2,
             workers: 1,
+            force: false,
         }
     }
 }
@@ -378,9 +381,15 @@ pub fn build(
         ^ (cfg.proxy_steps as u64) << 32
         ^ cfg.iters as u64;
     let cache = Tables::cache_path(cache_root, &model.name, cfg.mode);
-    if let Some(t) = Tables::load(&cache, fp) {
-        eprintln!("[tables] {}: loaded cache ({} entries)", model.name, t.entries.len());
-        return Ok(t);
+    if !cfg.force {
+        if let Some(t) = Tables::load(&cache, fp) {
+            eprintln!(
+                "[tables] {}: loaded cache ({} entries)",
+                model.name,
+                t.entries.len()
+            );
+            return Ok(t);
+        }
     }
     let sp = &model.spec;
     let l_max = sp.len();

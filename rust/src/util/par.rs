@@ -1,13 +1,17 @@
 //! Scoped-thread data-parallel helpers (rayon substitute — offline vendor
-//! set, DESIGN.md §2).  Two primitives cover every hot loop in the repo:
+//! set, DESIGN.md §2).  Three primitives cover every hot loop in the repo:
 //! disjoint-chunk iteration over a mutable slice (GEMM rows, kernel
-//! scatter) and a work-stealing indexed for-loop (table construction).
+//! scatter), a work-stealing indexed for-loop (table construction), and a
+//! persistent named [`Pool`] of owned worker threads (the serving queue).
 //!
-//! Threads are spawned per call via `std::thread::scope`; spawn cost is
-//! ~10µs/thread, so callers gate on problem size (see
-//! [`crate::kernels::gemm`]) and stay serial below it.
+//! The scoped helpers spawn per call via `std::thread::scope`; spawn cost
+//! is ~10µs/thread, so callers gate on problem size (see
+//! [`crate::kernels::gemm`]) and stay serial below it.  `Pool` threads are
+//! long-lived and joined explicitly (or on drop).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
 
 /// Hardware parallelism, clamped by the `LM_THREADS` env override.
 pub fn max_threads() -> usize {
@@ -83,6 +87,61 @@ where
     });
 }
 
+/// A persistent pool of owned, named worker threads.
+///
+/// Unlike the scoped helpers above, `Pool` threads are `'static`: the
+/// worker body owns everything it touches (typically `Arc`-shared state),
+/// so the pool can be stored in a long-lived handle such as
+/// [`crate::serve::Session`].  Workers run `f(worker_index)` once and exit
+/// when `f` returns; coordination (queues, shutdown flags) lives in the
+/// shared state, not in the pool.
+pub struct Pool {
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Pool {
+    /// Spawn `threads` workers (at least one) named `"{name}-{i}"`, each
+    /// running `f(i)` to completion.
+    pub fn spawn<F>(threads: usize, name: &str, f: F) -> Pool
+    where
+        F: Fn(usize) + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let handles = (0..threads.max(1))
+            .map(|i| {
+                let f = Arc::clone(&f);
+                std::thread::Builder::new()
+                    .name(format!("{name}-{i}"))
+                    .spawn(move || f(i))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Pool { handles }
+    }
+
+    pub fn len(&self) -> usize {
+        self.handles.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.handles.is_empty()
+    }
+
+    /// Join every worker.  Idempotent; callers must first arrange for the
+    /// worker bodies to return (e.g. close their queue) or this blocks.
+    pub fn join(&mut self) {
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        self.join();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -137,5 +196,30 @@ mod tests {
     #[test]
     fn max_threads_positive() {
         assert!(max_threads() >= 1);
+    }
+
+    #[test]
+    fn pool_runs_each_worker_once_and_joins() {
+        let hits = Arc::new(AtomicU64::new(0));
+        let h2 = Arc::clone(&hits);
+        let mut pool = Pool::spawn(3, "test-pool", move |i| {
+            h2.fetch_add(1 + i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(pool.len(), 3);
+        pool.join();
+        // 0-, 1- and 2-indexed workers each ran once: 1 + 2 + 3
+        assert_eq!(hits.load(Ordering::Relaxed), 6);
+        pool.join(); // idempotent
+    }
+
+    #[test]
+    fn pool_spawns_at_least_one_worker() {
+        let hits = Arc::new(AtomicU64::new(0));
+        let h2 = Arc::clone(&hits);
+        let mut pool = Pool::spawn(0, "test-pool-min", move |_| {
+            h2.fetch_add(1, Ordering::Relaxed);
+        });
+        pool.join();
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
     }
 }

@@ -7,11 +7,21 @@ use std::sync::Arc;
 
 use layermerge::model::Manifest;
 use layermerge::runtime::Runtime;
+use layermerge::serve::Engine;
 
 pub struct TestCtx {
     pub rt: Arc<Runtime>,
     pub man: Manifest,
     pub root: PathBuf,
+}
+
+impl TestCtx {
+    /// Owning deployment handle over the test artifacts (shares the
+    /// runtime; reloads the manifest, which isn't `Clone`).
+    pub fn engine(&self) -> Engine {
+        let man = Manifest::load(&self.root).expect("manifest");
+        Engine::new(Arc::clone(&self.rt), Arc::new(man))
+    }
 }
 
 pub fn ctx() -> Option<TestCtx> {

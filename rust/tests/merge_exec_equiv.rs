@@ -8,8 +8,9 @@
 //!   reorder boundary effect (small rel_l2; interior is exact — the
 //!   merge-module unit tests pin the exact VALID-conv algebra);
 //! * Fused format == Eager format (exact);
-//! * `CompiledPlan` (the one-time lowering) == `Plan::forward`, with
-//!   zero `Runtime` cache lookups per forward after lowering.
+//! * `CompiledPlan` (the owned one-time lowering, via `Engine::lower`) ==
+//!   one-shot `Engine::infer`, with zero `Runtime` cache lookups per
+//!   forward after lowering.
 
 mod common;
 
@@ -20,25 +21,21 @@ use common::ctx;
 use layermerge::exec::{Format, Plan};
 use layermerge::ir::Spec;
 use layermerge::model::{Batch, Model};
+use layermerge::serve::Engine;
 use layermerge::train::{self, Gen};
 
-fn setup(t: &common::TestCtx, name: &str) -> (Model, Vec<f32>) {
-    let model = Model::load(Arc::clone(&t.rt), &manifest_of(t), name).unwrap();
+fn setup(engine: &Engine, name: &str) -> (Model, Vec<f32>) {
+    let model = engine.load_model(name).unwrap();
     let params = model.init.clone();
     (model, params)
-}
-
-// Manifest isn't Clone; reload it cheaply.
-fn manifest_of(t: &common::TestCtx) -> layermerge::model::Manifest {
-    layermerge::model::Manifest::load(&t.root).unwrap()
 }
 
 #[test]
 fn original_plan_matches_gated_graph_exactly() {
     let Some(t) = ctx() else { return };
+    let engine = t.engine();
     for name in ["resnetish", "mnv2ish-1.0"] {
-        let man = manifest_of(&t);
-        let (model, params) = setup(&t, name);
+        let (model, params) = setup(&engine, name);
         let gen = Gen::for_model(&model, 7);
         let batch = gen.batch(train::STREAM_EVAL, 0);
         let x = match &batch {
@@ -47,14 +44,14 @@ fn original_plan_matches_gated_graph_exactly() {
         };
         let gates = model.spec.pristine_gates();
         let gated = model.forward(&params, &gates, &batch).unwrap();
-        let plan = Plan::original(&model.spec, &params).unwrap();
-        let eager = plan.forward(&model.rt, &man, &x, None, Format::Eager).unwrap();
+        let plan = Arc::new(Plan::original(&model.spec, &params).unwrap());
+        let eager = engine.infer(&plan, &x, None, Format::Eager).unwrap();
         assert!(
             eager.rel_l2(&gated) < 1e-4,
             "{name}: original plan deviates rel_l2 {}",
             eager.rel_l2(&gated)
         );
-        let fused = plan.forward(&model.rt, &man, &x, None, Format::Fused).unwrap();
+        let fused = engine.infer(&plan, &x, None, Format::Fused).unwrap();
         assert!(fused.rel_l2(&eager) < 1e-5, "{name}: fused != eager");
     }
 }
@@ -65,8 +62,8 @@ fn original_plan_matches_gated_graph_exactly() {
 #[test]
 fn segment_merged_plan_close_to_gated_graph() {
     let Some(t) = ctx() else { return };
-    let man = manifest_of(&t);
-    let (model, params) = setup(&t, "resnetish");
+    let engine = t.engine();
+    let (model, params) = setup(&engine, "resnetish");
     let spec: &Spec = &model.spec;
     let mut a: Vec<usize> = Vec::new();
     let mut spans: Vec<(usize, usize, usize)> = Vec::new();
@@ -106,13 +103,13 @@ fn segment_merged_plan_close_to_gated_graph() {
         _ => unreachable!(),
     };
     let gated = model.forward(&params, &gates, &batch).unwrap();
-    let plan = Plan::from_solution(spec, &params, &a, &c, &spans).unwrap();
+    let plan = Arc::new(Plan::from_solution(spec, &params, &a, &c, &spans).unwrap());
     assert!(plan.depth() < spec.len(), "merging must reduce depth");
-    let eager = plan.forward(&model.rt, &man, &x, None, Format::Eager).unwrap();
+    let eager = engine.infer(&plan, &x, None, Format::Eager).unwrap();
     let dev = eager.rel_l2(&gated);
     // SAME-padding reorder: boundary rows differ, logits shift slightly.
     assert!(dev < 0.35, "merged plan deviates too much: rel_l2 {dev}");
-    let fused = plan.forward(&model.rt, &man, &x, None, Format::Fused).unwrap();
+    let fused = engine.infer(&plan, &x, None, Format::Fused).unwrap();
     assert!(fused.rel_l2(&eager) < 1e-4, "fused != eager: {}", fused.rel_l2(&eager));
 }
 
@@ -121,8 +118,8 @@ fn segment_merged_plan_close_to_gated_graph() {
 #[test]
 fn dropped_layers_are_elided_and_exact() {
     let Some(t) = ctx() else { return };
-    let man = manifest_of(&t);
-    let (model, params) = setup(&t, "resnetish");
+    let engine = t.engine();
+    let (model, params) = setup(&engine, "resnetish");
     let spec = &model.spec;
     // drop the first two reducible non-add layers
     let droppable: Vec<usize> = spec
@@ -135,13 +132,9 @@ fn dropped_layers_are_elided_and_exact() {
     assert_eq!(droppable.len(), 2);
     let c_set: BTreeSet<usize> =
         (1..=spec.len()).filter(|l| !droppable.contains(l)).collect();
-    let a: Vec<usize> = (1..spec.len())
-        .filter(|l| !droppable.contains(l))
-        .collect();
-    let spans: Vec<(usize, usize, usize)> = (1..=spec.len())
-        .map(|j| (j - 1, j, if c_set.contains(&j) { spec.conv(j).k } else { 1 }))
-        .collect();
-    let plan = Plan::from_solution(spec, &params, &a, &c_set, &spans).unwrap();
+    let a = layermerge::solver::layeronly::deploy_a(spec, &c_set);
+    let spans = layermerge::solver::layeronly::deploy_spans(spec, &c_set);
+    let plan = Arc::new(Plan::from_solution(spec, &params, &a, &c_set, &spans).unwrap());
     assert_eq!(
         plan.depth(),
         spec.len() - droppable.len(),
@@ -156,7 +149,7 @@ fn dropped_layers_are_elided_and_exact() {
         _ => unreachable!(),
     };
     let gated = model.forward(&params, &gates, &batch).unwrap();
-    let eager = plan.forward(&model.rt, &man, &x, None, Format::Eager).unwrap();
+    let eager = engine.infer(&plan, &x, None, Format::Eager).unwrap();
     assert!(
         eager.rel_l2(&gated) < 1e-4,
         "dropped-layer plan deviates: {}",
@@ -164,30 +157,35 @@ fn dropped_layers_are_elided_and_exact() {
     );
 }
 
-/// The lowered plan must be bit-equivalent to the one-shot forward (same
-/// executables, same operand tensors, same op order), and its steady-state
-/// loop must not touch the Runtime cache at all.
+/// The owned lowered plan must be bit-equivalent to the one-shot forward
+/// (same executables, same operand tensors, same op order), and its
+/// steady-state loop must not touch the Runtime cache at all.
 #[test]
 fn compiled_plan_matches_forward_with_zero_runtime_loads() {
     let Some(t) = ctx() else { return };
+    let engine = t.engine();
     for name in ["resnetish", "mnv2ish-1.0"] {
-        let man = manifest_of(&t);
-        let (model, params) = setup(&t, name);
+        let (model, params) = setup(&engine, name);
         let gen = Gen::for_model(&model, 7);
         let batch = gen.batch(train::STREAM_EVAL, 3);
         let x = match &batch {
             Batch::Classify { x, .. } => x.clone(),
             _ => unreachable!(),
         };
-        let plan = Plan::original(&model.spec, &params).unwrap();
+        let plan = Arc::new(Plan::original(&model.spec, &params).unwrap());
         for fmt in [Format::Eager, Format::Fused] {
-            let oneshot = plan.forward(&model.rt, &man, &x, None, fmt).unwrap();
-            let cp = plan.compile(&model.rt, &man, fmt).unwrap();
-            let loads_before = model.rt.loads();
-            let got = cp.forward(&x, None).unwrap();
-            let got2 = cp.forward(&x, None).unwrap();
+            let oneshot = engine.infer(&plan, &x, None, fmt).unwrap();
+            let cp = engine.lower(&plan, fmt).unwrap();
+            // the owned CompiledPlan can outlive any borrow of the plan —
+            // hand it to another thread and dispatch there
+            let loads_before = engine.runtime().loads();
+            let (got, got2) = std::thread::scope(|s| {
+                s.spawn(|| (cp.forward(&x, None).unwrap(), cp.forward(&x, None).unwrap()))
+                    .join()
+                    .unwrap()
+            });
             assert_eq!(
-                model.rt.loads(),
+                engine.runtime().loads(),
                 loads_before,
                 "{name} {fmt:?}: compiled forward touched the Runtime cache"
             );
@@ -207,8 +205,8 @@ fn compiled_plan_matches_forward_with_zero_runtime_loads() {
 #[test]
 fn compiled_plan_matches_forward_on_merged_solution() {
     let Some(t) = ctx() else { return };
-    let man = manifest_of(&t);
-    let (model, params) = setup(&t, "resnetish");
+    let engine = t.engine();
+    let (model, params) = setup(&engine, "resnetish");
     let spec: &Spec = &model.spec;
     // drop one reducible layer and merge the rest of its segment where
     // possible: exercises elision + non-chain boundary reads together
@@ -221,22 +219,24 @@ fn compiled_plan_matches_forward_on_merged_solution() {
         .collect();
     let c_set: BTreeSet<usize> =
         (1..=spec.len()).filter(|l| !droppable.contains(l)).collect();
-    let a: Vec<usize> = (1..spec.len()).filter(|l| !droppable.contains(l)).collect();
-    let spans: Vec<(usize, usize, usize)> = (1..=spec.len())
-        .map(|j| (j - 1, j, if c_set.contains(&j) { spec.conv(j).k } else { 1 }))
-        .collect();
-    let plan = Plan::from_solution(spec, &params, &a, &c_set, &spans).unwrap();
+    let a = layermerge::solver::layeronly::deploy_a(spec, &c_set);
+    let spans = layermerge::solver::layeronly::deploy_spans(spec, &c_set);
+    let plan = Arc::new(Plan::from_solution(spec, &params, &a, &c_set, &spans).unwrap());
     let gen = Gen::for_model(&model, 11);
     let batch = gen.batch(train::STREAM_EVAL, 4);
     let x = match &batch {
         Batch::Classify { x, .. } => x.clone(),
         _ => unreachable!(),
     };
-    let oneshot = plan.forward(&model.rt, &man, &x, None, Format::Eager).unwrap();
-    let cp = plan.compile(&model.rt, &man, Format::Eager).unwrap();
-    let loads_before = model.rt.loads();
+    let oneshot = engine.infer(&plan, &x, None, Format::Eager).unwrap();
+    let cp = engine.lower(&plan, Format::Eager).unwrap();
+    let loads_before = engine.runtime().loads();
     let got = cp.forward(&x, None).unwrap();
-    assert_eq!(model.rt.loads(), loads_before, "compiled forward must be load-free");
+    assert_eq!(
+        engine.runtime().loads(),
+        loads_before,
+        "compiled forward must be load-free"
+    );
     assert!(
         got.rel_l2(&oneshot) < 1e-6,
         "merged compiled != one-shot: rel_l2 {}",
@@ -250,8 +250,8 @@ fn compiled_plan_matches_forward_on_merged_solution() {
 #[test]
 fn ddpm_original_plan_matches_gated_graph() {
     let Some(t) = ctx() else { return };
-    let man = manifest_of(&t);
-    let (model, params) = setup(&t, "ddpmish");
+    let engine = t.engine();
+    let (model, params) = setup(&engine, "ddpmish");
     let gen = Gen::for_model(&model, 7);
     let batch = gen.batch(train::STREAM_EVAL, 0);
     let (x0, tt) = match &batch {
@@ -260,10 +260,8 @@ fn ddpm_original_plan_matches_gated_graph() {
     };
     let gates = model.spec.pristine_gates();
     let gated = model.forward(&params, &gates, &batch).unwrap();
-    let plan = Plan::original(&model.spec, &params).unwrap();
-    let eager = plan
-        .forward(&model.rt, &man, &x0, Some(&tt), Format::Eager)
-        .unwrap();
+    let plan = Arc::new(Plan::original(&model.spec, &params).unwrap());
+    let eager = engine.infer(&plan, &x0, Some(&tt), Format::Eager).unwrap();
     assert!(
         eager.rel_l2(&gated) < 1e-3,
         "ddpm plan deviates rel_l2 {}",
@@ -271,10 +269,14 @@ fn ddpm_original_plan_matches_gated_graph() {
     );
     // lowered form covers the full structural-op set: stash/concat slots,
     // time-bias injection, attention and upsample posts
-    let cp = plan.compile(&model.rt, &man, Format::Eager).unwrap();
-    let loads_before = model.rt.loads();
+    let cp = engine.lower(&plan, Format::Eager).unwrap();
+    let loads_before = engine.runtime().loads();
     let compiled = cp.forward(&x0, Some(&tt)).unwrap();
-    assert_eq!(model.rt.loads(), loads_before, "ddpm compiled forward load-free");
+    assert_eq!(
+        engine.runtime().loads(),
+        loads_before,
+        "ddpm compiled forward load-free"
+    );
     assert!(
         compiled.rel_l2(&eager) < 1e-6,
         "ddpm compiled != one-shot: rel_l2 {}",

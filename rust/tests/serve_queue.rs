@@ -1,0 +1,322 @@
+//! The serve suite: micro-batched queue machinery, host-only (no PJRT
+//! runtime needed — sessions run on a deterministic host backend via
+//! `Session::from_fn`, the same coalesce/pad/split/deliver path a
+//! deployed `CompiledPlan` uses).
+//!
+//! Pins the ISSUE-2 acceptance properties:
+//! * batched-vs-one-shot numerics parity (bit-identical),
+//! * tail-padding correctness (zero rows, counted, never leaked),
+//! * ordered ticket delivery under concurrent submitters,
+//! * backpressure honors the queue bound; shutdown drains cleanly.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use layermerge::serve::{self, ServeCfg, Session};
+use layermerge::util::tensor::Tensor;
+
+const B: usize = 4; // spec batch size for the mock deployments
+const TAIL: [usize; 1] = [3]; // per-row feature length
+
+/// Deterministic per-row "network": row r of the output is a fixed
+/// function of row r of the input ONLY (batch-content independence — the
+/// property that makes micro-batching bit-exact).  out_tail = [2].
+fn row_fn(row: &[f32]) -> [f32; 2] {
+    let sum: f32 = row.iter().sum();
+    let sq: f32 = row.iter().map(|v| v * v).sum();
+    [sum * 0.5 + 1.0, sq - row[0]]
+}
+
+fn mock_backend(x: &Tensor, _t: Option<&Tensor>) -> anyhow::Result<Tensor> {
+    anyhow::ensure!(x.dims[0] == B, "backend must see full batches");
+    let rl: usize = x.dims[1..].iter().product();
+    let mut out = Tensor::zeros(&[x.dims[0], 2]);
+    for r in 0..x.dims[0] {
+        let y = row_fn(&x.data[r * rl..(r + 1) * rl]);
+        out.data[r * 2..(r + 1) * 2].copy_from_slice(&y);
+    }
+    Ok(out)
+}
+
+fn mock_session(workers: usize, queue_cap: usize) -> Session {
+    Session::from_fn(B, &TAIL, false, ServeCfg { workers, queue_cap }, mock_backend)
+}
+
+fn req(rows: usize, seed: f32) -> Tensor {
+    let rl: usize = TAIL.iter().product();
+    Tensor::new(
+        vec![rows, TAIL[0]],
+        (0..rows * rl).map(|i| seed + i as f32 * 0.25).collect(),
+    )
+}
+
+/// Expected output for a request, computed row-by-row on the host — what
+/// any batch placement must reproduce exactly.
+fn expect(x: &Tensor) -> Vec<f32> {
+    let rl: usize = TAIL.iter().product();
+    (0..x.dims[0])
+        .flat_map(|r| row_fn(&x.data[r * rl..(r + 1) * rl]))
+        .collect()
+}
+
+#[test]
+fn full_batch_submit_is_bit_identical_to_infer() {
+    let sess = mock_session(2, 16);
+    let x = req(B, 0.5);
+    let direct = sess.infer(&x, None).unwrap();
+    let queued = sess.submit(x.clone()).unwrap().wait().unwrap();
+    // bit-identical: same computation, same batch placement, zero padding
+    assert_eq!(queued.dims, direct.dims);
+    assert_eq!(queued.data, direct.data);
+}
+
+#[test]
+fn sub_batch_submits_are_bit_identical_to_per_row_oracle() {
+    let sess = mock_session(2, 64);
+    // mixed request sizes: 1, 3, 2, 4, 1 rows
+    let reqs: Vec<Tensor> = [1usize, 3, 2, 4, 1]
+        .iter()
+        .enumerate()
+        .map(|(i, &rows)| req(rows, i as f32 * 10.0))
+        .collect();
+    let tickets: Vec<_> = reqs
+        .iter()
+        .map(|x| sess.submit(x.clone()).unwrap())
+        .collect();
+    for (x, tk) in reqs.iter().zip(tickets) {
+        let got = tk.wait().unwrap();
+        assert_eq!(got.dims, vec![x.dims[0], 2]);
+        assert_eq!(got.data, expect(x), "request of {} rows", x.dims[0]);
+    }
+}
+
+#[test]
+fn tail_padding_is_counted_and_padded_rows_are_dropped() {
+    let sess = mock_session(1, 16);
+    // 3 rows -> 1 padded row in a B=4 batch
+    let x = req(3, 7.0);
+    let got = sess.submit(x.clone()).unwrap().wait().unwrap();
+    assert_eq!(got.data, expect(&x));
+    // stats are bumped before the ticket resolves, so they're visible now
+    let s = sess.stats();
+    assert_eq!(s.batches, 1);
+    assert_eq!(s.padded_rows, B - 3);
+    assert_eq!(s.rows, 3);
+    assert_eq!(s.requests, 1);
+    // padded output rows are dropped: result has exactly 3 rows
+    assert_eq!(got.dims, vec![3, 2]);
+}
+
+#[test]
+fn padded_region_content_is_zero() {
+    let seen: Arc<Mutex<Vec<Vec<f32>>>> = Arc::new(Mutex::new(Vec::new()));
+    let seen2 = Arc::clone(&seen);
+    let sess = Session::from_fn(
+        B,
+        &TAIL,
+        false,
+        ServeCfg { workers: 1, queue_cap: 16 },
+        move |x, t| {
+            seen2.lock().unwrap().push(x.data.clone());
+            mock_backend(x, t)
+        },
+    );
+    let x = req(2, 3.0);
+    sess.submit(x.clone()).unwrap().wait().unwrap();
+    let batches = seen.lock().unwrap();
+    assert_eq!(batches.len(), 1);
+    let rl: usize = TAIL.iter().product();
+    let data = &batches[0];
+    assert_eq!(&data[..2 * rl], &x.data[..]);
+    assert!(data[2 * rl..].iter().all(|&v| v == 0.0), "tail not zero-padded");
+}
+
+#[test]
+fn ordered_delivery_under_concurrent_submitters() {
+    let sess = mock_session(3, 128);
+    let n_threads = 6;
+    let per_thread = 40;
+    std::thread::scope(|s| {
+        for th in 0..n_threads {
+            let sess = &sess;
+            s.spawn(move || {
+                for i in 0..per_thread {
+                    // encode (thread, i) in the request payload
+                    let rows = 1 + (th + i) % B;
+                    let seed = (th * 1000 + i) as f32;
+                    let x = req(rows, seed);
+                    let want = expect(&x);
+                    let got = sess.submit(x).unwrap().wait().unwrap();
+                    // each ticket resolves to ITS OWN rows, in order,
+                    // regardless of how requests interleaved in batches
+                    assert_eq!(got.data, want, "thread {th} request {i}");
+                }
+            });
+        }
+    });
+    let s = sess.stats();
+    assert_eq!(s.requests, n_threads * per_thread);
+    // coalescing happened: fewer batches than requests
+    assert!(
+        s.batches <= s.requests,
+        "batches {} > requests {}",
+        s.batches,
+        s.requests
+    );
+}
+
+#[test]
+fn backpressure_honors_queue_bound() {
+    // slow backend so the queue actually fills
+    let sess = Session::from_fn(
+        B,
+        &TAIL,
+        false,
+        ServeCfg { workers: 1, queue_cap: 2 },
+        |x, t| {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            mock_backend(x, t)
+        },
+    );
+    std::thread::scope(|s| {
+        for th in 0..4 {
+            let sess = &sess;
+            s.spawn(move || {
+                for i in 0..20 {
+                    let x = req(1 + (th + i) % B, (th * 100 + i) as f32);
+                    let want = expect(&x);
+                    let got = sess.submit(x).unwrap().wait().unwrap();
+                    assert_eq!(got.data, want);
+                }
+            });
+        }
+    });
+    let s = sess.stats();
+    assert_eq!(s.requests, 80);
+    // the bounded queue never held more than its capacity
+    assert!(s.max_queue <= 2, "queue peaked at {} > cap 2", s.max_queue);
+}
+
+#[test]
+fn shutdown_drains_accepted_requests() {
+    let sess = Session::from_fn(
+        B,
+        &TAIL,
+        false,
+        ServeCfg { workers: 1, queue_cap: 64 },
+        |x, t| {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            mock_backend(x, t)
+        },
+    );
+    let reqs: Vec<Tensor> = (0..10).map(|i| req(1 + i % B, i as f32)).collect();
+    let tickets: Vec<_> = reqs
+        .iter()
+        .map(|x| sess.submit(x.clone()).unwrap())
+        .collect();
+    // close + join while most requests are still queued
+    sess.shutdown();
+    for (x, tk) in reqs.iter().zip(tickets) {
+        let got = tk.wait().unwrap();
+        assert_eq!(got.data, expect(x), "request dropped on shutdown");
+    }
+}
+
+#[test]
+fn submit_after_close_errors() {
+    let sess = mock_session(1, 8);
+    sess.close();
+    let err = sess.submit(req(1, 0.0)).unwrap_err();
+    assert!(format!("{err}").contains("closed"), "{err}");
+}
+
+#[test]
+fn oversized_and_misshapen_requests_are_rejected() {
+    let sess = mock_session(1, 8);
+    let err = sess.submit(req(B + 1, 0.0)).unwrap_err();
+    assert!(format!("{err}").contains("exceed"), "{err}");
+    let err = sess
+        .submit(Tensor::new(vec![1, TAIL[0] + 1], vec![0.0; TAIL[0] + 1]))
+        .unwrap_err();
+    assert!(format!("{err}").contains("don't match"), "{err}");
+    // t on a non-diffusion session is rejected
+    let err = sess
+        .submit_with(req(1, 0.0), Some(Tensor::new(vec![1], vec![0.0])))
+        .unwrap_err();
+    assert!(format!("{err}").contains("timestep"), "{err}");
+}
+
+#[test]
+fn backend_errors_propagate_to_every_ticket_in_the_batch() {
+    let sess = Session::from_fn(
+        B,
+        &TAIL,
+        false,
+        ServeCfg { workers: 1, queue_cap: 16 },
+        |_, _| anyhow::bail!("device on fire"),
+    );
+    let t1 = sess.submit(req(2, 0.0)).unwrap();
+    let t2 = sess.submit(req(2, 5.0)).unwrap();
+    for t in [t1, t2] {
+        let err = t.wait().unwrap_err();
+        assert!(format!("{err}").contains("device on fire"), "{err}");
+    }
+}
+
+#[test]
+fn backend_panics_become_ticket_errors_and_worker_survives() {
+    let calls = Arc::new(AtomicUsize::new(0));
+    let c2 = Arc::clone(&calls);
+    let sess = Session::from_fn(
+        B,
+        &TAIL,
+        false,
+        ServeCfg { workers: 1, queue_cap: 16 },
+        move |x, t| {
+            if c2.fetch_add(1, Ordering::Relaxed) == 0 {
+                panic!("kaboom");
+            }
+            mock_backend(x, t)
+        },
+    );
+    let err = sess.submit(req(1, 0.0)).unwrap().wait().unwrap_err();
+    assert!(format!("{err}").contains("panicked"), "{err}");
+    // the worker survived the panic and still serves the next request
+    let x = req(2, 1.0);
+    let got = sess.submit(x.clone()).unwrap().wait().unwrap();
+    assert_eq!(got.data, expect(&x));
+}
+
+#[test]
+fn single_client_coalesces_nothing_many_clients_coalesce() {
+    // drive() wiring: closed-loop clients, latency + throughput stats
+    let sess = mock_session(2, 64);
+    let r1 = serve::drive(&sess, 1, 20, |_, i| (req(1, i as f32), None)).unwrap();
+    assert_eq!(r1.requests, 20);
+    assert_eq!(r1.rows, 20);
+    assert!(r1.rows_per_s > 0.0 && r1.p50_ms >= 0.0);
+    // closed-loop single client: every batch carries exactly one request
+    assert_eq!(r1.batches, 20);
+
+    // a deliberately slow single worker: 8 waiting clients must pile up
+    // in the queue, so batches coalesce and come out fewer than requests
+    let slow = Session::from_fn(
+        B,
+        &TAIL,
+        false,
+        ServeCfg { workers: 1, queue_cap: 64 },
+        |x, t| {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            mock_backend(x, t)
+        },
+    );
+    let r8 = serve::drive(&slow, 8, 20, |c, i| (req(1, (c * 100 + i) as f32), None))
+        .unwrap();
+    assert_eq!(r8.requests, 160);
+    assert!(
+        r8.batches < r8.requests,
+        "no coalescing: {} batches for {} requests",
+        r8.batches,
+        r8.requests
+    );
+}

@@ -1,12 +1,19 @@
 #!/usr/bin/env bash
-# Run the merge/forward perf benches and write BENCH_merge.json at the
-# repo root (stable schema "layermerge.bench.merge.v1" — one record per
-# PR lets the perf trajectory be compared across sessions).
+# Run the perf benches and write BENCH_merge.json at the repo root
+# (stable schema "layermerge.bench.merge.v1" — one record per PR lets the
+# perf trajectory be compared across sessions).
+#
+#   * merge_ops — flat-GEMM vs naive merge, eager vs compiled forward
+#     (writes the base record)
+#   * serving   — micro-batched Session throughput at 1/4/16 concurrent
+#     clients (read-modify-write: extends the record, never replaces it)
 #
 # Usage:
-#   scripts/bench.sh              # merge benches (host-only, no artifacts)
-#   make artifacts && scripts/bench.sh   # adds span_merge + forward rows
+#   scripts/bench.sh              # host-only benches, no artifacts needed
+#   make artifacts && scripts/bench.sh   # adds span_merge + forward +
+#                                        # deployed-plan serving rows
 #   BENCH_OUT=/tmp/b.json scripts/bench.sh
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
 cargo bench --bench merge_ops ${1:+"$@"}
+cargo bench --bench serving
