@@ -170,8 +170,10 @@ fn main() -> anyhow::Result<()> {
     }
 
     // read-modify-write: the serving bench owns the `serve *` rows and
-    // `serving_*` derived keys — preserve them so the two benches can be
-    // re-run in any order without clobbering each other's record
+    // `serving_*` derived keys, the runtime_dispatch bench owns the
+    // `resident/dispatch forward *` rows and `resident_*`/`dispatch_*`
+    // keys — preserve them so the benches can be re-run in any order
+    // without clobbering each other's record
     let path = std::env::var("BENCH_OUT").unwrap_or_else(|_| {
         format!("{}/../BENCH_merge.json", env!("CARGO_MANIFEST_DIR"))
     });
@@ -180,14 +182,20 @@ fn main() -> anyhow::Result<()> {
             if let Some(prev_rows) = prev.get("rows").and_then(|r| r.as_arr()) {
                 for r in prev_rows {
                     let name = r.get("name").and_then(|n| n.as_str()).unwrap_or("");
-                    if name.starts_with("serve ") {
+                    if name.starts_with("serve ")
+                        || name.starts_with("resident forward ")
+                        || name.starts_with("dispatch forward ")
+                    {
                         rows.push(r.clone());
                     }
                 }
             }
             if let Some(prev_d) = prev.get("derived").and_then(|d| d.as_obj()) {
                 for (k, v) in prev_d {
-                    if k.starts_with("serving_") {
+                    if k.starts_with("serving_")
+                        || k.starts_with("resident_")
+                        || k.starts_with("dispatch_")
+                    {
                         derived.push((k.clone(), v.clone()));
                     }
                 }

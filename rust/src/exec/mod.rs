@@ -13,17 +13,26 @@
 //!   single fused executable per merged layer (XLA fuses internally).
 //!
 //! Dispatch runs through [`CompiledPlan`], a one-time lowering of the
-//! plan: every artifact is resolved to its `Arc<Exec>` up front, bias and
-//! group-norm tensors are materialized once, and boundary activations
-//! flow through refcounted buffers that are released at their last use —
-//! the steady-state loop performs **zero** `Runtime` cache-mutex
-//! acquisitions, path hashes, or full-tensor boundary clones per step.
+//! plan against a [`crate::runtime::Backend`]: every op is resolved once
+//! (`Backend::lower_op`), every weight-scale operand — merged conv
+//! weights, biases, group-norm affines, projection / attention / head
+//! weights — is **uploaded once** as a persistent backend [`Value`], and
+//! boundary activations flow between steps as backend-resident handles
+//! released at their last use.  The steady-state loop performs **zero**
+//! `Runtime` cache-mutex acquisitions, path hashes, or host<->device
+//! round trips per step: data crosses the transfer boundary only at the
+//! input upload, the genuine host points (skip-concat, time-bias
+//! injection, the host-add fallback when an add artifact is missing) and
+//! the final output download — counter-asserted by
+//! `tests/host_backend.rs`.
 //!
-//! `CompiledPlan` **owns** its plan (`Arc<Plan>`): it has no lifetime
-//! parameter, is `Send + Sync`, and can be handed to worker threads.
-//! Deployment goes through [`crate::serve::Engine::deploy`] (worker-pool
-//! serving) or [`crate::serve::Engine::lower`] (a bare compiled plan for
-//! hot loops); `CompiledPlan::lower` is the underlying constructor.
+//! `CompiledPlan` **owns** its plan (`Arc<Plan>`) and backend: it has no
+//! lifetime parameter, is `Send + Sync`, and can be handed to worker
+//! threads.  Deployment goes through [`crate::serve::Engine::deploy`]
+//! (worker-pool serving) or [`crate::serve::Engine::lower`] (a bare
+//! compiled plan for hot loops); `CompiledPlan::lower` is the underlying
+//! constructor.  With `Engine::host()` the same lowered plan executes on
+//! the native host kernels — no artifacts, no XLA.
 //!
 //! The plan is also the ground truth for end-to-end latency measurements
 //! (Tables 1-5) and for the merged-vs-pruned numerics report.
@@ -35,9 +44,10 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::ir::{Spec, Task};
+use crate::kernels::{self, Act};
 use crate::merge::{span_merge, MergedConv};
-use crate::model::{sig_str, Manifest};
-use crate::runtime::{Exec, Runtime};
+use crate::runtime::{Backend, LatencyStats, OpDesc, OpHandle, Value};
+use crate::util::par;
 use crate::util::tensor::Tensor;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -282,20 +292,22 @@ impl Plan {
 }
 
 impl CompiledPlan {
-    /// Lower a plan against a runtime + manifest: resolve every
-    /// executable, pre-materialize operand tensors, and precompute the
+    /// Lower a plan against a backend: resolve every op once
+    /// (`Backend::lower_op`), upload every operand tensor once as a
+    /// persistent backend [`Value`] (weights, biases, group-norm affines,
+    /// projection / attention / head operands), and precompute the
     /// boundary-buffer lifetimes.  One-time cost; the returned
-    /// `CompiledPlan` dispatches with no per-step artifact resolution and
-    /// keeps the plan alive through its `Arc` (weight tensors are shared,
-    /// not copied).  Callers normally reach this through
+    /// `CompiledPlan` dispatches with no per-step resolution and no
+    /// operand transfers, and keeps the plan alive through its `Arc`.
+    /// Callers normally reach this through
     /// [`crate::serve::Engine::lower`] / [`crate::serve::Engine::deploy`].
     pub fn lower(
         plan: Arc<Plan>,
-        rt: &Runtime,
-        man: &Manifest,
+        backend: Arc<dyn Backend>,
         fmt: Format,
     ) -> Result<CompiledPlan> {
         let b = plan.batch;
+        let be = &*backend;
 
         // Pass 1 — dataflow: which steps read their input from the running
         // buffer vs a stored boundary, which boundaries need a slot at
@@ -358,27 +370,38 @@ impl CompiledPlan {
             };
             let m = &step.merged;
             let co = m.bias.len();
-            let sig = sig_str(b, h, w, c, co, m.k, m.stride, m.depthwise);
+            let act = match &step.act {
+                Some(a) => Some(
+                    Act::parse(a).with_context(|| format!("unknown activation {a}"))?,
+                ),
+                None => None,
+            };
             // SAME padding: output spatial dims are ceil(in / stride)
             let (ho, wo) = (h.div_ceil(m.stride), w.div_ceil(m.stride));
-            let ew_base = format!("b{b}h{ho}w{wo}c{co}");
             let res = match &step.res {
                 Some((src, proj)) => {
                     let (hs, ws, cs) = *shapes
                         .get(src)
                         .with_context(|| format!("res boundary {src} shape unknown"))?;
-                    // projection weight is read from the plan at dispatch;
-                    // only the exec + materialized bias live here
                     let proj = match proj {
                         Some(p) => {
-                            let psig =
-                                sig_str(b, hs, ws, cs, p.b.len(), 1, p.stride, false);
-                            let rel = man
-                                .conv_art(&psig, "plain")
-                                .with_context(|| format!("proj artifact {psig}"))?;
+                            let desc = OpDesc::Conv {
+                                b,
+                                h: hs,
+                                w: ws,
+                                cin: cs,
+                                cout: p.b.len(),
+                                k: 1,
+                                stride: p.stride,
+                                depthwise: false,
+                                act: None,
+                                residual: false,
+                            };
                             Some((
-                                rt.load(&rel)?,
-                                Tensor::new(vec![p.b.len()], p.b.clone()),
+                                be.lower_op(&desc)
+                                    .with_context(|| format!("proj op at step {s}"))?,
+                                be.upload(&p.w)?,
+                                be.upload(&Tensor::new(vec![p.b.len()], p.b.clone()))?,
                             ))
                         }
                         None => None,
@@ -391,50 +414,67 @@ impl CompiledPlan {
             // Fused format collapses conv(+add)(+act) into one dispatch
             // whenever no group norm sits in between.
             let can_fuse = fmt == Format::Fused && step.gn.is_none();
-            let (conv, fuse_res, gn, add, act) = if can_fuse {
-                let variant = match (&step.act, &res) {
-                    (Some(a), Some(_)) => format!("far_{a}"),
-                    (Some(a), None) => format!("fa_{a}"),
-                    (None, Some(_)) => "far_none".to_string(),
-                    (None, None) => "plain".to_string(),
-                };
-                let rel = man
-                    .conv_art(&sig, &variant)
-                    .with_context(|| format!("conv artifact {sig}.{variant}"))?;
-                (rt.load(&rel)?, res.is_some(), None, None, None)
+            let conv_desc = |fused_act: Option<Act>, residual: bool| OpDesc::Conv {
+                b,
+                h,
+                w,
+                cin: c,
+                cout: co,
+                k: m.k,
+                stride: m.stride,
+                depthwise: m.depthwise,
+                act: fused_act,
+                residual,
+            };
+            let (conv, fuse_res, gn, add, act_op) = if can_fuse {
+                let conv = be
+                    .lower_op(&conv_desc(act, res.is_some()))
+                    .with_context(|| format!("fused conv op at step {s}"))?;
+                (conv, res.is_some(), None, None, None)
             } else {
-                let rel = man
-                    .conv_art(&sig, "plain")
-                    .with_context(|| format!("conv artifact {sig}"))?;
-                let conv = rt.load(&rel)?;
+                let conv = be
+                    .lower_op(&conv_desc(None, false))
+                    .with_context(|| format!("conv op at step {s}"))?;
                 let gn = match &step.gn {
-                    Some((scale, bias, groups)) => {
-                        let rel = man
-                            .ew_art(&format!("gn{groups}_{ew_base}"))
-                            .with_context(|| format!("gn artifact gn{groups}_{ew_base}"))?;
-                        Some((
-                            rt.load(&rel)?,
-                            Tensor::new(vec![scale.len()], scale.clone()),
-                            Tensor::new(vec![bias.len()], bias.clone()),
-                        ))
-                    }
+                    Some((scale, bias, groups)) => Some((
+                        be.lower_op(&OpDesc::GroupNorm {
+                            b,
+                            h: ho,
+                            w: wo,
+                            c: co,
+                            groups: *groups,
+                        })
+                        .with_context(|| format!("gn op at step {s}"))?,
+                        be.upload(&Tensor::new(vec![scale.len()], scale.clone()))?,
+                        be.upload(&Tensor::new(vec![bias.len()], bias.clone()))?,
+                    )),
                     None => None,
                 };
-                // missing add artifact falls back to a host-side add
-                let add = match (&res, man.ew_art(&format!("add_{ew_base}"))) {
-                    (Some(_), Some(rel)) => Some(rt.load(&rel)?),
+                // a backend without an add op (missing AOT artifact)
+                // falls back to a host-side add at dispatch; a *broken*
+                // add op (supported but failing to lower) is a hard error
+                let add_desc = OpDesc::Add { b, h: ho, w: wo, c: co };
+                let add = match &res {
+                    Some(_) if be.supports(&add_desc) => Some(
+                        be.lower_op(&add_desc)
+                            .with_context(|| format!("add op at step {s}"))?,
+                    ),
                     _ => None,
                 };
-                let act = match &step.act {
-                    Some(a) => {
-                        let rel = man
-                            .ew_art(&format!("{a}_{ew_base}"))
-                            .with_context(|| format!("act artifact {a}_{ew_base}"))?;
-                        Some(rt.load(&rel)?)
-                    }
+                let act_op = match act {
+                    Some(a) => Some(
+                        be.lower_op(&OpDesc::Activation {
+                            act: a,
+                            b,
+                            h: ho,
+                            w: wo,
+                            c: co,
+                        })
+                        .with_context(|| format!("act op at step {s}"))?,
+                    ),
                     None => None,
                 };
-                (conv, false, gn, add, act)
+                (conv, false, gn, add, act_op)
             };
             // stash captures the pre-post-op output; posts then reshape
             let (mut hc, mut wc, cc) = (ho, wo, co);
@@ -450,18 +490,20 @@ impl CompiledPlan {
             });
             let mut post = Vec::new();
             for p in &step.post {
-                let base = format!("b{b}h{hc}w{wc}c{cc}");
                 match p {
-                    Post::Attention { .. } => {
-                        let rel = man
-                            .ew_art(&format!("attn_{base}"))
-                            .context("attn artifact")?;
-                        post.push(CompiledPost::Attention(rt.load(&rel)?));
+                    Post::Attention { wqkv, wout } => {
+                        post.push(CompiledPost::Attention(
+                            be.lower_op(&OpDesc::Attention { b, h: hc, w: wc, c: cc })
+                                .with_context(|| format!("attn op at step {s}"))?,
+                            be.upload(wqkv)?,
+                            be.upload(wout)?,
+                        ));
                     }
                     Post::Upsample => {
-                        let rel =
-                            man.ew_art(&format!("up_{base}")).context("up artifact")?;
-                        post.push(CompiledPost::Upsample(rt.load(&rel)?));
+                        post.push(CompiledPost::Upsample(
+                            be.lower_op(&OpDesc::Upsample { b, h: hc, w: wc, c: cc })
+                                .with_context(|| format!("up op at step {s}"))?,
+                        ));
                         hc *= 2;
                         wc *= 2;
                     }
@@ -481,12 +523,14 @@ impl CompiledPlan {
                 },
                 concat_slot,
                 conv,
-                bias: Tensor::new(vec![co], m.bias.clone()),
+                weight: be.upload(&m.weight)?,
+                bias: be.upload(&Tensor::new(vec![co], m.bias.clone()))?,
                 fuse_res,
                 gn,
                 res,
                 add,
-                act,
+                act: act_op,
+                time_bias: step.time_bias.clone(),
                 stash_to,
                 post,
                 store_slot: slot_of.get(&step.j).copied(),
@@ -494,11 +538,32 @@ impl CompiledPlan {
             });
         }
         let head = match &plan.head {
-            Some((_, hb)) => {
-                let rel = man
-                    .ew_art(&format!("head_{}", plan.spec_name))
-                    .context("head artifact")?;
-                Some((rt.load(&rel)?, Tensor::new(vec![hb.len()], hb.clone())))
+            Some((hw, hb)) => {
+                let last = plan
+                    .steps
+                    .last()
+                    .context("cannot lower a head over an empty plan")?;
+                let (fh, fw, fc) = *shapes
+                    .get(&last.j)
+                    .context("final boundary shape unknown")?;
+                anyhow::ensure!(
+                    fc == hw.dims[0],
+                    "head input channels {fc} vs head weight {:?}",
+                    hw.dims
+                );
+                Some((
+                    be.lower_op(&OpDesc::Head {
+                        b,
+                        h: fh,
+                        w: fw,
+                        hidden: fc,
+                        classes: hb.len(),
+                        model: plan.spec_name.clone(),
+                    })
+                    .context("head op")?,
+                    be.upload(hw)?,
+                    be.upload(&Tensor::new(vec![hb.len()], hb.clone()))?,
+                ))
             }
             None => None,
         };
@@ -513,12 +578,15 @@ impl CompiledPlan {
             input_slot,
             n_slots: slot_of.len(),
             n_stash: stash_of.len(),
+            backend,
             plan,
         })
     }
 }
 
-/// Sinusoidal + MLP time embedding (host side; 32-dim — negligible).
+/// Sinusoidal + MLP time embedding (host side).  The dense layer runs on
+/// [`kernels::gemm`]; only the sinusoid construction and the swish
+/// epilogue stay scalar.
 fn temb_embed(w1: &Tensor, b1: &[f32], dim: usize, t: &Tensor) -> Vec<f32> {
     let b = t.dims[0];
     let half = dim / 2;
@@ -531,18 +599,38 @@ fn temb_embed(w1: &Tensor, b1: &[f32], dim: usize, t: &Tensor) -> Vec<f32> {
             emb[n * dim + half + i] = ang.cos();
         }
     }
-    // dense + swish
+    // dense [b, dim] @ [dim, dim] + bias, then swish
     let mut out = vec![0.0f32; b * dim];
-    for n in 0..b {
-        for o in 0..dim {
-            let mut acc = b1[o];
-            for i in 0..dim {
-                acc += emb[n * dim + i] * w1.data[i * dim + o];
-            }
-            out[n * dim + o] = acc / (1.0 + (-acc).exp());
+    kernels::gemm(b, dim, dim, &emb, &w1.data, &mut out);
+    for row in out.chunks_mut(dim) {
+        for (v, &bb) in row.iter_mut().zip(b1) {
+            let acc = *v + bb;
+            *v = acc / (1.0 + (-acc).exp());
         }
     }
     out
+}
+
+/// Per-sample time-bias injection at a span input: `bias = temb @ tw + tb`
+/// (one GEMM), broadcast-added over every spatial position (parallel per
+/// batch element).
+fn inject_time_bias(inp: &mut Tensor, temb: &[f32], tw: &Tensor, tb: &[f32]) {
+    let b = inp.dims[0];
+    let dim = tw.dims[0];
+    let cin = tw.dims[1];
+    debug_assert_eq!(inp.dims[3], cin);
+    let mut bias = vec![0.0f32; b * cin];
+    kernels::gemm(b, dim, cin, temb, &tw.data, &mut bias);
+    let hw = inp.dims[1] * inp.dims[2];
+    let threads = par::auto_threads(inp.data.len());
+    par::par_chunks_mut(&mut inp.data, hw * cin, threads, |n, chunk| {
+        let brow = &bias[n * cin..(n + 1) * cin];
+        for px in chunk.chunks_mut(cin) {
+            for ((v, &bv), &tbv) in px.iter_mut().zip(brow).zip(tb) {
+                *v += bv + tbv;
+            }
+        }
+    });
 }
 
 /// Where a step reads its input from.
@@ -555,33 +643,37 @@ enum InputSrc {
 
 struct CompiledRes {
     slot: usize,
-    /// resolved projection: (exec, bias); the projection weight is read
-    /// from the owning plan's step at dispatch
-    proj: Option<(Arc<Exec>, Tensor)>,
+    /// resolved projection: (op, uploaded weight, uploaded bias)
+    proj: Option<(OpHandle, Value, Value)>,
 }
 
 enum CompiledPost {
-    Attention(Arc<Exec>),
-    Upsample(Arc<Exec>),
+    /// (op, uploaded wqkv, uploaded wout)
+    Attention(OpHandle, Value, Value),
+    Upsample(OpHandle),
 }
 
-/// One lowered step.  Weight-scale operand tensors (merged conv weight,
-/// time-bias MLP, attention projections) are NOT duplicated here — the
-/// dispatch loop reads them from the plan step at the same index, which
-/// the `CompiledPlan`'s `Arc<Plan>` keeps alive.
+/// One lowered step: backend-resolved ops plus every operand pre-uploaded
+/// as a persistent backend [`Value`] — the dispatch loop never touches
+/// the plan's host tensors except at the genuine host points.
 struct CompiledStep {
     src: InputSrc,
     concat_slot: Option<usize>,
-    conv: Arc<Exec>,
-    /// bias materialized once at lowering (was rebuilt per dispatch)
-    bias: Tensor,
-    /// Fused format: the conv executable consumes the residual directly.
+    conv: OpHandle,
+    /// merged conv weight, uploaded once at lowering
+    weight: Value,
+    /// merged bias, uploaded once at lowering
+    bias: Value,
+    /// Fused format: the conv op consumes the residual directly.
     fuse_res: bool,
-    gn: Option<(Arc<Exec>, Tensor, Tensor)>,
+    gn: Option<(OpHandle, Value, Value)>,
     res: Option<CompiledRes>,
-    /// Eager residual add; `None` with `res` set means host-side add.
-    add: Option<Arc<Exec>>,
-    act: Option<Arc<Exec>>,
+    /// Eager residual add; `None` with `res` set means host-side add
+    /// (download both operands, add, re-upload — a counted host point).
+    add: Option<OpHandle>,
+    act: Option<OpHandle>,
+    /// time-bias injection operands (host point; stays a host op)
+    time_bias: Option<(Tensor, Vec<f32>)>,
     stash_to: Option<usize>,
     post: Vec<CompiledPost>,
     /// store the step output into this boundary slot (a later step reads it)
@@ -590,21 +682,23 @@ struct CompiledStep {
     release: Vec<usize>,
 }
 
-/// A `Plan` lowered against a runtime + manifest: straight-line dispatch
-/// over pre-resolved executables and pre-materialized operands.
+/// A `Plan` lowered against a [`Backend`]: straight-line dispatch over
+/// pre-resolved ops and pre-uploaded operands, activations flowing as
+/// backend-resident [`Value`]s.
 ///
-/// Owns its plan (`Arc<Plan>`), so it is `'static` and `Send + Sync` —
-/// a deployed network can be shared across worker threads (see
-/// [`crate::serve::Session`]).  Create with [`CompiledPlan::lower`] or
-/// [`crate::serve::Engine::lower`].
+/// Owns its plan (`Arc<Plan>`) and backend, so it is `'static` and
+/// `Send + Sync` — a deployed network can be shared across worker threads
+/// (see [`crate::serve::Session`]).  Create with [`CompiledPlan::lower`]
+/// or [`crate::serve::Engine::lower`].
 pub struct CompiledPlan {
     plan: Arc<Plan>,
+    backend: Arc<dyn Backend>,
     pub fmt: Format,
     task: Task,
     batch: usize,
     steps: Vec<CompiledStep>,
-    /// classifier head: (exec, bias); weight read from the plan
-    head: Option<(Arc<Exec>, Tensor)>,
+    /// classifier head: (op, uploaded weight, uploaded bias)
+    head: Option<(OpHandle, Value, Value)>,
     input_dims: Option<[usize; 4]>,
     /// slot for the network input, when some step's residual reads it
     input_slot: Option<usize>,
@@ -612,54 +706,18 @@ pub struct CompiledPlan {
     n_stash: usize,
 }
 
-fn run_one(
-    exec: &Exec,
-    args: &[&Tensor],
+fn run_op(
+    be: &dyn Backend,
+    op: &OpHandle,
+    args: &[&Value],
     timing: &mut Option<&mut f64>,
-) -> Result<Tensor> {
+) -> Result<Value> {
     let t0 = Instant::now();
-    let out = exec.run(args)?;
+    let out = be.run(op, args)?;
     if let Some(ms) = timing.as_deref_mut() {
         *ms += t0.elapsed().as_secs_f64() * 1e3;
     }
-    Ok(out.into_iter().next().unwrap())
-}
-
-/// A boundary value flowing through the dispatch loop: either the
-/// caller's input tensor (borrowed — never copied unless mutated) or a
-/// refcounted intermediate.  Cloning is a pointer copy either way.
-#[derive(Clone)]
-enum Val<'a> {
-    X(&'a Tensor),
-    T(Arc<Tensor>),
-}
-
-impl<'a> Val<'a> {
-    fn as_ref(&self) -> &Tensor {
-        match self {
-            Val::X(x) => x,
-            Val::T(a) => a,
-        }
-    }
-
-    /// Mutable access, copy-on-write: borrowed input and shared
-    /// intermediates are cloned only at this point.
-    fn make_mut(&mut self) -> &mut Tensor {
-        if let Val::X(x) = *self {
-            *self = Val::T(Arc::new(x.clone()));
-        }
-        match self {
-            Val::T(a) => Arc::make_mut(a),
-            Val::X(_) => unreachable!(),
-        }
-    }
-
-    fn into_tensor(self) -> Tensor {
-        match self {
-            Val::X(x) => x.clone(),
-            Val::T(a) => Arc::try_unwrap(a).unwrap_or_else(|a| (*a).clone()),
-        }
-    }
+    Ok(out)
 }
 
 impl CompiledPlan {
@@ -670,6 +728,12 @@ impl CompiledPlan {
     /// The plan this compiled form was lowered from.
     pub fn plan(&self) -> &Arc<Plan> {
         &self.plan
+    }
+
+    /// The backend this plan was lowered against (transfer counters live
+    /// here — see `Backend::uploads` / `Backend::downloads`).
+    pub fn backend(&self) -> &Arc<dyn Backend> {
+        &self.backend
     }
 
     /// Expected input tensor dims `[batch, h, w, c]` (None: empty plan).
@@ -715,121 +779,104 @@ impl CompiledPlan {
             (Some(tt), Some((w1, b1, dim))) => Some(temb_embed(w1, b1, *dim, tt)),
             _ => None,
         };
-        let mut slots: Vec<Option<Val<'_>>> = vec![None; self.n_slots];
-        let mut stash: Vec<Option<Val<'_>>> = vec![None; self.n_stash];
-        let mut cur = Val::X(x);
+        let be = &*self.backend;
+        let mut slots: Vec<Option<Value>> = vec![None; self.n_slots];
+        let mut stash: Vec<Option<Value>> = vec![None; self.n_stash];
+        // the single steady-state upload: the network input
+        let mut cur: Value = be.upload(x)?;
         if let Some(s0) = self.input_slot {
             slots[s0] = Some(cur.clone());
         }
-        let b = self.batch;
 
-        // compiled steps are 1:1 with plan steps (lowering never skips);
-        // the plan step carries the weight-scale operand tensors
-        debug_assert_eq!(self.steps.len(), self.plan.steps.len());
-        for (step, pstep) in self.steps.iter().zip(&self.plan.steps) {
-            let mut input: Val<'_> = match step.src {
+        for step in &self.steps {
+            let mut input: Value = match step.src {
                 InputSrc::Cur => cur.clone(),
                 InputSrc::Boundary(s) => {
                     slots[s].clone().context("boundary not materialized")?
                 }
             };
-            // skip-concat (host; see DESIGN.md §4)
+            // skip-concat — genuine host point (see DESIGN.md §4): both
+            // operands come down, the concat goes back up
             if let Some(cs) = step.concat_slot {
                 let other = stash[cs].as_ref().context("missing stash")?;
-                input = Val::T(Arc::new(concat_channels(input.as_ref(), other.as_ref())));
+                let joined =
+                    concat_channels(&be.download(&input)?, &be.download(other)?);
+                input = be.upload(&joined)?;
             }
-            // time-bias injection (host; 32-dim MLP output)
-            if let Some((tw, tb)) = &pstep.time_bias {
+            // time-bias injection — host point (per-sample GEMM + add)
+            if let Some((tw, tb)) = &step.time_bias {
                 let temb = temb.as_ref().context("t required")?;
-                let dim = tw.dims[0];
-                let cin = tw.dims[1];
-                let inp = input.make_mut();
-                for n in 0..b {
-                    let mut bias = vec![0.0f32; cin];
-                    for o in 0..cin {
-                        let mut acc = tb[o];
-                        for i in 0..dim {
-                            acc += temb[n * dim + i] * tw.data[i * cin + o];
-                        }
-                        bias[o] = acc;
-                    }
-                    let hw = inp.dims[1] * inp.dims[2];
-                    for p in 0..hw {
-                        for o in 0..cin {
-                            let idx = (n * hw + p) * cin + o;
-                            inp.data[idx] += bias[o];
-                        }
-                    }
-                }
+                let mut inp = be.download(&input)?;
+                inject_time_bias(&mut inp, temb, tw, tb);
+                input = be.upload(&inp)?;
             }
-            // resolve the residual input (shape = conv output shape);
-            // the projection weight lives in the plan step
-            let res_t: Option<Val<'_>> = match &step.res {
+            // resolve the residual input (shape = conv output shape)
+            let res_v: Option<Value> = match &step.res {
                 Some(r) => {
                     let base = slots[r.slot]
                         .clone()
                         .context("res boundary not materialized")?;
-                    let pproj = pstep.res.as_ref().and_then(|(_, p)| p.as_ref());
-                    Some(match (&r.proj, pproj) {
-                        (Some((exec, pb)), Some(p)) => Val::T(Arc::new(run_one(
-                            exec,
-                            &[base.as_ref(), &p.w, pb],
-                            &mut timing,
-                        )?)),
-                        _ => base,
+                    Some(match &r.proj {
+                        Some((op, pw, pb)) => {
+                            run_op(be, op, &[&base, pw, pb], &mut timing)?
+                        }
+                        None => base,
                     })
                 }
                 None => None,
             };
 
-            let weight = &pstep.merged.weight;
-            let mut y = match (&res_t, step.fuse_res) {
-                (Some(r), true) => run_one(
+            let mut y = match (&res_v, step.fuse_res) {
+                (Some(r), true) => run_op(
+                    be,
                     &step.conv,
-                    &[input.as_ref(), weight, &step.bias, r.as_ref()],
+                    &[&input, &step.weight, &step.bias, r],
                     &mut timing,
                 )?,
-                _ => run_one(
+                _ => run_op(
+                    be,
                     &step.conv,
-                    &[input.as_ref(), weight, &step.bias],
+                    &[&input, &step.weight, &step.bias],
                     &mut timing,
                 )?,
             };
             drop(input);
-            if let Some((exec, scale, bias)) = &step.gn {
-                y = run_one(exec, &[&y, scale, bias], &mut timing)?;
+            if let Some((op, scale, bias)) = &step.gn {
+                y = run_op(be, op, &[&y, scale, bias], &mut timing)?;
             }
             if !step.fuse_res {
-                if let Some(r) = &res_t {
+                if let Some(r) = &res_v {
                     match &step.add {
-                        Some(exec) => {
-                            y = run_one(exec, &[&y, r.as_ref()], &mut timing)?
-                        }
+                        Some(op) => y = run_op(be, op, &[&y, r], &mut timing)?,
                         None => {
-                            for (a, bb) in y.data.iter_mut().zip(&r.as_ref().data) {
-                                *a += *bb;
+                            // host-add fallback (no add op on this
+                            // backend) — a counted host point
+                            let mut a = be.download(&y)?;
+                            let rb = be.download(r)?;
+                            for (av, bv) in a.data.iter_mut().zip(&rb.data) {
+                                *av += *bv;
                             }
+                            y = be.upload(&a)?;
                         }
                     }
                 }
             }
-            if let Some(exec) = &step.act {
-                y = run_one(exec, &[&y], &mut timing)?;
+            if let Some(op) = &step.act {
+                y = run_op(be, op, &[&y], &mut timing)?;
             }
-            cur = Val::T(Arc::new(y));
+            cur = y;
             if let Some(si) = step.stash_to {
                 stash[si] = Some(cur.clone());
             }
-            for (p, pp) in step.post.iter().zip(&pstep.post) {
-                cur = Val::T(Arc::new(match (p, pp) {
-                    (CompiledPost::Attention(exec), Post::Attention { wqkv, wout }) => {
-                        run_one(exec, &[cur.as_ref(), wqkv, wout], &mut timing)?
+            for p in &step.post {
+                cur = match p {
+                    CompiledPost::Attention(op, wqkv, wout) => {
+                        run_op(be, op, &[&cur, wqkv, wout], &mut timing)?
                     }
-                    (CompiledPost::Upsample(exec), _) => {
-                        run_one(exec, &[cur.as_ref()], &mut timing)?
+                    CompiledPost::Upsample(op) => {
+                        run_op(be, op, &[&cur], &mut timing)?
                     }
-                    _ => unreachable!("compiled post order diverged from plan"),
-                }));
+                };
             }
             if let Some(slot) = step.store_slot {
                 slots[slot] = Some(cur.clone());
@@ -839,24 +886,16 @@ impl CompiledPlan {
             }
         }
 
-        // classifier head (weight from the plan, bias materialized)
-        if let Some((exec, hb)) = &self.head {
-            let (hw, _) = self
-                .plan
-                .head
-                .as_ref()
-                .context("compiled head without plan head")?;
-            cur = Val::T(Arc::new(run_one(
-                exec,
-                &[cur.as_ref(), hw, hb],
-                &mut timing,
-            )?));
+        if let Some((op, hw, hb)) = &self.head {
+            cur = run_op(be, op, &[&cur, hw, hb], &mut timing)?;
         }
-        Ok(cur.into_tensor())
+        // the single steady-state download: the network output
+        be.download(&cur)
     }
 
-    /// End-to-end latency with the App. C protocol.
-    pub fn measure(&self, warmup: usize, iters: usize) -> Result<f64> {
+    /// End-to-end latency with the App. C protocol (shared
+    /// [`crate::runtime::measure_protocol`] implementation).
+    pub fn measure(&self, warmup: usize, iters: usize) -> Result<LatencyStats> {
         let dims = self
             .input_dims
             .context("cannot measure an empty plan (no steps)")?;
@@ -867,32 +906,31 @@ impl CompiledPlan {
             Task::Diffusion => Some(Tensor::full(&[self.batch], 500.0)),
             Task::Classify => None,
         };
-        for _ in 0..warmup {
-            self.forward(&x, t.as_ref())?;
-        }
-        let mut times = Vec::with_capacity(iters);
-        for _ in 0..iters {
-            let t0 = Instant::now();
-            self.forward(&x, t.as_ref())?;
-            times.push(t0.elapsed().as_secs_f64() * 1e3);
-        }
-        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        Ok(times[times.len() / 2])
+        crate::runtime::measure_protocol(warmup, iters, || {
+            self.forward(&x, t.as_ref()).map(|_| ())
+        })
     }
 }
 
-/// Channel-dim concat of two NHWC tensors (host side).
+/// Channel-dim concat of two NHWC tensors (host side) — parallel
+/// row-block copies via [`crate::util::par`].
 pub fn concat_channels(a: &Tensor, b: &Tensor) -> Tensor {
     assert_eq!(&a.dims[..3], &b.dims[..3]);
     let (n, h, w, ca) = (a.dims[0], a.dims[1], a.dims[2], a.dims[3]);
     let cb = b.dims[3];
-    let mut out = Tensor::zeros(&[n, h, w, ca + cb]);
-    for i in 0..n * h * w {
-        out.data[i * (ca + cb)..i * (ca + cb) + ca]
-            .copy_from_slice(&a.data[i * ca..(i + 1) * ca]);
-        out.data[i * (ca + cb) + ca..(i + 1) * (ca + cb)]
-            .copy_from_slice(&b.data[i * cb..(i + 1) * cb]);
-    }
+    let cc = ca + cb;
+    let rows = n * h * w;
+    let mut out = Tensor::zeros(&[n, h, w, cc]);
+    let threads = par::auto_threads(out.data.len());
+    let rows_per = rows.div_ceil(threads * 4).max(1);
+    par::par_chunks_mut(&mut out.data, rows_per * cc, threads, |ci, chunk| {
+        let r0 = ci * rows_per;
+        for (i, px) in chunk.chunks_mut(cc).enumerate() {
+            let r = r0 + i;
+            px[..ca].copy_from_slice(&a.data[r * ca..(r + 1) * ca]);
+            px[ca..].copy_from_slice(&b.data[r * cb..(r + 1) * cb]);
+        }
+    });
     out
 }
 
@@ -916,5 +954,72 @@ mod tests {
         let c = concat_channels(&a, &b);
         assert_eq!(c.dims, vec![1, 1, 2, 3]);
         assert_eq!(c.data, vec![1.0, 2.0, 9.0, 3.0, 4.0, 8.0]);
+    }
+
+    #[test]
+    fn time_bias_gemm_matches_scalar_reference() {
+        let mut rng = crate::util::rng::Rng::new(41);
+        let (b, h, w, cin, dim) = (2usize, 3usize, 3usize, 5usize, 4usize);
+        let tw = Tensor::new(
+            vec![dim, cin],
+            (0..dim * cin).map(|_| rng.normal()).collect(),
+        );
+        let tb: Vec<f32> = (0..cin).map(|_| rng.normal()).collect();
+        let temb: Vec<f32> = (0..b * dim).map(|_| rng.normal()).collect();
+        let x0 = Tensor::new(
+            vec![b, h, w, cin],
+            (0..b * h * w * cin).map(|_| rng.normal()).collect(),
+        );
+        // scalar reference (the pre-GEMM implementation)
+        let mut want = x0.clone();
+        for n in 0..b {
+            for o in 0..cin {
+                let mut acc = tb[o];
+                for i in 0..dim {
+                    acc += temb[n * dim + i] * tw.data[i * cin + o];
+                }
+                for p in 0..h * w {
+                    want.data[(n * h * w + p) * cin + o] += acc;
+                }
+            }
+        }
+        let mut got = x0.clone();
+        inject_time_bias(&mut got, &temb, &tw, &tb);
+        assert!(got.max_abs_diff(&want) < 1e-4, "diff {}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn temb_embed_gemm_matches_scalar_reference() {
+        let mut rng = crate::util::rng::Rng::new(42);
+        let (b, dim) = (3usize, 8usize);
+        let w1 = Tensor::new(
+            vec![dim, dim],
+            (0..dim * dim).map(|_| rng.normal()).collect(),
+        );
+        let b1: Vec<f32> = (0..dim).map(|_| rng.normal()).collect();
+        let t = Tensor::new(vec![b], vec![0.0, 17.0, 500.0]);
+        let got = temb_embed(&w1, &b1, dim, &t);
+        // scalar reference
+        let half = dim / 2;
+        let mut emb = vec![0.0f32; b * dim];
+        for n in 0..b {
+            for i in 0..half {
+                let freq = (-(10000.0f32.ln()) * i as f32 / half as f32).exp();
+                let ang = t.data[n] * freq;
+                emb[n * dim + i] = ang.sin();
+                emb[n * dim + half + i] = ang.cos();
+            }
+        }
+        for n in 0..b {
+            for o in 0..dim {
+                let mut acc = b1[o];
+                for i in 0..dim {
+                    acc += emb[n * dim + i] * w1.data[i * dim + o];
+                }
+                let want = acc / (1.0 + (-acc).exp());
+                let diff = (got[n * dim + o] - want).abs();
+                assert!(diff < 1e-4, "({n},{o}) diff {diff}");
+            }
+        }
     }
 }

@@ -26,10 +26,10 @@ pub fn fig1(ctx: &Ctx) -> Result<()> {
     let mut rng = Rng::new(0xf19);
     let mut lat_k = |k: usize| -> Result<Option<f64>> {
         let sig = sig_str(b, h, w, c, c, k, 1, false);
-        let Some(rel) = ctx.man.conv_art(&sig, "plain") else {
+        let Some(rel) = ctx.man().conv_art(&sig, "plain") else {
             return Ok(None); // kernel size unreachable by any model span
         };
-        let exec = ctx.rt.load(&rel)?;
+        let exec = ctx.rt().load(&rel)?;
         let n = b * h * w * c;
         let x = Tensor::new(vec![b, h, w, c], (0..n).map(|_| rng.normal()).collect());
         let wt = Tensor::new(vec![c, c, k, k],

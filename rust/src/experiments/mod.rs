@@ -15,49 +15,73 @@ use crate::runtime::Runtime;
 use crate::serve::Engine;
 use crate::tables::LatencyMode;
 
-/// Shared experiment context: runtime, manifest, output paths.
+/// Shared experiment context: the deployment engine, output paths, and
+/// the pipeline config.  `Ctx::new` opens the PJRT backend over an
+/// artifacts directory; `Ctx::new_host` runs on the native host backend
+/// (no artifacts, no XLA — `serve` / `profile` with `--backend host`).
 pub struct Ctx {
-    pub rt: Arc<Runtime>,
-    pub man: Arc<Manifest>,
+    engine: Engine,
     pub repo: PathBuf,
     pub cfg: PipelineCfg,
 }
 
+/// Apply the env-driven config knobs (LM_FAST / LM_MEASURED /
+/// LM_PRETRAIN / LM_FINETUNE) shared by every backend.
+fn tune_cfg(mut cfg: PipelineCfg) -> PipelineCfg {
+    // CI / quick mode can force the analytical latency model.
+    // Explicit LM_PRETRAIN / LM_FINETUNE override the fast caps, and
+    // LM_MEASURED (the `--measured` flag) pins measured latency even
+    // under LM_FAST.
+    if std::env::var("LM_FAST").is_ok() {
+        cfg.build.mode = LatencyMode::Analytical;
+        cfg.pretrain_steps = cfg.pretrain_steps.min(60);
+        cfg.finetune_steps = cfg.finetune_steps.min(20);
+        cfg.build.proxy_steps = cfg.build.proxy_steps.min(2);
+        cfg.build.iters = cfg.build.iters.min(5);
+        cfg.lat_iters = cfg.lat_iters.min(5);
+    }
+    if std::env::var("LM_MEASURED").is_ok() {
+        cfg.build.mode = LatencyMode::Measured;
+    }
+    if let Ok(v) = std::env::var("LM_PRETRAIN") {
+        if let Ok(n) = v.parse() {
+            cfg.pretrain_steps = n;
+        }
+    }
+    if let Ok(v) = std::env::var("LM_FINETUNE") {
+        if let Ok(n) = v.parse() {
+            cfg.finetune_steps = n;
+        }
+    }
+    cfg
+}
+
 impl Ctx {
-    pub fn new(artifacts: &std::path::Path, repo: PathBuf, mut cfg: PipelineCfg) -> Result<Ctx> {
+    pub fn new(artifacts: &std::path::Path, repo: PathBuf, cfg: PipelineCfg) -> Result<Ctx> {
         let rt = Arc::new(Runtime::new(artifacts)?);
         let man = Arc::new(Manifest::load(artifacts)?);
-        // CI / quick mode can force the analytical latency model.
-        // Explicit LM_PRETRAIN / LM_FINETUNE override the fast caps, and
-        // LM_MEASURED (the `--measured` flag) pins measured latency even
-        // under LM_FAST.
-        if std::env::var("LM_FAST").is_ok() {
-            cfg.build.mode = LatencyMode::Analytical;
-            cfg.pretrain_steps = cfg.pretrain_steps.min(60);
-            cfg.finetune_steps = cfg.finetune_steps.min(20);
-            cfg.build.proxy_steps = cfg.build.proxy_steps.min(2);
-            cfg.build.iters = cfg.build.iters.min(5);
-            cfg.lat_iters = cfg.lat_iters.min(5);
-        }
-        if std::env::var("LM_MEASURED").is_ok() {
-            cfg.build.mode = LatencyMode::Measured;
-        }
-        if let Ok(v) = std::env::var("LM_PRETRAIN") {
-            if let Ok(n) = v.parse() {
-                cfg.pretrain_steps = n;
-            }
-        }
-        if let Ok(v) = std::env::var("LM_FINETUNE") {
-            if let Ok(n) = v.parse() {
-                cfg.finetune_steps = n;
-            }
-        }
-        Ok(Ctx { rt, man, repo, cfg })
+        Ok(Ctx { engine: Engine::new(rt, man), repo, cfg: tune_cfg(cfg) })
     }
 
-    /// Owning deployment handle over this context's runtime + manifest.
+    /// Context over the native host backend — no artifacts directory and
+    /// no PJRT client; only deployment-side commands work.
+    pub fn new_host(repo: PathBuf, cfg: PipelineCfg) -> Ctx {
+        Ctx { engine: Engine::host(), repo, cfg: tune_cfg(cfg) }
+    }
+
+    /// Owning deployment handle (cheap clone).
     pub fn engine(&self) -> Engine {
-        Engine::new(self.rt.clone(), self.man.clone())
+        self.engine.clone()
+    }
+
+    /// The PJRT runtime (panics on a host-backend context).
+    pub fn rt(&self) -> &Arc<Runtime> {
+        self.engine.runtime()
+    }
+
+    /// The artifact manifest (panics on a host-backend context).
+    pub fn man(&self) -> &Arc<Manifest> {
+        self.engine.manifest()
     }
 
     pub fn experiments_md(&self) -> PathBuf {

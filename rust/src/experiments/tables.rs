@@ -344,14 +344,14 @@ pub fn table10(ctx: &Ctx) -> Result<()> {
     let teacher_pipe = ctx.pipeline("mnv2ish-1.0")?;
     let student = ctx.engine().load_model("mnv2ish-0.75")?;
     let rel = ctx
-        .man
+        .man()
         .json
         .req("kd")
         .get("mnv2ish-0.75_from_1.0")
         .and_then(|j| j.as_str())
         .context("kd artifact missing (needs mnv2ish-1.0 + -0.75 in aot)")?
         .to_string();
-    let kd = ctx.rt.load(&rel)?;
+    let kd = ctx.rt().load(&rel)?;
 
     // KD training loop: teacher weights fixed, student trained from scratch
     // (the paper's point: same budget, distillation must train from init).
@@ -383,7 +383,7 @@ pub fn table10(ctx: &Ctx) -> Result<()> {
                                       ctx.cfg.eval_batches)?;
     let splan = std::sync::Arc::new(crate::exec::Plan::original(&student.spec, &sparams)?);
     let slat = ctx.engine().measure(&splan, crate::exec::Format::Eager,
-                                    ctx.cfg.lat_warmup, ctx.cfg.lat_iters)?;
+                                    ctx.cfg.lat_warmup, ctx.cfg.lat_iters)?.p50_ms;
 
     let mut pipe = teacher_pipe;
     let mut t = report::compression_table(

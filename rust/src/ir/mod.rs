@@ -15,6 +15,8 @@ use std::path::Path;
 
 use crate::util::json::Json;
 
+pub mod synth;
+
 /// Largest merged kernel size considered anywhere in the stack.
 /// MUST match `python/compile/specs.py::K_MAX` (cross-checked by
 /// `tests/ir_python_parity.rs` against the artifact manifest).

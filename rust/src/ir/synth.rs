@@ -1,0 +1,215 @@
+//! Synthetic specs built directly in Rust — deterministic networks (spec
+//! + flat parameter vector) that need **no** Python AOT step, so the host
+//! backend can lower, serve, and measure real plans from a fresh offline
+//! checkout.  The topologies exercise the execution paths that matter:
+//! chains (the residency-counter case), residual blocks with and without
+//! strided 1x1 projections (boundary slots + external adds), and strides
+//! (SAME-padding geometry).
+//!
+//! Parameters are He-initialized from a seeded [`Rng`], registered under
+//! the same names the AOT specs use (`conv{l}.w` / `conv{l}.b` /
+//! `proj{l}.w` / `head.w` ...), so `Plan::original`,
+//! `Plan::from_solution` and `merge::span_merge` work unchanged.
+
+use crate::ir::{AddProj, ConvLayer, ParamEntry, Spec, Task};
+use crate::util::rng::Rng;
+
+const NUM_CLASSES: usize = 10;
+
+struct Builder {
+    rng: Rng,
+    convs: Vec<ConvLayer>,
+    params: Vec<ParamEntry>,
+    flat: Vec<f32>,
+    /// geometry at each boundary: bounds[i] = (h, w, c) after layer i
+    bounds: Vec<(usize, usize, usize)>,
+    batch: usize,
+}
+
+impl Builder {
+    fn new(h: usize, c: usize, batch: usize, seed: u64) -> Builder {
+        Builder {
+            rng: Rng::new(seed),
+            convs: Vec::new(),
+            params: Vec::new(),
+            flat: Vec::new(),
+            bounds: vec![(h, h, c)],
+            batch,
+        }
+    }
+
+    fn push_param(&mut self, name: String, shape: Vec<usize>, scale: f32) {
+        let size: usize = shape.iter().product();
+        self.params.push(ParamEntry { name, shape, offset: self.flat.len(), size });
+        for _ in 0..size {
+            let v = self.rng.normal() * scale;
+            self.flat.push(v);
+        }
+    }
+
+    /// Append a conv layer; `add_from` is the layer index whose *input*
+    /// boundary feeds the skip (a 1x1 projection is registered
+    /// automatically when geometry disagrees).
+    fn conv(&mut self, cout: usize, k: usize, stride: usize, act: &str, add_from: Option<usize>) {
+        let idx = self.convs.len() + 1;
+        let (h_in, w_in, cin) = *self.bounds.last().unwrap();
+        let scale = (2.0 / (cin * k * k) as f32).sqrt();
+        self.push_param(format!("conv{idx}.w"), vec![cout, cin, k, k], scale);
+        self.push_param(format!("conv{idx}.b"), vec![cout], 0.01);
+        let (h_out, w_out) = (h_in.div_ceil(stride), w_in.div_ceil(stride));
+        let add_proj = add_from.and_then(|af| {
+            let (hs, _, cs) = self.bounds[af - 1];
+            if cs == cout && hs == h_out {
+                None
+            } else {
+                assert_eq!(hs % h_out, 0, "skip stride must divide evenly");
+                let pstride = hs / h_out;
+                let pscale = (2.0 / cs as f32).sqrt();
+                self.push_param(format!("proj{af}.w"), vec![cout, cs, 1, 1], pscale);
+                self.push_param(format!("proj{af}.b"), vec![cout], 0.01);
+                Some(AddProj { k: 1, stride: pstride, cin: cs, cout })
+            }
+        });
+        self.convs.push(ConvLayer {
+            idx,
+            cin,
+            cout,
+            k,
+            stride,
+            depthwise: false,
+            h_in,
+            w_in,
+            act: act.to_string(),
+            act_gated: true,
+            conv_gated: idx != 1, // stem is irreducible
+            barrier_after: false,
+            barrier_reason: String::new(),
+            add_from,
+            add_proj,
+            concat_from: None,
+            stash_as: None,
+            gn: false,
+            gn_groups: 0,
+            time_bias: false,
+        });
+        self.bounds.push((h_out, w_out, cout));
+    }
+
+    fn finish(mut self, name: &str, h: usize, c: usize) -> (Spec, Vec<f32>) {
+        // sigma_L = id, pristine (mirrors the AOT classify specs)
+        let last = self.convs.last_mut().expect("at least one layer");
+        last.act = "none".to_string();
+        last.act_gated = false;
+        let head_hidden = self.bounds.last().unwrap().2;
+        let hscale = (1.0 / head_hidden as f32).sqrt();
+        self.push_param("head.w".to_string(), vec![head_hidden, NUM_CLASSES], hscale);
+        self.push_param("head.b".to_string(), vec![NUM_CLASSES], 0.01);
+        let spec = Spec {
+            name: name.to_string(),
+            task: Task::Classify,
+            h,
+            w: h,
+            c,
+            batch: self.batch,
+            num_classes: NUM_CLASSES,
+            head_hidden,
+            time_dim: 0,
+            param_count: self.flat.len(),
+            convs: self.convs,
+            params: self.params,
+        };
+        (spec, self.flat)
+    }
+}
+
+/// Pure chain classifier: `depth` 3x3 convs (one stride-2 in the middle),
+/// no residuals — every boundary is consumed by exactly the next step, so
+/// a device-resident forward is exactly one upload + one download.
+pub fn chain(name: &str, depth: usize, c: usize, h: usize, batch: usize) -> (Spec, Vec<f32>) {
+    assert!(depth >= 2);
+    let mut b = Builder::new(h, 3, batch, 0x5e_11 ^ depth as u64);
+    b.conv(c, 3, 1, "relu", None);
+    for l in 1..depth {
+        let stride = if l == depth / 2 { 2 } else { 1 };
+        b.conv(c, 3, stride, "relu", None);
+    }
+    b.finish(name, h, 3)
+}
+
+/// ResNet-style classifier: a stem plus `blocks` two-conv residual
+/// blocks; every other block is strided and channel-doubling (its skip
+/// goes through a 1x1 projection) — exercises boundary slots, external
+/// adds, and projection dispatches.
+pub fn resnet(name: &str, blocks: usize, c0: usize, h: usize, batch: usize) -> (Spec, Vec<f32>) {
+    assert!(blocks >= 1);
+    let mut b = Builder::new(h, 3, batch, 0x4e57 ^ blocks as u64);
+    b.conv(c0, 3, 1, "relu", None);
+    let mut c = c0;
+    for bi in 0..blocks {
+        let (stride, cout) = if bi % 2 == 1 { (2, c * 2) } else { (1, c) };
+        let first = b.convs.len() + 1;
+        b.conv(cout, 3, stride, "relu", None);
+        b.conv(cout, 3, 1, "relu", Some(first));
+        c = cout;
+    }
+    b.finish(name, h, 3)
+}
+
+/// Named synthetic specs for the CLI / benches / tests.
+pub fn by_name(name: &str) -> Option<(Spec, Vec<f32>)> {
+    match name {
+        "hostchain" => Some(chain(name, 8, 24, 16, 8)),
+        "hostchain-tiny" => Some(chain(name, 4, 6, 8, 2)),
+        "hostnet" => Some(resnet(name, 4, 16, 16, 8)),
+        "hostnet-tiny" => Some(resnet(name, 2, 8, 8, 2)),
+        _ => None,
+    }
+}
+
+/// The names `by_name` accepts (usage/docs).
+pub const NAMES: [&str; 4] = ["hostnet", "hostnet-tiny", "hostchain", "hostchain-tiny"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_spec_is_consistent() {
+        let (spec, flat) = by_name("hostchain-tiny").unwrap();
+        assert_eq!(spec.len(), 4);
+        assert_eq!(spec.param_count, flat.len());
+        // geometry threads through: each layer's input is the previous output
+        for l in 2..=spec.len() {
+            let prev = spec.conv(l - 1);
+            let cur = spec.conv(l);
+            assert_eq!(cur.h_in, prev.h_out(), "layer {l} geometry");
+            assert_eq!(cur.cin, prev.cout, "layer {l} channels");
+        }
+        assert_eq!(spec.head_hidden, spec.conv(spec.len()).cout);
+        assert!(spec.convs.iter().all(|c| c.add_from.is_none()));
+    }
+
+    #[test]
+    fn resnet_spec_has_projected_and_identity_skips() {
+        let (spec, flat) = by_name("hostnet").unwrap();
+        assert_eq!(spec.param_count, flat.len());
+        let adds: Vec<_> = spec.convs.iter().filter(|c| c.add_from.is_some()).collect();
+        assert_eq!(adds.len(), 4);
+        assert!(adds.iter().any(|c| c.add_proj.is_some()), "strided block needs a proj");
+        assert!(adds.iter().any(|c| c.add_proj.is_none()), "identity skip expected");
+        // every registered param is addressable through the spec
+        for p in &spec.params {
+            assert_eq!(spec.param_slice(&flat, &p.name).len(), p.size);
+        }
+        // skip sources must be legal span boundaries for the greedy cover
+        assert_eq!(spec.segments(), vec![(1, spec.len())]);
+    }
+
+    #[test]
+    fn unknown_name_is_none() {
+        assert!(by_name("nope").is_none());
+        for n in NAMES {
+            assert!(by_name(n).is_some(), "{n}");
+        }
+    }
+}

@@ -1,5 +1,10 @@
-//! Host compute kernels — cache-blocked parallel f32 GEMM and an
-//! im2col-based VALID convolution.
+//! Host compute kernels — cache-blocked parallel f32 GEMM, an
+//! im2col-based VALID convolution, and the full op set the native host
+//! backend (`runtime::HostBackend`) needs to execute a lowered plan with
+//! zero XLA dependency: SAME-padded (optionally depthwise) conv, the
+//! fused bias+activation+residual epilogue, group norm, 2x nearest
+//! upsampling, single-head spatial attention, and the mean-pool + dense
+//! classifier head.
 //!
 //! This is the deployment-time *host* hot path: the merge algebra
 //! (`crate::merge`) composes span kernels out of per-tap matrix multiplies
@@ -14,7 +19,8 @@
 //! kernels are OIHW, everything row-major f32 (`util::tensor::Tensor`).
 //! The naive reference implementations are retained as test oracles
 //! ([`conv2d_valid_ref`], and `merge::merge_kernels_ref`) and as the
-//! baseline side of `benches/merge_ops.rs`.
+//! baseline side of `benches/merge_ops.rs`; the host-backend op variants
+//! are pinned against naive oracles by `tests/host_backend.rs`.
 
 use crate::util::par;
 use crate::util::tensor::Tensor;
@@ -180,6 +186,336 @@ pub fn conv2d_valid_ref(x: &Tensor, w: &Tensor, stride: usize) -> Tensor {
     y
 }
 
+// ---------------------------------------------------------------------------
+// Host-backend op set (runtime::HostBackend dispatches onto these)
+// ---------------------------------------------------------------------------
+
+/// Activation kinds the deployment stack knows — mirrors the AOT conv
+/// artifact variants (`fa_relu` / `fa_swish` / `far_*`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Act {
+    Relu,
+    Swish,
+}
+
+impl Act {
+    /// The artifact-variant spelling ("relu" / "swish").
+    pub fn name(&self) -> &'static str {
+        match self {
+            Act::Relu => "relu",
+            Act::Swish => "swish",
+        }
+    }
+
+    /// Parse the spec's activation string; "none" is not an `Act` — model
+    /// it as `Option<Act>::None` at the call site.
+    pub fn parse(s: &str) -> Option<Act> {
+        match s {
+            "relu" => Some(Act::Relu),
+            "swish" => Some(Act::Swish),
+            _ => None,
+        }
+    }
+
+    #[inline]
+    pub fn apply(&self, x: f32) -> f32 {
+        match self {
+            Act::Relu => x.max(0.0),
+            Act::Swish => x / (1.0 + (-x).exp()),
+        }
+    }
+}
+
+/// XLA/TF "SAME" padding split for one spatial dim: total padding is
+/// `max((ceil(n/s) - 1) * s + k - n, 0)`, low half rounded down.
+fn same_pad(n: usize, k: usize, stride: usize) -> (usize, usize) {
+    let out = n.div_ceil(stride);
+    let tot = ((out - 1) * stride + k).saturating_sub(n);
+    (tot / 2, tot - tot / 2)
+}
+
+/// Zero-pad NHWC spatially (parallel per-batch row copies).
+fn pad2d(x: &Tensor, ph: (usize, usize), pw: (usize, usize)) -> Tensor {
+    let (bn, h, wd, c) = (x.dims[0], x.dims[1], x.dims[2], x.dims[3]);
+    let (hp, wp) = (h + ph.0 + ph.1, wd + pw.0 + pw.1);
+    let mut out = Tensor::zeros(&[bn, hp, wp, c]);
+    let plane = hp * wp * c;
+    let threads = par::auto_threads(out.data.len());
+    par::par_chunks_mut(&mut out.data, plane, threads, |n, dst| {
+        for i in 0..h {
+            let src = ((n * h + i) * wd) * c;
+            let d0 = ((ph.0 + i) * wp + pw.0) * c;
+            dst[d0..d0 + wd * c].copy_from_slice(&x.data[src..src + wd * c]);
+        }
+    });
+    out
+}
+
+/// SAME conv on host tensors, matching the AOT `conv` artifacts exactly:
+/// `x` NHWC, `w` OIHW (`[C, 1, k, k]` when `depthwise`), output spatial
+/// dims `ceil(in / stride)`.  Dense goes through im2col + GEMM; depthwise
+/// runs a direct tap-accumulated kernel (expanding to a diagonal dense
+/// kernel would be CxC memory for C useful rows).
+pub fn conv2d_same(x: &Tensor, w: &Tensor, stride: usize, depthwise: bool) -> Tensor {
+    let (h, wd) = (x.dims[1], x.dims[2]);
+    let k = w.dims[2];
+    let ph = same_pad(h, k, stride);
+    let pw = same_pad(wd, k, stride);
+    let padded;
+    let xr = if ph.0 + ph.1 + pw.0 + pw.1 == 0 {
+        x
+    } else {
+        padded = pad2d(x, ph, pw);
+        &padded
+    };
+    if depthwise {
+        depthwise_conv2d_valid(xr, w, stride)
+    } else {
+        conv2d_valid(xr, w, stride)
+    }
+}
+
+/// VALID depthwise conv: `x` NHWC `[B, H, W, C]`, `w` `[C, 1, k, k]`.
+/// Per tap, the inner loop is a contiguous fused multiply-add over the
+/// channel dim; parallel over output-row blocks.
+fn depthwise_conv2d_valid(x: &Tensor, w: &Tensor, stride: usize) -> Tensor {
+    let (bn, h, wd, c) = (x.dims[0], x.dims[1], x.dims[2], x.dims[3]);
+    let (cw, one, k) = (w.dims[0], w.dims[1], w.dims[2]);
+    assert_eq!(one, 1, "depthwise kernel must be [C,1,k,k]");
+    assert_eq!(cw, c, "channel mismatch: x {:?} vs w {:?}", x.dims, w.dims);
+    let ho = (h - k) / stride + 1;
+    let wo = (wd - k) / stride + 1;
+    // weight transposed once to tap-major [k*k, c] so the inner loop is
+    // contiguous over channels
+    let mut wt = vec![0.0f32; k * k * c];
+    for ch in 0..c {
+        for a in 0..k {
+            for b2 in 0..k {
+                wt[(a * k + b2) * c + ch] = w.data[(ch * k + a) * k + b2];
+            }
+        }
+    }
+    let mut y = Tensor::zeros(&[bn, ho, wo, c]);
+    let rows = bn * ho;
+    let threads = gemm_threads(2 * rows * wo * c * k * k);
+    let rows_per = rows.div_ceil(threads * 4).max(1);
+    par::par_chunks_mut(&mut y.data, rows_per * wo * c, threads, |ci, chunk| {
+        let r0 = ci * rows_per;
+        for (ri, drow) in chunk.chunks_mut(wo * c).enumerate() {
+            let row = r0 + ri;
+            let n = row / ho;
+            let p = row % ho;
+            for a in 0..k {
+                let iy = p * stride + a;
+                for b2 in 0..k {
+                    let wtap = &wt[(a * k + b2) * c..][..c];
+                    for q in 0..wo {
+                        let src = ((n * h + iy) * wd + q * stride + b2) * c;
+                        let xrow = &x.data[src..src + c];
+                        let d = &mut drow[q * c..(q + 1) * c];
+                        for ((dv, &xv), &wv) in d.iter_mut().zip(xrow).zip(wtap) {
+                            *dv += xv * wv;
+                        }
+                    }
+                }
+            }
+        }
+    });
+    y
+}
+
+/// Fused conv epilogue — `y = act(y + bias (+ res))`, in place, parallel
+/// over pixel blocks.  This is the host twin of the `fa_*` / `far_*`
+/// fused artifact variants (one pass over the output instead of three).
+pub fn bias_act_res(y: &mut Tensor, bias: &[f32], act: Option<Act>, res: Option<&Tensor>) {
+    let c = *y.dims.last().expect("bias_act_res needs a channel dim");
+    assert_eq!(bias.len(), c, "bias length vs channel dim");
+    if let Some(r) = res {
+        assert_eq!(r.dims, y.dims, "residual shape mismatch");
+    }
+    let rows = y.data.len() / c;
+    let threads = par::auto_threads(y.data.len());
+    let rows_per = rows.div_ceil(threads * 4).max(1);
+    let rdata = res.map(|r| &r.data[..]);
+    par::par_chunks_mut(&mut y.data, rows_per * c, threads, |ci, chunk| {
+        let base = ci * rows_per * c;
+        for (pi, px) in chunk.chunks_mut(c).enumerate() {
+            let roff = base + pi * c;
+            for (o, v) in px.iter_mut().enumerate() {
+                let mut acc = *v + bias[o];
+                if let Some(rd) = rdata {
+                    acc += rd[roff + o];
+                }
+                *v = match act {
+                    Some(a) => a.apply(acc),
+                    None => acc,
+                };
+            }
+        }
+    });
+}
+
+/// Elementwise activation in place (parallel) — the host twin of the
+/// `relu_*` / `swish_*` elementwise artifacts.
+pub fn act_inplace(y: &mut Tensor, act: Act) {
+    let threads = par::auto_threads(y.data.len());
+    let chunk = y.data.len().div_ceil(threads * 4).max(1);
+    par::par_chunks_mut(&mut y.data, chunk, threads, |_, c| {
+        for v in c {
+            *v = act.apply(*v);
+        }
+    });
+}
+
+/// Group norm over NHWC, matching `python/compile/model.py::group_norm`:
+/// per (batch, group) statistics over (H, W, C/groups), eps 1e-5,
+/// per-channel scale + bias.  Parallel over batch elements.
+pub fn group_norm(x: &Tensor, scale: &[f32], bias: &[f32], groups: usize) -> Tensor {
+    let (bn, h, wd, c) = (x.dims[0], x.dims[1], x.dims[2], x.dims[3]);
+    assert!(groups >= 1 && c % groups == 0, "channels {c} not divisible into {groups} groups");
+    assert_eq!(scale.len(), c);
+    assert_eq!(bias.len(), c);
+    let cg = c / groups;
+    let hw = h * wd;
+    let plane = hw * c;
+    let mut y = Tensor::zeros(&[bn, h, wd, c]);
+    let threads = par::auto_threads(x.data.len());
+    par::par_chunks_mut(&mut y.data, plane, threads, |n, out| {
+        let xin = &x.data[n * plane..(n + 1) * plane];
+        for g in 0..groups {
+            let c0 = g * cg;
+            let (mut sum, mut sq) = (0.0f64, 0.0f64);
+            for p in 0..hw {
+                for v in &xin[p * c + c0..p * c + c0 + cg] {
+                    let v = *v as f64;
+                    sum += v;
+                    sq += v * v;
+                }
+            }
+            let cnt = (hw * cg) as f64;
+            let mean = sum / cnt;
+            let var = (sq / cnt - mean * mean).max(0.0);
+            let inv = 1.0 / (var + 1e-5).sqrt();
+            for p in 0..hw {
+                for (o, v) in xin[p * c + c0..p * c + c0 + cg].iter().enumerate() {
+                    let ci = c0 + o;
+                    out[p * c + ci] =
+                        ((*v as f64 - mean) * inv) as f32 * scale[ci] + bias[ci];
+                }
+            }
+        }
+    });
+    y
+}
+
+/// 2x nearest-neighbour upsampling (NHWC) — each pixel's channel block is
+/// copied twice along W, each expanded row twice along H.
+pub fn upsample2x(x: &Tensor) -> Tensor {
+    let (bn, h, wd, c) = (x.dims[0], x.dims[1], x.dims[2], x.dims[3]);
+    let mut y = Tensor::zeros(&[bn, 2 * h, 2 * wd, c]);
+    let orow = 2 * wd * c;
+    let threads = par::auto_threads(y.data.len());
+    par::par_chunks_mut(&mut y.data, 2 * orow, threads, |r, chunk| {
+        let n = r / h;
+        let i = r % h;
+        let src = ((n * h + i) * wd) * c;
+        let (row0, row1) = chunk.split_at_mut(orow);
+        for q in 0..wd {
+            let px = &x.data[src + q * c..src + (q + 1) * c];
+            row0[2 * q * c..(2 * q + 1) * c].copy_from_slice(px);
+            row0[(2 * q + 1) * c..(2 * q + 2) * c].copy_from_slice(px);
+        }
+        row1.copy_from_slice(row0);
+    });
+    y
+}
+
+/// Single-head self-attention over spatial positions with residual,
+/// matching `model.py::attention`: `softmax(q kᵀ / sqrt(c)) v @ wout + x`.
+/// All four matrix products run on [`gemm`].
+pub fn attention(x: &Tensor, wqkv: &Tensor, wout: &Tensor) -> Tensor {
+    let (bn, h, wd, c) = (x.dims[0], x.dims[1], x.dims[2], x.dims[3]);
+    assert_eq!(wqkv.dims, vec![c, 3 * c], "wqkv must be [C, 3C]");
+    assert_eq!(wout.dims, vec![c, c], "wout must be [C, C]");
+    let s = h * wd;
+    let mut qkv = vec![0.0f32; bn * s * 3 * c];
+    gemm(bn * s, c, 3 * c, &x.data, &wqkv.data, &mut qkv);
+    let scale = 1.0 / (c as f32).sqrt();
+    let mut y = x.clone();
+    let mut q = vec![0.0f32; s * c];
+    let mut kt = vec![0.0f32; c * s];
+    let mut v = vec![0.0f32; s * c];
+    let mut att = vec![0.0f32; s * s];
+    let mut av = vec![0.0f32; s * c];
+    let mut out = vec![0.0f32; s * c];
+    for n in 0..bn {
+        for i in 0..s {
+            let row = &qkv[(n * s + i) * 3 * c..][..3 * c];
+            q[i * c..(i + 1) * c].copy_from_slice(&row[..c]);
+            for (ci, &kv) in row[c..2 * c].iter().enumerate() {
+                kt[ci * s + i] = kv; // K transposed for the q·kᵀ GEMM
+            }
+            v[i * c..(i + 1) * c].copy_from_slice(&row[2 * c..]);
+        }
+        att.fill(0.0);
+        gemm(s, c, s, &q, &kt, &mut att);
+        for row in att.chunks_mut(s) {
+            let mut mx = f32::NEG_INFINITY;
+            for val in row.iter_mut() {
+                *val *= scale;
+                mx = mx.max(*val);
+            }
+            let mut sum = 0.0f32;
+            for val in row.iter_mut() {
+                *val = (*val - mx).exp();
+                sum += *val;
+            }
+            for val in row.iter_mut() {
+                *val /= sum;
+            }
+        }
+        av.fill(0.0);
+        gemm(s, s, c, &att, &v, &mut av);
+        out.fill(0.0);
+        gemm(s, c, c, &av, &wout.data, &mut out);
+        for (a, b2) in y.data[n * s * c..(n + 1) * s * c].iter_mut().zip(&out) {
+            *a += *b2;
+        }
+    }
+    y
+}
+
+/// Classifier head: global mean pool over (H, W) then a dense layer —
+/// `x.mean(axis=(1,2)) @ w + b`, `w` `[C, classes]`.
+pub fn mean_pool_dense(x: &Tensor, w: &Tensor, b: &[f32]) -> Tensor {
+    let (bn, h, wd, c) = (x.dims[0], x.dims[1], x.dims[2], x.dims[3]);
+    assert_eq!(w.dims[0], c, "head weight rows vs channels");
+    let classes = w.dims[1];
+    assert_eq!(b.len(), classes);
+    let hw = (h * wd) as f32;
+    let mut pooled = vec![0.0f32; bn * c];
+    for n in 0..bn {
+        let dst = &mut pooled[n * c..(n + 1) * c];
+        for p in 0..h * wd {
+            let src = &x.data[(n * h * wd + p) * c..][..c];
+            for (d, &s) in dst.iter_mut().zip(src) {
+                *d += s;
+            }
+        }
+        for d in dst.iter_mut() {
+            *d /= hw;
+        }
+    }
+    let mut y = Tensor::zeros(&[bn, classes]);
+    gemm(bn, c, classes, &pooled, &w.data, &mut y.data);
+    for row in y.data.chunks_mut(classes) {
+        for (v, &bb) in row.iter_mut().zip(b) {
+            *v += bb;
+        }
+    }
+    y
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -277,5 +613,124 @@ mod tests {
         let got = conv2d_valid(&x, &w, 2);
         assert_eq!(got.dims, vec![2, 4, 2, 4]);
         assert!(got.max_abs_diff(&want) < 1e-3);
+    }
+
+    #[test]
+    fn same_pad_matches_xla_convention() {
+        assert_eq!(same_pad(8, 3, 1), (1, 1)); // out 8, tot 2
+        assert_eq!(same_pad(8, 3, 2), (0, 1)); // out 4, tot 1: low rounds down
+        assert_eq!(same_pad(8, 1, 1), (0, 0));
+        assert_eq!(same_pad(7, 5, 2), (1, 2)); // out 4, tot 3
+    }
+
+    #[test]
+    fn conv_same_matches_manually_padded_valid() {
+        let mut r = Rng::new(26);
+        for &(b, h, ci, co, k, s) in
+            &[(1, 8, 3, 4, 3, 1), (2, 8, 2, 3, 3, 2), (1, 7, 2, 2, 5, 2), (1, 6, 3, 5, 1, 1)]
+        {
+            let x = randt(&mut r, &[b, h, h, ci]);
+            let w = randt(&mut r, &[co, ci, k, k]);
+            let ph = same_pad(h, k, s);
+            let want = conv2d_valid_ref(&pad2d(&x, ph, ph), &w, s);
+            let got = conv2d_same(&x, &w, s, false);
+            assert_eq!(got.dims, vec![b, h.div_ceil(s), h.div_ceil(s), co]);
+            assert!(
+                got.max_abs_diff(&want) < 1e-3,
+                "(b{b} h{h} ci{ci} co{co} k{k} s{s}) diff {}",
+                got.max_abs_diff(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn depthwise_matches_expanded_dense() {
+        let mut r = Rng::new(27);
+        for &(b, h, c, k, s) in &[(1, 8, 4, 3, 1), (2, 8, 6, 3, 2), (1, 9, 3, 5, 2)] {
+            let x = randt(&mut r, &[b, h, h, c]);
+            let w = randt(&mut r, &[c, 1, k, k]);
+            let dense = crate::merge::expand_depthwise(&w);
+            let want = conv2d_same(&x, &dense, s, false);
+            let got = conv2d_same(&x, &w, s, true);
+            assert_eq!(got.dims, want.dims);
+            assert!(
+                got.max_abs_diff(&want) < 1e-3,
+                "(b{b} h{h} c{c} k{k} s{s}) diff {}",
+                got.max_abs_diff(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn bias_act_res_matches_scalar_epilogue() {
+        let mut r = Rng::new(28);
+        let bias: Vec<f32> = (0..5).map(|_| r.normal()).collect();
+        let res = randt(&mut r, &[2, 3, 3, 5]);
+        for act in [None, Some(Act::Relu), Some(Act::Swish)] {
+            for with_res in [false, true] {
+                let y0 = randt(&mut r, &[2, 3, 3, 5]);
+                let mut got = y0.clone();
+                bias_act_res(&mut got, &bias, act, with_res.then_some(&res));
+                for (i, (&v0, &g)) in y0.data.iter().zip(&got.data).enumerate() {
+                    let mut want = v0 + bias[i % 5];
+                    if with_res {
+                        want += res.data[i];
+                    }
+                    if let Some(a) = act {
+                        want = a.apply(want);
+                    }
+                    assert!((want - g).abs() < 1e-5, "act {act:?} res {with_res} idx {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn group_norm_normalizes_per_group() {
+        let mut r = Rng::new(29);
+        let x = randt(&mut r, &[2, 4, 4, 8]);
+        let ones = vec![1.0f32; 8];
+        let zeros = vec![0.0f32; 8];
+        let y = group_norm(&x, &ones, &zeros, 2);
+        // each (batch, group) block must come out ~zero-mean unit-var
+        for n in 0..2 {
+            for g in 0..2 {
+                let mut vals = Vec::new();
+                for p in 0..16 {
+                    for ci in g * 4..(g + 1) * 4 {
+                        vals.push(y.data[(n * 16 + p) * 8 + ci]);
+                    }
+                }
+                let m: f32 = vals.iter().sum::<f32>() / vals.len() as f32;
+                let v: f32 =
+                    vals.iter().map(|x| (x - m) * (x - m)).sum::<f32>() / vals.len() as f32;
+                assert!(m.abs() < 1e-4, "mean {m}");
+                assert!((v - 1.0).abs() < 1e-2, "var {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn upsample_repeats_pixels() {
+        let x = Tensor::new(vec![1, 2, 2, 1], vec![1.0, 2.0, 3.0, 4.0]);
+        let y = upsample2x(&x);
+        assert_eq!(y.dims, vec![1, 4, 4, 1]);
+        assert_eq!(
+            y.data,
+            vec![
+                1.0, 1.0, 2.0, 2.0, 1.0, 1.0, 2.0, 2.0, //
+                3.0, 3.0, 4.0, 4.0, 3.0, 3.0, 4.0, 4.0,
+            ]
+        );
+    }
+
+    #[test]
+    fn mean_pool_dense_small() {
+        // 1 batch, 2x1 spatial, 2 channels: pooled = [(1+3)/2, (2+4)/2]
+        let x = Tensor::new(vec![1, 2, 1, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let w = Tensor::new(vec![2, 2], vec![1.0, 0.0, 0.0, 1.0]);
+        let y = mean_pool_dense(&x, &w, &[0.5, -0.5]);
+        assert_eq!(y.dims, vec![1, 2]);
+        assert!((y.data[0] - 2.5).abs() < 1e-6 && (y.data[1] - 2.5).abs() < 1e-6);
     }
 }

@@ -34,7 +34,7 @@ pub mod prelude {
     pub use crate::ir::{Gates, Spec, Task};
     pub use crate::model::{Batch, Manifest, Model};
     pub use crate::pipeline::{Pipeline, PipelineCfg};
-    pub use crate::runtime::Runtime;
+    pub use crate::runtime::{Backend, HostBackend, LatencyStats, Runtime, Value};
     pub use crate::serve::{Engine, ServeCfg, Session, Ticket};
     pub use crate::solver::Solution;
     pub use crate::tables::{BuildCfg, LatencyMode, Tables};

@@ -21,6 +21,7 @@ use anyhow::{bail, Context, Result};
 
 use layermerge::experiments::{figures, tables as exp_tables, Ctx};
 use layermerge::pipeline::{Method, PipelineCfg};
+use layermerge::runtime::Backend as _;
 use layermerge::serve::{self, ServeCfg};
 use layermerge::tables::LatencyMode;
 
@@ -77,6 +78,11 @@ fn usage() -> &'static str {
        fig1..fig5                        regenerate a paper figure\n\
        all                               every table and figure\n\
      flags:\n\
+       --backend pjrt|host  execution backend (default pjrt).  host runs\n\
+                         the native kernels: no artifacts, no XLA —\n\
+                         serve/profile work from a fresh checkout over\n\
+                         the synthetic specs (hostnet, hostnet-tiny,\n\
+                         hostchain, hostchain-tiny)\n\
        --artifacts DIR   (default ./artifacts)\n\
        --fast            analytical latency + short schedules (CI)\n\
        --measured        pin measured latency (overrides --fast)\n\
@@ -129,6 +135,25 @@ fn main() -> Result<()> {
         args.get("artifacts").unwrap_or("artifacts"),
     );
     let cfg = build_cfg(&args);
+    let host = match args.get("backend").unwrap_or("pjrt") {
+        "host" => true,
+        "pjrt" => false,
+        b => bail!("unknown backend {b} (expected host|pjrt)"),
+    };
+    if host {
+        // deployment-side commands on the native host backend: no
+        // artifacts directory, no PJRT client, synthetic specs
+        let ctx = Ctx::new_host(repo, cfg);
+        let model = args.get("model").unwrap_or("hostnet");
+        return match args.cmd.as_str() {
+            "serve" => serve_host(&ctx, model, &args),
+            "profile" => profile_host(&ctx, model),
+            other => bail!(
+                "{other} needs the PJRT backend (gated graph / tables); \
+                 --backend host supports serve and profile"
+            ),
+        };
+    }
     let ctx = Ctx::new(&artifacts, repo, cfg)?;
 
     match args.cmd.as_str() {
@@ -333,5 +358,108 @@ fn serve_cmd(ctx: &Ctx, model: &str, args: &Args) -> Result<()> {
         r1.rows_per_s / r0.rows_per_s,
     );
     sess.shutdown();
+    Ok(())
+}
+
+/// Synthetic-spec plans for the host backend: the original network and
+/// the table-free greedy depth-compressed cover.
+fn host_plans(
+    model: &str,
+) -> Result<(layermerge::ir::Spec, Arc<layermerge::exec::Plan>, Arc<layermerge::exec::Plan>)> {
+    use layermerge::exec::Plan;
+    let (spec, params) = layermerge::ir::synth::by_name(model).with_context(|| {
+        format!(
+            "--backend host serves synthetic specs ({}); {model} unknown",
+            layermerge::ir::synth::NAMES.join(", ")
+        )
+    })?;
+    let orig = Arc::new(Plan::original(&spec, &params)?);
+    let (a, c, spans) = layermerge::solver::depth::greedy_full_solution(&spec);
+    let merged = Arc::new(Plan::from_solution(&spec, &params, &a, &c, &spans)?);
+    Ok((spec, orig, merged))
+}
+
+/// `serve --backend host`: deploy the original and greedy-merged
+/// synthetic networks on the native host backend and drive concurrent
+/// closed-loop clients against both — the paper's serving protocol,
+/// exercisable offline.
+fn serve_host(ctx: &Ctx, model: &str, args: &Args) -> Result<()> {
+    use layermerge::exec::Format;
+    use layermerge::util::rng::Rng;
+    use layermerge::util::tensor::Tensor;
+    let clients = args.usize_or("clients", 4).max(1);
+    let requests = args.usize_or("requests", 32).max(1);
+    let defaults = ServeCfg::default();
+    let scfg = ServeCfg {
+        workers: args.usize_or("serve-workers", defaults.workers).max(1),
+        queue_cap: args.usize_or("queue-cap", defaults.queue_cap).max(1),
+    };
+    let engine = ctx.engine();
+    let (spec, orig, merged) = host_plans(model)?;
+    println!(
+        "serving {model} [host backend]: {clients} clients x {requests} single-row \
+         requests (spec batch {}, {} workers, queue {})",
+        spec.batch, scfg.workers, scfg.queue_cap
+    );
+    let mut rng = Rng::new(0x5e11);
+    let row: usize = spec.h * spec.w * spec.c;
+    let pool: Vec<Tensor> = (0..64)
+        .map(|_| {
+            Tensor::new(
+                vec![1, spec.h, spec.w, spec.c],
+                (0..row).map(|_| rng.normal()).collect(),
+            )
+        })
+        .collect();
+    let make = |c: usize, i: usize| (pool[(c * requests + i) % pool.len()].clone(), None);
+
+    let orig_sess = engine.deploy_cfg(Arc::clone(&orig), Format::Fused, scfg)?;
+    let r0 = serve::drive(&orig_sess, clients, requests, &make)?;
+    println!("{}", r0.row(&format!("original {model}")));
+    orig_sess.shutdown();
+
+    let sess = engine.deploy_cfg(Arc::clone(&merged), Format::Fused, scfg)?;
+    let r1 = serve::drive(&sess, clients, requests, &make)?;
+    println!(
+        "{}",
+        r1.row(&format!("greedy-merged (depth {} -> {})", orig.depth(), merged.depth()))
+    );
+    println!(
+        "  -> p50 {:.2}x, p95 {:.2}x, throughput {:.2}x",
+        r0.p50_ms / r1.p50_ms,
+        r0.p95_ms / r1.p95_ms,
+        r1.rows_per_s / r0.rows_per_s,
+    );
+    sess.shutdown();
+    Ok(())
+}
+
+/// `profile --backend host`: per-format end-to-end latency of the
+/// original vs greedy-merged synthetic network through
+/// `CompiledPlan::measure`, plus the steady-state transfer counts.
+fn profile_host(ctx: &Ctx, model: &str) -> Result<()> {
+    use layermerge::exec::Format;
+    let engine = ctx.engine();
+    let (_, orig, merged) = host_plans(model)?;
+    let (w, it) = (ctx.cfg.lat_warmup, ctx.cfg.lat_iters);
+    println!("profile {model} [host backend] ({w} warmup, {it} iters):");
+    for (name, plan) in [("original", &orig), ("greedy-merged", &merged)] {
+        for fmt in [Format::Eager, Format::Fused] {
+            let cp = engine.lower(plan, fmt)?;
+            let be = engine.backend();
+            let (u0, d0) = (be.uploads(), be.downloads());
+            let stats = cp.measure(w, it)?;
+            let per = (w + it).max(1);
+            println!(
+                "{name:<14} {fmt:?}: steps {:>2}, p50 {:>8.3}ms p95 {:>8.3}ms \
+                 ({:.1} uploads + {:.1} downloads / forward)",
+                plan.depth(),
+                stats.p50_ms,
+                stats.p95_ms,
+                (be.uploads() - u0) as f64 / per as f64,
+                (be.downloads() - d0) as f64 / per as f64,
+            );
+        }
+    }
     Ok(())
 }

@@ -151,10 +151,12 @@ impl Pipeline {
         let (_, orig_metric) =
             train::evaluate(&model, &gen, &pretrained, &pristine, cfg.eval_batches)?;
         let orig_plan = Arc::new(Plan::original(&model.spec, &pretrained)?);
-        let orig_lat_eager =
-            engine.measure(&orig_plan, Format::Eager, cfg.lat_warmup, cfg.lat_iters)?;
-        let orig_lat_fused =
-            engine.measure(&orig_plan, Format::Fused, cfg.lat_warmup, cfg.lat_iters)?;
+        let orig_lat_eager = engine
+            .measure(&orig_plan, Format::Eager, cfg.lat_warmup, cfg.lat_iters)?
+            .p50_ms;
+        let orig_lat_fused = engine
+            .measure(&orig_plan, Format::Fused, cfg.lat_warmup, cfg.lat_iters)?
+            .p50_ms;
         eprintln!(
             "[pipeline] {name}: orig metric {orig_metric:.4}, lat eager {orig_lat_eager:.2}ms fused {orig_lat_fused:.2}ms"
         );
@@ -299,10 +301,10 @@ impl Pipeline {
         // interleave compressed and original measurements (A/B fairness)
         let orig_plan = Arc::new(Plan::original(spec, &self.pretrained)?);
         let (w, it) = (self.cfg.lat_warmup, self.cfg.lat_iters);
-        let lat_eager = self.engine.measure(&plan, Format::Eager, w, it)?;
-        let base_eager = self.engine.measure(&orig_plan, Format::Eager, w, it)?;
-        let lat_fused = self.engine.measure(&plan, Format::Fused, w, it)?;
-        let base_fused = self.engine.measure(&orig_plan, Format::Fused, w, it)?;
+        let lat_eager = self.engine.measure(&plan, Format::Eager, w, it)?.p50_ms;
+        let base_eager = self.engine.measure(&orig_plan, Format::Eager, w, it)?.p50_ms;
+        let lat_fused = self.engine.measure(&plan, Format::Fused, w, it)?.p50_ms;
+        let base_fused = self.engine.measure(&orig_plan, Format::Fused, w, it)?.p50_ms;
         Ok(Compressed {
             method: method.name().to_string(),
             budget_frac,

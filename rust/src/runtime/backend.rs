@@ -1,0 +1,363 @@
+//! The pluggable execution backend: opaque [`Value`] buffer handles, the
+//! backend-independent op descriptors a lowered plan is made of, and the
+//! [`Backend`] trait with its PJRT implementation.
+//!
+//! The contract `exec::CompiledPlan` builds on:
+//!
+//! * **Lowering** resolves every op once (`lower_op`) and uploads every
+//!   weight-scale operand once (`upload`) — merged conv weights, biases,
+//!   group-norm affines, projection/attention/head weights all become
+//!   persistent [`Value`]s owned by the plan.
+//! * **Dispatch** (`run`) consumes and produces [`Value`]s: activations
+//!   flow between steps as backend-resident handles, never crossing the
+//!   host boundary.
+//! * **Transfers** happen only through `upload` / `download`, which keep
+//!   monotonic counters — device residency is *asserted by tests*
+//!   (`tests/host_backend.rs`: a chain-topology forward is exactly one
+//!   upload + one download), not just claimed.
+//!
+//! [`PjrtBackend`] maps descriptors onto the AOT artifact inventory
+//! (manifest signature keys -> compiled executables) and keeps buffers on
+//! the PJRT device.  [`super::HostBackend`] interprets the same
+//! descriptors on `crate::kernels` with zero XLA dependency.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::kernels::Act;
+use crate::model::{sig_str, Manifest};
+use crate::runtime::{from_literal, Exec, Runtime};
+use crate::util::tensor::Tensor;
+
+/// A buffer owned by a backend: host tensor or device-resident PJRT
+/// buffer.  Cloning is a refcount bump — boundary slots, stash entries
+/// and residual sources share one underlying buffer.
+#[derive(Clone)]
+pub struct Value(Arc<ValueInner>);
+
+enum ValueInner {
+    Host(Tensor),
+    Device { buf: xla::PjRtBuffer, dims: Vec<usize> },
+}
+
+// SAFETY: PJRT device buffers are thread-safe in the underlying C++
+// runtime (same argument as the markers on `Exec`/`Runtime`); the host
+// variant is a plain owned Tensor.
+unsafe impl Send for ValueInner {}
+unsafe impl Sync for ValueInner {}
+
+impl Value {
+    pub fn host(t: Tensor) -> Value {
+        Value(Arc::new(ValueInner::Host(t)))
+    }
+
+    pub(crate) fn device(buf: xla::PjRtBuffer, dims: Vec<usize>) -> Value {
+        Value(Arc::new(ValueInner::Device { buf, dims }))
+    }
+
+    /// Logical dims, tracked host-side for both variants.
+    pub fn dims(&self) -> &[usize] {
+        match &*self.0 {
+            ValueInner::Host(t) => &t.dims,
+            ValueInner::Device { dims, .. } => dims,
+        }
+    }
+
+    /// Borrow the host tensor (None for device-resident values).
+    pub fn as_host(&self) -> Option<&Tensor> {
+        match &*self.0 {
+            ValueInner::Host(t) => Some(t),
+            ValueInner::Device { .. } => None,
+        }
+    }
+
+    fn as_device(&self) -> Result<&xla::PjRtBuffer> {
+        match &*self.0 {
+            ValueInner::Device { buf, .. } => Ok(buf),
+            ValueInner::Host(_) => {
+                anyhow::bail!("host value passed to a device-resident dispatch")
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for Value {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &*self.0 {
+            ValueInner::Host(t) => write!(f, "Value::Host{:?}", t.dims),
+            ValueInner::Device { dims, .. } => write!(f, "Value::Device{dims:?}"),
+        }
+    }
+}
+
+/// Backend-independent description of one dispatchable op.  Mirrors the
+/// AOT artifact families 1:1 (that is what makes the PJRT backend a pure
+/// table lookup) and carries exactly the shape/attribute info the host
+/// kernels need.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum OpDesc {
+    /// SAME conv + bias, optionally fused with an activation and/or a
+    /// residual add (the `plain` / `fa_*` / `far_*` artifact variants).
+    /// Args: `(x, w, bias[, res])`.
+    Conv {
+        b: usize,
+        h: usize,
+        w: usize,
+        cin: usize,
+        cout: usize,
+        k: usize,
+        stride: usize,
+        depthwise: bool,
+        act: Option<Act>,
+        residual: bool,
+    },
+    /// Group norm at the given geometry.  Args: `(x, scale, bias)`.
+    GroupNorm { b: usize, h: usize, w: usize, c: usize, groups: usize },
+    /// Elementwise add.  Args: `(x, y)`.
+    Add { b: usize, h: usize, w: usize, c: usize },
+    /// Elementwise activation.  Args: `(x)`.
+    Activation { act: Act, b: usize, h: usize, w: usize, c: usize },
+    /// Single-head spatial self-attention with residual.
+    /// Args: `(x, wqkv, wout)`.
+    Attention { b: usize, h: usize, w: usize, c: usize },
+    /// 2x nearest upsampling.  Args: `(x)`.
+    Upsample { b: usize, h: usize, w: usize, c: usize },
+    /// Classifier head (mean pool + dense); `model` names the per-model
+    /// AOT artifact.  Args: `(x, w, bias)`.
+    Head { b: usize, h: usize, w: usize, hidden: usize, classes: usize, model: String },
+}
+
+impl OpDesc {
+    /// Output dims — the host-side shape bookkeeping for device values.
+    pub fn out_dims(&self) -> Vec<usize> {
+        match self {
+            OpDesc::Conv { b, h, w, cout, stride, .. } => {
+                vec![*b, h.div_ceil(*stride), w.div_ceil(*stride), *cout]
+            }
+            OpDesc::GroupNorm { b, h, w, c, .. }
+            | OpDesc::Add { b, h, w, c }
+            | OpDesc::Activation { b, h, w, c, .. }
+            | OpDesc::Attention { b, h, w, c } => vec![*b, *h, *w, *c],
+            OpDesc::Upsample { b, h, w, c } => vec![*b, 2 * h, 2 * w, *c],
+            OpDesc::Head { b, classes, .. } => vec![*b, *classes],
+        }
+    }
+
+    /// Expected argument count (used by the host interpreter's checks).
+    pub fn arity(&self) -> usize {
+        match self {
+            OpDesc::Conv { residual, .. } => 3 + usize::from(*residual),
+            OpDesc::GroupNorm { .. } | OpDesc::Attention { .. } | OpDesc::Head { .. } => 3,
+            OpDesc::Add { .. } => 2,
+            OpDesc::Activation { .. } | OpDesc::Upsample { .. } => 1,
+        }
+    }
+}
+
+/// One lowered op: the descriptor plus (for PJRT) the resolved compiled
+/// executable.  The host backend interprets the descriptor directly.
+pub struct OpHandle {
+    pub desc: OpDesc,
+    exec: Option<Arc<Exec>>,
+}
+
+impl OpHandle {
+    pub(crate) fn host(desc: OpDesc) -> OpHandle {
+        OpHandle { desc, exec: None }
+    }
+}
+
+/// A runtime backend the lowered execution plans dispatch through.  Both
+/// implementations are `Send + Sync`, so a `CompiledPlan` stays shareable
+/// across serving workers.
+pub trait Backend: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Host tensor -> backend-resident buffer.  Counted.
+    fn upload(&self, t: &Tensor) -> Result<Value>;
+
+    /// Backend-resident buffer -> host tensor.  Counted.
+    fn download(&self, v: &Value) -> Result<Tensor>;
+
+    /// Can this backend lower `desc` at all?  `false` means the op has no
+    /// implementation here (e.g. an elementwise artifact the manifest
+    /// never emitted) and the caller may plan a host fallback; a `true`
+    /// followed by a `lower_op` error is a real failure (corrupt
+    /// artifact, compile error) and must propagate.
+    fn supports(&self, desc: &OpDesc) -> bool;
+
+    /// Resolve an op descriptor once, at plan-lowering time.
+    fn lower_op(&self, desc: &OpDesc) -> Result<OpHandle>;
+
+    /// Execute a lowered op on backend-resident values.
+    fn run(&self, op: &OpHandle, args: &[&Value]) -> Result<Value>;
+
+    /// Total host->device transfers performed (monotonic).
+    fn uploads(&self) -> usize;
+
+    /// Total device->host transfers performed (monotonic).
+    fn downloads(&self) -> usize;
+}
+
+// ---------------------------------------------------------------------------
+// PJRT backend
+// ---------------------------------------------------------------------------
+
+/// Device-resident execution over the AOT artifact inventory: `lower_op`
+/// resolves manifest signature keys to compiled executables, `upload`
+/// pins operands as persistent `PjRtBuffer`s, and `run` dispatches with
+/// device buffers in and out — activations never round-trip the host
+/// between steps.
+pub struct PjrtBackend {
+    rt: Arc<Runtime>,
+    man: Arc<Manifest>,
+    uploads: AtomicUsize,
+    downloads: AtomicUsize,
+}
+
+impl PjrtBackend {
+    pub fn new(rt: Arc<Runtime>, man: Arc<Manifest>) -> PjrtBackend {
+        PjrtBackend { rt, man, uploads: AtomicUsize::new(0), downloads: AtomicUsize::new(0) }
+    }
+
+    fn resolve(&self, desc: &OpDesc) -> Result<String> {
+        let ew = |key: String| {
+            self.man
+                .ew_art(&key)
+                .with_context(|| format!("elementwise artifact {key}"))
+        };
+        match desc {
+            OpDesc::Conv { b, h, w, cin, cout, k, stride, depthwise, act, residual } => {
+                let sig = sig_str(*b, *h, *w, *cin, *cout, *k, *stride, *depthwise);
+                let variant = match (act, residual) {
+                    (Some(a), true) => format!("far_{}", a.name()),
+                    (Some(a), false) => format!("fa_{}", a.name()),
+                    (None, true) => "far_none".to_string(),
+                    (None, false) => "plain".to_string(),
+                };
+                self.man
+                    .conv_art(&sig, &variant)
+                    .with_context(|| format!("conv artifact {sig}.{variant}"))
+            }
+            OpDesc::GroupNorm { b, h, w, c, groups } => {
+                ew(format!("gn{groups}_b{b}h{h}w{w}c{c}"))
+            }
+            OpDesc::Add { b, h, w, c } => ew(format!("add_b{b}h{h}w{w}c{c}")),
+            OpDesc::Activation { act, b, h, w, c } => {
+                ew(format!("{}_b{b}h{h}w{w}c{c}", act.name()))
+            }
+            OpDesc::Attention { b, h, w, c } => ew(format!("attn_b{b}h{h}w{w}c{c}")),
+            OpDesc::Upsample { b, h, w, c } => ew(format!("up_b{b}h{h}w{w}c{c}")),
+            OpDesc::Head { model, .. } => ew(format!("head_{model}")),
+        }
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn upload(&self, t: &Tensor) -> Result<Value> {
+        let buf = self.rt.to_device(t)?;
+        self.uploads.fetch_add(1, Ordering::Relaxed);
+        Ok(Value::device(buf, t.dims.clone()))
+    }
+
+    fn download(&self, v: &Value) -> Result<Tensor> {
+        self.downloads.fetch_add(1, Ordering::Relaxed);
+        match v.as_host() {
+            // a host value can only appear here through caller misuse;
+            // still count it so the transfer ledger never under-reports
+            Some(t) => Ok(t.clone()),
+            None => {
+                let buf = v.as_device()?;
+                let lit = buf
+                    .to_literal_sync()
+                    .map_err(|e| anyhow::anyhow!("device->host: {e:?}"))?;
+                from_literal(lit)
+            }
+        }
+    }
+
+    fn supports(&self, desc: &OpDesc) -> bool {
+        self.resolve(desc).is_ok()
+    }
+
+    fn lower_op(&self, desc: &OpDesc) -> Result<OpHandle> {
+        let rel = self.resolve(desc)?;
+        Ok(OpHandle { desc: desc.clone(), exec: Some(self.rt.load(&rel)?) })
+    }
+
+    fn run(&self, op: &OpHandle, args: &[&Value]) -> Result<Value> {
+        let exec = op
+            .exec
+            .as_ref()
+            .context("op lowered by a different backend (no executable)")?;
+        anyhow::ensure!(
+            args.len() == op.desc.arity(),
+            "{:?} expects {} args, got {}",
+            op.desc,
+            op.desc.arity(),
+            args.len()
+        );
+        let bufs: Vec<&xla::PjRtBuffer> =
+            args.iter().map(|v| v.as_device()).collect::<Result<_>>()?;
+        let out = exec.run_device(&bufs)?;
+        Ok(Value::device(out, op.desc.out_dims()))
+    }
+
+    fn uploads(&self) -> usize {
+        self.uploads.load(Ordering::Relaxed)
+    }
+
+    fn downloads(&self) -> usize {
+        self.downloads.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_is_cheap_to_clone_and_tracks_dims() {
+        let v = Value::host(Tensor::zeros(&[2, 3]));
+        let v2 = v.clone();
+        assert_eq!(v.dims(), &[2, 3]);
+        assert_eq!(v2.dims(), &[2, 3]);
+        assert!(v.as_host().is_some());
+    }
+
+    #[test]
+    fn out_dims_and_arity() {
+        let conv = OpDesc::Conv {
+            b: 2,
+            h: 9,
+            w: 9,
+            cin: 3,
+            cout: 8,
+            k: 3,
+            stride: 2,
+            depthwise: false,
+            act: Some(Act::Relu),
+            residual: true,
+        };
+        assert_eq!(conv.out_dims(), vec![2, 5, 5, 8]);
+        assert_eq!(conv.arity(), 4);
+        let up = OpDesc::Upsample { b: 1, h: 4, w: 4, c: 2 };
+        assert_eq!(up.out_dims(), vec![1, 8, 8, 2]);
+        assert_eq!(up.arity(), 1);
+        let head = OpDesc::Head { b: 4, h: 2, w: 2, hidden: 8, classes: 10, model: "m".into() };
+        assert_eq!(head.out_dims(), vec![4, 10]);
+    }
+
+    #[test]
+    fn backend_trait_objects_are_send_sync() {
+        fn check<T: Send + Sync + ?Sized>() {}
+        check::<dyn Backend>();
+        check::<Value>();
+    }
+}

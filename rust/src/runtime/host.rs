@@ -1,0 +1,197 @@
+//! Native host backend — executes any lowered plan on `crate::kernels`
+//! with **zero XLA dependency**, so `CompiledPlan::measure`, the `serve`
+//! engine and the benches produce real latency numbers from a fresh
+//! offline checkout (the vendored `xla` crate is a fail-fast stub).
+//!
+//! Two modes, selected at construction:
+//!
+//! * [`HostBackend::new`] — **resident**: `run` consumes and produces
+//!   values in place; the only data copies are the genuine `upload` /
+//!   `download` boundary crossings, exactly like the PJRT backend's
+//!   device residency.
+//! * [`HostBackend::per_dispatch`] — models the *old* per-op round trip:
+//!   every operand is downloaded (memcpy'd) on the way into each op and
+//!   the output uploaded on the way out, the cost shape `Exec::run` had
+//!   when each dispatch crossed the host<->device boundary.  This is the
+//!   baseline side of `benches/runtime_dispatch.rs`, and it keeps the
+//!   transfer counters honest for both modes.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use anyhow::{Context, Result};
+
+use crate::kernels;
+use crate::runtime::backend::{Backend, OpDesc, OpHandle, Value};
+use crate::util::tensor::Tensor;
+
+pub struct HostBackend {
+    per_dispatch: bool,
+    uploads: AtomicUsize,
+    downloads: AtomicUsize,
+}
+
+impl HostBackend {
+    /// Resident mode: values flow between ops as shared handles.
+    pub fn new() -> HostBackend {
+        HostBackend {
+            per_dispatch: false,
+            uploads: AtomicUsize::new(0),
+            downloads: AtomicUsize::new(0),
+        }
+    }
+
+    /// Per-dispatch mode: every op round-trips all operands through the
+    /// (counted, memcpy'd) transfer boundary — the pre-residency cost
+    /// model, kept as a measurable baseline.
+    pub fn per_dispatch() -> HostBackend {
+        HostBackend { per_dispatch: true, ..HostBackend::new() }
+    }
+}
+
+impl Default for HostBackend {
+    fn default() -> Self {
+        HostBackend::new()
+    }
+}
+
+impl Backend for HostBackend {
+    fn name(&self) -> &'static str {
+        if self.per_dispatch {
+            "host (per-dispatch)"
+        } else {
+            "host"
+        }
+    }
+
+    fn upload(&self, t: &Tensor) -> Result<Value> {
+        self.uploads.fetch_add(1, Ordering::Relaxed);
+        Ok(Value::host(t.clone()))
+    }
+
+    fn download(&self, v: &Value) -> Result<Tensor> {
+        self.downloads.fetch_add(1, Ordering::Relaxed);
+        Ok(v.as_host().context("device value on the host backend")?.clone())
+    }
+
+    fn supports(&self, _desc: &OpDesc) -> bool {
+        true // the native kernel set covers every descriptor
+    }
+
+    fn lower_op(&self, desc: &OpDesc) -> Result<OpHandle> {
+        Ok(OpHandle::host(desc.clone()))
+    }
+
+    fn run(&self, op: &OpHandle, args: &[&Value]) -> Result<Value> {
+        anyhow::ensure!(
+            args.len() == op.desc.arity(),
+            "{:?} expects {} args, got {}",
+            op.desc,
+            op.desc.arity(),
+            args.len()
+        );
+        if self.per_dispatch {
+            // the old world: every operand crosses the boundary per op
+            let owned: Vec<Tensor> =
+                args.iter().map(|v| self.download(v)).collect::<Result<_>>()?;
+            let refs: Vec<&Tensor> = owned.iter().collect();
+            let out = exec_host(&op.desc, &refs)?;
+            self.upload(&out)
+        } else {
+            let host: Vec<&Tensor> = args
+                .iter()
+                .map(|v| v.as_host().context("device value on the host backend"))
+                .collect::<Result<_>>()?;
+            Ok(Value::host(exec_host(&op.desc, &host)?))
+        }
+    }
+
+    fn uploads(&self) -> usize {
+        self.uploads.load(Ordering::Relaxed)
+    }
+
+    fn downloads(&self) -> usize {
+        self.downloads.load(Ordering::Relaxed)
+    }
+}
+
+/// Interpret one op descriptor on the host kernels.  Semantics mirror the
+/// AOT artifacts (`python/compile/aot.py::conv_module` / `model.py`)
+/// op for op; parity is pinned by `tests/host_backend.rs`.
+fn exec_host(desc: &OpDesc, args: &[&Tensor]) -> Result<Tensor> {
+    match desc {
+        OpDesc::Conv { b, h, w, cin, stride, depthwise, act, residual, .. } => {
+            let (x, wt, bias) = (args[0], args[1], args[2]);
+            anyhow::ensure!(
+                x.dims == vec![*b, *h, *w, *cin],
+                "conv input {:?} vs desc {:?}",
+                x.dims,
+                desc
+            );
+            let mut y = kernels::conv2d_same(x, wt, *stride, *depthwise);
+            let res = if *residual { Some(args[3]) } else { None };
+            kernels::bias_act_res(&mut y, &bias.data, *act, res);
+            Ok(y)
+        }
+        OpDesc::GroupNorm { groups, .. } => {
+            Ok(kernels::group_norm(args[0], &args[1].data, &args[2].data, *groups))
+        }
+        OpDesc::Add { .. } => {
+            anyhow::ensure!(args[0].dims == args[1].dims, "add shape mismatch");
+            let mut y = args[0].clone();
+            for (a, b2) in y.data.iter_mut().zip(&args[1].data) {
+                *a += *b2;
+            }
+            Ok(y)
+        }
+        OpDesc::Activation { act, .. } => {
+            let mut y = args[0].clone();
+            kernels::act_inplace(&mut y, *act);
+            Ok(y)
+        }
+        OpDesc::Attention { .. } => Ok(kernels::attention(args[0], args[1], args[2])),
+        OpDesc::Upsample { .. } => Ok(kernels::upsample2x(args[0])),
+        OpDesc::Head { .. } => Ok(kernels::mean_pool_dense(args[0], args[1], &args[2].data)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::Act;
+
+    #[test]
+    fn resident_run_moves_no_data_through_the_counters() {
+        let be = HostBackend::new();
+        let x = be.upload(&Tensor::full(&[1, 2, 2, 3], 1.0)).unwrap();
+        let op = be
+            .lower_op(&OpDesc::Activation { act: Act::Relu, b: 1, h: 2, w: 2, c: 3 })
+            .unwrap();
+        let y = be.run(&op, &[&x]).unwrap();
+        assert_eq!(y.dims(), &[1, 2, 2, 3]);
+        assert_eq!((be.uploads(), be.downloads()), (1, 0));
+        let out = be.download(&y).unwrap();
+        assert_eq!((be.uploads(), be.downloads()), (1, 1));
+        assert!(out.data.iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn per_dispatch_run_round_trips_every_operand() {
+        let be = HostBackend::per_dispatch();
+        let x = be.upload(&Tensor::full(&[1, 2, 2, 3], -1.0)).unwrap();
+        let op = be
+            .lower_op(&OpDesc::Activation { act: Act::Relu, b: 1, h: 2, w: 2, c: 3 })
+            .unwrap();
+        let y = be.run(&op, &[&x]).unwrap();
+        // 1 initial upload + 1 per-op output upload; 1 per-op input download
+        assert_eq!((be.uploads(), be.downloads()), (2, 1));
+        assert!(be.download(&y).unwrap().data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn arity_is_checked() {
+        let be = HostBackend::new();
+        let x = be.upload(&Tensor::zeros(&[1, 2, 2, 3])).unwrap();
+        let op = be.lower_op(&OpDesc::Add { b: 1, h: 2, w: 2, c: 3 }).unwrap();
+        assert!(be.run(&op, &[&x]).is_err());
+    }
+}

@@ -1,6 +1,19 @@
-//! PJRT runtime — loads AOT HLO-text artifacts and executes them on the
-//! CPU PJRT client.  This is the only module that touches the `xla` crate;
-//! everything above it speaks `util::tensor::Tensor`.
+//! PJRT runtime + the pluggable execution backends.
+//!
+//! Three layers live here:
+//!
+//! * [`Runtime`] / [`Exec`] — loads AOT HLO-text artifacts and executes
+//!   them on the CPU PJRT client.  This module (plus [`backend`]) is the
+//!   only code that touches the `xla` crate; everything above it speaks
+//!   `util::tensor::Tensor` or opaque [`Value`] buffer handles.
+//! * [`Backend`] / [`Value`] (see [`backend`]) — the runtime abstraction
+//!   the lowered execution plans dispatch through.  [`PjrtBackend`] keeps
+//!   activations and pre-uploaded operands device-resident across steps;
+//!   [`HostBackend`] (see [`host`]) executes the same lowered plans on the
+//!   native `crate::kernels` with zero XLA dependency.
+//! * [`measure_protocol`] — the single measurement protocol (App. C:
+//!   warm-up then timed iterations) shared by artifact-level
+//!   [`measure`] and `CompiledPlan::measure`.
 //!
 //! Pattern from /opt/xla-example/load_hlo: HLO *text* -> HloModuleProto
 //! (text parser reassigns 64-bit instruction ids) -> XlaComputation ->
@@ -16,6 +29,12 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::util::tensor::Tensor;
+
+pub mod backend;
+pub mod host;
+
+pub use backend::{Backend, OpDesc, OpHandle, PjrtBackend, Value};
+pub use host::HostBackend;
 
 /// A compiled executable plus its artifact identity.
 pub struct Exec {
@@ -55,28 +74,21 @@ impl Exec {
         parts.into_iter().map(from_literal).collect()
     }
 
-    /// Execute and return only wall time (for the latency tables); the
-    /// output is materialized to host to include transfer like the
-    /// paper's PyTorch-format protocol does.
-    pub fn run_timed(&self, args: &[&Tensor]) -> Result<(Vec<Tensor>, f64)> {
-        let t0 = Instant::now();
-        let out = self.run(args)?;
-        Ok((out, t0.elapsed().as_secs_f64() * 1e3))
+    /// Execute with **device-resident** buffers and return the op's output
+    /// buffer still on device — no host transfer in either direction.
+    /// Single-output executables only (every conv/elementwise module the
+    /// execution plans dispatch is one): with PJRT's untupled results the
+    /// first leaf buffer is the output.
+    pub fn run_device(&self, args: &[&xla::PjRtBuffer]) -> Result<xla::PjRtBuffer> {
+        let outs = self.exe.execute_b::<&xla::PjRtBuffer>(args)?;
+        outs.into_iter()
+            .next()
+            .and_then(|per_dev| per_dev.into_iter().next())
+            .context("executable produced no output buffer")
     }
 }
 
-fn to_literal(t: &Tensor) -> xla::Literal {
-    let lit = xla::Literal::vec1(&t.data[..]);
-    if t.dims.is_empty() {
-        // scalar: reshape to rank-0
-        lit.reshape(&[]).expect("scalar reshape")
-    } else {
-        let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
-        lit.reshape(&dims).expect("reshape")
-    }
-}
-
-fn from_literal(lit: xla::Literal) -> Result<Tensor> {
+pub(crate) fn from_literal(lit: xla::Literal) -> Result<Tensor> {
     let shape = lit.array_shape()?;
     let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
     let data = lit.to_vec::<f32>()?;
@@ -116,6 +128,15 @@ impl Runtime {
 
     pub fn root(&self) -> &Path {
         &self.root
+    }
+
+    /// Upload a host tensor to a device buffer on this runtime's client.
+    /// The buffer persists until dropped — the PJRT backend uses this to
+    /// pin weights/operands device-resident for the life of a plan.
+    pub fn to_device(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<f32>(&t.data, &t.dims, None)
+            .map_err(|e| anyhow::anyhow!("host->device: {e:?}"))
     }
 
     /// Load + compile an artifact by manifest-relative path, with caching.
@@ -186,22 +207,26 @@ pub struct LatencyStats {
     pub iters: usize,
 }
 
-/// The paper's measurement protocol (App. C): warm up, then average over
-/// timed iterations.  Counts are configurable because the paper's
-/// 300/200 split is overkill for CPU microbenches in CI.
-pub fn measure(
-    exec: &Exec,
-    args: &[&Tensor],
+/// The paper's measurement protocol (App. C): warm up, then summarize
+/// timed iterations.  This is the **single** implementation — artifact
+/// benches ([`measure`]) and deployed-plan latency
+/// (`CompiledPlan::measure`) both run through it, so every latency number
+/// in the repo computes its quantiles identically.  Counts are
+/// configurable because the paper's 300/200 split is overkill for CPU
+/// microbenches in CI.
+pub fn measure_protocol(
     warmup: usize,
     iters: usize,
+    mut run: impl FnMut() -> Result<()>,
 ) -> Result<LatencyStats> {
     for _ in 0..warmup {
-        exec.run(args)?;
+        run()?;
     }
+    let iters = iters.max(1);
     let mut times = Vec::with_capacity(iters);
     for _ in 0..iters {
         let t0 = Instant::now();
-        exec.run(args)?;
+        run()?;
         times.push(t0.elapsed().as_secs_f64() * 1e3);
     }
     times.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -212,4 +237,16 @@ pub fn measure(
         p95_ms: times[((times.len() as f64 * 0.95) as usize).min(times.len() - 1)],
         iters,
     })
+}
+
+/// [`measure_protocol`] over one executable with fixed host args (the
+/// per-op latency-table path; output materialized to host each iteration,
+/// matching the paper's PyTorch-format protocol).
+pub fn measure(
+    exec: &Exec,
+    args: &[&Tensor],
+    warmup: usize,
+    iters: usize,
+) -> Result<LatencyStats> {
+    measure_protocol(warmup, iters, || exec.run(args).map(|_| ()))
 }

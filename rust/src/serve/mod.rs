@@ -4,8 +4,9 @@
 //!
 //! Two layers:
 //!
-//! * [`Engine`] owns the runtime + manifest (`Arc<Runtime>` +
-//!   `Arc<Manifest>`) and replaces the `(&Runtime, &Manifest)`
+//! * [`Engine`] owns an execution [`Backend`] (PJRT over an artifact set
+//!   via [`Engine::open`], or the native host kernels via
+//!   [`Engine::host`]) and replaces the `(&Runtime, &Manifest)`
 //!   parameter-threading the execution API used to require at every call
 //!   site.  `Engine::lower` produces an owned [`CompiledPlan`] for hot
 //!   loops; `Engine::deploy` produces a [`Session`].
@@ -37,7 +38,7 @@ use anyhow::{Context, Result};
 use crate::exec::{CompiledPlan, Format, Plan};
 use crate::ir::Task;
 use crate::model::{Manifest, Model};
-use crate::runtime::Runtime;
+use crate::runtime::{Backend, HostBackend, LatencyStats, PjrtBackend, Runtime};
 use crate::util::par;
 use crate::util::tensor::Tensor;
 
@@ -45,17 +46,26 @@ use crate::util::tensor::Tensor;
 // Engine
 // ---------------------------------------------------------------------------
 
-/// Owning handle over one artifact set: the PJRT runtime and the manifest.
-/// Cheap to clone (two `Arc`s); every deployment-side API hangs off it.
+/// Owning deployment handle over one execution [`Backend`].  For the PJRT
+/// backend it also carries the runtime + manifest (gated-graph training
+/// and table construction need them); the host backend needs neither —
+/// `Engine::host()` works from a fresh checkout with no artifacts and no
+/// XLA.  Cheap to clone (`Arc`s all the way down).
 #[derive(Clone)]
 pub struct Engine {
-    rt: Arc<Runtime>,
-    man: Arc<Manifest>,
+    backend: Arc<dyn Backend>,
+    rt: Option<Arc<Runtime>>,
+    man: Option<Arc<Manifest>>,
 }
 
 impl Engine {
+    /// Engine over the PJRT backend for an already-open runtime+manifest.
     pub fn new(rt: Arc<Runtime>, man: Arc<Manifest>) -> Engine {
-        Engine { rt, man }
+        Engine {
+            backend: Arc::new(PjrtBackend::new(Arc::clone(&rt), Arc::clone(&man))),
+            rt: Some(rt),
+            man: Some(man),
+        }
     }
 
     /// Open an artifacts directory: PJRT client + manifest in one call.
@@ -66,23 +76,60 @@ impl Engine {
         ))
     }
 
+    /// Engine over the native host backend ([`HostBackend`]): executes
+    /// lowered plans on `crate::kernels` — no artifacts, no XLA.
+    pub fn host() -> Engine {
+        Engine::with_backend(Arc::new(HostBackend::new()))
+    }
+
+    /// Engine over an arbitrary backend (e.g.
+    /// [`HostBackend::per_dispatch`] for the round-trip baseline).
+    pub fn with_backend(backend: Arc<dyn Backend>) -> Engine {
+        Engine { backend, rt: None, man: None }
+    }
+
+    /// The execution backend (transfer counters live here).
+    pub fn backend(&self) -> &Arc<dyn Backend> {
+        &self.backend
+    }
+
+    pub fn try_runtime(&self) -> Option<&Arc<Runtime>> {
+        self.rt.as_ref()
+    }
+
+    pub fn try_manifest(&self) -> Option<&Arc<Manifest>> {
+        self.man.as_ref()
+    }
+
+    /// The PJRT runtime.  Panics on a host-backend engine; PJRT-only
+    /// callers (tables, gated training, the artifact test suites) use
+    /// this, everything else should go through [`Engine::backend`].
     pub fn runtime(&self) -> &Arc<Runtime> {
-        &self.rt
+        self.try_runtime()
+            .expect("engine has no PJRT runtime (host backend)")
     }
 
+    /// The artifact manifest.  Panics on a host-backend engine.
     pub fn manifest(&self) -> &Arc<Manifest> {
-        &self.man
+        self.try_manifest()
+            .expect("engine has no artifact manifest (host backend)")
     }
 
-    /// Load a model family by manifest name.
+    /// Load a model family by manifest name (gated graph — PJRT only).
     pub fn load_model(&self, name: &str) -> Result<Model> {
-        Model::load(self.rt.clone(), &self.man, name)
+        let rt = self
+            .try_runtime()
+            .context("gated-graph models need the PJRT backend (artifacts + XLA)")?;
+        let man = self
+            .try_manifest()
+            .context("gated-graph models need the PJRT backend (artifacts + XLA)")?;
+        Model::load(rt.clone(), man, name)
     }
 
     /// Lower a plan to an owned [`CompiledPlan`] (one-time cost; reuse it
     /// across calls).  The old `plan.compile(rt, man, fmt)` entry point.
     pub fn lower(&self, plan: &Arc<Plan>, fmt: Format) -> Result<CompiledPlan> {
-        CompiledPlan::lower(Arc::clone(plan), &self.rt, &self.man, fmt)
+        CompiledPlan::lower(Arc::clone(plan), Arc::clone(&self.backend), fmt)
     }
 
     /// One-shot forward: lowers, then runs.  Hot loops should [`Engine::lower`]
@@ -105,7 +152,7 @@ impl Engine {
         fmt: Format,
         warmup: usize,
         iters: usize,
-    ) -> Result<f64> {
+    ) -> Result<LatencyStats> {
         self.lower(plan, fmt)?.measure(warmup, iters)
     }
 
@@ -219,20 +266,20 @@ struct Shared {
     stats: StatsInner,
 }
 
-/// The dispatchable side of a session: a lowered plan, or an arbitrary
-/// host function (tests / mock serving benches run the queue machinery
-/// without a PJRT runtime).
+/// The dispatchable side of a session: a lowered plan (any backend), or
+/// an arbitrary host function (tests / mock serving benches run the queue
+/// machinery without any runtime at all).
 #[derive(Clone)]
-enum Backend {
+enum Dispatch {
     Plan(Arc<CompiledPlan>),
-    Host(Arc<dyn Fn(&Tensor, Option<&Tensor>) -> Result<Tensor> + Send + Sync>),
+    Fn(Arc<dyn Fn(&Tensor, Option<&Tensor>) -> Result<Tensor> + Send + Sync>),
 }
 
-impl Backend {
+impl Dispatch {
     fn run(&self, x: &Tensor, t: Option<&Tensor>) -> Result<Tensor> {
         match self {
-            Backend::Plan(cp) => cp.forward(x, t),
-            Backend::Host(f) => f(x, t),
+            Dispatch::Plan(cp) => cp.forward(x, t),
+            Dispatch::Fn(f) => f(x, t),
         }
     }
 }
@@ -241,7 +288,7 @@ impl Backend {
 /// threads.  Dropping (or [`Session::shutdown`]) closes the queue, serves
 /// every already-accepted request, and joins the workers.
 pub struct Session {
-    backend: Backend,
+    backend: Dispatch,
     shared: Arc<Shared>,
     pool: par::Pool,
     batch: usize,
@@ -258,7 +305,7 @@ impl Session {
             .context("cannot serve an empty plan (no steps)")?;
         let batch = cp.batch();
         let needs_t = cp.task() == Task::Diffusion;
-        let backend = Backend::Plan(cp);
+        let backend = Dispatch::Plan(cp);
         Ok(Session::start(backend, batch, dims[1..].to_vec(), needs_t, cfg))
     }
 
@@ -277,11 +324,11 @@ impl Session {
         F: Fn(&Tensor, Option<&Tensor>) -> Result<Tensor> + Send + Sync + 'static,
     {
         assert!(batch >= 1, "batch must be positive");
-        Session::start(Backend::Host(Arc::new(f)), batch, in_tail.to_vec(), needs_t, cfg)
+        Session::start(Dispatch::Fn(Arc::new(f)), batch, in_tail.to_vec(), needs_t, cfg)
     }
 
     fn start(
-        backend: Backend,
+        backend: Dispatch,
         batch: usize,
         in_tail: Vec<usize>,
         needs_t: bool,
@@ -417,7 +464,7 @@ impl Drop for Session {
     }
 }
 
-fn worker_loop(shared: &Shared, backend: &Backend, b: usize) {
+fn worker_loop(shared: &Shared, backend: &Dispatch, b: usize) {
     loop {
         let taken = {
             let mut g = shared.state.lock().unwrap();
@@ -453,7 +500,7 @@ fn worker_loop(shared: &Shared, backend: &Backend, b: usize) {
     }
 }
 
-fn run_batch(shared: &Shared, backend: &Backend, b: usize, reqs: Vec<Request>) {
+fn run_batch(shared: &Shared, backend: &Dispatch, b: usize, reqs: Vec<Request>) {
     let total_rows: usize = reqs.iter().map(|r| r.x.dims[0]).sum();
     // a panicking backend must not strand the batch's tickets (waiters
     // would block forever and the worker thread would die silently) —

@@ -7,12 +7,50 @@
 //! paper diagnoses.  Spans whose k_full exceeds K_MAX are unavailable
 //! (they are never latency-optimal; DESIGN.md §2).
 
+use std::collections::BTreeSet;
+
 use crate::ir::Spec;
 use crate::solver::dp::{self, DpInput, SpanArc};
 
 /// Full merged kernel size of span (i, j] when every conv is kept.
 pub fn k_full(spec: &Spec, i: usize, j: usize) -> usize {
     1 + ((i + 1)..=j).map(|l| spec.k_increment(i, l)).sum::<usize>()
+}
+
+/// Greedily cover every segment with the *largest* valid spans whose full
+/// kernel stays achievable (k_full ∈ K_ij, i.e. within K_MAX) — the Depth
+/// baseline's extreme point, built from spec combinatorics alone (no
+/// latency/importance tables).  Used by the host-backend `serve` /
+/// `profile` paths and the exec equivalence tests as a table-free
+/// depth-compressed solution.  Returns `(a, c, spans)` for
+/// [`crate::exec::Plan::from_solution`].
+pub fn greedy_full_solution(
+    spec: &Spec,
+) -> (Vec<usize>, BTreeSet<usize>, Vec<(usize, usize, usize)>) {
+    let mut a: Vec<usize> = Vec::new();
+    let mut spans: Vec<(usize, usize, usize)> = Vec::new();
+    for (s, e) in spec.segments() {
+        let mut i = s - 1;
+        while i < e {
+            let mut j_pick = i + 1;
+            for j in ((i + 1)..=e).rev() {
+                if spec.valid_span(i, j) {
+                    let kf = k_full(spec, i, j);
+                    if spec.kernel_options(i, j).contains(&kf) {
+                        j_pick = j;
+                        break;
+                    }
+                }
+            }
+            spans.push((i, j_pick, k_full(spec, i, j_pick)));
+            if j_pick != spec.len() {
+                a.push(j_pick);
+            }
+            i = j_pick;
+        }
+    }
+    let c: BTreeSet<usize> = (1..=spec.len()).collect();
+    (a, c, spans)
 }
 
 /// Restrict a LayerMerge arc set to the Depth baseline's search space.
@@ -52,6 +90,35 @@ mod tests {
         assert_eq!(k_full(&sp, 1, 4), 5);
         assert_eq!(k_full(&sp, 0, 4), 7); // stem k=3 adds 2
         assert_eq!(k_full(&sp, 3, 4), 1); // only the 1x1
+    }
+
+    #[test]
+    fn greedy_cover_is_valid_and_contiguous() {
+        for (spec, _) in [
+            crate::ir::synth::by_name("hostnet").unwrap(),
+            crate::ir::synth::by_name("hostchain").unwrap(),
+        ] {
+            let (a, c, spans) = greedy_full_solution(&spec);
+            assert_eq!(c.len(), spec.len(), "Depth keeps every conv");
+            // spans tile 0..L contiguously and are all valid
+            let mut prev = 0usize;
+            for &(i, j, k) in &spans {
+                assert_eq!(i, prev, "gap in span cover");
+                assert!(spec.valid_span(i, j), "invalid span ({i},{j}]");
+                assert_eq!(k, k_full(&spec, i, j));
+                assert!(spec.kernel_options(i, j).contains(&k));
+                prev = j;
+            }
+            assert_eq!(prev, spec.len());
+            // kept boundaries = interior span ends
+            let ends: Vec<usize> =
+                spans.iter().map(|&(_, j, _)| j).filter(|&j| j != spec.len()).collect();
+            assert_eq!(a, ends);
+            assert!(
+                spans.iter().any(|&(i, j, _)| j - i > 1),
+                "expected at least one real merge in {spans:?}"
+            );
+        }
     }
 
     #[test]

@@ -22,6 +22,18 @@ pub fn max_threads() -> usize {
     }
 }
 
+/// Thread budget for a data-parallel pass over `len` elements: serial
+/// below a quarter-MiB of f32s (scoped-thread spawn is ~10µs each, which
+/// would dominate), otherwise [`max_threads`].  The single knob shared by
+/// the elementwise host kernels and the exec glue loops.
+pub fn auto_threads(len: usize) -> usize {
+    if len < (1 << 18) {
+        1
+    } else {
+        max_threads()
+    }
+}
+
 /// Run `f(chunk_index, chunk)` over `chunk_len`-sized disjoint chunks of
 /// `data`, distributing chunks across up to `threads` workers.  Chunks are
 /// claimed atomically, so uneven per-chunk cost balances itself.
@@ -196,6 +208,13 @@ mod tests {
     #[test]
     fn max_threads_positive() {
         assert!(max_threads() >= 1);
+    }
+
+    #[test]
+    fn auto_threads_serial_below_threshold() {
+        assert_eq!(auto_threads(0), 1);
+        assert_eq!(auto_threads((1 << 18) - 1), 1);
+        assert!(auto_threads(1 << 18) >= 1);
     }
 
     #[test]

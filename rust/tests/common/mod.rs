@@ -2,6 +2,9 @@
 //! artifacts skip (with a notice) when `make artifacts` has not run —
 //! `make test` always builds them first.
 
+// each test binary compiles its own copy and uses a different subset
+#![allow(dead_code)]
+
 use std::path::PathBuf;
 use std::sync::Arc;
 

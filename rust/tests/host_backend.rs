@@ -1,0 +1,498 @@
+//! Host-backend parity + transfer-residency suite.  Runs with **no**
+//! artifacts and no XLA — this is the test bed that makes the paper's
+//! latency machinery exercisable from a fresh offline checkout.
+//!
+//! * every op variant the lowering can emit (plain / fa_* / far_* convs
+//!   incl. stride>1 and depthwise, group norm, upsample, attention, head)
+//!   is pinned against a naive scalar oracle;
+//! * a lowered chain-topology plan performs exactly 1 upload + 1
+//!   download per steady-state forward (the device-residency property,
+//!   counter-asserted);
+//! * Fused == Eager on original and greedy-merged synthetic plans;
+//! * an original-plan forward matches a layer-by-layer scalar reference
+//!   end to end;
+//! * the serving Session coalesces correctly on the host backend.
+
+mod common;
+
+use std::sync::Arc;
+
+use common::rand_tensor as randt;
+use layermerge::exec::{Format, Plan};
+use layermerge::ir::synth;
+use layermerge::kernels::Act;
+use layermerge::merge::expand_depthwise;
+use layermerge::runtime::{Backend, HostBackend, OpDesc, Value};
+use layermerge::serve::{Engine, ServeCfg};
+use layermerge::solver::depth::greedy_full_solution;
+use layermerge::util::rng::Rng;
+use layermerge::util::tensor::Tensor;
+
+// ---------------------------------------------------------------------------
+// Naive scalar oracles (deliberately independent of crate::kernels)
+// ---------------------------------------------------------------------------
+
+/// SAME conv + bias (+ residual) (+ act), XLA padding convention.
+fn conv_same_ref(
+    x: &Tensor,
+    w: &Tensor,
+    bias: &[f32],
+    stride: usize,
+    depthwise: bool,
+    act: Option<Act>,
+    res: Option<&Tensor>,
+) -> Tensor {
+    let wd = if depthwise { expand_depthwise(w) } else { w.clone() };
+    let (bn, h, wdt, ci) = (x.dims[0], x.dims[1], x.dims[2], x.dims[3]);
+    let (co, _, k) = (wd.dims[0], wd.dims[1], wd.dims[2]);
+    let ho = h.div_ceil(stride);
+    let wo = wdt.div_ceil(stride);
+    let plo_h = (((ho - 1) * stride + k).saturating_sub(h)) / 2;
+    let plo_w = (((wo - 1) * stride + k).saturating_sub(wdt)) / 2;
+    let mut y = Tensor::zeros(&[bn, ho, wo, co]);
+    for n in 0..bn {
+        for p in 0..ho {
+            for q in 0..wo {
+                for o in 0..co {
+                    let mut acc = bias[o];
+                    for c in 0..ci {
+                        for a in 0..k {
+                            for b2 in 0..k {
+                                let iy = p * stride + a;
+                                let ix = q * stride + b2;
+                                if iy >= plo_h
+                                    && ix >= plo_w
+                                    && iy - plo_h < h
+                                    && ix - plo_w < wdt
+                                {
+                                    acc += x.at4(n, iy - plo_h, ix - plo_w, c)
+                                        * wd.at4(o, c, a, b2);
+                                }
+                            }
+                        }
+                    }
+                    if let Some(r) = res {
+                        acc += r.at4(n, p, q, o);
+                    }
+                    y.set4(
+                        n,
+                        p,
+                        q,
+                        o,
+                        match act {
+                            Some(Act::Relu) => acc.max(0.0),
+                            Some(Act::Swish) => acc / (1.0 + (-acc).exp()),
+                            None => acc,
+                        },
+                    );
+                }
+            }
+        }
+    }
+    y
+}
+
+fn group_norm_ref(x: &Tensor, scale: &[f32], bias: &[f32], groups: usize) -> Tensor {
+    let (bn, h, w, c) = (x.dims[0], x.dims[1], x.dims[2], x.dims[3]);
+    let cg = c / groups;
+    let mut y = Tensor::zeros(&[bn, h, w, c]);
+    for n in 0..bn {
+        for g in 0..groups {
+            let mut vals = Vec::new();
+            for p in 0..h * w {
+                for ci in g * cg..(g + 1) * cg {
+                    vals.push(x.data[(n * h * w + p) * c + ci]);
+                }
+            }
+            let m: f32 = vals.iter().sum::<f32>() / vals.len() as f32;
+            let var: f32 =
+                vals.iter().map(|v| (v - m) * (v - m)).sum::<f32>() / vals.len() as f32;
+            let inv = 1.0 / (var + 1e-5).sqrt();
+            for p in 0..h * w {
+                for ci in g * cg..(g + 1) * cg {
+                    let idx = (n * h * w + p) * c + ci;
+                    y.data[idx] = (x.data[idx] - m) * inv * scale[ci] + bias[ci];
+                }
+            }
+        }
+    }
+    y
+}
+
+fn attention_ref(x: &Tensor, wqkv: &Tensor, wout: &Tensor) -> Tensor {
+    let (bn, h, w, c) = (x.dims[0], x.dims[1], x.dims[2], x.dims[3]);
+    let s = h * w;
+    let mut y = x.clone();
+    for n in 0..bn {
+        let proj = |i: usize, o: usize| -> f32 {
+            (0..c).map(|ci| x.data[(n * s + i) * c + ci] * wqkv.data[ci * 3 * c + o]).sum()
+        };
+        let mut att = vec![0.0f32; s * s];
+        for i in 0..s {
+            for j in 0..s {
+                let dot: f32 = (0..c).map(|ci| proj(i, ci) * proj(j, c + ci)).sum();
+                att[i * s + j] = dot / (c as f32).sqrt();
+            }
+        }
+        for row in att.chunks_mut(s) {
+            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0;
+            for v in row.iter_mut() {
+                *v = (*v - mx).exp();
+                sum += *v;
+            }
+            for v in row.iter_mut() {
+                *v /= sum;
+            }
+        }
+        for i in 0..s {
+            for oc in 0..c {
+                let mut acc = 0.0f32;
+                for ci in 0..c {
+                    let o1: f32 =
+                        (0..s).map(|j| att[i * s + j] * proj(j, 2 * c + ci)).sum();
+                    acc += o1 * wout.data[ci * c + oc];
+                }
+                y.data[(n * s + i) * c + oc] += acc;
+            }
+        }
+    }
+    y
+}
+
+fn head_ref(x: &Tensor, w: &Tensor, b: &[f32]) -> Tensor {
+    let (bn, h, wd, c) = (x.dims[0], x.dims[1], x.dims[2], x.dims[3]);
+    let classes = w.dims[1];
+    let mut y = Tensor::zeros(&[bn, classes]);
+    for n in 0..bn {
+        let mut pooled = vec![0.0f32; c];
+        for p in 0..h * wd {
+            for (ci, pv) in pooled.iter_mut().enumerate() {
+                *pv += x.data[(n * h * wd + p) * c + ci];
+            }
+        }
+        for pv in pooled.iter_mut() {
+            *pv /= (h * wd) as f32;
+        }
+        for o in 0..classes {
+            y.data[n * classes + o] =
+                b[o] + (0..c).map(|ci| pooled[ci] * w.data[ci * classes + o]).sum::<f32>();
+        }
+    }
+    y
+}
+
+fn run_host(be: &HostBackend, desc: OpDesc, args: &[&Tensor]) -> Tensor {
+    let vals: Vec<Value> = args.iter().map(|t| be.upload(t).unwrap()).collect();
+    let refs: Vec<&Value> = vals.iter().collect();
+    let op = be.lower_op(&desc).unwrap();
+    be.download(&be.run(&op, &refs).unwrap()).unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// Op parity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn conv_variants_match_oracle() {
+    let be = HostBackend::new();
+    let mut rng = Rng::new(0xc0);
+    // (b, h, cin, cout, k, stride, depthwise)
+    let shapes = [
+        (2usize, 8usize, 3usize, 5usize, 3usize, 1usize, false),
+        (1, 8, 4, 6, 3, 2, false),
+        (1, 7, 2, 3, 5, 2, false),
+        (2, 6, 4, 4, 1, 1, false),
+        (1, 8, 6, 6, 3, 1, true),
+        (1, 8, 4, 4, 3, 2, true),
+    ];
+    for (b, h, cin, cout, k, stride, dw) in shapes {
+        for act in [None, Some(Act::Relu), Some(Act::Swish)] {
+            for residual in [false, true] {
+                let x = randt(&mut rng, &[b, h, h, cin]);
+                let w = randt(&mut rng, &[cout, if dw { 1 } else { cin }, k, k]);
+                let bias: Vec<f32> = (0..cout).map(|_| rng.normal()).collect();
+                let bt = Tensor::new(vec![cout], bias.clone());
+                let (ho, wo) = (h.div_ceil(stride), h.div_ceil(stride));
+                let r = randt(&mut rng, &[b, ho, wo, cout]);
+                let desc = OpDesc::Conv {
+                    b,
+                    h,
+                    w: h,
+                    cin,
+                    cout,
+                    k,
+                    stride,
+                    depthwise: dw,
+                    act,
+                    residual,
+                };
+                let mut args: Vec<&Tensor> = vec![&x, &w, &bt];
+                if residual {
+                    args.push(&r);
+                }
+                let got = run_host(&be, desc, &args);
+                let want =
+                    conv_same_ref(&x, &w, &bias, stride, dw, act, residual.then_some(&r));
+                assert_eq!(got.dims, want.dims);
+                assert!(
+                    got.max_abs_diff(&want) < 1e-3,
+                    "conv b{b} h{h} i{cin} o{cout} k{k} s{stride} dw{dw} act {act:?} \
+                     res {residual}: diff {}",
+                    got.max_abs_diff(&want)
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn elementwise_ops_match_oracle() {
+    let be = HostBackend::new();
+    let mut rng = Rng::new(0xe1);
+    let (b, h, c) = (2usize, 4usize, 8usize);
+    let x = randt(&mut rng, &[b, h, h, c]);
+
+    // group norm
+    let scale: Vec<f32> = (0..c).map(|_| 1.0 + 0.1 * rng.normal()).collect();
+    let bias: Vec<f32> = (0..c).map(|_| rng.normal() * 0.2).collect();
+    let st = Tensor::new(vec![c], scale.clone());
+    let bt = Tensor::new(vec![c], bias.clone());
+    let got = run_host(&be, OpDesc::GroupNorm { b, h, w: h, c, groups: 4 }, &[&x, &st, &bt]);
+    let want = group_norm_ref(&x, &scale, &bias, 4);
+    assert!(got.max_abs_diff(&want) < 1e-3, "gn diff {}", got.max_abs_diff(&want));
+
+    // add
+    let y2 = randt(&mut rng, &[b, h, h, c]);
+    let got = run_host(&be, OpDesc::Add { b, h, w: h, c }, &[&x, &y2]);
+    for (i, v) in got.data.iter().enumerate() {
+        assert!((v - (x.data[i] + y2.data[i])).abs() < 1e-6);
+    }
+
+    // activations
+    for act in [Act::Relu, Act::Swish] {
+        let got = run_host(&be, OpDesc::Activation { act, b, h, w: h, c }, &[&x]);
+        for (i, v) in got.data.iter().enumerate() {
+            assert!((v - act.apply(x.data[i])).abs() < 1e-6);
+        }
+    }
+
+    // upsample
+    let got = run_host(&be, OpDesc::Upsample { b, h, w: h, c }, &[&x]);
+    assert_eq!(got.dims, vec![b, 2 * h, 2 * h, c]);
+    for n in 0..b {
+        for p in 0..2 * h {
+            for q in 0..2 * h {
+                for ci in 0..c {
+                    assert_eq!(got.at4(n, p, q, ci), x.at4(n, p / 2, q / 2, ci));
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn attention_and_head_match_oracle() {
+    let be = HostBackend::new();
+    let mut rng = Rng::new(0xa7);
+    let (b, h, c) = (1usize, 3usize, 4usize);
+    let x = randt(&mut rng, &[b, h, h, c]);
+    let wqkv = randt(&mut rng, &[c, 3 * c]);
+    let wout = randt(&mut rng, &[c, c]);
+    let got = run_host(&be, OpDesc::Attention { b, h, w: h, c }, &[&x, &wqkv, &wout]);
+    let want = attention_ref(&x, &wqkv, &wout);
+    assert!(got.max_abs_diff(&want) < 1e-3, "attn diff {}", got.max_abs_diff(&want));
+
+    let (hb, hh, hidden, classes) = (2usize, 4usize, 6usize, 10usize);
+    let xh = randt(&mut rng, &[hb, hh, hh, hidden]);
+    let w = randt(&mut rng, &[hidden, classes]);
+    let bias: Vec<f32> = (0..classes).map(|_| rng.normal()).collect();
+    let bt = Tensor::new(vec![classes], bias.clone());
+    let got = run_host(
+        &be,
+        OpDesc::Head { b: hb, h: hh, w: hh, hidden, classes, model: "x".into() },
+        &[&xh, &w, &bt],
+    );
+    let want = head_ref(&xh, &w, &bias);
+    assert_eq!(got.dims, vec![hb, classes]);
+    assert!(got.max_abs_diff(&want) < 1e-3, "head diff {}", got.max_abs_diff(&want));
+}
+
+// ---------------------------------------------------------------------------
+// Lowered plans end to end
+// ---------------------------------------------------------------------------
+
+/// Layer-by-layer scalar reference for a chain classifier spec.
+fn chain_ref_forward(spec: &layermerge::ir::Spec, flat: &[f32], x: &Tensor) -> Tensor {
+    let mut cur = x.clone();
+    for l in 1..=spec.len() {
+        let c = spec.conv(l);
+        let w = Tensor::new(
+            spec.param(&format!("conv{l}.w")).shape.clone(),
+            spec.param_slice(flat, &format!("conv{l}.w")).to_vec(),
+        );
+        let b = spec.param_slice(flat, &format!("conv{l}.b"));
+        let act = if l < spec.len() { Act::parse(&c.act) } else { None };
+        cur = conv_same_ref(&cur, &w, b, c.stride, c.depthwise, act, None);
+    }
+    let hw = Tensor::new(
+        spec.param("head.w").shape.clone(),
+        spec.param_slice(flat, "head.w").to_vec(),
+    );
+    head_ref(&cur, &hw, spec.param_slice(flat, "head.b"))
+}
+
+#[test]
+fn chain_plan_matches_layerwise_reference() {
+    let (spec, params) = synth::by_name("hostchain-tiny").unwrap();
+    let engine = Engine::host();
+    let plan = Arc::new(Plan::original(&spec, &params).unwrap());
+    let mut rng = Rng::new(7);
+    let x = randt(&mut rng, &[spec.batch, spec.h, spec.w, spec.c]);
+    let want = chain_ref_forward(&spec, &params, &x);
+    for fmt in [Format::Eager, Format::Fused] {
+        let got = engine.lower(&plan, fmt).unwrap().forward(&x, None).unwrap();
+        assert_eq!(got.dims, want.dims);
+        assert!(
+            got.rel_l2(&want) < 1e-4,
+            "{fmt:?} vs reference: rel_l2 {}",
+            got.rel_l2(&want)
+        );
+    }
+}
+
+#[test]
+fn fused_equals_eager_on_original_and_merged_plans() {
+    let (spec, params) = synth::by_name("hostnet-tiny").unwrap();
+    let engine = Engine::host();
+    let mut rng = Rng::new(8);
+    let x = randt(&mut rng, &[spec.batch, spec.h, spec.w, spec.c]);
+    let orig = Arc::new(Plan::original(&spec, &params).unwrap());
+    let (a, c, spans) = greedy_full_solution(&spec);
+    let merged = Arc::new(Plan::from_solution(&spec, &params, &a, &c, &spans).unwrap());
+    assert!(merged.depth() < orig.depth(), "greedy cover must reduce depth");
+    for plan in [&orig, &merged] {
+        let eager = engine.lower(plan, Format::Eager).unwrap().forward(&x, None).unwrap();
+        let fused = engine.lower(plan, Format::Fused).unwrap().forward(&x, None).unwrap();
+        assert!(
+            fused.rel_l2(&eager) < 1e-5,
+            "fused != eager (depth {}): rel_l2 {}",
+            plan.depth(),
+            fused.rel_l2(&eager)
+        );
+    }
+}
+
+#[test]
+fn chain_forward_is_one_upload_one_download() {
+    let (spec, params) = synth::by_name("hostchain-tiny").unwrap();
+    let engine = Engine::host();
+    let plan = Arc::new(Plan::original(&spec, &params).unwrap());
+    let mut rng = Rng::new(9);
+    let x = randt(&mut rng, &[spec.batch, spec.h, spec.w, spec.c]);
+    for fmt in [Format::Eager, Format::Fused] {
+        let cp = engine.lower(&plan, fmt).unwrap();
+        let be = cp.backend();
+        for _ in 0..3 {
+            let (u0, d0) = (be.uploads(), be.downloads());
+            cp.forward(&x, None).unwrap();
+            assert_eq!(
+                (be.uploads() - u0, be.downloads() - d0),
+                (1, 1),
+                "{fmt:?}: steady-state chain forward must be exactly one \
+                 upload (input) + one download (output)"
+            );
+        }
+    }
+}
+
+#[test]
+fn residual_plan_stays_resident_too() {
+    // boundary slots and projections are backend values — residuals must
+    // not add transfers (the eager add runs as a backend op)
+    let (spec, params) = synth::by_name("hostnet-tiny").unwrap();
+    let engine = Engine::host();
+    let plan = Arc::new(Plan::original(&spec, &params).unwrap());
+    let mut rng = Rng::new(10);
+    let x = randt(&mut rng, &[spec.batch, spec.h, spec.w, spec.c]);
+    let cp = engine.lower(&plan, Format::Eager).unwrap();
+    let be = cp.backend();
+    let (u0, d0) = (be.uploads(), be.downloads());
+    cp.forward(&x, None).unwrap();
+    assert_eq!((be.uploads() - u0, be.downloads() - d0), (1, 1));
+}
+
+#[test]
+fn per_dispatch_backend_round_trips_every_step() {
+    let (spec, params) = synth::by_name("hostchain-tiny").unwrap();
+    let engine = Engine::with_backend(Arc::new(HostBackend::per_dispatch()));
+    let plan = Arc::new(Plan::original(&spec, &params).unwrap());
+    let mut rng = Rng::new(11);
+    let x = randt(&mut rng, &[spec.batch, spec.h, spec.w, spec.c]);
+    let cp = engine.lower(&plan, Format::Fused).unwrap();
+    let be = cp.backend();
+    let (u0, d0) = (be.uploads(), be.downloads());
+    cp.forward(&x, None).unwrap();
+    let (du, dd) = (be.uploads() - u0, be.downloads() - d0);
+    // every step round-trips >= 3 operands in and 1 out, plus the head
+    let steps = plan.depth() + 1;
+    assert!(
+        du >= steps && dd >= 3 * steps,
+        "per-dispatch transfers too low: {du} uploads / {dd} downloads for {steps} ops"
+    );
+}
+
+#[test]
+fn measure_runs_end_to_end_without_xla() {
+    let (spec, params) = synth::by_name("hostnet-tiny").unwrap();
+    let engine = Engine::host();
+    let plan = Arc::new(Plan::original(&spec, &params).unwrap());
+    let stats = engine.measure(&plan, Format::Fused, 1, 5).unwrap();
+    assert_eq!(stats.iters, 5);
+    assert!(stats.p50_ms > 0.0 && stats.p95_ms >= stats.p50_ms);
+}
+
+// ---------------------------------------------------------------------------
+// Serving on the host backend
+// ---------------------------------------------------------------------------
+
+#[test]
+fn serve_session_coalesces_on_host_backend() {
+    let (spec, params) = synth::by_name("hostnet-tiny").unwrap();
+    let engine = Engine::host();
+    let plan = Arc::new(Plan::original(&spec, &params).unwrap());
+    let cp = engine.lower(&plan, Format::Fused).unwrap();
+    let mut rng = Rng::new(12);
+    let rows: Vec<Tensor> = (0..4)
+        .map(|_| randt(&mut rng, &[1, spec.h, spec.w, spec.c]))
+        .collect();
+    // expected: each row computed alone in a zero-padded full batch
+    // (every per-row op is batch-independent, so position is irrelevant)
+    let expected: Vec<Tensor> = rows
+        .iter()
+        .map(|r| {
+            let mut xb = Tensor::zeros(&[spec.batch, spec.h, spec.w, spec.c]);
+            xb.data[..r.data.len()].copy_from_slice(&r.data);
+            let full = cp.forward(&xb, None).unwrap();
+            let classes = full.dims[1];
+            Tensor::new(vec![1, classes], full.data[..classes].to_vec())
+        })
+        .collect();
+    let sess = engine
+        .deploy_cfg(Arc::clone(&plan), Format::Fused, ServeCfg { workers: 2, queue_cap: 16 })
+        .unwrap();
+    let tickets: Vec<_> =
+        rows.iter().map(|r| sess.submit(r.clone()).unwrap()).collect();
+    for (t, want) in tickets.into_iter().zip(&expected) {
+        let got = t.wait().unwrap();
+        assert_eq!(got.dims, want.dims);
+        assert!(
+            got.max_abs_diff(want) < 1e-6,
+            "served row deviates: {}",
+            got.max_abs_diff(want)
+        );
+    }
+    let stats = sess.stats();
+    assert_eq!(stats.rows, 4);
+    sess.shutdown();
+}

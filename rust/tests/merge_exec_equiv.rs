@@ -65,31 +65,8 @@ fn segment_merged_plan_close_to_gated_graph() {
     let engine = t.engine();
     let (model, params) = setup(&engine, "resnetish");
     let spec: &Spec = &model.spec;
-    let mut a: Vec<usize> = Vec::new();
-    let mut spans: Vec<(usize, usize, usize)> = Vec::new();
-    for (s, e) in spec.segments() {
-        // cover the segment greedily with valid spans of full kernels
-        let mut i = s - 1;
-        while i < e {
-            let mut j_pick = i + 1;
-            for j in ((i + 1)..=e).rev() {
-                if spec.valid_span(i, j) {
-                    let kf = layermerge::solver::depth::k_full(spec, i, j);
-                    if spec.kernel_options(i, j).contains(&kf) {
-                        j_pick = j;
-                        break;
-                    }
-                }
-            }
-            let kf = layermerge::solver::depth::k_full(spec, i, j_pick);
-            spans.push((i, j_pick, kf));
-            if j_pick != spec.len() {
-                a.push(j_pick);
-            }
-            i = j_pick;
-        }
-    }
-    let c: BTreeSet<usize> = (1..=spec.len()).collect();
+    // cover each segment greedily with valid spans of full kernels
+    let (a, c, spans) = layermerge::solver::depth::greedy_full_solution(spec);
     assert!(
         spans.iter().any(|&(i, j, _)| j - i > 1),
         "expected at least one real merge in {spans:?}"

@@ -3,10 +3,13 @@
 # (stable schema "layermerge.bench.merge.v1" — one record per PR lets the
 # perf trajectory be compared across sessions).
 #
-#   * merge_ops — flat-GEMM vs naive merge, eager vs compiled forward
-#     (writes the base record)
-#   * serving   — micro-batched Session throughput at 1/4/16 concurrent
-#     clients (read-modify-write: extends the record, never replaces it)
+#   * merge_ops        — flat-GEMM vs naive merge, eager vs compiled
+#     forward (writes the base record)
+#   * runtime_dispatch — device-resident vs per-dispatch forward on the
+#     host backend, with transfer counts (the `resident_forward` record;
+#     read-modify-write)
+#   * serving          — micro-batched Session throughput at 1/4/16
+#     concurrent clients (read-modify-write)
 #
 # Usage:
 #   scripts/bench.sh              # host-only benches, no artifacts needed
@@ -16,4 +19,5 @@
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
 cargo bench --bench merge_ops ${1:+"$@"}
+cargo bench --bench runtime_dispatch
 cargo bench --bench serving

@@ -2,7 +2,8 @@
 # Tier-1 CI gate: release build + host test suite + formatting check.
 #
 # Usage: scripts/ci.sh
-#   CI_SKIP_FMT=1 scripts/ci.sh   # skip the rustfmt check (e.g. no rustfmt)
+#   CI_SKIP_FMT=1 scripts/ci.sh      # skip the rustfmt check (e.g. no rustfmt)
+#   CI_SKIP_CLIPPY=1 scripts/ci.sh   # skip the clippy gate (e.g. no clippy)
 #
 # No network, artifacts, or system XLA needed: the workspace resolves
 # `anyhow`/`xla` to in-tree path crates and artifact-dependent suites
@@ -15,6 +16,13 @@ cargo build --release
 
 echo "== cargo test -q =="
 cargo test -q
+
+if [ "${CI_SKIP_CLIPPY:-0}" != "1" ] && cargo clippy --version >/dev/null 2>&1; then
+    echo "== cargo clippy --all-targets -- -D warnings =="
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "== cargo clippy skipped (clippy unavailable or CI_SKIP_CLIPPY=1) =="
+fi
 
 if [ "${CI_SKIP_FMT:-0}" != "1" ] && cargo fmt --version >/dev/null 2>&1; then
     echo "== cargo fmt --check =="
