@@ -16,7 +16,7 @@
 
 use std::collections::BTreeSet;
 
-use layermerge::bench::{bench, bench_iters, BenchStats};
+use layermerge::bench::{bench, bench_iters, smoke, BenchStats};
 use layermerge::merge::{dirac, expand_depthwise, merge_kernels, merge_kernels_ref};
 use layermerge::util::json::Json;
 use layermerge::util::rng::Rng;
@@ -43,14 +43,23 @@ fn main() -> anyhow::Result<()> {
     let mut derived: Vec<(String, Json)> = Vec::new();
     let mut rng = Rng::new(1);
 
+    // BENCH_SMOKE=1: one tiny shape, minimal budgets, no JSON write —
+    // the CI gate that keeps this bench compiling and running
+    let shapes: &[(usize, usize, usize)] = if smoke() {
+        &[(16, 3, 3)]
+    } else {
+        &[(16, 3, 3), (64, 3, 3), (64, 7, 3), (128, 11, 3)]
+    };
+    let (budget_ms, naive_iters) = if smoke() { (10.0, 1) } else { (300.0, 5) };
+
     println!("== merge-operator benches (flat-GEMM vs naive oracle) ==");
-    for &(c, k1, k2) in &[(16usize, 3usize, 3usize), (64, 3, 3), (64, 7, 3), (128, 11, 3)] {
+    for &(c, k1, k2) in shapes {
         let w1 = randt(&mut rng, &[c, c, k1, k1]);
         let w2 = randt(&mut rng, &[c, c, k2, k2]);
         let fast = bench(
             &format!("merge_kernels_gemm c={c} k1={k1} k2={k2}"),
             2,
-            300.0,
+            budget_ms,
             || {
                 std::hint::black_box(merge_kernels(&w1, &w2, 1));
             },
@@ -59,7 +68,7 @@ fn main() -> anyhow::Result<()> {
         let slow = bench_iters(
             &format!("merge_kernels_naive c={c} k1={k1} k2={k2}"),
             1,
-            5,
+            naive_iters,
             || {
                 std::hint::black_box(merge_kernels_ref(&w1, &w2, 1));
             },
@@ -70,7 +79,8 @@ fn main() -> anyhow::Result<()> {
     }
 
     // Acceptance target: ResNet-scale 256-channel span, k1=k2=3, s1=1.
-    {
+    // (skipped in smoke: the naive oracle at 256 channels is seconds-slow)
+    if !smoke() {
         let (c, k1, k2) = (256usize, 3usize, 3usize);
         let w1 = randt(&mut rng, &[c, c, k1, k1]);
         let w2 = randt(&mut rng, &[c, c, k2, k2]);
@@ -98,7 +108,7 @@ fn main() -> anyhow::Result<()> {
     let w_exp = randt(&mut rng, &[cexp, cin, 1, 1]);
     let w_dw = expand_depthwise(&randt(&mut rng, &[cexp, 1, 3, 3]));
     let w_proj = randt(&mut rng, &[cin, cexp, 1, 1]);
-    let s = bench("merge_inverted_residual 24->96dw->24 (+dirac)", 2, 300.0, || {
+    let s = bench("merge_inverted_residual 24->96dw->24 (+dirac)", 2, budget_ms, || {
         let m1 = merge_kernels(&w_exp, &w_dw, 1);
         let mut m2 = merge_kernels(&m1, &w_proj, 1);
         let d = dirac(cin, m2.dims[2]);
@@ -112,7 +122,7 @@ fn main() -> anyhow::Result<()> {
 
     // full span composition on the real resnetish spec, if artifacts exist
     let spec_path = std::path::Path::new("artifacts/specs/resnetish.spec.json");
-    if spec_path.exists() {
+    if spec_path.exists() && !smoke() {
         let spec = layermerge::ir::Spec::load(spec_path)?;
         let flat: Vec<f32> = (0..spec.param_count).map(|_| rng.normal() * 0.1).collect();
         let kept: BTreeSet<usize> = [2usize, 3].into_iter().collect();
@@ -128,7 +138,7 @@ fn main() -> anyhow::Result<()> {
     // eager one-shot (lower per call) vs compiled plan (lower once):
     // the per-dispatch overhead the zero-overhead execution plans remove.
     let root = std::path::Path::new("artifacts");
-    if root.join("manifest.json").exists() {
+    if root.join("manifest.json").exists() && !smoke() {
         use layermerge::exec::{Format, Plan};
         use layermerge::serve::Engine;
         use std::sync::Arc;
@@ -167,6 +177,11 @@ fn main() -> anyhow::Result<()> {
         ));
     } else {
         println!("(skipping forward bench: run `make artifacts` first)");
+    }
+
+    if smoke() {
+        println!("(BENCH_SMOKE=1: skipping BENCH_merge.json write)");
+        return Ok(());
     }
 
     // read-modify-write: the serving bench owns the `serve *` rows and

@@ -14,7 +14,7 @@
 
 use std::sync::Arc;
 
-use layermerge::bench::bench;
+use layermerge::bench::{bench, smoke};
 use layermerge::exec::{Format, Plan};
 use layermerge::ir::synth;
 use layermerge::runtime::{Backend, HostBackend};
@@ -38,8 +38,14 @@ fn main() -> anyhow::Result<()> {
     let mut rows: Vec<Json> = Vec::new();
     let mut derived: Vec<(String, Json)> = Vec::new();
 
+    // BENCH_SMOKE=1: tiny synthetic specs, minimal budgets, no JSON
+    // write — the CI gate that keeps this bench compiling and running
+    let specs: &[&str] =
+        if smoke() { &["hostnet-tiny", "hostchain-tiny"] } else { &["hostnet", "hostchain"] };
+    let budget_ms = if smoke() { 10.0 } else { 300.0 };
+
     println!("== runtime dispatch benches (host backend, resident vs per-dispatch) ==");
-    for name in ["hostnet", "hostchain"] {
+    for &name in specs {
         let (spec, params) = synth::by_name(name).expect("synthetic spec");
         let plan = Arc::new(Plan::original(&spec, &params)?);
         let mut rng = Rng::new(0xd15);
@@ -53,7 +59,7 @@ fn main() -> anyhow::Result<()> {
         // as backend values
         let resident = Engine::host();
         let cp = resident.lower(&plan, Format::Fused)?;
-        let s_res = bench(&format!("resident forward {name} fused"), 3, 300.0, || {
+        let s_res = bench(&format!("resident forward {name} fused"), 3, budget_ms, || {
             std::hint::black_box(cp.forward(&x, None).unwrap());
         });
         println!("{}", s_res.row());
@@ -65,7 +71,7 @@ fn main() -> anyhow::Result<()> {
         // per-dispatch: the same lowered plan on the round-trip backend
         let dispatch = Engine::with_backend(Arc::new(HostBackend::per_dispatch()));
         let cpd = dispatch.lower(&plan, Format::Fused)?;
-        let s_dis = bench(&format!("dispatch forward {name} fused"), 3, 300.0, || {
+        let s_dis = bench(&format!("dispatch forward {name} fused"), 3, budget_ms, || {
             std::hint::black_box(cpd.forward(&x, None).unwrap());
         });
         let bd = dispatch.backend();
@@ -101,7 +107,7 @@ fn main() -> anyhow::Result<()> {
     // bindings are present (skipped offline — the stub fails at client
     // creation inside Engine::open).
     let root = std::path::Path::new("artifacts");
-    if root.join("manifest.json").exists() {
+    if root.join("manifest.json").exists() && !smoke() {
         match Engine::open(root) {
             Ok(engine) => {
                 use layermerge::train::{self, Gen};
@@ -132,6 +138,11 @@ fn main() -> anyhow::Result<()> {
         }
     } else {
         println!("(skipping PJRT dispatch bench: run `make artifacts` first)");
+    }
+
+    if smoke() {
+        println!("(BENCH_SMOKE=1: skipping BENCH_merge.json write)");
+        return Ok(());
     }
 
     // read-modify-write BENCH_merge.json: this bench owns the

@@ -1,27 +1,35 @@
 //! Bench: micro-batched worker-pool serving (`layermerge::serve`) —
-//! throughput at 1/4/16 concurrent closed-loop clients.
+//! closed-loop throughput at 1/4/16 concurrent clients, plus the
+//! batch-forming policy comparison (`serving_window`): greedy vs window
+//! vs adaptive under deterministic open-loop Poisson arrivals at three
+//! rates.  The window policies exist to cut tail padding at light and
+//! moderate load; the record shows padded-rows-per-batch and p95 (via the
+//! corrected nearest-rank percentile) side by side so the tradeoff is a
+//! number, not a guess.
 //!
-//! Extends `BENCH_merge.json` (schema `layermerge.bench.merge.v1`) with a
-//! `serving` record: read-modify-write so the merge/forward rows written
-//! by `cargo bench --bench merge_ops` are preserved, per the ROADMAP rule
-//! that perf records are extended, never replaced.
+//! Extends `BENCH_merge.json` (schema `layermerge.bench.merge.v1`) with
+//! `serving` and `serving_window` records: read-modify-write so the
+//! merge/forward rows written by `cargo bench --bench merge_ops` are
+//! preserved, per the ROADMAP rule that perf records are extended, never
+//! replaced.  `BENCH_SMOKE=1` runs tiny request counts and skips the
+//! JSON write (the CI compile-and-run gate).
 //!
-//! The host-mock session exercises the real queue machinery (bounded
-//! queue, coalescing, padding, ticket split) against a backend with a
-//! fixed per-dispatch overhead plus per-row compute — the cost shape that
-//! makes micro-batching pay: concurrent clients amortize the dispatch
-//! overhead, so multi-client throughput must come out >= single-client.
-//! With `make artifacts` + real XLA bindings, a second section drives a
-//! deployed `resnetish` plan the same way.
+//! The host-mock sessions exercise the real queue machinery (bounded
+//! queue, policy-driven coalescing, padding, ticket split) against
+//! backends with a fixed per-dispatch overhead plus per-row compute —
+//! the cost shape that makes micro-batching pay.  With `make artifacts`
+//! + real XLA bindings, a trailing section drives a deployed `resnetish`
+//! plan the same way.
 
-use layermerge::serve::{self, Engine, LoadReport, ServeCfg, Session};
+use std::time::Duration;
+
+use layermerge::bench::smoke;
+use layermerge::serve::{self, BatchPolicy, Engine, LoadReport, ServeCfg, Session};
 use layermerge::util::json::Json;
 use layermerge::util::tensor::Tensor;
 
 const MOCK_BATCH: usize = 8;
 const MOCK_TAIL: [usize; 1] = [64];
-const CLIENT_LEVELS: [usize; 3] = [1, 4, 16];
-const REQUESTS: usize = 64;
 
 /// Deterministic compute ballast (black-boxed so it isn't optimized out).
 fn spin(units: usize) -> f32 {
@@ -48,6 +56,23 @@ fn mock_backend(x: &Tensor, _t: Option<&Tensor>) -> anyhow::Result<Tensor> {
     Ok(out)
 }
 
+/// Sleep-based mock for the window-policy comparison: the timing is the
+/// subject under test, so the cost model must be stable across machines
+/// — a fixed dispatch overhead plus per-row service (padding rows cost
+/// the same as real ones, exactly like a device computing them).
+fn timed_backend(x: &Tensor, _t: Option<&Tensor>) -> anyhow::Result<Tensor> {
+    std::thread::sleep(Duration::from_micros(500 + 50 * x.dims[0] as u64));
+    let rl: usize = x.dims[1..].iter().product();
+    let b = x.dims[0];
+    let mut out = Tensor::zeros(&[b, 2]);
+    for r in 0..b {
+        let row = &x.data[r * rl..(r + 1) * rl];
+        out.data[r * 2] = row.iter().sum();
+        out.data[r * 2 + 1] = row.iter().map(|v| v * v).sum();
+    }
+    Ok(out)
+}
+
 fn report_json(name: &str, r: &LoadReport) -> Json {
     Json::obj(vec![
         ("name", Json::str(name)),
@@ -62,12 +87,14 @@ fn report_json(name: &str, r: &LoadReport) -> Json {
 fn drive_levels(
     sess: &Session,
     tag: &str,
+    levels: &[usize],
+    requests: usize,
     rows: &mut Vec<Json>,
     derived: &mut Vec<(String, Json)>,
 ) -> anyhow::Result<Vec<LoadReport>> {
     let mut reports = Vec::new();
-    for clients in CLIENT_LEVELS {
-        let r = serve::drive(sess, clients, REQUESTS, |c, i| {
+    for &clients in levels {
+        let r = serve::drive(sess, clients, requests, |c, i| {
             let rl: usize = MOCK_TAIL.iter().product();
             let seed = (c * 7919 + i) as f32;
             (
@@ -89,19 +116,99 @@ fn drive_levels(
     Ok(reports)
 }
 
+/// The `serving_window` record: greedy vs window vs adaptive batch
+/// forming under open-loop Poisson arrivals at several rates.
+fn window_policy_bench(
+    rows: &mut Vec<Json>,
+    derived: &mut Vec<(String, Json)>,
+) -> anyhow::Result<()> {
+    const WINDOW_US: u64 = 3_000;
+    let rates: &[f64] = if smoke() { &[2_000.0] } else { &[500.0, 2_000.0, 6_000.0] };
+    let requests = if smoke() { 24 } else { 160 };
+    let policies: [(&str, BatchPolicy); 3] = [
+        ("greedy", BatchPolicy::Greedy),
+        ("window", BatchPolicy::Window { max_wait_us: WINDOW_US }),
+        (
+            "adaptive",
+            BatchPolicy::Adaptive { target_occupancy: 0.75, max_wait_us: WINDOW_US },
+        ),
+    ];
+    println!("== serving window-policy benches (open-loop arrivals, host mock) ==");
+    for (ri, &rps) in rates.iter().enumerate() {
+        let mut padded: Vec<(&str, f64)> = Vec::new();
+        for (pol_name, policy) in policies {
+            let cfg = ServeCfg { workers: 2, queue_cap: 512, policy };
+            let sess = Session::from_fn(MOCK_BATCH, &MOCK_TAIL, false, cfg, timed_backend);
+            let r = serve::drive_open(&sess, rps, requests, 0xbea7 + ri as u64, |_, i| {
+                let rl: usize = MOCK_TAIL.iter().product();
+                (
+                    Tensor::new(
+                        vec![1, MOCK_TAIL[0]],
+                        (0..rl).map(|k| (i + k) as f32 * 0.25).collect(),
+                    ),
+                    None,
+                )
+            })?;
+            let name = format!("serve window {pol_name} rps={rps:.0}");
+            println!("{}", r.row(&name));
+            rows.push(report_json(&name, &r));
+            let tag = format!("{pol_name}_rps{rps:.0}");
+            derived.push((
+                format!("serving_window_padded_per_batch_{tag}"),
+                Json::num(r.padded_per_batch()),
+            ));
+            derived.push((
+                format!("serving_window_occupancy_{tag}"),
+                Json::num(r.occupancy),
+            ));
+            derived.push((format!("serving_window_p95_ms_{tag}"), Json::num(r.p95_ms)));
+            if pol_name == "window" {
+                // the configured bound the p95 must respect: the window
+                // itself plus dispatch time (generous 4x for scheduling)
+                let bound_ms = WINDOW_US as f64 / 1e3 + 4.0 * r.service_ms.max(0.1);
+                derived.push((
+                    format!("serving_window_p95_bound_ms_rps{rps:.0}"),
+                    Json::num(bound_ms),
+                ));
+                derived.push((
+                    format!("serving_window_p95_within_bound_rps{rps:.0}"),
+                    Json::num(if r.p95_ms <= bound_ms { 1.0 } else { 0.0 }),
+                ));
+            }
+            padded.push((pol_name, r.padded_per_batch()));
+            sess.shutdown();
+        }
+        let greedy_ppb = padded[0].1;
+        let best_windowed =
+            padded[1..].iter().map(|&(_, p)| p).fold(f64::INFINITY, f64::min);
+        derived.push((
+            format!("serving_window_padding_win_rps{rps:.0}"),
+            Json::num(greedy_ppb - best_windowed),
+        ));
+        println!(
+            "  rps={rps:.0}: padded/batch greedy {greedy_ppb:.2} vs best windowed \
+             {best_windowed:.2} ({})",
+            if best_windowed < greedy_ppb { "window policy wins" } else { "no win" }
+        );
+    }
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let mut rows: Vec<Json> = Vec::new();
     let mut derived: Vec<(String, Json)> = Vec::new();
+    let levels: &[usize] = if smoke() { &[1, 4] } else { &[1, 4, 16] };
+    let requests = if smoke() { 8 } else { 64 };
 
     println!("== serving benches (micro-batched Session, host mock) ==");
     let sess = Session::from_fn(
         MOCK_BATCH,
         &MOCK_TAIL,
         false,
-        ServeCfg { workers: 2, queue_cap: 256 },
+        ServeCfg { workers: 2, queue_cap: 256, policy: BatchPolicy::Greedy },
         mock_backend,
     );
-    let reports = drive_levels(&sess, "serve mock", &mut rows, &mut derived)?;
+    let reports = drive_levels(&sess, "serve mock", levels, requests, &mut rows, &mut derived)?;
     let single = reports[0].rows_per_s;
     let best_multi = reports[1..]
         .iter()
@@ -123,9 +230,11 @@ fn main() -> anyhow::Result<()> {
     );
     sess.shutdown();
 
+    window_policy_bench(&mut rows, &mut derived)?;
+
     // a deployed plan, when the artifacts + real XLA runtime are present
     let root = std::path::Path::new("artifacts");
-    if root.join("manifest.json").exists() {
+    if root.join("manifest.json").exists() && !smoke() {
         match Engine::open(root) {
             Ok(engine) => {
                 use layermerge::exec::{Format, Plan};
@@ -136,12 +245,12 @@ fn main() -> anyhow::Result<()> {
                 let sess = engine.deploy_cfg(
                     plan,
                     Format::Fused,
-                    ServeCfg { workers: 2, queue_cap: 256 },
+                    ServeCfg { workers: 2, queue_cap: 256, policy: BatchPolicy::Greedy },
                 )?;
                 let gen = layermerge::train::Gen::for_model(&model, 5);
                 let pool = serve::classify_request_pool(&gen, 2);
-                for clients in CLIENT_LEVELS {
-                    let r = serve::drive(&sess, clients, REQUESTS.min(32), |c, i| {
+                for &clients in levels {
+                    let r = serve::drive(&sess, clients, requests.min(32), |c, i| {
                         (pool[(c * 31 + i) % pool.len()].0.clone(), None)
                     })?;
                     let name = format!("serve resnetish clients={clients}");
@@ -156,8 +265,13 @@ fn main() -> anyhow::Result<()> {
             }
             Err(e) => println!("(skipping deployed-plan serving bench: {e})"),
         }
-    } else {
+    } else if !smoke() {
         println!("(skipping deployed-plan serving bench: run `make artifacts` first)");
+    }
+
+    if smoke() {
+        println!("(BENCH_SMOKE=1: skipping BENCH_merge.json write)");
+        return Ok(());
     }
 
     // merge into BENCH_merge.json: keep every non-serving row and derived

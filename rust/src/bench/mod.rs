@@ -26,15 +26,16 @@ impl BenchStats {
 }
 
 /// Sort the raw per-iteration timings and summarize — shared by both
-/// bench flavours so every BENCH row computes its quantiles identically.
+/// bench flavours; quantiles go through the crate-wide nearest-rank
+/// [`crate::util::stats::percentile`], like every other latency number.
 fn summarize(name: &str, mut times: Vec<f64>) -> BenchStats {
-    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    crate::util::stats::sort_samples(&mut times);
     BenchStats {
         name: name.to_string(),
         iters: times.len(),
         mean_ms: times.iter().sum::<f64>() / times.len() as f64,
-        p50_ms: times[times.len() / 2],
-        p95_ms: times[((times.len() as f64 * 0.95) as usize).min(times.len() - 1)],
+        p50_ms: crate::util::stats::percentile(&times, 0.5),
+        p95_ms: crate::util::stats::percentile(&times, 0.95),
         min_ms: times[0],
     }
 }
@@ -47,6 +48,15 @@ fn timed_iters<F: FnMut()>(iters: usize, f: &mut F) -> Vec<f64> {
         times.push(t.elapsed().as_secs_f64() * 1e3);
     }
     times
+}
+
+/// True when `BENCH_SMOKE=1`: bench targets run tiny shapes/iteration
+/// budgets and skip the `BENCH_merge.json` write — the fast
+/// compile-and-run gate `scripts/ci.sh` uses so bench code can't rot
+/// between perf PRs.  Real perf records come from `scripts/bench.sh`
+/// without the variable.
+pub fn smoke() -> bool {
+    std::env::var("BENCH_SMOKE").is_ok_and(|v| v == "1")
 }
 
 /// Time `f` with warm-up; iteration count adapts to hit ~`budget_ms` of

@@ -35,7 +35,7 @@ pub mod prelude {
     pub use crate::model::{Batch, Manifest, Model};
     pub use crate::pipeline::{Pipeline, PipelineCfg};
     pub use crate::runtime::{Backend, HostBackend, LatencyStats, Runtime, Value};
-    pub use crate::serve::{Engine, ServeCfg, Session, Ticket};
+    pub use crate::serve::{BatchPolicy, Engine, ServeCfg, Session, Ticket};
     pub use crate::solver::Solution;
     pub use crate::tables::{BuildCfg, LatencyMode, Tables};
     pub use crate::util::tensor::Tensor;

@@ -22,8 +22,9 @@ use anyhow::{bail, Context, Result};
 use layermerge::experiments::{figures, tables as exp_tables, Ctx};
 use layermerge::pipeline::{Method, PipelineCfg};
 use layermerge::runtime::Backend as _;
-use layermerge::serve::{self, ServeCfg};
+use layermerge::serve::{self, BatchPolicy, LoadReport, ServeCfg, Session};
 use layermerge::tables::LatencyMode;
+use layermerge::util::tensor::Tensor;
 
 /// Minimal flag parser (clap substitute; DESIGN.md §2).
 struct Args {
@@ -93,9 +94,18 @@ fn usage() -> &'static str {
        --pretrain N --finetune N --seed N --budget F --p N\n\
      serve flags:\n\
        --clients N       concurrent closed-loop clients (default 4)\n\
-       --requests N      requests per client (default 32)\n\
+       --requests N      requests per client (default 32; total requests\n\
+                         = clients x requests in open-loop mode)\n\
        --serve-workers N worker threads draining the queue\n\
-       --queue-cap N     bounded request queue (backpressure)\n"
+       --queue-cap N     bounded request queue (backpressure)\n\
+       --serve-policy P  batch former: greedy|window|adaptive (default\n\
+                         greedy; window holds partial batches up to the\n\
+                         window, adaptive tunes the window online)\n\
+       --serve-window-us N  window bound / adaptive latency cap in us\n\
+                         (default 2000)\n\
+       --serve-occupancy F  adaptive target occupancy (default 0.75)\n\
+       --arrival-rps F   open-loop mode: deterministic Poisson arrivals\n\
+                         at F req/s instead of closed-loop clients\n"
 }
 
 fn build_cfg(args: &Args) -> PipelineCfg {
@@ -230,7 +240,6 @@ fn main() -> Result<()> {
 /// per-step device time — the §Perf profiling entrypoint for L3.
 fn profile(ctx: &Ctx, model: &str, budget: f64) -> Result<()> {
     use layermerge::exec::{Format, Plan};
-    use layermerge::util::tensor::Tensor;
     let mut pipe = ctx.pipeline(model)?;
     let engine = ctx.engine();
     let sol = pipe.solve(Method::LayerMerge, budget)?;
@@ -307,19 +316,61 @@ fn verify(ctx: &Ctx, model: &str, budget: f64) -> Result<()> {
     Ok(())
 }
 
+/// Parse the serve-policy flags into a [`BatchPolicy`].
+fn serve_policy(args: &Args) -> Result<BatchPolicy> {
+    let max_wait_us = args.usize_or("serve-window-us", 2000) as u64;
+    match args.get("serve-policy").unwrap_or("greedy") {
+        "greedy" => Ok(BatchPolicy::Greedy),
+        "window" => Ok(BatchPolicy::Window { max_wait_us }),
+        "adaptive" => Ok(BatchPolicy::Adaptive {
+            target_occupancy: args.f64_or("serve-occupancy", 0.75),
+            max_wait_us,
+        }),
+        p => bail!("unknown serve policy {p} (expected greedy|window|adaptive)"),
+    }
+}
+
+/// Session sizing + policy from the serve flags.
+fn serve_cfg(args: &Args) -> Result<ServeCfg> {
+    let defaults = ServeCfg::default();
+    Ok(ServeCfg {
+        workers: args.usize_or("serve-workers", defaults.workers).max(1),
+        queue_cap: args.usize_or("queue-cap", defaults.queue_cap).max(1),
+        policy: serve_policy(args)?,
+    })
+}
+
+/// Run one load pass: closed-loop clients by default, or deterministic
+/// open-loop Poisson arrivals when `--arrival-rps` is set.
+fn drive_session<F>(
+    sess: &Session,
+    clients: usize,
+    requests: usize,
+    rps: f64,
+    make: F,
+) -> Result<LoadReport>
+where
+    F: Fn(usize, usize) -> (Tensor, Option<Tensor>) + Sync,
+{
+    if rps > 0.0 {
+        serve::drive_open(sess, rps, clients * requests, 0x0a11, make)
+    } else {
+        serve::drive(sess, clients, requests, make)
+    }
+}
+
 /// Deploy the original and a compressed network as micro-batched serving
-/// sessions and drive concurrent closed-loop clients against both,
-/// reporting p50/p95/throughput before vs after compression.
+/// sessions and drive load against both (closed-loop clients, or
+/// open-loop arrivals with `--arrival-rps`), reporting p50/p95,
+/// throughput, occupancy, and the queue/service latency split before vs
+/// after compression.
 fn serve_cmd(ctx: &Ctx, model: &str, args: &Args) -> Result<()> {
     use layermerge::exec::{Format, Plan};
     let budget = args.f64_or("budget", 0.65);
     let clients = args.usize_or("clients", 4).max(1);
     let requests = args.usize_or("requests", 32).max(1);
-    let defaults = ServeCfg::default();
-    let scfg = ServeCfg {
-        workers: args.usize_or("serve-workers", defaults.workers).max(1),
-        queue_cap: args.usize_or("queue-cap", defaults.queue_cap).max(1),
-    };
+    let rps = args.f64_or("arrival-rps", 0.0);
+    let scfg = serve_cfg(args)?;
     let engine = ctx.engine();
     let mut pipe = ctx.pipeline(model)?;
     let pool = layermerge::serve::classify_request_pool(&pipe.gen, 4);
@@ -328,9 +379,17 @@ fn serve_cmd(ctx: &Ctx, model: &str, args: &Args) -> Result<()> {
         "serve drives classifier models; {model} produced no classify rows"
     );
     println!(
-        "serving {model}: {clients} clients x {requests} single-row requests \
-         (spec batch {}, {} workers, queue {})",
-        pipe.model.spec.batch, scfg.workers, scfg.queue_cap
+        "serving {model}: {} single-row requests (spec batch {}, {} workers, \
+         queue {}, policy {:?})",
+        if rps > 0.0 {
+            format!("open-loop {:.0} rps x {}", rps, clients * requests)
+        } else {
+            format!("{clients} clients x {requests}")
+        },
+        pipe.model.spec.batch,
+        scfg.workers,
+        scfg.queue_cap,
+        scfg.policy,
     );
     let make = |c: usize, i: usize| {
         let (x, _) = &pool[(c * requests + i) % pool.len()];
@@ -339,7 +398,7 @@ fn serve_cmd(ctx: &Ctx, model: &str, args: &Args) -> Result<()> {
 
     let orig_plan = Arc::new(Plan::original(&pipe.model.spec, &pipe.pretrained)?);
     let orig_sess = engine.deploy_cfg(orig_plan, Format::Fused, scfg)?;
-    let r0 = serve::drive(&orig_sess, clients, requests, &make)?;
+    let r0 = drive_session(&orig_sess, clients, requests, rps, &make)?;
     println!("{}", r0.row(&format!("original {model}")));
     orig_sess.shutdown();
 
@@ -349,7 +408,7 @@ fn serve_cmd(ctx: &Ctx, model: &str, args: &Args) -> Result<()> {
         &c.solution.spans,
     )?);
     let sess = engine.deploy_cfg(plan, Format::Fused, scfg)?;
-    let r1 = serve::drive(&sess, clients, requests, &make)?;
+    let r1 = drive_session(&sess, clients, requests, rps, &make)?;
     println!("{}", r1.row(&format!("LayerMerge-{:.0}%", budget * 100.0)));
     println!(
         "  -> p50 {:.2}x, p95 {:.2}x, throughput {:.2}x",
@@ -386,20 +445,24 @@ fn host_plans(
 fn serve_host(ctx: &Ctx, model: &str, args: &Args) -> Result<()> {
     use layermerge::exec::Format;
     use layermerge::util::rng::Rng;
-    use layermerge::util::tensor::Tensor;
     let clients = args.usize_or("clients", 4).max(1);
     let requests = args.usize_or("requests", 32).max(1);
-    let defaults = ServeCfg::default();
-    let scfg = ServeCfg {
-        workers: args.usize_or("serve-workers", defaults.workers).max(1),
-        queue_cap: args.usize_or("queue-cap", defaults.queue_cap).max(1),
-    };
+    let rps = args.f64_or("arrival-rps", 0.0);
+    let scfg = serve_cfg(args)?;
     let engine = ctx.engine();
     let (spec, orig, merged) = host_plans(model)?;
     println!(
-        "serving {model} [host backend]: {clients} clients x {requests} single-row \
-         requests (spec batch {}, {} workers, queue {})",
-        spec.batch, scfg.workers, scfg.queue_cap
+        "serving {model} [host backend]: {} single-row requests (spec batch {}, \
+         {} workers, queue {}, policy {:?})",
+        if rps > 0.0 {
+            format!("open-loop {:.0} rps x {}", rps, clients * requests)
+        } else {
+            format!("{clients} clients x {requests}")
+        },
+        spec.batch,
+        scfg.workers,
+        scfg.queue_cap,
+        scfg.policy,
     );
     let mut rng = Rng::new(0x5e11);
     let row: usize = spec.h * spec.w * spec.c;
@@ -414,12 +477,12 @@ fn serve_host(ctx: &Ctx, model: &str, args: &Args) -> Result<()> {
     let make = |c: usize, i: usize| (pool[(c * requests + i) % pool.len()].clone(), None);
 
     let orig_sess = engine.deploy_cfg(Arc::clone(&orig), Format::Fused, scfg)?;
-    let r0 = serve::drive(&orig_sess, clients, requests, &make)?;
+    let r0 = drive_session(&orig_sess, clients, requests, rps, &make)?;
     println!("{}", r0.row(&format!("original {model}")));
     orig_sess.shutdown();
 
     let sess = engine.deploy_cfg(Arc::clone(&merged), Format::Fused, scfg)?;
-    let r1 = serve::drive(&sess, clients, requests, &make)?;
+    let r1 = drive_session(&sess, clients, requests, rps, &make)?;
     println!(
         "{}",
         r1.row(&format!("greedy-merged (depth {} -> {})", orig.depth(), merged.depth()))

@@ -229,12 +229,12 @@ pub fn measure_protocol(
         run()?;
         times.push(t0.elapsed().as_secs_f64() * 1e3);
     }
-    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    crate::util::stats::sort_samples(&mut times);
     let mean = times.iter().sum::<f64>() / times.len() as f64;
     Ok(LatencyStats {
         mean_ms: mean,
-        p50_ms: times[times.len() / 2],
-        p95_ms: times[((times.len() as f64 * 0.95) as usize).min(times.len() - 1)],
+        p50_ms: crate::util::stats::percentile(&times, 0.5),
+        p95_ms: crate::util::stats::percentile(&times, 0.95),
         iters,
     })
 }

@@ -21,6 +21,20 @@
 //!   the tickets.  The queue bound gives backpressure (`submit` blocks
 //!   when full); `close`/drop drains the queue and joins the workers.
 //!
+//! *When* a worker dispatches is governed by the [`BatchPolicy`] on
+//! [`ServeCfg`]: `Greedy` ships whatever is queued the moment a worker is
+//! free (minimum latency, maximum padding at light load); `Window` holds
+//! a partial batch on a timed condvar wait until B rows arrive or
+//! `max_wait_us` elapses from the *oldest* queued request (bounded extra
+//! latency, traded for occupancy); `Adaptive` tunes that window online
+//! from the observed per-batch occupancy and service time (EWMA
+//! controller, capped by a latency budget).  `close()` flushes a held
+//! partial batch immediately — no request is ever stranded for the full
+//! window on shutdown.  [`drive`] (closed-loop clients) and [`drive_open`]
+//! (deterministic Poisson arrivals at a target rate) measure the
+//! resulting latency/padding tradeoff; [`ServeStats`] carries the
+//! occupancy and window telemetry.
+//!
 //! Padding rows are sound because every per-row computation in the
 //! deployed networks (convs, per-sample group norm / attention, the host
 //! glue ops) is independent of the other rows in the batch — so a
@@ -29,9 +43,9 @@
 
 use std::collections::VecDeque;
 use std::path::Path;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -171,7 +185,50 @@ impl Engine {
 // Session
 // ---------------------------------------------------------------------------
 
-/// Worker-pool and queue sizing for a [`Session`].
+/// When a worker forms and dispatches a batch from the queue.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BatchPolicy {
+    /// Dispatch whatever is queued the moment a worker is free.  Lowest
+    /// per-request latency; at light load most batches go out mostly
+    /// padding.
+    Greedy,
+    /// Hold a partial batch until B rows are available or `max_wait_us`
+    /// has elapsed since the **oldest** queued request arrived (bounded
+    /// wait: no request is delayed by more than the window before its
+    /// batch dispatches).  A full batch always dispatches immediately.
+    Window {
+        /// The wait-a-little bound, in microseconds.
+        max_wait_us: u64,
+    },
+    /// Tune the window online: an EWMA controller grows the window while
+    /// observed batch occupancy (real rows / B) sits below
+    /// `target_occupancy` and shrinks it once the target is met, capped
+    /// by the `max_wait_us` latency budget and by the EWMA per-batch
+    /// service time (waiting much longer than one dispatch takes cannot
+    /// pay for itself).
+    Adaptive {
+        /// Desired fraction of real (non-padding) rows per batch, in
+        /// `(0, 1]`.
+        target_occupancy: f64,
+        /// Hard latency-budget cap on the tuned window, in microseconds.
+        max_wait_us: u64,
+    },
+}
+
+impl BatchPolicy {
+    /// The window a fresh session starts from: zero for `Greedy`, the
+    /// full bound for `Window`, half the cap for `Adaptive` (the
+    /// controller converges from the middle of its range).
+    fn initial_window_us(&self) -> u64 {
+        match *self {
+            BatchPolicy::Greedy => 0,
+            BatchPolicy::Window { max_wait_us } => max_wait_us,
+            BatchPolicy::Adaptive { max_wait_us, .. } => max_wait_us / 2,
+        }
+    }
+}
+
+/// Worker-pool, queue sizing, and batch-forming policy for a [`Session`].
 #[derive(Debug, Clone, Copy)]
 pub struct ServeCfg {
     /// Worker threads draining the queue.  PJRT executes are thread-safe,
@@ -180,27 +237,64 @@ pub struct ServeCfg {
     /// Bounded queue capacity in *requests*; `submit` blocks (backpressure)
     /// when the queue is full.
     pub queue_cap: usize,
+    /// How workers form batches from the queue (see [`BatchPolicy`]).
+    pub policy: BatchPolicy,
 }
 
 impl Default for ServeCfg {
     fn default() -> Self {
-        ServeCfg { workers: par::max_threads().min(4), queue_cap: 256 }
+        ServeCfg {
+            workers: par::max_threads().min(4),
+            queue_cap: 256,
+            policy: BatchPolicy::Greedy,
+        }
     }
 }
 
 /// Cumulative serving counters (monotonic; snapshot with [`Session::stats`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ServeStats {
-    /// Requests fully served (tickets resolved).
+    /// Requests fully served (tickets resolved; `infer` calls count one).
     pub requests: usize,
     /// Input rows served (excludes padding).
     pub rows: usize,
-    /// Device batches dispatched.
+    /// Device batches dispatched (`infer` calls count one).
     pub batches: usize,
     /// Zero rows padded onto batch tails.
     pub padded_rows: usize,
     /// High-water mark of the request queue.
     pub max_queue: usize,
+    /// Partial batches dispatched because their batching window expired
+    /// (always zero under [`BatchPolicy::Greedy`]).
+    pub expired_windows: usize,
+    /// Cumulative per-request queue wait (submit to dispatch), in µs.
+    pub queue_wait_us: usize,
+    /// Cumulative per-batch dispatch (service) time, in µs.
+    pub service_us: usize,
+    /// The batching window currently applied by the policy, in µs
+    /// (fixed for `Window`, tuned online for `Adaptive`, 0 for `Greedy`).
+    pub cur_window_us: usize,
+}
+
+impl ServeStats {
+    /// Fraction of dispatched rows that were real requests rather than
+    /// tail padding: `rows / (rows + padded_rows)`.  1.0 before any
+    /// batch has been dispatched.
+    pub fn occupancy(&self) -> f64 {
+        occupancy_of(self.rows, self.padded_rows)
+    }
+}
+
+/// The one occupancy derivation ([`ServeStats::occupancy`] and the
+/// per-run [`LoadReport`] both use it): real rows over dispatched rows,
+/// 1.0 when nothing has been dispatched.
+fn occupancy_of(rows: usize, padded_rows: usize) -> f64 {
+    let total = rows + padded_rows;
+    if total == 0 {
+        1.0
+    } else {
+        rows as f64 / total as f64
+    }
 }
 
 #[derive(Default)]
@@ -210,11 +304,17 @@ struct StatsInner {
     batches: AtomicUsize,
     padded_rows: AtomicUsize,
     max_queue: AtomicUsize,
+    expired_windows: AtomicUsize,
+    queue_wait_us: AtomicUsize,
+    service_us: AtomicUsize,
 }
 
 #[derive(Default)]
 struct TicketInner {
-    slot: Mutex<Option<Result<Tensor>>>,
+    /// The result plus the instant it was posted (the open-loop driver
+    /// computes exact completion latency from it even when the ticket is
+    /// awaited long after the batch finished).
+    slot: Mutex<Option<(Result<Tensor>, Instant)>>,
     cv: Condvar,
 }
 
@@ -226,25 +326,33 @@ pub struct Ticket {
 
 impl Ticket {
     pub fn wait(self) -> Result<Tensor> {
+        self.wait_done().0
+    }
+
+    /// Like [`Ticket::wait`], but also returns the instant the result was
+    /// posted — the completion timestamp the open-loop load driver needs.
+    pub(crate) fn wait_done(self) -> (Result<Tensor>, Instant) {
         let mut g = self.inner.slot.lock().unwrap();
-        while g.is_none() {
+        loop {
+            if let Some(done) = g.take() {
+                return done;
+            }
             g = self.inner.cv.wait(g).unwrap();
         }
-        g.take().unwrap()
     }
 
     /// Non-blocking poll; returns the result if the batch has completed.
     pub fn try_wait(self) -> std::result::Result<Result<Tensor>, Ticket> {
         let done = self.inner.slot.lock().unwrap().take();
         match done {
-            Some(r) => Ok(r),
+            Some((r, _)) => Ok(r),
             None => Err(self),
         }
     }
 }
 
 fn fulfill(t: &TicketInner, r: Result<Tensor>) {
-    *t.slot.lock().unwrap() = Some(r);
+    *t.slot.lock().unwrap() = Some((r, Instant::now()));
     t.cv.notify_all();
 }
 
@@ -252,6 +360,10 @@ struct Request {
     x: Tensor,
     t: Option<Tensor>,
     ticket: Arc<TicketInner>,
+    /// When `submit` queued this request — anchors the batching window
+    /// (bounded wait is measured from the oldest request in the batch)
+    /// and the queue-wait telemetry.
+    enqueued: Instant,
 }
 
 struct QState {
@@ -259,11 +371,32 @@ struct QState {
     closed: bool,
 }
 
+/// EWMA state of the `Adaptive` controller.  Behind one mutex so
+/// concurrent batch completions from a multi-worker pool serialize their
+/// updates — a lock-free read-modify-write here would silently drop one
+/// batch's occupancy/service signal whenever two dispatches race.
+#[derive(Default)]
+struct AdaptCtl {
+    /// EWMA batch occupancy in parts-per-million (0 = no batch yet).
+    ewma_occ_ppm: u64,
+    /// EWMA per-batch service time in µs (0 = no batch yet).
+    ewma_svc_us: u64,
+}
+
 struct Shared {
     state: Mutex<QState>,
     not_empty: Condvar,
     not_full: Condvar,
     stats: StatsInner,
+    /// The deployed batch-forming policy (drives the worker wait loop and
+    /// the adaptive controller in [`run_batch`]).
+    policy: BatchPolicy,
+    /// The window currently applied by the policy, in µs.  Constant for
+    /// `Greedy` (0) and `Window`; written by the EWMA controller (under
+    /// the `ctl` lock) for `Adaptive`.  Atomic so the worker wait loop
+    /// reads it without extra locking.
+    window_us: AtomicU64,
+    ctl: Mutex<AdaptCtl>,
 }
 
 /// The dispatchable side of a session: a lowered plan (any backend), or
@@ -339,6 +472,9 @@ impl Session {
             not_empty: Condvar::new(),
             not_full: Condvar::new(),
             stats: StatsInner::default(),
+            policy: cfg.policy,
+            window_us: AtomicU64::new(cfg.policy.initial_window_us()),
+            ctl: Mutex::new(AdaptCtl::default()),
         });
         let (ws, wb) = (Arc::clone(&shared), backend.clone());
         let pool = par::Pool::spawn(cfg.workers, "lm-serve", move |_| {
@@ -372,12 +508,33 @@ impl Session {
             batches: s.batches.load(Ordering::Relaxed),
             padded_rows: s.padded_rows.load(Ordering::Relaxed),
             max_queue: s.max_queue.load(Ordering::Relaxed),
+            expired_windows: s.expired_windows.load(Ordering::Relaxed),
+            queue_wait_us: s.queue_wait_us.load(Ordering::Relaxed),
+            service_us: s.service_us.load(Ordering::Relaxed),
+            cur_window_us: self.shared.window_us.load(Ordering::Relaxed) as usize,
         }
     }
 
+    /// The batch-forming policy this session was deployed with.
+    pub fn policy(&self) -> BatchPolicy {
+        self.shared.policy
+    }
+
     /// Synchronous one-shot inference: full `[B, ..]` input, no queue.
+    /// Counts into [`ServeStats`] like any dispatched batch (one request,
+    /// one batch, `x.dims[0]` rows, zero padding), so before/after deltas
+    /// stay honest under mixed `infer` + `submit` workloads.
     pub fn infer(&self, x: &Tensor, t: Option<&Tensor>) -> Result<Tensor> {
-        self.backend.run(x, t)
+        let started = Instant::now();
+        let out = self.backend.run(x, t);
+        let st = &self.shared.stats;
+        st.requests.fetch_add(1, Ordering::Relaxed);
+        st.batches.fetch_add(1, Ordering::Relaxed);
+        st.rows
+            .fetch_add(x.dims.first().copied().unwrap_or(0), Ordering::Relaxed);
+        st.service_us
+            .fetch_add(started.elapsed().as_micros() as usize, Ordering::Relaxed);
+        out
     }
 
     /// Enqueue a sub-batch request of `1..=B` rows (`[rows, in_tail..]`).
@@ -426,7 +583,12 @@ impl Session {
                 }
                 g = self.shared.not_full.wait(g).unwrap();
             }
-            g.items.push_back(Request { x, t, ticket: Arc::clone(&ticket) });
+            g.items.push_back(Request {
+                x,
+                t,
+                ticket: Arc::clone(&ticket),
+                enqueued: Instant::now(),
+            });
             let depth = g.items.len();
             let mq = &self.shared.stats.max_queue;
             let mut cur = mq.load(Ordering::Relaxed);
@@ -464,18 +626,52 @@ impl Drop for Session {
     }
 }
 
+/// Whether the queue front already forms a dispatch-ready batch: the
+/// coalescible prefix either reaches B rows or is blocked by a request
+/// that no longer fits (workers take whole requests only).
+fn batch_formed(items: &VecDeque<Request>, b: usize) -> bool {
+    let mut rows = 0usize;
+    for it in items {
+        let r = it.x.dims[0];
+        if rows + r >= b {
+            return true;
+        }
+        rows += r;
+    }
+    false
+}
+
 fn worker_loop(shared: &Shared, backend: &Dispatch, b: usize) {
     loop {
+        let mut expired = false;
         let taken = {
             let mut g = shared.state.lock().unwrap();
             loop {
-                if !g.items.is_empty() {
+                if g.items.is_empty() {
+                    if g.closed {
+                        return;
+                    }
+                    g = shared.not_empty.wait(g).unwrap();
+                    continue;
+                }
+                // close() flushes held partials immediately; a formed
+                // batch never waits
+                if g.closed || batch_formed(&g.items, b) {
                     break;
                 }
-                if g.closed {
-                    return;
+                let window = shared.window_us.load(Ordering::Relaxed);
+                if window == 0 {
+                    break; // greedy: ship whatever is queued
                 }
-                g = shared.not_empty.wait(g).unwrap();
+                // bounded wait, anchored at the oldest queued request
+                let deadline = g.items.front().unwrap().enqueued
+                    + Duration::from_micros(window);
+                let now = Instant::now();
+                if now >= deadline {
+                    expired = true;
+                    break;
+                }
+                g = shared.not_empty.wait_timeout(g, deadline - now).unwrap().0;
             }
             // coalesce whole requests (submit bounds each to <= b rows)
             let mut taken: Vec<Request> = Vec::new();
@@ -495,13 +691,54 @@ fn worker_loop(shared: &Shared, backend: &Dispatch, b: usize) {
         };
         shared.not_full.notify_all();
         if !taken.is_empty() {
-            run_batch(shared, backend, b, taken);
+            run_batch(shared, backend, b, taken, expired);
         }
     }
 }
 
-fn run_batch(shared: &Shared, backend: &Dispatch, b: usize, reqs: Vec<Request>) {
+/// The `Adaptive` EWMA controller, run once per dispatched batch:
+/// multiplicative-increase the window while occupancy undershoots the
+/// target, decay it once the target is met; never exceed the latency
+/// budget `cap_us` or twice the EWMA service time (waiting much longer
+/// than one dispatch takes cannot improve amortization).
+fn adapt_window(shared: &Shared, b: usize, rows: usize, svc_us: u64, target: f64, cap_us: u64) {
+    // one controller step per batch; the lock serializes racing workers
+    // so no batch's signal is lost to a concurrent read-modify-write
+    let mut ctl = shared.ctl.lock().unwrap();
+    let occ_ppm = (rows * 1_000_000 / b.max(1)) as u64;
+    let occ = if ctl.ewma_occ_ppm == 0 {
+        occ_ppm
+    } else {
+        (ctl.ewma_occ_ppm * 3 + occ_ppm) / 4
+    };
+    ctl.ewma_occ_ppm = occ;
+
+    let svc_us = svc_us.max(1);
+    let svc = if ctl.ewma_svc_us == 0 {
+        svc_us
+    } else {
+        (ctl.ewma_svc_us * 3 + svc_us) / 4
+    };
+    ctl.ewma_svc_us = svc;
+
+    let target_ppm = (target.clamp(0.0, 1.0) * 1e6) as u64;
+    let cur = shared.window_us.load(Ordering::Relaxed);
+    let next = if occ < target_ppm {
+        (cur + cur / 2).max(64)
+    } else {
+        cur.saturating_sub((cur / 4).max(1))
+    };
+    let bound = cap_us.min(svc.saturating_mul(2));
+    shared.window_us.store(next.min(bound), Ordering::Relaxed);
+}
+
+fn run_batch(shared: &Shared, backend: &Dispatch, b: usize, reqs: Vec<Request>, expired: bool) {
     let total_rows: usize = reqs.iter().map(|r| r.x.dims[0]).sum();
+    let started = Instant::now();
+    let queue_wait_us: u128 = reqs
+        .iter()
+        .map(|r| started.saturating_duration_since(r.enqueued).as_micros())
+        .sum();
     // a panicking backend must not strand the batch's tickets (waiters
     // would block forever and the worker thread would die silently) —
     // unwind is converted into a per-ticket error instead
@@ -547,11 +784,18 @@ fn run_batch(shared: &Shared, backend: &Dispatch, b: usize, reqs: Vec<Request>) 
                 .unwrap_or_else(|| "opaque panic payload".to_string());
             Err(anyhow::anyhow!("serve backend panicked: {msg}"))
         });
+    let svc_us = started.elapsed().as_micros();
     let st = &shared.stats;
     st.batches.fetch_add(1, Ordering::Relaxed);
     st.padded_rows.fetch_add(b - total_rows, Ordering::Relaxed);
     st.requests.fetch_add(reqs.len(), Ordering::Relaxed);
     st.rows.fetch_add(total_rows, Ordering::Relaxed);
+    st.expired_windows.fetch_add(usize::from(expired), Ordering::Relaxed);
+    st.queue_wait_us.fetch_add(queue_wait_us as usize, Ordering::Relaxed);
+    st.service_us.fetch_add(svc_us as usize, Ordering::Relaxed);
+    if let BatchPolicy::Adaptive { target_occupancy, max_wait_us } = shared.policy {
+        adapt_window(shared, b, total_rows, svc_us as u64, target_occupancy, max_wait_us);
+    }
     match out {
         Ok(y) if y.dims.first() == Some(&b) && y.data.len() % b == 0 => {
             if reqs.len() == 1 && total_rows == b {
@@ -596,9 +840,13 @@ fn run_batch(shared: &Shared, backend: &Dispatch, b: usize, reqs: Vec<Request>) 
 // ---------------------------------------------------------------------------
 
 /// One load run against a session: client-perceived latency percentiles
-/// (queue wait included) and throughput, plus coalescing counters.
+/// (queue wait included, nearest-rank via [`crate::util::stats::percentile`])
+/// and throughput, plus coalescing and window telemetry.  Produced by the
+/// closed-loop [`drive`] and the open-loop [`drive_open`].
 #[derive(Debug, Clone)]
 pub struct LoadReport {
+    /// Concurrent closed-loop submitters (1 for an open-loop run — a
+    /// single generator thread owns the arrival process).
     pub clients: usize,
     pub requests: usize,
     pub rows: usize,
@@ -610,22 +858,92 @@ pub struct LoadReport {
     pub rows_per_s: f64,
     pub batches: usize,
     pub padded_rows: usize,
+    /// Mean per-request queue wait (submit to dispatch), ms.
+    pub queue_ms: f64,
+    /// Mean per-batch dispatch (service) time, ms.
+    pub service_ms: f64,
+    /// Real-row fraction of dispatched batches over this run.
+    pub occupancy: f64,
+    /// Partial batches dispatched on window expiry over this run.
+    pub expired_windows: usize,
+    /// Target arrival rate of an open-loop run; 0.0 for closed loop.
+    pub arrival_rps: f64,
 }
 
 impl LoadReport {
     pub fn row(&self, name: &str) -> String {
+        let load = if self.arrival_rps > 0.0 {
+            format!("{:>6.0} rps", self.arrival_rps)
+        } else {
+            format!("{:>3} clients", self.clients)
+        };
         format!(
-            "{name:<26} clients {:>3}  p50 {:>8.2}ms  p95 {:>8.2}ms  {:>9.1} rows/s  \
-             {:>4} batches ({} padded rows)",
-            self.clients, self.p50_ms, self.p95_ms, self.rows_per_s, self.batches,
-            self.padded_rows
+            "{name:<26} {load}  p50 {:>8.2}ms  p95 {:>8.2}ms  {:>9.1} rows/s  \
+             {:>4} batches ({} padded, occ {:>4.2}, q {:>6.2}ms + svc {:>6.2}ms)",
+            self.p50_ms,
+            self.p95_ms,
+            self.rows_per_s,
+            self.batches,
+            self.padded_rows,
+            self.occupancy,
+            self.queue_ms,
+            self.service_ms,
         )
     }
+
+    /// Mean padded rows per dispatched batch — the padding waste the
+    /// window policies exist to reduce.
+    pub fn padded_per_batch(&self) -> f64 {
+        self.padded_rows as f64 / self.batches.max(1) as f64
+    }
+}
+
+/// Assemble a [`LoadReport`] from raw per-request latencies plus the
+/// session-counter delta over the run — shared by both load modes so
+/// every report computes its quantiles and telemetry identically.
+fn load_report(
+    mut lat: Vec<f64>,
+    rows: usize,
+    wall_s: f64,
+    before: ServeStats,
+    after: ServeStats,
+    clients: usize,
+    arrival_rps: f64,
+) -> Result<LoadReport> {
+    use crate::util::stats::{percentile, sort_samples};
+    anyhow::ensure!(!lat.is_empty(), "drive: no requests completed");
+    sort_samples(&mut lat);
+    let requests = after.requests - before.requests;
+    let batches = after.batches - before.batches;
+    let padded_rows = after.padded_rows - before.padded_rows;
+    let d_rows = after.rows - before.rows;
+    Ok(LoadReport {
+        clients,
+        requests: lat.len(),
+        rows,
+        p50_ms: percentile(&lat, 0.5),
+        p95_ms: percentile(&lat, 0.95),
+        mean_ms: lat.iter().sum::<f64>() / lat.len() as f64,
+        min_ms: lat[0],
+        wall_s,
+        rows_per_s: rows as f64 / wall_s.max(1e-9),
+        batches,
+        padded_rows,
+        queue_ms: (after.queue_wait_us - before.queue_wait_us) as f64 / 1e3
+            / requests.max(1) as f64,
+        service_ms: (after.service_us - before.service_us) as f64 / 1e3
+            / batches.max(1) as f64,
+        occupancy: occupancy_of(d_rows, padded_rows),
+        expired_windows: after.expired_windows - before.expired_windows,
+        arrival_rps,
+    })
 }
 
 /// Drive `clients` concurrent submitters, each issuing
 /// `requests_per_client` requests produced by `make_input(client, i)`.
-/// Every ticket is awaited by its submitter (closed-loop load).
+/// Every ticket is awaited by its submitter (closed-loop load: offered
+/// load self-throttles to service speed, so the queue never grows beyond
+/// the client count).
 pub fn drive<F>(
     session: &Session,
     clients: usize,
@@ -666,24 +984,61 @@ where
         return Err(e);
     }
     let wall_s = t0.elapsed().as_secs_f64();
-    let mut lat = lat.into_inner().unwrap();
-    anyhow::ensure!(!lat.is_empty(), "drive: no requests completed");
-    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let after = session.stats();
+    let lat = lat.into_inner().unwrap();
     let rows = rows.load(Ordering::Relaxed);
-    Ok(LoadReport {
-        clients,
-        requests: lat.len(),
-        rows,
-        p50_ms: lat[lat.len() / 2],
-        p95_ms: lat[((lat.len() as f64 * 0.95) as usize).min(lat.len() - 1)],
-        mean_ms: lat.iter().sum::<f64>() / lat.len() as f64,
-        min_ms: lat[0],
-        wall_s,
-        rows_per_s: rows as f64 / wall_s.max(1e-9),
-        batches: after.batches - before.batches,
-        padded_rows: after.padded_rows - before.padded_rows,
-    })
+    load_report(lat, rows, wall_s, before, session.stats(), clients, 0.0)
+}
+
+/// Open-loop load: submit `requests` requests on a deterministic
+/// Poisson-ish arrival schedule at `rps` requests/second (exponential
+/// inter-arrival gaps from the seeded [`crate::util::rng::Rng`]), without
+/// waiting for completions in between.  Unlike the closed loop, arrivals
+/// do not self-throttle to service speed, so this is the mode that
+/// exposes the padding/latency tradeoff of the batching window policies.
+///
+/// Per-request latency is completion-to-arrival (queue wait included;
+/// the completion instant is captured at fulfillment, so awaiting the
+/// tickets after the generation loop costs nothing).  If the bounded
+/// queue fills, `submit` blocks the generator — the backpressure shows up
+/// as schedule lag and in the latency numbers, exactly as a real bounded
+/// ingress buffer would.
+pub fn drive_open<F>(
+    session: &Session,
+    rps: f64,
+    requests: usize,
+    seed: u64,
+    make_input: F,
+) -> Result<LoadReport>
+where
+    F: Fn(usize, usize) -> (Tensor, Option<Tensor>),
+{
+    anyhow::ensure!(rps > 0.0, "drive_open: arrival rate must be positive");
+    let before = session.stats();
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let mut pending = Vec::with_capacity(requests);
+    let mut rows = 0usize;
+    let mut sched_s = 0.0f64;
+    let t0 = Instant::now();
+    for i in 0..requests {
+        // exponential gap; 1 - U in (0, 1] keeps ln() finite
+        sched_s += -(1.0 - rng.uniform()).ln() / rps;
+        let target = t0 + Duration::from_secs_f64(sched_s);
+        if let Some(d) = target.checked_duration_since(Instant::now()) {
+            std::thread::sleep(d);
+        }
+        let (x, t) = make_input(0, i);
+        rows += x.dims[0];
+        let arrival = Instant::now();
+        pending.push((session.submit_with(x, t)?, arrival));
+    }
+    let mut lat = Vec::with_capacity(pending.len());
+    for (ticket, arrival) in pending {
+        let (res, done) = ticket.wait_done();
+        res?;
+        lat.push(done.saturating_duration_since(arrival).as_secs_f64() * 1e3);
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    load_report(lat, rows, wall_s, before, session.stats(), 1, rps)
 }
 
 /// Slice the classify eval stream into single-row `(x, y)` request pairs
@@ -729,5 +1084,33 @@ mod tests {
     fn serve_cfg_default_is_sane() {
         let c = ServeCfg::default();
         assert!(c.workers >= 1 && c.queue_cap >= 1);
+        assert_eq!(c.policy, BatchPolicy::Greedy);
+        assert_eq!(c.policy.initial_window_us(), 0);
+    }
+
+    #[test]
+    fn policy_initial_windows() {
+        assert_eq!(BatchPolicy::Window { max_wait_us: 500 }.initial_window_us(), 500);
+        let a = BatchPolicy::Adaptive { target_occupancy: 0.8, max_wait_us: 500 };
+        assert_eq!(a.initial_window_us(), 250);
+    }
+
+    #[test]
+    fn occupancy_derivation() {
+        let mut s = ServeStats {
+            requests: 0,
+            rows: 0,
+            batches: 0,
+            padded_rows: 0,
+            max_queue: 0,
+            expired_windows: 0,
+            queue_wait_us: 0,
+            service_us: 0,
+            cur_window_us: 0,
+        };
+        assert_eq!(s.occupancy(), 1.0);
+        s.rows = 6;
+        s.padded_rows = 2;
+        assert!((s.occupancy() - 0.75).abs() < 1e-12);
     }
 }

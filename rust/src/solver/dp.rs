@@ -51,14 +51,18 @@ pub fn solve(input: &DpInput) -> Option<DpSolution> {
     let disc = |ms: f64| -> usize { (ms / unit).floor() as usize };
 
     const NEG: f64 = f64::NEG_INFINITY;
-    // M[l][t]; parent[l][t] = (l', k, t') for reconstruction
+    // M[l][t]; parent[l][t] = (index into arcs[l], t') for reconstruction.
+    // The arc *index* (not its (i, k) signature) is stored: feasible sets
+    // can hold duplicate (i, k) arcs for a span — e.g. re-measured latency
+    // entries — and a signature lookup would resolve to whichever
+    // duplicate comes first, misreporting latency_est.
     let mut m = vec![vec![NEG; p + 1]; l_max + 1];
-    let mut parent = vec![vec![(usize::MAX, 0usize, 0usize); p + 1]; l_max + 1];
+    let mut parent = vec![vec![(usize::MAX, 0usize); p + 1]; l_max + 1];
     for t in 0..=p {
         m[0][t] = 0.0;
     }
     for j in 1..=l_max {
-        for arc in &input.arcs[j] {
+        for (ai, arc) in input.arcs[j].iter().enumerate() {
             let cost = disc(arc.lat_ms);
             for t in cost..=p {
                 let prev = m[arc.i][t - cost];
@@ -68,7 +72,7 @@ pub fn solve(input: &DpInput) -> Option<DpSolution> {
                 let v = prev + arc.imp;
                 if v > m[j][t] {
                     m[j][t] = v;
-                    parent[j][t] = (arc.i, arc.k, t - cost);
+                    parent[j][t] = (ai, t - cost);
                 }
             }
         }
@@ -89,15 +93,12 @@ pub fn solve(input: &DpInput) -> Option<DpSolution> {
     let mut latency = 0.0;
     let (mut j, mut t) = (l_max, p);
     while j > 0 {
-        let (i, k, tp) = parent[j][t];
-        assert_ne!(i, usize::MAX, "broken parent chain at ({j},{t})");
-        let arc = input.arcs[j]
-            .iter()
-            .find(|a| a.i == i && a.k == k)
-            .expect("arc vanished");
+        let (ai, tp) = parent[j][t];
+        assert_ne!(ai, usize::MAX, "broken parent chain at ({j},{t})");
+        let arc = input.arcs[j][ai];
         latency += arc.lat_ms;
-        spans.push((i, j, k));
-        j = i;
+        spans.push((arc.i, j, arc.k));
+        j = arc.i;
         t = tp;
     }
     spans.reverse();
@@ -237,5 +238,42 @@ mod tests {
         let inst = DpInput { l_max: 1, budget_ms: 1.0, p: 50, arcs };
         let sol = solve(&inst).unwrap();
         assert_eq!(sol.spans[0].2, 3);
+    }
+
+    /// Duplicate (i, k) arcs for the same span (re-measured latency
+    /// entries): the reconstruction must report the latency of the arc
+    /// the DP actually chose, not of the first (i, k) match.  The
+    /// signature-based `find(|a| a.i == i && a.k == k)` lookup this test
+    /// guards against resolved to the 0.9 ms decoy below.
+    #[test]
+    fn duplicate_arcs_resolve_to_the_chosen_index() {
+        let arcs = vec![
+            vec![],
+            vec![
+                SpanArc { i: 0, k: 3, lat_ms: 0.9, imp: 0.5 }, // decoy: same (i, k)
+                SpanArc { i: 0, k: 3, lat_ms: 0.2, imp: 2.0 }, // the DP's pick
+            ],
+        ];
+        let inst = DpInput { l_max: 1, budget_ms: 1.0, p: 100, arcs };
+        let sol = solve(&inst).unwrap();
+        assert_eq!(sol.spans, vec![(0, 1, 3)]);
+        assert!((sol.objective - 2.0).abs() < 1e-9, "objective {}", sol.objective);
+        assert!(
+            (sol.latency_est - 0.2).abs() < 1e-9,
+            "latency_est {} reports the decoy arc's latency",
+            sol.latency_est
+        );
+
+        // the other order too: chosen arc first, decoy second
+        let arcs = vec![
+            vec![],
+            vec![
+                SpanArc { i: 0, k: 3, lat_ms: 0.2, imp: 2.0 },
+                SpanArc { i: 0, k: 3, lat_ms: 0.9, imp: 0.5 },
+            ],
+        ];
+        let inst = DpInput { l_max: 1, budget_ms: 1.0, p: 100, arcs };
+        let sol = solve(&inst).unwrap();
+        assert!((sol.latency_est - 0.2).abs() < 1e-9, "latency_est {}", sol.latency_est);
     }
 }

@@ -1,10 +1,12 @@
 //! In-tree substrates replacing crates unavailable in the offline vendor
-//! set (DESIGN.md §2): JSON, PRNG, tensors, property testing, and
+//! set (DESIGN.md §2): JSON, PRNG, tensors, property testing,
 //! scoped-thread data parallelism (`par`, the rayon substitute powering
-//! the GEMM kernels and table construction).
+//! the GEMM kernels and table construction), and the shared summary
+//! statistics (`stats`, the one percentile implementation).
 
 pub mod json;
 pub mod par;
 pub mod prop;
 pub mod rng;
+pub mod stats;
 pub mod tensor;

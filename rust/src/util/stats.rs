@@ -1,0 +1,105 @@
+//! Shared summary statistics — the crate's **single** percentile
+//! implementation.
+//!
+//! Every latency quantile in the repo (the App. C measurement protocol,
+//! the serving load reports, the bench harness) goes through
+//! [`percentile`], so numbers are comparable across subsystems and the
+//! old off-by-one index math (`times[(n as f64 * 0.95) as usize]`, which
+//! returns the *maximum* for n <= 20, and the upper-biased `times[n/2]`
+//! median) cannot recur.
+
+/// Nearest-rank percentile of an ascending-sorted, non-empty slice.
+///
+/// Returns the smallest element `x` such that at least `q * 100` percent
+/// of the samples are `<= x` (the classic nearest-rank definition:
+/// `rank = ceil(q * n)`, 1-based).  `q` is clamped to `[0, 1]`; `q = 0`
+/// yields the minimum and `q = 1` the maximum.  In particular, for
+/// `n = 20` the p95 is the 19th value, **not** the maximum, and the p50
+/// is the lower-middle value, not the upper one.
+///
+/// Panics on an empty slice (there is no percentile of nothing); callers
+/// guard with their own "no samples" error first.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of an empty sample set");
+    debug_assert!(
+        sorted.windows(2).all(|w| w[0] <= w[1]),
+        "percentile input must be sorted ascending"
+    );
+    let n = sorted.len();
+    let q = q.clamp(0.0, 1.0);
+    // The epsilon guards binary-representation noise: 0.95f64 * 20.0 is
+    // 19.000000000000004, whose ceil would land on the maximum again.
+    let rank = (q * n as f64 - 1e-9).ceil().max(1.0) as usize;
+    sorted[rank.min(n) - 1]
+}
+
+/// Sort a sample vector ascending (total order on finite floats) — the
+/// preparation step every percentile caller shares.
+pub fn sort_samples(samples: &mut [f64]) {
+    samples.sort_by(|a, b| a.partial_cmp(b).expect("non-finite sample"));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(n: usize) -> Vec<f64> {
+        (1..=n).map(|i| i as f64).collect()
+    }
+
+    #[test]
+    fn n1_every_quantile_is_the_sample() {
+        let xs = seq(1);
+        for q in [0.0, 0.5, 0.95, 1.0] {
+            assert_eq!(percentile(&xs, q), 1.0);
+        }
+    }
+
+    #[test]
+    fn n2_median_is_lower_p95_is_upper() {
+        let xs = seq(2);
+        assert_eq!(percentile(&xs, 0.5), 1.0);
+        assert_eq!(percentile(&xs, 0.95), 2.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 2.0);
+    }
+
+    #[test]
+    fn n20_p95_is_the_19th_value_not_the_max() {
+        // the regression this helper exists for: the old index math
+        // ((20 as f64 * 0.95) as usize) = 19 returned xs[19] = the max
+        let xs = seq(20);
+        assert_eq!(percentile(&xs, 0.95), 19.0);
+        assert_eq!(percentile(&xs, 0.5), 10.0);
+        assert_eq!(percentile(&xs, 1.0), 20.0);
+    }
+
+    #[test]
+    fn n100_nearest_rank_matches_hand_count() {
+        let xs = seq(100);
+        assert_eq!(percentile(&xs, 0.95), 95.0);
+        assert_eq!(percentile(&xs, 0.5), 50.0);
+        assert_eq!(percentile(&xs, 0.01), 1.0);
+        assert_eq!(percentile(&xs, 0.99), 99.0);
+    }
+
+    #[test]
+    fn q_is_clamped() {
+        let xs = seq(5);
+        assert_eq!(percentile(&xs, -3.0), 1.0);
+        assert_eq!(percentile(&xs, 7.0), 5.0);
+    }
+
+    #[test]
+    fn sort_samples_orders_ascending() {
+        let mut v = vec![3.0, 1.0, 2.0];
+        sort_samples(&mut v);
+        assert_eq!(v, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty sample set")]
+    fn empty_panics() {
+        percentile(&[], 0.5);
+    }
+}

@@ -478,9 +478,8 @@ fn serve_session_coalesces_on_host_backend() {
             Tensor::new(vec![1, classes], full.data[..classes].to_vec())
         })
         .collect();
-    let sess = engine
-        .deploy_cfg(Arc::clone(&plan), Format::Fused, ServeCfg { workers: 2, queue_cap: 16 })
-        .unwrap();
+    let scfg = ServeCfg { workers: 2, queue_cap: 16, ..ServeCfg::default() };
+    let sess = engine.deploy_cfg(Arc::clone(&plan), Format::Fused, scfg).unwrap();
     let tickets: Vec<_> =
         rows.iter().map(|r| sess.submit(r.clone()).unwrap()).collect();
     for (t, want) in tickets.into_iter().zip(&expected) {

@@ -8,11 +8,20 @@
 //! * tail-padding correctness (zero rows, counted, never leaked),
 //! * ordered ticket delivery under concurrent submitters,
 //! * backpressure honors the queue bound; shutdown drains cleanly.
+//!
+//! And the ISSUE-4 window-policy semantics:
+//! * a partial batch dispatches no later than `max_wait_us` after its
+//!   first request (bounded-wait guarantee),
+//! * a filled batch preempts the window, and the expiry-vs-fill race is
+//!   bit-identical to one-shot either way,
+//! * `close()` flushes a held partial batch immediately,
+//! * `infer` counts into `ServeStats` alongside `submit`.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
-use layermerge::serve::{self, ServeCfg, Session};
+use layermerge::serve::{self, BatchPolicy, ServeCfg, Session};
 use layermerge::util::tensor::Tensor;
 
 const B: usize = 4; // spec batch size for the mock deployments
@@ -39,7 +48,8 @@ fn mock_backend(x: &Tensor, _t: Option<&Tensor>) -> anyhow::Result<Tensor> {
 }
 
 fn mock_session(workers: usize, queue_cap: usize) -> Session {
-    Session::from_fn(B, &TAIL, false, ServeCfg { workers, queue_cap }, mock_backend)
+    let cfg = ServeCfg { workers, queue_cap, policy: BatchPolicy::Greedy };
+    Session::from_fn(B, &TAIL, false, cfg, mock_backend)
 }
 
 fn req(rows: usize, seed: f32) -> Tensor {
@@ -115,7 +125,7 @@ fn padded_region_content_is_zero() {
         B,
         &TAIL,
         false,
-        ServeCfg { workers: 1, queue_cap: 16 },
+        ServeCfg { workers: 1, queue_cap: 16, policy: BatchPolicy::Greedy },
         move |x, t| {
             seen2.lock().unwrap().push(x.data.clone());
             mock_backend(x, t)
@@ -172,7 +182,7 @@ fn backpressure_honors_queue_bound() {
         B,
         &TAIL,
         false,
-        ServeCfg { workers: 1, queue_cap: 2 },
+        ServeCfg { workers: 1, queue_cap: 2, policy: BatchPolicy::Greedy },
         |x, t| {
             std::thread::sleep(std::time::Duration::from_millis(2));
             mock_backend(x, t)
@@ -203,7 +213,7 @@ fn shutdown_drains_accepted_requests() {
         B,
         &TAIL,
         false,
-        ServeCfg { workers: 1, queue_cap: 64 },
+        ServeCfg { workers: 1, queue_cap: 64, policy: BatchPolicy::Greedy },
         |x, t| {
             std::thread::sleep(std::time::Duration::from_millis(1));
             mock_backend(x, t)
@@ -252,7 +262,7 @@ fn backend_errors_propagate_to_every_ticket_in_the_batch() {
         B,
         &TAIL,
         false,
-        ServeCfg { workers: 1, queue_cap: 16 },
+        ServeCfg { workers: 1, queue_cap: 16, policy: BatchPolicy::Greedy },
         |_, _| anyhow::bail!("device on fire"),
     );
     let t1 = sess.submit(req(2, 0.0)).unwrap();
@@ -271,7 +281,7 @@ fn backend_panics_become_ticket_errors_and_worker_survives() {
         B,
         &TAIL,
         false,
-        ServeCfg { workers: 1, queue_cap: 16 },
+        ServeCfg { workers: 1, queue_cap: 16, policy: BatchPolicy::Greedy },
         move |x, t| {
             if c2.fetch_add(1, Ordering::Relaxed) == 0 {
                 panic!("kaboom");
@@ -304,7 +314,7 @@ fn single_client_coalesces_nothing_many_clients_coalesce() {
         B,
         &TAIL,
         false,
-        ServeCfg { workers: 1, queue_cap: 64 },
+        ServeCfg { workers: 1, queue_cap: 64, policy: BatchPolicy::Greedy },
         |x, t| {
             std::thread::sleep(std::time::Duration::from_millis(2));
             mock_backend(x, t)
@@ -319,4 +329,163 @@ fn single_client_coalesces_nothing_many_clients_coalesce() {
         r8.batches,
         r8.requests
     );
+}
+
+fn window_session(workers: usize, max_wait_us: u64) -> Session {
+    let cfg = ServeCfg {
+        workers,
+        queue_cap: 64,
+        policy: BatchPolicy::Window { max_wait_us },
+    };
+    Session::from_fn(B, &TAIL, false, cfg, mock_backend)
+}
+
+#[test]
+fn window_partial_batch_dispatches_within_the_bound() {
+    // 30ms window, one 1-row request, nothing else arrives: the batch
+    // must be held for (roughly) the window, then dispatched padded —
+    // never stranded, never shipped the instant it arrives
+    let window_us = 30_000u64;
+    let sess = window_session(1, window_us);
+    let x = req(1, 2.0);
+    let t0 = Instant::now();
+    let got = sess.submit(x.clone()).unwrap().wait().unwrap();
+    let waited = t0.elapsed();
+    assert_eq!(got.data, expect(&x));
+    assert!(
+        waited >= Duration::from_micros(window_us / 2),
+        "partial batch dispatched too early ({waited:?} << {window_us}us window)"
+    );
+    assert!(
+        waited < Duration::from_micros(window_us * 20),
+        "bounded wait violated: {waited:?} for a {window_us}us window"
+    );
+    let s = sess.stats();
+    assert_eq!(s.batches, 1);
+    assert_eq!(s.padded_rows, B - 1);
+    assert_eq!(s.expired_windows, 1, "dispatch not attributed to window expiry");
+}
+
+#[test]
+fn window_fill_preempts_expiry_and_stays_bit_identical() {
+    // a very long window with requests that tile into full batches: fill
+    // must preempt the window (no half-second stall), and every ticket
+    // must still match the per-row oracle exactly
+    let sess = window_session(2, 500_000);
+    let reqs: Vec<Tensor> = [1usize, 3, 2, 2] // (1+3) and (2+2) tile to B=4
+        .iter()
+        .enumerate()
+        .map(|(i, &rows)| req(rows, i as f32 * 5.0))
+        .collect();
+    let t0 = Instant::now();
+    let tickets: Vec<_> = reqs
+        .iter()
+        .map(|x| sess.submit(x.clone()).unwrap())
+        .collect();
+    for (x, tk) in reqs.iter().zip(tickets) {
+        let got = tk.wait().unwrap();
+        assert_eq!(got.data, expect(x), "fill-vs-expiry race broke row parity");
+    }
+    assert!(
+        t0.elapsed() < Duration::from_millis(250),
+        "filled batches waited out the window: {:?}",
+        t0.elapsed()
+    );
+    let s = sess.stats();
+    assert_eq!(s.batches, 2);
+    assert_eq!(s.padded_rows, 0);
+    assert_eq!(s.expired_windows, 0);
+}
+
+#[test]
+fn window_expiry_result_matches_one_shot_exactly() {
+    // the same rows served two ways — held until the window expires
+    // (padded partial batch) vs a synchronous full-batch infer — must be
+    // bit-identical in the rows they share
+    let sess = window_session(1, 5_000);
+    let x = req(2, 9.0);
+    let queued = sess.submit(x.clone()).unwrap().wait().unwrap();
+    let mut full = Tensor::zeros(&[B, TAIL[0]]);
+    full.data[..x.data.len()].copy_from_slice(&x.data);
+    let oneshot = sess.infer(&full, None).unwrap();
+    assert_eq!(queued.data[..], oneshot.data[..2 * 2]);
+}
+
+#[test]
+fn close_flushes_a_held_partial_batch_immediately() {
+    // 2s window; close() must dispatch the held partial at once — no
+    // request is stranded for the full window on shutdown
+    let sess = window_session(1, 2_000_000);
+    let x = req(2, 1.0);
+    let tk = sess.submit(x.clone()).unwrap();
+    std::thread::sleep(Duration::from_millis(5)); // let the worker hold it
+    let t0 = Instant::now();
+    sess.close();
+    let got = tk.wait().unwrap();
+    assert!(
+        t0.elapsed() < Duration::from_millis(500),
+        "close() left the partial batch waiting: {:?}",
+        t0.elapsed()
+    );
+    assert_eq!(got.data, expect(&x), "flushed batch lost row parity");
+}
+
+#[test]
+fn infer_counts_into_stats_alongside_submit() {
+    let sess = mock_session(1, 8);
+    let full = req(B, 0.0);
+    sess.infer(&full, None).unwrap();
+    sess.infer(&full, None).unwrap();
+    let got = sess.submit(req(3, 1.0)).unwrap().wait().unwrap();
+    assert_eq!(got.dims, vec![3, 2]);
+    let s = sess.stats();
+    assert_eq!(s.requests, 3, "infer calls must count as requests");
+    assert_eq!(s.batches, 3, "infer calls must count as batches");
+    assert_eq!(s.rows, 2 * B + 3, "infer rows must count");
+    assert_eq!(s.padded_rows, B - 3, "infer never pads");
+}
+
+#[test]
+fn adaptive_policy_serves_and_bounds_its_window() {
+    let cap_us = 5_000u64;
+    let cfg = ServeCfg {
+        workers: 1,
+        queue_cap: 64,
+        policy: BatchPolicy::Adaptive { target_occupancy: 0.9, max_wait_us: cap_us },
+    };
+    let sess = Session::from_fn(B, &TAIL, false, cfg, |x, t| {
+        std::thread::sleep(Duration::from_millis(1));
+        mock_backend(x, t)
+    });
+    let r = serve::drive(&sess, 4, 10, |c, i| (req(1, (c * 50 + i) as f32), None))
+        .unwrap();
+    assert_eq!(r.requests, 40);
+    assert!(r.occupancy > 0.0 && r.occupancy <= 1.0, "occupancy {}", r.occupancy);
+    let s = sess.stats();
+    assert!(
+        s.cur_window_us as u64 <= cap_us,
+        "adaptive window {} exceeded its latency cap {cap_us}",
+        s.cur_window_us
+    );
+    assert_eq!(s.rows, 40);
+}
+
+#[test]
+fn open_loop_drive_reports_queue_service_split() {
+    let sess = window_session(2, 1_000);
+    let r = serve::drive_open(&sess, 2_000.0, 40, 7, |_, i| (req(1, i as f32), None))
+        .unwrap();
+    assert_eq!(r.requests, 40);
+    assert_eq!(r.rows, 40);
+    assert!((r.arrival_rps - 2_000.0).abs() < 1e-9);
+    assert!(r.queue_ms >= 0.0 && r.service_ms >= 0.0);
+    assert!(r.p95_ms >= r.p50_ms, "p95 {} < p50 {}", r.p95_ms, r.p50_ms);
+    assert!(r.occupancy > 0.0 && r.occupancy <= 1.0);
+    // determinism of the arrival schedule: same seed, same generated gaps
+    // (latencies differ, but the request/row accounting must not)
+    let sess2 = window_session(2, 1_000);
+    let r2 = serve::drive_open(&sess2, 2_000.0, 40, 7, |_, i| (req(1, i as f32), None))
+        .unwrap();
+    assert_eq!(r2.requests, r.requests);
+    assert_eq!(r2.rows, r.rows);
 }

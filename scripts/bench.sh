@@ -16,6 +16,9 @@
 #   make artifacts && scripts/bench.sh   # adds span_merge + forward +
 #                                        # deployed-plan serving rows
 #   BENCH_OUT=/tmp/b.json scripts/bench.sh
+#   BENCH_SMOKE=1 scripts/bench.sh       # CI fast path: tiny iters and
+#                                        # shapes, no BENCH_merge.json
+#                                        # write — compile-and-run gate
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
 cargo bench --bench merge_ops ${1:+"$@"}

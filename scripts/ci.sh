@@ -1,5 +1,7 @@
 #!/usr/bin/env bash
-# Tier-1 CI gate: release build + host test suite + formatting check.
+# Tier-1 CI gate: release build + host test suite + formatting check +
+# a BENCH_SMOKE=1 bench pass (tiny shapes, no JSON write) so bench code
+# is compile-and-run gated instead of rotting until the next perf PR.
 #
 # Usage: scripts/ci.sh
 #   CI_SKIP_FMT=1 scripts/ci.sh      # skip the rustfmt check (e.g. no rustfmt)
@@ -9,7 +11,8 @@
 # `anyhow`/`xla` to in-tree path crates and artifact-dependent suites
 # self-skip (see rust/tests/common/mod.rs).
 set -euo pipefail
-cd "$(dirname "$0")/../rust"
+SCRIPT_DIR="$(cd "$(dirname "$0")" && pwd)"
+cd "$SCRIPT_DIR/../rust"
 
 echo "== cargo build --release =="
 cargo build --release
@@ -30,5 +33,8 @@ if [ "${CI_SKIP_FMT:-0}" != "1" ] && cargo fmt --version >/dev/null 2>&1; then
 else
     echo "== cargo fmt --check skipped (rustfmt unavailable or CI_SKIP_FMT=1) =="
 fi
+
+echo "== BENCH_SMOKE=1 scripts/bench.sh (bench compile-and-run gate) =="
+BENCH_SMOKE=1 "$SCRIPT_DIR/bench.sh"
 
 echo "CI OK"
