@@ -15,10 +15,16 @@
 //! ```
 
 use std::collections::BTreeSet;
+use std::sync::Arc;
 
 use layermerge::bench::{bench, bench_iters, smoke, BenchStats};
+use layermerge::exec::{CompiledPlan, Format, Plan};
+use layermerge::ir::synth;
+use layermerge::kernels::{gemm, gemm_packed, PackedB};
 use layermerge::merge::{dirac, expand_depthwise, merge_kernels, merge_kernels_ref};
+use layermerge::runtime::{Backend, HostBackend};
 use layermerge::util::json::Json;
+use layermerge::util::par;
 use layermerge::util::rng::Rng;
 use layermerge::util::tensor::Tensor;
 
@@ -178,6 +184,89 @@ fn main() -> anyhow::Result<()> {
     } else {
         println!("(skipping forward bench: run `make artifacts` first)");
     }
+
+    // register-blocked micro-kernel over packed panels vs the axpy GEMM
+    // (acceptance target: packed beats axpy at >= 256^3)
+    println!("== GEMM micro-kernel (packed panels) vs axpy ==");
+    let gemm_dims: &[usize] = if smoke() { &[48] } else { &[128, 256, 384] };
+    for &d in gemm_dims {
+        let a: Vec<f32> = (0..d * d).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..d * d).map(|_| rng.normal()).collect();
+        let mut c = vec![0.0f32; d * d];
+        let axpy = bench(&format!("gemm_axpy {d}x{d}x{d}"), 2, budget_ms, || {
+            c.fill(0.0);
+            gemm(d, d, d, &a, &b, &mut c);
+            std::hint::black_box(&c);
+        });
+        println!("{}", axpy.row());
+        let bp = PackedB::pack(d, d, &b);
+        let packed = bench(&format!("packed_gemm {d}x{d}x{d}"), 2, budget_ms, || {
+            c.fill(0.0);
+            gemm_packed(d, &a, &bp, &mut c);
+            std::hint::black_box(&c);
+        });
+        println!("{}  ({:.2}x vs axpy)", packed.row(), axpy.p50_ms / packed.p50_ms);
+        rows.push(stats_json(&axpy));
+        rows.push(stats_json(&packed));
+        if d == 256 {
+            derived.push((
+                "packed_gemm_speedup_256".into(),
+                Json::num(axpy.p50_ms / packed.p50_ms),
+            ));
+        }
+    }
+
+    // persistent-pool dispatch vs the legacy per-call scoped spawn on an
+    // identical chunked elementwise pass — the orchestration overhead the
+    // compute pool removes from every kernel dispatch
+    println!("== par dispatch: persistent pool vs scoped spawn ==");
+    let elems = if smoke() { 1 << 16 } else { 1 << 22 };
+    let threads = par::max_threads();
+    let chunk = (elems / (threads * 4)).max(1);
+    let mut buf = vec![1.0f32; elems];
+    let pool_b = bench("par pool elemwise", 2, budget_ms, || {
+        par::par_chunks_mut(&mut buf, chunk, threads, |_, ch| {
+            for v in ch {
+                *v = v.mul_add(1.000_1, 0.1).fract();
+            }
+        });
+    });
+    println!("{}", pool_b.row());
+    let scoped_b = bench("par scoped elemwise", 2, budget_ms, || {
+        par::par_chunks_mut_scoped(&mut buf, chunk, threads, |_, ch| {
+            for v in ch {
+                *v = v.mul_add(1.000_1, 0.1).fract();
+            }
+        });
+    });
+    println!("{}  (pool {:.2}x vs scoped)", scoped_b.row(), scoped_b.p50_ms / pool_b.p50_ms);
+    rows.push(stats_json(&pool_b));
+    rows.push(stats_json(&scoped_b));
+    derived.push((
+        "pool_dispatch_speedup".into(),
+        Json::num(scoped_b.p50_ms / pool_b.p50_ms),
+    ));
+
+    // steady-state lowered host forward: packed weights + arena reuse;
+    // the derived alloc rate must be 0.0 from the second forward on
+    println!("== steady-state host forward (packed weights + arena) ==");
+    let spec_name = if smoke() { "hostchain-tiny" } else { "hostchain" };
+    let (spec, params) = synth::by_name(spec_name).expect("synth spec");
+    let plan = Arc::new(Plan::original(&spec, &params)?);
+    let be = Arc::new(HostBackend::new());
+    let bedyn: Arc<dyn Backend> = be.clone();
+    let cp = CompiledPlan::lower(plan, bedyn, Format::Fused)?;
+    let x = randt(&mut rng, &[spec.batch, spec.h, spec.w, spec.c]);
+    cp.forward(&x, None)?; // warm: charges the arena, initializes the pool
+    let m0 = be.arena().misses();
+    let fwd = bench(&format!("steady_forward {spec_name}"), 1, budget_ms, || {
+        std::hint::black_box(cp.forward(&x, None).unwrap());
+    });
+    let allocs = (be.arena().misses() - m0) as f64 / fwd.iters as f64;
+    println!("{}  ({allocs:.2} arena allocs/forward)", fwd.row());
+    rows.push(stats_json(&fwd));
+    derived.push(("steady_forward_p50_ms".into(), Json::num(fwd.p50_ms)));
+    derived.push(("steady_forward_allocs_per_forward".into(), Json::num(allocs)));
 
     if smoke() {
         println!("(BENCH_SMOKE=1: skipping BENCH_merge.json write)");

@@ -137,7 +137,7 @@ fn window_policy_bench(
     for (ri, &rps) in rates.iter().enumerate() {
         let mut padded: Vec<(&str, f64)> = Vec::new();
         for (pol_name, policy) in policies {
-            let cfg = ServeCfg { workers: 2, queue_cap: 512, policy };
+            let cfg = ServeCfg { workers: 2, queue_cap: 512, policy, ..ServeCfg::default() };
             let sess = Session::from_fn(MOCK_BATCH, &MOCK_TAIL, false, cfg, timed_backend);
             let r = serve::drive_open(&sess, rps, requests, 0xbea7 + ri as u64, |_, i| {
                 let rl: usize = MOCK_TAIL.iter().product();
@@ -205,7 +205,7 @@ fn main() -> anyhow::Result<()> {
         MOCK_BATCH,
         &MOCK_TAIL,
         false,
-        ServeCfg { workers: 2, queue_cap: 256, policy: BatchPolicy::Greedy },
+        ServeCfg { workers: 2, queue_cap: 256, policy: BatchPolicy::Greedy, ..ServeCfg::default() },
         mock_backend,
     );
     let reports = drive_levels(&sess, "serve mock", levels, requests, &mut rows, &mut derived)?;
@@ -245,7 +245,12 @@ fn main() -> anyhow::Result<()> {
                 let sess = engine.deploy_cfg(
                     plan,
                     Format::Fused,
-                    ServeCfg { workers: 2, queue_cap: 256, policy: BatchPolicy::Greedy },
+                    ServeCfg {
+                        workers: 2,
+                        queue_cap: 256,
+                        policy: BatchPolicy::Greedy,
+                        ..ServeCfg::default()
+                    },
                 )?;
                 let gen = layermerge::train::Gen::for_model(&model, 5);
                 let pool = serve::classify_request_pool(&gen, 2);

@@ -296,9 +296,13 @@ impl CompiledPlan {
     /// (`Backend::lower_op`), upload every operand tensor once as a
     /// persistent backend [`Value`] (weights, biases, group-norm affines,
     /// projection / attention / head operands), and precompute the
-    /// boundary-buffer lifetimes.  One-time cost; the returned
-    /// `CompiledPlan` dispatches with no per-step resolution and no
-    /// operand transfers, and keeps the plan alive through its `Arc`.
+    /// boundary-buffer lifetimes.  Conv and projection weights go through
+    /// `Backend::upload_weight`, which on the host backend pre-packs them
+    /// into their GEMM-ready layout — the steady-state forward never
+    /// re-transposes a weight, and with the host arena it allocates no
+    /// buffers at all from the second call on.  One-time cost; the
+    /// returned `CompiledPlan` dispatches with no per-step resolution and
+    /// no operand transfers, and keeps the plan alive through its `Arc`.
     /// Callers normally reach this through
     /// [`crate::serve::Engine::lower`] / [`crate::serve::Engine::deploy`].
     pub fn lower(
@@ -400,7 +404,7 @@ impl CompiledPlan {
                             Some((
                                 be.lower_op(&desc)
                                     .with_context(|| format!("proj op at step {s}"))?,
-                                be.upload(&p.w)?,
+                                be.upload_weight(&desc, &p.w)?,
                                 be.upload(&Tensor::new(vec![p.b.len()], p.b.clone()))?,
                             ))
                         }
@@ -523,7 +527,9 @@ impl CompiledPlan {
                 },
                 concat_slot,
                 conv,
-                weight: be.upload(&m.weight)?,
+                // packed once into the backend's execution layout — the
+                // forward never re-transposes a weight
+                weight: be.upload_weight(&conv_desc(None, false), &m.weight)?,
                 bias: be.upload(&Tensor::new(vec![co], m.bias.clone()))?,
                 fuse_res,
                 gn,

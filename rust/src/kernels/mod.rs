@@ -1,10 +1,15 @@
-//! Host compute kernels — cache-blocked parallel f32 GEMM, an
-//! im2col-based VALID convolution, and the full op set the native host
-//! backend (`runtime::HostBackend`) needs to execute a lowered plan with
-//! zero XLA dependency: SAME-padded (optionally depthwise) conv, the
+//! Host compute kernels — two parallel f32 GEMM paths (a register-blocked
+//! MR×NR micro-kernel over pre-packed B panels for the deployment hot
+//! path, and the sparse-aware axpy [`gemm`] kept for the accumulate-heavy
+//! merge algebra), an im2col-based VALID convolution over [`PackedConv`]
+//! weights with a fusable [`Epilogue`], and the full op set the native
+//! host backend (`runtime::HostBackend`) needs to execute a lowered plan
+//! with zero XLA dependency: SAME-padded (optionally depthwise) conv, the
 //! fused bias+activation+residual epilogue, group norm, 2x nearest
 //! upsampling, single-head spatial attention, and the mean-pool + dense
-//! classifier head.
+//! classifier head.  Transient buffers come from an optional
+//! [`crate::util::arena::Arena`], which is what makes the steady-state
+//! lowered forward allocation-free.
 //!
 //! This is the deployment-time *host* hot path: the merge algebra
 //! (`crate::merge`) composes span kernels out of per-tap matrix multiplies
@@ -22,11 +27,12 @@
 //! baseline side of `benches/merge_ops.rs`; the host-backend op variants
 //! are pinned against naive oracles by `tests/host_backend.rs`.
 
+use crate::util::arena::Arena;
 use crate::util::par;
 use crate::util::tensor::Tensor;
 
-/// Below this many FLOPs a GEMM runs serially — thread spawn would
-/// dominate (scoped threads cost ~10µs each).
+/// Below this many FLOPs a GEMM runs serially — pool dispatch is cheap
+/// but a small product finishes before a parked worker wakes.
 const PAR_FLOP_MIN: usize = 1 << 21;
 
 /// Cache block over the contraction dimension: a block of B rows
@@ -85,61 +91,352 @@ fn gemm_rows(r0: usize, rows: usize, k: usize, n: usize, a: &[f32], b: &[f32], c
     }
 }
 
-/// VALID conv on host tensors via im2col + GEMM: `x` NHWC
-/// `[B, H, W, Ci]`, `w` OIHW `[Co, Ci, k, k]`, output NHWC.
-///
-/// The im2col patch layout is `(a, b, c)` so each kernel row gathers as a
-/// single contiguous `k*Ci` memcpy from the NHWC input, and the weight is
-/// transposed once to `[(a, b, c), o]` so the product lands directly in
-/// NHWC order.
-pub fn conv2d_valid(x: &Tensor, w: &Tensor, stride: usize) -> Tensor {
-    assert!(stride >= 1);
-    let (bn, h, wd, ci) = (x.dims[0], x.dims[1], x.dims[2], x.dims[3]);
-    let (co, ci2, k) = (w.dims[0], w.dims[1], w.dims[2]);
-    assert_eq!(ci, ci2, "channel mismatch: x {:?} vs w {:?}", x.dims, w.dims);
-    assert_eq!(w.dims[2], w.dims[3], "square kernels only");
-    assert!(h >= k && wd >= k, "input {h}x{wd} smaller than kernel {k}");
-    let ho = (h - k) / stride + 1;
-    let wo = (wd - k) / stride + 1;
-    let kk = k * k * ci;
-    let rows = bn * ho * wo;
+// ---------------------------------------------------------------------------
+// Register-blocked micro-kernel over packed B panels
+// ---------------------------------------------------------------------------
 
-    // im2col: one contiguous k*ci run per kernel row a.  Rows are batched
-    // per parallel chunk (like gemm's row blocks) so the claim overhead
-    // stays negligible next to the memcpys.
-    let mut cols = vec![0.0f32; rows * kk];
-    let threads = gemm_threads(rows * kk * 4);
-    let rows_per = rows.div_ceil(threads * 4).max(1);
-    par::par_chunks_mut(&mut cols, rows_per * kk, threads, |chunk_idx, dst| {
-        let row0 = chunk_idx * rows_per;
-        for (ri, drow) in dst.chunks_mut(kk).enumerate() {
-            let row = row0 + ri;
-            let n = row / (ho * wo);
-            let r = row % (ho * wo);
-            let (p, q) = (r / wo, r % wo);
-            for a in 0..k {
-                let src = ((n * h + p * stride + a) * wd + q * stride) * ci;
-                drow[a * k * ci..(a + 1) * k * ci]
-                    .copy_from_slice(&x.data[src..src + k * ci]);
+/// Micro-tile rows: MR rows of C accumulate in registers per panel sweep.
+pub const GEMM_MR: usize = 4;
+/// Micro-tile columns (panel width): NR-wide register accumulators.
+pub const GEMM_NR: usize = 16;
+
+/// `B` re-packed once into NR-wide column panels (k-major inside each
+/// panel), the layout the register-blocked micro-kernel streams with unit
+/// stride.  Edge panels are zero-padded to NR so the kernel's compute is
+/// uniform; stores are clipped to the real width.
+pub struct PackedB {
+    k: usize,
+    n: usize,
+    data: Vec<f32>,
+}
+
+impl PackedB {
+    pub fn pack(k: usize, n: usize, b: &[f32]) -> PackedB {
+        assert_eq!(b.len(), k * n, "B is {k}x{n}");
+        let np = n.div_ceil(GEMM_NR.max(1));
+        let mut data = vec![0.0f32; np * k * GEMM_NR];
+        for p in 0..np {
+            let j0 = p * GEMM_NR;
+            let w = GEMM_NR.min(n - j0);
+            let panel = &mut data[p * k * GEMM_NR..(p + 1) * k * GEMM_NR];
+            for kk in 0..k {
+                panel[kk * GEMM_NR..kk * GEMM_NR + w]
+                    .copy_from_slice(&b[kk * n + j0..kk * n + j0 + w]);
             }
         }
-    });
+        PackedB { k, n, data }
+    }
 
-    // weight: OIHW -> [(a, b, c), o]
-    let mut wt = vec![0.0f32; kk * co];
-    for o in 0..co {
-        for c in 0..ci {
-            for a in 0..k {
-                for b in 0..k {
-                    wt[((a * k + b) * ci + c) * co + o] = w.data[((o * ci + c) * k + a) * k + b];
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+}
+
+/// Fusable GEMM epilogue — `c = act(c + bias (+ res))` applied per row
+/// block while the tile is still cache-hot, the host twin of the
+/// `fa_*` / `far_*` fused artifact variants.  `bias` is per output column
+/// (length n); `res` is the full m×n residual.
+pub struct Epilogue<'a> {
+    pub bias: &'a [f32],
+    pub act: Option<Act>,
+    pub res: Option<&'a [f32]>,
+}
+
+fn epilogue_rows(chunk: &mut [f32], n: usize, r0: usize, e: &Epilogue) {
+    for (i, row) in chunk.chunks_mut(n).enumerate() {
+        let roff = (r0 + i) * n;
+        match e.res {
+            Some(rd) => {
+                for (j, v) in row.iter_mut().enumerate() {
+                    let acc = *v + e.bias[j] + rd[roff + j];
+                    *v = match e.act {
+                        Some(a) => a.apply(acc),
+                        None => acc,
+                    };
+                }
+            }
+            None => {
+                for (j, v) in row.iter_mut().enumerate() {
+                    let acc = *v + e.bias[j];
+                    *v = match e.act {
+                        Some(a) => a.apply(acc),
+                        None => acc,
+                    };
                 }
             }
         }
     }
+}
 
-    let mut y = Tensor::zeros(&[bn, ho, wo, co]);
-    gemm(rows, kk, co, &cols, &wt, &mut y.data);
-    y
+/// `C += A · B` with B pre-packed into panels — the BLIS-style
+/// register-blocked path.  Same accumulation order as [`gemm`] (k
+/// ascending, single pass), so results match the axpy path bit for bit.
+pub fn gemm_packed(m: usize, a: &[f32], bp: &PackedB, c: &mut [f32]) {
+    gemm_packed_epi(m, a, bp, c, None);
+}
+
+/// [`gemm_packed`] with the epilogue fused into the tile loop: each row
+/// block gets bias/activation/residual applied right after its last
+/// panel, instead of a second pass over C from memory.
+pub fn gemm_packed_epi(m: usize, a: &[f32], bp: &PackedB, c: &mut [f32], epi: Option<&Epilogue>) {
+    let (k, n) = (bp.k, bp.n);
+    assert_eq!(a.len(), m * k, "A is {m}x{k}");
+    assert_eq!(c.len(), m * n, "C is {m}x{n}");
+    if let Some(e) = epi {
+        assert_eq!(e.bias.len(), n, "epilogue bias length vs n");
+        if let Some(r) = e.res {
+            assert_eq!(r.len(), m * n, "epilogue residual vs C");
+        }
+    }
+    if m == 0 || n == 0 {
+        return;
+    }
+    let threads = gemm_threads(2 * m * k.max(1) * n);
+    let rows_per = m.div_ceil(threads * 4).max(1);
+    par::par_chunks_mut(c, rows_per * n, threads, |ci, chunk| {
+        let r0 = ci * rows_per;
+        let rows = chunk.len() / n;
+        if k > 0 {
+            gemm_packed_rows(r0, rows, k, n, a, &bp.data, chunk);
+        }
+        if let Some(e) = epi {
+            epilogue_rows(chunk, n, r0, e);
+        }
+    });
+}
+
+/// Serial micro-kernel sweep: rows `[r0, r0 + rows)` of C against every
+/// packed panel.  Full MR×NR tiles accumulate in registers; the ≤ MR-1
+/// edge rows fall back to a per-row axpy over the panel.
+#[allow(clippy::too_many_arguments)]
+fn gemm_packed_rows(
+    r0: usize,
+    rows: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    bdata: &[f32],
+    c_chunk: &mut [f32],
+) {
+    let np = n.div_ceil(GEMM_NR);
+    let mut i0 = 0;
+    while i0 < rows {
+        let mr = GEMM_MR.min(rows - i0);
+        for p in 0..np {
+            let j0 = p * GEMM_NR;
+            let nw = GEMM_NR.min(n - j0);
+            let panel = &bdata[p * k * GEMM_NR..(p + 1) * k * GEMM_NR];
+            if mr == GEMM_MR {
+                let a0 = &a[(r0 + i0) * k..][..k];
+                let a1 = &a[(r0 + i0 + 1) * k..][..k];
+                let a2 = &a[(r0 + i0 + 2) * k..][..k];
+                let a3 = &a[(r0 + i0 + 3) * k..][..k];
+                let mut acc = [[0.0f32; GEMM_NR]; GEMM_MR];
+                for kk in 0..k {
+                    let b = &panel[kk * GEMM_NR..kk * GEMM_NR + GEMM_NR];
+                    let (v0, v1, v2, v3) = (a0[kk], a1[kk], a2[kk], a3[kk]);
+                    for j in 0..GEMM_NR {
+                        acc[0][j] += v0 * b[j];
+                        acc[1][j] += v1 * b[j];
+                        acc[2][j] += v2 * b[j];
+                        acc[3][j] += v3 * b[j];
+                    }
+                }
+                for (i, arow) in acc.iter().enumerate() {
+                    let crow = &mut c_chunk[(i0 + i) * n + j0..][..nw];
+                    for (cv, &av) in crow.iter_mut().zip(arow) {
+                        *cv += av;
+                    }
+                }
+            } else {
+                for i in 0..mr {
+                    let arow = &a[(r0 + i0 + i) * k..][..k];
+                    let crow = &mut c_chunk[(i0 + i) * n + j0..][..nw];
+                    for (kk, &av) in arow.iter().enumerate() {
+                        if av != 0.0 {
+                            let b = &panel[kk * GEMM_NR..kk * GEMM_NR + nw];
+                            for (cv, &bv) in crow.iter_mut().zip(b) {
+                                *cv += av * bv;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        i0 += mr;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Packed convolution weights
+// ---------------------------------------------------------------------------
+
+/// A conv weight lowered **once** into its GEMM-ready execution layout:
+/// im2col-transposed `[(a, b, c), o]` + NR-panel packed for dense convs,
+/// tap-major `[k*k, c]` for depthwise.  `CompiledPlan::lower` packs every
+/// conv/projection weight at lowering time; non-lowered callers (merge
+/// oracle, report numerics) use [`PackedConv::pack`] directly so they too
+/// pay the transpose once per weight instead of once per call.
+pub enum PackedConv {
+    Dense { co: usize, ci: usize, k: usize, panels: PackedB },
+    Depthwise { c: usize, k: usize, wt: Vec<f32> },
+}
+
+impl PackedConv {
+    pub fn pack(w: &Tensor, depthwise: bool) -> PackedConv {
+        assert_eq!(w.dims[2], w.dims[3], "square kernels only");
+        if depthwise {
+            let (c, one, k) = (w.dims[0], w.dims[1], w.dims[2]);
+            assert_eq!(one, 1, "depthwise kernel must be [C,1,k,k]");
+            let mut wt = vec![0.0f32; k * k * c];
+            for ch in 0..c {
+                for a in 0..k {
+                    for b2 in 0..k {
+                        wt[(a * k + b2) * c + ch] = w.data[(ch * k + a) * k + b2];
+                    }
+                }
+            }
+            PackedConv::Depthwise { c, k, wt }
+        } else {
+            let (co, ci, k) = (w.dims[0], w.dims[1], w.dims[2]);
+            let kk = k * k * ci;
+            // OIHW -> [(a, b, c), o] so the product lands in NHWC order
+            let mut wt = vec![0.0f32; kk * co];
+            for o in 0..co {
+                for c in 0..ci {
+                    for a in 0..k {
+                        for b in 0..k {
+                            wt[((a * k + b) * ci + c) * co + o] =
+                                w.data[((o * ci + c) * k + a) * k + b];
+                        }
+                    }
+                }
+            }
+            PackedConv::Dense { co, ci, k, panels: PackedB::pack(kk, co, &wt) }
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        match self {
+            PackedConv::Dense { k, .. } | PackedConv::Depthwise { k, .. } => *k,
+        }
+    }
+
+    pub fn out_channels(&self) -> usize {
+        match self {
+            PackedConv::Dense { co, .. } => *co,
+            PackedConv::Depthwise { c, .. } => *c,
+        }
+    }
+
+    pub fn depthwise(&self) -> bool {
+        matches!(self, PackedConv::Depthwise { .. })
+    }
+
+    /// VALID conv with this packed weight — the one-shot helper for
+    /// callers that convolve one weight against many inputs.
+    pub fn conv_valid(&self, x: &Tensor, stride: usize) -> Tensor {
+        conv2d_valid_packed(x, self, stride, None, None)
+    }
+
+    /// SAME conv with this packed weight.
+    pub fn conv_same(&self, x: &Tensor, stride: usize) -> Tensor {
+        conv2d_same_packed(x, self, stride, None, None)
+    }
+}
+
+/// Arena-or-heap scratch: the lowered execution path passes the backend
+/// arena (steady-state reuse, counted); one-shot callers pass `None`.
+/// Shared with `runtime::HostBackend`'s op interpreter so the
+/// arena-or-heap policy has exactly one implementation.
+pub(crate) fn take_buf(arena: Option<&Arena>, len: usize, zeroed: bool) -> Vec<f32> {
+    match arena {
+        Some(a) if zeroed => a.take_zeroed(len),
+        Some(a) => a.take(len),
+        None => vec![0.0; len],
+    }
+}
+
+fn give_buf(arena: Option<&Arena>, v: Vec<f32>) {
+    if let Some(a) = arena {
+        a.give(v);
+    }
+}
+
+/// VALID conv on host tensors via im2col + the packed micro-kernel GEMM:
+/// `x` NHWC `[B, H, W, Ci]`, output NHWC.  The im2col patch layout is
+/// `(a, b, c)` so each kernel row gathers as a single contiguous `k*Ci`
+/// memcpy from the NHWC input; 1x1 stride-1 convs skip im2col entirely
+/// (the NHWC input *is* the A matrix).  `epi` fuses the conv epilogue
+/// into the GEMM tile loop; `arena` recycles the column/output buffers.
+pub fn conv2d_valid_packed(
+    x: &Tensor,
+    pc: &PackedConv,
+    stride: usize,
+    epi: Option<&Epilogue>,
+    arena: Option<&Arena>,
+) -> Tensor {
+    assert!(stride >= 1);
+    match pc {
+        PackedConv::Dense { co, ci, k, panels } => {
+            let (co, ci, k) = (*co, *ci, *k);
+            let (bn, h, wd, cx) = (x.dims[0], x.dims[1], x.dims[2], x.dims[3]);
+            assert_eq!(cx, ci, "channel mismatch: x {:?} vs packed ci {ci}", x.dims);
+            assert!(h >= k && wd >= k, "input {h}x{wd} smaller than kernel {k}");
+            let ho = (h - k) / stride + 1;
+            let wo = (wd - k) / stride + 1;
+            let rows = bn * ho * wo;
+            if k == 1 && stride == 1 {
+                let mut y =
+                    Tensor::new(vec![bn, ho, wo, co], take_buf(arena, rows * co, true));
+                gemm_packed_epi(rows, &x.data, panels, &mut y.data, epi);
+                return y;
+            }
+            let kk = k * k * ci;
+            // im2col: one contiguous k*ci run per kernel row a.  Rows are
+            // batched per parallel chunk (like gemm's row blocks) so the
+            // claim overhead stays negligible next to the memcpys.
+            let mut cols = take_buf(arena, rows * kk, false);
+            let threads = gemm_threads(rows * kk * 4);
+            let rows_per = rows.div_ceil(threads * 4).max(1);
+            par::par_chunks_mut(&mut cols, rows_per * kk, threads, |chunk_idx, dst| {
+                let row0 = chunk_idx * rows_per;
+                for (ri, drow) in dst.chunks_mut(kk).enumerate() {
+                    let row = row0 + ri;
+                    let n = row / (ho * wo);
+                    let r = row % (ho * wo);
+                    let (p, q) = (r / wo, r % wo);
+                    for a in 0..k {
+                        let src = ((n * h + p * stride + a) * wd + q * stride) * cx;
+                        drow[a * k * cx..(a + 1) * k * cx]
+                            .copy_from_slice(&x.data[src..src + k * cx]);
+                    }
+                }
+            });
+            let mut y = Tensor::new(vec![bn, ho, wo, co], take_buf(arena, rows * co, true));
+            gemm_packed_epi(rows, &cols, panels, &mut y.data, epi);
+            give_buf(arena, cols);
+            y
+        }
+        PackedConv::Depthwise { c, k, wt } => {
+            depthwise_conv2d_valid_packed(x, *c, *k, wt, stride, epi, arena)
+        }
+    }
+}
+
+/// VALID conv on host tensors — packs the weight per call and runs the
+/// packed path.  Loop callers should hold a [`PackedConv`] instead.
+pub fn conv2d_valid(x: &Tensor, w: &Tensor, stride: usize) -> Tensor {
+    assert_eq!(
+        x.dims[3], w.dims[1],
+        "channel mismatch: x {:?} vs w {:?}",
+        x.dims, w.dims
+    );
+    PackedConv::pack(w, false).conv_valid(x, stride)
 }
 
 /// Naive triple-loop `C += A · B` — the GEMM test oracle (shared by the
@@ -234,12 +531,18 @@ fn same_pad(n: usize, k: usize, stride: usize) -> (usize, usize) {
     (tot / 2, tot - tot / 2)
 }
 
-/// Zero-pad NHWC spatially (parallel per-batch row copies).
-fn pad2d(x: &Tensor, ph: (usize, usize), pw: (usize, usize)) -> Tensor {
+/// Zero-pad NHWC spatially (parallel per-batch row copies), pad plane
+/// from the arena when one is supplied.
+fn pad2d_buf(
+    x: &Tensor,
+    ph: (usize, usize),
+    pw: (usize, usize),
+    arena: Option<&Arena>,
+) -> Tensor {
     let (bn, h, wd, c) = (x.dims[0], x.dims[1], x.dims[2], x.dims[3]);
     let (hp, wp) = (h + ph.0 + ph.1, wd + pw.0 + pw.1);
-    let mut out = Tensor::zeros(&[bn, hp, wp, c]);
     let plane = hp * wp * c;
+    let mut out = Tensor::new(vec![bn, hp, wp, c], take_buf(arena, bn * plane, true));
     let threads = par::auto_threads(out.data.len());
     par::par_chunks_mut(&mut out.data, plane, threads, |n, dst| {
         for i in 0..h {
@@ -251,51 +554,72 @@ fn pad2d(x: &Tensor, ph: (usize, usize), pw: (usize, usize)) -> Tensor {
     out
 }
 
-/// SAME conv on host tensors, matching the AOT `conv` artifacts exactly:
-/// `x` NHWC, `w` OIHW (`[C, 1, k, k]` when `depthwise`), output spatial
-/// dims `ceil(in / stride)`.  Dense goes through im2col + GEMM; depthwise
-/// runs a direct tap-accumulated kernel (expanding to a diagonal dense
-/// kernel would be CxC memory for C useful rows).
-pub fn conv2d_same(x: &Tensor, w: &Tensor, stride: usize, depthwise: bool) -> Tensor {
+/// Zero-pad NHWC spatially (heap-allocating variant).
+fn pad2d(x: &Tensor, ph: (usize, usize), pw: (usize, usize)) -> Tensor {
+    pad2d_buf(x, ph, pw, None)
+}
+
+/// SAME conv over a pre-packed weight, matching the AOT `conv` artifacts
+/// exactly: `x` NHWC, output spatial dims `ceil(in / stride)`.  Dense
+/// goes through im2col + the packed micro-kernel; depthwise runs a direct
+/// tap-accumulated kernel over the tap-major packed weight (expanding to
+/// a diagonal dense kernel would be CxC memory for C useful rows).  The
+/// optional [`Epilogue`] fuses bias/activation/residual into the kernel's
+/// tile loop; the optional [`Arena`] recycles pad/column/output buffers.
+pub fn conv2d_same_packed(
+    x: &Tensor,
+    pc: &PackedConv,
+    stride: usize,
+    epi: Option<&Epilogue>,
+    arena: Option<&Arena>,
+) -> Tensor {
     let (h, wd) = (x.dims[1], x.dims[2]);
-    let k = w.dims[2];
+    let k = pc.k();
     let ph = same_pad(h, k, stride);
     let pw = same_pad(wd, k, stride);
-    let padded;
-    let xr = if ph.0 + ph.1 + pw.0 + pw.1 == 0 {
-        x
+    if ph.0 + ph.1 + pw.0 + pw.1 == 0 {
+        conv2d_valid_packed(x, pc, stride, epi, arena)
     } else {
-        padded = pad2d(x, ph, pw);
-        &padded
-    };
-    if depthwise {
-        depthwise_conv2d_valid(xr, w, stride)
-    } else {
-        conv2d_valid(xr, w, stride)
+        let padded = pad2d_buf(x, ph, pw, arena);
+        let y = conv2d_valid_packed(&padded, pc, stride, epi, arena);
+        give_buf(arena, padded.data);
+        y
     }
 }
 
-/// VALID depthwise conv: `x` NHWC `[B, H, W, C]`, `w` `[C, 1, k, k]`.
-/// Per tap, the inner loop is a contiguous fused multiply-add over the
-/// channel dim; parallel over output-row blocks.
-fn depthwise_conv2d_valid(x: &Tensor, w: &Tensor, stride: usize) -> Tensor {
-    let (bn, h, wd, c) = (x.dims[0], x.dims[1], x.dims[2], x.dims[3]);
-    let (cw, one, k) = (w.dims[0], w.dims[1], w.dims[2]);
-    assert_eq!(one, 1, "depthwise kernel must be [C,1,k,k]");
-    assert_eq!(cw, c, "channel mismatch: x {:?} vs w {:?}", x.dims, w.dims);
+/// SAME conv on host tensors — packs the weight per call and runs the
+/// packed path.  Lowered plans hold a [`PackedConv`] instead (packed once
+/// at `CompiledPlan::lower`).
+pub fn conv2d_same(x: &Tensor, w: &Tensor, stride: usize, depthwise: bool) -> Tensor {
+    if !depthwise {
+        assert_eq!(
+            x.dims[3], w.dims[1],
+            "channel mismatch: x {:?} vs w {:?}",
+            x.dims, w.dims
+        );
+    }
+    conv2d_same_packed(x, &PackedConv::pack(w, depthwise), stride, None, None)
+}
+
+/// VALID depthwise conv over the tap-major packed weight: `x` NHWC
+/// `[B, H, W, C]`.  Per tap, the inner loop is a contiguous fused
+/// multiply-add over the channel dim; parallel over output-row blocks,
+/// with the epilogue applied per finished row while it is cache-hot.
+#[allow(clippy::too_many_arguments)]
+fn depthwise_conv2d_valid_packed(
+    x: &Tensor,
+    c: usize,
+    k: usize,
+    wt: &[f32],
+    stride: usize,
+    epi: Option<&Epilogue>,
+    arena: Option<&Arena>,
+) -> Tensor {
+    let (bn, h, wd, cx) = (x.dims[0], x.dims[1], x.dims[2], x.dims[3]);
+    assert_eq!(cx, c, "channel mismatch: x {:?} vs packed c {c}", x.dims);
     let ho = (h - k) / stride + 1;
     let wo = (wd - k) / stride + 1;
-    // weight transposed once to tap-major [k*k, c] so the inner loop is
-    // contiguous over channels
-    let mut wt = vec![0.0f32; k * k * c];
-    for ch in 0..c {
-        for a in 0..k {
-            for b2 in 0..k {
-                wt[(a * k + b2) * c + ch] = w.data[(ch * k + a) * k + b2];
-            }
-        }
-    }
-    let mut y = Tensor::zeros(&[bn, ho, wo, c]);
+    let mut y = Tensor::new(vec![bn, ho, wo, c], take_buf(arena, bn * ho * wo * c, true));
     let rows = bn * ho;
     let threads = gemm_threads(2 * rows * wo * c * k * k);
     let rows_per = rows.div_ceil(threads * 4).max(1);
@@ -316,6 +640,22 @@ fn depthwise_conv2d_valid(x: &Tensor, w: &Tensor, stride: usize) -> Tensor {
                         for ((dv, &xv), &wv) in d.iter_mut().zip(xrow).zip(wtap) {
                             *dv += xv * wv;
                         }
+                    }
+                }
+            }
+            if let Some(e) = epi {
+                let roff = row * wo * c;
+                for (qi, px) in drow.chunks_mut(c).enumerate() {
+                    let base = roff + qi * c;
+                    for (o, v) in px.iter_mut().enumerate() {
+                        let mut acc = *v + e.bias[o];
+                        if let Some(rd) = e.res {
+                            acc += rd[base + o];
+                        }
+                        *v = match e.act {
+                            Some(aa) => aa.apply(acc),
+                            None => acc,
+                        };
                     }
                 }
             }
@@ -367,18 +707,56 @@ pub fn act_inplace(y: &mut Tensor, act: Act) {
     });
 }
 
+/// Elementwise activation into a pre-sized output (`y` may be dirty arena
+/// scratch — every element is written).
+pub fn act_into(x: &Tensor, act: Act, y: &mut Tensor) {
+    assert_eq!(x.dims, y.dims, "act_into shape mismatch");
+    let threads = par::auto_threads(x.data.len());
+    let chunk = x.data.len().div_ceil(threads * 4).max(1);
+    par::par_chunks_mut(&mut y.data, chunk, threads, |ci, dst| {
+        let base = ci * chunk;
+        for (j, v) in dst.iter_mut().enumerate() {
+            *v = act.apply(x.data[base + j]);
+        }
+    });
+}
+
+/// Elementwise add into a pre-sized output (`y` may be dirty arena
+/// scratch — every element is written).
+pub fn add_into(a: &Tensor, b: &Tensor, y: &mut Tensor) {
+    assert_eq!(a.dims, b.dims, "add shape mismatch");
+    assert_eq!(a.dims, y.dims, "add_into output shape mismatch");
+    let threads = par::auto_threads(a.data.len());
+    let chunk = a.data.len().div_ceil(threads * 4).max(1);
+    par::par_chunks_mut(&mut y.data, chunk, threads, |ci, dst| {
+        let base = ci * chunk;
+        for (j, v) in dst.iter_mut().enumerate() {
+            *v = a.data[base + j] + b.data[base + j];
+        }
+    });
+}
+
 /// Group norm over NHWC, matching `python/compile/model.py::group_norm`:
 /// per (batch, group) statistics over (H, W, C/groups), eps 1e-5,
 /// per-channel scale + bias.  Parallel over batch elements.
 pub fn group_norm(x: &Tensor, scale: &[f32], bias: &[f32], groups: usize) -> Tensor {
+    let mut y = Tensor::zeros(&x.dims);
+    group_norm_into(x, scale, bias, groups, &mut y);
+    y
+}
+
+/// [`group_norm`] into a pre-sized output (`y` may be dirty arena
+/// scratch — every element is written).
+pub fn group_norm_into(x: &Tensor, scale: &[f32], bias: &[f32], groups: usize, y: &mut Tensor) {
     let (bn, h, wd, c) = (x.dims[0], x.dims[1], x.dims[2], x.dims[3]);
     assert!(groups >= 1 && c % groups == 0, "channels {c} not divisible into {groups} groups");
     assert_eq!(scale.len(), c);
     assert_eq!(bias.len(), c);
+    assert_eq!(y.dims, x.dims, "group_norm_into output shape mismatch");
     let cg = c / groups;
     let hw = h * wd;
     let plane = hw * c;
-    let mut y = Tensor::zeros(&[bn, h, wd, c]);
+    let _ = bn;
     let threads = par::auto_threads(x.data.len());
     par::par_chunks_mut(&mut y.data, plane, threads, |n, out| {
         let xin = &x.data[n * plane..(n + 1) * plane];
@@ -405,7 +783,6 @@ pub fn group_norm(x: &Tensor, scale: &[f32], bias: &[f32], groups: usize) -> Ten
             }
         }
     });
-    y
 }
 
 /// 2x nearest-neighbour upsampling (NHWC) — each pixel's channel block is
@@ -413,6 +790,15 @@ pub fn group_norm(x: &Tensor, scale: &[f32], bias: &[f32], groups: usize) -> Ten
 pub fn upsample2x(x: &Tensor) -> Tensor {
     let (bn, h, wd, c) = (x.dims[0], x.dims[1], x.dims[2], x.dims[3]);
     let mut y = Tensor::zeros(&[bn, 2 * h, 2 * wd, c]);
+    upsample2x_into(x, &mut y);
+    y
+}
+
+/// [`upsample2x`] into a pre-sized `[B, 2H, 2W, C]` output (`y` may be
+/// dirty arena scratch — every element is written).
+pub fn upsample2x_into(x: &Tensor, y: &mut Tensor) {
+    let (bn, h, wd, c) = (x.dims[0], x.dims[1], x.dims[2], x.dims[3]);
+    assert_eq!(y.dims, vec![bn, 2 * h, 2 * wd, c], "upsample2x_into output shape");
     let orow = 2 * wd * c;
     let threads = par::auto_threads(y.data.len());
     par::par_chunks_mut(&mut y.data, 2 * orow, threads, |r, chunk| {
@@ -427,28 +813,52 @@ pub fn upsample2x(x: &Tensor) -> Tensor {
         }
         row1.copy_from_slice(row0);
     });
-    y
 }
 
 /// Single-head self-attention over spatial positions with residual,
 /// matching `model.py::attention`: `softmax(q kᵀ / sqrt(c)) v @ wout + x`.
-/// All four matrix products run on [`gemm`].
-pub fn attention(x: &Tensor, wqkv: &Tensor, wout: &Tensor) -> Tensor {
+/// The qkv projection is one big [`gemm`]; the per-batch products then
+/// **dispatch on the compute pool** (this was the last op still serial
+/// over the batch dim), with each batch task drawing its q/kᵀ/v/att
+/// scratch from the arena's per-thread shard.  Inside a batch task the
+/// inner GEMMs run serially (`par::in_pool_worker`).
+pub fn attention(x: &Tensor, wqkv: &Tensor, wout: &Tensor, arena: Option<&Arena>) -> Tensor {
     let (bn, h, wd, c) = (x.dims[0], x.dims[1], x.dims[2], x.dims[3]);
     assert_eq!(wqkv.dims, vec![c, 3 * c], "wqkv must be [C, 3C]");
     assert_eq!(wout.dims, vec![c, c], "wout must be [C, C]");
+    // arena-less callers still recycle within the call: a transient local
+    // arena caps scratch at one set per thread instead of six fresh
+    // buffers per batch element
+    let local;
+    let arena = Some(match arena {
+        Some(a) => a,
+        None => {
+            local = Arena::new();
+            &local
+        }
+    });
     let s = h * wd;
-    let mut qkv = vec![0.0f32; bn * s * 3 * c];
+    let mut qkv = take_buf(arena, bn * s * 3 * c, true);
     gemm(bn * s, c, 3 * c, &x.data, &wqkv.data, &mut qkv);
     let scale = 1.0 / (c as f32).sqrt();
-    let mut y = x.clone();
-    let mut q = vec![0.0f32; s * c];
-    let mut kt = vec![0.0f32; c * s];
-    let mut v = vec![0.0f32; s * c];
-    let mut att = vec![0.0f32; s * s];
-    let mut av = vec![0.0f32; s * c];
-    let mut out = vec![0.0f32; s * c];
-    for n in 0..bn {
+    let mut y = Tensor::new(x.dims.clone(), take_buf(arena, bn * s * c, false));
+    let flops = 2 * s * s * c + 2 * s * c * c;
+    // batch-parallel only when the batch dim can actually feed every
+    // worker; below that, the serial outer loop keeps the *inner* GEMMs
+    // free to parallelize across the pool (small-bn / large-spatial
+    // inputs would otherwise cap at bn-way parallelism)
+    let threads = if bn >= par::max_threads() && bn * flops >= PAR_FLOP_MIN {
+        par::max_threads()
+    } else {
+        1
+    };
+    par::par_chunks_mut(&mut y.data, s * c, threads, |n, yplane| {
+        let mut q = take_buf(arena, s * c, false);
+        let mut kt = take_buf(arena, c * s, false);
+        let mut v = take_buf(arena, s * c, false);
+        let mut att = take_buf(arena, s * s, true);
+        let mut av = take_buf(arena, s * c, true);
+        let mut out = take_buf(arena, s * c, true);
         for i in 0..s {
             let row = &qkv[(n * s + i) * 3 * c..][..3 * c];
             q[i * c..(i + 1) * c].copy_from_slice(&row[..c]);
@@ -457,7 +867,6 @@ pub fn attention(x: &Tensor, wqkv: &Tensor, wout: &Tensor) -> Tensor {
             }
             v[i * c..(i + 1) * c].copy_from_slice(&row[2 * c..]);
         }
-        att.fill(0.0);
         gemm(s, c, s, &q, &kt, &mut att);
         for row in att.chunks_mut(s) {
             let mut mx = f32::NEG_INFINITY;
@@ -474,26 +883,47 @@ pub fn attention(x: &Tensor, wqkv: &Tensor, wout: &Tensor) -> Tensor {
                 *val /= sum;
             }
         }
-        av.fill(0.0);
         gemm(s, s, c, &att, &v, &mut av);
-        out.fill(0.0);
         gemm(s, c, c, &av, &wout.data, &mut out);
-        for (a, b2) in y.data[n * s * c..(n + 1) * s * c].iter_mut().zip(&out) {
-            *a += *b2;
+        let xplane = &x.data[n * s * c..(n + 1) * s * c];
+        for ((yv, &xv), &ov) in yplane.iter_mut().zip(xplane).zip(&out) {
+            *yv = xv + ov;
         }
-    }
+        give_buf(arena, q);
+        give_buf(arena, kt);
+        give_buf(arena, v);
+        give_buf(arena, att);
+        give_buf(arena, av);
+        give_buf(arena, out);
+    });
+    give_buf(arena, qkv);
     y
 }
 
 /// Classifier head: global mean pool over (H, W) then a dense layer —
 /// `x.mean(axis=(1,2)) @ w + b`, `w` `[C, classes]`.
 pub fn mean_pool_dense(x: &Tensor, w: &Tensor, b: &[f32]) -> Tensor {
+    let mut y = Tensor::zeros(&[x.dims[0], w.dims[1]]);
+    mean_pool_dense_into(x, w, b, None, &mut y);
+    y
+}
+
+/// [`mean_pool_dense`] into a pre-sized zeroed `[B, classes]` output,
+/// with the pooled scratch drawn from the arena.
+pub fn mean_pool_dense_into(
+    x: &Tensor,
+    w: &Tensor,
+    b: &[f32],
+    arena: Option<&Arena>,
+    y: &mut Tensor,
+) {
     let (bn, h, wd, c) = (x.dims[0], x.dims[1], x.dims[2], x.dims[3]);
     assert_eq!(w.dims[0], c, "head weight rows vs channels");
     let classes = w.dims[1];
     assert_eq!(b.len(), classes);
+    assert_eq!(y.dims, vec![bn, classes], "mean_pool_dense_into output shape");
     let hw = (h * wd) as f32;
-    let mut pooled = vec![0.0f32; bn * c];
+    let mut pooled = take_buf(arena, bn * c, true);
     for n in 0..bn {
         let dst = &mut pooled[n * c..(n + 1) * c];
         for p in 0..h * wd {
@@ -506,14 +936,13 @@ pub fn mean_pool_dense(x: &Tensor, w: &Tensor, b: &[f32]) -> Tensor {
             *d /= hw;
         }
     }
-    let mut y = Tensor::zeros(&[bn, classes]);
     gemm(bn, c, classes, &pooled, &w.data, &mut y.data);
+    give_buf(arena, pooled);
     for row in y.data.chunks_mut(classes) {
         for (v, &bb) in row.iter_mut().zip(b) {
             *v += bb;
         }
     }
-    y
 }
 
 #[cfg(test)]
@@ -543,6 +972,147 @@ mod tests {
                 .fold(0.0f32, f32::max);
             assert!(diff < 1e-4, "({m},{k},{n}) diff {diff}");
         }
+    }
+
+    #[test]
+    fn gemm_packed_matches_axpy_and_ref() {
+        let mut r = Rng::new(31);
+        for &(m, k, n) in &[(1, 1, 1), (4, 16, 16), (5, 7, 17), (63, 129, 33), (96, 40, 64)] {
+            let a: Vec<f32> = (0..m * k).map(|_| r.normal()).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| r.normal()).collect();
+            let mut want = vec![0.0f32; m * n];
+            gemm_ref(m, k, n, &a, &b, &mut want);
+            let bp = PackedB::pack(k, n, &b);
+            assert_eq!((bp.k(), bp.n()), (k, n));
+            let mut got = vec![0.0f32; m * n];
+            gemm_packed(m, &a, &bp, &mut got);
+            let diff = want
+                .iter()
+                .zip(&got)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0f32, f32::max);
+            assert!(diff < 1e-3, "packed ({m},{k},{n}) diff {diff}");
+        }
+    }
+
+    #[test]
+    fn gemm_packed_accumulates_like_gemm() {
+        let mut r = Rng::new(32);
+        let (m, k, n) = (9, 11, 21);
+        let a: Vec<f32> = (0..m * k).map(|_| r.normal()).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| r.normal()).collect();
+        let bp = PackedB::pack(k, n, &b);
+        let mut once = vec![0.0f32; m * n];
+        gemm_packed(m, &a, &bp, &mut once);
+        let mut twice = vec![0.0f32; m * n];
+        gemm_packed(m, &a, &bp, &mut twice);
+        gemm_packed(m, &a, &bp, &mut twice);
+        for (x, y) in once.iter().zip(&twice) {
+            assert!((2.0 * x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn fused_epilogue_matches_separate_bias_act_res() {
+        let mut r = Rng::new(33);
+        let (m, k, n) = (10, 13, 18);
+        let a: Vec<f32> = (0..m * k).map(|_| r.normal()).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| r.normal()).collect();
+        let bias: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+        let res: Vec<f32> = (0..m * n).map(|_| r.normal()).collect();
+        let bp = PackedB::pack(k, n, &b);
+        for act in [None, Some(Act::Relu), Some(Act::Swish)] {
+            for with_res in [false, true] {
+                // reference: plain GEMM then the separate epilogue pass
+                let mut want = Tensor::zeros(&[m, n]);
+                gemm(m, k, n, &a, &b, &mut want.data);
+                let rt = Tensor::new(vec![m, n], res.clone());
+                bias_act_res(&mut want, &bias, act, with_res.then_some(&rt));
+                let mut got = vec![0.0f32; m * n];
+                let epi = Epilogue {
+                    bias: &bias,
+                    act,
+                    res: with_res.then_some(&res[..]),
+                };
+                gemm_packed_epi(m, &a, &bp, &mut got, Some(&epi));
+                let diff = want
+                    .data
+                    .iter()
+                    .zip(&got)
+                    .map(|(x, y)| (x - y).abs())
+                    .fold(0.0f32, f32::max);
+                assert!(diff < 1e-4, "act {act:?} res {with_res}: diff {diff}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_conv_helper_reuses_one_packing() {
+        let mut r = Rng::new(34);
+        let w = randt(&mut r, &[5, 3, 3, 3]);
+        let pc = PackedConv::pack(&w, false);
+        assert_eq!((pc.k(), pc.out_channels(), pc.depthwise()), (3, 5, false));
+        for &h in &[7usize, 9, 12] {
+            let x = randt(&mut r, &[1, h, h, 3]);
+            let want = conv2d_valid_ref(&x, &w, 1);
+            let got = pc.conv_valid(&x, 1);
+            assert_eq!(got.dims, want.dims);
+            assert!(got.max_abs_diff(&want) < 1e-3);
+        }
+        let dw = randt(&mut r, &[4, 1, 3, 3]);
+        let pdw = PackedConv::pack(&dw, true);
+        assert!(pdw.depthwise());
+        let x = randt(&mut r, &[2, 8, 8, 4]);
+        let want = conv2d_same(&x, &dw, 2, true);
+        let got = pdw.conv_same(&x, 2);
+        assert_eq!(got.dims, want.dims);
+        assert!(got.max_abs_diff(&want) < 1e-6);
+    }
+
+    #[test]
+    fn conv_packed_with_arena_hits_on_second_call() {
+        use crate::util::arena::Arena;
+        let mut r = Rng::new(35);
+        let x = randt(&mut r, &[1, 9, 9, 3]);
+        let w = randt(&mut r, &[4, 3, 3, 3]);
+        let pc = PackedConv::pack(&w, false);
+        let arena = Arena::new();
+        let bias = vec![0.0f32; 4];
+        let epi = Epilogue { bias: &bias, act: None, res: None };
+        let y1 = conv2d_same_packed(&x, &pc, 1, Some(&epi), Some(&arena));
+        let m1 = arena.misses();
+        assert!(m1 > 0, "first call must populate the arena");
+        arena.give(y1.data); // the Value wrapper does this in production
+        let y2 = conv2d_same_packed(&x, &pc, 1, Some(&epi), Some(&arena));
+        assert_eq!(arena.misses(), m1, "second call must be allocation-free");
+        assert!(arena.hits() > 0);
+        let want = conv2d_same(&x, &w, 1, false);
+        assert!(y2.max_abs_diff(&want) < 1e-6);
+    }
+
+    #[test]
+    fn elementwise_into_variants_match() {
+        let mut r = Rng::new(36);
+        let a = randt(&mut r, &[2, 3, 3, 4]);
+        let b = randt(&mut r, &[2, 3, 3, 4]);
+        let mut add = Tensor::full(&a.dims.clone(), 9.9);
+        add_into(&a, &b, &mut add);
+        for (i, v) in add.data.iter().enumerate() {
+            assert!((v - (a.data[i] + b.data[i])).abs() < 1e-6);
+        }
+        let mut act = Tensor::full(&a.dims.clone(), 9.9);
+        act_into(&a, Act::Relu, &mut act);
+        for (i, v) in act.data.iter().enumerate() {
+            assert_eq!(*v, a.data[i].max(0.0));
+        }
+        let mut up = Tensor::full(&[2, 6, 6, 4], 9.9);
+        upsample2x_into(&a, &mut up);
+        assert_eq!(up.data, upsample2x(&a).data);
+        let scale = vec![1.0f32; 4];
+        let zero = vec![0.0f32; 4];
+        let mut gn = Tensor::full(&a.dims.clone(), 9.9);
+        group_norm_into(&a, &scale, &zero, 2, &mut gn);
+        assert_eq!(gn.data, group_norm(&a, &scale, &zero, 2).data);
     }
 
     #[test]

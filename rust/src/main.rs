@@ -337,6 +337,9 @@ fn serve_cfg(args: &Args) -> Result<ServeCfg> {
         workers: args.usize_or("serve-workers", defaults.workers).max(1),
         queue_cap: args.usize_or("queue-cap", defaults.queue_cap).max(1),
         policy: serve_policy(args)?,
+        // deployed CLI sessions pre-charge every worker's arena shard so
+        // the first measured request is already in steady state
+        warmup: true,
     })
 }
 

@@ -26,57 +26,96 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use crate::kernels::Act;
+use crate::kernels::{Act, PackedConv};
 use crate::model::{sig_str, Manifest};
 use crate::runtime::{from_literal, Exec, Runtime};
+use crate::util::arena::Arena;
 use crate::util::tensor::Tensor;
 
-/// A buffer owned by a backend: host tensor or device-resident PJRT
-/// buffer.  Cloning is a refcount bump — boundary slots, stash entries
-/// and residual sources share one underlying buffer.
+/// A buffer owned by a backend: host tensor (plain or arena-recycled),
+/// pre-packed host conv weight, or device-resident PJRT buffer.  Cloning
+/// is a refcount bump — boundary slots, stash entries and residual
+/// sources share one underlying buffer.  When the last reference to a
+/// `Pooled` value drops, its buffer goes back to the backend arena — this
+/// is how inter-step activations get recycled across forwards.
 #[derive(Clone)]
 pub struct Value(Arc<ValueInner>);
 
 enum ValueInner {
     Host(Tensor),
+    /// Arena-recycled host tensor: the data vector returns to `arena`
+    /// when the last clone drops.
+    Pooled { t: Tensor, arena: Arc<Arena> },
+    /// A conv weight lowered once into its GEMM-ready layout
+    /// (`kernels::PackedConv`); `dims` keeps the original OIHW shape for
+    /// diagnostics.
+    Packed { pc: PackedConv, dims: Vec<usize> },
     Device { buf: xla::PjRtBuffer, dims: Vec<usize> },
 }
 
 // SAFETY: PJRT device buffers are thread-safe in the underlying C++
 // runtime (same argument as the markers on `Exec`/`Runtime`); the host
-// variant is a plain owned Tensor.
+// variants are plain owned data.
 unsafe impl Send for ValueInner {}
 unsafe impl Sync for ValueInner {}
+
+impl Drop for ValueInner {
+    fn drop(&mut self) {
+        if let ValueInner::Pooled { t, arena } = self {
+            arena.give(std::mem::take(&mut t.data));
+        }
+    }
+}
 
 impl Value {
     pub fn host(t: Tensor) -> Value {
         Value(Arc::new(ValueInner::Host(t)))
     }
 
+    /// An arena-recycled host tensor (see [`ValueInner::Pooled`]).
+    pub(crate) fn pooled(t: Tensor, arena: Arc<Arena>) -> Value {
+        Value(Arc::new(ValueInner::Pooled { t, arena }))
+    }
+
+    pub(crate) fn packed(pc: PackedConv, dims: Vec<usize>) -> Value {
+        Value(Arc::new(ValueInner::Packed { pc, dims }))
+    }
+
     pub(crate) fn device(buf: xla::PjRtBuffer, dims: Vec<usize>) -> Value {
         Value(Arc::new(ValueInner::Device { buf, dims }))
     }
 
-    /// Logical dims, tracked host-side for both variants.
+    /// Logical dims, tracked host-side for every variant.
     pub fn dims(&self) -> &[usize] {
         match &*self.0 {
-            ValueInner::Host(t) => &t.dims,
-            ValueInner::Device { dims, .. } => dims,
+            ValueInner::Host(t) | ValueInner::Pooled { t, .. } => &t.dims,
+            ValueInner::Packed { dims, .. } | ValueInner::Device { dims, .. } => dims,
         }
     }
 
-    /// Borrow the host tensor (None for device-resident values).
+    /// Borrow the host tensor (None for device-resident / packed values).
     pub fn as_host(&self) -> Option<&Tensor> {
         match &*self.0 {
-            ValueInner::Host(t) => Some(t),
-            ValueInner::Device { .. } => None,
+            ValueInner::Host(t) | ValueInner::Pooled { t, .. } => Some(t),
+            ValueInner::Packed { .. } | ValueInner::Device { .. } => None,
+        }
+    }
+
+    /// Borrow the packed conv weight (None for every other variant).
+    pub(crate) fn as_packed(&self) -> Option<&PackedConv> {
+        match &*self.0 {
+            ValueInner::Packed { pc, .. } => Some(pc),
+            _ => None,
         }
     }
 
     fn as_device(&self) -> Result<&xla::PjRtBuffer> {
         match &*self.0 {
             ValueInner::Device { buf, .. } => Ok(buf),
-            ValueInner::Host(_) => {
+            ValueInner::Packed { .. } => {
+                anyhow::bail!("packed host weight passed to a device-resident dispatch")
+            }
+            ValueInner::Host(_) | ValueInner::Pooled { .. } => {
                 anyhow::bail!("host value passed to a device-resident dispatch")
             }
         }
@@ -87,6 +126,8 @@ impl std::fmt::Debug for Value {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match &*self.0 {
             ValueInner::Host(t) => write!(f, "Value::Host{:?}", t.dims),
+            ValueInner::Pooled { t, .. } => write!(f, "Value::Pooled{:?}", t.dims),
+            ValueInner::Packed { dims, .. } => write!(f, "Value::Packed{dims:?}"),
             ValueInner::Device { dims, .. } => write!(f, "Value::Device{dims:?}"),
         }
     }
@@ -177,6 +218,17 @@ pub trait Backend: Send + Sync {
 
     /// Host tensor -> backend-resident buffer.  Counted.
     fn upload(&self, t: &Tensor) -> Result<Value>;
+
+    /// Upload a weight operand in the backend's preferred **execution
+    /// layout** for `desc`.  The default is a plain [`Backend::upload`];
+    /// the host backend pre-packs conv weights once here
+    /// (im2col-transposed + panel-packed dense, tap-major depthwise) so
+    /// the steady-state forward never re-transposes a weight.  Counted
+    /// like any upload.
+    fn upload_weight(&self, desc: &OpDesc, w: &Tensor) -> Result<Value> {
+        let _ = desc;
+        self.upload(w)
+    }
 
     /// Backend-resident buffer -> host tensor.  Counted.
     fn download(&self, v: &Value) -> Result<Tensor>;
@@ -359,5 +411,28 @@ mod tests {
         fn check<T: Send + Sync + ?Sized>() {}
         check::<dyn Backend>();
         check::<Value>();
+    }
+
+    #[test]
+    fn pooled_value_returns_its_buffer_on_last_drop() {
+        let arena = Arc::new(Arena::new());
+        let v = Value::pooled(Tensor::zeros(&[2, 3]), Arc::clone(&arena));
+        let v2 = v.clone();
+        assert_eq!(v2.dims(), &[2, 3]);
+        drop(v);
+        assert_eq!(arena.cached(), 0, "buffer must stay alive while referenced");
+        drop(v2);
+        assert_eq!(arena.cached(), 1, "last drop recycles the buffer");
+        let buf = arena.take(6);
+        assert_eq!((buf.len(), arena.hits()), (6, 1));
+    }
+
+    #[test]
+    fn packed_value_tracks_dims_and_rejects_host_reads() {
+        let w = Tensor::zeros(&[4, 3, 3, 3]);
+        let v = Value::packed(PackedConv::pack(&w, false), w.dims.clone());
+        assert_eq!(v.dims(), &[4, 3, 3, 3]);
+        assert!(v.as_host().is_none());
+        assert!(v.as_packed().is_some());
     }
 }

@@ -8,33 +8,45 @@
 //! * [`HostBackend::new`] — **resident**: `run` consumes and produces
 //!   values in place; the only data copies are the genuine `upload` /
 //!   `download` boundary crossings, exactly like the PJRT backend's
-//!   device residency.
+//!   device residency.  Conv weights are pre-packed once at lowering
+//!   (`upload_weight` -> `kernels::PackedConv`), and every transient
+//!   buffer — im2col columns, pad planes, attention scratch, op outputs —
+//!   comes from a size-classed [`Arena`], so the steady-state forward
+//!   (second call onward) performs **zero buffer allocations**: the
+//!   arena's `hits()`/`misses()` counters assert it
+//!   (`tests/steady_state.rs`).
 //! * [`HostBackend::per_dispatch`] — models the *old* per-op round trip:
 //!   every operand is downloaded (memcpy'd) on the way into each op and
-//!   the output uploaded on the way out, the cost shape `Exec::run` had
-//!   when each dispatch crossed the host<->device boundary.  This is the
-//!   baseline side of `benches/runtime_dispatch.rs`, and it keeps the
-//!   transfer counters honest for both modes.
+//!   the output uploaded on the way out, weights stay unpacked (the
+//!   per-call transpose is part of the old cost shape), and nothing runs
+//!   through the arena.  This is the baseline side of
+//!   `benches/runtime_dispatch.rs`, and it keeps the transfer counters
+//!   honest for both modes.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use crate::kernels;
+use crate::kernels::{self, Epilogue};
 use crate::runtime::backend::{Backend, OpDesc, OpHandle, Value};
+use crate::util::arena::Arena;
 use crate::util::tensor::Tensor;
 
 pub struct HostBackend {
     per_dispatch: bool,
+    arena: Arc<Arena>,
     uploads: AtomicUsize,
     downloads: AtomicUsize,
 }
 
 impl HostBackend {
-    /// Resident mode: values flow between ops as shared handles.
+    /// Resident mode: values flow between ops as shared handles, scratch
+    /// and activations recycle through the arena.
     pub fn new() -> HostBackend {
         HostBackend {
             per_dispatch: false,
+            arena: Arc::new(Arena::new()),
             uploads: AtomicUsize::new(0),
             downloads: AtomicUsize::new(0),
         }
@@ -45,6 +57,12 @@ impl HostBackend {
     /// model, kept as a measurable baseline.
     pub fn per_dispatch() -> HostBackend {
         HostBackend { per_dispatch: true, ..HostBackend::new() }
+    }
+
+    /// The scratch arena (hit/miss counters pin the zero-allocation
+    /// steady state in tests and benches).
+    pub fn arena(&self) -> &Arc<Arena> {
+        &self.arena
     }
 }
 
@@ -65,12 +83,34 @@ impl Backend for HostBackend {
 
     fn upload(&self, t: &Tensor) -> Result<Value> {
         self.uploads.fetch_add(1, Ordering::Relaxed);
-        Ok(Value::host(t.clone()))
+        if self.per_dispatch {
+            Ok(Value::host(t.clone()))
+        } else {
+            // the input buffer recycles too: forward N+1's upload reuses
+            // the buffer forward N's input released
+            let mut buf = self.arena.take(t.data.len());
+            buf.copy_from_slice(&t.data);
+            Ok(Value::pooled(Tensor::new(t.dims.clone(), buf), Arc::clone(&self.arena)))
+        }
+    }
+
+    fn upload_weight(&self, desc: &OpDesc, w: &Tensor) -> Result<Value> {
+        // per-dispatch keeps the old cost shape: unpacked weight, re-
+        // transposed inside every conv call
+        if self.per_dispatch {
+            return self.upload(w);
+        }
+        if let OpDesc::Conv { depthwise, .. } = desc {
+            self.uploads.fetch_add(1, Ordering::Relaxed);
+            Ok(Value::packed(kernels::PackedConv::pack(w, *depthwise), w.dims.clone()))
+        } else {
+            self.upload(w)
+        }
     }
 
     fn download(&self, v: &Value) -> Result<Tensor> {
         self.downloads.fetch_add(1, Ordering::Relaxed);
-        Ok(v.as_host().context("device value on the host backend")?.clone())
+        Ok(v.as_host().context("non-host value on the host backend")?.clone())
     }
 
     fn supports(&self, _desc: &OpDesc) -> bool {
@@ -91,17 +131,16 @@ impl Backend for HostBackend {
         );
         if self.per_dispatch {
             // the old world: every operand crosses the boundary per op
-            let owned: Vec<Tensor> =
-                args.iter().map(|v| self.download(v)).collect::<Result<_>>()?;
-            let refs: Vec<&Tensor> = owned.iter().collect();
-            let out = exec_host(&op.desc, &refs)?;
+            let owned: Vec<Value> = args
+                .iter()
+                .map(|v| self.download(v).map(Value::host))
+                .collect::<Result<_>>()?;
+            let refs: Vec<&Value> = owned.iter().collect();
+            let out = exec_host(&op.desc, &refs, None)?;
             self.upload(&out)
         } else {
-            let host: Vec<&Tensor> = args
-                .iter()
-                .map(|v| v.as_host().context("device value on the host backend"))
-                .collect::<Result<_>>()?;
-            Ok(Value::host(exec_host(&op.desc, &host)?))
+            let out = exec_host(&op.desc, args, Some(&self.arena))?;
+            Ok(Value::pooled(out, Arc::clone(&self.arena)))
         }
     }
 
@@ -116,41 +155,80 @@ impl Backend for HostBackend {
 
 /// Interpret one op descriptor on the host kernels.  Semantics mirror the
 /// AOT artifacts (`python/compile/aot.py::conv_module` / `model.py`)
-/// op for op; parity is pinned by `tests/host_backend.rs`.
-fn exec_host(desc: &OpDesc, args: &[&Tensor]) -> Result<Tensor> {
+/// op for op; parity is pinned by `tests/host_backend.rs`.  With an
+/// arena, every output and scratch buffer is recycled; a pre-packed conv
+/// weight takes the micro-kernel path with the epilogue fused into the
+/// GEMM tile loop, an unpacked one falls back to the pack-per-call path.
+fn exec_host(desc: &OpDesc, args: &[&Value], arena: Option<&Arena>) -> Result<Tensor> {
+    let host = |i: usize| -> Result<&Tensor> {
+        args[i].as_host().context("non-host value on the host backend")
+    };
+    let buf = |len: usize, zeroed: bool| kernels::take_buf(arena, len, zeroed);
     match desc {
         OpDesc::Conv { b, h, w, cin, stride, depthwise, act, residual, .. } => {
-            let (x, wt, bias) = (args[0], args[1], args[2]);
+            let x = host(0)?;
             anyhow::ensure!(
                 x.dims == vec![*b, *h, *w, *cin],
                 "conv input {:?} vs desc {:?}",
                 x.dims,
                 desc
             );
-            let mut y = kernels::conv2d_same(x, wt, *stride, *depthwise);
-            let res = if *residual { Some(args[3]) } else { None };
-            kernels::bias_act_res(&mut y, &bias.data, *act, res);
-            Ok(y)
+            let bias = host(2)?;
+            let res = if *residual { Some(host(3)?) } else { None };
+            if let Some(pc) = args[1].as_packed() {
+                if let Some(r) = res {
+                    anyhow::ensure!(
+                        r.dims == desc.out_dims(),
+                        "conv residual {:?} vs output {:?}",
+                        r.dims,
+                        desc.out_dims()
+                    );
+                }
+                let epi = Epilogue {
+                    bias: &bias.data,
+                    act: *act,
+                    res: res.map(|r| &r.data[..]),
+                };
+                Ok(kernels::conv2d_same_packed(x, pc, *stride, Some(&epi), arena))
+            } else {
+                let wt = host(1)?;
+                let mut y = kernels::conv2d_same(x, wt, *stride, *depthwise);
+                kernels::bias_act_res(&mut y, &bias.data, *act, res);
+                Ok(y)
+            }
         }
         OpDesc::GroupNorm { groups, .. } => {
-            Ok(kernels::group_norm(args[0], &args[1].data, &args[2].data, *groups))
+            let x = host(0)?;
+            let mut y = Tensor::new(x.dims.clone(), buf(x.data.len(), false));
+            kernels::group_norm_into(x, &host(1)?.data, &host(2)?.data, *groups, &mut y);
+            Ok(y)
         }
         OpDesc::Add { .. } => {
-            anyhow::ensure!(args[0].dims == args[1].dims, "add shape mismatch");
-            let mut y = args[0].clone();
-            for (a, b2) in y.data.iter_mut().zip(&args[1].data) {
-                *a += *b2;
-            }
+            let (a, b2) = (host(0)?, host(1)?);
+            anyhow::ensure!(a.dims == b2.dims, "add shape mismatch");
+            let mut y = Tensor::new(a.dims.clone(), buf(a.data.len(), false));
+            kernels::add_into(a, b2, &mut y);
             Ok(y)
         }
         OpDesc::Activation { act, .. } => {
-            let mut y = args[0].clone();
-            kernels::act_inplace(&mut y, *act);
+            let x = host(0)?;
+            let mut y = Tensor::new(x.dims.clone(), buf(x.data.len(), false));
+            kernels::act_into(x, *act, &mut y);
             Ok(y)
         }
-        OpDesc::Attention { .. } => Ok(kernels::attention(args[0], args[1], args[2])),
-        OpDesc::Upsample { .. } => Ok(kernels::upsample2x(args[0])),
-        OpDesc::Head { .. } => Ok(kernels::mean_pool_dense(args[0], args[1], &args[2].data)),
+        OpDesc::Attention { .. } => Ok(kernels::attention(host(0)?, host(1)?, host(2)?, arena)),
+        OpDesc::Upsample { .. } => {
+            let x = host(0)?;
+            let mut y = Tensor::new(desc.out_dims(), buf(x.data.len() * 4, false));
+            kernels::upsample2x_into(x, &mut y);
+            Ok(y)
+        }
+        OpDesc::Head { .. } => {
+            let (x, w) = (host(0)?, host(1)?);
+            let mut y = Tensor::new(desc.out_dims(), buf(x.dims[0] * w.dims[1], true));
+            kernels::mean_pool_dense_into(x, w, &host(2)?.data, arena, &mut y);
+            Ok(y)
+        }
     }
 }
 
@@ -193,5 +271,61 @@ mod tests {
         let x = be.upload(&Tensor::zeros(&[1, 2, 2, 3])).unwrap();
         let op = be.lower_op(&OpDesc::Add { b: 1, h: 2, w: 2, c: 3 }).unwrap();
         assert!(be.run(&op, &[&x]).is_err());
+    }
+
+    #[test]
+    fn resident_ops_recycle_through_the_arena() {
+        let be = HostBackend::new();
+        let desc = OpDesc::Activation { act: Act::Relu, b: 1, h: 2, w: 2, c: 3 };
+        let op = be.lower_op(&desc).unwrap();
+        let x = be.upload(&Tensor::full(&[1, 2, 2, 3], -2.0)).unwrap();
+        let y = be.run(&op, &[&x]).unwrap();
+        drop(y); // output buffer returns to the arena
+        let m0 = be.arena().misses();
+        let y2 = be.run(&op, &[&x]).unwrap();
+        assert_eq!(be.arena().misses(), m0, "steady-state op must not allocate");
+        assert!(be.download(&y2).unwrap().data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn packed_weight_conv_matches_unpacked_fallback() {
+        use crate::util::rng::Rng;
+        let mut r = Rng::new(77);
+        let (b, h, w, cin, cout, k) = (2usize, 7usize, 7usize, 3usize, 5usize, 3usize);
+        let x = Tensor::new(
+            vec![b, h, w, cin],
+            (0..b * h * w * cin).map(|_| r.normal()).collect(),
+        );
+        let wt = Tensor::new(
+            vec![cout, cin, k, k],
+            (0..cout * cin * k * k).map(|_| r.normal()).collect(),
+        );
+        let bias = Tensor::new(vec![cout], (0..cout).map(|_| r.normal()).collect());
+        let desc = OpDesc::Conv {
+            b,
+            h,
+            w,
+            cin,
+            cout,
+            k,
+            stride: 1,
+            depthwise: false,
+            act: Some(Act::Relu),
+            residual: false,
+        };
+        let be = HostBackend::new();
+        let op = be.lower_op(&desc).unwrap();
+        let xb = be.upload(&x).unwrap();
+        let bb = be.upload(&bias).unwrap();
+        let packed = be.upload_weight(&desc, &wt).unwrap();
+        let plain = be.upload(&wt).unwrap();
+        let y_packed = be.download(&be.run(&op, &[&xb, &packed, &bb]).unwrap()).unwrap();
+        let y_plain = be.download(&be.run(&op, &[&xb, &plain, &bb]).unwrap()).unwrap();
+        assert_eq!(y_packed.dims, y_plain.dims);
+        assert!(
+            y_packed.max_abs_diff(&y_plain) < 1e-6,
+            "packed vs fallback diff {}",
+            y_packed.max_abs_diff(&y_plain)
+        );
     }
 }

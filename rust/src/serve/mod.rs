@@ -40,6 +40,11 @@
 //! glue ops) is independent of the other rows in the batch — so a
 //! micro-batched result is bit-identical to a one-shot forward over the
 //! same rows in the same batch positions (pinned by `tests/serve_queue.rs`).
+//!
+//! On the host backend the scratch arena is sharded **per thread**, so
+//! each serving worker reaches its own zero-allocation steady state
+//! independently; `ServeCfg::warmup` runs one throwaway forward per
+//! worker at deploy so the first real request is already in it.
 
 use std::collections::VecDeque;
 use std::path::Path;
@@ -239,6 +244,19 @@ pub struct ServeCfg {
     pub queue_cap: usize,
     /// How workers form batches from the queue (see [`BatchPolicy`]).
     pub policy: BatchPolicy,
+    /// Run one throwaway zero forward on each worker thread at deploy.
+    /// On the host backend this charges the worker's arena shard
+    /// (scratch freelists are per-thread), so buffers the forward takes
+    /// on the worker thread — activations, im2col columns, pad planes —
+    /// are recycled from the first real request on.  Buffers taken
+    /// *inside* compute-pool tasks can still miss once per pool thread
+    /// (task-to-thread assignment is work-stealing), so the guarantee is
+    /// "warm from request 1" for serial-dispatch plans and "warm after
+    /// each pool thread's first claim" beyond that.  The warmup runs
+    /// asynchronously on the worker threads and is not counted in
+    /// [`ServeStats`] (transfer counters do move — snapshot deltas after
+    /// traffic, not across deploy).  Off by default.
+    pub warmup: bool,
 }
 
 impl Default for ServeCfg {
@@ -247,6 +265,7 @@ impl Default for ServeCfg {
             workers: par::max_threads().min(4),
             queue_cap: 256,
             policy: BatchPolicy::Greedy,
+            warmup: false,
         }
     }
 }
@@ -476,8 +495,23 @@ impl Session {
             window_us: AtomicU64::new(cfg.policy.initial_window_us()),
             ctl: Mutex::new(AdaptCtl::default()),
         });
+        // per-worker warmup input: one throwaway zero forward per worker
+        // charges that worker's arena shard (buffers are recycled
+        // per-thread), so its first real batch is already allocation-free
+        let warm: Option<(Tensor, Option<Tensor>)> = match (&backend, cfg.warmup) {
+            (Dispatch::Plan(_), true) => {
+                let mut dims = vec![batch];
+                dims.extend_from_slice(&in_tail);
+                let t = needs_t.then(|| Tensor::full(&[batch], 500.0));
+                Some((Tensor::zeros(&dims), t))
+            }
+            _ => None,
+        };
         let (ws, wb) = (Arc::clone(&shared), backend.clone());
         let pool = par::Pool::spawn(cfg.workers, "lm-serve", move |_| {
+            if let Some((x, t)) = &warm {
+                let _ = wb.run(x, t.as_ref());
+            }
             worker_loop(&ws, &wb, batch);
         });
         Session {

@@ -1,0 +1,206 @@
+//! Size-classed scratch arena — the allocation recycler behind the
+//! zero-allocation steady-state host forward.
+//!
+//! Every transient f32 buffer on the host execution path (im2col columns,
+//! pad buffers, attention scratch, inter-step activation tensors, the
+//! uploaded input) is taken from an [`Arena`] and given back when its last
+//! reference drops (see `runtime::backend::Value`).  Buffers are keyed by
+//! exact length — a lowered plan requests the same shapes every forward,
+//! so from the second forward on every `take` is a **hit** and the forward
+//! performs no buffer allocation at all.  `hits()` / `misses()` are
+//! monotonic counters; `tests/steady_state.rs` pins "misses stop growing
+//! after the first forward".
+//!
+//! Freelists are sharded by thread (first-touch assignment), which is what
+//! makes the arena per-worker in `serve`: each serving worker takes and
+//! returns its buffers on its own shard, so concurrent sessions never
+//! contend and every worker reaches its own zero-alloc steady state after
+//! one warm forward (see `ServeCfg::warmup`).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Shard count — an upper bound on useful take/give concurrency, not on
+/// correctness (threads hashing to the same shard just share a freelist).
+const SHARDS: usize = 8;
+
+/// Buffers retained per (shard, length) class; beyond this, `give` frees
+/// instead of caching so a pathological caller can't grow the arena
+/// without bound.
+const MAX_PER_CLASS: usize = 32;
+
+static NEXT_SHARD: AtomicUsize = AtomicUsize::new(0);
+thread_local! {
+    /// First-touch shard assignment: stable for the thread's lifetime.
+    static SHARD_IDX: usize = NEXT_SHARD.fetch_add(1, Ordering::Relaxed);
+}
+
+pub struct Arena {
+    shards: Vec<Mutex<HashMap<usize, Vec<Vec<f32>>>>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl Default for Arena {
+    fn default() -> Self {
+        Arena::new()
+    }
+}
+
+impl Arena {
+    pub fn new() -> Arena {
+        Arena {
+            shards: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+        }
+    }
+
+    fn shard(&self) -> &Mutex<HashMap<usize, Vec<Vec<f32>>>> {
+        let idx = SHARD_IDX.with(|i| *i) % SHARDS;
+        &self.shards[idx]
+    }
+
+    /// A buffer of exactly `len` elements with **unspecified contents**
+    /// (callers that fully overwrite it — im2col gathers, elementwise
+    /// outputs — skip the zeroing pass).  Zero-length requests are free
+    /// and uncounted.
+    pub fn take(&self, len: usize) -> Vec<f32> {
+        if len == 0 {
+            return Vec::new();
+        }
+        let recycled = self.shard().lock().unwrap().get_mut(&len).and_then(Vec::pop);
+        match recycled {
+            Some(v) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                debug_assert_eq!(v.len(), len);
+                v
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                vec![0.0; len]
+            }
+        }
+    }
+
+    /// [`Arena::take`], but guaranteed zero-filled (GEMM accumulators,
+    /// padded planes).
+    pub fn take_zeroed(&self, len: usize) -> Vec<f32> {
+        if len == 0 {
+            return Vec::new();
+        }
+        let recycled = self.shard().lock().unwrap().get_mut(&len).and_then(Vec::pop);
+        match recycled {
+            Some(mut v) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                debug_assert_eq!(v.len(), len);
+                v.fill(0.0);
+                v
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                vec![0.0; len]
+            }
+        }
+    }
+
+    /// Return a buffer for reuse.  Any `Vec<f32>` is adopted (buffers that
+    /// were allocated outside the arena seed the freelist); empty vectors
+    /// are ignored.
+    pub fn give(&self, v: Vec<f32>) {
+        if v.is_empty() {
+            return;
+        }
+        let mut shard = self.shard().lock().unwrap();
+        let class = shard.entry(v.len()).or_default();
+        if class.len() < MAX_PER_CLASS {
+            class.push(v);
+        }
+    }
+
+    /// Takes served from a recycled buffer (monotonic).
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Takes that had to allocate (monotonic).  Flat across steady-state
+    /// forwards — the zero-allocation assertion.
+    pub fn misses(&self) -> usize {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Buffers currently cached across all shards (diagnostics).
+    pub fn cached(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().unwrap().values().map(Vec::len).sum::<usize>())
+            .sum()
+    }
+
+    /// Drop every cached buffer (counters are preserved).
+    pub fn clear(&self) {
+        for s in &self.shards {
+            s.lock().unwrap().clear();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_give_take_is_a_hit() {
+        let a = Arena::new();
+        let v = a.take(128);
+        assert_eq!((a.hits(), a.misses()), (0, 1));
+        a.give(v);
+        let v2 = a.take(128);
+        assert_eq!((a.hits(), a.misses()), (1, 1));
+        assert_eq!(v2.len(), 128);
+        // a different size misses again
+        let _ = a.take(64);
+        assert_eq!(a.misses(), 2);
+    }
+
+    #[test]
+    fn take_zeroed_scrubs_recycled_contents() {
+        let a = Arena::new();
+        let mut v = a.take(16);
+        v.fill(7.5);
+        a.give(v);
+        let v2 = a.take_zeroed(16);
+        assert!(v2.iter().all(|&x| x == 0.0));
+        assert_eq!((a.hits(), a.misses()), (1, 1));
+    }
+
+    #[test]
+    fn zero_length_is_free_and_uncounted() {
+        let a = Arena::new();
+        assert!(a.take(0).is_empty());
+        a.give(Vec::new());
+        assert_eq!((a.hits(), a.misses()), (0, 0));
+        assert_eq!(a.cached(), 0);
+    }
+
+    #[test]
+    fn class_retention_is_bounded() {
+        let a = Arena::new();
+        for _ in 0..(MAX_PER_CLASS + 10) {
+            a.give(vec![0.0; 8]);
+        }
+        assert_eq!(a.cached(), MAX_PER_CLASS);
+        a.clear();
+        assert_eq!(a.cached(), 0);
+    }
+
+    #[test]
+    fn adopts_foreign_buffers() {
+        let a = Arena::new();
+        a.give(vec![1.0; 32]); // not arena-born — seeds the freelist
+        let v = a.take(32);
+        assert_eq!((a.hits(), a.misses()), (1, 0));
+        assert_eq!(v.len(), 32);
+    }
+}

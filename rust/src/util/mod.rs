@@ -1,9 +1,12 @@
 //! In-tree substrates replacing crates unavailable in the offline vendor
 //! set (DESIGN.md §2): JSON, PRNG, tensors, property testing,
-//! scoped-thread data parallelism (`par`, the rayon substitute powering
-//! the GEMM kernels and table construction), and the shared summary
-//! statistics (`stats`, the one percentile implementation).
+//! pool-backed data parallelism (`par`, the rayon substitute powering
+//! the GEMM kernels and table construction), the size-classed scratch
+//! recycler (`arena`, the zero-allocation steady-state substrate), and
+//! the shared summary statistics (`stats`, the one percentile
+//! implementation).
 
+pub mod arena;
 pub mod json;
 pub mod par;
 pub mod prop;

@@ -1,16 +1,33 @@
-//! Scoped-thread data-parallel helpers (rayon substitute — offline vendor
-//! set, DESIGN.md §2).  Three primitives cover every hot loop in the repo:
-//! disjoint-chunk iteration over a mutable slice (GEMM rows, kernel
-//! scatter), a work-stealing indexed for-loop (table construction), and a
-//! persistent named [`Pool`] of owned worker threads (the serving queue).
+//! Data-parallel helpers over a **persistent compute pool** (rayon
+//! substitute — offline vendor set, DESIGN.md §2).  Three primitives cover
+//! every hot loop in the repo: disjoint-chunk iteration over a mutable
+//! slice (GEMM rows, kernel scatter), a work-stealing indexed for-loop
+//! (table construction), and a persistent named [`Pool`] of owned worker
+//! threads (the serving queue).
 //!
-//! The scoped helpers spawn per call via `std::thread::scope`; spawn cost
-//! is ~10µs/thread, so callers gate on problem size (see
-//! [`crate::kernels::gemm`]) and stay serial below it.  `Pool` threads are
-//! long-lived and joined explicitly (or on drop).
+//! Historically the chunk/for-n helpers spawned a fresh
+//! `std::thread::scope` per call (~10µs/thread), which dominated the
+//! steady-state host forward: dozens of GEMM/conv/epilogue dispatches per
+//! forward each paid the spawn tax.  They now inject tasks into a
+//! lazily-initialized global [`ComputePool`] of parked workers: dispatch
+//! is one mutex push + condvar notify, chunks are claimed with an atomic
+//! counter (uneven per-chunk cost still self-balances), and the
+//! submitting thread participates, so correctness never depends on any
+//! worker existing.  `pool_spawns()` is monotonic — tests pin
+//! zero-thread-spawn steady state with it.  The legacy scoped-spawn path
+//! is kept as [`par_chunks_mut_scoped`], the baseline side of the
+//! `benches/merge_ops.rs` pool-dispatch comparison.
+//!
+//! Tasks that run *inside* a pool job observe [`in_pool_worker`] and
+//! execute nested `par_*` calls serially — nested parallelism (e.g. the
+//! per-batch GEMMs inside a batch-parallel attention) degrades to clean
+//! sequential code instead of thrashing the queue.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::any::Any;
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 /// Hardware parallelism, clamped by the `LM_THREADS` env override.
@@ -23,9 +40,10 @@ pub fn max_threads() -> usize {
 }
 
 /// Thread budget for a data-parallel pass over `len` elements: serial
-/// below a quarter-MiB of f32s (scoped-thread spawn is ~10µs each, which
-/// would dominate), otherwise [`max_threads`].  The single knob shared by
-/// the elementwise host kernels and the exec glue loops.
+/// below a quarter-MiB of f32s (task injection is cheap but not free, and
+/// small loops finish before a parked worker wakes), otherwise
+/// [`max_threads`].  The single knob shared by the elementwise host
+/// kernels and the exec glue loops.
 pub fn auto_threads(len: usize) -> usize {
     if len < (1 << 18) {
         1
@@ -34,16 +52,269 @@ pub fn auto_threads(len: usize) -> usize {
     }
 }
 
+thread_local! {
+    static IN_POOL_WORKER: Cell<bool> = Cell::new(false);
+}
+
+/// True while the current thread is executing a task claimed from the
+/// global compute pool (worker threads *and* participating submitters).
+/// `par_chunks_mut` / `par_for_n` check this and run serially — nested
+/// data parallelism inside a pool task degrades to sequential execution.
+pub fn in_pool_worker() -> bool {
+    IN_POOL_WORKER.with(|f| f.get())
+}
+
+/// One injected parallel job: `n` tasks claimed by atomic counter.  The
+/// task reference is transmuted to `'static` at dispatch; safety rests on
+/// `dispatch` not returning until `pending` reaches zero (every claimed
+/// task has finished) and on removing the job from the queue before
+/// returning (no stale reference survives the call).
+struct Job {
+    task: &'static (dyn Fn(usize) + Sync),
+    n: usize,
+    /// next task index to claim (claims past `n` are no-ops)
+    next: AtomicUsize,
+    /// tasks not yet completed; the submitter blocks until 0
+    pending: AtomicUsize,
+    /// a claimed task panicked — the submitter re-raises after the join
+    poisoned: AtomicBool,
+    payload: Mutex<Option<Box<dyn Any + Send>>>,
+    done_mx: Mutex<()>,
+    done_cv: Condvar,
+}
+
+struct PoolState {
+    queue: VecDeque<Arc<Job>>,
+    shutdown: bool,
+}
+
+struct PoolInner {
+    state: Mutex<PoolState>,
+    work_cv: Condvar,
+}
+
+struct ComputePool {
+    inner: Arc<PoolInner>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+static POOL: Mutex<Option<ComputePool>> = Mutex::new(None);
+/// Monotonic count of compute-pool threads ever spawned (the
+/// zero-spawn-steady-state assertion reads it).
+static SPAWNED: AtomicUsize = AtomicUsize::new(0);
+
+fn pool() -> Arc<PoolInner> {
+    let mut g = POOL.lock().unwrap();
+    if g.is_none() {
+        let inner = Arc::new(PoolInner {
+            state: Mutex::new(PoolState { queue: VecDeque::new(), shutdown: false }),
+            work_cv: Condvar::new(),
+        });
+        // the submitter participates in every job, so N-1 workers give N-way
+        // parallelism; a 1-thread budget runs everything on the submitter
+        let workers = max_threads().saturating_sub(1);
+        let handles = (0..workers)
+            .map(|i| {
+                SPAWNED.fetch_add(1, Ordering::Relaxed);
+                let inner = Arc::clone(&inner);
+                std::thread::Builder::new()
+                    .name(format!("lm-compute-{i}"))
+                    .spawn(move || worker(&inner))
+                    .expect("spawn compute-pool worker")
+            })
+            .collect();
+        *g = Some(ComputePool { inner, handles });
+    }
+    Arc::clone(&g.as_ref().unwrap().inner)
+}
+
+/// Live compute-pool worker threads (0 before first dispatch / after
+/// [`shutdown_pool`]).
+pub fn pool_threads() -> usize {
+    POOL.lock().unwrap().as_ref().map_or(0, |p| p.handles.len())
+}
+
+/// Total compute-pool threads ever spawned (monotonic).  Steady-state
+/// forwards must leave this unchanged — pinned by `tests/steady_state.rs`.
+pub fn pool_spawns() -> usize {
+    SPAWNED.load(Ordering::Relaxed)
+}
+
+/// Tear the global pool down: signal, join, forget.  In-flight jobs
+/// complete first (workers drain the queue before exiting; submitters
+/// always self-serve).  The next `par_*` call lazily re-creates the pool.
+pub fn shutdown_pool() {
+    let taken = POOL.lock().unwrap().take();
+    if let Some(mut p) = taken {
+        p.inner.state.lock().unwrap().shutdown = true;
+        p.inner.work_cv.notify_all();
+        for h in p.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker(inner: &PoolInner) {
+    loop {
+        let job = {
+            let mut st = inner.state.lock().unwrap();
+            loop {
+                // drop exhausted jobs off the front (all tasks claimed)
+                while st
+                    .queue
+                    .front()
+                    .is_some_and(|j| j.next.load(Ordering::Relaxed) >= j.n)
+                {
+                    st.queue.pop_front();
+                }
+                if let Some(j) = st.queue.front() {
+                    break Arc::clone(j);
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = inner.work_cv.wait(st).unwrap();
+            }
+        };
+        run_chunks(&job);
+    }
+}
+
+/// Claim-and-run tasks from `job` until none remain.  Panics inside a
+/// task are captured (first payload wins) so `pending` always drains —
+/// a dead worker or an unwound submitter must never strand the job.
+fn run_chunks(job: &Job) {
+    loop {
+        let i = job.next.fetch_add(1, Ordering::Relaxed);
+        if i >= job.n {
+            return;
+        }
+        let prev = IN_POOL_WORKER.with(|c| c.replace(true));
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| (job.task)(i)));
+        IN_POOL_WORKER.with(|c| c.set(prev));
+        if let Err(p) = r {
+            job.poisoned.store(true, Ordering::Release);
+            let mut slot = job.payload.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(p);
+            }
+        }
+        if job.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let _g = job.done_mx.lock().unwrap();
+            job.done_cv.notify_all();
+        }
+    }
+}
+
+/// Inject `n` tasks into the global pool and run `f(i)` once for each
+/// `i in 0..n`, participating from the calling thread.  Returns once all
+/// tasks completed; re-raises the first captured task panic.
+fn dispatch(n: usize, f: &(dyn Fn(usize) + Sync)) {
+    debug_assert!(n > 0);
+    // SAFETY: the job's task reference never outlives this call — we do
+    // not return until `pending == 0` (every claimed task finished) and
+    // the job has been removed from the queue; workers dereference `task`
+    // only for claims `< n`, each of which completes before its matching
+    // `pending` decrement.
+    let task: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(f) };
+    let job = Arc::new(Job {
+        task,
+        n,
+        next: AtomicUsize::new(0),
+        pending: AtomicUsize::new(n),
+        poisoned: AtomicBool::new(false),
+        payload: Mutex::new(None),
+        done_mx: Mutex::new(()),
+        done_cv: Condvar::new(),
+    });
+    let inner = pool();
+    inner.state.lock().unwrap().queue.push_back(Arc::clone(&job));
+    inner.work_cv.notify_all();
+    run_chunks(&job);
+    {
+        let mut g = job.done_mx.lock().unwrap();
+        while job.pending.load(Ordering::Acquire) > 0 {
+            g = job.done_cv.wait(g).unwrap();
+        }
+    }
+    // unlink the job so no queue entry outlives the task borrow
+    {
+        let mut st = inner.state.lock().unwrap();
+        if let Some(pos) = st.queue.iter().position(|j| Arc::ptr_eq(j, &job)) {
+            let _ = st.queue.remove(pos);
+        }
+    }
+    if job.poisoned.load(Ordering::Acquire) {
+        match job.payload.lock().unwrap().take() {
+            Some(p) => std::panic::resume_unwind(p),
+            None => panic!("compute-pool task panicked"),
+        }
+    }
+}
+
 /// Run `f(chunk_index, chunk)` over `chunk_len`-sized disjoint chunks of
-/// `data`, distributing chunks across up to `threads` workers.  Chunks are
-/// claimed atomically, so uneven per-chunk cost balances itself.
+/// `data`, distributing chunks across the compute pool when `threads > 1`.
+/// Chunks are claimed atomically, so uneven per-chunk cost balances
+/// itself.  Inside a pool task (see [`in_pool_worker`]) this runs
+/// serially.
 pub fn par_chunks_mut<T, F>(data: &mut [T], chunk_len: usize, threads: usize, f: F)
 where
     T: Send,
     F: Fn(usize, &mut [T]) + Sync,
 {
     assert!(chunk_len > 0, "chunk_len must be positive");
-    let n_chunks = data.len().div_ceil(chunk_len.max(1)).max(1);
+    if data.is_empty() {
+        return;
+    }
+    let n_chunks = data.len().div_ceil(chunk_len);
+    let threads = threads.min(n_chunks).max(1);
+    if threads <= 1 || in_pool_worker() {
+        for (i, c) in data.chunks_mut(chunk_len).enumerate() {
+            f(i, c);
+        }
+        return;
+    }
+    let len = data.len();
+    let base = data.as_mut_ptr() as usize;
+    let task = move |i: usize| {
+        let start = i * chunk_len;
+        let end = (start + chunk_len).min(len);
+        // SAFETY: each chunk index is claimed exactly once (atomic
+        // fetch_add in the pool), so these slices are disjoint; `data` is
+        // not touched again until `dispatch` returns.
+        let chunk =
+            unsafe { std::slice::from_raw_parts_mut((base as *mut T).add(start), end - start) };
+        f(i, chunk);
+    };
+    dispatch(n_chunks, &task);
+}
+
+/// Work-stealing parallel for over `0..n` on the compute pool.
+/// `f` must be safe to call concurrently from multiple threads.
+pub fn par_for_n<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let threads = threads.min(n).max(1);
+    if threads <= 1 || in_pool_worker() {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    dispatch(n, &f);
+}
+
+/// The legacy per-call `std::thread::scope` chunk loop — **baseline
+/// only**: `benches/merge_ops.rs` compares pool dispatch against it.
+/// Production callers use [`par_chunks_mut`].
+pub fn par_chunks_mut_scoped<T, F>(data: &mut [T], chunk_len: usize, threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk_len > 0, "chunk_len must be positive");
+    let n_chunks = data.len().div_ceil(chunk_len).max(1);
     let threads = threads.min(n_chunks).max(1);
     if threads <= 1 || data.is_empty() {
         for (i, c) in data.chunks_mut(chunk_len).enumerate() {
@@ -51,10 +322,10 @@ where
         }
         return;
     }
-    let slots: Vec<std::sync::Mutex<Option<(usize, &mut [T])>>> = data
+    let slots: Vec<Mutex<Option<(usize, &mut [T])>>> = data
         .chunks_mut(chunk_len)
         .enumerate()
-        .map(|c| std::sync::Mutex::new(Some(c)))
+        .map(|c| Mutex::new(Some(c)))
         .collect();
     let next = AtomicUsize::new(0);
     std::thread::scope(|s| {
@@ -72,41 +343,15 @@ where
     });
 }
 
-/// Work-stealing parallel for over `0..n` with up to `threads` workers.
-/// `f` must be safe to call concurrently from multiple threads.
-pub fn par_for_n<F>(n: usize, threads: usize, f: F)
-where
-    F: Fn(usize) + Sync,
-{
-    let threads = threads.min(n).max(1);
-    if threads <= 1 {
-        for i in 0..n {
-            f(i);
-        }
-        return;
-    }
-    let next = AtomicUsize::new(0);
-    std::thread::scope(|s| {
-        for _ in 0..threads {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    return;
-                }
-                f(i);
-            });
-        }
-    });
-}
-
 /// A persistent pool of owned, named worker threads.
 ///
-/// Unlike the scoped helpers above, `Pool` threads are `'static`: the
-/// worker body owns everything it touches (typically `Arc`-shared state),
-/// so the pool can be stored in a long-lived handle such as
-/// [`crate::serve::Session`].  Workers run `f(worker_index)` once and exit
-/// when `f` returns; coordination (queues, shutdown flags) lives in the
-/// shared state, not in the pool.
+/// Unlike the chunk/for-n helpers above (which inject short tasks into the
+/// shared compute pool), `Pool` threads are `'static` and run one
+/// long-lived body each: the worker body owns everything it touches
+/// (typically `Arc`-shared state), so the pool can be stored in a
+/// long-lived handle such as [`crate::serve::Session`].  Workers run
+/// `f(worker_index)` once and exit when `f` returns; coordination
+/// (queues, shutdown flags) lives in the shared state, not in the pool.
 pub struct Pool {
     handles: Vec<JoinHandle<()>>,
 }
@@ -184,6 +429,23 @@ mod tests {
     }
 
     #[test]
+    fn scoped_baseline_matches_pool_path() {
+        let mut a: Vec<u32> = vec![0; 517];
+        let mut b: Vec<u32> = vec![0; 517];
+        par_chunks_mut(&mut a, 32, 4, |idx, chunk| {
+            for (off, x) in chunk.iter_mut().enumerate() {
+                *x = (idx * 1000 + off) as u32;
+            }
+        });
+        par_chunks_mut_scoped(&mut b, 32, 4, |idx, chunk| {
+            for (off, x) in chunk.iter_mut().enumerate() {
+                *x = (idx * 1000 + off) as u32;
+            }
+        });
+        assert_eq!(a, b);
+    }
+
+    #[test]
     fn for_n_visits_each_index_once() {
         let hits = AtomicU64::new(0);
         let sum = AtomicU64::new(0);
@@ -203,6 +465,54 @@ mod tests {
             hits.fetch_add(1, Ordering::Relaxed);
         });
         assert_eq!(hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn nested_parallel_calls_run_serially_and_correctly() {
+        // a parallel task that itself calls par_for_n: the inner call must
+        // observe in_pool_worker() and degrade to serial — no deadlock,
+        // same results
+        let hits = AtomicU64::new(0);
+        par_for_n(8, 4, |_| {
+            par_for_n(16, 4, |_| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 8 * 16);
+    }
+
+    #[test]
+    fn task_panic_propagates_to_the_submitter() {
+        let r = std::panic::catch_unwind(|| {
+            par_for_n(8, 4, |i| {
+                if i == 5 {
+                    panic!("boom from task 5");
+                }
+            });
+        });
+        let p = r.expect_err("panic must propagate");
+        let msg = p
+            .downcast_ref::<&str>()
+            .map(|s| s.to_string())
+            .or_else(|| p.downcast_ref::<String>().cloned())
+            .unwrap_or_default();
+        assert!(msg.contains("boom"), "payload preserved, got {msg:?}");
+    }
+
+    #[test]
+    fn pool_self_serves_after_shutdown() {
+        // shutting the global pool down must not break correctness: a
+        // dispatch against a shut (or re-created) pool still completes —
+        // the submitter claims every task itself if no worker exists
+        let hits = AtomicU64::new(0);
+        par_for_n(32, 4, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        shutdown_pool();
+        par_for_n(32, 4, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 64);
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! strided) — the load-bearing guarantee that the fast host path computes
 //! the paper's Sec. 2 operator exactly.  Host-only: no artifacts needed.
 
-use layermerge::kernels::{conv2d_valid, conv2d_valid_ref, gemm, gemm_ref};
+use layermerge::kernels::{conv2d_valid, conv2d_valid_ref, gemm, gemm_packed, gemm_ref, PackedB};
 use layermerge::merge::{expand_depthwise, merge_kernels, merge_kernels_ref};
 use layermerge::util::prop::check_res;
 use layermerge::util::rng::Rng;
@@ -39,6 +39,37 @@ fn gemm_matches_naive_over_random_shapes() {
                 Ok(())
             } else {
                 Err(format!("({m},{k},{n}) diff {diff}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn packed_gemm_matches_naive_over_random_shapes() {
+    check_res(
+        "packed micro-kernel == naive triple loop",
+        25,
+        |r| {
+            let (m, k, n) = (1 + r.below(40), 1 + r.below(60), 1 + r.below(40));
+            let a: Vec<f32> = (0..m * k).map(|_| r.normal()).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| r.normal()).collect();
+            (m, k, n, a, b)
+        },
+        |(m, k, n, a, b)| {
+            let mut want = vec![0.0f32; m * n];
+            gemm_ref(*m, *k, *n, a, b, &mut want);
+            let bp = PackedB::pack(*k, *n, b);
+            let mut got = vec![0.0f32; m * n];
+            gemm_packed(*m, a, &bp, &mut got);
+            let diff = want
+                .iter()
+                .zip(&got)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0f32, f32::max);
+            if diff < 1e-3 {
+                Ok(())
+            } else {
+                Err(format!("packed ({m},{k},{n}) diff {diff}"))
             }
         },
     );

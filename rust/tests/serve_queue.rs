@@ -48,7 +48,7 @@ fn mock_backend(x: &Tensor, _t: Option<&Tensor>) -> anyhow::Result<Tensor> {
 }
 
 fn mock_session(workers: usize, queue_cap: usize) -> Session {
-    let cfg = ServeCfg { workers, queue_cap, policy: BatchPolicy::Greedy };
+    let cfg = ServeCfg { workers, queue_cap, policy: BatchPolicy::Greedy, ..ServeCfg::default() };
     Session::from_fn(B, &TAIL, false, cfg, mock_backend)
 }
 
@@ -125,7 +125,7 @@ fn padded_region_content_is_zero() {
         B,
         &TAIL,
         false,
-        ServeCfg { workers: 1, queue_cap: 16, policy: BatchPolicy::Greedy },
+        ServeCfg { workers: 1, queue_cap: 16, policy: BatchPolicy::Greedy, ..ServeCfg::default() },
         move |x, t| {
             seen2.lock().unwrap().push(x.data.clone());
             mock_backend(x, t)
@@ -182,7 +182,7 @@ fn backpressure_honors_queue_bound() {
         B,
         &TAIL,
         false,
-        ServeCfg { workers: 1, queue_cap: 2, policy: BatchPolicy::Greedy },
+        ServeCfg { workers: 1, queue_cap: 2, policy: BatchPolicy::Greedy, ..ServeCfg::default() },
         |x, t| {
             std::thread::sleep(std::time::Duration::from_millis(2));
             mock_backend(x, t)
@@ -213,7 +213,7 @@ fn shutdown_drains_accepted_requests() {
         B,
         &TAIL,
         false,
-        ServeCfg { workers: 1, queue_cap: 64, policy: BatchPolicy::Greedy },
+        ServeCfg { workers: 1, queue_cap: 64, policy: BatchPolicy::Greedy, ..ServeCfg::default() },
         |x, t| {
             std::thread::sleep(std::time::Duration::from_millis(1));
             mock_backend(x, t)
@@ -262,7 +262,7 @@ fn backend_errors_propagate_to_every_ticket_in_the_batch() {
         B,
         &TAIL,
         false,
-        ServeCfg { workers: 1, queue_cap: 16, policy: BatchPolicy::Greedy },
+        ServeCfg { workers: 1, queue_cap: 16, policy: BatchPolicy::Greedy, ..ServeCfg::default() },
         |_, _| anyhow::bail!("device on fire"),
     );
     let t1 = sess.submit(req(2, 0.0)).unwrap();
@@ -281,7 +281,7 @@ fn backend_panics_become_ticket_errors_and_worker_survives() {
         B,
         &TAIL,
         false,
-        ServeCfg { workers: 1, queue_cap: 16, policy: BatchPolicy::Greedy },
+        ServeCfg { workers: 1, queue_cap: 16, policy: BatchPolicy::Greedy, ..ServeCfg::default() },
         move |x, t| {
             if c2.fetch_add(1, Ordering::Relaxed) == 0 {
                 panic!("kaboom");
@@ -314,7 +314,7 @@ fn single_client_coalesces_nothing_many_clients_coalesce() {
         B,
         &TAIL,
         false,
-        ServeCfg { workers: 1, queue_cap: 64, policy: BatchPolicy::Greedy },
+        ServeCfg { workers: 1, queue_cap: 64, policy: BatchPolicy::Greedy, ..ServeCfg::default() },
         |x, t| {
             std::thread::sleep(std::time::Duration::from_millis(2));
             mock_backend(x, t)
@@ -336,6 +336,7 @@ fn window_session(workers: usize, max_wait_us: u64) -> Session {
         workers,
         queue_cap: 64,
         policy: BatchPolicy::Window { max_wait_us },
+        ..ServeCfg::default()
     };
     Session::from_fn(B, &TAIL, false, cfg, mock_backend)
 }
@@ -452,6 +453,7 @@ fn adaptive_policy_serves_and_bounds_its_window() {
         workers: 1,
         queue_cap: 64,
         policy: BatchPolicy::Adaptive { target_occupancy: 0.9, max_wait_us: cap_us },
+        ..ServeCfg::default()
     };
     let sess = Session::from_fn(B, &TAIL, false, cfg, |x, t| {
         std::thread::sleep(Duration::from_millis(1));

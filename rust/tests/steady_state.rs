@@ -1,0 +1,164 @@
+//! Zero-allocation / zero-spawn steady-state suite (host backend, no
+//! artifacts, no XLA):
+//!
+//! * the register-blocked micro-kernel matches `gemm_ref` at shapes that
+//!   are **not** multiples of MR/NR (the panel/tile edge paths);
+//! * a lowered host forward stops allocating after the first call — the
+//!   arena miss counter is flat from forward 2 on while hits keep
+//!   climbing;
+//! * 100 steady-state forwards spawn zero threads — the compute pool's
+//!   monotonic spawn counter does not move;
+//! * batch-parallel attention equals per-batch serial composition;
+//! * a warmed serving worker serves every request allocation-free.
+
+use std::sync::Arc;
+
+use layermerge::exec::{CompiledPlan, Format, Plan};
+use layermerge::ir::synth;
+use layermerge::kernels::{self, gemm_packed, gemm_ref, PackedB};
+use layermerge::runtime::{Backend, HostBackend};
+use layermerge::serve::{ServeCfg, Session};
+use layermerge::util::par;
+use layermerge::util::rng::Rng;
+use layermerge::util::tensor::Tensor;
+
+fn randt(r: &mut Rng, dims: &[usize]) -> Tensor {
+    let n: usize = dims.iter().product();
+    Tensor::new(dims.to_vec(), (0..n).map(|_| r.normal()).collect())
+}
+
+#[test]
+fn micro_kernel_parity_at_ragged_shapes() {
+    // none of these m/n are multiples of GEMM_MR=4 / GEMM_NR=16 except
+    // the identities; k crosses the old KC=128 cache-block boundary
+    let mut r = Rng::new(0x5ead);
+    for &m in &[1usize, 3, 17, 63] {
+        for &n in &[1usize, 3, 17, 63] {
+            for &k in &[1usize, 5, 128, 129] {
+                let a: Vec<f32> = (0..m * k).map(|_| r.normal()).collect();
+                let b: Vec<f32> = (0..k * n).map(|_| r.normal()).collect();
+                let mut want = vec![0.0f32; m * n];
+                gemm_ref(m, k, n, &a, &b, &mut want);
+                let bp = PackedB::pack(k, n, &b);
+                let mut got = vec![0.0f32; m * n];
+                gemm_packed(m, &a, &bp, &mut got);
+                let diff = want
+                    .iter()
+                    .zip(&got)
+                    .map(|(x, y)| (x - y).abs())
+                    .fold(0.0f32, f32::max);
+                assert!(diff < 1e-3, "({m},{k},{n}) diff {diff}");
+            }
+        }
+    }
+}
+
+fn lowered_chain(name: &str, fmt: Format) -> (Arc<HostBackend>, CompiledPlan, Tensor) {
+    let (spec, params) = synth::by_name(name).unwrap();
+    let plan = Arc::new(Plan::original(&spec, &params).unwrap());
+    let be = Arc::new(HostBackend::new());
+    let bedyn: Arc<dyn Backend> = be.clone();
+    let cp = CompiledPlan::lower(plan, bedyn, fmt).unwrap();
+    let mut rng = Rng::new(0xa11c);
+    let x = randt(&mut rng, &[spec.batch, spec.h, spec.w, spec.c]);
+    (be, cp, x)
+}
+
+#[test]
+fn steady_state_forward_is_allocation_free() {
+    for fmt in [Format::Eager, Format::Fused] {
+        let (be, cp, x) = lowered_chain("hostchain-tiny", fmt);
+        let first = cp.forward(&x, None).unwrap();
+        let arena = be.arena();
+        assert!(arena.misses() > 0, "{fmt:?}: first forward must charge the arena");
+        let (h0, m0) = (arena.hits(), arena.misses());
+        for _ in 0..5 {
+            let out = cp.forward(&x, None).unwrap();
+            assert_eq!(out.dims, first.dims);
+            assert!(out.max_abs_diff(&first) < 1e-6, "steady forwards must agree");
+        }
+        assert_eq!(
+            arena.misses(),
+            m0,
+            "{fmt:?}: steady-state forwards (2nd on) must perform zero buffer allocations"
+        );
+        assert!(
+            arena.hits() > h0,
+            "{fmt:?}: steady-state forwards must be served from the arena"
+        );
+    }
+}
+
+#[test]
+fn steady_state_forward_spawns_no_threads() {
+    // hostchain (not -tiny): its conv GEMMs are big enough to dispatch on
+    // the compute pool, so the warm forward provably initializes it
+    let (_be, cp, x) = lowered_chain("hostchain", Format::Fused);
+    cp.forward(&x, None).unwrap();
+    let spawned = par::pool_spawns();
+    let threads = par::pool_threads();
+    for _ in 0..100 {
+        cp.forward(&x, None).unwrap();
+    }
+    assert_eq!(
+        par::pool_spawns(),
+        spawned,
+        "steady-state forwards must not spawn threads"
+    );
+    assert_eq!(par::pool_threads(), threads, "pool size must stay stable");
+}
+
+#[test]
+fn parallel_attention_matches_per_batch_composition() {
+    let mut r = Rng::new(0xa77e);
+    let (bn, h, w, c) = (4usize, 5usize, 5usize, 6usize);
+    let x = randt(&mut r, &[bn, h, w, c]);
+    let wqkv = randt(&mut r, &[c, 3 * c]);
+    let wout = randt(&mut r, &[c, c]);
+    let arena = layermerge::util::arena::Arena::new();
+    let batched = kernels::attention(&x, &wqkv, &wout, Some(&arena));
+    let plain = kernels::attention(&x, &wqkv, &wout, None);
+    assert!(batched.max_abs_diff(&plain) < 1e-6, "arena path must not change numerics");
+    // attention is per-sample: the batched result equals each batch
+    // element pushed through alone
+    let plane = h * w * c;
+    for n in 0..bn {
+        let xn = Tensor::new(vec![1, h, w, c], x.data[n * plane..(n + 1) * plane].to_vec());
+        let yn = kernels::attention(&xn, &wqkv, &wout, None);
+        let got = &batched.data[n * plane..(n + 1) * plane];
+        let diff = yn
+            .data
+            .iter()
+            .zip(got)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(diff < 1e-4, "batch {n} deviates: {diff}");
+    }
+}
+
+#[test]
+fn warmed_serving_worker_is_allocation_free() {
+    let (spec, params) = synth::by_name("hostchain-tiny").unwrap();
+    let plan = Arc::new(Plan::original(&spec, &params).unwrap());
+    let be = Arc::new(HostBackend::new());
+    let bedyn: Arc<dyn Backend> = be.clone();
+    let cp = CompiledPlan::lower(plan, bedyn, Format::Fused).unwrap();
+    let cfg = ServeCfg { workers: 1, queue_cap: 16, warmup: true, ..ServeCfg::default() };
+    let sess = Session::new(Arc::new(cp), cfg).unwrap();
+    let mut rng = Rng::new(0x3357);
+    let full = randt(&mut rng, &[spec.batch, spec.h, spec.w, spec.c]);
+    // request 1: the single worker has finished its warmup forward by the
+    // time it serves this (warmup runs before the queue loop), so the
+    // arena shard is already charged
+    sess.submit(full.clone()).unwrap().wait().unwrap();
+    let m0 = be.arena().misses();
+    for _ in 0..5 {
+        sess.submit(full.clone()).unwrap().wait().unwrap();
+    }
+    assert_eq!(
+        be.arena().misses(),
+        m0,
+        "a warmed serving worker must serve steady-state requests allocation-free"
+    );
+    sess.shutdown();
+}
