@@ -8,7 +8,9 @@
 //! number, not a guess.
 //!
 //! Extends `BENCH_merge.json` (schema `layermerge.bench.merge.v1`) with
-//! `serving` and `serving_window` records: read-modify-write so the
+//! `serving`, `serving_window`, and `serving_net` records (the last
+//! drives the TCP tier over loopback at 0.5x/1x/2x capacity and records
+//! goodput, shed rate, and p99-of-admitted): read-modify-write so the
 //! merge/forward rows written by `cargo bench --bench merge_ops` are
 //! preserved, per the ROADMAP rule that perf records are extended, never
 //! replaced.  `BENCH_SMOKE=1` runs tiny request counts and skips the
@@ -21,9 +23,11 @@
 //! + real XLA bindings, a trailing section drives a deployed `resnetish`
 //! plan the same way.
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use layermerge::bench::smoke;
+use layermerge::serve::net::{drive_net, NetCfg, NetServer};
 use layermerge::serve::{self, BatchPolicy, Engine, LoadReport, ServeCfg, Session};
 use layermerge::util::json::Json;
 use layermerge::util::tensor::Tensor;
@@ -62,6 +66,27 @@ fn mock_backend(x: &Tensor, _t: Option<&Tensor>) -> anyhow::Result<Tensor> {
 /// the same as real ones, exactly like a device computing them).
 fn timed_backend(x: &Tensor, _t: Option<&Tensor>) -> anyhow::Result<Tensor> {
     std::thread::sleep(Duration::from_micros(500 + 50 * x.dims[0] as u64));
+    let rl: usize = x.dims[1..].iter().product();
+    let b = x.dims[0];
+    let mut out = Tensor::zeros(&[b, 2]);
+    for r in 0..b {
+        let row = &x.data[r * rl..(r + 1) * rl];
+        out.data[r * 2] = row.iter().sum();
+        out.data[r * 2 + 1] = row.iter().map(|v| v * v).sum();
+    }
+    Ok(out)
+}
+
+const NET_DISPATCH_US: u64 = 2_000;
+const NET_PER_ROW_US: u64 = 250;
+
+/// Sleep-based mock for the TCP-tier bench: slow enough that loopback
+/// round-trips are cheap relative to service time, so measured shedding
+/// comes from the admission controller, not the client harness.
+fn net_backend(x: &Tensor, _t: Option<&Tensor>) -> anyhow::Result<Tensor> {
+    std::thread::sleep(Duration::from_micros(
+        NET_DISPATCH_US + NET_PER_ROW_US * x.dims[0] as u64,
+    ));
     let rl: usize = x.dims[1..].iter().product();
     let b = x.dims[0];
     let mut out = Tensor::zeros(&[b, 2]);
@@ -194,6 +219,107 @@ fn window_policy_bench(
     Ok(())
 }
 
+/// The `serving_net` record: the TCP tier under open-loop Poisson load
+/// over loopback at 0.5x/1x/2x of analytic capacity, with per-request
+/// deadlines equal to the session SLO.  Goodput, shed rate, and
+/// p99-of-admitted per rate; at 2x overload the p99 of *admitted*
+/// requests must stay within the SLO bound — the admission controller
+/// sheds the rest at the door instead of letting the queue grow.
+fn net_tier_bench(
+    rows: &mut Vec<Json>,
+    derived: &mut Vec<(String, Json)>,
+) -> anyhow::Result<()> {
+    const SLO_MS: u64 = 25;
+    // analytic capacity for 1-row requests: workers x batch rows per
+    // full-batch service time
+    let batch_us = (NET_DISPATCH_US + NET_PER_ROW_US * MOCK_BATCH as u64) as f64;
+    let capacity_rps = 2.0 * MOCK_BATCH as f64 * 1e6 / batch_us;
+    let levels: &[(&str, f64)] =
+        if smoke() { &[("x2", 2.0)] } else { &[("x05", 0.5), ("x1", 1.0), ("x2", 2.0)] };
+    let requests = if smoke() { 32 } else { 600 };
+    let cfg = ServeCfg {
+        workers: 2,
+        queue_cap: 256,
+        policy: BatchPolicy::Greedy,
+        slo: Some(Duration::from_millis(SLO_MS)),
+        ..ServeCfg::default()
+    };
+    let sess = Arc::new(Session::from_fn(MOCK_BATCH, &MOCK_TAIL, false, cfg, net_backend));
+    // a handler thread owns its connection for the connection's lifetime,
+    // so the pool must be at least as wide as the driver's connections
+    let net_cfg = NetCfg { conn_workers: 8, ..NetCfg::default() };
+    let server = match NetServer::bind(Arc::clone(&sess), "127.0.0.1:0", net_cfg) {
+        Ok(s) => s,
+        Err(e) => {
+            // no loopback in this sandbox — the record is simply absent
+            println!("(skipping serving_net bench: {e})");
+            return Ok(());
+        }
+    };
+    let addr = server.addr();
+    println!("== serving net benches (TCP tier on {addr}, host mock) ==");
+    let finite = |v: f64| Json::num(if v.is_finite() { v } else { -1.0 });
+    for (si, &(tag, mult)) in levels.iter().enumerate() {
+        let rps = capacity_rps * mult;
+        let r = drive_net(
+            addr,
+            rps,
+            requests,
+            6,
+            Some(Duration::from_millis(SLO_MS)),
+            0x5e71e7 + si as u64,
+            |i| {
+                let rl: usize = MOCK_TAIL.iter().product();
+                (
+                    Tensor::new(
+                        vec![1, MOCK_TAIL[0]],
+                        (0..rl).map(|k| (i + k) as f32 * 0.5).collect(),
+                    ),
+                    None,
+                )
+            },
+        )?;
+        let name = format!("serve net {tag} rps={rps:.0}");
+        println!("{}", r.row(&name));
+        rows.push(Json::obj(vec![
+            ("name", Json::str(&name)),
+            ("iters", Json::num(r.requests as f64)),
+            ("goodput_rps", finite(r.goodput_rps)),
+            ("shed_rate", Json::num(r.shed_rate())),
+            ("p50_ms", finite(r.p50_ms)),
+            ("p95_ms", finite(r.p95_ms)),
+            ("p99_ms", finite(r.p99_ms)),
+        ]));
+        derived.push((format!("serving_net_goodput_rps_{tag}"), finite(r.goodput_rps)));
+        derived.push((format!("serving_net_shed_rate_{tag}"), Json::num(r.shed_rate())));
+        derived.push((format!("serving_net_p99_ms_{tag}"), finite(r.p99_ms)));
+        if tag == "x2" {
+            // bound for admitted requests: the SLO itself plus a few
+            // full-batch service times of scheduling slack
+            let bound_ms = SLO_MS as f64 + 6.0 * batch_us / 1e3;
+            derived.push(("serving_net_p99_bound_ms_x2".into(), Json::num(bound_ms)));
+            derived.push((
+                "serving_net_p99_within_slo_x2".into(),
+                Json::num(if r.p99_ms.is_finite() && r.p99_ms <= bound_ms {
+                    1.0
+                } else {
+                    0.0
+                }),
+            ));
+        }
+    }
+    let net = server.stats();
+    println!(
+        "  net tier: {} conns accepted, {} frames, {} bad frames, {} handler panics",
+        net.accepted, net.frames, net.bad_frames, net.handler_panics
+    );
+    server.shutdown();
+    if let Ok(s) = Arc::try_unwrap(sess) {
+        s.shutdown();
+    }
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let mut rows: Vec<Json> = Vec::new();
     let mut derived: Vec<(String, Json)> = Vec::new();
@@ -231,6 +357,7 @@ fn main() -> anyhow::Result<()> {
     sess.shutdown();
 
     window_policy_bench(&mut rows, &mut derived)?;
+    net_tier_bench(&mut rows, &mut derived)?;
 
     // a deployed plan, when the artifacts + real XLA runtime are present
     let root = std::path::Path::new("artifacts");
@@ -238,7 +365,6 @@ fn main() -> anyhow::Result<()> {
         match Engine::open(root) {
             Ok(engine) => {
                 use layermerge::exec::{Format, Plan};
-                use std::sync::Arc;
                 println!("== serving benches (deployed resnetish plan) ==");
                 let model = engine.load_model("resnetish")?;
                 let plan = Arc::new(Plan::original(&model.spec, &model.init)?);

@@ -7,6 +7,8 @@
 //!   verify   --model M                 merged-vs-pruned numerics report
 //!   profile  --model M                 per-format latency breakdown
 //!   serve    --model M                 micro-batched serving load test
+//!   serve-net --model M                TCP serving tier (admission
+//!                                      control, shedding, deadlines)
 //!
 //! Global flags: --artifacts DIR, --fast (analytical latency + short
 //! schedules), --measured (pin measured latency, overrides --fast),
@@ -22,6 +24,7 @@ use anyhow::{bail, Context, Result};
 use layermerge::experiments::{figures, tables as exp_tables, Ctx};
 use layermerge::pipeline::{Method, PipelineCfg};
 use layermerge::runtime::Backend as _;
+use layermerge::serve::net::{drive_net, NetCfg, NetServer};
 use layermerge::serve::{self, BatchPolicy, LoadReport, ServeCfg, Session};
 use layermerge::tables::LatencyMode;
 use layermerge::util::tensor::Tensor;
@@ -75,6 +78,8 @@ fn usage() -> &'static str {
        verify     --model M              merged-vs-pruned numerics check\n\
        profile    --model M              per-format latency breakdown\n\
        serve      --model M              micro-batched serving load test\n\
+       serve-net  --model M              TCP serving tier (deadline-aware\n\
+                                         admission control + load shedding)\n\
        table1..table11                   regenerate a paper table\n\
        fig1..fig5                        regenerate a paper figure\n\
        all                               every table and figure\n\
@@ -105,7 +110,20 @@ fn usage() -> &'static str {
                          (default 2000)\n\
        --serve-occupancy F  adaptive target occupancy (default 0.75)\n\
        --arrival-rps F   open-loop mode: deterministic Poisson arrivals\n\
-                         at F req/s instead of closed-loop clients\n"
+                         at F req/s instead of closed-loop clients\n\
+       --slo-ms N        admission-control SLO: shed at the door when the\n\
+                         predicted queue wait exceeds N ms (default 0 =\n\
+                         no SLO shedding)\n\
+     serve-net flags (plus the serve/session flags above):\n\
+       --addr A          listen address (default 127.0.0.1:7433; use\n\
+                         127.0.0.1:0 for an ephemeral port)\n\
+       --conn-workers N  connection-handler threads (default 4)\n\
+       --conns N         self-drive client connections (default 4)\n\
+       --deadline-ms N   per-request deadline the self-drive clients\n\
+                         attach (default 25; 0 = none)\n\
+       with --arrival-rps F the command binds, self-drives F req/s of\n\
+       open-loop Poisson load over loopback, prints the goodput/shed\n\
+       report, and exits; without it the server listens until killed\n"
 }
 
 fn build_cfg(args: &Args) -> PipelineCfg {
@@ -157,10 +175,11 @@ fn main() -> Result<()> {
         let model = args.get("model").unwrap_or("hostnet");
         return match args.cmd.as_str() {
             "serve" => serve_host(&ctx, model, &args),
+            "serve-net" => serve_net_host(&ctx, model, &args),
             "profile" => profile_host(&ctx, model),
             other => bail!(
                 "{other} needs the PJRT backend (gated graph / tables); \
-                 --backend host supports serve and profile"
+                 --backend host supports serve, serve-net, and profile"
             ),
         };
     }
@@ -207,6 +226,10 @@ fn main() -> Result<()> {
         "serve" => {
             let model = args.get("model").context("--model required")?;
             serve_cmd(&ctx, model, &args)?;
+        }
+        "serve-net" => {
+            let model = args.get("model").context("--model required")?;
+            serve_net_pjrt(&ctx, model, &args)?;
         }
         "table1" => exp_tables::table1(&ctx)?,
         "table2" => exp_tables::table2(&ctx)?,
@@ -333,6 +356,7 @@ fn serve_policy(args: &Args) -> Result<BatchPolicy> {
 /// Session sizing + policy from the serve flags.
 fn serve_cfg(args: &Args) -> Result<ServeCfg> {
     let defaults = ServeCfg::default();
+    let slo_ms = args.usize_or("slo-ms", 0) as u64;
     Ok(ServeCfg {
         workers: args.usize_or("serve-workers", defaults.workers).max(1),
         queue_cap: args.usize_or("queue-cap", defaults.queue_cap).max(1),
@@ -340,6 +364,9 @@ fn serve_cfg(args: &Args) -> Result<ServeCfg> {
         // deployed CLI sessions pre-charge every worker's arena shard so
         // the first measured request is already in steady state
         warmup: true,
+        // admission control: shed at the door once predicted queue wait
+        // exceeds the SLO (0 = disabled)
+        slo: (slo_ms > 0).then_some(std::time::Duration::from_millis(slo_ms)),
     })
 }
 
@@ -498,6 +525,102 @@ fn serve_host(ctx: &Ctx, model: &str, args: &Args) -> Result<()> {
     );
     sess.shutdown();
     Ok(())
+}
+
+/// Put the network tier in front of a deployed session: bind `--addr`,
+/// then either self-drive open-loop Poisson load over loopback
+/// (`--arrival-rps`, printing the goodput/shed report and both counter
+/// sets) or listen until killed.
+fn run_net_tier(sess: Session, args: &Args, pool: Vec<Tensor>) -> Result<()> {
+    let addr = args.get("addr").unwrap_or("127.0.0.1:7433");
+    let rps = args.f64_or("arrival-rps", 0.0);
+    let requests = args.usize_or("requests", 256).max(1);
+    let conns = args.usize_or("conns", 4).max(1);
+    let deadline_ms = args.usize_or("deadline-ms", 25) as u64;
+    let ncfg = NetCfg {
+        conn_workers: args.usize_or("conn-workers", 4).max(1),
+        ..NetCfg::default()
+    };
+    anyhow::ensure!(!pool.is_empty(), "serve-net: empty request pool");
+    let session = Arc::new(sess);
+    let server = NetServer::bind(Arc::clone(&session), addr, ncfg)?;
+    println!(
+        "serve-net listening on {} ({} conn workers, policy {:?})",
+        server.addr(),
+        ncfg.conn_workers,
+        session.policy(),
+    );
+    if rps <= 0.0 {
+        println!("no --arrival-rps: serving until killed (Ctrl-C)");
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+    let deadline =
+        (deadline_ms > 0).then_some(std::time::Duration::from_millis(deadline_ms));
+    let r = drive_net(server.addr(), rps, requests, conns, deadline, 0x5e7, |i| {
+        (pool[i % pool.len()].clone(), None)
+    })?;
+    println!("{}", r.row("serve-net self-drive"));
+    let s = session.stats();
+    println!(
+        "  session: {} batches ({} padded rows, occ {:.2}), shed {}, expired {}, \
+         failed batches {}",
+        s.batches, s.padded_rows, s.occupancy(), s.shed_requests,
+        s.expired_requests, s.failed_batches,
+    );
+    let n = server.stats();
+    println!(
+        "  net: {} accepted ({} refused), {} frames -> {} replies, {} bad frames, \
+         {} conn errors, {} handler panics",
+        n.accepted, n.refused, n.frames, n.replies, n.bad_frames, n.conn_errors,
+        n.handler_panics,
+    );
+    server.shutdown();
+    if let Ok(s) = Arc::try_unwrap(session) {
+        s.shutdown();
+    }
+    Ok(())
+}
+
+/// `serve-net --backend host`: the greedy-merged synthetic network behind
+/// the TCP tier — the full deadline/shedding path, runnable offline.
+fn serve_net_host(ctx: &Ctx, model: &str, args: &Args) -> Result<()> {
+    use layermerge::exec::Format;
+    use layermerge::util::rng::Rng;
+    let scfg = serve_cfg(args)?;
+    let engine = ctx.engine();
+    let (spec, _orig, merged) = host_plans(model)?;
+    let sess = engine.deploy_cfg(Arc::clone(&merged), Format::Fused, scfg)?;
+    let mut rng = Rng::new(0x5e11);
+    let row: usize = spec.h * spec.w * spec.c;
+    let pool: Vec<Tensor> = (0..64)
+        .map(|_| {
+            Tensor::new(
+                vec![1, spec.h, spec.w, spec.c],
+                (0..row).map(|_| rng.normal()).collect(),
+            )
+        })
+        .collect();
+    run_net_tier(sess, args, pool)
+}
+
+/// `serve-net` on the PJRT backend: the original deployed plan behind the
+/// TCP tier, fed single-row classify requests.
+fn serve_net_pjrt(ctx: &Ctx, model: &str, args: &Args) -> Result<()> {
+    use layermerge::exec::{Format, Plan};
+    let scfg = serve_cfg(args)?;
+    let engine = ctx.engine();
+    let pipe = ctx.pipeline(model)?;
+    let pool_xy = layermerge::serve::classify_request_pool(&pipe.gen, 4);
+    anyhow::ensure!(
+        !pool_xy.is_empty(),
+        "serve-net drives classifier models; {model} produced no classify rows"
+    );
+    let plan = Arc::new(Plan::original(&pipe.model.spec, &pipe.pretrained)?);
+    let sess = engine.deploy_cfg(plan, Format::Fused, scfg)?;
+    let pool: Vec<Tensor> = pool_xy.into_iter().map(|(x, _)| x).collect();
+    run_net_tier(sess, args, pool)
 }
 
 /// `profile --backend host`: per-format end-to-end latency of the

@@ -45,8 +45,25 @@
 //! each serving worker reaches its own zero-allocation steady state
 //! independently; `ServeCfg::warmup` runs one throwaway forward per
 //! worker at deploy so the first real request is already in it.
+//!
+//! **Robustness tier.**  Every failure a request can hit is a *typed*
+//! [`ServeError`] (shed, deadline-exceeded, backend-failed, shutting-down,
+//! rejected), so callers — the network tier in [`net`] above all — can
+//! tell "the system protected itself" from "the system broke".
+//! [`Session::submit_deadline`] carries a per-request deadline into the
+//! queue: requests whose deadline passes before dispatch are failed fast
+//! by the worker (`expired_requests`) instead of served late, and
+//! admission control sheds at the door (`shed_requests`) when the
+//! predicted queue wait — queued batches times the EWMA per-batch service
+//! time the `Adaptive` policy already tracks — exceeds the deadline (or
+//! the [`ServeCfg::slo`] bound).  A panicking or erroring backend batch
+//! poisons only its own tickets (`failed_batches`); the worker survives.
+//! [`Ticket::wait_timeout`] bounds every wait so a wedged batch can never
+//! block a caller forever.  [`net`] puts a TCP socket in front of all of
+//! this ([`proto`] defines the wire frames).
 
 use std::collections::VecDeque;
+use std::fmt;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -60,6 +77,70 @@ use crate::model::{Manifest, Model};
 use crate::runtime::{Backend, HostBackend, LatencyStats, PjrtBackend, Runtime};
 use crate::util::par;
 use crate::util::tensor::Tensor;
+
+pub mod net;
+pub mod proto;
+
+// ---------------------------------------------------------------------------
+// Typed serving errors
+// ---------------------------------------------------------------------------
+
+/// Why a served request failed — typed, so the network tier can put a
+/// wire code on it and load drivers can separate "the system protected
+/// itself" (shed, expired) from "the system broke" (backend failed).
+///
+/// Converts into `anyhow::Error` (it implements `std::error::Error`), so
+/// the untyped [`Ticket::wait`]/[`Session::submit`] surfaces are
+/// unchanged; typed callers use [`Session::submit_deadline`] and
+/// [`Ticket::wait_coded`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// The request itself was malformed (shape / timestep validation).
+    /// Maps to `BadFrame` on the wire.
+    Rejected(String),
+    /// Admission control refused the request at the door: the predicted
+    /// queue wait exceeded the request deadline / configured SLO, or the
+    /// bounded queue was full for a deadlined request.
+    Shed {
+        /// Rows already queued when the request was refused.
+        queued_rows: usize,
+        /// Predicted wait before this request would dispatch, in µs.
+        predicted_us: u64,
+        /// The budget the prediction exceeded, in µs.
+        budget_us: u64,
+    },
+    /// The request was admitted but its deadline passed before a worker
+    /// dispatched it; it was failed fast instead of served late.
+    DeadlineExceeded,
+    /// The dispatched batch errored or panicked; only this batch's
+    /// tickets carry the failure.
+    BackendFailed(String),
+    /// The session (or server) is draining and accepts no new work.
+    ShuttingDown,
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::Rejected(m) => f.write_str(m),
+            ServeError::Shed { queued_rows, predicted_us, budget_us } => write!(
+                f,
+                "request shed at admission: predicted queue wait {predicted_us}us \
+                 exceeds the {budget_us}us budget ({queued_rows} rows queued)"
+            ),
+            ServeError::DeadlineExceeded => {
+                f.write_str("request deadline exceeded before dispatch")
+            }
+            ServeError::BackendFailed(m) => f.write_str(m),
+            ServeError::ShuttingDown => f.write_str("session is closed (shutting down)"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Result of a typed serve operation.
+pub type ServeResult<T> = std::result::Result<T, ServeError>;
 
 // ---------------------------------------------------------------------------
 // Engine
@@ -257,6 +338,13 @@ pub struct ServeCfg {
     /// [`ServeStats`] (transfer counters do move — snapshot deltas after
     /// traffic, not across deploy).  Off by default.
     pub warmup: bool,
+    /// Admission-control latency SLO.  When set, every submitted request
+    /// is shed at the door (typed [`ServeError::Shed`]) if the predicted
+    /// queue wait — queued batches × the EWMA per-batch service time —
+    /// exceeds this bound.  Per-request deadlines
+    /// ([`Session::submit_deadline`]) tighten the budget further; `None`
+    /// disables SLO-based shedding for deadline-less requests.
+    pub slo: Option<Duration>,
 }
 
 impl Default for ServeCfg {
@@ -266,12 +354,13 @@ impl Default for ServeCfg {
             queue_cap: 256,
             policy: BatchPolicy::Greedy,
             warmup: false,
+            slo: None,
         }
     }
 }
 
 /// Cumulative serving counters (monotonic; snapshot with [`Session::stats`]).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct ServeStats {
     /// Requests fully served (tickets resolved; `infer` calls count one).
     pub requests: usize,
@@ -293,6 +382,16 @@ pub struct ServeStats {
     /// The batching window currently applied by the policy, in µs
     /// (fixed for `Window`, tuned online for `Adaptive`, 0 for `Greedy`).
     pub cur_window_us: usize,
+    /// Requests refused at admission (typed [`ServeError::Shed`]): the
+    /// predicted queue wait exceeded their deadline / the SLO, or the
+    /// queue was full for a deadlined request.
+    pub shed_requests: usize,
+    /// Admitted requests failed fast at dispatch time because their
+    /// deadline had already passed ([`ServeError::DeadlineExceeded`]).
+    pub expired_requests: usize,
+    /// Dispatched batches that errored or panicked; each poisoned only
+    /// its own tickets ([`ServeError::BackendFailed`]).
+    pub failed_batches: usize,
 }
 
 impl ServeStats {
@@ -326,6 +425,9 @@ struct StatsInner {
     expired_windows: AtomicUsize,
     queue_wait_us: AtomicUsize,
     service_us: AtomicUsize,
+    shed_requests: AtomicUsize,
+    expired_requests: AtomicUsize,
+    failed_batches: AtomicUsize,
 }
 
 #[derive(Default)]
@@ -333,7 +435,7 @@ struct TicketInner {
     /// The result plus the instant it was posted (the open-loop driver
     /// computes exact completion latency from it even when the ticket is
     /// awaited long after the batch finished).
-    slot: Mutex<Option<(Result<Tensor>, Instant)>>,
+    slot: Mutex<Option<(ServeResult<Tensor>, Instant)>>,
     cv: Condvar,
 }
 
@@ -345,12 +447,37 @@ pub struct Ticket {
 
 impl Ticket {
     pub fn wait(self) -> Result<Tensor> {
+        self.wait_coded().map_err(anyhow::Error::from)
+    }
+
+    /// [`Ticket::wait`] with the typed [`ServeError`] preserved — the
+    /// network tier maps it onto a wire error code.
+    pub fn wait_coded(self) -> ServeResult<Tensor> {
         self.wait_done().0
     }
 
-    /// Like [`Ticket::wait`], but also returns the instant the result was
-    /// posted — the completion timestamp the open-loop load driver needs.
-    pub(crate) fn wait_done(self) -> (Result<Tensor>, Instant) {
+    /// Bounded wait: the result if the batch completes within `d`, or the
+    /// ticket back on timeout (retry, or drop it — a late fulfillment
+    /// into a dropped ticket is harmless).  This is the wait the serving
+    /// tier uses everywhere a wedged or slow batch must not block a
+    /// caller forever.
+    pub fn wait_timeout(self, d: Duration) -> std::result::Result<Result<Tensor>, Ticket> {
+        self.wait_timeout_coded(d)
+            .map(|r| r.map_err(anyhow::Error::from))
+    }
+
+    /// [`Ticket::wait_timeout`] with the typed error preserved.
+    pub fn wait_timeout_coded(
+        self,
+        d: Duration,
+    ) -> std::result::Result<ServeResult<Tensor>, Ticket> {
+        self.wait_done_timeout(d).map(|(r, _)| r)
+    }
+
+    /// Like [`Ticket::wait_coded`], but also returns the instant the
+    /// result was posted — the completion timestamp the open-loop load
+    /// driver needs.
+    pub(crate) fn wait_done(self) -> (ServeResult<Tensor>, Instant) {
         let mut g = self.inner.slot.lock().unwrap();
         loop {
             if let Some(done) = g.take() {
@@ -360,17 +487,37 @@ impl Ticket {
         }
     }
 
+    /// Timed [`Ticket::wait_done`]: `Err(self)` if `d` elapses first.
+    pub(crate) fn wait_done_timeout(
+        self,
+        d: Duration,
+    ) -> std::result::Result<(ServeResult<Tensor>, Instant), Ticket> {
+        let deadline = Instant::now() + d;
+        let mut g = self.inner.slot.lock().unwrap();
+        loop {
+            if let Some(done) = g.take() {
+                return Ok(done);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                drop(g);
+                return Err(self);
+            }
+            g = self.inner.cv.wait_timeout(g, deadline - now).unwrap().0;
+        }
+    }
+
     /// Non-blocking poll; returns the result if the batch has completed.
     pub fn try_wait(self) -> std::result::Result<Result<Tensor>, Ticket> {
         let done = self.inner.slot.lock().unwrap().take();
         match done {
-            Some((r, _)) => Ok(r),
+            Some((r, _)) => Ok(r.map_err(anyhow::Error::from)),
             None => Err(self),
         }
     }
 }
 
-fn fulfill(t: &TicketInner, r: Result<Tensor>) {
+fn fulfill(t: &TicketInner, r: ServeResult<Tensor>) {
     *t.slot.lock().unwrap() = Some((r, Instant::now()));
     t.cv.notify_all();
 }
@@ -383,10 +530,17 @@ struct Request {
     /// (bounded wait is measured from the oldest request in the batch)
     /// and the queue-wait telemetry.
     enqueued: Instant,
+    /// Serve-by deadline: a worker that reaches this request after the
+    /// deadline fails it fast ([`ServeError::DeadlineExceeded`]) instead
+    /// of serving it late.
+    deadline: Option<Instant>,
 }
 
 struct QState {
     items: VecDeque<Request>,
+    /// Rows across `items` — maintained on push/pop so admission control
+    /// predicts queue wait without walking the queue under the lock.
+    rows_queued: usize,
     closed: bool,
 }
 
@@ -416,6 +570,16 @@ struct Shared {
     /// reads it without extra locking.
     window_us: AtomicU64,
     ctl: Mutex<AdaptCtl>,
+    /// Mirror of `ctl.ewma_svc_us`, updated after every batch regardless
+    /// of policy — admission control reads it lock-free on the submit
+    /// path.  0 until the first batch completes (no shedding before the
+    /// estimator has a signal).
+    svc_ewma_us: AtomicU64,
+    /// Worker count, for the queue-wait prediction (batches drain
+    /// `workers` at a time).
+    workers: usize,
+    /// [`ServeCfg::slo`] in µs; 0 = no SLO-based shedding.
+    slo_us: u64,
 }
 
 /// The dispatchable side of a session: a lowered plan (any backend), or
@@ -487,13 +651,20 @@ impl Session {
         cfg: ServeCfg,
     ) -> Session {
         let shared = Arc::new(Shared {
-            state: Mutex::new(QState { items: VecDeque::new(), closed: false }),
+            state: Mutex::new(QState {
+                items: VecDeque::new(),
+                rows_queued: 0,
+                closed: false,
+            }),
             not_empty: Condvar::new(),
             not_full: Condvar::new(),
             stats: StatsInner::default(),
             policy: cfg.policy,
             window_us: AtomicU64::new(cfg.policy.initial_window_us()),
             ctl: Mutex::new(AdaptCtl::default()),
+            svc_ewma_us: AtomicU64::new(0),
+            workers: cfg.workers.max(1),
+            slo_us: cfg.slo.map_or(0, |d| d.as_micros() as u64),
         });
         // per-worker warmup input: one throwaway zero forward per worker
         // charges that worker's arena shard (buffers are recycled
@@ -546,12 +717,27 @@ impl Session {
             queue_wait_us: s.queue_wait_us.load(Ordering::Relaxed),
             service_us: s.service_us.load(Ordering::Relaxed),
             cur_window_us: self.shared.window_us.load(Ordering::Relaxed) as usize,
+            shed_requests: s.shed_requests.load(Ordering::Relaxed),
+            expired_requests: s.expired_requests.load(Ordering::Relaxed),
+            failed_batches: s.failed_batches.load(Ordering::Relaxed),
         }
     }
 
     /// The batch-forming policy this session was deployed with.
     pub fn policy(&self) -> BatchPolicy {
         self.shared.policy
+    }
+
+    /// EWMA per-batch service time in µs (0 until the first batch
+    /// completes) — the signal admission control predicts queue wait
+    /// from.
+    pub fn ewma_service_us(&self) -> u64 {
+        self.shared.svc_ewma_us.load(Ordering::Relaxed)
+    }
+
+    /// Requests currently queued (not yet taken by a worker).
+    pub fn queue_depth(&self) -> usize {
+        self.shared.state.lock().unwrap().items.len()
     }
 
     /// Synchronous one-shot inference: full `[B, ..]` input, no queue.
@@ -581,48 +767,129 @@ impl Session {
     /// [`Session::submit`] with a per-row timestep tensor `[rows]`
     /// (required iff the deployed plan is a diffusion model).
     pub fn submit_with(&self, x: Tensor, t: Option<Tensor>) -> Result<Ticket> {
-        anyhow::ensure!(
-            !x.dims.is_empty() && x.dims[0] >= 1,
-            "request must have a leading batch dim"
-        );
+        self.submit_deadline(x, t, None).map_err(anyhow::Error::from)
+    }
+
+    /// Shape/timestep validation shared by every submit path; failures
+    /// are [`ServeError::Rejected`] (the wire maps them to `BadFrame`).
+    fn validate(&self, x: &Tensor, t: &Option<Tensor>) -> ServeResult<()> {
+        let reject = |m: String| Err(ServeError::Rejected(m));
+        if x.dims.is_empty() || x.dims[0] < 1 {
+            return reject("request must have a leading batch dim".into());
+        }
         let rows = x.dims[0];
-        anyhow::ensure!(
-            rows <= self.batch,
-            "request rows {rows} exceed the deployed batch size {}",
-            self.batch
-        );
-        anyhow::ensure!(
-            x.dims[1..] == self.in_tail[..],
-            "request dims {:?} don't match the deployed input [b, {:?}]",
-            x.dims,
-            self.in_tail
-        );
-        match (&t, self.needs_t) {
-            (None, true) => anyhow::bail!("deployed plan requires a timestep tensor"),
-            (Some(_), false) => anyhow::bail!("deployed plan takes no timestep tensor"),
-            (Some(tt), true) => anyhow::ensure!(
-                tt.dims == vec![rows],
-                "timestep dims {:?} must be [{rows}]",
-                tt.dims
-            ),
-            (None, false) => {}
+        if rows > self.batch {
+            return reject(format!(
+                "request rows {rows} exceed the deployed batch size {}",
+                self.batch
+            ));
+        }
+        if x.dims[1..] != self.in_tail[..] {
+            return reject(format!(
+                "request dims {:?} don't match the deployed input [b, {:?}]",
+                x.dims, self.in_tail
+            ));
+        }
+        match (t, self.needs_t) {
+            (None, true) => reject("deployed plan requires a timestep tensor".into()),
+            (Some(_), false) => reject("deployed plan takes no timestep tensor".into()),
+            (Some(tt), true) if tt.dims != vec![rows] => {
+                reject(format!("timestep dims {:?} must be [{rows}]", tt.dims))
+            }
+            _ => Ok(()),
+        }
+    }
+
+    /// The typed, deadline-aware enqueue — what the network tier calls.
+    ///
+    /// Differences from [`Session::submit_with`]:
+    ///
+    /// * **Admission control.**  If the EWMA per-batch service time has a
+    ///   signal, the predicted queue wait (`ceil(queued_rows / B)` batches
+    ///   ahead, divided across the workers) is checked against the
+    ///   tightest of `deadline - now` and [`ServeCfg::slo`]; requests
+    ///   that cannot make it are shed at the door with
+    ///   [`ServeError::Shed`] — bounded queue depth, O(1) refusal cost.
+    /// * **No blocking for deadlined requests.**  A full queue sheds a
+    ///   deadlined request immediately instead of blocking the caller
+    ///   into its own deadline; deadline-less requests keep the classic
+    ///   blocking backpressure.
+    /// * **Deadline propagation.**  The deadline rides into the queue: a
+    ///   worker that reaches the request late fails it fast
+    ///   ([`ServeError::DeadlineExceeded`], counted in
+    ///   `expired_requests`) instead of serving it late.
+    pub fn submit_deadline(
+        &self,
+        x: Tensor,
+        t: Option<Tensor>,
+        deadline: Option<Instant>,
+    ) -> ServeResult<Ticket> {
+        self.validate(&x, &t)?;
+        let rows = x.dims[0];
+        let now = Instant::now();
+        if let Some(d) = deadline {
+            if now >= d {
+                self.shared
+                    .stats
+                    .expired_requests
+                    .fetch_add(1, Ordering::Relaxed);
+                return Err(ServeError::DeadlineExceeded);
+            }
         }
         let ticket = Arc::new(TicketInner::default());
         {
             let mut g = self.shared.state.lock().unwrap();
             loop {
-                anyhow::ensure!(!g.closed, "session is closed");
+                if g.closed {
+                    return Err(ServeError::ShuttingDown);
+                }
                 if g.items.len() < self.queue_cap {
                     break;
                 }
+                if deadline.is_some() || self.shared.slo_us > 0 {
+                    // a deadlined request must not block into its own
+                    // deadline: shed at the door instead
+                    self.shared
+                        .stats
+                        .shed_requests
+                        .fetch_add(1, Ordering::Relaxed);
+                    return Err(ServeError::Shed {
+                        queued_rows: g.rows_queued,
+                        predicted_us: u64::MAX,
+                        budget_us: self.budget_us(deadline, now),
+                    });
+                }
                 g = self.shared.not_full.wait(g).unwrap();
+            }
+            // admission control: shed when the predicted wait exceeds the
+            // deadline/SLO budget (needs an EWMA signal — the first
+            // batches after deploy are always admitted)
+            let svc = self.shared.svc_ewma_us.load(Ordering::Relaxed);
+            let budget_us = self.budget_us(deadline, now);
+            if svc > 0 && budget_us < u64::MAX {
+                let batches_ahead =
+                    ((g.rows_queued + rows + self.batch - 1) / self.batch) as u64;
+                let predicted_us = batches_ahead * svc / self.shared.workers as u64;
+                if predicted_us > budget_us {
+                    self.shared
+                        .stats
+                        .shed_requests
+                        .fetch_add(1, Ordering::Relaxed);
+                    return Err(ServeError::Shed {
+                        queued_rows: g.rows_queued,
+                        predicted_us,
+                        budget_us,
+                    });
+                }
             }
             g.items.push_back(Request {
                 x,
                 t,
                 ticket: Arc::clone(&ticket),
-                enqueued: Instant::now(),
+                enqueued: now,
+                deadline,
             });
+            g.rows_queued += rows;
             let depth = g.items.len();
             let mq = &self.shared.stats.max_queue;
             let mut cur = mq.load(Ordering::Relaxed);
@@ -636,6 +903,16 @@ impl Session {
         }
         self.shared.not_empty.notify_one();
         Ok(Ticket { inner: ticket })
+    }
+
+    /// The admission budget in µs: the tightest of the request deadline
+    /// and the configured SLO; `u64::MAX` when neither applies.
+    fn budget_us(&self, deadline: Option<Instant>, now: Instant) -> u64 {
+        let from_deadline = deadline
+            .map(|d| d.saturating_duration_since(now).as_micros() as u64)
+            .unwrap_or(u64::MAX);
+        let from_slo = if self.shared.slo_us > 0 { self.shared.slo_us } else { u64::MAX };
+        from_deadline.min(from_slo)
     }
 
     /// Stop accepting new requests.  Already-queued requests are still
@@ -675,10 +952,19 @@ fn batch_formed(items: &VecDeque<Request>, b: usize) -> bool {
     false
 }
 
+/// Whether the queue front's serve-by deadline has already passed (such
+/// a request must be failed fast, not held for a batching window).
+fn front_expired(items: &VecDeque<Request>, now: Instant) -> bool {
+    items
+        .front()
+        .and_then(|r| r.deadline)
+        .is_some_and(|d| now >= d)
+}
+
 fn worker_loop(shared: &Shared, backend: &Dispatch, b: usize) {
     loop {
         let mut expired = false;
-        let taken = {
+        let (taken, dead) = {
             let mut g = shared.state.lock().unwrap();
             loop {
                 if g.items.is_empty() {
@@ -688,54 +974,81 @@ fn worker_loop(shared: &Shared, backend: &Dispatch, b: usize) {
                     g = shared.not_empty.wait(g).unwrap();
                     continue;
                 }
+                let now = Instant::now();
                 // close() flushes held partials immediately; a formed
-                // batch never waits
-                if g.closed || batch_formed(&g.items, b) {
+                // batch never waits, and neither does an already-expired
+                // front (it needs failing fast, not batching)
+                if g.closed || batch_formed(&g.items, b) || front_expired(&g.items, now) {
                     break;
                 }
                 let window = shared.window_us.load(Ordering::Relaxed);
                 if window == 0 {
                     break; // greedy: ship whatever is queued
                 }
-                // bounded wait, anchored at the oldest queued request
-                let deadline = g.items.front().unwrap().enqueued
-                    + Duration::from_micros(window);
-                let now = Instant::now();
-                if now >= deadline {
+                // bounded wait, anchored at the oldest queued request —
+                // tightened to the front's serve-by deadline so expiry is
+                // noticed when it happens, not a window later
+                let front = g.items.front().unwrap();
+                let mut wake = front.enqueued + Duration::from_micros(window);
+                if let Some(d) = front.deadline {
+                    wake = wake.min(d);
+                }
+                if now >= wake {
                     expired = true;
                     break;
                 }
-                g = shared.not_empty.wait_timeout(g, deadline - now).unwrap().0;
+                g = shared.not_empty.wait_timeout(g, wake - now).unwrap().0;
             }
-            // coalesce whole requests (submit bounds each to <= b rows)
+            // coalesce whole requests (submit bounds each to <= b rows),
+            // failing past-deadline requests fast instead of batching them
+            let now = Instant::now();
             let mut taken: Vec<Request> = Vec::new();
+            let mut dead: Vec<Request> = Vec::new();
             let mut rows = 0usize;
             while let Some(front) = g.items.front() {
                 let r = front.x.dims[0];
+                if front.deadline.is_some_and(|d| now >= d) {
+                    g.rows_queued -= r;
+                    dead.push(g.items.pop_front().unwrap());
+                    continue;
+                }
                 if rows + r > b {
                     break;
                 }
                 rows += r;
+                g.rows_queued -= r;
                 taken.push(g.items.pop_front().unwrap());
                 if rows == b {
                     break;
                 }
             }
-            taken
+            (taken, dead)
         };
         shared.not_full.notify_all();
+        if !dead.is_empty() {
+            shared
+                .stats
+                .expired_requests
+                .fetch_add(dead.len(), Ordering::Relaxed);
+            for r in dead {
+                fulfill(&r.ticket, Err(ServeError::DeadlineExceeded));
+            }
+        }
         if !taken.is_empty() {
             run_batch(shared, backend, b, taken, expired);
         }
     }
 }
 
-/// The `Adaptive` EWMA controller, run once per dispatched batch:
+/// Per-batch EWMA bookkeeping, run once per dispatched batch for every
+/// policy: update the occupancy/service estimators (the service EWMA is
+/// mirrored into `Shared::svc_ewma_us` for the lock-free admission
+/// check), then — for `Adaptive` only — run the window controller:
 /// multiplicative-increase the window while occupancy undershoots the
 /// target, decay it once the target is met; never exceed the latency
 /// budget `cap_us` or twice the EWMA service time (waiting much longer
 /// than one dispatch takes cannot improve amortization).
-fn adapt_window(shared: &Shared, b: usize, rows: usize, svc_us: u64, target: f64, cap_us: u64) {
+fn note_batch(shared: &Shared, b: usize, rows: usize, svc_us: u64) {
     // one controller step per batch; the lock serializes racing workers
     // so no batch's signal is lost to a concurrent read-modify-write
     let mut ctl = shared.ctl.lock().unwrap();
@@ -754,15 +1067,19 @@ fn adapt_window(shared: &Shared, b: usize, rows: usize, svc_us: u64, target: f64
         (ctl.ewma_svc_us * 3 + svc_us) / 4
     };
     ctl.ewma_svc_us = svc;
+    shared.svc_ewma_us.store(svc, Ordering::Relaxed);
 
-    let target_ppm = (target.clamp(0.0, 1.0) * 1e6) as u64;
+    let BatchPolicy::Adaptive { target_occupancy, max_wait_us } = shared.policy else {
+        return;
+    };
+    let target_ppm = (target_occupancy.clamp(0.0, 1.0) * 1e6) as u64;
     let cur = shared.window_us.load(Ordering::Relaxed);
     let next = if occ < target_ppm {
         (cur + cur / 2).max(64)
     } else {
         cur.saturating_sub((cur / 4).max(1))
     };
-    let bound = cap_us.min(svc.saturating_mul(2));
+    let bound = max_wait_us.min(svc.saturating_mul(2));
     shared.window_us.store(next.min(bound), Ordering::Relaxed);
 }
 
@@ -827,9 +1144,7 @@ fn run_batch(shared: &Shared, backend: &Dispatch, b: usize, reqs: Vec<Request>, 
     st.expired_windows.fetch_add(usize::from(expired), Ordering::Relaxed);
     st.queue_wait_us.fetch_add(queue_wait_us as usize, Ordering::Relaxed);
     st.service_us.fetch_add(svc_us as usize, Ordering::Relaxed);
-    if let BatchPolicy::Adaptive { target_occupancy, max_wait_us } = shared.policy {
-        adapt_window(shared, b, total_rows, svc_us as u64, target_occupancy, max_wait_us);
-    }
+    note_batch(shared, b, total_rows, svc_us as u64);
     match out {
         Ok(y) if y.dims.first() == Some(&b) && y.data.len() % b == 0 => {
             if reqs.len() == 1 && total_rows == b {
@@ -852,18 +1167,22 @@ fn run_batch(shared: &Shared, backend: &Dispatch, b: usize, reqs: Vec<Request>, 
             }
         }
         Ok(y) => {
+            // a batch is poisoned exactly once per failure: counted here,
+            // and every ticket of THIS batch (only) carries the error
+            st.failed_batches.fetch_add(1, Ordering::Relaxed);
             let msg = format!(
                 "serve batch produced dims {:?}, expected leading batch {b}",
                 y.dims
             );
             for r in reqs {
-                fulfill(&r.ticket, Err(anyhow::anyhow!("{msg}")));
+                fulfill(&r.ticket, Err(ServeError::BackendFailed(msg.clone())));
             }
         }
         Err(e) => {
+            st.failed_batches.fetch_add(1, Ordering::Relaxed);
             let msg = format!("serve batch failed: {e}");
             for r in reqs {
-                fulfill(&r.ticket, Err(anyhow::anyhow!("{msg}")));
+                fulfill(&r.ticket, Err(ServeError::BackendFailed(msg.clone())));
             }
         }
     }
@@ -874,22 +1193,46 @@ fn run_batch(shared: &Shared, backend: &Dispatch, b: usize, reqs: Vec<Request>, 
 // ---------------------------------------------------------------------------
 
 /// One load run against a session: client-perceived latency percentiles
-/// (queue wait included, nearest-rank via [`crate::util::stats::percentile`])
-/// and throughput, plus coalescing and window telemetry.  Produced by the
-/// closed-loop [`drive`] and the open-loop [`drive_open`].
+/// **of successful requests** (queue wait included, nearest-rank via
+/// [`crate::util::stats::percentile`]) and throughput, plus coalescing,
+/// window, and failure-separation telemetry.  Produced by the closed-loop
+/// [`drive`] and the open-loop [`drive_open`]/[`drive_open_deadline`].
+///
+/// Shed/expired/failed completions are **never** folded into the latency
+/// percentiles — an overload run reports the latency of what it actually
+/// served next to how much it refused, not a blend of the two.
 #[derive(Debug, Clone)]
 pub struct LoadReport {
     /// Concurrent closed-loop submitters (1 for an open-loop run — a
     /// single generator thread owns the arrival process).
     pub clients: usize,
+    /// Total completions: `ok_requests + shed + expired + failed`.
     pub requests: usize,
+    /// Requests that returned a tensor; the latency percentiles cover
+    /// exactly these.
+    pub ok_requests: usize,
+    /// Refused at admission ([`ServeError::Shed`]).
+    pub shed: usize,
+    /// Failed fast on a passed deadline ([`ServeError::DeadlineExceeded`]).
+    pub expired: usize,
+    /// Backend/other failures (including bounded-wait timeouts in the
+    /// open-loop driver).
+    pub failed: usize,
+    /// Offered rows (submitted, whether or not they were served).
     pub rows: usize,
+    /// Percentiles over successful requests only; `NaN` when none
+    /// succeeded (the percentile helper is never handed an empty set).
     pub p50_ms: f64,
     pub p95_ms: f64,
+    pub p99_ms: f64,
     pub mean_ms: f64,
     pub min_ms: f64,
     pub wall_s: f64,
+    /// Offered-row throughput over the wall clock.
     pub rows_per_s: f64,
+    /// Successful requests per second — the goodput an overload run is
+    /// judged by.
+    pub goodput_rps: f64,
     pub batches: usize,
     pub padded_rows: usize,
     /// Mean per-request queue wait (submit to dispatch), ms.
@@ -911,9 +1254,17 @@ impl LoadReport {
         } else {
             format!("{:>3} clients", self.clients)
         };
+        let errs = if self.shed + self.expired + self.failed > 0 {
+            format!(
+                "  [ok {} shed {} exp {} fail {}]",
+                self.ok_requests, self.shed, self.expired, self.failed
+            )
+        } else {
+            String::new()
+        };
         format!(
             "{name:<26} {load}  p50 {:>8.2}ms  p95 {:>8.2}ms  {:>9.1} rows/s  \
-             {:>4} batches ({} padded, occ {:>4.2}, q {:>6.2}ms + svc {:>6.2}ms)",
+             {:>4} batches ({} padded, occ {:>4.2}, q {:>6.2}ms + svc {:>6.2}ms){errs}",
             self.p50_ms,
             self.p95_ms,
             self.rows_per_s,
@@ -930,13 +1281,42 @@ impl LoadReport {
     pub fn padded_per_batch(&self) -> f64 {
         self.padded_rows as f64 / self.batches.max(1) as f64
     }
+
+    /// Fraction of completions refused at admission.
+    pub fn shed_rate(&self) -> f64 {
+        self.shed as f64 / self.requests.max(1) as f64
+    }
 }
 
-/// Assemble a [`LoadReport`] from raw per-request latencies plus the
-/// session-counter delta over the run — shared by both load modes so
-/// every report computes its quantiles and telemetry identically.
+/// Per-run failure tallies, classified from typed [`ServeError`]s.
+#[derive(Debug, Default, Clone, Copy)]
+struct Outcomes {
+    shed: usize,
+    expired: usize,
+    failed: usize,
+}
+
+impl Outcomes {
+    fn note(&mut self, e: &ServeError) {
+        match e {
+            ServeError::Shed { .. } => self.shed += 1,
+            ServeError::DeadlineExceeded => self.expired += 1,
+            _ => self.failed += 1,
+        }
+    }
+
+    fn total(&self) -> usize {
+        self.shed + self.expired + self.failed
+    }
+}
+
+/// Assemble a [`LoadReport`] from raw per-request success latencies, the
+/// classified failure tallies, and the session-counter delta over the run
+/// — shared by both load modes so every report computes its quantiles and
+/// telemetry identically.
 fn load_report(
     mut lat: Vec<f64>,
+    out: Outcomes,
     rows: usize,
     wall_s: f64,
     before: ServeStats,
@@ -945,26 +1325,48 @@ fn load_report(
     arrival_rps: f64,
 ) -> Result<LoadReport> {
     use crate::util::stats::{percentile, sort_samples};
-    anyhow::ensure!(!lat.is_empty(), "drive: no requests completed");
+    anyhow::ensure!(
+        !lat.is_empty() || out.total() > 0,
+        "drive: no requests completed"
+    );
     sort_samples(&mut lat);
-    let requests = after.requests - before.requests;
     let batches = after.batches - before.batches;
     let padded_rows = after.padded_rows - before.padded_rows;
     let d_rows = after.rows - before.rows;
+    let d_requests = after.requests - before.requests;
+    // percentiles cover successes only — never hand percentile() an
+    // empty set; an all-failure run reports NaN, not a fabricated number
+    let (p50, p95, p99, mean, min) = if lat.is_empty() {
+        (f64::NAN, f64::NAN, f64::NAN, f64::NAN, f64::NAN)
+    } else {
+        (
+            percentile(&lat, 0.5),
+            percentile(&lat, 0.95),
+            percentile(&lat, 0.99),
+            lat.iter().sum::<f64>() / lat.len() as f64,
+            lat[0],
+        )
+    };
     Ok(LoadReport {
         clients,
-        requests: lat.len(),
+        requests: lat.len() + out.total(),
+        ok_requests: lat.len(),
+        shed: out.shed,
+        expired: out.expired,
+        failed: out.failed,
         rows,
-        p50_ms: percentile(&lat, 0.5),
-        p95_ms: percentile(&lat, 0.95),
-        mean_ms: lat.iter().sum::<f64>() / lat.len() as f64,
-        min_ms: lat[0],
+        p50_ms: p50,
+        p95_ms: p95,
+        p99_ms: p99,
+        mean_ms: mean,
+        min_ms: min,
         wall_s,
         rows_per_s: rows as f64 / wall_s.max(1e-9),
+        goodput_rps: lat.len() as f64 / wall_s.max(1e-9),
         batches,
         padded_rows,
         queue_ms: (after.queue_wait_us - before.queue_wait_us) as f64 / 1e3
-            / requests.max(1) as f64,
+            / d_requests.max(1) as f64,
         service_ms: (after.service_us - before.service_us) as f64 / 1e3
             / batches.max(1) as f64,
         occupancy: occupancy_of(d_rows, padded_rows),
@@ -977,7 +1379,9 @@ fn load_report(
 /// `requests_per_client` requests produced by `make_input(client, i)`.
 /// Every ticket is awaited by its submitter (closed-loop load: offered
 /// load self-throttles to service speed, so the queue never grows beyond
-/// the client count).
+/// the client count).  Typed failures (shed under an SLO'd session,
+/// backend errors) are tallied per category instead of aborting the run;
+/// the call errors only if *nothing* completed.
 pub fn drive<F>(
     session: &Session,
     clients: usize,
@@ -989,53 +1393,59 @@ where
 {
     let before = session.stats();
     let lat = Mutex::new(Vec::with_capacity(clients * requests_per_client));
+    let out = Mutex::new(Outcomes::default());
     let rows = AtomicUsize::new(0);
-    let fail: Mutex<Option<anyhow::Error>> = Mutex::new(None);
     let t0 = Instant::now();
     std::thread::scope(|s| {
         for c in 0..clients {
-            let (lat, rows, fail, make_input) = (&lat, &rows, &fail, &make_input);
+            let (lat, out, rows, make_input) = (&lat, &out, &rows, &make_input);
             s.spawn(move || {
                 for i in 0..requests_per_client {
                     let (x, t) = make_input(c, i);
                     rows.fetch_add(x.dims[0], Ordering::Relaxed);
                     let tq = Instant::now();
-                    match session.submit_with(x, t).and_then(Ticket::wait) {
+                    let res = session
+                        .submit_deadline(x, t, None)
+                        .and_then(Ticket::wait_coded);
+                    match res {
                         Ok(_) => lat
                             .lock()
                             .unwrap()
                             .push(tq.elapsed().as_secs_f64() * 1e3),
-                        Err(e) => {
-                            *fail.lock().unwrap() = Some(e);
-                            return;
-                        }
+                        Err(e) => out.lock().unwrap().note(&e),
                     }
                 }
             });
         }
     });
-    if let Some(e) = fail.into_inner().unwrap() {
-        return Err(e);
-    }
     let wall_s = t0.elapsed().as_secs_f64();
     let lat = lat.into_inner().unwrap();
+    let out = out.into_inner().unwrap();
     let rows = rows.load(Ordering::Relaxed);
-    load_report(lat, rows, wall_s, before, session.stats(), clients, 0.0)
+    load_report(lat, out, rows, wall_s, before, session.stats(), clients, 0.0)
 }
+
+/// Hard cap on how long the open-loop driver waits for any single ticket
+/// — a wedged batch turns into a counted failure, never a hung driver.
+const OPEN_LOOP_WAIT_CAP: Duration = Duration::from_secs(30);
 
 /// Open-loop load: submit `requests` requests on a deterministic
 /// Poisson-ish arrival schedule at `rps` requests/second (exponential
 /// inter-arrival gaps from the seeded [`crate::util::rng::Rng`]), without
 /// waiting for completions in between.  Unlike the closed loop, arrivals
 /// do not self-throttle to service speed, so this is the mode that
-/// exposes the padding/latency tradeoff of the batching window policies.
+/// exposes the padding/latency tradeoff of the batching window policies —
+/// and, with a deadline, the shed/serve split under overload.
 ///
 /// Per-request latency is completion-to-arrival (queue wait included;
 /// the completion instant is captured at fulfillment, so awaiting the
 /// tickets after the generation loop costs nothing).  If the bounded
 /// queue fills, `submit` blocks the generator — the backpressure shows up
 /// as schedule lag and in the latency numbers, exactly as a real bounded
-/// ingress buffer would.
+/// ingress buffer would (deadlined requests are shed instead of
+/// blocking).  Every ticket wait is bounded by [`OPEN_LOOP_WAIT_CAP`] via
+/// `Ticket::wait_done_timeout`, so a wedged batch becomes a counted
+/// failure rather than a hung driver.
 pub fn drive_open<F>(
     session: &Session,
     rps: f64,
@@ -1046,10 +1456,29 @@ pub fn drive_open<F>(
 where
     F: Fn(usize, usize) -> (Tensor, Option<Tensor>),
 {
+    drive_open_deadline(session, rps, requests, seed, None, make_input)
+}
+
+/// [`drive_open`] with a per-request deadline: each arrival is submitted
+/// with `deadline = arrival + d`, so admission control and queue expiry
+/// engage exactly as they would for network clients.  Shed, expired, and
+/// failed completions are tallied separately from the success latencies.
+pub fn drive_open_deadline<F>(
+    session: &Session,
+    rps: f64,
+    requests: usize,
+    seed: u64,
+    deadline: Option<Duration>,
+    make_input: F,
+) -> Result<LoadReport>
+where
+    F: Fn(usize, usize) -> (Tensor, Option<Tensor>),
+{
     anyhow::ensure!(rps > 0.0, "drive_open: arrival rate must be positive");
     let before = session.stats();
     let mut rng = crate::util::rng::Rng::new(seed);
     let mut pending = Vec::with_capacity(requests);
+    let mut out = Outcomes::default();
     let mut rows = 0usize;
     let mut sched_s = 0.0f64;
     let t0 = Instant::now();
@@ -1063,16 +1492,24 @@ where
         let (x, t) = make_input(0, i);
         rows += x.dims[0];
         let arrival = Instant::now();
-        pending.push((session.submit_with(x, t)?, arrival));
+        match session.submit_deadline(x, t, deadline.map(|d| arrival + d)) {
+            Ok(ticket) => pending.push((ticket, arrival)),
+            Err(e) => out.note(&e),
+        }
     }
     let mut lat = Vec::with_capacity(pending.len());
     for (ticket, arrival) in pending {
-        let (res, done) = ticket.wait_done();
-        res?;
-        lat.push(done.saturating_duration_since(arrival).as_secs_f64() * 1e3);
+        match ticket.wait_done_timeout(OPEN_LOOP_WAIT_CAP) {
+            Ok((Ok(_), done)) => {
+                lat.push(done.saturating_duration_since(arrival).as_secs_f64() * 1e3)
+            }
+            Ok((Err(e), _)) => out.note(&e),
+            // bounded wait expired: the batch is wedged — count it, move on
+            Err(_stale) => out.failed += 1,
+        }
     }
     let wall_s = t0.elapsed().as_secs_f64();
-    load_report(lat, rows, wall_s, before, session.stats(), 1, rps)
+    load_report(lat, out, rows, wall_s, before, session.stats(), 1, rps)
 }
 
 /// Slice the classify eval stream into single-row `(x, y)` request pairs
@@ -1131,17 +1568,7 @@ mod tests {
 
     #[test]
     fn occupancy_derivation() {
-        let mut s = ServeStats {
-            requests: 0,
-            rows: 0,
-            batches: 0,
-            padded_rows: 0,
-            max_queue: 0,
-            expired_windows: 0,
-            queue_wait_us: 0,
-            service_us: 0,
-            cur_window_us: 0,
-        };
+        let mut s = ServeStats::default();
         assert_eq!(s.occupancy(), 1.0);
         s.rows = 6;
         s.padded_rows = 2;

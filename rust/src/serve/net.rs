@@ -1,0 +1,956 @@
+//! `serve::net` — the TCP serving tier in front of [`Session`]: a small
+//! acceptor plus a connection-handler pool speaking the length-prefixed
+//! binary protocol of [`super::proto`].
+//!
+//! Robustness is the design center; the tier must *degrade gracefully*
+//! rather than fall over:
+//!
+//! * **Deadlines propagate.**  Each `Infer` frame carries a relative
+//!   `deadline_us` budget; the handler turns it into an absolute
+//!   [`Instant`] at receipt and hands it to
+//!   [`Session::submit_deadline`], so admission control can shed at the
+//!   door ([`ErrCode::Shed`]) and the worker fails expired requests fast
+//!   ([`ErrCode::DeadlineExceeded`]) instead of serving them late.
+//! * **Every wait is bounded.**  Ticket waits are capped at the deadline
+//!   plus a small grace (or [`NetCfg::max_wait_ms`] without one), reads
+//!   are capped per frame ([`NetCfg::frame_stall_ms`] — a peer that
+//!   stops mid-frame is disconnected, the slow-loris defense), writes by
+//!   [`NetCfg::write_timeout_ms`].  No client can wedge a handler.
+//! * **Malformed input never kills the process.**  A frame that decodes
+//!   to garbage gets a typed [`ErrCode::BadFrame`] reply; the connection
+//!   survives when framing is intact (the length prefix was honest) and
+//!   is closed when it is not (wrong magic / hostile length — there is
+//!   no resync point in a length-prefixed stream).  Handler panics are
+//!   caught per connection: counted, connection dropped, handler thread
+//!   lives on.
+//! * **Graceful drain.**  [`NetServer::shutdown`] stops the acceptor,
+//!   lets in-flight requests finish, sends [`ErrCode::ShuttingDown`] to
+//!   idle or still-queued connections, and joins every thread.
+//!
+//! [`drive_net`] is the open-loop loopback load driver (deterministic
+//! Poisson arrivals over N connections) the `serving_net` bench and the
+//! overload tests use; [`NetClient`] is the minimal blocking client.
+
+use std::io::{self, ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+use crate::util::par;
+use crate::util::tensor::Tensor;
+
+use super::proto::{
+    self, DecodeError, ErrCode, Request, Response, MAX_FRAME,
+};
+use super::Session;
+
+// ---------------------------------------------------------------------------
+// Config
+// ---------------------------------------------------------------------------
+
+/// Sizing and timeout knobs of the network tier.  Every wait a client
+/// can influence is bounded by one of these.
+#[derive(Debug, Clone, Copy)]
+pub struct NetCfg {
+    /// Connection-handler threads — the cap on concurrently *served*
+    /// connections (excess accepted connections queue).
+    pub conn_workers: usize,
+    /// Accepted-connection queue bound; beyond it new connections get a
+    /// best-effort `Shed` frame and are dropped.
+    pub backlog: usize,
+    /// Idle poll granularity: how often a handler blocked on a quiet
+    /// connection wakes to check for shutdown, ms.
+    pub idle_tick_ms: u64,
+    /// Once a frame has started arriving, the whole frame must land
+    /// within this budget or the connection is dropped (slow-loris
+    /// defense), ms.
+    pub frame_stall_ms: u64,
+    /// Socket write timeout for responses, ms.
+    pub write_timeout_ms: u64,
+    /// Ticket-wait cap for requests *without* a deadline, ms — a wedged
+    /// batch becomes a typed error, never a hung handler.
+    pub max_wait_ms: u64,
+    /// Server-imposed deadline for frames that carry none (0 = none).
+    pub default_deadline_ms: u64,
+    /// Extra slack past a request's deadline before the handler stops
+    /// waiting on its ticket, ms.  Covers the gap between "the worker
+    /// expired it" and "the handler noticed".
+    pub deadline_grace_ms: u64,
+}
+
+impl Default for NetCfg {
+    fn default() -> Self {
+        NetCfg {
+            conn_workers: 4,
+            backlog: 64,
+            idle_tick_ms: 50,
+            frame_stall_ms: 2_000,
+            write_timeout_ms: 2_000,
+            max_wait_ms: 30_000,
+            default_deadline_ms: 0,
+            deadline_grace_ms: 250,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Server
+// ---------------------------------------------------------------------------
+
+/// Cumulative network-tier counters (monotonic; see [`NetServer::stats`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct NetStats {
+    /// Connections accepted.
+    pub accepted: usize,
+    /// Connections refused with `Shed` because the backlog was full.
+    pub refused: usize,
+    /// Request frames fully read.
+    pub frames: usize,
+    /// Response frames written (every read frame gets exactly one).
+    pub replies: usize,
+    /// Malformed bodies answered with `BadFrame` (connection kept).
+    pub bad_frames: usize,
+    /// Connections dropped on IO errors, stalls, or lost framing.
+    pub conn_errors: usize,
+    /// Handler panics caught (connection dropped, thread survived).
+    pub handler_panics: usize,
+}
+
+#[derive(Default)]
+struct NetStatsInner {
+    accepted: AtomicUsize,
+    refused: AtomicUsize,
+    frames: AtomicUsize,
+    replies: AtomicUsize,
+    bad_frames: AtomicUsize,
+    conn_errors: AtomicUsize,
+    handler_panics: AtomicUsize,
+}
+
+struct NetInner {
+    session: Arc<Session>,
+    cfg: NetCfg,
+    shutdown: AtomicBool,
+    /// Accepted connections waiting for a handler (bounded by
+    /// `cfg.backlog`).
+    conns: Mutex<Vec<TcpStream>>,
+    conn_cv: Condvar,
+    stats: NetStatsInner,
+}
+
+/// A running network serving tier: acceptor thread + handler pool over
+/// one shared [`Session`].  [`NetServer::shutdown`] (or drop) drains
+/// gracefully.
+pub struct NetServer {
+    inner: Arc<NetInner>,
+    acceptor: Option<JoinHandle<()>>,
+    pool: Option<par::Pool>,
+    addr: SocketAddr,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral test port) and
+    /// start serving `session` over it.
+    pub fn bind(session: Arc<Session>, addr: &str, cfg: NetCfg) -> Result<NetServer> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("serve-net: cannot bind {addr}"))?;
+        let local = listener.local_addr().context("serve-net: local_addr")?;
+        listener
+            .set_nonblocking(true)
+            .context("serve-net: nonblocking acceptor")?;
+        let inner = Arc::new(NetInner {
+            session,
+            cfg,
+            shutdown: AtomicBool::new(false),
+            conns: Mutex::new(Vec::new()),
+            conn_cv: Condvar::new(),
+            stats: NetStatsInner::default(),
+        });
+        let acc_inner = Arc::clone(&inner);
+        let acceptor = std::thread::Builder::new()
+            .name("lm-net-accept".into())
+            .spawn(move || accept_loop(&acc_inner, listener))
+            .context("serve-net: spawn acceptor")?;
+        let pool_inner = Arc::clone(&inner);
+        let pool = par::Pool::spawn(cfg.conn_workers.max(1), "lm-net-conn", move |_| {
+            handler_loop(&pool_inner);
+        });
+        Ok(NetServer { inner, acceptor: Some(acceptor), pool: Some(pool), addr: local })
+    }
+
+    /// The bound address (resolves the ephemeral port of `":0"` binds).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn stats(&self) -> NetStats {
+        let s = &self.inner.stats;
+        NetStats {
+            accepted: s.accepted.load(Ordering::Relaxed),
+            refused: s.refused.load(Ordering::Relaxed),
+            frames: s.frames.load(Ordering::Relaxed),
+            replies: s.replies.load(Ordering::Relaxed),
+            bad_frames: s.bad_frames.load(Ordering::Relaxed),
+            conn_errors: s.conn_errors.load(Ordering::Relaxed),
+            handler_panics: s.handler_panics.load(Ordering::Relaxed),
+        }
+    }
+
+    /// The served session (e.g. for closing it after the net tier drains).
+    pub fn session(&self) -> &Arc<Session> {
+        &self.inner.session
+    }
+
+    /// Graceful drain: stop accepting, finish in-flight requests, send
+    /// [`ErrCode::ShuttingDown`] to idle and still-queued connections,
+    /// join every thread.  The underlying [`Session`] is left open (it
+    /// may be shared); close it after this returns.
+    pub fn shutdown(mut self) {
+        self.drain();
+    }
+
+    fn drain(&mut self) {
+        self.inner.shutdown.store(true, Ordering::SeqCst);
+        self.inner.conn_cv.notify_all();
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join(); // drops the listener: no new connections
+        }
+        if let Some(mut p) = self.pool.take() {
+            p.join(); // handlers notice the flag at their next idle tick
+        }
+        // connections that never reached a handler get a typed goodbye
+        let stragglers = std::mem::take(&mut *self.inner.conns.lock().unwrap());
+        for mut s in stragglers {
+            let _ = s.set_write_timeout(Some(Duration::from_millis(
+                self.inner.cfg.write_timeout_ms.max(1),
+            )));
+            let _ = write_frame(
+                &mut s,
+                &proto::encode_response(&Response::Error {
+                    id: 0,
+                    code: ErrCode::ShuttingDown,
+                    msg: "server is draining".into(),
+                }),
+            );
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.drain();
+    }
+}
+
+fn accept_loop(inner: &NetInner, listener: TcpListener) {
+    while !inner.shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                inner.stats.accepted.fetch_add(1, Ordering::Relaxed);
+                let mut g = inner.conns.lock().unwrap();
+                if g.len() >= inner.cfg.backlog.max(1) {
+                    drop(g);
+                    inner.stats.refused.fetch_add(1, Ordering::Relaxed);
+                    refuse(inner, stream);
+                    continue;
+                }
+                g.push(stream);
+                drop(g);
+                inner.conn_cv.notify_one();
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(
+                    inner.cfg.idle_tick_ms.clamp(1, 50),
+                ));
+            }
+            Err(_) => {
+                // transient accept failure (EMFILE, aborted handshake...):
+                // count it and keep accepting — never kill the acceptor
+                inner.stats.conn_errors.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+    }
+}
+
+/// Best-effort typed refusal for a connection the backlog cannot hold.
+fn refuse(inner: &NetInner, mut stream: TcpStream) {
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(
+        inner.cfg.write_timeout_ms.max(1),
+    )));
+    let _ = write_frame(
+        &mut stream,
+        &proto::encode_response(&Response::Error {
+            id: 0,
+            code: ErrCode::Shed,
+            msg: "connection backlog full".into(),
+        }),
+    );
+}
+
+fn handler_loop(inner: &NetInner) {
+    loop {
+        let stream = {
+            let mut g = inner.conns.lock().unwrap();
+            loop {
+                if let Some(s) = g.pop() {
+                    break s;
+                }
+                if inner.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                g = inner.conn_cv.wait(g).unwrap();
+            }
+        };
+        // fault isolation: a panic while serving one connection is
+        // counted and drops that connection only — the handler thread
+        // (and every other connection) lives on
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            handle_conn(inner, stream)
+        }));
+        if r.is_err() {
+            inner.stats.handler_panics.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Framed IO
+// ---------------------------------------------------------------------------
+
+enum Got {
+    /// The buffer was filled.
+    Data,
+    /// Nothing had arrived when the idle tick expired (only possible
+    /// when `mid_frame` is false).
+    Idle,
+    /// The peer closed cleanly on a frame boundary.
+    Closed,
+}
+
+/// Fill `buf` from `s` (whose read timeout is the idle tick).
+///
+/// * `mid_frame == false`: a timeout before the first byte is a quiet
+///   connection — returns [`Got::Idle`] so the caller can poll shutdown.
+/// * once any byte has arrived (or `mid_frame == true`), the rest must
+///   land within `stall_cap` or the read fails with `TimedOut` — a peer
+///   that dribbles a frame forever cannot pin the handler.
+fn read_exact_or_idle(
+    s: &mut TcpStream,
+    buf: &mut [u8],
+    mid_frame: bool,
+    stall_cap: Duration,
+) -> io::Result<Got> {
+    let mut filled = 0usize;
+    let mut started: Option<Instant> = mid_frame.then(Instant::now);
+    while filled < buf.len() {
+        match s.read(&mut buf[filled..]) {
+            Ok(0) => {
+                return if filled == 0 && !mid_frame {
+                    Ok(Got::Closed)
+                } else {
+                    Err(io::Error::new(
+                        ErrorKind::UnexpectedEof,
+                        "connection closed mid-frame",
+                    ))
+                };
+            }
+            Ok(n) => {
+                filled += n;
+                started.get_or_insert_with(Instant::now);
+            }
+            Err(e)
+                if e.kind() == ErrorKind::WouldBlock
+                    || e.kind() == ErrorKind::TimedOut =>
+            {
+                match started {
+                    None => return Ok(Got::Idle),
+                    Some(t0) if t0.elapsed() >= stall_cap => {
+                        return Err(io::Error::new(
+                            ErrorKind::TimedOut,
+                            "frame stalled mid-read",
+                        ));
+                    }
+                    Some(_) => {} // keep waiting out the stall budget
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(Got::Data)
+}
+
+/// Write one `u32 LE length + body` frame.
+fn write_frame(s: &mut TcpStream, body: &[u8]) -> io::Result<()> {
+    debug_assert!(body.len() <= MAX_FRAME);
+    s.write_all(&(body.len() as u32).to_le_bytes())?;
+    s.write_all(body)?;
+    s.flush()
+}
+
+/// Blocking read of one frame (client side / tests): length prefix, cap
+/// check, body.  `Ok(None)` on clean EOF.
+pub(crate) fn read_frame_blocking(s: &mut TcpStream) -> io::Result<Option<Vec<u8>>> {
+    let mut hdr = [0u8; 4];
+    let mut at = 0usize;
+    while at < 4 {
+        match s.read(&mut hdr[at..]) {
+            Ok(0) if at == 0 => return Ok(None),
+            Ok(0) => {
+                return Err(io::Error::new(
+                    ErrorKind::UnexpectedEof,
+                    "connection closed mid-header",
+                ))
+            }
+            Ok(n) => at += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    let len = u32::from_le_bytes(hdr) as usize;
+    if len > MAX_FRAME {
+        return Err(io::Error::new(
+            ErrorKind::InvalidData,
+            format!("frame length {len} exceeds MAX_FRAME {MAX_FRAME}"),
+        ));
+    }
+    let mut body = vec![0u8; len];
+    s.read_exact(&mut body)?;
+    Ok(Some(body))
+}
+
+// ---------------------------------------------------------------------------
+// Connection handling
+// ---------------------------------------------------------------------------
+
+fn handle_conn(inner: &NetInner, mut stream: TcpStream) {
+    let cfg = &inner.cfg;
+    let _ = stream.set_nodelay(true);
+    if stream
+        .set_read_timeout(Some(Duration::from_millis(cfg.idle_tick_ms.max(1))))
+        .is_err()
+        || stream
+            .set_write_timeout(Some(Duration::from_millis(cfg.write_timeout_ms.max(1))))
+            .is_err()
+    {
+        inner.stats.conn_errors.fetch_add(1, Ordering::Relaxed);
+        return;
+    }
+    let stall = Duration::from_millis(cfg.frame_stall_ms.max(1));
+    loop {
+        // -- length prefix (idle-tick aware) --------------------------------
+        let mut hdr = [0u8; 4];
+        match read_exact_or_idle(&mut stream, &mut hdr, false, stall) {
+            Ok(Got::Idle) => {
+                if inner.shutdown.load(Ordering::SeqCst) {
+                    let _ = send(inner, &mut stream, &Response::Error {
+                        id: 0,
+                        code: ErrCode::ShuttingDown,
+                        msg: "server is draining".into(),
+                    });
+                    return;
+                }
+                continue;
+            }
+            Ok(Got::Closed) => return,
+            Ok(Got::Data) => {}
+            Err(_) => {
+                inner.stats.conn_errors.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+        }
+        let len = u32::from_le_bytes(hdr) as usize;
+        if len > MAX_FRAME {
+            // a hostile length prefix breaks framing trust: typed
+            // refusal, then close — never allocate the claimed buffer
+            inner.stats.bad_frames.fetch_add(1, Ordering::Relaxed);
+            let _ = send(inner, &mut stream, &Response::Error {
+                id: 0,
+                code: ErrCode::BadFrame,
+                msg: format!("frame length {len} exceeds MAX_FRAME {MAX_FRAME}"),
+            });
+            return;
+        }
+        // -- body (mid-frame: stall budget applies) -------------------------
+        let mut body = vec![0u8; len];
+        match read_exact_or_idle(&mut stream, &mut body, true, stall) {
+            Ok(Got::Data) => {}
+            _ => {
+                // disconnect or stall mid-frame; nothing to reply to
+                inner.stats.conn_errors.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+        }
+        inner.stats.frames.fetch_add(1, Ordering::Relaxed);
+        // -- decode ---------------------------------------------------------
+        let req = match proto::decode_request(&body) {
+            Ok(r) => r,
+            Err(DecodeError::Malformed(m)) => {
+                // framing was honest (the length prefix matched), so the
+                // stream is still in sync: reject the frame, keep the
+                // connection
+                inner.stats.bad_frames.fetch_add(1, Ordering::Relaxed);
+                if send(inner, &mut stream, &Response::Error {
+                    id: 0,
+                    code: ErrCode::BadFrame,
+                    msg: m,
+                })
+                .is_err()
+                {
+                    return;
+                }
+                continue;
+            }
+            Err(DecodeError::NotOurs(m)) => {
+                // wrong magic/version: this peer does not speak our
+                // protocol — one typed refusal, then close
+                inner.stats.bad_frames.fetch_add(1, Ordering::Relaxed);
+                let _ = send(inner, &mut stream, &Response::Error {
+                    id: 0,
+                    code: ErrCode::BadFrame,
+                    msg: m,
+                });
+                return;
+            }
+        };
+        // -- serve ----------------------------------------------------------
+        let resp = match req {
+            Request::Stats { id } => Response::Stats {
+                id,
+                json: stats_json(inner),
+            },
+            Request::Infer { id, deadline_us, x, t } => {
+                serve_infer(inner, id, deadline_us, x, t)
+            }
+        };
+        if send(inner, &mut stream, &resp).is_err() {
+            return;
+        }
+        if inner.shutdown.load(Ordering::SeqCst) {
+            // drain: finish the request in flight, then say goodbye
+            let _ = send(inner, &mut stream, &Response::Error {
+                id: 0,
+                code: ErrCode::ShuttingDown,
+                msg: "server is draining".into(),
+            });
+            return;
+        }
+    }
+}
+
+/// One inference through the session, every failure mapped to its typed
+/// wire code.  The ticket wait is bounded by the request deadline plus
+/// grace (or `max_wait_ms` without one) — a wedged batch becomes a typed
+/// error frame, never a hung handler.
+fn serve_infer(
+    inner: &NetInner,
+    id: u64,
+    deadline_us: u64,
+    x: Tensor,
+    t: Option<Tensor>,
+) -> Response {
+    let cfg = &inner.cfg;
+    let now = Instant::now();
+    let deadline_us = if deadline_us > 0 {
+        deadline_us
+    } else {
+        cfg.default_deadline_ms.saturating_mul(1_000)
+    };
+    let deadline = (deadline_us > 0).then(|| now + Duration::from_micros(deadline_us));
+    let ticket = match inner.session.submit_deadline(x, t, deadline) {
+        Ok(tk) => tk,
+        Err(e) => {
+            return Response::Error {
+                id,
+                code: ErrCode::of(&e),
+                msg: e.to_string(),
+            }
+        }
+    };
+    let cap = match deadline {
+        Some(d) => {
+            d.saturating_duration_since(Instant::now())
+                + Duration::from_millis(cfg.deadline_grace_ms)
+        }
+        None => Duration::from_millis(cfg.max_wait_ms.max(1)),
+    };
+    match ticket.wait_timeout_coded(cap) {
+        Ok(Ok(y)) => Response::Tensor { id, y },
+        Ok(Err(e)) => Response::Error {
+            id,
+            code: ErrCode::of(&e),
+            msg: e.to_string(),
+        },
+        Err(_stale) => {
+            // the wait cap expired: with a deadline the request is
+            // (over)due — report it expired; without one the batch is
+            // wedged — that's a backend failure
+            let (code, msg) = if deadline.is_some() {
+                (
+                    ErrCode::DeadlineExceeded,
+                    "request deadline exceeded before completion".to_string(),
+                )
+            } else {
+                (
+                    ErrCode::BackendFailed,
+                    format!("request timed out after {}ms", cfg.max_wait_ms),
+                )
+            };
+            Response::Error { id, code, msg }
+        }
+    }
+}
+
+fn send(inner: &NetInner, stream: &mut TcpStream, resp: &Response) -> io::Result<()> {
+    let r = write_frame(stream, &proto::encode_response(resp));
+    match &r {
+        Ok(()) => {
+            inner.stats.replies.fetch_add(1, Ordering::Relaxed);
+        }
+        Err(_) => {
+            inner.stats.conn_errors.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    r
+}
+
+/// The `/stats` reply: the session's [`super::ServeStats`] (shed /
+/// expired / failed separation included) plus the net-tier counters and
+/// live queue telemetry, as one flat JSON object.
+fn stats_json(inner: &NetInner) -> String {
+    let s = inner.session.stats();
+    let n = &inner.stats;
+    Json::obj(vec![
+        ("requests", Json::num(s.requests as f64)),
+        ("rows", Json::num(s.rows as f64)),
+        ("batches", Json::num(s.batches as f64)),
+        ("padded_rows", Json::num(s.padded_rows as f64)),
+        ("max_queue", Json::num(s.max_queue as f64)),
+        ("expired_windows", Json::num(s.expired_windows as f64)),
+        ("cur_window_us", Json::num(s.cur_window_us as f64)),
+        ("shed_requests", Json::num(s.shed_requests as f64)),
+        ("expired_requests", Json::num(s.expired_requests as f64)),
+        ("failed_batches", Json::num(s.failed_batches as f64)),
+        ("queue_depth", Json::num(inner.session.queue_depth() as f64)),
+        (
+            "ewma_service_us",
+            Json::num(inner.session.ewma_service_us() as f64),
+        ),
+        (
+            "net",
+            Json::obj(vec![
+                ("accepted", Json::num(n.accepted.load(Ordering::Relaxed) as f64)),
+                ("refused", Json::num(n.refused.load(Ordering::Relaxed) as f64)),
+                ("frames", Json::num(n.frames.load(Ordering::Relaxed) as f64)),
+                ("replies", Json::num(n.replies.load(Ordering::Relaxed) as f64)),
+                (
+                    "bad_frames",
+                    Json::num(n.bad_frames.load(Ordering::Relaxed) as f64),
+                ),
+                (
+                    "conn_errors",
+                    Json::num(n.conn_errors.load(Ordering::Relaxed) as f64),
+                ),
+                (
+                    "handler_panics",
+                    Json::num(n.handler_panics.load(Ordering::Relaxed) as f64),
+                ),
+            ]),
+        ),
+    ])
+    .to_string()
+}
+
+// ---------------------------------------------------------------------------
+// Client
+// ---------------------------------------------------------------------------
+
+/// Minimal blocking client for the wire protocol — one request in flight
+/// per connection (send, then wait for the matching reply).
+pub struct NetClient {
+    stream: TcpStream,
+    next_id: u64,
+}
+
+impl NetClient {
+    pub fn connect(addr: SocketAddr) -> Result<NetClient> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("serve-net client: connect {addr}"))?;
+        let _ = stream.set_nodelay(true);
+        stream
+            .set_read_timeout(Some(Duration::from_secs(60)))
+            .context("serve-net client: read timeout")?;
+        stream
+            .set_write_timeout(Some(Duration::from_secs(10)))
+            .context("serve-net client: write timeout")?;
+        Ok(NetClient { stream, next_id: 1 })
+    }
+
+    fn roundtrip(&mut self, req: &Request) -> Result<Response> {
+        write_frame(&mut self.stream, &proto::encode_request(req))
+            .context("serve-net client: write")?;
+        loop {
+            let body = read_frame_blocking(&mut self.stream)
+                .context("serve-net client: read")?
+                .context("server closed the connection")?;
+            let resp = proto::decode_response(&body)
+                .map_err(|e| anyhow::anyhow!("bad response frame: {e}"))?;
+            // an unsolicited id-0 drain notice can interleave with a
+            // pending reply; surface it only if it IS the reply
+            if resp.id() == req.id() || resp.id() == 0 {
+                return Ok(resp);
+            }
+        }
+    }
+
+    /// One inference round-trip.  The outer `Result` is transport-level
+    /// (IO, protocol); the inner one is the server's typed verdict.
+    pub fn infer_deadline(
+        &mut self,
+        x: &Tensor,
+        t: Option<&Tensor>,
+        deadline: Option<Duration>,
+    ) -> Result<std::result::Result<Tensor, (ErrCode, String)>> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let req = Request::Infer {
+            id,
+            deadline_us: deadline.map_or(0, |d| d.as_micros() as u64),
+            x: x.clone(),
+            t: t.cloned(),
+        };
+        match self.roundtrip(&req)? {
+            Response::Tensor { y, .. } => Ok(Ok(y)),
+            Response::Error { code, msg, .. } => Ok(Err((code, msg))),
+            Response::Stats { .. } => {
+                anyhow::bail!("serve-net client: stats reply to an infer request")
+            }
+        }
+    }
+
+    pub fn infer(&mut self, x: &Tensor, t: Option<&Tensor>) -> Result<Tensor> {
+        match self.infer_deadline(x, t, None)? {
+            Ok(y) => Ok(y),
+            Err((code, msg)) => anyhow::bail!("server error [{code}]: {msg}"),
+        }
+    }
+
+    /// Fetch the server's cumulative stats as parsed JSON.
+    pub fn stats(&mut self) -> Result<Json> {
+        let id = self.next_id;
+        self.next_id += 1;
+        match self.roundtrip(&Request::Stats { id })? {
+            Response::Stats { json, .. } => {
+                Json::parse(&json).map_err(|e| anyhow::anyhow!("bad stats json: {e}"))
+            }
+            Response::Error { code, msg, .. } => {
+                anyhow::bail!("server error [{code}]: {msg}")
+            }
+            Response::Tensor { .. } => {
+                anyhow::bail!("serve-net client: tensor reply to a stats request")
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Open-loop network load driver
+// ---------------------------------------------------------------------------
+
+/// One open-loop run against a [`NetServer`] over loopback: goodput and
+/// p99-of-admitted next to the shed/expired/failed separation.  The
+/// `serving_net` bench and the overload tests read these.
+#[derive(Debug, Clone)]
+pub struct NetLoadReport {
+    pub arrival_rps: f64,
+    pub conns: usize,
+    /// Total requests completed (= ok + shed + expired + failed).
+    pub requests: usize,
+    pub ok: usize,
+    pub shed: usize,
+    pub expired: usize,
+    pub failed: usize,
+    pub wall_s: f64,
+    /// Successful replies per second — what an overloaded server is
+    /// judged by.
+    pub goodput_rps: f64,
+    /// Percentiles over successful requests only (`NaN` if none).
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+}
+
+impl NetLoadReport {
+    pub fn shed_rate(&self) -> f64 {
+        self.shed as f64 / self.requests.max(1) as f64
+    }
+
+    pub fn row(&self, name: &str) -> String {
+        format!(
+            "{name:<26} {:>6.0} rps x{:<2}  ok {:>4} shed {:>4} exp {:>3} fail {:>3}  \
+             goodput {:>7.1}/s  p50 {:>7.2}ms  p99 {:>7.2}ms",
+            self.arrival_rps,
+            self.conns,
+            self.ok,
+            self.shed,
+            self.expired,
+            self.failed,
+            self.goodput_rps,
+            self.p50_ms,
+            self.p99_ms,
+        )
+    }
+}
+
+/// Drive `requests` open-loop Poisson arrivals at `rps` against `addr`
+/// over `conns` connections (request `i` rides connection `i % conns`;
+/// the exponential gaps come from the seeded deterministic RNG, so the
+/// arrival schedule is reproducible).  Each connection is a blocking
+/// client, so a reply in flight delays only its own connection's later
+/// arrivals — with several connections the offered schedule tracks the
+/// target rate even when the server is slow.
+///
+/// Every request carries `deadline` (when given); classification is
+/// client-side from the typed wire codes: `Shed` → shed,
+/// `DeadlineExceeded` → expired, everything else (including transport
+/// errors) → failed.
+pub fn drive_net<F>(
+    addr: SocketAddr,
+    rps: f64,
+    requests: usize,
+    conns: usize,
+    deadline: Option<Duration>,
+    seed: u64,
+    make_input: F,
+) -> Result<NetLoadReport>
+where
+    F: Fn(usize) -> (Tensor, Option<Tensor>) + Sync,
+{
+    anyhow::ensure!(rps > 0.0, "drive_net: arrival rate must be positive");
+    anyhow::ensure!(conns >= 1, "drive_net: need at least one connection");
+    // one deterministic global schedule, partitioned round-robin
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let mut sched = Vec::with_capacity(requests);
+    let mut t = 0.0f64;
+    for _ in 0..requests {
+        t += -(1.0 - rng.uniform()).ln() / rps;
+        sched.push(t);
+    }
+    let lat = Mutex::new(Vec::with_capacity(requests));
+    let (shed, expired, failed) =
+        (AtomicUsize::new(0), AtomicUsize::new(0), AtomicUsize::new(0));
+    let t0 = Instant::now();
+    std::thread::scope(|s| -> Result<()> {
+        let mut joins = Vec::with_capacity(conns);
+        for c in 0..conns {
+            let (sched, lat, make_input) = (&sched, &lat, &make_input);
+            let (shed, expired, failed) = (&shed, &expired, &failed);
+            joins.push(s.spawn(move || -> Result<()> {
+                let mut client = NetClient::connect(addr)?;
+                for i in (c..requests).step_by(conns) {
+                    let target = t0 + Duration::from_secs_f64(sched[i]);
+                    if let Some(d) = target.checked_duration_since(Instant::now()) {
+                        std::thread::sleep(d);
+                    }
+                    let (x, t) = make_input(i);
+                    let sent = Instant::now();
+                    match client.infer_deadline(&x, t.as_ref(), deadline) {
+                        Ok(Ok(_y)) => lat
+                            .lock()
+                            .unwrap()
+                            .push(sent.elapsed().as_secs_f64() * 1e3),
+                        Ok(Err((ErrCode::Shed, _))) => {
+                            shed.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Ok(Err((ErrCode::DeadlineExceeded, _))) => {
+                            expired.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Ok(Err(_)) => {
+                            failed.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(_) => {
+                            // transport fault: count it, reconnect, go on
+                            failed.fetch_add(1, Ordering::Relaxed);
+                            client = NetClient::connect(addr)?;
+                        }
+                    }
+                }
+                Ok(())
+            }));
+        }
+        for j in joins {
+            j.join().expect("drive_net client thread panicked")?;
+        }
+        Ok(())
+    })?;
+    let wall_s = t0.elapsed().as_secs_f64();
+    let mut lat = lat.into_inner().unwrap();
+    crate::util::stats::sort_samples(&mut lat);
+    let ok = lat.len();
+    let (shed, expired, failed) = (
+        shed.into_inner(),
+        expired.into_inner(),
+        failed.into_inner(),
+    );
+    let pct = |q: f64| {
+        if lat.is_empty() {
+            f64::NAN
+        } else {
+            crate::util::stats::percentile(&lat, q)
+        }
+    };
+    Ok(NetLoadReport {
+        arrival_rps: rps,
+        conns,
+        requests: ok + shed + expired + failed,
+        ok,
+        shed,
+        expired,
+        failed,
+        wall_s,
+        goodput_rps: ok as f64 / wall_s.max(1e-9),
+        p50_ms: pct(0.5),
+        p95_ms: pct(0.95),
+        p99_ms: pct(0.99),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn net_cfg_default_is_sane() {
+        let c = NetCfg::default();
+        assert!(c.conn_workers >= 1 && c.backlog >= 1);
+        assert!(c.frame_stall_ms > 0 && c.max_wait_ms > 0);
+        assert_eq!(c.default_deadline_ms, 0);
+    }
+
+    #[test]
+    fn report_rates() {
+        let r = NetLoadReport {
+            arrival_rps: 100.0,
+            conns: 2,
+            requests: 10,
+            ok: 6,
+            shed: 3,
+            expired: 1,
+            failed: 0,
+            wall_s: 2.0,
+            goodput_rps: 3.0,
+            p50_ms: 1.0,
+            p95_ms: 2.0,
+            p99_ms: 3.0,
+        };
+        assert!((r.shed_rate() - 0.3).abs() < 1e-12);
+        let row = r.row("x");
+        assert!(row.contains("shed"), "{row}");
+    }
+}

@@ -1,0 +1,652 @@
+//! `serve::proto` — the length-prefixed binary wire protocol of the
+//! network serving tier ([`super::net`]).
+//!
+//! This module is **pure bytes**: encoding and decoding of frame bodies,
+//! no sockets, no timeouts (those live in `net`).  Keeping it IO-free
+//! makes every framing rule unit-testable without a listener, and keeps
+//! the decode path honest: every length is checked *before* it is used,
+//! so a malformed or adversarial frame can produce [`DecodeError`] but
+//! never an out-of-bounds slice, an overflowing multiply, or an
+//! attempted giant allocation.
+//!
+//! # Frame layout
+//!
+//! Every frame on the wire is
+//!
+//! ```text
+//! u32 LE body_len | body (body_len bytes, <= MAX_FRAME)
+//! ```
+//!
+//! and every body starts with the same 6-byte preamble:
+//!
+//! ```text
+//! u32 LE MAGIC ("LMRV") | u8 VERSION (1) | u8 kind
+//! ```
+//!
+//! Request bodies (client → server):
+//!
+//! ```text
+//! Infer:  preamble | u64 id | u64 deadline_us | u8 has_t | u8 ndims
+//!         | ndims x u32 dims | prod(dims) x f32 payload
+//!         | has_t ? dims[0] x f32 timesteps
+//! Stats:  preamble | u64 id
+//! ```
+//!
+//! `deadline_us` is a **relative** budget from server receipt (0 = no
+//! deadline) — relative, because client and server clocks need not
+//! agree, and receipt is when admission control can first act on it.
+//!
+//! Response bodies (server → client):
+//!
+//! ```text
+//! Tensor: preamble | u64 id | u8 ndims | ndims x u32 dims
+//!         | prod(dims) x f32 payload
+//! Stats:  preamble | u64 id | rest = UTF-8 JSON
+//! Error:  preamble | u64 id | u8 code | rest = UTF-8 message
+//! ```
+//!
+//! The error `code` byte is the typed [`ErrCode`] — the wire image of
+//! [`ServeError`] — so a client can distinguish "the server protected
+//! itself" (`Shed`, `DeadlineExceeded`, `ShuttingDown`) from "the
+//! request was bad" (`BadFrame`) and "the server broke" (`BackendFailed`)
+//! without parsing prose.
+
+use std::fmt;
+
+use crate::util::tensor::Tensor;
+
+use super::ServeError;
+
+/// Frame magic: `b"LMRV"` little-endian ("LayerMerge serVe").  A frame
+/// that does not open with it is not ours — the connection is closed
+/// rather than resynchronized (there is no resync point in a
+/// length-prefixed stream that lost framing).
+pub const MAGIC: u32 = u32::from_le_bytes(*b"LMRV");
+
+/// Protocol version; bumped on any incompatible layout change.
+pub const VERSION: u8 = 1;
+
+/// Hard cap on a frame body, bytes (64 MiB).  Checked before any
+/// allocation, so a hostile length prefix cannot OOM the server.
+pub const MAX_FRAME: usize = 1 << 26;
+
+/// Body byte offset of the `kind` byte (after magic + version).
+const KIND_OFF: usize = 5;
+
+/// Request frame kinds (client → server).
+pub const KIND_INFER: u8 = 1;
+pub const KIND_STATS: u8 = 2;
+
+/// Response frame kinds (server → client).  High bit set, so a request
+/// kind can never be confused for a response kind.
+pub const KIND_TENSOR: u8 = 0x81;
+pub const KIND_STATS_JSON: u8 = 0x82;
+pub const KIND_ERROR: u8 = 0xff;
+
+/// Most dims a wire tensor may carry — matches the small fixed ranks the
+/// deployed networks use; anything larger is a malformed frame.
+pub const MAX_NDIMS: usize = 8;
+
+/// Typed wire error codes — the on-the-wire image of [`ServeError`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum ErrCode {
+    /// Refused at admission (queue wait would exceed deadline/SLO).
+    Shed = 1,
+    /// Deadline passed before dispatch; failed fast, not served late.
+    DeadlineExceeded = 2,
+    /// The request frame was malformed (framing, shapes, validation).
+    BadFrame = 3,
+    /// The dispatched batch errored or panicked.
+    BackendFailed = 4,
+    /// The server is draining and accepts no new work.
+    ShuttingDown = 5,
+}
+
+impl ErrCode {
+    /// The wire code for a typed serving error.  `Rejected` (shape /
+    /// timestep validation) maps to `BadFrame`: from the client's seat a
+    /// request the session refuses to parse and a frame the server
+    /// refuses to parse are the same fault class.
+    pub fn of(e: &ServeError) -> ErrCode {
+        match e {
+            ServeError::Rejected(_) => ErrCode::BadFrame,
+            ServeError::Shed { .. } => ErrCode::Shed,
+            ServeError::DeadlineExceeded => ErrCode::DeadlineExceeded,
+            ServeError::BackendFailed(_) => ErrCode::BackendFailed,
+            ServeError::ShuttingDown => ErrCode::ShuttingDown,
+        }
+    }
+
+    pub fn from_u8(b: u8) -> Option<ErrCode> {
+        match b {
+            1 => Some(ErrCode::Shed),
+            2 => Some(ErrCode::DeadlineExceeded),
+            3 => Some(ErrCode::BadFrame),
+            4 => Some(ErrCode::BackendFailed),
+            5 => Some(ErrCode::ShuttingDown),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ErrCode::Shed => "Shed",
+            ErrCode::DeadlineExceeded => "DeadlineExceeded",
+            ErrCode::BadFrame => "BadFrame",
+            ErrCode::BackendFailed => "BackendFailed",
+            ErrCode::ShuttingDown => "ShuttingDown",
+        }
+    }
+}
+
+impl fmt::Display for ErrCode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Why a frame body failed to decode.  The variant drives the
+/// connection-level response in `net`: a body that carried our magic but
+/// bad content gets a `BadFrame` error frame and the connection lives
+/// (framing is intact — the next frame is readable); a body that is not
+/// even ours ([`DecodeError::NotOurs`]) closes the connection (framing
+/// trust is gone).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DecodeError {
+    /// Wrong magic or wrong protocol version — not a frame we speak.
+    NotOurs(String),
+    /// Our magic, but the content is malformed (truncated, bad kind,
+    /// oversized dims, length mismatch...).
+    Malformed(String),
+}
+
+impl fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DecodeError::NotOurs(m) | DecodeError::Malformed(m) => f.write_str(m),
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+type DecodeResult<T> = std::result::Result<T, DecodeError>;
+
+/// A decoded request frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// One inference request: `x` is `[rows, tail..]`, `t` (present iff
+    /// `has_t` was set) is `[rows]`, `deadline_us` is the relative
+    /// serve-by budget from receipt (0 = none).
+    Infer { id: u64, deadline_us: u64, x: Tensor, t: Option<Tensor> },
+    /// Ask for the server's cumulative `ServeStats` as JSON.
+    Stats { id: u64 },
+}
+
+impl Request {
+    pub fn id(&self) -> u64 {
+        match self {
+            Request::Infer { id, .. } | Request::Stats { id } => *id,
+        }
+    }
+}
+
+/// A decoded response frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Tensor { id: u64, y: Tensor },
+    Stats { id: u64, json: String },
+    Error { id: u64, code: ErrCode, msg: String },
+}
+
+impl Response {
+    pub fn id(&self) -> u64 {
+        match self {
+            Response::Tensor { id, .. }
+            | Response::Stats { id, .. }
+            | Response::Error { id, .. } => *id,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Encoding
+// ---------------------------------------------------------------------------
+
+fn preamble(out: &mut Vec<u8>, kind: u8, id: u64) {
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.push(VERSION);
+    out.push(kind);
+    out.extend_from_slice(&id.to_le_bytes());
+}
+
+fn put_tensor(out: &mut Vec<u8>, t: &Tensor) {
+    debug_assert!(t.dims.len() <= MAX_NDIMS);
+    out.push(t.dims.len() as u8);
+    for &d in &t.dims {
+        out.extend_from_slice(&(d as u32).to_le_bytes());
+    }
+    for &v in &t.data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Encode a request **body** (the `u32` length prefix is written by the
+/// socket layer, which is the only place that knows it is about to send).
+pub fn encode_request(req: &Request) -> Vec<u8> {
+    match req {
+        Request::Infer { id, deadline_us, x, t } => {
+            let mut out = Vec::with_capacity(32 + 4 * (x.data.len() + x.dims.len()));
+            preamble(&mut out, KIND_INFER, *id);
+            out.extend_from_slice(&deadline_us.to_le_bytes());
+            out.push(u8::from(t.is_some()));
+            put_tensor(&mut out, x);
+            if let Some(tt) = t {
+                for &v in &tt.data {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            out
+        }
+        Request::Stats { id } => {
+            let mut out = Vec::with_capacity(14);
+            preamble(&mut out, KIND_STATS, *id);
+            out
+        }
+    }
+}
+
+/// Encode a response **body**.
+pub fn encode_response(resp: &Response) -> Vec<u8> {
+    match resp {
+        Response::Tensor { id, y } => {
+            let mut out = Vec::with_capacity(16 + 4 * (y.data.len() + y.dims.len()));
+            preamble(&mut out, KIND_TENSOR, *id);
+            put_tensor(&mut out, y);
+            out
+        }
+        Response::Stats { id, json } => {
+            let mut out = Vec::with_capacity(14 + json.len());
+            preamble(&mut out, KIND_STATS_JSON, *id);
+            out.extend_from_slice(json.as_bytes());
+            out
+        }
+        Response::Error { id, code, msg } => {
+            let mut out = Vec::with_capacity(15 + msg.len());
+            preamble(&mut out, KIND_ERROR, *id);
+            out.push(*code as u8);
+            out.extend_from_slice(msg.as_bytes());
+            out
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Decoding
+// ---------------------------------------------------------------------------
+
+/// Bounds-checked little-endian cursor over a frame body.  Every read
+/// states what it was reading, so a truncated frame reports *which*
+/// field ran off the end.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> DecodeResult<&'a [u8]> {
+        let end = self.pos.checked_add(n).filter(|&e| e <= self.buf.len());
+        match end {
+            Some(end) => {
+                let s = &self.buf[self.pos..end];
+                self.pos = end;
+                Ok(s)
+            }
+            None => Err(DecodeError::Malformed(format!(
+                "frame truncated reading {what}: need {n} bytes at offset {}, body is {}",
+                self.pos,
+                self.buf.len()
+            ))),
+        }
+    }
+
+    fn u8(&mut self, what: &str) -> DecodeResult<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u32(&mut self, what: &str) -> DecodeResult<u32> {
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self, what: &str) -> DecodeResult<u64> {
+        let b = self.take(8, what)?;
+        Ok(u64::from_le_bytes(b.try_into().expect("8-byte slice")))
+    }
+
+    fn f32s(&mut self, n: usize, what: &str) -> DecodeResult<Vec<f32>> {
+        let bytes = n.checked_mul(4).ok_or_else(|| {
+            DecodeError::Malformed(format!("{what}: element count {n} overflows"))
+        })?;
+        let b = self.take(bytes, what)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn rest(&mut self) -> &'a [u8] {
+        let s = &self.buf[self.pos..];
+        self.pos = self.buf.len();
+        s
+    }
+
+    fn done(&self, what: &str) -> DecodeResult<()> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            Err(DecodeError::Malformed(format!(
+                "{what}: {} trailing bytes after a complete frame",
+                self.buf.len() - self.pos
+            )))
+        }
+    }
+}
+
+/// Validate the shared preamble and return the kind byte.
+fn check_preamble(c: &mut Cursor<'_>) -> DecodeResult<u8> {
+    let magic = c.u32("magic")?;
+    if magic != MAGIC {
+        return Err(DecodeError::NotOurs(format!(
+            "bad magic {magic:#010x} (want {MAGIC:#010x})"
+        )));
+    }
+    let version = c.u8("version")?;
+    if version != VERSION {
+        return Err(DecodeError::NotOurs(format!(
+            "unsupported protocol version {version} (speak {VERSION})"
+        )));
+    }
+    c.u8("kind")
+}
+
+/// Decode tensor dims: rank, per-dim sizes, with the element count
+/// bounded by what the body could possibly hold — so a hostile dim
+/// vector is refused before any allocation sizing happens.
+fn get_dims(c: &mut Cursor<'_>, body_len: usize) -> DecodeResult<Vec<usize>> {
+    let ndims = c.u8("ndims")? as usize;
+    if ndims == 0 || ndims > MAX_NDIMS {
+        return Err(DecodeError::Malformed(format!(
+            "tensor rank {ndims} out of range 1..={MAX_NDIMS}"
+        )));
+    }
+    let mut dims = Vec::with_capacity(ndims);
+    let mut elems: usize = 1;
+    for i in 0..ndims {
+        let d = c.u32(&format!("dim {i}"))? as usize;
+        if d == 0 {
+            return Err(DecodeError::Malformed(format!("dim {i} is zero")));
+        }
+        elems = elems.checked_mul(d).ok_or_else(|| {
+            DecodeError::Malformed("tensor element count overflows".into())
+        })?;
+        // 4 bytes/elem must still fit in what the sender actually sent;
+        // this refuses absurd shapes before f32s() sizes an allocation
+        if elems > body_len / 4 + 1 {
+            return Err(DecodeError::Malformed(format!(
+                "tensor of {elems}+ elements cannot fit a {body_len}-byte body"
+            )));
+        }
+        dims.push(d);
+    }
+    Ok(dims)
+}
+
+/// Decode a request body (everything after the `u32` length prefix).
+pub fn decode_request(body: &[u8]) -> DecodeResult<Request> {
+    if body.len() > MAX_FRAME {
+        return Err(DecodeError::Malformed(format!(
+            "frame body {} exceeds MAX_FRAME {MAX_FRAME}",
+            body.len()
+        )));
+    }
+    let mut c = Cursor::new(body);
+    let kind = check_preamble(&mut c)?;
+    let id = c.u64("request id")?;
+    match kind {
+        KIND_INFER => {
+            let deadline_us = c.u64("deadline_us")?;
+            let has_t = match c.u8("has_t")? {
+                0 => false,
+                1 => true,
+                b => {
+                    return Err(DecodeError::Malformed(format!(
+                        "has_t byte must be 0 or 1, got {b}"
+                    )))
+                }
+            };
+            let dims = get_dims(&mut c, body.len())?;
+            let n: usize = dims.iter().product();
+            let data = c.f32s(n, "tensor payload")?;
+            let t = if has_t {
+                let rows = dims[0];
+                Some(Tensor::new(vec![rows], c.f32s(rows, "timesteps")?))
+            } else {
+                None
+            };
+            c.done("infer request")?;
+            Ok(Request::Infer { id, deadline_us, x: Tensor::new(dims, data), t })
+        }
+        KIND_STATS => {
+            c.done("stats request")?;
+            Ok(Request::Stats { id })
+        }
+        k => Err(DecodeError::Malformed(format!(
+            "unknown request kind {k:#04x}"
+        ))),
+    }
+}
+
+/// Decode a response body.
+pub fn decode_response(body: &[u8]) -> DecodeResult<Response> {
+    if body.len() > MAX_FRAME {
+        return Err(DecodeError::Malformed(format!(
+            "frame body {} exceeds MAX_FRAME {MAX_FRAME}",
+            body.len()
+        )));
+    }
+    let mut c = Cursor::new(body);
+    let kind = check_preamble(&mut c)?;
+    let id = c.u64("response id")?;
+    match kind {
+        KIND_TENSOR => {
+            let dims = get_dims(&mut c, body.len())?;
+            let n: usize = dims.iter().product();
+            let data = c.f32s(n, "tensor payload")?;
+            c.done("tensor response")?;
+            Ok(Response::Tensor { id, y: Tensor::new(dims, data) })
+        }
+        KIND_STATS_JSON => {
+            let json = String::from_utf8(c.rest().to_vec()).map_err(|_| {
+                DecodeError::Malformed("stats payload is not UTF-8".into())
+            })?;
+            Ok(Response::Stats { id, json })
+        }
+        KIND_ERROR => {
+            let code_b = c.u8("error code")?;
+            let code = ErrCode::from_u8(code_b).ok_or_else(|| {
+                DecodeError::Malformed(format!("unknown error code {code_b}"))
+            })?;
+            let msg = String::from_utf8(c.rest().to_vec()).map_err(|_| {
+                DecodeError::Malformed("error message is not UTF-8".into())
+            })?;
+            Ok(Response::Error { id, code, msg })
+        }
+        k => Err(DecodeError::Malformed(format!(
+            "unknown response kind {k:#04x}"
+        ))),
+    }
+}
+
+/// Peek a body's kind byte without a full decode (the server uses it to
+/// tell request kinds apart before committing to a decode path).
+pub fn peek_kind(body: &[u8]) -> Option<u8> {
+    body.get(KIND_OFF).copied()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn x23() -> Tensor {
+        Tensor::new(vec![2, 3], vec![1.0, -2.5, 3.0, 0.0, 4.25, -0.5])
+    }
+
+    #[test]
+    fn infer_roundtrip_without_t() {
+        let r = Request::Infer { id: 42, deadline_us: 25_000, x: x23(), t: None };
+        let body = encode_request(&r);
+        assert_eq!(decode_request(&body).unwrap(), r);
+    }
+
+    #[test]
+    fn infer_roundtrip_with_t() {
+        let t = Tensor::new(vec![2], vec![100.0, 200.0]);
+        let r = Request::Infer { id: 7, deadline_us: 0, x: x23(), t: Some(t) };
+        let body = encode_request(&r);
+        assert_eq!(decode_request(&body).unwrap(), r);
+    }
+
+    #[test]
+    fn stats_roundtrip() {
+        let r = Request::Stats { id: u64::MAX };
+        assert_eq!(decode_request(&encode_request(&r)).unwrap(), r);
+    }
+
+    #[test]
+    fn response_roundtrips() {
+        for resp in [
+            Response::Tensor { id: 1, y: x23() },
+            Response::Stats { id: 2, json: "{\"requests\":3}".into() },
+            Response::Error {
+                id: 3,
+                code: ErrCode::Shed,
+                msg: "predicted wait 9000us exceeds 5000us".into(),
+            },
+        ] {
+            let body = encode_response(&resp);
+            assert_eq!(decode_response(&body).unwrap(), resp);
+        }
+    }
+
+    #[test]
+    fn bad_magic_is_not_ours() {
+        let mut body = encode_request(&Request::Stats { id: 1 });
+        body[0] ^= 0xff;
+        match decode_request(&body) {
+            Err(DecodeError::NotOurs(m)) => assert!(m.contains("magic"), "{m}"),
+            other => panic!("want NotOurs, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_version_is_not_ours() {
+        let mut body = encode_request(&Request::Stats { id: 1 });
+        body[4] = VERSION + 1;
+        assert!(matches!(decode_request(&body), Err(DecodeError::NotOurs(_))));
+    }
+
+    #[test]
+    fn truncated_payload_is_malformed_and_names_the_field() {
+        let body = encode_request(&Request::Infer {
+            id: 9,
+            deadline_us: 0,
+            x: x23(),
+            t: None,
+        });
+        let cut = &body[..body.len() - 5];
+        match decode_request(cut) {
+            Err(DecodeError::Malformed(m)) => {
+                assert!(m.contains("tensor payload"), "{m}")
+            }
+            other => panic!("want Malformed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn trailing_garbage_is_malformed() {
+        let mut body = encode_request(&Request::Stats { id: 1 });
+        body.push(0);
+        assert!(matches!(decode_request(&body), Err(DecodeError::Malformed(_))));
+    }
+
+    #[test]
+    fn hostile_dims_are_refused_before_allocation() {
+        // rank 2, dims [0xffff_ffff, 0xffff_ffff]: product overflows and
+        // could never fit the body — must be Malformed, not a panic/OOM
+        let mut body = Vec::new();
+        body.extend_from_slice(&MAGIC.to_le_bytes());
+        body.push(VERSION);
+        body.push(KIND_INFER);
+        body.extend_from_slice(&1u64.to_le_bytes()); // id
+        body.extend_from_slice(&0u64.to_le_bytes()); // deadline
+        body.push(0); // has_t
+        body.push(2); // ndims
+        body.extend_from_slice(&u32::MAX.to_le_bytes());
+        body.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(decode_request(&body), Err(DecodeError::Malformed(_))));
+    }
+
+    #[test]
+    fn zero_rank_and_oversized_rank_are_refused() {
+        for ndims in [0u8, (MAX_NDIMS + 1) as u8] {
+            let mut body = Vec::new();
+            body.extend_from_slice(&MAGIC.to_le_bytes());
+            body.push(VERSION);
+            body.push(KIND_INFER);
+            body.extend_from_slice(&1u64.to_le_bytes());
+            body.extend_from_slice(&0u64.to_le_bytes());
+            body.push(0);
+            body.push(ndims);
+            assert!(
+                matches!(decode_request(&body), Err(DecodeError::Malformed(_))),
+                "rank {ndims} must be refused"
+            );
+        }
+    }
+
+    #[test]
+    fn err_code_maps_every_serve_error() {
+        use ServeError as E;
+        assert_eq!(ErrCode::of(&E::Rejected("x".into())), ErrCode::BadFrame);
+        assert_eq!(
+            ErrCode::of(&E::Shed { queued_rows: 1, predicted_us: 2, budget_us: 3 }),
+            ErrCode::Shed
+        );
+        assert_eq!(ErrCode::of(&E::DeadlineExceeded), ErrCode::DeadlineExceeded);
+        assert_eq!(ErrCode::of(&E::BackendFailed("x".into())), ErrCode::BackendFailed);
+        assert_eq!(ErrCode::of(&E::ShuttingDown), ErrCode::ShuttingDown);
+        for c in [
+            ErrCode::Shed,
+            ErrCode::DeadlineExceeded,
+            ErrCode::BadFrame,
+            ErrCode::BackendFailed,
+            ErrCode::ShuttingDown,
+        ] {
+            assert_eq!(ErrCode::from_u8(c as u8), Some(c));
+        }
+        assert_eq!(ErrCode::from_u8(0), None);
+        assert_eq!(ErrCode::from_u8(99), None);
+    }
+
+    #[test]
+    fn peek_kind_sees_the_kind_byte() {
+        let body = encode_request(&Request::Stats { id: 5 });
+        assert_eq!(peek_kind(&body), Some(KIND_STATS));
+        assert_eq!(peek_kind(&[0, 1, 2]), None);
+    }
+}

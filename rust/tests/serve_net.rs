@@ -1,0 +1,461 @@
+//! The network-tier suite: the TCP serving tier (`serve::net`) over
+//! loopback, host-only (sessions run on deterministic host backends via
+//! `Session::from_fn`; no PJRT runtime needed).
+//!
+//! Pins the ISSUE-6 acceptance properties:
+//! * wire round-trips are bit-identical to the in-process oracle, and
+//!   the `/stats` frame carries the shed/expired/failed counters,
+//! * malformed input never kills the process: a truncated body gets a
+//!   typed `BadFrame` and the connection keeps serving; wrong magic or
+//!   a hostile length prefix gets one refusal and a close — and the
+//!   server serves the next client either way,
+//! * deadlines propagate: queued requests expire fast, and with a warm
+//!   service EWMA admission control sheds at the door,
+//! * overload at ~2x capacity sheds at admission with a bounded queue
+//!   while the p99 of *admitted* requests stays within the SLO bound,
+//! * fault isolation: a panicking batch poisons only its own reply, a
+//!   mid-request disconnect costs one connection, backlog overflow gets
+//!   a typed refusal — the server keeps serving after each,
+//! * graceful drain: in-flight requests finish, idle connections get
+//!   `ShuttingDown`, and the port stops accepting.
+//!
+//! Every test binds `127.0.0.1:0`; where loopback sockets are
+//! unavailable the test skips cleanly instead of failing.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use layermerge::serve::net::{drive_net, NetCfg, NetClient, NetServer};
+use layermerge::serve::proto::{self, ErrCode, Request, Response, MAX_FRAME};
+use layermerge::serve::{BatchPolicy, ServeCfg, Session};
+use layermerge::util::tensor::Tensor;
+
+const B: usize = 4; // spec batch size for the mock deployments
+const TAIL: [usize; 1] = [3]; // per-row feature length
+
+/// Deterministic per-row "network" (same oracle as the serve_queue
+/// suite): row r of the output depends on row r of the input only.
+fn row_fn(row: &[f32]) -> [f32; 2] {
+    let sum: f32 = row.iter().sum();
+    let sq: f32 = row.iter().map(|v| v * v).sum();
+    [sum * 0.5 + 1.0, sq - row[0]]
+}
+
+fn mock_backend(x: &Tensor, _t: Option<&Tensor>) -> anyhow::Result<Tensor> {
+    let rl: usize = x.dims[1..].iter().product();
+    let mut out = Tensor::zeros(&[x.dims[0], 2]);
+    for r in 0..x.dims[0] {
+        let y = row_fn(&x.data[r * rl..(r + 1) * rl]);
+        out.data[r * 2..(r + 1) * 2].copy_from_slice(&y);
+    }
+    Ok(out)
+}
+
+fn serve_cfg(workers: usize, slo_ms: u64) -> ServeCfg {
+    ServeCfg {
+        workers,
+        queue_cap: 256,
+        policy: BatchPolicy::Greedy,
+        slo: (slo_ms > 0).then_some(Duration::from_millis(slo_ms)),
+        ..ServeCfg::default()
+    }
+}
+
+fn req(rows: usize, seed: f32) -> Tensor {
+    let rl: usize = TAIL.iter().product();
+    Tensor::new(
+        vec![rows, TAIL[0]],
+        (0..rows * rl).map(|i| seed + i as f32 * 0.25).collect(),
+    )
+}
+
+fn expect(x: &Tensor) -> Vec<f32> {
+    let rl: usize = TAIL.iter().product();
+    (0..x.dims[0])
+        .flat_map(|r| row_fn(&x.data[r * rl..(r + 1) * rl]))
+        .collect()
+}
+
+/// Bind an ephemeral loopback port, or skip the test cleanly in
+/// environments with no usable loopback.
+fn bind_or_skip(sess: Session, cfg: NetCfg) -> Option<NetServer> {
+    match NetServer::bind(Arc::new(sess), "127.0.0.1:0", cfg) {
+        Ok(s) => Some(s),
+        Err(e) => {
+            eprintln!("skipping serve_net test (no loopback): {e}");
+            None
+        }
+    }
+}
+
+/// Raw framed write for protocol-abuse tests (the length prefix is
+/// whatever the test says it is).
+fn send_raw(s: &mut TcpStream, body: &[u8]) {
+    s.write_all(&(body.len() as u32).to_le_bytes()).unwrap();
+    s.write_all(body).unwrap();
+    s.flush().unwrap();
+}
+
+/// Raw framed read; `None` on clean EOF.  The caller sets a read
+/// timeout, so a server that stops replying fails the test instead of
+/// hanging it.
+fn read_raw(s: &mut TcpStream) -> Option<Vec<u8>> {
+    let mut hdr = [0u8; 4];
+    let mut at = 0usize;
+    while at < 4 {
+        match s.read(&mut hdr[at..]) {
+            Ok(0) if at == 0 => return None,
+            Ok(0) => panic!("connection closed mid-header"),
+            Ok(n) => at += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => panic!("raw read failed: {e}"),
+        }
+    }
+    let len = u32::from_le_bytes(hdr) as usize;
+    assert!(len <= MAX_FRAME, "server sent an oversized frame ({len})");
+    let mut body = vec![0u8; len];
+    s.read_exact(&mut body).unwrap();
+    Some(body)
+}
+
+fn raw_connect(addr: SocketAddr) -> TcpStream {
+    let s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s.set_write_timeout(Some(Duration::from_secs(10))).unwrap();
+    s
+}
+
+/// Decode a response body or die trying — protocol-abuse tests only ever
+/// expect well-formed replies back.
+fn decode(body: &[u8]) -> Response {
+    proto::decode_response(body).expect("server reply must decode")
+}
+
+#[test]
+fn roundtrip_infer_and_stats_over_loopback() {
+    let sess = Session::from_fn(B, &TAIL, false, serve_cfg(2, 0), mock_backend);
+    let Some(server) = bind_or_skip(sess, NetCfg::default()) else { return };
+    let mut c = NetClient::connect(server.addr()).unwrap();
+    for i in 0..5 {
+        let x = req(1 + i % B, i as f32 * 3.0);
+        let y = c.infer(&x, None).unwrap();
+        assert_eq!(y.dims, vec![x.dims[0], 2]);
+        assert_eq!(y.data, expect(&x), "wire round-trip broke row parity");
+    }
+    let j = c.stats().unwrap();
+    assert!(j.get("requests").and_then(|v| v.as_usize()).unwrap() >= 5);
+    for key in ["shed_requests", "expired_requests", "failed_batches"] {
+        assert!(j.get(key).is_some(), "stats frame missing {key}");
+    }
+    let net = j.get("net").expect("stats frame missing net counters");
+    assert!(net.get("frames").and_then(|v| v.as_usize()).unwrap() >= 6);
+    assert_eq!(net.get("handler_panics").and_then(|v| v.as_usize()), Some(0));
+    server.shutdown();
+}
+
+#[test]
+fn wrong_magic_gets_one_refusal_then_close_and_server_survives() {
+    let sess = Session::from_fn(B, &TAIL, false, serve_cfg(1, 0), mock_backend);
+    let Some(server) = bind_or_skip(sess, NetCfg::default()) else { return };
+    let mut s = raw_connect(server.addr());
+    // honest framing, alien body: not our magic
+    send_raw(&mut s, b"XXXXxxxxxxxxxxxx");
+    match decode(&read_raw(&mut s).expect("refusal frame")) {
+        Response::Error { code, .. } => assert_eq!(code, ErrCode::BadFrame),
+        other => panic!("expected a BadFrame error, got {other:?}"),
+    }
+    // framing trust is gone: the server closes this connection
+    assert!(read_raw(&mut s).is_none(), "wrong-magic connection must close");
+    // ...but the process and every other connection live on
+    let mut c = NetClient::connect(server.addr()).unwrap();
+    let x = req(2, 1.0);
+    assert_eq!(c.infer(&x, None).unwrap().data, expect(&x));
+    assert!(server.stats().bad_frames >= 1);
+    server.shutdown();
+}
+
+#[test]
+fn truncated_body_keeps_the_connection_serving() {
+    let sess = Session::from_fn(B, &TAIL, false, serve_cfg(1, 0), mock_backend);
+    let Some(server) = bind_or_skip(sess, NetCfg::default()) else { return };
+    let mut s = raw_connect(server.addr());
+    // our magic, honest length prefix, but the body stops inside the id
+    let full = proto::encode_request(&Request::Infer {
+        id: 9,
+        deadline_us: 0,
+        x: req(1, 0.0),
+        t: None,
+    });
+    send_raw(&mut s, &full[..10]);
+    match decode(&read_raw(&mut s).expect("BadFrame reply")) {
+        Response::Error { code, msg, .. } => {
+            assert_eq!(code, ErrCode::BadFrame);
+            assert!(msg.contains("truncated"), "{msg}");
+        }
+        other => panic!("expected a BadFrame error, got {other:?}"),
+    }
+    // the stream is still in sync: the same connection serves the next
+    // (well-formed) request
+    let x = req(3, 5.0);
+    send_raw(
+        &mut s,
+        &proto::encode_request(&Request::Infer {
+            id: 10,
+            deadline_us: 0,
+            x: x.clone(),
+            t: None,
+        }),
+    );
+    match decode(&read_raw(&mut s).expect("tensor reply")) {
+        Response::Tensor { id, y } => {
+            assert_eq!(id, 10);
+            assert_eq!(y.data, expect(&x));
+        }
+        other => panic!("expected a tensor, got {other:?}"),
+    }
+    server.shutdown();
+}
+
+#[test]
+fn hostile_length_prefix_is_refused_without_allocation() {
+    let sess = Session::from_fn(B, &TAIL, false, serve_cfg(1, 0), mock_backend);
+    let Some(server) = bind_or_skip(sess, NetCfg::default()) else { return };
+    let mut s = raw_connect(server.addr());
+    // a length prefix claiming ~4GiB: refusal must not allocate it
+    s.write_all(&u32::MAX.to_le_bytes()).unwrap();
+    s.flush().unwrap();
+    match decode(&read_raw(&mut s).expect("refusal frame")) {
+        Response::Error { code, .. } => assert_eq!(code, ErrCode::BadFrame),
+        other => panic!("expected a BadFrame error, got {other:?}"),
+    }
+    assert!(read_raw(&mut s).is_none(), "hostile-length connection must close");
+    let mut c = NetClient::connect(server.addr()).unwrap();
+    let x = req(1, 2.0);
+    assert_eq!(c.infer(&x, None).unwrap().data, expect(&x));
+    server.shutdown();
+}
+
+#[test]
+fn queued_request_expires_fast_behind_a_busy_worker() {
+    // one worker held 40ms per batch; a 1ms-deadline request queued
+    // behind it must come back DeadlineExceeded, not 40ms late
+    let sess = Session::from_fn(B, &TAIL, false, serve_cfg(1, 0), |x, t| {
+        std::thread::sleep(Duration::from_millis(40));
+        mock_backend(x, t)
+    });
+    let Some(server) = bind_or_skip(sess, NetCfg::default()) else { return };
+    let addr = server.addr();
+    let busy = std::thread::spawn(move || {
+        let mut c = NetClient::connect(addr).unwrap();
+        let x = req(B, 0.0);
+        assert_eq!(c.infer(&x, None).unwrap().data, expect(&x));
+    });
+    std::thread::sleep(Duration::from_millis(10)); // the worker is mid-batch
+    let mut c = NetClient::connect(addr).unwrap();
+    let verdict = c
+        .infer_deadline(&req(1, 1.0), None, Some(Duration::from_millis(1)))
+        .unwrap();
+    match verdict {
+        Err((code, _)) => assert_eq!(code, ErrCode::DeadlineExceeded),
+        Ok(_) => panic!("a 1ms-deadline request behind a 40ms batch must expire"),
+    }
+    busy.join().unwrap();
+    assert!(server.session().stats().expired_requests >= 1);
+    server.shutdown();
+}
+
+#[test]
+fn warm_ewma_sheds_at_admission() {
+    // 30ms batches against a 10ms SLO: the first request warms the EWMA
+    // (always admitted cold), the second is shed at the door
+    let sess = Session::from_fn(B, &TAIL, false, serve_cfg(1, 10), |x, t| {
+        std::thread::sleep(Duration::from_millis(30));
+        mock_backend(x, t)
+    });
+    let Some(server) = bind_or_skip(sess, NetCfg::default()) else { return };
+    let mut c = NetClient::connect(server.addr()).unwrap();
+    let x = req(B, 0.0);
+    assert_eq!(c.infer(&x, None).unwrap().data, expect(&x));
+    assert!(server.session().ewma_service_us() >= 20_000);
+    match c.infer_deadline(&req(1, 1.0), None, None).unwrap() {
+        Err((code, msg)) => {
+            assert_eq!(code, ErrCode::Shed);
+            assert!(msg.contains("shed at admission"), "{msg}");
+        }
+        Ok(_) => panic!("a 30ms predicted wait must be shed against a 10ms SLO"),
+    }
+    assert_eq!(server.session().stats().shed_requests, 1);
+    server.shutdown();
+}
+
+#[test]
+fn overload_sheds_at_admission_with_bounded_queue_and_slo_p99() {
+    // ~2x capacity: one worker, 10ms per batch, B=4 -> ~400 one-row
+    // requests/s capacity; offer ~800/s with a 15ms deadline == SLO
+    let sess = Session::from_fn(B, &TAIL, false, serve_cfg(1, 15), |x, t| {
+        std::thread::sleep(Duration::from_millis(10));
+        mock_backend(x, t)
+    });
+    let net_cfg = NetCfg { conn_workers: 16, ..NetCfg::default() };
+    let Some(server) = bind_or_skip(sess, net_cfg) else { return };
+    let r = drive_net(
+        server.addr(),
+        800.0,
+        160,
+        16,
+        Some(Duration::from_millis(15)),
+        42,
+        |i| (req(1, i as f32), None),
+    )
+    .unwrap();
+    assert_eq!(r.requests, 160);
+    assert_eq!(
+        r.ok + r.shed + r.expired + r.failed,
+        r.requests,
+        "outcome classification must partition completions: {r:?}"
+    );
+    assert!(r.ok > 0, "overload must not starve every request: {r:?}");
+    assert!(r.shed > 0, "admission control never engaged at 2x capacity: {r:?}");
+    assert_eq!(r.failed, 0, "no transport/backend failures expected: {r:?}");
+    // p99 of ADMITTED requests holds the SLO bound (deadline + a few
+    // batch service times of slack); shedding at the door is what keeps
+    // it there — an unbounded queue would blow far past this
+    assert!(
+        r.p99_ms.is_finite() && r.p99_ms < 80.0,
+        "p99 of admitted requests out of bounds: {r:?}"
+    );
+    let s = server.session().stats();
+    assert!(s.shed_requests > 0);
+    assert!(
+        s.max_queue <= 64,
+        "queue depth {} not bounded under overload",
+        s.max_queue
+    );
+    server.shutdown();
+}
+
+#[test]
+fn mid_request_disconnects_cost_one_connection_each() {
+    let sess = Session::from_fn(B, &TAIL, false, serve_cfg(1, 0), |x, t| {
+        std::thread::sleep(Duration::from_millis(10));
+        mock_backend(x, t)
+    });
+    let Some(server) = bind_or_skip(sess, NetCfg::default()) else { return };
+    // peer A: full request frame, then vanish before the reply
+    {
+        let mut s = raw_connect(server.addr());
+        send_raw(
+            &mut s,
+            &proto::encode_request(&Request::Infer {
+                id: 1,
+                deadline_us: 0,
+                x: req(1, 0.0),
+                t: None,
+            }),
+        );
+    } // dropped here
+    // peer B: half a length prefix, then vanish mid-frame
+    {
+        let mut s = raw_connect(server.addr());
+        s.write_all(&[0x10, 0x00]).unwrap();
+        s.flush().unwrap();
+    }
+    std::thread::sleep(Duration::from_millis(60));
+    // the server is still serving, and nothing panicked
+    let mut c = NetClient::connect(server.addr()).unwrap();
+    let x = req(2, 3.0);
+    assert_eq!(c.infer(&x, None).unwrap().data, expect(&x));
+    assert_eq!(server.stats().handler_panics, 0);
+    server.shutdown();
+}
+
+#[test]
+fn nth_batch_panic_is_isolated_and_the_server_keeps_serving() {
+    let calls = Arc::new(AtomicUsize::new(0));
+    let c2 = Arc::clone(&calls);
+    let sess = Session::from_fn(B, &TAIL, false, serve_cfg(1, 0), move |x, t| {
+        if c2.fetch_add(1, Ordering::Relaxed) == 1 {
+            panic!("injected fault on batch 2");
+        }
+        mock_backend(x, t)
+    });
+    let Some(server) = bind_or_skip(sess, NetCfg::default()) else { return };
+    let mut c = NetClient::connect(server.addr()).unwrap();
+    let x1 = req(1, 0.0);
+    assert_eq!(c.infer(&x1, None).unwrap().data, expect(&x1));
+    // batch 2 panics: this reply (and only this one) is a typed failure
+    match c.infer_deadline(&req(1, 1.0), None, None).unwrap() {
+        Err((code, msg)) => {
+            assert_eq!(code, ErrCode::BackendFailed);
+            assert!(msg.contains("panicked"), "{msg}");
+        }
+        Ok(_) => panic!("the panicking batch must fail its reply"),
+    }
+    // same connection, next request: served again
+    let x3 = req(2, 2.0);
+    assert_eq!(c.infer(&x3, None).unwrap().data, expect(&x3));
+    let s = server.session().stats();
+    assert_eq!(s.failed_batches, 1);
+    assert_eq!(server.stats().handler_panics, 0, "panic crossed the session boundary");
+    server.shutdown();
+}
+
+#[test]
+fn backlog_overflow_gets_a_typed_refusal() {
+    let sess = Session::from_fn(B, &TAIL, false, serve_cfg(1, 0), mock_backend);
+    let cfg = NetCfg { conn_workers: 1, backlog: 1, ..NetCfg::default() };
+    let Some(server) = bind_or_skip(sess, cfg) else { return };
+    // conn A occupies the only handler (a served request proves it)
+    let mut a = NetClient::connect(server.addr()).unwrap();
+    let xa = req(1, 0.0);
+    assert_eq!(a.infer(&xa, None).unwrap().data, expect(&xa));
+    // conn B fills the one-slot backlog
+    let _b = raw_connect(server.addr());
+    std::thread::sleep(Duration::from_millis(100));
+    // conn C overflows it: best-effort Shed frame, then close
+    let mut c = raw_connect(server.addr());
+    match decode(&read_raw(&mut c).expect("refusal frame")) {
+        Response::Error { code, .. } => assert_eq!(code, ErrCode::Shed),
+        other => panic!("expected a Shed refusal, got {other:?}"),
+    }
+    assert!(read_raw(&mut c).is_none(), "refused connection must close");
+    assert!(server.stats().refused >= 1);
+    server.shutdown();
+}
+
+#[test]
+fn graceful_drain_finishes_in_flight_and_notifies_idle_conns() {
+    let sess = Session::from_fn(B, &TAIL, false, serve_cfg(1, 0), |x, t| {
+        std::thread::sleep(Duration::from_millis(30));
+        mock_backend(x, t)
+    });
+    let Some(server) = bind_or_skip(sess, NetCfg::default()) else { return };
+    let addr = server.addr();
+    // an idle connection, already owned by a handler
+    let mut idle = raw_connect(addr);
+    std::thread::sleep(Duration::from_millis(20));
+    // an in-flight request racing the shutdown
+    let inflight = std::thread::spawn(move || {
+        let mut c = NetClient::connect(addr).unwrap();
+        let x = req(2, 7.0);
+        (c.infer(&x, None).unwrap().data, expect(&x))
+    });
+    std::thread::sleep(Duration::from_millis(10));
+    server.shutdown();
+    // the in-flight request finished, correctly, across the drain
+    let (got, want) = inflight.join().unwrap();
+    assert_eq!(got, want, "drain dropped or corrupted an in-flight request");
+    // the idle connection got a typed goodbye
+    match decode(&read_raw(&mut idle).expect("drain notice")) {
+        Response::Error { code, .. } => assert_eq!(code, ErrCode::ShuttingDown),
+        other => panic!("expected ShuttingDown, got {other:?}"),
+    }
+    // and the port no longer accepts
+    assert!(
+        TcpStream::connect(addr).is_err(),
+        "listener still accepting after shutdown"
+    );
+}

@@ -9,6 +9,14 @@
 //! * ordered ticket delivery under concurrent submitters,
 //! * backpressure honors the queue bound; shutdown drains cleanly.
 //!
+//! The ISSUE-6 robustness semantics (session side; the wire side lives
+//! in `tests/serve_net.rs`):
+//! * bounded ticket waits hand the ticket back instead of blocking,
+//! * deadlines fail fast at submit and at dispatch, typed and counted,
+//! * admission control sheds only with a warm service EWMA,
+//! * backend faults are typed `BackendFailed`, counted per batch,
+//! * the open-loop driver separates shed/expired/failed from successes.
+//!
 //! And the ISSUE-4 window-policy semantics:
 //! * a partial batch dispatches no later than `max_wait_us` after its
 //!   first request (bounded-wait guarantee),
@@ -21,7 +29,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use layermerge::serve::{self, BatchPolicy, ServeCfg, Session};
+use layermerge::serve::{self, BatchPolicy, ServeCfg, ServeError, Session};
 use layermerge::util::tensor::Tensor;
 
 const B: usize = 4; // spec batch size for the mock deployments
@@ -470,6 +478,171 @@ fn adaptive_policy_serves_and_bounds_its_window() {
         s.cur_window_us
     );
     assert_eq!(s.rows, 40);
+}
+
+#[test]
+fn wait_timeout_hands_the_ticket_back_then_the_result() {
+    let sess = Session::from_fn(
+        B,
+        &TAIL,
+        false,
+        ServeCfg { workers: 1, queue_cap: 16, policy: BatchPolicy::Greedy, ..ServeCfg::default() },
+        |x, t| {
+            std::thread::sleep(Duration::from_millis(50));
+            mock_backend(x, t)
+        },
+    );
+    let x = req(1, 4.0);
+    let tk = sess.submit(x.clone()).unwrap();
+    // 5ms against a 50ms batch: the bounded wait must return the ticket,
+    // not block to completion
+    let tk = match tk.wait_timeout(Duration::from_millis(5)) {
+        Err(tk) => tk,
+        Ok(r) => panic!("a 50ms batch cannot finish inside a 5ms wait: {r:?}"),
+    };
+    // the handed-back ticket still resolves to the right rows
+    let got = tk
+        .wait_timeout(Duration::from_secs(10))
+        .expect("batch must finish well inside 10s")
+        .unwrap();
+    assert_eq!(got.data, expect(&x));
+}
+
+#[test]
+fn past_deadline_fails_fast_without_enqueue() {
+    let sess = mock_session(1, 8);
+    let d = Instant::now();
+    std::thread::sleep(Duration::from_millis(2));
+    let err = sess.submit_deadline(req(1, 0.0), None, Some(d)).unwrap_err();
+    assert_eq!(err, ServeError::DeadlineExceeded);
+    let s = sess.stats();
+    assert_eq!(s.expired_requests, 1);
+    assert_eq!(s.requests, 0, "an expired request must never reach a batch");
+}
+
+#[test]
+fn queued_request_expires_at_dispatch_while_ewma_is_cold() {
+    // worker held 40ms by the first batch; the deadlined request behind
+    // it is ADMITTED (no EWMA signal yet -> admission control stays out
+    // of the way) and must then expire at dispatch time, typed
+    let sess = Session::from_fn(
+        B,
+        &TAIL,
+        false,
+        ServeCfg { workers: 1, queue_cap: 16, policy: BatchPolicy::Greedy, ..ServeCfg::default() },
+        |x, t| {
+            std::thread::sleep(Duration::from_millis(40));
+            mock_backend(x, t)
+        },
+    );
+    let t1 = sess.submit(req(B, 0.0)).unwrap();
+    std::thread::sleep(Duration::from_millis(10)); // the worker is mid-batch
+    let d = Instant::now() + Duration::from_millis(5);
+    let t2 = sess.submit_deadline(req(1, 1.0), None, Some(d)).unwrap();
+    assert_eq!(t2.wait_coded().unwrap_err(), ServeError::DeadlineExceeded);
+    t1.wait().unwrap();
+    let s = sess.stats();
+    assert_eq!(s.expired_requests, 1);
+    assert_eq!(s.shed_requests, 0, "cold EWMA must not shed");
+}
+
+#[test]
+fn admission_control_sheds_with_a_warm_ewma() {
+    let cfg = ServeCfg {
+        workers: 1,
+        queue_cap: 64,
+        policy: BatchPolicy::Greedy,
+        slo: Some(Duration::from_millis(5)),
+        ..ServeCfg::default()
+    };
+    let sess = Session::from_fn(B, &TAIL, false, cfg, |x, t| {
+        std::thread::sleep(Duration::from_millis(30));
+        mock_backend(x, t)
+    });
+    // cold EWMA: always admitted; this warms the service estimate
+    sess.submit(req(B, 0.0)).unwrap().wait().unwrap();
+    assert!(sess.ewma_service_us() >= 20_000, "{}", sess.ewma_service_us());
+    // warm: one ~30ms predicted batch against a 5ms SLO -> shed
+    let err = sess.submit_deadline(req(1, 1.0), None, None).unwrap_err();
+    match err {
+        ServeError::Shed { predicted_us, budget_us, .. } => {
+            assert!(predicted_us > budget_us, "{predicted_us} <= {budget_us}");
+            assert_eq!(budget_us, 5_000, "budget must be the configured SLO");
+        }
+        other => panic!("expected Shed, got {other:?}"),
+    }
+    assert_eq!(sess.stats().shed_requests, 1);
+}
+
+#[test]
+fn backend_failures_are_typed_and_count_failed_batches() {
+    let calls = Arc::new(AtomicUsize::new(0));
+    let c2 = Arc::clone(&calls);
+    let sess = Session::from_fn(
+        B,
+        &TAIL,
+        false,
+        ServeCfg { workers: 1, queue_cap: 16, policy: BatchPolicy::Greedy, ..ServeCfg::default() },
+        move |x, t| match c2.fetch_add(1, Ordering::Relaxed) {
+            0 => anyhow::bail!("transient device fault"),
+            1 => panic!("kaboom"),
+            _ => mock_backend(x, t),
+        },
+    );
+    let e1 = sess.submit(req(1, 0.0)).unwrap().wait_coded().unwrap_err();
+    assert!(
+        matches!(e1, ServeError::BackendFailed(ref m) if m.contains("transient")),
+        "{e1:?}"
+    );
+    let e2 = sess.submit(req(1, 1.0)).unwrap().wait_coded().unwrap_err();
+    assert!(
+        matches!(e2, ServeError::BackendFailed(ref m) if m.contains("panicked")),
+        "{e2:?}"
+    );
+    // the worker survived both faults; the third batch serves
+    let x = req(2, 2.0);
+    assert_eq!(sess.submit(x.clone()).unwrap().wait().unwrap().data, expect(&x));
+    let s = sess.stats();
+    assert_eq!(s.failed_batches, 2, "each faulted batch counts exactly once");
+}
+
+#[test]
+fn drive_open_deadline_separates_outcomes_from_successes() {
+    // 20ms batches, 5ms deadlines, arrivals far above capacity: most
+    // requests shed or expire, and the report must keep them out of the
+    // success percentiles while still accounting for every completion
+    let sess = Session::from_fn(
+        B,
+        &TAIL,
+        false,
+        ServeCfg { workers: 1, queue_cap: 64, policy: BatchPolicy::Greedy, ..ServeCfg::default() },
+        |x, t| {
+            std::thread::sleep(Duration::from_millis(20));
+            mock_backend(x, t)
+        },
+    );
+    let r = serve::drive_open_deadline(
+        &sess,
+        2_000.0,
+        30,
+        11,
+        Some(Duration::from_millis(5)),
+        |_, i| (req(1, i as f32), None),
+    )
+    .unwrap();
+    assert_eq!(r.requests, 30);
+    assert_eq!(
+        r.ok_requests + r.shed + r.expired + r.failed,
+        30,
+        "classification must partition completions: {r:?}"
+    );
+    assert!(r.shed + r.expired > 0, "deadlines never engaged: {r:?}");
+    assert!(r.ok_requests < 30, "nothing can be served this overloaded: {r:?}");
+    if r.ok_requests == 0 {
+        assert!(r.p50_ms.is_nan(), "empty success set must report NaN percentiles");
+    } else {
+        assert!(r.p50_ms.is_finite());
+    }
 }
 
 #[test]

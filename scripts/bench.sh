@@ -9,7 +9,10 @@
 #     host backend, with transfer counts (the `resident_forward` record;
 #     read-modify-write)
 #   * serving          — micro-batched Session throughput at 1/4/16
-#     concurrent clients (read-modify-write)
+#     concurrent clients, window-policy comparison, and the TCP tier
+#     over loopback at 0.5x/1x/2x capacity (`serving_net`: goodput,
+#     shed rate, p99-of-admitted; skips cleanly with no loopback)
+#     (read-modify-write)
 #
 # Usage:
 #   scripts/bench.sh              # host-only benches, no artifacts needed

@@ -20,6 +20,12 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+# the network-tier suite is part of the line above; run it by name too so
+# a filtered/partial test invocation can never silently drop the
+# robustness gate (loopback-unavailable environments self-skip)
+echo "== cargo test -q --test serve_net =="
+cargo test -q --test serve_net
+
 if [ "${CI_SKIP_CLIPPY:-0}" != "1" ] && cargo clippy --version >/dev/null 2>&1; then
     echo "== cargo clippy --all-targets -- -D warnings =="
     cargo clippy --all-targets -- -D warnings
