@@ -8,9 +8,12 @@
 //! number, not a guess.
 //!
 //! Extends `BENCH_merge.json` (schema `layermerge.bench.merge.v1`) with
-//! `serving`, `serving_window`, and `serving_net` records (the last
-//! drives the TCP tier over loopback at 0.5x/1x/2x capacity and records
-//! goodput, shed rate, and p99-of-admitted): read-modify-write so the
+//! `serving`, `serving_window`, `serving_net`, and `serving_fleet`
+//! records (`serving_net` drives the TCP tier over loopback at
+//! 0.5x/1x/2x capacity and records goodput, shed rate, and
+//! p99-of-admitted; `serving_fleet` records the multi-tenant fleet's
+//! shared-weight dedup bytes and the deadline router's goodput against
+//! an always-biggest-plan baseline): read-modify-write so the
 //! merge/forward rows written by `cargo bench --bench merge_ops` are
 //! preserved, per the ROADMAP rule that perf records are extended, never
 //! replaced.  `BENCH_SMOKE=1` runs tiny request counts and skips the
@@ -320,6 +323,199 @@ fn net_tier_bench(
     Ok(())
 }
 
+const FLEET_CHEAP_DISPATCH_US: u64 = 800;
+const FLEET_CHEAP_ROW_US: u64 = 25;
+const FLEET_BIG_DISPATCH_US: u64 = 6_000;
+const FLEET_BIG_ROW_US: u64 = 250;
+
+/// A sleep-based fleet rung with a fixed cost profile (the ladder's
+/// compressed/original pair is modelled as cheap vs expensive service).
+fn fleet_rung(
+    dispatch_us: u64,
+    row_us: u64,
+) -> impl Fn(&Tensor, Option<&Tensor>) -> anyhow::Result<Tensor> + Send + Sync + 'static {
+    move |x: &Tensor, _t: Option<&Tensor>| {
+        std::thread::sleep(Duration::from_micros(dispatch_us + row_us * x.dims[0] as u64));
+        let rl: usize = x.dims[1..].iter().product();
+        let b = x.dims[0];
+        let mut out = Tensor::zeros(&[b, 2]);
+        for r in 0..b {
+            let row = &x.data[r * rl..(r + 1) * rl];
+            out.data[r * 2] = row.iter().sum();
+            out.data[r * 2 + 1] = row.iter().map(|v| v * v).sum();
+        }
+        Ok(out)
+    }
+}
+
+/// Open-loop load pinned to one ladder rung via `submit_rung` — the
+/// "always-biggest-plan" baseline the router's goodput is judged against.
+fn drive_pinned(
+    fleet: &layermerge::serve::fleet::Fleet,
+    rung: usize,
+    rps: f64,
+    requests: usize,
+    deadline: Duration,
+    seed: u64,
+) -> anyhow::Result<(usize, f64)> {
+    let mut rng = layermerge::util::rng::Rng::new(seed);
+    let mut pending = Vec::with_capacity(requests);
+    let mut sched = 0.0f64;
+    let t0 = std::time::Instant::now();
+    for i in 0..requests {
+        sched += -(1.0 - rng.uniform()).ln() / rps;
+        let target = t0 + Duration::from_secs_f64(sched);
+        if let Some(d) = target.checked_duration_since(std::time::Instant::now()) {
+            std::thread::sleep(d);
+        }
+        let rl: usize = MOCK_TAIL.iter().product();
+        let x = Tensor::new(
+            vec![1, MOCK_TAIL[0]],
+            (0..rl).map(|k| (i + k) as f32 * 0.5).collect(),
+        );
+        let arrival = std::time::Instant::now();
+        if let Ok(tk) = fleet.submit_rung("t", rung, x, None, Some(arrival + deadline)) {
+            pending.push(tk);
+        }
+    }
+    let mut ok = 0usize;
+    for tk in pending {
+        if matches!(tk.wait_timeout_coded(Duration::from_secs(30)), Ok(Ok(_))) {
+            ok += 1;
+        }
+    }
+    Ok((ok, t0.elapsed().as_secs_f64()))
+}
+
+/// The `serving_fleet` record: (a) shared-weight dedup bytes when two
+/// tenants deploy the same host-lowered budget ladder through one
+/// [`WeightCache`]; (b) goodput of deadline-aware ladder routing vs the
+/// always-biggest-plan baseline under identical open-loop load.
+fn fleet_bench(
+    rows: &mut Vec<Json>,
+    derived: &mut Vec<(String, Json)>,
+) -> anyhow::Result<()> {
+    use layermerge::exec::{Format, Plan};
+    use layermerge::serve::fleet::{drive_fleet, Fleet, FleetCfg, FleetLoad, TenantCfg};
+
+    println!("== serving fleet benches (multi-tenant ladder) ==");
+    // -- (a) dedup: two tenants share one base model's 2-rung ladder ------
+    let engine = Engine::host();
+    let (spec, params) = layermerge::ir::synth::by_name("hostnet-tiny")
+        .ok_or_else(|| anyhow::anyhow!("hostnet-tiny synthetic spec missing"))?;
+    let orig = Arc::new(Plan::original(&spec, &params)?);
+    let (a, c, spans) = layermerge::solver::depth::greedy_full_solution(&spec);
+    let merged = Arc::new(Plan::from_solution(&spec, &params, &a, &c, &spans)?);
+    let fleet = Fleet::new(FleetCfg { workers: 2, ..FleetCfg::default() });
+    for name in ["interactive", "batch"] {
+        fleet.add_tenant(TenantCfg::new(name, 1, BatchPolicy::Greedy))?;
+        fleet.deploy(name, &engine, &merged, Format::Fused, 200)?;
+        fleet.deploy(name, &engine, &orig, Format::Fused, 800)?;
+    }
+    let fs = fleet.stats();
+    println!(
+        "  weight dedup: {} tenants x {} rungs, {} unique bytes, {} bytes deduped away",
+        fs.tenants, fs.rungs / fs.tenants.max(1), fs.unique_weight_bytes, fs.dedup_saved_bytes
+    );
+    rows.push(Json::obj(vec![
+        ("name", Json::str("fleet dedup hostnet-tiny")),
+        ("iters", Json::num(fs.rungs as f64)),
+        ("unique_weight_bytes", Json::num(fs.unique_weight_bytes as f64)),
+        ("dedup_saved_bytes", Json::num(fs.dedup_saved_bytes as f64)),
+    ]));
+    derived.push((
+        "fleet_dedup_saved_bytes".into(),
+        Json::num(fs.dedup_saved_bytes as f64),
+    ));
+    derived.push((
+        "fleet_unique_weight_bytes".into(),
+        Json::num(fs.unique_weight_bytes as f64),
+    ));
+    fleet.shutdown();
+
+    // -- (b) router goodput vs always-biggest baseline --------------------
+    // cheap rung fits the deadline at this load; the big rung alone
+    // cannot keep up, so pinning everything to it (what a ladder-less
+    // deployment would do) starves goodput
+    let requests = if smoke() { 24 } else { 300 };
+    let deadline = Duration::from_millis(25);
+    let cheap_batch_us =
+        (FLEET_CHEAP_DISPATCH_US + FLEET_CHEAP_ROW_US * MOCK_BATCH as u64) as f64;
+    let rps = 0.6 * 2.0 * MOCK_BATCH as f64 * 1e6 / cheap_batch_us;
+    let make_fleet = || -> anyhow::Result<Fleet> {
+        let f = Fleet::new(FleetCfg { workers: 2, queue_cap: 512, quantum_rows: 4 });
+        f.add_tenant(TenantCfg::new("t", 1, BatchPolicy::Greedy))?;
+        f.deploy_fn(
+            "t", MOCK_BATCH, &MOCK_TAIL, false, 1_000,
+            fleet_rung(FLEET_CHEAP_DISPATCH_US, FLEET_CHEAP_ROW_US),
+        )?;
+        f.deploy_fn(
+            "t", MOCK_BATCH, &MOCK_TAIL, false, 8_000,
+            fleet_rung(FLEET_BIG_DISPATCH_US, FLEET_BIG_ROW_US),
+        )?;
+        Ok(f)
+    };
+
+    let routed = make_fleet()?;
+    let reports = drive_fleet(
+        &routed,
+        &[FleetLoad {
+            tenant: "t".into(),
+            rps,
+            requests,
+            deadline: Some(deadline),
+            seed: 0xf1ee7,
+        }],
+        |_, i| {
+            let rl: usize = MOCK_TAIL.iter().product();
+            (
+                Tensor::new(
+                    vec![1, MOCK_TAIL[0]],
+                    (0..rl).map(|k| (i + k) as f32 * 0.5).collect(),
+                ),
+                None,
+            )
+        },
+    )?;
+    let r = &reports[0];
+    let rs = routed.router_stats();
+    println!("{}", r.row(&format!("fleet routed rps={rps:.0}")));
+    println!(
+        "  router: {} hits, {} fallbacks, {} sheds (hit-rate {:.2})",
+        rs.hits, rs.fallbacks, rs.sheds, rs.hit_rate()
+    );
+    routed.shutdown();
+
+    let pinned = make_fleet()?;
+    let (base_ok, base_wall) =
+        drive_pinned(&pinned, 1, rps, requests, deadline, 0xf1ee7)?;
+    let base_goodput = base_ok as f64 / base_wall.max(1e-9);
+    println!(
+        "fleet always-biggest           {rps:.0} rps  ok {base_ok:>4}  goodput {base_goodput:>7.1}/s"
+    );
+    pinned.shutdown();
+
+    let finite = |v: f64| Json::num(if v.is_finite() { v } else { -1.0 });
+    rows.push(Json::obj(vec![
+        ("name", Json::str(&format!("fleet routed rps={rps:.0}"))),
+        ("iters", Json::num(r.requests as f64)),
+        ("goodput_rps", finite(r.goodput_rps)),
+        ("shed_rate", Json::num(r.shed_rate())),
+        ("p50_ms", finite(r.p50_ms)),
+        ("p99_ms", finite(r.p99_ms)),
+        ("router_hit_rate", Json::num(rs.hit_rate())),
+        ("baseline_goodput_rps", finite(base_goodput)),
+    ]));
+    derived.push(("fleet_router_goodput".into(), finite(r.goodput_rps)));
+    derived.push(("fleet_baseline_goodput".into(), finite(base_goodput)));
+    derived.push((
+        "fleet_router_vs_biggest".into(),
+        Json::num(r.goodput_rps / base_goodput.max(1e-9)),
+    ));
+    derived.push(("fleet_router_hit_rate".into(), Json::num(rs.hit_rate())));
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let mut rows: Vec<Json> = Vec::new();
     let mut derived: Vec<(String, Json)> = Vec::new();
@@ -358,6 +554,7 @@ fn main() -> anyhow::Result<()> {
 
     window_policy_bench(&mut rows, &mut derived)?;
     net_tier_bench(&mut rows, &mut derived)?;
+    fleet_bench(&mut rows, &mut derived)?;
 
     // a deployed plan, when the artifacts + real XLA runtime are present
     let root = std::path::Path::new("artifacts");
@@ -417,14 +614,14 @@ fn main() -> anyhow::Result<()> {
             if let Some(prev_rows) = prev.get("rows").and_then(|r| r.as_arr()) {
                 for r in prev_rows {
                     let name = r.get("name").and_then(|n| n.as_str()).unwrap_or("");
-                    if !name.starts_with("serve ") {
+                    if !name.starts_with("serve ") && !name.starts_with("fleet ") {
                         all_rows.push(r.clone());
                     }
                 }
             }
             if let Some(prev_d) = prev.get("derived").and_then(|d| d.as_obj()) {
                 for (k, v) in prev_d {
-                    if !k.starts_with("serving_") {
+                    if !k.starts_with("serving_") && !k.starts_with("fleet_") {
                         all_derived.push((k.clone(), v.clone()));
                     }
                 }

@@ -38,7 +38,7 @@
 //! (Tables 1-5) and for the merged-vs-pruned numerics report.
 
 use std::collections::{BTreeMap, BTreeSet};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{Context, Result};
@@ -291,6 +291,119 @@ impl Plan {
     }
 }
 
+/// Content-addressed upload cache: dedups identical weight operands
+/// across plans lowered against the same backend.
+///
+/// The product shape of depth compression is one base model lowered into
+/// a *ladder* of budget variants; merged spans that coincide across
+/// budget points (and every untouched operand — group-norm affines,
+/// projections, attention/head weights) are byte-identical, so a fleet
+/// threads one `WeightCache` through [`CompiledPlan::lower_cached`] and
+/// every repeated operand becomes an `Arc` refcount bump instead of a
+/// fresh upload.  Keys are a 64-bit FNV-1a over (layout tag, dims, f32
+/// bits): the layout tag separates plain uploads from `upload_weight`
+/// packings (plain vs depthwise conv pack), so two tensors with equal
+/// bytes but different execution layouts never alias.
+///
+/// Byte accounting feeds `serve::fleet::FleetStats`:
+/// [`WeightCache::unique_bytes`] is what the deduped fleet actually
+/// holds, [`WeightCache::saved_bytes`] is what naive per-plan lowering
+/// would have uploaded on top of that.
+pub struct WeightCache {
+    inner: Mutex<WeightCacheInner>,
+}
+
+#[derive(Default)]
+struct WeightCacheInner {
+    map: BTreeMap<u64, Value>,
+    unique_bytes: usize,
+    saved_bytes: usize,
+}
+
+impl WeightCache {
+    pub fn new() -> WeightCache {
+        WeightCache { inner: Mutex::new(WeightCacheInner::default()) }
+    }
+
+    /// FNV-1a-64 over layout tag + dims + raw f32 bits.
+    fn key(tag: u8, t: &Tensor) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut eat = |byte: u8| {
+            h ^= u64::from(byte);
+            h = h.wrapping_mul(0x100_0000_01b3);
+        };
+        eat(tag);
+        for &d in &t.dims {
+            for b in (d as u64).to_le_bytes() {
+                eat(b);
+            }
+        }
+        for &v in &t.data {
+            for b in v.to_bits().to_le_bytes() {
+                eat(b);
+            }
+        }
+        h
+    }
+
+    /// Upload `t` through `be` (via `upload_weight` when `desc` is given,
+    /// plain `upload` otherwise), or return the cached [`Value`] clone if
+    /// an identical operand was uploaded before.
+    fn get_or_upload(
+        &self,
+        be: &dyn Backend,
+        desc: Option<&OpDesc>,
+        t: &Tensor,
+    ) -> Result<Value> {
+        let tag = match desc {
+            None => 0u8,
+            Some(OpDesc::Conv { depthwise, .. }) => 1 + u8::from(*depthwise),
+            Some(_) => 3,
+        };
+        let k = Self::key(tag, t);
+        let bytes = t.data.len() * std::mem::size_of::<f32>();
+        // lowering is a one-time cost; holding the lock across the upload
+        // keeps hit/miss accounting exact under concurrent lowering
+        let mut g = self.inner.lock().unwrap();
+        if let Some(v) = g.map.get(&k) {
+            g.saved_bytes += bytes;
+            return Ok(v.clone());
+        }
+        let v = match desc {
+            Some(d) => be.upload_weight(d, t)?,
+            None => be.upload(t)?,
+        };
+        g.unique_bytes += bytes;
+        g.map.insert(k, v.clone());
+        Ok(v)
+    }
+
+    /// Bytes of distinct weight data actually uploaded through this cache.
+    pub fn unique_bytes(&self) -> usize {
+        self.inner.lock().unwrap().unique_bytes
+    }
+
+    /// Bytes a cache-less lowering would have uploaded again (dedup wins).
+    pub fn saved_bytes(&self) -> usize {
+        self.inner.lock().unwrap().saved_bytes
+    }
+
+    /// Distinct cached operands (diagnostics).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Default for WeightCache {
+    fn default() -> Self {
+        WeightCache::new()
+    }
+}
+
 impl CompiledPlan {
     /// Lower a plan against a backend: resolve every op once
     /// (`Backend::lower_op`), upload every operand tensor once as a
@@ -310,8 +423,38 @@ impl CompiledPlan {
         backend: Arc<dyn Backend>,
         fmt: Format,
     ) -> Result<CompiledPlan> {
+        CompiledPlan::lower_cached(plan, backend, fmt, None)
+    }
+
+    /// [`CompiledPlan::lower`] with an optional shared [`WeightCache`]:
+    /// identical weight operands (same bytes, dims, and execution layout)
+    /// resolve to `Arc` clones of the first upload instead of fresh
+    /// backend buffers.  A fleet lowering a ladder of budget variants of
+    /// one base model threads a single cache through every rung — merged
+    /// spans that coincide across budget points share storage, and the
+    /// cache's byte counters feed `FleetStats`.
+    pub fn lower_cached(
+        plan: Arc<Plan>,
+        backend: Arc<dyn Backend>,
+        fmt: Format,
+        cache: Option<&WeightCache>,
+    ) -> Result<CompiledPlan> {
         let b = plan.batch;
         let be = &*backend;
+        // every operand upload funnels through these two, so a cache hit
+        // is indistinguishable from a fresh upload to the rest of lowering
+        let up = |t: &Tensor| -> Result<Value> {
+            match cache {
+                Some(c) => c.get_or_upload(be, None, t),
+                None => be.upload(t),
+            }
+        };
+        let upw = |desc: &OpDesc, t: &Tensor| -> Result<Value> {
+            match cache {
+                Some(c) => c.get_or_upload(be, Some(desc), t),
+                None => be.upload_weight(desc, t),
+            }
+        };
 
         // Pass 1 — dataflow: which steps read their input from the running
         // buffer vs a stored boundary, which boundaries need a slot at
@@ -404,8 +547,8 @@ impl CompiledPlan {
                             Some((
                                 be.lower_op(&desc)
                                     .with_context(|| format!("proj op at step {s}"))?,
-                                be.upload_weight(&desc, &p.w)?,
-                                be.upload(&Tensor::new(vec![p.b.len()], p.b.clone()))?,
+                                upw(&desc, &p.w)?,
+                                up(&Tensor::new(vec![p.b.len()], p.b.clone()))?,
                             ))
                         }
                         None => None,
@@ -449,8 +592,8 @@ impl CompiledPlan {
                             groups: *groups,
                         })
                         .with_context(|| format!("gn op at step {s}"))?,
-                        be.upload(&Tensor::new(vec![scale.len()], scale.clone()))?,
-                        be.upload(&Tensor::new(vec![bias.len()], bias.clone()))?,
+                        up(&Tensor::new(vec![scale.len()], scale.clone()))?,
+                        up(&Tensor::new(vec![bias.len()], bias.clone()))?,
                     )),
                     None => None,
                 };
@@ -499,8 +642,8 @@ impl CompiledPlan {
                         post.push(CompiledPost::Attention(
                             be.lower_op(&OpDesc::Attention { b, h: hc, w: wc, c: cc })
                                 .with_context(|| format!("attn op at step {s}"))?,
-                            be.upload(wqkv)?,
-                            be.upload(wout)?,
+                            up(wqkv)?,
+                            up(wout)?,
                         ));
                     }
                     Post::Upsample => {
@@ -529,8 +672,8 @@ impl CompiledPlan {
                 conv,
                 // packed once into the backend's execution layout — the
                 // forward never re-transposes a weight
-                weight: be.upload_weight(&conv_desc(None, false), &m.weight)?,
-                bias: be.upload(&Tensor::new(vec![co], m.bias.clone()))?,
+                weight: upw(&conv_desc(None, false), &m.weight)?,
+                bias: up(&Tensor::new(vec![co], m.bias.clone()))?,
                 fuse_res,
                 gn,
                 res,
@@ -567,8 +710,8 @@ impl CompiledPlan {
                         model: plan.spec_name.clone(),
                     })
                     .context("head op")?,
-                    be.upload(hw)?,
-                    be.upload(&Tensor::new(vec![hb.len()], hb.clone()))?,
+                    up(hw)?,
+                    up(&Tensor::new(vec![hb.len()], hb.clone()))?,
                 ))
             }
             None => None,
@@ -951,6 +1094,23 @@ mod tests {
         fn check<T: Send + Sync + 'static>() {}
         check::<CompiledPlan>();
         check::<Plan>();
+    }
+
+    #[test]
+    fn weight_cache_key_separates_layouts_not_contents() {
+        let a = Tensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let b = Tensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        // same bytes + dims + tag -> same key (the dedup hit)
+        assert_eq!(WeightCache::key(0, &a), WeightCache::key(0, &b));
+        // same bytes under a different execution layout must not alias
+        assert_ne!(WeightCache::key(0, &a), WeightCache::key(1, &a));
+        assert_ne!(WeightCache::key(1, &a), WeightCache::key(2, &a));
+        // same bytes, different shape must not alias
+        let c = Tensor::new(vec![3, 2], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_ne!(WeightCache::key(0, &a), WeightCache::key(0, &c));
+        // different bytes must not alias
+        let d = Tensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 7.0]);
+        assert_ne!(WeightCache::key(0, &a), WeightCache::key(0, &d));
     }
 
     #[test]

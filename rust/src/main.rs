@@ -9,6 +9,9 @@
 //!   serve    --model M                 micro-batched serving load test
 //!   serve-net --model M                TCP serving tier (admission
 //!                                      control, shedding, deadlines)
+//!   fleet    --model M                 multi-tenant budget-ladder fleet
+//!                                      (weight dedup, DRR fairness,
+//!                                      deadline routing)
 //!
 //! Global flags: --artifacts DIR, --fast (analytical latency + short
 //! schedules), --measured (pin measured latency, overrides --fast),
@@ -80,6 +83,10 @@ fn usage() -> &'static str {
        serve      --model M              micro-batched serving load test\n\
        serve-net  --model M              TCP serving tier (deadline-aware\n\
                                          admission control + load shedding)\n\
+       fleet      --model M              multi-tenant budget-ladder fleet:\n\
+                                         shared-weight dedup, weighted-fair\n\
+                                         scheduling, deadline-aware ladder\n\
+                                         routing (host backend)\n\
        table1..table11                   regenerate a paper table\n\
        fig1..fig5                        regenerate a paper figure\n\
        all                               every table and figure\n\
@@ -123,7 +130,13 @@ fn usage() -> &'static str {
                          attach (default 25; 0 = none)\n\
        with --arrival-rps F the command binds, self-drives F req/s of\n\
        open-loop Poisson load over loopback, prints the goodput/shed\n\
-       report, and exits; without it the server listens until killed\n"
+       report, and exits; without it the server listens until killed\n\
+     fleet flags (plus the serve policy flags above):\n\
+       --requests N      interactive-tenant request count (default 256;\n\
+                         the batch tenant offers half)\n\
+       --arrival-rps F   interactive-tenant arrival rate (default 120)\n\
+       --deadline-ms N   interactive-tenant per-request deadline\n\
+                         (default 25; 0 = none)\n"
 }
 
 fn build_cfg(args: &Args) -> PipelineCfg {
@@ -176,10 +189,11 @@ fn main() -> Result<()> {
         return match args.cmd.as_str() {
             "serve" => serve_host(&ctx, model, &args),
             "serve-net" => serve_net_host(&ctx, model, &args),
+            "fleet" => fleet_host(&ctx, model, &args),
             "profile" => profile_host(&ctx, model),
             other => bail!(
                 "{other} needs the PJRT backend (gated graph / tables); \
-                 --backend host supports serve, serve-net, and profile"
+                 --backend host supports serve, serve-net, fleet, and profile"
             ),
         };
     }
@@ -231,6 +245,7 @@ fn main() -> Result<()> {
             let model = args.get("model").context("--model required")?;
             serve_net_pjrt(&ctx, model, &args)?;
         }
+        "fleet" => bail!("fleet runs on the native backend: pass --backend host"),
         "table1" => exp_tables::table1(&ctx)?,
         "table2" => exp_tables::table2(&ctx)?,
         "table3" => exp_tables::table3(&ctx)?,
@@ -621,6 +636,86 @@ fn serve_net_pjrt(ctx: &Ctx, model: &str, args: &Args) -> Result<()> {
     let sess = engine.deploy_cfg(plan, Format::Fused, scfg)?;
     let pool: Vec<Tensor> = pool_xy.into_iter().map(|(x, _)| x).collect();
     run_net_tier(sess, args, pool)
+}
+
+/// `fleet --backend host`: two tenants ("interactive", weight 3, tight
+/// deadlines; "batch", weight 1, no deadlines) share one base model, each
+/// deploying the same two-rung budget ladder — greedy-merged (cheap)
+/// under the original (expensive) — through the fleet's shared weight
+/// cache, so the second tenant's uploads dedup to `Arc` clones.  Drives
+/// both arrival processes concurrently and prints per-tenant reports,
+/// the dedup accounting, and the ladder router's hit/fallback/shed split.
+fn fleet_host(ctx: &Ctx, model: &str, args: &Args) -> Result<()> {
+    use layermerge::exec::Format;
+    use layermerge::serve::fleet::{drive_fleet, Fleet, FleetCfg, FleetLoad, TenantCfg};
+    use layermerge::util::rng::Rng;
+    let requests = args.usize_or("requests", 256).max(1);
+    let rps = args.f64_or("arrival-rps", 120.0).max(1.0);
+    let deadline_ms = args.usize_or("deadline-ms", 25) as u64;
+    let engine = ctx.engine();
+    let (spec, orig, merged) = host_plans(model)?;
+    let fleet = Fleet::new(FleetCfg::default());
+    // seeds for the router's per-rung cost EWMA: rough priors in the
+    // right order (merged cheaper than original); online refinement from
+    // real dispatches takes over within a few batches
+    for (name, weight) in [("interactive", 3usize), ("batch", 1)] {
+        fleet.add_tenant(TenantCfg::new(name, weight, serve_policy(args)?))?;
+        fleet.deploy(name, &engine, &merged, Format::Fused, 300)?;
+        fleet.deploy(name, &engine, &orig, Format::Fused, 1_500)?;
+    }
+    let fs = fleet.stats();
+    println!(
+        "fleet {model} [host backend]: {} tenants x 2-rung ladder (depth {} / {}), \
+         {:.1} KiB unique weights, {:.1} KiB deduped away",
+        fs.tenants,
+        merged.depth(),
+        orig.depth(),
+        fs.unique_weight_bytes as f64 / 1024.0,
+        fs.dedup_saved_bytes as f64 / 1024.0,
+    );
+    let mut rng = Rng::new(0x5e11);
+    let row: usize = spec.h * spec.w * spec.c;
+    let pool: Vec<Tensor> = (0..64)
+        .map(|_| {
+            Tensor::new(
+                vec![1, spec.h, spec.w, spec.c],
+                (0..row).map(|_| rng.normal()).collect(),
+            )
+        })
+        .collect();
+    let deadline =
+        (deadline_ms > 0).then(|| std::time::Duration::from_millis(deadline_ms));
+    let loads = vec![
+        FleetLoad {
+            tenant: "interactive".into(),
+            rps,
+            requests,
+            deadline,
+            seed: 0xf1ee7,
+        },
+        FleetLoad {
+            tenant: "batch".into(),
+            rps: (rps / 2.0).max(1.0),
+            requests: (requests / 2).max(1),
+            deadline: None,
+            seed: 0xba7c4,
+        },
+    ];
+    let reports =
+        drive_fleet(&fleet, &loads, |_, i| (pool[i % pool.len()].clone(), None))?;
+    for (l, r) in loads.iter().zip(&reports) {
+        println!("{}", r.row(&l.tenant));
+    }
+    let rs = fleet.router_stats();
+    println!(
+        "  router: {} hits, {} fallbacks, {} sheds (cheapest-rung hit-rate {:.2})",
+        rs.hits,
+        rs.fallbacks,
+        rs.sheds,
+        rs.hit_rate(),
+    );
+    fleet.shutdown();
+    Ok(())
 }
 
 /// `profile --backend host`: per-format end-to-end latency of the

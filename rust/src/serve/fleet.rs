@@ -1,0 +1,1124 @@
+//! `serve::fleet` — multi-tenant budget-ladder serving on one shared
+//! worker pool.
+//!
+//! The product shape of depth compression is one base model lowered into
+//! a *ladder* of compressed variants at different latency budgets.  A
+//! [`Fleet`] owns N such deployments (tenant → ladder of rungs), and
+//! layers four things on top of the single-tenant [`super::Session`]
+//! machinery (whose queue/dispatch internals it reuses directly —
+//! [`super::Request`], [`super::dispatch_batch`], [`super::BatchCtl`]):
+//!
+//! * **Shared packed weights.**  All rungs lower through one
+//!   [`WeightCache`]: merged spans whose weights coincide across budget
+//!   points (and across tenants serving the same base model) become
+//!   `Arc` clones of a single backend [`crate::runtime::Value`].
+//!   [`FleetStats::unique_weight_bytes`] / [`FleetStats::dedup_saved_bytes`]
+//!   report the dedup win.
+//!
+//! * **Weighted-fair scheduling.**  Each tenant has bounded per-rung
+//!   queues and a configurable weight; the shared workers drain them by
+//!   deficit round-robin (credit in *rows*, `quantum × weight` per
+//!   top-up round), so one tenant's overload cannot starve another —
+//!   pinned by `tests/fleet.rs`.  Each tenant keeps its own
+//!   [`BatchPolicy`] via a per-tenant [`super::BatchCtl`].
+//!
+//! * **Deadline-aware routing.**  [`Fleet::submit`] asks the
+//!   [`Router`] for the cheapest rung whose predicted queue+service
+//!   time (EWMA per rung, seeded from the DP solver's latency estimate
+//!   at deploy) meets the request deadline, falling back up the ladder
+//!   and shedding with the typed [`ServeError::Shed`] when none fits.
+//!
+//! * **Hot plan swap.**  [`Fleet::swap_plan`] replaces a rung's plan
+//!   atomically: every queued request pinned its dispatch handle at
+//!   submit time, so in-flight work completes on the *old* plan
+//!   bit-identically while new submits land on the new plan — zero
+//!   drops across the boundary, no drain pause.
+
+use std::collections::BTreeMap;
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::exec::{CompiledPlan, Format, Plan, WeightCache};
+use crate::ir::Task;
+use crate::util::par;
+use crate::util::tensor::Tensor;
+
+use super::router::{Route, Router, RouterStats, RungCost, RungView};
+use super::{
+    dispatch_batch, fulfill, BatchCtl, BatchPolicy, Dispatch, Engine, LoadReport, Outcomes,
+    Request, ServeError, ServeResult, ServeStats, Ticket, TicketInner, OPEN_LOOP_WAIT_CAP,
+};
+
+// ---------------------------------------------------------------------------
+// Configuration
+// ---------------------------------------------------------------------------
+
+/// Fleet-wide sizing: one worker pool and one DRR scheduler shared by
+/// every tenant.
+#[derive(Debug, Clone, Copy)]
+pub struct FleetCfg {
+    /// Worker threads draining all tenant queues.
+    pub workers: usize,
+    /// Bounded queue capacity per tenant, in *requests* (across its
+    /// rungs).  A full tenant queue sheds (typed [`ServeError::Shed`])
+    /// rather than blocking — fleet ingress is deadline-oriented, and a
+    /// blocked submitter would let one tenant wedge another's client.
+    pub queue_cap: usize,
+    /// DRR credit quantum in rows: each top-up round grants every
+    /// backlogged tenant `quantum_rows × weight` rows of credit.
+    pub quantum_rows: usize,
+}
+
+impl Default for FleetCfg {
+    fn default() -> Self {
+        FleetCfg {
+            workers: par::max_threads().min(4),
+            queue_cap: 256,
+            quantum_rows: 4,
+        }
+    }
+}
+
+/// Per-tenant deployment parameters.
+#[derive(Debug, Clone)]
+pub struct TenantCfg {
+    /// Tenant name — the routing key carried in the wire Infer frame.
+    pub name: String,
+    /// DRR weight (service share relative to other tenants); clamped to
+    /// ≥ 1.
+    pub weight: usize,
+    /// Batch-forming policy for this tenant's dispatches.
+    pub policy: BatchPolicy,
+}
+
+impl TenantCfg {
+    pub fn new(name: &str, weight: usize, policy: BatchPolicy) -> TenantCfg {
+        TenantCfg { name: name.to_string(), weight, policy }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Internal state
+// ---------------------------------------------------------------------------
+
+/// A queued fleet request: the session-tier [`Request`] plus the rung
+/// dispatch it was routed to, **pinned at submit time** so a concurrent
+/// [`Fleet::swap_plan`] never reroutes admitted work (the swap guarantee:
+/// in-flight requests complete on the plan they were admitted to).
+struct FleetReq {
+    req: Request,
+    /// Rung generation at submit; batches coalesce only same-generation
+    /// prefixes so no dispatch ever mixes plans.
+    gen: u64,
+    dispatch: Dispatch,
+    /// The rung's batch size at submit — pinned with the dispatch, so a
+    /// swap that changes B cannot mis-pad an admitted request.
+    batch: usize,
+}
+
+/// One deployed budget point of a tenant's ladder.
+struct Rung {
+    dispatch: Dispatch,
+    /// Bumped by every swap; tags queued requests (see [`FleetReq::gen`]).
+    gen: u64,
+    batch: usize,
+    cost: Arc<RungCost>,
+    queue: VecDeque<FleetReq>,
+    rows_queued: usize,
+}
+
+struct Tenant {
+    weight: usize,
+    /// DRR credit, in rows.  Reset when the tenant's queues drain so idle
+    /// tenants cannot bank unbounded credit.
+    deficit: usize,
+    ctl: Arc<BatchCtl>,
+    rungs: Vec<Rung>,
+    /// Input row shape all rungs share (`[rows, in_tail..]`).
+    in_tail: Vec<usize>,
+    needs_t: bool,
+    stats: Arc<Mutex<ServeStats>>,
+}
+
+impl Tenant {
+    fn queued_requests(&self) -> usize {
+        self.rungs.iter().map(|r| r.queue.len()).sum()
+    }
+}
+
+struct FleetState {
+    tenants: BTreeMap<String, Tenant>,
+    /// DRR visit order (insertion order) + rotating cursor.
+    order: Vec<String>,
+    cursor: usize,
+    closed: bool,
+}
+
+struct FleetShared {
+    state: Mutex<FleetState>,
+    /// Signaled on submit / close / swap — wakes the scheduler.
+    work: Condvar,
+    workers: usize,
+    queue_cap: usize,
+    quantum_rows: usize,
+    router: Router,
+    cache: WeightCache,
+}
+
+// ---------------------------------------------------------------------------
+// FleetStats
+// ---------------------------------------------------------------------------
+
+/// Fleet-wide snapshot: weight-dedup accounting, router telemetry, and
+/// the tenant counters aggregated with `ServeStats + ServeStats`.
+#[derive(Debug, Clone)]
+pub struct FleetStats {
+    /// Bytes of distinct weight data the fleet actually holds.
+    pub unique_weight_bytes: usize,
+    /// Bytes naive per-plan lowering would have uploaded on top —
+    /// the shared-weight dedup win.
+    pub dedup_saved_bytes: usize,
+    pub tenants: usize,
+    pub rungs: usize,
+    pub router: RouterStats,
+    /// All tenants' serve counters summed (`max_queue`/`cur_window_us`
+    /// take the max — see `ServeStats`'s `Add`).
+    pub total: ServeStats,
+}
+
+// ---------------------------------------------------------------------------
+// Fleet
+// ---------------------------------------------------------------------------
+
+/// The multi-tenant serving engine.  `'static`, `Send + Sync`; dropping
+/// (or [`Fleet::shutdown`]) closes every queue, serves already-admitted
+/// requests, and joins the workers.
+pub struct Fleet {
+    shared: Arc<FleetShared>,
+    pool: par::Pool,
+    /// Live-user mark on the global compute pool — `par::shutdown_pool()`
+    /// fails loudly while a fleet is up instead of deadlocking it.
+    _serving: par::ServingGuard,
+}
+
+impl Fleet {
+    pub fn new(cfg: FleetCfg) -> Fleet {
+        let shared = Arc::new(FleetShared {
+            state: Mutex::new(FleetState {
+                tenants: BTreeMap::new(),
+                order: Vec::new(),
+                cursor: 0,
+                closed: false,
+            }),
+            work: Condvar::new(),
+            workers: cfg.workers.max(1),
+            queue_cap: cfg.queue_cap.max(1),
+            quantum_rows: cfg.quantum_rows.max(1),
+            router: Router::new(),
+            cache: WeightCache::new(),
+        });
+        let ws = Arc::clone(&shared);
+        let pool = par::Pool::spawn(cfg.workers, "lm-fleet", move |_| worker_loop(&ws));
+        Fleet { shared, pool, _serving: par::serving_guard() }
+    }
+
+    /// Register a tenant (no rungs yet — deploy its ladder next).  Errors
+    /// on a duplicate name.
+    pub fn add_tenant(&self, cfg: TenantCfg) -> Result<()> {
+        let mut g = self.shared.state.lock().unwrap();
+        anyhow::ensure!(
+            !g.tenants.contains_key(&cfg.name),
+            "fleet: tenant {:?} already exists",
+            cfg.name
+        );
+        g.order.push(cfg.name.clone());
+        g.tenants.insert(
+            cfg.name.clone(),
+            Tenant {
+                weight: cfg.weight.max(1),
+                deficit: 0,
+                ctl: Arc::new(BatchCtl::new(cfg.policy)),
+                rungs: Vec::new(),
+                in_tail: Vec::new(),
+                needs_t: false,
+                stats: Arc::new(Mutex::new(ServeStats::default())),
+            },
+        );
+        Ok(())
+    }
+
+    /// Deploy a lowered plan as the tenant's next ladder rung (append in
+    /// budget order, cheapest/most-compressed first).  `seed_svc_us`
+    /// seeds the rung's routing cost estimate — pass the DP solver's
+    /// latency-table prediction (or a measurement) for the plan so the
+    /// router is sensible before any online signal exists.  Returns the
+    /// rung index.
+    pub fn deploy_compiled(
+        &self,
+        tenant: &str,
+        cp: Arc<CompiledPlan>,
+        seed_svc_us: u64,
+    ) -> Result<usize> {
+        let dims = cp
+            .input_dims()
+            .context("cannot deploy an empty plan (no steps)")?;
+        let batch = cp.batch();
+        let needs_t = cp.task() == Task::Diffusion;
+        self.deploy_dispatch(tenant, Dispatch::Plan(cp), batch, dims[1..].to_vec(), needs_t, seed_svc_us)
+    }
+
+    /// Lower `plan` through the fleet's shared [`WeightCache`] (weights
+    /// coinciding with an already-deployed rung dedup to `Arc` clones)
+    /// and deploy it as the tenant's next rung.
+    pub fn deploy(
+        &self,
+        tenant: &str,
+        engine: &Engine,
+        plan: &Arc<Plan>,
+        fmt: Format,
+        seed_svc_us: u64,
+    ) -> Result<usize> {
+        let cp = CompiledPlan::lower_cached(
+            Arc::clone(plan),
+            Arc::clone(engine.backend()),
+            fmt,
+            Some(&self.shared.cache),
+        )?;
+        self.deploy_compiled(tenant, Arc::new(cp), seed_svc_us)
+    }
+
+    /// Deploy an arbitrary host function as a rung — the fleet analogue
+    /// of [`super::Session::from_fn`]; the test-suite and the mock
+    /// serving bench run the scheduler without any runtime.
+    pub fn deploy_fn<F>(
+        &self,
+        tenant: &str,
+        batch: usize,
+        in_tail: &[usize],
+        needs_t: bool,
+        seed_svc_us: u64,
+        f: F,
+    ) -> Result<usize>
+    where
+        F: Fn(&Tensor, Option<&Tensor>) -> Result<Tensor> + Send + Sync + 'static,
+    {
+        assert!(batch >= 1, "batch must be positive");
+        self.deploy_dispatch(
+            tenant,
+            Dispatch::Fn(Arc::new(f)),
+            batch,
+            in_tail.to_vec(),
+            needs_t,
+            seed_svc_us,
+        )
+    }
+
+    fn deploy_dispatch(
+        &self,
+        tenant: &str,
+        dispatch: Dispatch,
+        batch: usize,
+        in_tail: Vec<usize>,
+        needs_t: bool,
+        seed_svc_us: u64,
+    ) -> Result<usize> {
+        let mut g = self.shared.state.lock().unwrap();
+        let t = g
+            .tenants
+            .get_mut(tenant)
+            .with_context(|| format!("fleet: unknown tenant {tenant:?}"))?;
+        if t.rungs.is_empty() {
+            t.in_tail = in_tail;
+            t.needs_t = needs_t;
+        } else {
+            anyhow::ensure!(
+                t.in_tail == in_tail && t.needs_t == needs_t,
+                "fleet: ladder rungs must share the input shape: tenant {tenant:?} \
+                 serves [b, {:?}] (needs_t={}), new rung is [b, {:?}] (needs_t={})",
+                t.in_tail,
+                t.needs_t,
+                in_tail,
+                needs_t
+            );
+        }
+        t.rungs.push(Rung {
+            dispatch,
+            gen: 0,
+            batch,
+            cost: Arc::new(RungCost::new(seed_svc_us)),
+            queue: VecDeque::new(),
+            rows_queued: 0,
+        });
+        Ok(t.rungs.len() - 1)
+    }
+
+    /// Hot-swap rung `rung` of `tenant` to a new compiled plan (lowered
+    /// through the shared cache by the caller, or anywhere else).  The
+    /// swap is atomic under the scheduler lock: requests admitted before
+    /// it complete on the old plan (their dispatch handle was pinned at
+    /// submit), requests admitted after it run the new plan, nothing is
+    /// dropped and nothing waits for a drain.
+    pub fn swap_compiled(
+        &self,
+        tenant: &str,
+        rung: usize,
+        cp: Arc<CompiledPlan>,
+    ) -> Result<()> {
+        let dims = cp
+            .input_dims()
+            .context("cannot deploy an empty plan (no steps)")?;
+        let batch = cp.batch();
+        let needs_t = cp.task() == Task::Diffusion;
+        self.swap_dispatch(tenant, rung, Dispatch::Plan(cp), batch, dims[1..].to_vec(), needs_t)
+    }
+
+    /// [`Fleet::swap_compiled`] lowering `plan` through the fleet's
+    /// shared weight cache first.
+    pub fn swap_plan(
+        &self,
+        tenant: &str,
+        rung: usize,
+        engine: &Engine,
+        plan: &Arc<Plan>,
+        fmt: Format,
+    ) -> Result<()> {
+        let cp = CompiledPlan::lower_cached(
+            Arc::clone(plan),
+            Arc::clone(engine.backend()),
+            fmt,
+            Some(&self.shared.cache),
+        )?;
+        self.swap_compiled(tenant, rung, Arc::new(cp))
+    }
+
+    /// Function-dispatch swap (tests / mocks).
+    pub fn swap_fn<F>(&self, tenant: &str, rung: usize, batch: usize, f: F) -> Result<()>
+    where
+        F: Fn(&Tensor, Option<&Tensor>) -> Result<Tensor> + Send + Sync + 'static,
+    {
+        let (in_tail, needs_t) = {
+            let g = self.shared.state.lock().unwrap();
+            let t = g
+                .tenants
+                .get(tenant)
+                .with_context(|| format!("fleet: unknown tenant {tenant:?}"))?;
+            (t.in_tail.clone(), t.needs_t)
+        };
+        self.swap_dispatch(tenant, rung, Dispatch::Fn(Arc::new(f)), batch, in_tail, needs_t)
+    }
+
+    fn swap_dispatch(
+        &self,
+        tenant: &str,
+        rung: usize,
+        dispatch: Dispatch,
+        batch: usize,
+        in_tail: Vec<usize>,
+        needs_t: bool,
+    ) -> Result<()> {
+        let mut g = self.shared.state.lock().unwrap();
+        anyhow::ensure!(!g.closed, "fleet: cannot swap after close");
+        let t = g
+            .tenants
+            .get_mut(tenant)
+            .with_context(|| format!("fleet: unknown tenant {tenant:?}"))?;
+        anyhow::ensure!(
+            t.in_tail == in_tail && t.needs_t == needs_t,
+            "fleet: swapped plan must keep the tenant input shape \
+             [b, {:?}] (needs_t={})",
+            t.in_tail,
+            t.needs_t
+        );
+        let r = t
+            .rungs
+            .get_mut(rung)
+            .with_context(|| format!("fleet: tenant {tenant:?} has no rung {rung}"))?;
+        r.dispatch = dispatch;
+        r.batch = batch;
+        r.gen += 1;
+        drop(g);
+        // queued old-generation work may now sit behind a generation
+        // boundary; wake the workers so it drains promptly
+        self.shared.work.notify_all();
+        Ok(())
+    }
+
+    /// Route and enqueue a request for `tenant`.  The router picks the
+    /// cheapest rung whose predicted completion meets the deadline (no
+    /// deadline: the rung with the smallest predicted completion);
+    /// admission sheds when no rung fits or the tenant queue is full.
+    pub fn submit(
+        &self,
+        tenant: &str,
+        x: Tensor,
+        t: Option<Tensor>,
+        deadline: Option<Instant>,
+    ) -> ServeResult<Ticket> {
+        self.submit_inner(tenant, x, t, deadline, None)
+    }
+
+    /// [`Fleet::submit`] pinned to ladder rung `rung`, bypassing the
+    /// router — the "always-biggest-plan" baseline the bench compares
+    /// routing against, and a per-rung test hook.
+    pub fn submit_rung(
+        &self,
+        tenant: &str,
+        rung: usize,
+        x: Tensor,
+        t: Option<Tensor>,
+        deadline: Option<Instant>,
+    ) -> ServeResult<Ticket> {
+        self.submit_inner(tenant, x, t, deadline, Some(rung))
+    }
+
+    fn submit_inner(
+        &self,
+        tenant: &str,
+        x: Tensor,
+        t: Option<Tensor>,
+        deadline: Option<Instant>,
+        pin: Option<usize>,
+    ) -> ServeResult<Ticket> {
+        let now = Instant::now();
+        if x.dims.is_empty() || x.dims[0] < 1 {
+            return Err(ServeError::Rejected(
+                "request must have a leading batch dim".into(),
+            ));
+        }
+        let rows = x.dims[0];
+        let mut g = self.shared.state.lock().unwrap();
+        if g.closed {
+            return Err(ServeError::ShuttingDown);
+        }
+        let ten = g
+            .tenants
+            .get_mut(tenant)
+            .ok_or_else(|| ServeError::Rejected(format!("unknown tenant {tenant:?}")))?;
+        if ten.rungs.is_empty() {
+            return Err(ServeError::Rejected(format!(
+                "tenant {tenant:?} has no deployed plans"
+            )));
+        }
+        validate_shape(&x, &t, &ten.in_tail, ten.needs_t)?;
+        let stats = Arc::clone(&ten.stats);
+        if let Some(d) = deadline {
+            if now >= d {
+                drop(g);
+                stats.lock().unwrap().expired_requests += 1;
+                return Err(ServeError::DeadlineExceeded);
+            }
+        }
+        let queued = ten.queued_requests();
+        if queued >= self.shared.queue_cap {
+            let queued_rows: usize = ten.rungs.iter().map(|r| r.rows_queued).sum();
+            drop(g);
+            stats.lock().unwrap().shed_requests += 1;
+            return Err(ServeError::Shed {
+                queued_rows,
+                predicted_us: u64::MAX,
+                budget_us: budget_from(deadline, now),
+            });
+        }
+        let budget_us = budget_from(deadline, now);
+        // candidate rungs: the pinned one, or everything the request fits
+        // in (rows ≤ B) scored by the router
+        let rung_idx = match pin {
+            Some(i) => {
+                let r = ten.rungs.get(i).ok_or_else(|| {
+                    ServeError::Rejected(format!("tenant {tenant:?} has no rung {i}"))
+                })?;
+                if rows > r.batch {
+                    return Err(ServeError::Rejected(format!(
+                        "request rows {rows} exceed rung {i}'s batch size {}",
+                        r.batch
+                    )));
+                }
+                i
+            }
+            None => {
+                let mut idx = Vec::new();
+                let mut views = Vec::new();
+                for (i, r) in ten.rungs.iter().enumerate() {
+                    if rows <= r.batch {
+                        idx.push(i);
+                        views.push(RungView {
+                            queued_rows: r.rows_queued,
+                            batch: r.batch,
+                            svc_us: r.cost.svc_us(),
+                        });
+                    }
+                }
+                if views.is_empty() {
+                    return Err(ServeError::Rejected(format!(
+                        "request rows {rows} exceed every rung's batch size"
+                    )));
+                }
+                match self
+                    .shared
+                    .router
+                    .route(&views, rows, budget_us, self.shared.workers)
+                {
+                    Route::Hit(v) | Route::Fallback(v) => idx[v],
+                    Route::Shed { predicted_us } => {
+                        let queued_rows: usize =
+                            ten.rungs.iter().map(|r| r.rows_queued).sum();
+                        drop(g);
+                        stats.lock().unwrap().shed_requests += 1;
+                        return Err(ServeError::Shed {
+                            queued_rows,
+                            predicted_us,
+                            budget_us,
+                        });
+                    }
+                }
+            }
+        };
+        let ticket = Arc::new(TicketInner::default());
+        let r = &mut ten.rungs[rung_idx];
+        r.queue.push_back(FleetReq {
+            req: Request {
+                x,
+                t,
+                ticket: Arc::clone(&ticket),
+                enqueued: now,
+                deadline,
+            },
+            gen: r.gen,
+            dispatch: r.dispatch.clone(),
+            batch: r.batch,
+        });
+        r.rows_queued += rows;
+        let depth = ten.queued_requests();
+        drop(g);
+        {
+            let mut st = stats.lock().unwrap();
+            st.max_queue = st.max_queue.max(depth);
+        }
+        self.shared.work.notify_one();
+        Ok(Ticket { inner: ticket })
+    }
+
+    /// One coherent per-tenant counter snapshot (`None` for an unknown
+    /// tenant); `cur_window_us` reflects the tenant's live batch window.
+    pub fn tenant_stats(&self, tenant: &str) -> Option<ServeStats> {
+        let (stats, ctl) = {
+            let g = self.shared.state.lock().unwrap();
+            let t = g.tenants.get(tenant)?;
+            (Arc::clone(&t.stats), Arc::clone(&t.ctl))
+        };
+        let mut s = *stats.lock().unwrap();
+        s.cur_window_us = ctl.window_us() as usize;
+        Some(s)
+    }
+
+    /// Tenant names in DRR order.
+    pub fn tenants(&self) -> Vec<String> {
+        self.shared.state.lock().unwrap().order.clone()
+    }
+
+    /// Requests currently queued for `tenant` (0 for unknown tenants).
+    pub fn queue_depth(&self, tenant: &str) -> usize {
+        let g = self.shared.state.lock().unwrap();
+        g.tenants.get(tenant).map_or(0, Tenant::queued_requests)
+    }
+
+    /// Ladder size of `tenant` (0 for unknown tenants).
+    pub fn rungs(&self, tenant: &str) -> usize {
+        let g = self.shared.state.lock().unwrap();
+        g.tenants.get(tenant).map_or(0, |t| t.rungs.len())
+    }
+
+    pub fn router_stats(&self) -> RouterStats {
+        self.shared.router.stats()
+    }
+
+    /// Fleet-wide snapshot: dedup accounting + router telemetry + the
+    /// sum of every tenant's counters.
+    pub fn stats(&self) -> FleetStats {
+        let (tenants, rungs, stats_handles): (usize, usize, Vec<Arc<Mutex<ServeStats>>>) = {
+            let g = self.shared.state.lock().unwrap();
+            (
+                g.tenants.len(),
+                g.tenants.values().map(|t| t.rungs.len()).sum(),
+                g.tenants.values().map(|t| Arc::clone(&t.stats)).collect(),
+            )
+        };
+        let total = stats_handles
+            .iter()
+            .map(|s| *s.lock().unwrap())
+            .fold(ServeStats::default(), |a, b| a + b);
+        FleetStats {
+            unique_weight_bytes: self.shared.cache.unique_bytes(),
+            dedup_saved_bytes: self.shared.cache.saved_bytes(),
+            tenants,
+            rungs,
+            router: self.shared.router.stats(),
+            total,
+        }
+    }
+
+    /// Stop accepting new requests; already-admitted work is still served.
+    pub fn close(&self) {
+        self.shared.state.lock().unwrap().closed = true;
+        self.shared.work.notify_all();
+    }
+
+    /// Clean shutdown: close, drain every queue, join the workers.
+    pub fn shutdown(mut self) {
+        self.close();
+        self.pool.join();
+    }
+}
+
+impl Drop for Fleet {
+    fn drop(&mut self) {
+        self.close();
+        self.pool.join();
+    }
+}
+
+/// Shape/timestep validation against the tenant ladder's shared input
+/// shape (the per-rung batch bound is checked during routing).
+fn validate_shape(
+    x: &Tensor,
+    t: &Option<Tensor>,
+    in_tail: &[usize],
+    needs_t: bool,
+) -> ServeResult<()> {
+    let reject = |m: String| Err(ServeError::Rejected(m));
+    let rows = x.dims[0];
+    if x.dims[1..] != in_tail[..] {
+        return reject(format!(
+            "request dims {:?} don't match the deployed input [b, {in_tail:?}]",
+            x.dims
+        ));
+    }
+    match (t, needs_t) {
+        (None, true) => reject("deployed plan requires a timestep tensor".into()),
+        (Some(_), false) => reject("deployed plan takes no timestep tensor".into()),
+        (Some(tt), true) if tt.dims != vec![rows] => {
+            reject(format!("timestep dims {:?} must be [{rows}]", tt.dims))
+        }
+        _ => Ok(()),
+    }
+}
+
+/// The admission budget in µs (deadline headroom; `u64::MAX` = none).
+fn budget_from(deadline: Option<Instant>, now: Instant) -> u64 {
+    deadline
+        .map(|d| d.saturating_duration_since(now).as_micros() as u64)
+        .unwrap_or(u64::MAX)
+}
+
+// ---------------------------------------------------------------------------
+// Scheduler
+// ---------------------------------------------------------------------------
+
+/// What one DRR scan decided to do next.
+enum Pick {
+    /// Dispatch this coalesced batch.
+    Batch {
+        /// The dispatch the batch's requests pinned at submit — the old
+        /// plan keeps serving its admitted work across a swap.
+        dispatch: Dispatch,
+        batch: usize,
+        reqs: Vec<Request>,
+        expired_window: bool,
+        cost: Arc<RungCost>,
+        ctl: Arc<BatchCtl>,
+        stats: Arc<Mutex<ServeStats>>,
+    },
+    /// Fail these past-deadline requests fast.
+    Dead { reqs: Vec<Request>, stats: Arc<Mutex<ServeStats>> },
+    /// Nothing actionable before `wake` (None: nothing queued at all).
+    Idle { wake: Option<Instant> },
+    /// Closed and fully drained.
+    Exit,
+}
+
+/// Rows in the dispatchable prefix of a rung queue: consecutive
+/// same-generation requests up to the *front's pinned* batch size
+/// (whole requests only — a swap's generation boundary splits batches so
+/// no dispatch ever mixes plans).
+fn prefix_rows(q: &VecDeque<FleetReq>) -> usize {
+    let Some(front) = q.front() else { return 0 };
+    let (gen, b) = (front.gen, front.batch);
+    let mut rows = 0usize;
+    for fr in q {
+        if fr.gen != gen {
+            break;
+        }
+        let r = fr.req.x.dims[0];
+        if rows + r > b {
+            break;
+        }
+        rows += r;
+        if rows == b {
+            break;
+        }
+    }
+    rows
+}
+
+/// Whether the queue front already forms a dispatch-ready batch — the
+/// session tier's `batch_formed` over generation-tagged queues: the
+/// same-generation prefix reaches the pinned B, or is blocked by a
+/// request that no longer fits, or by a swap's generation boundary.
+fn fleet_batch_formed(q: &VecDeque<FleetReq>) -> bool {
+    let Some(front) = q.front() else { return false };
+    let (gen, b) = (front.gen, front.batch);
+    let mut rows = 0usize;
+    for fr in q {
+        if fr.gen != gen {
+            // a generation boundary blocks coalescing exactly like an
+            // oversize request: ship what is in front of it now
+            return true;
+        }
+        let r = fr.req.x.dims[0];
+        if rows + r >= b {
+            return true;
+        }
+        rows += r;
+    }
+    false
+}
+
+/// One full DRR scan under the scheduler lock.  Visits tenants from the
+/// cursor; a tenant with a dispatch-ready rung batch serves if it has
+/// credit.  If every ready tenant lacks credit, all backlogged tenants
+/// are topped up `quantum × weight` and the scan retries — bounded,
+/// because each round strictly grows every contender's credit toward the
+/// (batch-size-bounded) rows it is asking for.
+fn scan(shared: &FleetShared, g: &mut FleetState) -> Pick {
+    let now = Instant::now();
+    let n = g.order.len();
+    let closed = g.closed;
+    let mut wake: Option<Instant> = None;
+    let mut any_queued = false;
+    loop {
+        let mut ready_without_credit = false;
+        for step in 0..n {
+            let oi = (g.cursor + step) % n;
+            let name = g.order[oi].clone();
+            let t = g.tenants.get_mut(&name).expect("order tracks tenants");
+            let window = Duration::from_micros(t.ctl.window_us());
+            // (ready rung, whether the batching window expiring is why)
+            let mut serve: Option<(usize, bool)> = None;
+            for (ri, r) in t.rungs.iter_mut().enumerate() {
+                // fail expired fronts fast regardless of credit — expiry
+                // is not service, and holding them would distort DRR
+                let mut dead = Vec::new();
+                while let Some(front) = r.queue.front() {
+                    if front.req.deadline.is_some_and(|d| now >= d) {
+                        let fr = r.queue.pop_front().unwrap();
+                        r.rows_queued -= fr.req.x.dims[0];
+                        dead.push(fr.req);
+                    } else {
+                        break;
+                    }
+                }
+                if !dead.is_empty() {
+                    return Pick::Dead { reqs: dead, stats: Arc::clone(&t.stats) };
+                }
+                let Some(front) = r.queue.front() else { continue };
+                any_queued = true;
+                let formed = fleet_batch_formed(&r.queue);
+                let elapsed =
+                    window.is_zero() || now >= front.req.enqueued + window;
+                if closed || formed || elapsed {
+                    serve = Some((ri, !closed && !formed && !window.is_zero()));
+                    break;
+                }
+                let mut w = front.req.enqueued + window;
+                if let Some(d) = front.req.deadline {
+                    w = w.min(d);
+                }
+                wake = Some(wake.map_or(w, |cur| cur.min(w)));
+            }
+            let Some((ri, expired_window)) = serve else { continue };
+            let r = &mut t.rungs[ri];
+            let rows = prefix_rows(&r.queue);
+            if rows == 0 {
+                continue;
+            }
+            if t.deficit < rows {
+                ready_without_credit = true;
+                continue;
+            }
+            // serve: pop the same-generation prefix, carrying its pinned
+            // dispatch and batch size
+            let front = r.queue.front().unwrap();
+            let (gen, batch) = (front.gen, front.batch);
+            let mut dispatch: Option<Dispatch> = None;
+            let mut reqs = Vec::new();
+            let mut took = 0usize;
+            while let Some(front) = r.queue.front() {
+                if front.gen != gen {
+                    break;
+                }
+                let rr = front.req.x.dims[0];
+                if took + rr > batch {
+                    break;
+                }
+                took += rr;
+                let fr = r.queue.pop_front().unwrap();
+                r.rows_queued -= rr;
+                dispatch.get_or_insert(fr.dispatch);
+                reqs.push(fr.req);
+                if took == batch {
+                    break;
+                }
+            }
+            let cost = Arc::clone(&r.cost);
+            t.deficit -= took;
+            if t.queued_requests() == 0 {
+                t.deficit = 0; // drained: no banking credit while idle
+            }
+            let pick = Pick::Batch {
+                dispatch: dispatch.expect("prefix_rows > 0 pops at least one"),
+                batch,
+                reqs,
+                expired_window,
+                cost,
+                ctl: Arc::clone(&t.ctl),
+                stats: Arc::clone(&t.stats),
+            };
+            // stay on this tenant while it has credit (standard DRR);
+            // the cursor moves on when its deficit runs out or it drains
+            g.cursor = oi;
+            return pick;
+        }
+        if ready_without_credit {
+            // top-up round: weight-proportional credit to every tenant
+            // with backlog
+            let quantum = shared.quantum_rows;
+            for t in g.tenants.values_mut() {
+                if t.queued_requests() > 0 {
+                    t.deficit = t.deficit.saturating_add(quantum * t.weight);
+                }
+            }
+            continue;
+        }
+        if closed && !any_queued {
+            return Pick::Exit;
+        }
+        return Pick::Idle { wake };
+    }
+}
+
+fn worker_loop(shared: &FleetShared) {
+    loop {
+        let pick = {
+            let mut g = shared.state.lock().unwrap();
+            loop {
+                match scan(shared, &mut g) {
+                    Pick::Idle { wake } => {
+                        g = match wake {
+                            Some(w) => {
+                                let now = Instant::now();
+                                if now >= w {
+                                    continue; // window elapsed during scan
+                                }
+                                shared.work.wait_timeout(g, w - now).unwrap().0
+                            }
+                            None => {
+                                if g.closed {
+                                    return;
+                                }
+                                shared.work.wait(g).unwrap()
+                            }
+                        };
+                    }
+                    Pick::Exit => return,
+                    other => break other,
+                }
+            }
+        };
+        match pick {
+            Pick::Dead { reqs, stats } => {
+                stats.lock().unwrap().expired_requests += reqs.len();
+                for r in reqs {
+                    fulfill(&r.ticket, Err(ServeError::DeadlineExceeded));
+                }
+                shared.work.notify_one();
+            }
+            Pick::Batch {
+                dispatch,
+                batch,
+                reqs,
+                expired_window,
+                cost,
+                ctl,
+                stats,
+            } => {
+                let done = dispatch_batch(&dispatch, batch, reqs);
+                {
+                    let mut st = stats.lock().unwrap();
+                    st.batches += 1;
+                    st.padded_rows += done.padded;
+                    st.requests += done.requests;
+                    st.rows += done.rows;
+                    st.expired_windows += usize::from(expired_window);
+                    st.queue_wait_us += done.queue_wait_us;
+                    st.service_us += done.svc_us as usize;
+                    st.failed_batches += usize::from(done.failed);
+                }
+                ctl.note_batch(batch, done.rows, done.svc_us);
+                cost.observe(done.svc_us);
+                shared.work.notify_one();
+            }
+            Pick::Idle { .. } | Pick::Exit => unreachable!("resolved in the lock loop"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mixed-tenant load driver
+// ---------------------------------------------------------------------------
+
+/// One tenant's share of a mixed fleet load run.
+#[derive(Debug, Clone)]
+pub struct FleetLoad {
+    pub tenant: String,
+    /// Open-loop arrival rate, requests/second.
+    pub rps: f64,
+    pub requests: usize,
+    /// Per-request deadline (arrival + d); `None` = no deadline.
+    pub deadline: Option<Duration>,
+    pub seed: u64,
+}
+
+/// Drive every tenant's open-loop arrival process concurrently (one
+/// generator thread per [`FleetLoad`]) and report per-tenant
+/// [`LoadReport`]s, in the order of `loads`.  Latency accounting,
+/// percentile rules, and failure classification are exactly
+/// [`LoadReport::from_outcomes`] — the same aggregation every other load
+/// driver uses.
+pub fn drive_fleet<F>(fleet: &Fleet, loads: &[FleetLoad], make_input: F) -> Result<Vec<LoadReport>>
+where
+    F: Fn(&str, usize) -> (Tensor, Option<Tensor>) + Sync,
+{
+    anyhow::ensure!(!loads.is_empty(), "drive_fleet: no loads");
+    for l in loads {
+        anyhow::ensure!(l.rps > 0.0, "drive_fleet: arrival rate must be positive");
+    }
+    let reports: Vec<Result<LoadReport>> = std::thread::scope(|s| {
+        let handles: Vec<_> = loads
+            .iter()
+            .map(|l| {
+                let make_input = &make_input;
+                s.spawn(move || drive_one(fleet, l, make_input))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("fleet load generator panicked"))
+            .collect()
+    });
+    reports.into_iter().collect()
+}
+
+fn drive_one<F>(fleet: &Fleet, l: &FleetLoad, make_input: &F) -> Result<LoadReport>
+where
+    F: Fn(&str, usize) -> (Tensor, Option<Tensor>) + Sync,
+{
+    let before = fleet
+        .tenant_stats(&l.tenant)
+        .with_context(|| format!("drive_fleet: unknown tenant {:?}", l.tenant))?;
+    let mut rng = crate::util::rng::Rng::new(l.seed);
+    let mut pending = Vec::with_capacity(l.requests);
+    let mut out = Outcomes::default();
+    let mut rows = 0usize;
+    let mut sched_s = 0.0f64;
+    let t0 = Instant::now();
+    for i in 0..l.requests {
+        sched_s += -(1.0 - rng.uniform()).ln() / l.rps;
+        let target = t0 + Duration::from_secs_f64(sched_s);
+        if let Some(d) = target.checked_duration_since(Instant::now()) {
+            std::thread::sleep(d);
+        }
+        let (x, t) = make_input(&l.tenant, i);
+        rows += x.dims[0];
+        let arrival = Instant::now();
+        match fleet.submit(&l.tenant, x, t, l.deadline.map(|d| arrival + d)) {
+            Ok(ticket) => pending.push((ticket, arrival)),
+            Err(e) => out.note(&e),
+        }
+    }
+    let mut lat = Vec::with_capacity(pending.len());
+    for (ticket, arrival) in pending {
+        match ticket.wait_done_timeout(OPEN_LOOP_WAIT_CAP) {
+            Ok((Ok(_), done)) => {
+                lat.push(done.saturating_duration_since(arrival).as_secs_f64() * 1e3)
+            }
+            Ok((Err(e), _)) => out.note(&e),
+            Err(_stale) => out.failed += 1,
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let after = fleet
+        .tenant_stats(&l.tenant)
+        .with_context(|| format!("drive_fleet: unknown tenant {:?}", l.tenant))?;
+    LoadReport::from_outcomes(lat, out, rows, wall_s, before, after, 1, l.rps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fleet_handles_are_send_sync_and_static() {
+        fn check<T: Send + Sync + 'static>() {}
+        check::<Fleet>();
+        check::<FleetStats>();
+    }
+
+    #[test]
+    fn fleet_cfg_default_is_sane() {
+        let c = FleetCfg::default();
+        assert!(c.workers >= 1 && c.queue_cap >= 1 && c.quantum_rows >= 1);
+    }
+
+    #[test]
+    fn unknown_tenant_is_rejected() {
+        let f = Fleet::new(FleetCfg { workers: 1, ..FleetCfg::default() });
+        let err = f
+            .submit("nobody", Tensor::zeros(&[1, 2]), None, None)
+            .unwrap_err();
+        assert!(matches!(err, ServeError::Rejected(_)));
+        f.shutdown();
+    }
+
+    #[test]
+    fn tenant_without_rungs_is_rejected() {
+        let f = Fleet::new(FleetCfg { workers: 1, ..FleetCfg::default() });
+        f.add_tenant(TenantCfg::new("a", 1, BatchPolicy::Greedy)).unwrap();
+        let err = f
+            .submit("a", Tensor::zeros(&[1, 2]), None, None)
+            .unwrap_err();
+        assert!(matches!(err, ServeError::Rejected(_)));
+        f.shutdown();
+    }
+
+    #[test]
+    fn duplicate_tenant_errors() {
+        let f = Fleet::new(FleetCfg { workers: 1, ..FleetCfg::default() });
+        f.add_tenant(TenantCfg::new("a", 1, BatchPolicy::Greedy)).unwrap();
+        assert!(f.add_tenant(TenantCfg::new("a", 2, BatchPolicy::Greedy)).is_err());
+        f.shutdown();
+    }
+
+    #[test]
+    fn ladder_shape_mismatch_errors() {
+        let f = Fleet::new(FleetCfg { workers: 1, ..FleetCfg::default() });
+        f.add_tenant(TenantCfg::new("a", 1, BatchPolicy::Greedy)).unwrap();
+        f.deploy_fn("a", 4, &[2], false, 100, |x, _| Ok(x.clone())).unwrap();
+        assert!(f
+            .deploy_fn("a", 4, &[3], false, 100, |x, _| Ok(x.clone()))
+            .is_err());
+        f.shutdown();
+    }
+}

@@ -78,8 +78,10 @@ use crate::runtime::{Backend, HostBackend, LatencyStats, PjrtBackend, Runtime};
 use crate::util::par;
 use crate::util::tensor::Tensor;
 
+pub mod fleet;
 pub mod net;
 pub mod proto;
+pub mod router;
 
 // ---------------------------------------------------------------------------
 // Typed serving errors
@@ -415,19 +417,53 @@ fn occupancy_of(rows: usize, padded_rows: usize) -> f64 {
     }
 }
 
-#[derive(Default)]
-struct StatsInner {
-    requests: AtomicUsize,
-    rows: AtomicUsize,
-    batches: AtomicUsize,
-    padded_rows: AtomicUsize,
-    max_queue: AtomicUsize,
-    expired_windows: AtomicUsize,
-    queue_wait_us: AtomicUsize,
-    service_us: AtomicUsize,
-    shed_requests: AtomicUsize,
-    expired_requests: AtomicUsize,
-    failed_batches: AtomicUsize,
+impl std::ops::Sub for ServeStats {
+    type Output = ServeStats;
+
+    /// Counter delta `after - before` — what the load drivers report a
+    /// run by.  `cur_window_us` is a gauge, not a counter: the newer
+    /// snapshot's value is kept as-is.
+    fn sub(self, before: ServeStats) -> ServeStats {
+        ServeStats {
+            requests: self.requests - before.requests,
+            rows: self.rows - before.rows,
+            batches: self.batches - before.batches,
+            padded_rows: self.padded_rows - before.padded_rows,
+            // high-water mark, not a counter: the newer value stands
+            max_queue: self.max_queue,
+            expired_windows: self.expired_windows - before.expired_windows,
+            queue_wait_us: self.queue_wait_us - before.queue_wait_us,
+            service_us: self.service_us - before.service_us,
+            cur_window_us: self.cur_window_us,
+            shed_requests: self.shed_requests - before.shed_requests,
+            expired_requests: self.expired_requests - before.expired_requests,
+            failed_batches: self.failed_batches - before.failed_batches,
+        }
+    }
+}
+
+impl std::ops::Add for ServeStats {
+    type Output = ServeStats;
+
+    /// Field-wise sum — the fleet aggregates per-tenant snapshots with
+    /// it.  `max_queue` and `cur_window_us` take the max (they are
+    /// high-water/gauge values, not additive counters).
+    fn add(self, o: ServeStats) -> ServeStats {
+        ServeStats {
+            requests: self.requests + o.requests,
+            rows: self.rows + o.rows,
+            batches: self.batches + o.batches,
+            padded_rows: self.padded_rows + o.padded_rows,
+            max_queue: self.max_queue.max(o.max_queue),
+            expired_windows: self.expired_windows + o.expired_windows,
+            queue_wait_us: self.queue_wait_us + o.queue_wait_us,
+            service_us: self.service_us + o.service_us,
+            cur_window_us: self.cur_window_us.max(o.cur_window_us),
+            shed_requests: self.shed_requests + o.shed_requests,
+            expired_requests: self.expired_requests + o.expired_requests,
+            failed_batches: self.failed_batches + o.failed_batches,
+        }
+    }
 }
 
 #[derive(Default)]
@@ -556,18 +592,17 @@ struct AdaptCtl {
     ewma_svc_us: u64,
 }
 
-struct Shared {
-    state: Mutex<QState>,
-    not_empty: Condvar,
-    not_full: Condvar,
-    stats: StatsInner,
-    /// The deployed batch-forming policy (drives the worker wait loop and
-    /// the adaptive controller in [`run_batch`]).
+/// One batch-forming policy instance: the deployed [`BatchPolicy`], the
+/// window it currently applies, and the occupancy/service EWMA state the
+/// `Adaptive` controller tunes it from.  A [`Session`] owns one; the
+/// fleet owns one **per tenant** (each tenant keeps its own policy and
+/// its own window/occupancy signal on the shared worker pool).
+pub(crate) struct BatchCtl {
     policy: BatchPolicy,
     /// The window currently applied by the policy, in µs.  Constant for
     /// `Greedy` (0) and `Window`; written by the EWMA controller (under
-    /// the `ctl` lock) for `Adaptive`.  Atomic so the worker wait loop
-    /// reads it without extra locking.
+    /// the `ctl` lock) for `Adaptive`.  Atomic so worker wait loops read
+    /// it without extra locking.
     window_us: AtomicU64,
     ctl: Mutex<AdaptCtl>,
     /// Mirror of `ctl.ewma_svc_us`, updated after every batch regardless
@@ -575,6 +610,88 @@ struct Shared {
     /// path.  0 until the first batch completes (no shedding before the
     /// estimator has a signal).
     svc_ewma_us: AtomicU64,
+}
+
+impl BatchCtl {
+    pub(crate) fn new(policy: BatchPolicy) -> BatchCtl {
+        BatchCtl {
+            policy,
+            window_us: AtomicU64::new(policy.initial_window_us()),
+            ctl: Mutex::new(AdaptCtl::default()),
+            svc_ewma_us: AtomicU64::new(0),
+        }
+    }
+
+    pub(crate) fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+
+    /// The window the policy currently applies, µs (0 = greedy dispatch).
+    pub(crate) fn window_us(&self) -> u64 {
+        self.window_us.load(Ordering::Relaxed)
+    }
+
+    /// EWMA per-batch service time, µs (0 until the first batch).
+    pub(crate) fn svc_us(&self) -> u64 {
+        self.svc_ewma_us.load(Ordering::Relaxed)
+    }
+
+    /// Per-batch EWMA bookkeeping, run once per dispatched batch for
+    /// every policy: update the occupancy/service estimators (the service
+    /// EWMA is mirrored for the lock-free admission check), then — for
+    /// `Adaptive` only — run the window controller:
+    /// multiplicative-increase the window while occupancy undershoots the
+    /// target, decay it once the target is met; never exceed the latency
+    /// budget `max_wait_us` or twice the EWMA service time (waiting much
+    /// longer than one dispatch takes cannot improve amortization).
+    pub(crate) fn note_batch(&self, b: usize, rows: usize, svc_us: u64) {
+        // one controller step per batch; the lock serializes racing
+        // workers so no batch's signal is lost to a concurrent RMW
+        let mut ctl = self.ctl.lock().unwrap();
+        let occ_ppm = (rows * 1_000_000 / b.max(1)) as u64;
+        let occ = if ctl.ewma_occ_ppm == 0 {
+            occ_ppm
+        } else {
+            (ctl.ewma_occ_ppm * 3 + occ_ppm) / 4
+        };
+        ctl.ewma_occ_ppm = occ;
+
+        let svc_us = svc_us.max(1);
+        let svc = if ctl.ewma_svc_us == 0 {
+            svc_us
+        } else {
+            (ctl.ewma_svc_us * 3 + svc_us) / 4
+        };
+        ctl.ewma_svc_us = svc;
+        self.svc_ewma_us.store(svc, Ordering::Relaxed);
+
+        let BatchPolicy::Adaptive { target_occupancy, max_wait_us } = self.policy else {
+            return;
+        };
+        let target_ppm = (target_occupancy.clamp(0.0, 1.0) * 1e6) as u64;
+        let cur = self.window_us.load(Ordering::Relaxed);
+        let next = if occ < target_ppm {
+            (cur + cur / 2).max(64)
+        } else {
+            cur.saturating_sub((cur / 4).max(1))
+        };
+        let bound = max_wait_us.min(svc.saturating_mul(2));
+        self.window_us.store(next.min(bound), Ordering::Relaxed);
+    }
+}
+
+struct Shared {
+    state: Mutex<QState>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    /// Cumulative counters behind one lock, so [`Session::stats`] returns
+    /// one *coherent* snapshot (a single struct copy) instead of
+    /// field-by-field atomic reads that can interleave with a concurrent
+    /// batch completion.  Update sites take the lock once per event and
+    /// bump every affected field together.
+    stats: Mutex<ServeStats>,
+    /// Batch-forming policy state (window + EWMA controller).
+    ctl: BatchCtl,
     /// Worker count, for the queue-wait prediction (batches drain
     /// `workers` at a time).
     workers: usize,
@@ -611,6 +728,10 @@ pub struct Session {
     in_tail: Vec<usize>,
     needs_t: bool,
     queue_cap: usize,
+    /// Marks this session as a live user of the global compute pool for
+    /// the whole session lifetime: `par::shutdown_pool()` fails loudly
+    /// while any serving tier is up instead of deadlocking its workers.
+    _serving: par::ServingGuard,
 }
 
 impl Session {
@@ -658,11 +779,8 @@ impl Session {
             }),
             not_empty: Condvar::new(),
             not_full: Condvar::new(),
-            stats: StatsInner::default(),
-            policy: cfg.policy,
-            window_us: AtomicU64::new(cfg.policy.initial_window_us()),
-            ctl: Mutex::new(AdaptCtl::default()),
-            svc_ewma_us: AtomicU64::new(0),
+            stats: Mutex::new(ServeStats::default()),
+            ctl: BatchCtl::new(cfg.policy),
             workers: cfg.workers.max(1),
             slo_us: cfg.slo.map_or(0, |d| d.as_micros() as u64),
         });
@@ -693,6 +811,7 @@ impl Session {
             in_tail,
             needs_t,
             queue_cap: cfg.queue_cap.max(1),
+            _serving: par::serving_guard(),
         }
     }
 
@@ -705,34 +824,25 @@ impl Session {
         self.pool.len()
     }
 
+    /// One coherent counter snapshot: a single struct copy under the
+    /// stats lock, so no field can reflect a batch completion another
+    /// field missed.
     pub fn stats(&self) -> ServeStats {
-        let s = &self.shared.stats;
-        ServeStats {
-            requests: s.requests.load(Ordering::Relaxed),
-            rows: s.rows.load(Ordering::Relaxed),
-            batches: s.batches.load(Ordering::Relaxed),
-            padded_rows: s.padded_rows.load(Ordering::Relaxed),
-            max_queue: s.max_queue.load(Ordering::Relaxed),
-            expired_windows: s.expired_windows.load(Ordering::Relaxed),
-            queue_wait_us: s.queue_wait_us.load(Ordering::Relaxed),
-            service_us: s.service_us.load(Ordering::Relaxed),
-            cur_window_us: self.shared.window_us.load(Ordering::Relaxed) as usize,
-            shed_requests: s.shed_requests.load(Ordering::Relaxed),
-            expired_requests: s.expired_requests.load(Ordering::Relaxed),
-            failed_batches: s.failed_batches.load(Ordering::Relaxed),
-        }
+        let mut s = *self.shared.stats.lock().unwrap();
+        s.cur_window_us = self.shared.ctl.window_us() as usize;
+        s
     }
 
     /// The batch-forming policy this session was deployed with.
     pub fn policy(&self) -> BatchPolicy {
-        self.shared.policy
+        self.shared.ctl.policy()
     }
 
     /// EWMA per-batch service time in µs (0 until the first batch
     /// completes) — the signal admission control predicts queue wait
     /// from.
     pub fn ewma_service_us(&self) -> u64 {
-        self.shared.svc_ewma_us.load(Ordering::Relaxed)
+        self.shared.ctl.svc_us()
     }
 
     /// Requests currently queued (not yet taken by a worker).
@@ -747,13 +857,11 @@ impl Session {
     pub fn infer(&self, x: &Tensor, t: Option<&Tensor>) -> Result<Tensor> {
         let started = Instant::now();
         let out = self.backend.run(x, t);
-        let st = &self.shared.stats;
-        st.requests.fetch_add(1, Ordering::Relaxed);
-        st.batches.fetch_add(1, Ordering::Relaxed);
-        st.rows
-            .fetch_add(x.dims.first().copied().unwrap_or(0), Ordering::Relaxed);
-        st.service_us
-            .fetch_add(started.elapsed().as_micros() as usize, Ordering::Relaxed);
+        let mut st = self.shared.stats.lock().unwrap();
+        st.requests += 1;
+        st.batches += 1;
+        st.rows += x.dims.first().copied().unwrap_or(0);
+        st.service_us += started.elapsed().as_micros() as usize;
         out
     }
 
@@ -829,10 +937,7 @@ impl Session {
         let now = Instant::now();
         if let Some(d) = deadline {
             if now >= d {
-                self.shared
-                    .stats
-                    .expired_requests
-                    .fetch_add(1, Ordering::Relaxed);
+                self.shared.stats.lock().unwrap().expired_requests += 1;
                 return Err(ServeError::DeadlineExceeded);
             }
         }
@@ -849,10 +954,7 @@ impl Session {
                 if deadline.is_some() || self.shared.slo_us > 0 {
                     // a deadlined request must not block into its own
                     // deadline: shed at the door instead
-                    self.shared
-                        .stats
-                        .shed_requests
-                        .fetch_add(1, Ordering::Relaxed);
+                    self.shared.stats.lock().unwrap().shed_requests += 1;
                     return Err(ServeError::Shed {
                         queued_rows: g.rows_queued,
                         predicted_us: u64::MAX,
@@ -864,17 +966,14 @@ impl Session {
             // admission control: shed when the predicted wait exceeds the
             // deadline/SLO budget (needs an EWMA signal — the first
             // batches after deploy are always admitted)
-            let svc = self.shared.svc_ewma_us.load(Ordering::Relaxed);
+            let svc = self.shared.ctl.svc_us();
             let budget_us = self.budget_us(deadline, now);
             if svc > 0 && budget_us < u64::MAX {
                 let batches_ahead =
                     ((g.rows_queued + rows + self.batch - 1) / self.batch) as u64;
                 let predicted_us = batches_ahead * svc / self.shared.workers as u64;
                 if predicted_us > budget_us {
-                    self.shared
-                        .stats
-                        .shed_requests
-                        .fetch_add(1, Ordering::Relaxed);
+                    self.shared.stats.lock().unwrap().shed_requests += 1;
                     return Err(ServeError::Shed {
                         queued_rows: g.rows_queued,
                         predicted_us,
@@ -891,15 +990,8 @@ impl Session {
             });
             g.rows_queued += rows;
             let depth = g.items.len();
-            let mq = &self.shared.stats.max_queue;
-            let mut cur = mq.load(Ordering::Relaxed);
-            while depth > cur {
-                match mq.compare_exchange_weak(cur, depth, Ordering::Relaxed, Ordering::Relaxed)
-                {
-                    Ok(_) => break,
-                    Err(seen) => cur = seen,
-                }
-            }
+            let mut st = self.shared.stats.lock().unwrap();
+            st.max_queue = st.max_queue.max(depth);
         }
         self.shared.not_empty.notify_one();
         Ok(Ticket { inner: ticket })
@@ -981,7 +1073,7 @@ fn worker_loop(shared: &Shared, backend: &Dispatch, b: usize) {
                 if g.closed || batch_formed(&g.items, b) || front_expired(&g.items, now) {
                     break;
                 }
-                let window = shared.window_us.load(Ordering::Relaxed);
+                let window = shared.ctl.window_us();
                 if window == 0 {
                     break; // greedy: ship whatever is queued
                 }
@@ -1026,10 +1118,7 @@ fn worker_loop(shared: &Shared, backend: &Dispatch, b: usize) {
         };
         shared.not_full.notify_all();
         if !dead.is_empty() {
-            shared
-                .stats
-                .expired_requests
-                .fetch_add(dead.len(), Ordering::Relaxed);
+            shared.stats.lock().unwrap().expired_requests += dead.len();
             for r in dead {
                 fulfill(&r.ticket, Err(ServeError::DeadlineExceeded));
             }
@@ -1040,50 +1129,49 @@ fn worker_loop(shared: &Shared, backend: &Dispatch, b: usize) {
     }
 }
 
-/// Per-batch EWMA bookkeeping, run once per dispatched batch for every
-/// policy: update the occupancy/service estimators (the service EWMA is
-/// mirrored into `Shared::svc_ewma_us` for the lock-free admission
-/// check), then — for `Adaptive` only — run the window controller:
-/// multiplicative-increase the window while occupancy undershoots the
-/// target, decay it once the target is met; never exceed the latency
-/// budget `cap_us` or twice the EWMA service time (waiting much longer
-/// than one dispatch takes cannot improve amortization).
-fn note_batch(shared: &Shared, b: usize, rows: usize, svc_us: u64) {
-    // one controller step per batch; the lock serializes racing workers
-    // so no batch's signal is lost to a concurrent read-modify-write
-    let mut ctl = shared.ctl.lock().unwrap();
-    let occ_ppm = (rows * 1_000_000 / b.max(1)) as u64;
-    let occ = if ctl.ewma_occ_ppm == 0 {
-        occ_ppm
-    } else {
-        (ctl.ewma_occ_ppm * 3 + occ_ppm) / 4
-    };
-    ctl.ewma_occ_ppm = occ;
-
-    let svc_us = svc_us.max(1);
-    let svc = if ctl.ewma_svc_us == 0 {
-        svc_us
-    } else {
-        (ctl.ewma_svc_us * 3 + svc_us) / 4
-    };
-    ctl.ewma_svc_us = svc;
-    shared.svc_ewma_us.store(svc, Ordering::Relaxed);
-
-    let BatchPolicy::Adaptive { target_occupancy, max_wait_us } = shared.policy else {
-        return;
-    };
-    let target_ppm = (target_occupancy.clamp(0.0, 1.0) * 1e6) as u64;
-    let cur = shared.window_us.load(Ordering::Relaxed);
-    let next = if occ < target_ppm {
-        (cur + cur / 2).max(64)
-    } else {
-        cur.saturating_sub((cur / 4).max(1))
-    };
-    let bound = max_wait_us.min(svc.saturating_mul(2));
-    shared.window_us.store(next.min(bound), Ordering::Relaxed);
+/// Telemetry of one dispatched batch, for the caller's accounting —
+/// [`run_batch`] folds it into the session counters; the fleet folds it
+/// into the owning tenant's.
+pub(crate) struct BatchDone {
+    /// Real request rows in the batch (padding excluded).
+    pub(crate) rows: usize,
+    /// Requests coalesced into the batch.
+    pub(crate) requests: usize,
+    /// Padding rows appended to reach the batch size.
+    pub(crate) padded: usize,
+    /// Summed submit-to-dispatch wait across the batch's requests, µs.
+    pub(crate) queue_wait_us: usize,
+    /// Dispatch (service) time, µs.
+    pub(crate) svc_us: u64,
+    /// Whether the dispatch failed (every ticket got `BackendFailed`).
+    pub(crate) failed: bool,
 }
 
+/// Session wrapper over [`dispatch_batch`]: dispatch, then fold the
+/// telemetry into the session counters (one coherent lock acquisition)
+/// and step the policy controller.
 fn run_batch(shared: &Shared, backend: &Dispatch, b: usize, reqs: Vec<Request>, expired: bool) {
+    let done = dispatch_batch(backend, b, reqs);
+    {
+        let mut st = shared.stats.lock().unwrap();
+        st.batches += 1;
+        st.padded_rows += done.padded;
+        st.requests += done.requests;
+        st.rows += done.rows;
+        st.expired_windows += usize::from(expired);
+        st.queue_wait_us += done.queue_wait_us;
+        st.service_us += done.svc_us as usize;
+        st.failed_batches += usize::from(done.failed);
+    }
+    shared.ctl.note_batch(b, done.rows, done.svc_us);
+}
+
+/// Coalesce `reqs` (whole requests, ≤ `b` rows total) into one padded
+/// `[b, tail..]` dispatch, run it with panic isolation, and split the
+/// output rows back onto the tickets.  Pure of any session/fleet state —
+/// both tiers drive their queues through it and do their own accounting
+/// from the returned [`BatchDone`].
+pub(crate) fn dispatch_batch(backend: &Dispatch, b: usize, reqs: Vec<Request>) -> BatchDone {
     let total_rows: usize = reqs.iter().map(|r| r.x.dims[0]).sum();
     let started = Instant::now();
     let queue_wait_us: u128 = reqs
@@ -1136,22 +1224,21 @@ fn run_batch(shared: &Shared, backend: &Dispatch, b: usize, reqs: Vec<Request>, 
             Err(anyhow::anyhow!("serve backend panicked: {msg}"))
         });
     let svc_us = started.elapsed().as_micros();
-    let st = &shared.stats;
-    st.batches.fetch_add(1, Ordering::Relaxed);
-    st.padded_rows.fetch_add(b - total_rows, Ordering::Relaxed);
-    st.requests.fetch_add(reqs.len(), Ordering::Relaxed);
-    st.rows.fetch_add(total_rows, Ordering::Relaxed);
-    st.expired_windows.fetch_add(usize::from(expired), Ordering::Relaxed);
-    st.queue_wait_us.fetch_add(queue_wait_us as usize, Ordering::Relaxed);
-    st.service_us.fetch_add(svc_us as usize, Ordering::Relaxed);
-    note_batch(shared, b, total_rows, svc_us as u64);
+    let mut done = BatchDone {
+        rows: total_rows,
+        requests: reqs.len(),
+        padded: b - total_rows,
+        queue_wait_us: queue_wait_us as usize,
+        svc_us: svc_us as u64,
+        failed: false,
+    };
     match out {
         Ok(y) if y.dims.first() == Some(&b) && y.data.len() % b == 0 => {
             if reqs.len() == 1 && total_rows == b {
                 // full-batch request: move the output straight to its ticket
                 let r = reqs.into_iter().next().unwrap();
                 fulfill(&r.ticket, Ok(y));
-                return;
+                return done;
             }
             let out_row = y.data.len() / b;
             let out_tail = y.dims[1..].to_vec();
@@ -1167,9 +1254,9 @@ fn run_batch(shared: &Shared, backend: &Dispatch, b: usize, reqs: Vec<Request>, 
             }
         }
         Ok(y) => {
-            // a batch is poisoned exactly once per failure: counted here,
+            // a batch is poisoned exactly once per failure: flagged here,
             // and every ticket of THIS batch (only) carries the error
-            st.failed_batches.fetch_add(1, Ordering::Relaxed);
+            done.failed = true;
             let msg = format!(
                 "serve batch produced dims {:?}, expected leading batch {b}",
                 y.dims
@@ -1179,13 +1266,14 @@ fn run_batch(shared: &Shared, backend: &Dispatch, b: usize, reqs: Vec<Request>, 
             }
         }
         Err(e) => {
-            st.failed_batches.fetch_add(1, Ordering::Relaxed);
+            done.failed = true;
             let msg = format!("serve batch failed: {e}");
             for r in reqs {
                 fulfill(&r.ticket, Err(ServeError::BackendFailed(msg.clone())));
             }
         }
     }
+    done
 }
 
 // ---------------------------------------------------------------------------
@@ -1288,16 +1376,17 @@ impl LoadReport {
     }
 }
 
-/// Per-run failure tallies, classified from typed [`ServeError`]s.
+/// Per-run failure tallies, classified from typed [`ServeError`]s (or,
+/// for the network driver, from wire [`proto::ErrCode`]s).
 #[derive(Debug, Default, Clone, Copy)]
-struct Outcomes {
-    shed: usize,
-    expired: usize,
-    failed: usize,
+pub(crate) struct Outcomes {
+    pub(crate) shed: usize,
+    pub(crate) expired: usize,
+    pub(crate) failed: usize,
 }
 
 impl Outcomes {
-    fn note(&mut self, e: &ServeError) {
+    pub(crate) fn note(&mut self, e: &ServeError) {
         match e {
             ServeError::Shed { .. } => self.shed += 1,
             ServeError::DeadlineExceeded => self.expired += 1,
@@ -1305,74 +1394,84 @@ impl Outcomes {
         }
     }
 
-    fn total(&self) -> usize {
+    /// Classify a wire-level error code — the network driver sees typed
+    /// codes, not `ServeError` values, but must tally identically.
+    pub(crate) fn note_code(&mut self, c: proto::ErrCode) {
+        match c {
+            proto::ErrCode::Shed => self.shed += 1,
+            proto::ErrCode::DeadlineExceeded => self.expired += 1,
+            _ => self.failed += 1,
+        }
+    }
+
+    pub(crate) fn total(&self) -> usize {
         self.shed + self.expired + self.failed
     }
 }
 
-/// Assemble a [`LoadReport`] from raw per-request success latencies, the
-/// classified failure tallies, and the session-counter delta over the run
-/// — shared by both load modes so every report computes its quantiles and
-/// telemetry identically.
-fn load_report(
-    mut lat: Vec<f64>,
-    out: Outcomes,
-    rows: usize,
-    wall_s: f64,
-    before: ServeStats,
-    after: ServeStats,
-    clients: usize,
-    arrival_rps: f64,
-) -> Result<LoadReport> {
-    use crate::util::stats::{percentile, sort_samples};
-    anyhow::ensure!(
-        !lat.is_empty() || out.total() > 0,
-        "drive: no requests completed"
-    );
-    sort_samples(&mut lat);
-    let batches = after.batches - before.batches;
-    let padded_rows = after.padded_rows - before.padded_rows;
-    let d_rows = after.rows - before.rows;
-    let d_requests = after.requests - before.requests;
-    // percentiles cover successes only — never hand percentile() an
-    // empty set; an all-failure run reports NaN, not a fabricated number
-    let (p50, p95, p99, mean, min) = if lat.is_empty() {
-        (f64::NAN, f64::NAN, f64::NAN, f64::NAN, f64::NAN)
-    } else {
-        (
-            percentile(&lat, 0.5),
-            percentile(&lat, 0.95),
-            percentile(&lat, 0.99),
-            lat.iter().sum::<f64>() / lat.len() as f64,
-            lat[0],
-        )
-    };
-    Ok(LoadReport {
-        clients,
-        requests: lat.len() + out.total(),
-        ok_requests: lat.len(),
-        shed: out.shed,
-        expired: out.expired,
-        failed: out.failed,
-        rows,
-        p50_ms: p50,
-        p95_ms: p95,
-        p99_ms: p99,
-        mean_ms: mean,
-        min_ms: min,
-        wall_s,
-        rows_per_s: rows as f64 / wall_s.max(1e-9),
-        goodput_rps: lat.len() as f64 / wall_s.max(1e-9),
-        batches,
-        padded_rows,
-        queue_ms: (after.queue_wait_us - before.queue_wait_us) as f64 / 1e3
-            / d_requests.max(1) as f64,
-        service_ms: (after.service_us - before.service_us) as f64 / 1e3
-            / batches.max(1) as f64,
-        occupancy: occupancy_of(d_rows, padded_rows),
-        expired_windows: after.expired_windows - before.expired_windows,
-        arrival_rps,
-    })
+impl LoadReport {
+    /// Assemble a [`LoadReport`] from raw per-request success latencies,
+    /// the classified failure tallies, and the engine-counter delta over
+    /// the run — shared by [`drive`], [`drive_open_deadline`],
+    /// [`net::drive_net`], and the fleet driver so every report computes
+    /// its quantiles and telemetry identically instead of each load mode
+    /// growing its own copy.
+    pub(crate) fn from_outcomes(
+        mut lat: Vec<f64>,
+        out: Outcomes,
+        rows: usize,
+        wall_s: f64,
+        before: ServeStats,
+        after: ServeStats,
+        clients: usize,
+        arrival_rps: f64,
+    ) -> Result<LoadReport> {
+        use crate::util::stats::{percentile, sort_samples};
+        anyhow::ensure!(
+            !lat.is_empty() || out.total() > 0,
+            "drive: no requests completed"
+        );
+        sort_samples(&mut lat);
+        let d = after - before;
+        // percentiles cover successes only — never hand percentile() an
+        // empty set; an all-failure run reports NaN, not a fabricated
+        // number
+        let (p50, p95, p99, mean, min) = if lat.is_empty() {
+            (f64::NAN, f64::NAN, f64::NAN, f64::NAN, f64::NAN)
+        } else {
+            (
+                percentile(&lat, 0.5),
+                percentile(&lat, 0.95),
+                percentile(&lat, 0.99),
+                lat.iter().sum::<f64>() / lat.len() as f64,
+                lat[0],
+            )
+        };
+        Ok(LoadReport {
+            clients,
+            requests: lat.len() + out.total(),
+            ok_requests: lat.len(),
+            shed: out.shed,
+            expired: out.expired,
+            failed: out.failed,
+            rows,
+            p50_ms: p50,
+            p95_ms: p95,
+            p99_ms: p99,
+            mean_ms: mean,
+            min_ms: min,
+            wall_s,
+            rows_per_s: rows as f64 / wall_s.max(1e-9),
+            goodput_rps: lat.len() as f64 / wall_s.max(1e-9),
+            batches: d.batches,
+            padded_rows: d.padded_rows,
+            queue_ms: d.queue_wait_us as f64 / 1e3 / d.requests.max(1) as f64,
+            service_ms: d.service_us as f64 / 1e3 / d.batches.max(1) as f64,
+            occupancy: occupancy_of(d.rows, d.padded_rows),
+            expired_windows: d.expired_windows,
+            arrival_rps,
+        })
+    }
 }
 
 /// Drive `clients` concurrent submitters, each issuing
@@ -1422,7 +1521,7 @@ where
     let lat = lat.into_inner().unwrap();
     let out = out.into_inner().unwrap();
     let rows = rows.load(Ordering::Relaxed);
-    load_report(lat, out, rows, wall_s, before, session.stats(), clients, 0.0)
+    LoadReport::from_outcomes(lat, out, rows, wall_s, before, session.stats(), clients, 0.0)
 }
 
 /// Hard cap on how long the open-loop driver waits for any single ticket
@@ -1509,7 +1608,7 @@ where
         }
     }
     let wall_s = t0.elapsed().as_secs_f64();
-    load_report(lat, out, rows, wall_s, before, session.stats(), 1, rps)
+    LoadReport::from_outcomes(lat, out, rows, wall_s, before, session.stats(), 1, rps)
 }
 
 /// Slice the classify eval stream into single-row `(x, y)` request pairs

@@ -44,10 +44,11 @@ use crate::util::json::Json;
 use crate::util::par;
 use crate::util::tensor::Tensor;
 
+use super::fleet::Fleet;
 use super::proto::{
     self, DecodeError, ErrCode, Request, Response, MAX_FRAME,
 };
-use super::Session;
+use super::{LoadReport, Outcomes, ServeError, ServeResult, ServeStats, Session, Ticket};
 
 // ---------------------------------------------------------------------------
 // Config
@@ -132,8 +133,56 @@ struct NetStatsInner {
     handler_panics: AtomicUsize,
 }
 
+/// What the network tier serves: one [`Session`], or a multi-tenant
+/// [`Fleet`].  The wire protocol is identical either way — only `Infer`
+/// routing (the frame's tenant field) and the `/stats` payload differ.
+enum ServeTarget {
+    Session(Arc<Session>),
+    Fleet(Arc<Fleet>),
+}
+
+impl ServeTarget {
+    /// Route one request by the frame's tenant field.  A session target
+    /// has exactly one deployment, so a non-empty tenant is a typed
+    /// rejection (the client is addressing a fleet that is not there); a
+    /// fleet target resolves an empty tenant only when exactly one tenant
+    /// exists — anything else must be named.
+    fn submit(
+        &self,
+        tenant: &str,
+        x: Tensor,
+        t: Option<Tensor>,
+        deadline: Option<Instant>,
+    ) -> ServeResult<Ticket> {
+        match self {
+            ServeTarget::Session(s) => {
+                if !tenant.is_empty() {
+                    return Err(ServeError::Rejected(format!(
+                        "this server hosts a single session; \
+                         tenant {tenant:?} cannot be addressed here"
+                    )));
+                }
+                s.submit_deadline(x, t, deadline)
+            }
+            ServeTarget::Fleet(f) => {
+                if !tenant.is_empty() {
+                    return f.submit(tenant, x, t, deadline);
+                }
+                let names = f.tenants();
+                match names.as_slice() {
+                    [only] => f.submit(only, x, t, deadline),
+                    _ => Err(ServeError::Rejected(format!(
+                        "fleet serves {} tenants; the Infer frame must name one",
+                        names.len()
+                    ))),
+                }
+            }
+        }
+    }
+}
+
 struct NetInner {
-    session: Arc<Session>,
+    target: ServeTarget,
     cfg: NetCfg,
     shutdown: AtomicBool,
     /// Accepted connections waiting for a handler (bounded by
@@ -157,6 +206,17 @@ impl NetServer {
     /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral test port) and
     /// start serving `session` over it.
     pub fn bind(session: Arc<Session>, addr: &str, cfg: NetCfg) -> Result<NetServer> {
+        NetServer::bind_target(ServeTarget::Session(session), addr, cfg)
+    }
+
+    /// Bind `addr` and serve a multi-tenant [`Fleet`] over it: `Infer`
+    /// frames route by their tenant field through the fleet's
+    /// deadline-aware ladder router.
+    pub fn bind_fleet(fleet: Arc<Fleet>, addr: &str, cfg: NetCfg) -> Result<NetServer> {
+        NetServer::bind_target(ServeTarget::Fleet(fleet), addr, cfg)
+    }
+
+    fn bind_target(target: ServeTarget, addr: &str, cfg: NetCfg) -> Result<NetServer> {
         let listener = TcpListener::bind(addr)
             .with_context(|| format!("serve-net: cannot bind {addr}"))?;
         let local = listener.local_addr().context("serve-net: local_addr")?;
@@ -164,7 +224,7 @@ impl NetServer {
             .set_nonblocking(true)
             .context("serve-net: nonblocking acceptor")?;
         let inner = Arc::new(NetInner {
-            session,
+            target,
             cfg,
             shutdown: AtomicBool::new(false),
             conns: Mutex::new(Vec::new()),
@@ -201,9 +261,24 @@ impl NetServer {
         }
     }
 
-    /// The served session (e.g. for closing it after the net tier drains).
+    /// The served session (e.g. for closing it after the net tier
+    /// drains).  Panics on a fleet-backed server — use [`NetServer::fleet`].
     pub fn session(&self) -> &Arc<Session> {
-        &self.inner.session
+        match &self.inner.target {
+            ServeTarget::Session(s) => s,
+            ServeTarget::Fleet(_) => {
+                panic!("NetServer::session() on a fleet-backed server")
+            }
+        }
+    }
+
+    /// The served fleet, if this server was bound with
+    /// [`NetServer::bind_fleet`].
+    pub fn fleet(&self) -> Option<&Arc<Fleet>> {
+        match &self.inner.target {
+            ServeTarget::Session(_) => None,
+            ServeTarget::Fleet(f) => Some(f),
+        }
     }
 
     /// Graceful drain: stop accepting, finish in-flight requests, send
@@ -507,6 +582,23 @@ fn handle_conn(inner: &NetInner, mut stream: TcpStream) {
                 }
                 continue;
             }
+            Err(DecodeError::Legacy(m)) => {
+                // a wire-v1 peer: framing is intact (same length-prefix
+                // discipline), so answer with a typed upgrade notice and
+                // keep the connection — the client sees *why* instead of
+                // a dead socket
+                inner.stats.bad_frames.fetch_add(1, Ordering::Relaxed);
+                if send(inner, &mut stream, &Response::Error {
+                    id: 0,
+                    code: ErrCode::BadFrame,
+                    msg: m,
+                })
+                .is_err()
+                {
+                    return;
+                }
+                continue;
+            }
             Err(DecodeError::NotOurs(m)) => {
                 // wrong magic/version: this peer does not speak our
                 // protocol — one typed refusal, then close
@@ -525,8 +617,8 @@ fn handle_conn(inner: &NetInner, mut stream: TcpStream) {
                 id,
                 json: stats_json(inner),
             },
-            Request::Infer { id, deadline_us, x, t } => {
-                serve_infer(inner, id, deadline_us, x, t)
+            Request::Infer { id, deadline_us, tenant, x, t } => {
+                serve_infer(inner, id, deadline_us, &tenant, x, t)
             }
         };
         if send(inner, &mut stream, &resp).is_err() {
@@ -552,6 +644,7 @@ fn serve_infer(
     inner: &NetInner,
     id: u64,
     deadline_us: u64,
+    tenant: &str,
     x: Tensor,
     t: Option<Tensor>,
 ) -> Response {
@@ -563,7 +656,7 @@ fn serve_infer(
         cfg.default_deadline_ms.saturating_mul(1_000)
     };
     let deadline = (deadline_us > 0).then(|| now + Duration::from_micros(deadline_us));
-    let ticket = match inner.session.submit_deadline(x, t, deadline) {
+    let ticket = match inner.target.submit(tenant, x, t, deadline) {
         Ok(tk) => tk,
         Err(e) => {
             return Response::Error {
@@ -620,13 +713,12 @@ fn send(inner: &NetInner, stream: &mut TcpStream, resp: &Response) -> io::Result
     r
 }
 
-/// The `/stats` reply: the session's [`super::ServeStats`] (shed /
-/// expired / failed separation included) plus the net-tier counters and
-/// live queue telemetry, as one flat JSON object.
-fn stats_json(inner: &NetInner) -> String {
-    let s = inner.session.stats();
-    let n = &inner.stats;
-    Json::obj(vec![
+/// Serialize one [`ServeStats`] snapshot as the flat counter fields the
+/// `/stats` JSON has always carried — reused verbatim for the top-level
+/// totals and for each per-tenant breakdown object, so a stats consumer
+/// reads both with one schema.
+fn stats_fields(s: &ServeStats) -> Vec<(&'static str, Json)> {
+    vec![
         ("requests", Json::num(s.requests as f64)),
         ("rows", Json::num(s.rows as f64)),
         ("batches", Json::num(s.batches as f64)),
@@ -637,34 +729,86 @@ fn stats_json(inner: &NetInner) -> String {
         ("shed_requests", Json::num(s.shed_requests as f64)),
         ("expired_requests", Json::num(s.expired_requests as f64)),
         ("failed_batches", Json::num(s.failed_batches as f64)),
-        ("queue_depth", Json::num(inner.session.queue_depth() as f64)),
-        (
-            "ewma_service_us",
-            Json::num(inner.session.ewma_service_us() as f64),
-        ),
-        (
-            "net",
-            Json::obj(vec![
-                ("accepted", Json::num(n.accepted.load(Ordering::Relaxed) as f64)),
-                ("refused", Json::num(n.refused.load(Ordering::Relaxed) as f64)),
-                ("frames", Json::num(n.frames.load(Ordering::Relaxed) as f64)),
-                ("replies", Json::num(n.replies.load(Ordering::Relaxed) as f64)),
-                (
-                    "bad_frames",
-                    Json::num(n.bad_frames.load(Ordering::Relaxed) as f64),
-                ),
-                (
-                    "conn_errors",
-                    Json::num(n.conn_errors.load(Ordering::Relaxed) as f64),
-                ),
-                (
-                    "handler_panics",
-                    Json::num(n.handler_panics.load(Ordering::Relaxed) as f64),
-                ),
-            ]),
-        ),
-    ])
-    .to_string()
+    ]
+}
+
+/// The `/stats` reply: [`super::ServeStats`] totals (one coherent
+/// snapshot — every counter from the same lock acquisition) plus the
+/// net-tier counters and live queue telemetry, as one JSON object.  A
+/// fleet-backed server additionally reports a `tenants` object (the same
+/// counter schema per tenant, each its own coherent snapshot) and a
+/// `fleet` object with weight-dedup bytes and router telemetry.
+fn stats_json(inner: &NetInner) -> String {
+    let n = &inner.stats;
+    let mut fields = match &inner.target {
+        ServeTarget::Session(sess) => {
+            let mut f = stats_fields(&sess.stats());
+            f.push(("queue_depth", Json::num(sess.queue_depth() as f64)));
+            f.push((
+                "ewma_service_us",
+                Json::num(sess.ewma_service_us() as f64),
+            ));
+            f
+        }
+        ServeTarget::Fleet(fleet) => {
+            let fs = fleet.stats();
+            let names = fleet.tenants();
+            let depth: usize = names.iter().map(|t| fleet.queue_depth(t)).sum();
+            let mut f = stats_fields(&fs.total);
+            f.push(("queue_depth", Json::num(depth as f64)));
+            let mut tenants = std::collections::BTreeMap::new();
+            for name in &names {
+                if let Some(ts) = fleet.tenant_stats(name) {
+                    let mut tf = stats_fields(&ts);
+                    tf.push((
+                        "queue_depth",
+                        Json::num(fleet.queue_depth(name) as f64),
+                    ));
+                    tenants.insert(name.clone(), Json::obj(tf));
+                }
+            }
+            f.push(("tenants", Json::Obj(tenants)));
+            f.push((
+                "fleet",
+                Json::obj(vec![
+                    (
+                        "unique_weight_bytes",
+                        Json::num(fs.unique_weight_bytes as f64),
+                    ),
+                    (
+                        "dedup_saved_bytes",
+                        Json::num(fs.dedup_saved_bytes as f64),
+                    ),
+                    ("router_hits", Json::num(fs.router.hits as f64)),
+                    ("router_fallbacks", Json::num(fs.router.fallbacks as f64)),
+                    ("router_sheds", Json::num(fs.router.sheds as f64)),
+                ]),
+            ));
+            f
+        }
+    };
+    fields.push((
+        "net",
+        Json::obj(vec![
+            ("accepted", Json::num(n.accepted.load(Ordering::Relaxed) as f64)),
+            ("refused", Json::num(n.refused.load(Ordering::Relaxed) as f64)),
+            ("frames", Json::num(n.frames.load(Ordering::Relaxed) as f64)),
+            ("replies", Json::num(n.replies.load(Ordering::Relaxed) as f64)),
+            (
+                "bad_frames",
+                Json::num(n.bad_frames.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "conn_errors",
+                Json::num(n.conn_errors.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "handler_panics",
+                Json::num(n.handler_panics.load(Ordering::Relaxed) as f64),
+            ),
+        ]),
+    ));
+    Json::obj(fields).to_string()
 }
 
 // ---------------------------------------------------------------------------
@@ -717,11 +861,24 @@ impl NetClient {
         t: Option<&Tensor>,
         deadline: Option<Duration>,
     ) -> Result<std::result::Result<Tensor, (ErrCode, String)>> {
+        self.infer_tenant("", x, t, deadline)
+    }
+
+    /// [`NetClient::infer_deadline`] addressed to a named fleet tenant
+    /// (empty tenant = the server's sole deployment).
+    pub fn infer_tenant(
+        &mut self,
+        tenant: &str,
+        x: &Tensor,
+        t: Option<&Tensor>,
+        deadline: Option<Duration>,
+    ) -> Result<std::result::Result<Tensor, (ErrCode, String)>> {
         let id = self.next_id;
         self.next_id += 1;
         let req = Request::Infer {
             id,
             deadline_us: deadline.map_or(0, |d| d.as_micros() as u64),
+            tenant: tenant.to_string(),
             x: x.clone(),
             t: t.cloned(),
         };
@@ -832,6 +989,26 @@ pub fn drive_net<F>(
 where
     F: Fn(usize) -> (Tensor, Option<Tensor>) + Sync,
 {
+    drive_net_tenant(addr, "", rps, requests, conns, deadline, seed, make_input)
+}
+
+/// [`drive_net`] with every request addressed to a named fleet tenant
+/// (empty = the server's sole deployment) — the per-tenant load arm of
+/// the fleet bench and tests.
+#[allow(clippy::too_many_arguments)]
+pub fn drive_net_tenant<F>(
+    addr: SocketAddr,
+    tenant: &str,
+    rps: f64,
+    requests: usize,
+    conns: usize,
+    deadline: Option<Duration>,
+    seed: u64,
+    make_input: F,
+) -> Result<NetLoadReport>
+where
+    F: Fn(usize) -> (Tensor, Option<Tensor>) + Sync,
+{
     anyhow::ensure!(rps > 0.0, "drive_net: arrival rate must be positive");
     anyhow::ensure!(conns >= 1, "drive_net: need at least one connection");
     // one deterministic global schedule, partitioned round-robin
@@ -843,14 +1020,14 @@ where
         sched.push(t);
     }
     let lat = Mutex::new(Vec::with_capacity(requests));
-    let (shed, expired, failed) =
-        (AtomicUsize::new(0), AtomicUsize::new(0), AtomicUsize::new(0));
+    let out = Mutex::new(Outcomes::default());
+    let rows = AtomicUsize::new(0);
     let t0 = Instant::now();
     std::thread::scope(|s| -> Result<()> {
         let mut joins = Vec::with_capacity(conns);
         for c in 0..conns {
             let (sched, lat, make_input) = (&sched, &lat, &make_input);
-            let (shed, expired, failed) = (&shed, &expired, &failed);
+            let (out, rows) = (&out, &rows);
             joins.push(s.spawn(move || -> Result<()> {
                 let mut client = NetClient::connect(addr)?;
                 for i in (c..requests).step_by(conns) {
@@ -859,24 +1036,20 @@ where
                         std::thread::sleep(d);
                     }
                     let (x, t) = make_input(i);
+                    rows.fetch_add(
+                        x.dims.first().copied().unwrap_or(0),
+                        Ordering::Relaxed,
+                    );
                     let sent = Instant::now();
-                    match client.infer_deadline(&x, t.as_ref(), deadline) {
+                    match client.infer_tenant(tenant, &x, t.as_ref(), deadline) {
                         Ok(Ok(_y)) => lat
                             .lock()
                             .unwrap()
                             .push(sent.elapsed().as_secs_f64() * 1e3),
-                        Ok(Err((ErrCode::Shed, _))) => {
-                            shed.fetch_add(1, Ordering::Relaxed);
-                        }
-                        Ok(Err((ErrCode::DeadlineExceeded, _))) => {
-                            expired.fetch_add(1, Ordering::Relaxed);
-                        }
-                        Ok(Err(_)) => {
-                            failed.fetch_add(1, Ordering::Relaxed);
-                        }
+                        Ok(Err((code, _))) => out.lock().unwrap().note_code(code),
                         Err(_) => {
                             // transport fault: count it, reconnect, go on
-                            failed.fetch_add(1, Ordering::Relaxed);
+                            out.lock().unwrap().note_code(ErrCode::BackendFailed);
                             client = NetClient::connect(addr)?;
                         }
                     }
@@ -890,34 +1063,34 @@ where
         Ok(())
     })?;
     let wall_s = t0.elapsed().as_secs_f64();
-    let mut lat = lat.into_inner().unwrap();
-    crate::util::stats::sort_samples(&mut lat);
-    let ok = lat.len();
-    let (shed, expired, failed) = (
-        shed.into_inner(),
-        expired.into_inner(),
-        failed.into_inner(),
-    );
-    let pct = |q: f64| {
-        if lat.is_empty() {
-            f64::NAN
-        } else {
-            crate::util::stats::percentile(&lat, q)
-        }
-    };
+    let lat = lat.into_inner().unwrap();
+    let out = out.into_inner().unwrap();
+    // the server's engine counters are not reachable from the client side
+    // of the socket, so the shared assembler sees a zero delta there; the
+    // client-observable fields are what NetLoadReport republishes
+    let r = LoadReport::from_outcomes(
+        lat,
+        out,
+        rows.into_inner(),
+        wall_s,
+        ServeStats::default(),
+        ServeStats::default(),
+        conns,
+        rps,
+    )?;
     Ok(NetLoadReport {
         arrival_rps: rps,
         conns,
-        requests: ok + shed + expired + failed,
-        ok,
-        shed,
-        expired,
-        failed,
-        wall_s,
-        goodput_rps: ok as f64 / wall_s.max(1e-9),
-        p50_ms: pct(0.5),
-        p95_ms: pct(0.95),
-        p99_ms: pct(0.99),
+        requests: r.requests,
+        ok: r.ok_requests,
+        shed: r.shed,
+        expired: r.expired,
+        failed: r.failed,
+        wall_s: r.wall_s,
+        goodput_rps: r.goodput_rps,
+        p50_ms: r.p50_ms,
+        p95_ms: r.p95_ms,
+        p99_ms: r.p99_ms,
     })
 }
 

@@ -20,13 +20,15 @@
 //! and every body starts with the same 6-byte preamble:
 //!
 //! ```text
-//! u32 LE MAGIC ("LMRV") | u8 VERSION (1) | u8 kind
+//! u32 LE MAGIC ("LMRV") | u8 VERSION (2) | u8 kind
 //! ```
 //!
 //! Request bodies (client → server):
 //!
 //! ```text
-//! Infer:  preamble | u64 id | u64 deadline_us | u8 has_t | u8 ndims
+//! Infer:  preamble | u64 id | u64 deadline_us
+//!         | u8 tenant_len | tenant_len x u8 tenant (UTF-8)
+//!         | u8 has_t | u8 ndims
 //!         | ndims x u32 dims | prod(dims) x f32 payload
 //!         | has_t ? dims[0] x f32 timesteps
 //! Stats:  preamble | u64 id
@@ -35,6 +37,12 @@
 //! `deadline_us` is a **relative** budget from server receipt (0 = no
 //! deadline) — relative, because client and server clocks need not
 //! agree, and receipt is when admission control can first act on it.
+//! `tenant` (≤ [`MAX_TENANT`] bytes; empty = the server's default
+//! target) routes the request to a fleet tenant's budget ladder —
+//! version 2's reason to exist.  A version-1 body (no tenant field) is
+//! recognized and refused with the *typed* [`DecodeError::Legacy`], so
+//! old clients get a clean `BadFrame` error frame naming the upgrade
+//! instead of a silently misparsed tensor.
 //!
 //! Response bodies (server → client):
 //!
@@ -64,7 +72,12 @@ use super::ServeError;
 pub const MAGIC: u32 = u32::from_le_bytes(*b"LMRV");
 
 /// Protocol version; bumped on any incompatible layout change.
-pub const VERSION: u8 = 1;
+/// Version 2 added the tenant field to Infer bodies (fleet routing);
+/// version-1 bodies decode to the typed [`DecodeError::Legacy`].
+pub const VERSION: u8 = 2;
+
+/// Longest tenant name an Infer frame may carry, bytes.
+pub const MAX_TENANT: usize = 64;
 
 /// Hard cap on a frame body, bytes (64 MiB).  Checked before any
 /// allocation, so a hostile length prefix cannot OOM the server.
@@ -154,17 +167,24 @@ impl fmt::Display for ErrCode {
 /// trust is gone).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum DecodeError {
-    /// Wrong magic or wrong protocol version — not a frame we speak.
+    /// Wrong magic or an unknown protocol version — not a frame we speak.
     NotOurs(String),
     /// Our magic, but the content is malformed (truncated, bad kind,
     /// oversized dims, length mismatch...).
     Malformed(String),
+    /// Our magic and a protocol version we *recognize but no longer
+    /// serve* (version 1, before the tenant field).  Framing is intact —
+    /// the server answers a typed `BadFrame` error naming the upgrade
+    /// and keeps the connection, instead of closing on the old client.
+    Legacy(String),
 }
 
 impl fmt::Display for DecodeError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
-            DecodeError::NotOurs(m) | DecodeError::Malformed(m) => f.write_str(m),
+            DecodeError::NotOurs(m)
+            | DecodeError::Malformed(m)
+            | DecodeError::Legacy(m) => f.write_str(m),
         }
     }
 }
@@ -178,8 +198,9 @@ type DecodeResult<T> = std::result::Result<T, DecodeError>;
 pub enum Request {
     /// One inference request: `x` is `[rows, tail..]`, `t` (present iff
     /// `has_t` was set) is `[rows]`, `deadline_us` is the relative
-    /// serve-by budget from receipt (0 = none).
-    Infer { id: u64, deadline_us: u64, x: Tensor, t: Option<Tensor> },
+    /// serve-by budget from receipt (0 = none), `tenant` routes to a
+    /// fleet tenant's ladder (empty = the server's default target).
+    Infer { id: u64, deadline_us: u64, tenant: String, x: Tensor, t: Option<Tensor> },
     /// Ask for the server's cumulative `ServeStats` as JSON.
     Stats { id: u64 },
 }
@@ -236,10 +257,14 @@ fn put_tensor(out: &mut Vec<u8>, t: &Tensor) {
 /// socket layer, which is the only place that knows it is about to send).
 pub fn encode_request(req: &Request) -> Vec<u8> {
     match req {
-        Request::Infer { id, deadline_us, x, t } => {
-            let mut out = Vec::with_capacity(32 + 4 * (x.data.len() + x.dims.len()));
+        Request::Infer { id, deadline_us, tenant, x, t } => {
+            debug_assert!(tenant.len() <= MAX_TENANT, "tenant name too long");
+            let mut out =
+                Vec::with_capacity(33 + tenant.len() + 4 * (x.data.len() + x.dims.len()));
             preamble(&mut out, KIND_INFER, *id);
             out.extend_from_slice(&deadline_us.to_le_bytes());
+            out.push(tenant.len().min(MAX_TENANT) as u8);
+            out.extend_from_slice(&tenant.as_bytes()[..tenant.len().min(MAX_TENANT)]);
             out.push(u8::from(t.is_some()));
             put_tensor(&mut out, x);
             if let Some(tt) = t {
@@ -366,6 +391,15 @@ fn check_preamble(c: &mut Cursor<'_>) -> DecodeResult<u8> {
         )));
     }
     let version = c.u8("version")?;
+    if version == 1 {
+        // recognized-but-retired: v1 framing is intact (same preamble and
+        // length prefix), so the caller can answer a typed error and keep
+        // the connection rather than closing on an old client
+        return Err(DecodeError::Legacy(format!(
+            "protocol version 1 is no longer served (speak {VERSION}: \
+             Infer frames carry a tenant field)"
+        )));
+    }
     if version != VERSION {
         return Err(DecodeError::NotOurs(format!(
             "unsupported protocol version {version} (speak {VERSION})"
@@ -420,6 +454,17 @@ pub fn decode_request(body: &[u8]) -> DecodeResult<Request> {
     match kind {
         KIND_INFER => {
             let deadline_us = c.u64("deadline_us")?;
+            let tlen = c.u8("tenant_len")? as usize;
+            if tlen > MAX_TENANT {
+                return Err(DecodeError::Malformed(format!(
+                    "tenant name of {tlen} bytes exceeds MAX_TENANT {MAX_TENANT}"
+                )));
+            }
+            let tenant = std::str::from_utf8(c.take(tlen, "tenant")?)
+                .map_err(|_| {
+                    DecodeError::Malformed("tenant name is not UTF-8".into())
+                })?
+                .to_string();
             let has_t = match c.u8("has_t")? {
                 0 => false,
                 1 => true,
@@ -439,7 +484,7 @@ pub fn decode_request(body: &[u8]) -> DecodeResult<Request> {
                 None
             };
             c.done("infer request")?;
-            Ok(Request::Infer { id, deadline_us, x: Tensor::new(dims, data), t })
+            Ok(Request::Infer { id, deadline_us, tenant, x: Tensor::new(dims, data), t })
         }
         KIND_STATS => {
             c.done("stats request")?;
@@ -508,7 +553,13 @@ mod tests {
 
     #[test]
     fn infer_roundtrip_without_t() {
-        let r = Request::Infer { id: 42, deadline_us: 25_000, x: x23(), t: None };
+        let r = Request::Infer {
+            id: 42,
+            deadline_us: 25_000,
+            tenant: String::new(),
+            x: x23(),
+            t: None,
+        };
         let body = encode_request(&r);
         assert_eq!(decode_request(&body).unwrap(), r);
     }
@@ -516,7 +567,26 @@ mod tests {
     #[test]
     fn infer_roundtrip_with_t() {
         let t = Tensor::new(vec![2], vec![100.0, 200.0]);
-        let r = Request::Infer { id: 7, deadline_us: 0, x: x23(), t: Some(t) };
+        let r = Request::Infer {
+            id: 7,
+            deadline_us: 0,
+            tenant: String::new(),
+            x: x23(),
+            t: Some(t),
+        };
+        let body = encode_request(&r);
+        assert_eq!(decode_request(&body).unwrap(), r);
+    }
+
+    #[test]
+    fn infer_roundtrip_with_tenant() {
+        let r = Request::Infer {
+            id: 11,
+            deadline_us: 5_000,
+            tenant: "edge-résnet".into(), // multi-byte UTF-8 survives
+            x: x23(),
+            t: None,
+        };
         let body = encode_request(&r);
         assert_eq!(decode_request(&body).unwrap(), r);
     }
@@ -561,10 +631,57 @@ mod tests {
     }
 
     #[test]
+    fn version_one_is_typed_legacy_not_closed() {
+        let mut body = encode_request(&Request::Stats { id: 1 });
+        body[4] = 1;
+        match decode_request(&body) {
+            Err(DecodeError::Legacy(m)) => {
+                assert!(m.contains("version 1"), "{m}");
+                assert!(m.contains("tenant"), "should name the upgrade: {m}");
+            }
+            other => panic!("want Legacy, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_tenant_is_malformed() {
+        // hand-build: tenant_len byte claims more than MAX_TENANT
+        let mut body = Vec::new();
+        body.extend_from_slice(&MAGIC.to_le_bytes());
+        body.push(VERSION);
+        body.push(KIND_INFER);
+        body.extend_from_slice(&1u64.to_le_bytes()); // id
+        body.extend_from_slice(&0u64.to_le_bytes()); // deadline
+        body.push((MAX_TENANT + 1) as u8); // tenant_len
+        body.extend_from_slice(&vec![b'a'; MAX_TENANT + 1]);
+        match decode_request(&body) {
+            Err(DecodeError::Malformed(m)) => assert!(m.contains("MAX_TENANT"), "{m}"),
+            other => panic!("want Malformed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn non_utf8_tenant_is_malformed() {
+        let mut body = Vec::new();
+        body.extend_from_slice(&MAGIC.to_le_bytes());
+        body.push(VERSION);
+        body.push(KIND_INFER);
+        body.extend_from_slice(&1u64.to_le_bytes());
+        body.extend_from_slice(&0u64.to_le_bytes());
+        body.push(2); // tenant_len
+        body.extend_from_slice(&[0xff, 0xfe]); // invalid UTF-8
+        match decode_request(&body) {
+            Err(DecodeError::Malformed(m)) => assert!(m.contains("UTF-8"), "{m}"),
+            other => panic!("want Malformed, got {other:?}"),
+        }
+    }
+
+    #[test]
     fn truncated_payload_is_malformed_and_names_the_field() {
         let body = encode_request(&Request::Infer {
             id: 9,
             deadline_us: 0,
+            tenant: String::new(),
             x: x23(),
             t: None,
         });
@@ -594,6 +711,7 @@ mod tests {
         body.push(KIND_INFER);
         body.extend_from_slice(&1u64.to_le_bytes()); // id
         body.extend_from_slice(&0u64.to_le_bytes()); // deadline
+        body.push(0); // tenant_len
         body.push(0); // has_t
         body.push(2); // ndims
         body.extend_from_slice(&u32::MAX.to_le_bytes());
@@ -610,7 +728,8 @@ mod tests {
             body.push(KIND_INFER);
             body.extend_from_slice(&1u64.to_le_bytes());
             body.extend_from_slice(&0u64.to_le_bytes());
-            body.push(0);
+            body.push(0); // tenant_len
+            body.push(0); // has_t
             body.push(ndims);
             assert!(
                 matches!(decode_request(&body), Err(DecodeError::Malformed(_))),

@@ -1,0 +1,286 @@
+//! `serve::router` — deadline-aware ladder routing for the fleet.
+//!
+//! A tenant deploys a *budget ladder*: the same base model lowered at
+//! several depth-compression budgets, cheapest (most compressed) rung
+//! first.  The router picks, per request, the **cheapest rung whose
+//! predicted completion time meets the request deadline**, falling back
+//! up the ladder when the cheap rungs are backed up and shedding (typed
+//! [`crate::serve::ServeError::Shed`] at the fleet layer) when no rung
+//! can make the deadline at all.
+//!
+//! The cost model is the same signal the serving tier already trusts:
+//! an EWMA of per-batch service time, **seeded from the DP solver's
+//! measured latency table** for the plan (so routing is sensible from
+//! the first request, before any online signal exists) and refined
+//! online from real dispatches with the same 3/4-decay the
+//! `Adaptive` batch controller uses.
+//!
+//! The router itself is pure decision logic over [`RungView`] snapshots
+//! — it owns no queues and takes no locks, so it is trivially testable
+//! and the fleet can call it under its own scheduler lock.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// Online per-rung service-time estimator: seeded from the solver's
+/// latency table at deploy, refined from observed batch service times.
+/// Shared between the fleet's dispatch path (writer) and the router
+/// (reader), hence atomic.
+#[derive(Debug)]
+pub struct RungCost {
+    /// EWMA per-batch service time, µs.  Never 0 after construction —
+    /// the seed keeps the predictor defined before the first dispatch.
+    svc_ewma_us: AtomicU64,
+}
+
+impl RungCost {
+    /// A cost estimator seeded with the plan's expected per-batch
+    /// latency in µs (from measurement or the DP latency table).  A zero
+    /// seed is clamped to 1 so predictions stay defined.
+    pub fn new(seed_us: u64) -> RungCost {
+        RungCost { svc_ewma_us: AtomicU64::new(seed_us.max(1)) }
+    }
+
+    /// Fold one observed batch service time into the estimate (3/4
+    /// decay, matching the batch controller's EWMA).
+    pub fn observe(&self, svc_us: u64) {
+        let svc_us = svc_us.max(1);
+        // racing writers may each lose the other's sample to the RMW
+        // gap; the estimator is advisory, so staleness beats a lock here
+        let cur = self.svc_ewma_us.load(Ordering::Relaxed);
+        self.svc_ewma_us.store((cur * 3 + svc_us) / 4, Ordering::Relaxed);
+    }
+
+    /// Current EWMA per-batch service time, µs (≥ 1).
+    pub fn svc_us(&self) -> u64 {
+        self.svc_ewma_us.load(Ordering::Relaxed)
+    }
+}
+
+/// A scheduler-lock snapshot of one ladder rung, as the router scores it.
+#[derive(Debug, Clone, Copy)]
+pub struct RungView {
+    /// Rows already queued on this rung.
+    pub queued_rows: usize,
+    /// The rung plan's batch size B.
+    pub batch: usize,
+    /// Current EWMA per-batch service time, µs ([`RungCost::svc_us`]).
+    pub svc_us: u64,
+}
+
+impl RungView {
+    /// Predicted completion time for a `rows`-row request landing on
+    /// this rung now: queued-ahead batches plus the request's own batch,
+    /// spread over `workers` drainers, each costing the EWMA service
+    /// time.  Conservative at light load (a partially full batch counts
+    /// whole) — exactly the bias a deadline router wants.
+    pub fn predicted_us(&self, rows: usize, workers: usize) -> u64 {
+        let b = self.batch.max(1);
+        let batches = (self.queued_rows + rows).div_ceil(b) as u64;
+        batches * self.svc_us / workers.max(1) as u64
+    }
+}
+
+/// Routing decision over a ladder of [`RungView`]s.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Route {
+    /// Serve on rung `.0` (index into the ladder, cheapest-first); the
+    /// cheapest rung met the deadline.
+    Hit(usize),
+    /// Serve on rung `.0`, but only after falling back past cheaper
+    /// rungs that could not meet the deadline.
+    Fallback(usize),
+    /// No rung's predicted completion meets the budget — shed.
+    Shed {
+        /// The best (smallest) predicted completion across the ladder, µs.
+        predicted_us: u64,
+    },
+}
+
+impl Route {
+    /// The chosen rung index, if the request was not shed.
+    pub fn rung(&self) -> Option<usize> {
+        match *self {
+            Route::Hit(i) | Route::Fallback(i) => Some(i),
+            Route::Shed { .. } => None,
+        }
+    }
+}
+
+/// Cumulative router telemetry (monotonic counters).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RouterStats {
+    /// Requests routed to the cheapest rung of their ladder.
+    pub hits: usize,
+    /// Requests that fell back to a costlier rung to make their deadline.
+    pub fallbacks: usize,
+    /// Requests no rung could serve in time.
+    pub sheds: usize,
+}
+
+impl RouterStats {
+    /// Fraction of non-shed decisions that landed on the cheapest rung —
+    /// the bench compares this against the always-biggest-plan baseline.
+    pub fn hit_rate(&self) -> f64 {
+        let routed = self.hits + self.fallbacks;
+        if routed == 0 {
+            1.0
+        } else {
+            self.hits as f64 / routed as f64
+        }
+    }
+}
+
+/// The deadline-aware ladder router.  Stateless per decision (all rung
+/// state arrives as [`RungView`]s); owns only its telemetry counters.
+#[derive(Debug, Default)]
+pub struct Router {
+    hits: AtomicUsize,
+    fallbacks: AtomicUsize,
+    sheds: AtomicUsize,
+}
+
+impl Router {
+    pub fn new() -> Router {
+        Router::default()
+    }
+
+    /// Pick a rung for a `rows`-row request with `budget_us` of headroom
+    /// (`u64::MAX` = no deadline).  `rungs` is the tenant's ladder in
+    /// deployment order; `workers` is the fleet pool draining it.
+    ///
+    /// Semantics:
+    /// * Candidates are scanned **cheapest-first by service EWMA** (the
+    ///   deployment order is not trusted — online refinement may have
+    ///   reordered the real costs).
+    /// * The first candidate whose [`RungView::predicted_us`] fits the
+    ///   budget wins: the cheapest rung that still meets the deadline.
+    /// * With no deadline, the rung with the smallest *predicted
+    ///   completion* wins (cheapest net of queueing, never shed).
+    /// * If no rung fits a finite budget, the request sheds.
+    pub fn route(&self, rungs: &[RungView], rows: usize, budget_us: u64, workers: usize) -> Route {
+        assert!(!rungs.is_empty(), "route: tenant has an empty ladder");
+        let mut order: Vec<usize> = (0..rungs.len()).collect();
+        order.sort_by_key(|&i| (rungs[i].svc_us, i));
+        if budget_us == u64::MAX {
+            // no deadline: minimize predicted completion outright
+            let best = *order
+                .iter()
+                .min_by_key(|&&i| (rungs[i].predicted_us(rows, workers), i))
+                .unwrap();
+            return self.tally(best, order[0]);
+        }
+        let mut best_pred = u64::MAX;
+        for &i in &order {
+            let pred = rungs[i].predicted_us(rows, workers);
+            best_pred = best_pred.min(pred);
+            if pred <= budget_us {
+                return self.tally(i, order[0]);
+            }
+        }
+        self.sheds.fetch_add(1, Ordering::Relaxed);
+        Route::Shed { predicted_us: best_pred }
+    }
+
+    fn tally(&self, chosen: usize, cheapest: usize) -> Route {
+        if chosen == cheapest {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            Route::Hit(chosen)
+        } else {
+            self.fallbacks.fetch_add(1, Ordering::Relaxed);
+            Route::Fallback(chosen)
+        }
+    }
+
+    pub fn stats(&self) -> RouterStats {
+        RouterStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            fallbacks: self.fallbacks.load(Ordering::Relaxed),
+            sheds: self.sheds.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view(queued_rows: usize, batch: usize, svc_us: u64) -> RungView {
+        RungView { queued_rows, batch, svc_us }
+    }
+
+    #[test]
+    fn cost_seed_and_observe_converge() {
+        let c = RungCost::new(0);
+        assert_eq!(c.svc_us(), 1, "zero seed clamps to 1");
+        let c = RungCost::new(1000);
+        for _ in 0..64 {
+            c.observe(2000);
+        }
+        assert!(
+            (1900..=2000).contains(&c.svc_us()),
+            "EWMA should converge toward the observed 2000us, got {}",
+            c.svc_us()
+        );
+    }
+
+    #[test]
+    fn empty_idle_ladder_routes_to_cheapest() {
+        let r = Router::new();
+        let rungs = [view(0, 8, 100), view(0, 8, 300), view(0, 8, 900)];
+        assert_eq!(r.route(&rungs, 1, 10_000, 1), Route::Hit(0));
+        assert_eq!(r.stats().hits, 1);
+        assert_eq!(r.stats().hit_rate(), 1.0);
+    }
+
+    #[test]
+    fn backed_up_cheap_rung_falls_back_up_the_ladder() {
+        let r = Router::new();
+        // rung 0 is cheap per batch but has 10 batches queued ahead:
+        // predicted 10*100+.. > budget; rung 1 is idle and fits
+        let rungs = [view(80, 8, 100), view(0, 8, 300)];
+        assert_eq!(r.route(&rungs, 1, 500, 1), Route::Fallback(1));
+        let s = r.stats();
+        assert_eq!((s.hits, s.fallbacks, s.sheds), (0, 1, 0));
+    }
+
+    #[test]
+    fn cheapest_is_by_ewma_not_deployment_order() {
+        let r = Router::new();
+        // online refinement made rung 1 cheaper than rung 0: picking
+        // rung 1 is a *hit* (it IS the cheapest), not a fallback
+        let rungs = [view(0, 8, 700), view(0, 8, 200)];
+        assert_eq!(r.route(&rungs, 1, 10_000, 1), Route::Hit(1));
+        assert_eq!(r.stats().hits, 1);
+    }
+
+    #[test]
+    fn no_rung_fits_sheds_with_best_prediction() {
+        let r = Router::new();
+        let rungs = [view(80, 8, 100), view(16, 8, 300)];
+        match r.route(&rungs, 1, 50, 1) {
+            Route::Shed { predicted_us } => {
+                // best achievable was rung 0: ceil(81/8)=11 batches * 100us
+                assert_eq!(predicted_us, 1100);
+            }
+            other => panic!("expected shed, got {other:?}"),
+        }
+        assert_eq!(r.stats().sheds, 1);
+    }
+
+    #[test]
+    fn no_deadline_minimizes_predicted_completion_and_never_sheds() {
+        let r = Router::new();
+        // cheap rung is swamped; with no deadline the idle costlier rung
+        // still completes sooner and must win
+        let rungs = [view(800, 8, 100), view(0, 8, 300)];
+        assert_eq!(r.route(&rungs, 1, u64::MAX, 1), Route::Fallback(1));
+    }
+
+    #[test]
+    fn workers_divide_predicted_queue_wait() {
+        let v = view(32, 8, 1000);
+        // 5 batches (32+1 rows over B=8) * 1000us over 1 worker
+        assert_eq!(v.predicted_us(1, 1), 5000);
+        assert_eq!(v.predicted_us(1, 4), 1250);
+    }
+}

@@ -140,10 +140,64 @@ pub fn pool_spawns() -> usize {
     SPAWNED.load(Ordering::Relaxed)
 }
 
+/// Live long-lived pool users ([`crate::serve::Session`]s and fleets) —
+/// [`shutdown_pool`] refuses to run while any exist.
+static SERVING: AtomicUsize = AtomicUsize::new(0);
+
+/// RAII mark of a long-lived compute-pool user.  A serving engine holds
+/// one for its whole lifetime so [`shutdown_pool`] fails loudly instead
+/// of silently degrading every in-flight batch of a live session to
+/// single-threaded self-service.
+#[derive(Debug)]
+pub struct ServingGuard(());
+
+impl Drop for ServingGuard {
+    fn drop(&mut self) {
+        SERVING.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// Mark the caller as a long-lived pool user until the guard drops.
+pub fn serving_guard() -> ServingGuard {
+    SERVING.fetch_add(1, Ordering::AcqRel);
+    ServingGuard(())
+}
+
+/// Live long-lived pool users (sessions + fleets currently up).
+pub fn serving_users() -> usize {
+    SERVING.load(Ordering::Acquire)
+}
+
 /// Tear the global pool down: signal, join, forget.  In-flight jobs
 /// complete first (workers drain the queue before exiting; submitters
 /// always self-serve).  The next `par_*` call lazily re-creates the pool.
+///
+/// # Panics
+/// While a serving engine (a [`crate::serve::Session`] or fleet holding a
+/// [`ServingGuard`]) is live — tearing the pool out from under one is a
+/// lifecycle bug, and a loud panic beats a silent throughput collapse.
 pub fn shutdown_pool() {
+    let users = serving_users();
+    assert!(
+        users == 0,
+        "par::shutdown_pool() with {users} live serving engine(s): \
+         close/drop every serve::Session and serve::Fleet first"
+    );
+    force_shutdown_pool();
+}
+
+/// [`shutdown_pool`] that declines (returns `false`) instead of panicking
+/// when a serving engine is live — for callers racing against engines
+/// they do not own (e.g. concurrently-running tests).
+pub fn try_shutdown_pool() -> bool {
+    if serving_users() > 0 {
+        return false;
+    }
+    force_shutdown_pool();
+    true
+}
+
+fn force_shutdown_pool() {
     let taken = POOL.lock().unwrap().take();
     if let Some(mut p) = taken {
         p.inner.state.lock().unwrap().shutdown = true;
@@ -504,15 +558,27 @@ mod tests {
         // shutting the global pool down must not break correctness: a
         // dispatch against a shut (or re-created) pool still completes —
         // the submitter claims every task itself if no worker exists
+        // (try_: a concurrent test may hold a live session; declining is
+        // fine — the dispatch below works either way)
         let hits = AtomicU64::new(0);
         par_for_n(32, 4, |_| {
             hits.fetch_add(1, Ordering::Relaxed);
         });
-        shutdown_pool();
+        let _ = try_shutdown_pool();
         par_for_n(32, 4, |_| {
             hits.fetch_add(1, Ordering::Relaxed);
         });
         assert_eq!(hits.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn shutdown_refuses_while_a_serving_guard_is_live() {
+        let g = serving_guard();
+        assert_eq!(serving_users(), 1);
+        let r = std::panic::catch_unwind(shutdown_pool);
+        assert!(r.is_err(), "shutdown_pool must panic under a live guard");
+        drop(g);
+        assert_eq!(serving_users(), 0);
     }
 
     #[test]

@@ -1,0 +1,356 @@
+//! The multi-tenant fleet suite: `serve::Fleet` end to end on
+//! deterministic host backends (no PJRT runtime needed).
+//!
+//! Pins the ISSUE-7 acceptance properties:
+//! * shared-weight dedup: deploying the same plan onto a second tenant
+//!   adds **zero** unique bytes and the whole second upload lands in
+//!   `dedup_saved_bytes` — byte-exact accounting across a 3-rung ladder,
+//! * weighted-fair scheduling: a flooding tenant cannot starve a light
+//!   one — the light tenant's requests complete while the flood is
+//!   still queued,
+//! * deadline-aware routing: an idle ladder serves the cheapest rung, a
+//!   backed-up cheap rung falls back up the ladder, and when no rung
+//!   can meet the deadline the request is shed with the typed
+//!   [`ServeError::Shed`],
+//! * graceful hot swap: requests admitted before `swap_fn` complete
+//!   bit-identically on the old dispatch, requests after run on the
+//!   new one, and nothing is dropped,
+//! * `par::shutdown_pool()` fails loudly while a fleet is live,
+//! * the TCP tier routes `Infer` frames by tenant and `/stats` carries
+//!   per-tenant breakdowns plus the fleet dedup/router counters.
+//!
+//! The TCP test binds `127.0.0.1:0`; where loopback sockets are
+//! unavailable it skips cleanly instead of failing.
+
+use std::panic;
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use layermerge::exec::{Format, Plan};
+use layermerge::serve::fleet::{Fleet, FleetCfg, TenantCfg};
+use layermerge::serve::net::{NetCfg, NetClient, NetServer};
+use layermerge::serve::{BatchPolicy, Engine, ServeError};
+use layermerge::util::tensor::Tensor;
+
+const TAIL: [usize; 1] = [3]; // per-row feature length for mock rungs
+
+/// A deterministic mock rung: out[r] = (sum of row r, tag).  The tag
+/// makes outputs attributable to a specific dispatch fn (which ladder
+/// rung served the row; which side of a hot swap produced it), and the
+/// optional sleep gives the rung a controllable service time.
+fn rung_fn(
+    tag: f32,
+    service: Duration,
+) -> impl Fn(&Tensor, Option<&Tensor>) -> anyhow::Result<Tensor> + Send + Sync + 'static {
+    move |x, _t| {
+        if !service.is_zero() {
+            thread::sleep(service);
+        }
+        let rl: usize = x.dims[1..].iter().product();
+        let mut out = Tensor::zeros(&[x.dims[0], 2]);
+        for r in 0..x.dims[0] {
+            out.data[r * 2] = x.data[r * rl..(r + 1) * rl].iter().sum::<f32>() * 0.5 + 1.0;
+            out.data[r * 2 + 1] = tag;
+        }
+        Ok(out)
+    }
+}
+
+/// What `rung_fn(tag, _)` returns for `x` — the bit-exact oracle.
+fn expect(x: &Tensor, tag: f32) -> Vec<f32> {
+    let rl: usize = x.dims[1..].iter().product();
+    let mut out = Vec::with_capacity(x.dims[0] * 2);
+    for r in 0..x.dims[0] {
+        out.push(x.data[r * rl..(r + 1) * rl].iter().sum::<f32>() * 0.5 + 1.0);
+        out.push(tag);
+    }
+    out
+}
+
+fn rows(n: usize, seed: f32) -> Tensor {
+    let mut t = Tensor::zeros(&[n, TAIL[0]]);
+    for (i, v) in t.data.iter_mut().enumerate() {
+        *v = seed + i as f32 * 0.25;
+    }
+    t
+}
+
+fn cfg(workers: usize) -> FleetCfg {
+    FleetCfg { workers, queue_cap: 512, quantum_rows: 4 }
+}
+
+// ---------------------------------------------------------------------------
+// Shared-weight dedup
+// ---------------------------------------------------------------------------
+
+/// Byte-exact dedup accounting across a 3-rung ladder shared by two
+/// tenants.  Let the first lowering of the merged plan pay `u` unique
+/// bytes and save `s` to intra-plan duplicates (total upload `u + s`).
+/// The second tenant deploying the *same* plan must add zero unique
+/// bytes and push the entire `u + s` upload into `dedup_saved_bytes`;
+/// a genuinely different plan must add its own unique bytes.
+#[test]
+fn dedup_accounts_bytes_exactly_across_a_shared_ladder() {
+    let engine = Engine::host();
+    let (spec, params) =
+        layermerge::ir::synth::by_name("hostnet-tiny").expect("synthetic spec");
+    let orig = Arc::new(Plan::original(&spec, &params).unwrap());
+    let (a, c, spans) = layermerge::solver::depth::greedy_full_solution(&spec);
+    let merged = Arc::new(Plan::from_solution(&spec, &params, &a, &c, &spans).unwrap());
+
+    let fleet = Fleet::new(cfg(1));
+    fleet.add_tenant(TenantCfg::new("a", 1, BatchPolicy::Greedy)).unwrap();
+    fleet.add_tenant(TenantCfg::new("b", 1, BatchPolicy::Greedy)).unwrap();
+
+    fleet.deploy("a", &engine, &merged, Format::Fused, 300).unwrap();
+    let s1 = fleet.stats();
+    let (u, s) = (s1.unique_weight_bytes, s1.dedup_saved_bytes);
+    assert!(u > 0, "lowering a plan must upload some weight bytes");
+
+    // same plan, second tenant: every upload hits the shared cache
+    fleet.deploy("b", &engine, &merged, Format::Fused, 300).unwrap();
+    let s2 = fleet.stats();
+    assert_eq!(
+        s2.unique_weight_bytes, u,
+        "re-deploying an identical plan must add no unique bytes"
+    );
+    assert_eq!(
+        s2.dedup_saved_bytes,
+        s + (u + s),
+        "the whole second upload must be deduped away"
+    );
+
+    // a different plan on the same ladder pays its own unique bytes
+    fleet.deploy("a", &engine, &orig, Format::Fused, 1_500).unwrap();
+    let s3 = fleet.stats();
+    assert!(
+        s3.unique_weight_bytes > u,
+        "the uncompressed plan has kernels the merged plan lacks"
+    );
+    assert!(s3.dedup_saved_bytes >= s2.dedup_saved_bytes);
+    assert_eq!((s3.tenants, s3.rungs), (2, 3));
+    fleet.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Weighted-fair scheduling
+// ---------------------------------------------------------------------------
+
+/// A tenant flooding 80 requests cannot starve a light tenant: DRR
+/// interleaves batches, so the light tenant's 8 requests all complete
+/// while the flood is still queued.  (Under FIFO-across-tenants the
+/// light requests, submitted after the flood, would drain last.)
+#[test]
+fn flooding_tenant_does_not_starve_light_tenant() {
+    let fleet = Fleet::new(cfg(1));
+    for name in ["flood", "light"] {
+        fleet.add_tenant(TenantCfg::new(name, 1, BatchPolicy::Greedy)).unwrap();
+        fleet
+            .deploy_fn(name, 4, &TAIL, false, 10_000, rung_fn(1.0, Duration::from_millis(10)))
+            .unwrap();
+    }
+
+    let flood: Vec<_> = (0..80)
+        .map(|i| fleet.submit("flood", rows(1, i as f32), None, None).unwrap())
+        .collect();
+    let light: Vec<_> = (0..8)
+        .map(|i| fleet.submit("light", rows(1, 100.0 + i as f32), None, None).unwrap())
+        .collect();
+
+    for tk in light {
+        let y = tk
+            .wait_timeout_coded(Duration::from_secs(20))
+            .unwrap_or_else(|_| panic!("light tenant ticket timed out — starved by the flood"))
+            .expect("light tenant request failed");
+        assert_eq!(y.dims[1], 2);
+    }
+    assert!(
+        fleet.queue_depth("flood") > 0,
+        "light tenant finished only after the flood fully drained — no fairness"
+    );
+    let ls = fleet.tenant_stats("light").unwrap();
+    assert_eq!(ls.requests, 8);
+
+    drop(flood); // late fulfillments into dropped tickets are harmless
+    fleet.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Deadline-aware routing
+// ---------------------------------------------------------------------------
+
+/// Router behavior across one ladder: idle → cheapest rung (hit);
+/// cheap rung backed up but the big rung still fits → fallback; no
+/// rung fits → typed shed.  Service times are two orders of magnitude
+/// above scheduling jitter, so the predicted-wait comparisons are
+/// stable on slow machines.
+#[test]
+fn router_serves_cheapest_falls_back_and_sheds() {
+    let fleet = Fleet::new(cfg(1));
+    fleet.add_tenant(TenantCfg::new("t", 1, BatchPolicy::Greedy)).unwrap();
+    // rung 0: cheap (100ms/batch), rung 1: big (300ms/batch)
+    fleet
+        .deploy_fn("t", 4, &TAIL, false, 100_000, rung_fn(1.0, Duration::from_millis(100)))
+        .unwrap();
+    fleet
+        .deploy_fn("t", 4, &TAIL, false, 300_000, rung_fn(2.0, Duration::from_millis(300)))
+        .unwrap();
+
+    // (a) idle ladder + generous deadline: cheapest rung serves it
+    let tk = fleet
+        .submit("t", rows(1, 0.0), None, Some(Instant::now() + Duration::from_secs(2)))
+        .unwrap();
+    let y = tk.wait_coded().expect("idle ladder must serve");
+    assert_eq!(y.data[1], 1.0, "an idle ladder must route to the cheapest rung");
+
+    // (b) back up the cheap rung (pinned submits bypass the router),
+    // then route a deadline only the big rung can meet
+    let pinned: Vec<_> = (0..24)
+        .map(|i| fleet.submit_rung("t", 0, rows(1, i as f32), None, None).unwrap())
+        .collect();
+    let tk = fleet
+        .submit("t", rows(1, 50.0), None, Some(Instant::now() + Duration::from_millis(450)))
+        .unwrap();
+
+    // (c) and a deadline nothing can meet: typed shed at the door
+    match fleet.submit("t", rows(1, 60.0), None, Some(Instant::now() + Duration::from_millis(150)))
+    {
+        Err(ServeError::Shed { predicted_us, budget_us, .. }) => {
+            assert!(predicted_us > budget_us, "shed must report why it refused");
+        }
+        Err(other) => panic!("want Shed when no rung fits, got {other:?}"),
+        Ok(_) => panic!("want Shed when no rung fits, got an admitted ticket"),
+    }
+
+    let y = tk.wait_coded().expect("fallback request must still be served");
+    assert_eq!(y.data[1], 2.0, "the fallback request must run on the big rung");
+
+    let rs = fleet.router_stats();
+    assert!(rs.hits >= 1, "router stats: {rs:?}");
+    assert!(rs.fallbacks >= 1, "router stats: {rs:?}");
+    assert!(rs.sheds >= 1, "router stats: {rs:?}");
+
+    drop(pinned);
+    fleet.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Graceful hot swap
+// ---------------------------------------------------------------------------
+
+/// Hot swap drops nothing and never mixes plans: every request admitted
+/// before `swap_fn` completes bit-identically on the old dispatch (its
+/// dispatch is pinned at submit, so this holds even if the worker pops
+/// it after the swap), and every request after runs on the new one.
+#[test]
+fn hot_swap_completes_in_flight_on_old_plan_with_zero_drops() {
+    let fleet = Fleet::new(cfg(1));
+    fleet.add_tenant(TenantCfg::new("t", 1, BatchPolicy::Greedy)).unwrap();
+    fleet
+        .deploy_fn("t", 2, &TAIL, false, 20_000, rung_fn(1.0, Duration::from_millis(20)))
+        .unwrap();
+
+    let a = rows(2, 0.0); // full batch: in service while b/c queue behind it
+    let b = rows(1, 10.0);
+    let c = rows(1, 20.0);
+    let d = rows(1, 30.0);
+    let tka = fleet.submit("t", a.clone(), None, None).unwrap();
+    let tkb = fleet.submit("t", b.clone(), None, None).unwrap();
+    let tkc = fleet.submit("t", c.clone(), None, None).unwrap();
+
+    fleet.swap_fn("t", 0, 2, rung_fn(2.0, Duration::ZERO)).unwrap();
+    let tkd = fleet.submit("t", d.clone(), None, None).unwrap();
+
+    // zero drops: all four resolve; pre-swap bit-identical on the old fn
+    assert_eq!(tka.wait_coded().expect("in-flight dropped by swap").data, expect(&a, 1.0));
+    assert_eq!(tkb.wait_coded().expect("queued req dropped by swap").data, expect(&b, 1.0));
+    assert_eq!(tkc.wait_coded().expect("queued req dropped by swap").data, expect(&c, 1.0));
+    assert_eq!(tkd.wait_coded().expect("post-swap req dropped").data, expect(&d, 2.0));
+
+    let ts = fleet.tenant_stats("t").unwrap();
+    assert_eq!((ts.requests, ts.rows), (4, 5));
+
+    // swapping an unknown rung or after close is a loud error, not UB
+    assert!(fleet.swap_fn("t", 9, 2, rung_fn(3.0, Duration::ZERO)).is_err());
+    fleet.close();
+    assert!(fleet.swap_fn("t", 0, 2, rung_fn(3.0, Duration::ZERO)).is_err());
+    fleet.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Pool lifecycle
+// ---------------------------------------------------------------------------
+
+/// `par::shutdown_pool()` must refuse — loudly — while a fleet holds
+/// the compute pool, and the pool must remain usable afterwards.
+#[test]
+fn shutdown_pool_fails_loudly_with_a_live_fleet() {
+    let fleet = Fleet::new(cfg(1));
+    fleet.add_tenant(TenantCfg::new("t", 1, BatchPolicy::Greedy)).unwrap();
+    fleet.deploy_fn("t", 4, &TAIL, false, 1_000, rung_fn(1.0, Duration::ZERO)).unwrap();
+
+    let r = panic::catch_unwind(|| layermerge::util::par::shutdown_pool());
+    assert!(r.is_err(), "shutdown_pool must panic while a fleet is live");
+
+    // the refusal must not have wedged the pool: the fleet still serves
+    let x = rows(1, 5.0);
+    let y = fleet.submit("t", x.clone(), None, None).unwrap().wait().unwrap();
+    assert_eq!(y.data, expect(&x, 1.0));
+    fleet.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Fleet over TCP
+// ---------------------------------------------------------------------------
+
+/// The wire tier routes `Infer` frames by tenant, refuses ambiguous or
+/// unknown tenants with typed errors, and the `/stats` frame carries
+/// per-tenant breakdowns plus the fleet dedup/router counters.
+#[test]
+fn fleet_over_tcp_routes_tenants_and_reports_per_tenant_stats() {
+    let fleet = Arc::new(Fleet::new(cfg(1)));
+    fleet.add_tenant(TenantCfg::new("a", 2, BatchPolicy::Greedy)).unwrap();
+    fleet.add_tenant(TenantCfg::new("b", 1, BatchPolicy::Greedy)).unwrap();
+    fleet.deploy_fn("a", 4, &TAIL, false, 1_000, rung_fn(10.0, Duration::ZERO)).unwrap();
+    fleet.deploy_fn("b", 4, &TAIL, false, 1_000, rung_fn(20.0, Duration::ZERO)).unwrap();
+
+    let server = match NetServer::bind_fleet(Arc::clone(&fleet), "127.0.0.1:0", NetCfg::default())
+    {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("skipping fleet TCP test (no loopback): {e}");
+            return;
+        }
+    };
+    let mut c = NetClient::connect(server.addr()).unwrap();
+
+    let x = rows(2, 1.0);
+    let ya = c.infer_tenant("a", &x, None, None).unwrap().expect("tenant a must be served");
+    assert_eq!(ya.data, expect(&x, 10.0), "frame routed to the wrong tenant's ladder");
+    let yb = c.infer_tenant("b", &x, None, None).unwrap().expect("tenant b must be served");
+    assert_eq!(yb.data, expect(&x, 20.0), "frame routed to the wrong tenant's ladder");
+
+    // two tenants: an empty tenant field is ambiguous; unknown is refused
+    assert!(c.infer_tenant("", &x, None, None).unwrap().is_err());
+    assert!(c.infer_tenant("ghost", &x, None, None).unwrap().is_err());
+
+    let j = c.stats().unwrap();
+    assert!(j.get("requests").and_then(|v| v.as_usize()).unwrap() >= 2);
+    let tenants = j.get("tenants").expect("fleet stats must break down by tenant");
+    for name in ["a", "b"] {
+        let t = tenants.get(name).unwrap_or_else(|| panic!("stats missing tenant {name}"));
+        assert_eq!(t.get("requests").and_then(|v| v.as_usize()), Some(1));
+    }
+    let f = j.get("fleet").expect("fleet stats must carry dedup/router counters");
+    for key in ["unique_weight_bytes", "dedup_saved_bytes", "router_hits", "router_sheds"] {
+        assert!(f.get(key).is_some(), "fleet stats missing {key}");
+    }
+
+    drop(c);
+    server.shutdown();
+    match Arc::try_unwrap(fleet) {
+        Ok(f) => f.shutdown(),
+        Err(f) => f.close(),
+    }
+}

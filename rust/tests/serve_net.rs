@@ -186,6 +186,7 @@ fn truncated_body_keeps_the_connection_serving() {
     let full = proto::encode_request(&Request::Infer {
         id: 9,
         deadline_us: 0,
+        tenant: String::new(),
         x: req(1, 0.0),
         t: None,
     });
@@ -205,6 +206,7 @@ fn truncated_body_keeps_the_connection_serving() {
         &proto::encode_request(&Request::Infer {
             id: 10,
             deadline_us: 0,
+            tenant: String::new(),
             x: x.clone(),
             t: None,
         }),
@@ -352,6 +354,7 @@ fn mid_request_disconnects_cost_one_connection_each() {
             &proto::encode_request(&Request::Infer {
                 id: 1,
                 deadline_us: 0,
+                tenant: String::new(),
                 x: req(1, 0.0),
                 t: None,
             }),

@@ -9,10 +9,11 @@
 #     host backend, with transfer counts (the `resident_forward` record;
 #     read-modify-write)
 #   * serving          — micro-batched Session throughput at 1/4/16
-#     concurrent clients, window-policy comparison, and the TCP tier
+#     concurrent clients, window-policy comparison, the TCP tier
 #     over loopback at 0.5x/1x/2x capacity (`serving_net`: goodput,
-#     shed rate, p99-of-admitted; skips cleanly with no loopback)
-#     (read-modify-write)
+#     shed rate, p99-of-admitted; skips cleanly with no loopback),
+#     and the multi-tenant fleet (`fleet_*`: weight-dedup bytes,
+#     routed-vs-pinned-biggest goodput) (read-modify-write)
 #
 # Usage:
 #   scripts/bench.sh              # host-only benches, no artifacts needed

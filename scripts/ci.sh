@@ -26,6 +26,11 @@ cargo test -q
 echo "== cargo test -q --test serve_net =="
 cargo test -q --test serve_net
 
+# same treatment for the multi-tenant fleet suite (dedup accounting,
+# weighted fairness, deadline routing, hot swap, pool lifecycle)
+echo "== cargo test -q --test fleet =="
+cargo test -q --test fleet
+
 if [ "${CI_SKIP_CLIPPY:-0}" != "1" ] && cargo clippy --version >/dev/null 2>&1; then
     echo "== cargo clippy --all-targets -- -D warnings =="
     cargo clippy --all-targets -- -D warnings
