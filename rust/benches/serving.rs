@@ -443,7 +443,12 @@ fn fleet_bench(
         (FLEET_CHEAP_DISPATCH_US + FLEET_CHEAP_ROW_US * MOCK_BATCH as u64) as f64;
     let rps = 0.6 * 2.0 * MOCK_BATCH as f64 * 1e6 / cheap_batch_us;
     let make_fleet = || -> anyhow::Result<Fleet> {
-        let f = Fleet::new(FleetCfg { workers: 2, queue_cap: 512, quantum_rows: 4 });
+        let f = Fleet::new(FleetCfg {
+            workers: 2,
+            queue_cap: 512,
+            quantum_rows: 4,
+            ..FleetCfg::default()
+        });
         f.add_tenant(TenantCfg::new("t", 1, BatchPolicy::Greedy))?;
         f.deploy_fn(
             "t", MOCK_BATCH, &MOCK_TAIL, false, 1_000,
@@ -516,6 +521,186 @@ fn fleet_bench(
     Ok(())
 }
 
+/// Chaos bench: closed-loop goodput under 5% injected backend faults
+/// plus a flaky wire (dropped connections, truncated/corrupted frames,
+/// stalls), with and without the retrying client, against a fault-free
+/// baseline.  Records the acceptance headline: the retrying client's
+/// goodput retention vs that baseline.  Seeds route through
+/// `LM_CHAOS_SEED` so a run is reproducible.
+fn chaos_bench(
+    rows: &mut Vec<Json>,
+    derived: &mut Vec<(String, Json)>,
+) -> anyhow::Result<()> {
+    use layermerge::serve::chaos::{self, FaultPlan, FaultProxy, FaultSpec, WireFaults};
+    use layermerge::serve::net::{NetClient, RetryClient, RetryPolicy};
+
+    // light sleep-based mock: fast enough that the bench stays cheap,
+    // slow enough that service time dominates loopback round-trips
+    fn light_backend(x: &Tensor, _t: Option<&Tensor>) -> anyhow::Result<Tensor> {
+        std::thread::sleep(Duration::from_micros(300));
+        let rl: usize = x.dims[1..].iter().product();
+        let b = x.dims[0];
+        let mut out = Tensor::zeros(&[b, 2]);
+        for r in 0..b {
+            let row = &x.data[r * rl..(r + 1) * rl];
+            out.data[r * 2] = row.iter().sum();
+            out.data[r * 2 + 1] = row.iter().map(|v| v * v).sum();
+        }
+        Ok(out)
+    }
+    let requests = if smoke() { 16 } else { 200 };
+    let input = |i: usize| {
+        Tensor::new(
+            vec![1, MOCK_TAIL[0]],
+            (0..MOCK_TAIL[0]).map(|k| (i + k) as f32 * 0.5).collect(),
+        )
+    };
+    let serve_cfg = || ServeCfg {
+        workers: 2,
+        queue_cap: 256,
+        policy: BatchPolicy::Greedy,
+        ..ServeCfg::default()
+    };
+    let bind = |sess: Session| {
+        NetServer::bind(Arc::new(sess), "127.0.0.1:0", NetCfg::default())
+    };
+
+    // arm 1: fault-free baseline, plain client
+    let clean = match bind(Session::from_fn(
+        MOCK_BATCH,
+        &MOCK_TAIL,
+        false,
+        serve_cfg(),
+        light_backend,
+    )) {
+        Ok(s) => s,
+        Err(e) => {
+            println!("(skipping chaos bench: {e})");
+            return Ok(());
+        }
+    };
+    println!("== chaos benches (5% backend faults + flaky wire, host mock) ==");
+    let mut base_ok = 0usize;
+    let base_start = std::time::Instant::now();
+    {
+        let mut c = NetClient::connect(clean.addr())?;
+        for i in 0..requests {
+            if matches!(c.infer_deadline(&input(i), None, None), Ok(Ok(_))) {
+                base_ok += 1;
+            }
+        }
+    }
+    let base_rps = base_ok as f64 / base_start.elapsed().as_secs_f64().max(1e-9);
+    clean.shutdown();
+
+    // arms 2 and 3 share the faulty server + flaky wire profile
+    let spec = FaultSpec::failing(0.05);
+    let wire = WireFaults {
+        drop_conn: 0.04,
+        stall: 0.02,
+        stall_ms: 5,
+        truncate: 0.02,
+        corrupt: 0.02,
+    };
+    let faulty = |seed: u64| {
+        bind(Session::from_fn(
+            MOCK_BATCH,
+            &MOCK_TAIL,
+            false,
+            serve_cfg(),
+            chaos::wrap_fn(FaultPlan::random(spec, chaos::env_seed(seed)), light_backend),
+        ))
+    };
+
+    // arm 2: plain client (reconnecting on transport failure, no retry —
+    // a wire fault costs the in-flight request)
+    let server = faulty(0xbe4c01)?;
+    let proxy = FaultProxy::bind(server.addr(), wire, chaos::env_seed(0xbe4c02))?;
+    let mut plain_ok = 0usize;
+    let plain_start = std::time::Instant::now();
+    {
+        let mut conn: Option<NetClient> = None;
+        for i in 0..requests {
+            if conn.is_none() {
+                conn = NetClient::connect(proxy.addr()).ok();
+            }
+            let Some(c) = conn.as_mut() else { continue };
+            match c.infer_deadline(&input(i), None, None) {
+                Ok(Ok(_)) => plain_ok += 1,
+                Ok(Err(_)) => {}
+                Err(_) => conn = None, // dead wire: pay the reconnect
+            }
+        }
+    }
+    let plain_rps = plain_ok as f64 / plain_start.elapsed().as_secs_f64().max(1e-9);
+    let wire_counts = proxy.counts();
+    proxy.shutdown();
+    server.shutdown();
+
+    // arm 3: the retrying client over the same fault profile
+    let server = faulty(0xbe4c01)?;
+    let proxy = FaultProxy::bind(server.addr(), wire, chaos::env_seed(0xbe4c02))?;
+    let mut rc = RetryClient::new(proxy.addr())
+        .with_retry(RetryPolicy { attempts: 6, base_ms: 1, cap_ms: 20 })
+        .with_seed(chaos::env_seed(0xbe4c03));
+    let mut retry_ok = 0usize;
+    let retry_start = std::time::Instant::now();
+    for i in 0..requests {
+        if matches!(rc.infer_deadline(&input(i), None, None), Ok(Ok(_))) {
+            retry_ok += 1;
+        }
+    }
+    let retry_rps = retry_ok as f64 / retry_start.elapsed().as_secs_f64().max(1e-9);
+    let rstats = rc.retry_stats();
+    proxy.shutdown();
+    server.shutdown();
+
+    let n = requests as f64;
+    // retention = completed-request ratio vs the fault-free baseline; a
+    // closed-loop rps ratio would charge the retrier for its own backoff
+    // sleeps, which is latency, not lost goodput (rps is recorded too)
+    let retention = retry_ok as f64 / (base_ok as f64).max(1.0);
+    println!(
+        "  baseline {base_ok}/{requests} ok ({base_rps:.0} rps) | plain-through-chaos \
+         {plain_ok}/{requests} ({plain_rps:.0} rps) | retry-through-chaos \
+         {retry_ok}/{requests} ({retry_rps:.0} rps, {} retries) | retention {retention:.2}",
+        rstats.retries
+    );
+    println!(
+        "  wire: {} conns, {} forwarded, {} dropped, {} stalled, {} truncated, {} corrupted",
+        wire_counts.conns,
+        wire_counts.forwarded,
+        wire_counts.dropped,
+        wire_counts.stalled,
+        wire_counts.truncated,
+        wire_counts.corrupted
+    );
+    for (name, ok, rps) in [
+        ("chaos baseline", base_ok, base_rps),
+        ("chaos faulty plain", plain_ok, plain_rps),
+        ("chaos faulty retry", retry_ok, retry_rps),
+    ] {
+        rows.push(Json::obj(vec![
+            ("name", Json::str(name)),
+            ("iters", Json::num(n)),
+            ("ok", Json::num(ok as f64)),
+            ("ok_frac", Json::num(ok as f64 / n.max(1.0))),
+            ("goodput_rps", Json::num(rps)),
+        ]));
+    }
+    derived.push(("chaos_goodput_baseline_rps".into(), Json::num(base_rps)));
+    derived.push(("chaos_goodput_plain_rps".into(), Json::num(plain_rps)));
+    derived.push(("chaos_goodput_retry_rps".into(), Json::num(retry_rps)));
+    derived.push(("chaos_ok_frac_plain".into(), Json::num(plain_ok as f64 / n)));
+    derived.push(("chaos_ok_frac_retry".into(), Json::num(retry_ok as f64 / n)));
+    derived.push(("chaos_goodput_retention".into(), Json::num(retention)));
+    derived.push((
+        "chaos_retry_recovers".into(),
+        Json::num(if retention >= 0.9 { 1.0 } else { 0.0 }),
+    ));
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let mut rows: Vec<Json> = Vec::new();
     let mut derived: Vec<(String, Json)> = Vec::new();
@@ -555,6 +740,7 @@ fn main() -> anyhow::Result<()> {
     window_policy_bench(&mut rows, &mut derived)?;
     net_tier_bench(&mut rows, &mut derived)?;
     fleet_bench(&mut rows, &mut derived)?;
+    chaos_bench(&mut rows, &mut derived)?;
 
     // a deployed plan, when the artifacts + real XLA runtime are present
     let root = std::path::Path::new("artifacts");
@@ -614,14 +800,20 @@ fn main() -> anyhow::Result<()> {
             if let Some(prev_rows) = prev.get("rows").and_then(|r| r.as_arr()) {
                 for r in prev_rows {
                     let name = r.get("name").and_then(|n| n.as_str()).unwrap_or("");
-                    if !name.starts_with("serve ") && !name.starts_with("fleet ") {
+                    if !name.starts_with("serve ")
+                        && !name.starts_with("fleet ")
+                        && !name.starts_with("chaos ")
+                    {
                         all_rows.push(r.clone());
                     }
                 }
             }
             if let Some(prev_d) = prev.get("derived").and_then(|d| d.as_obj()) {
                 for (k, v) in prev_d {
-                    if !k.starts_with("serving_") && !k.starts_with("fleet_") {
+                    if !k.starts_with("serving_")
+                        && !k.starts_with("fleet_")
+                        && !k.starts_with("chaos_")
+                    {
                         all_derived.push((k.clone(), v.clone()));
                     }
                 }

@@ -12,6 +12,9 @@
 //!   fleet    --model M                 multi-tenant budget-ladder fleet
 //!                                      (weight dedup, DRR fairness,
 //!                                      deadline routing)
+//!   chaos    --model M                 deterministic fault drill: backend
+//!                                      faults + flaky wire through the
+//!                                      retrying client, invariant report
 //!
 //! Global flags: --artifacts DIR, --fast (analytical latency + short
 //! schedules), --measured (pin measured latency, overrides --fast),
@@ -87,6 +90,10 @@ fn usage() -> &'static str {
                                          shared-weight dedup, weighted-fair\n\
                                          scheduling, deadline-aware ladder\n\
                                          routing (host backend)\n\
+       chaos      --model M              deterministic fault drill: injected\n\
+                                         backend faults + a flaky loopback\n\
+                                         wire, plain vs retrying client,\n\
+                                         invariant report (host backend)\n\
        table1..table11                   regenerate a paper table\n\
        fig1..fig5                        regenerate a paper figure\n\
        all                               every table and figure\n\
@@ -131,6 +138,14 @@ fn usage() -> &'static str {
        with --arrival-rps F the command binds, self-drives F req/s of\n\
        open-loop Poisson load over loopback, prints the goodput/shed\n\
        report, and exits; without it the server listens until killed\n\
+     chaos flags (plus the serve/session flags above):\n\
+       --requests N      requests per arm (default 200)\n\
+       --fault-rate F    per-request backend fault rate (default 0.05;\n\
+                         compounded down to a per-op rate by plan depth)\n\
+       --wire-rate F     total wire fault rate at the proxy (default\n\
+                         0.10, split drop/stall/truncate/corrupt)\n\
+       --retries N       retrying-client attempt budget (default 4)\n\
+       --seed N          chaos seed (LM_CHAOS_SEED overrides)\n\
      fleet flags (plus the serve policy flags above):\n\
        --requests N      interactive-tenant request count (default 256;\n\
                          the batch tenant offers half)\n\
@@ -190,10 +205,11 @@ fn main() -> Result<()> {
             "serve" => serve_host(&ctx, model, &args),
             "serve-net" => serve_net_host(&ctx, model, &args),
             "fleet" => fleet_host(&ctx, model, &args),
+            "chaos" => chaos_host(&ctx, model, &args),
             "profile" => profile_host(&ctx, model),
             other => bail!(
                 "{other} needs the PJRT backend (gated graph / tables); \
-                 --backend host supports serve, serve-net, fleet, and profile"
+                 --backend host supports serve, serve-net, fleet, chaos, and profile"
             ),
         };
     }
@@ -715,6 +731,146 @@ fn fleet_host(ctx: &Ctx, model: &str, args: &Args) -> Result<()> {
         rs.hit_rate(),
     );
     fleet.shutdown();
+    Ok(())
+}
+
+/// `chaos --backend host`: a deterministic end-to-end fault drill.  The
+/// greedy-merged plan is deployed twice over the TCP tier — once clean,
+/// once on a `FaultBackend` (injected op failures and panics) behind a
+/// flaky loopback `FaultProxy` (dropped connections, stalls, truncated
+/// and corrupted frames) — and driven with a plain client vs the
+/// retrying client.  Prints the invariant report: every request
+/// resolves exactly once, the server counters partition the dispatched
+/// work, and the retrying client's goodput retention vs the clean
+/// baseline.  Seeded via `--seed` / `LM_CHAOS_SEED` so a run is
+/// reproducible.
+fn chaos_host(ctx: &Ctx, model: &str, args: &Args) -> Result<()> {
+    use layermerge::exec::Format;
+    use layermerge::runtime::HostBackend;
+    use layermerge::serve::chaos::{
+        self, FaultBackend, FaultPlan, FaultProxy, FaultSpec, WireFaults,
+    };
+    use layermerge::serve::net::{NetClient, RetryClient, RetryPolicy};
+    use layermerge::serve::Engine;
+    use layermerge::util::rng::Rng;
+
+    let requests = args.usize_or("requests", 200).max(1);
+    let fault_rate = args.f64_or("fault-rate", 0.05).clamp(0.0, 0.9);
+    let wire_rate = args.f64_or("wire-rate", 0.10).clamp(0.0, 0.9);
+    let retries = args.usize_or("retries", 4).max(1);
+    let seed = chaos::env_seed(args.usize_or("seed", 0xC4A05) as u64);
+    let (spec, _orig, merged) = host_plans(model)?;
+
+    let mut rng = Rng::new(seed ^ 0x5e11);
+    let row: usize = spec.h * spec.w * spec.c;
+    let pool: Vec<Tensor> = (0..64)
+        .map(|_| {
+            Tensor::new(
+                vec![1, spec.h, spec.w, spec.c],
+                (0..row).map(|_| rng.normal()).collect(),
+            )
+        })
+        .collect();
+    let bind = |sess: Session| {
+        NetServer::bind(Arc::new(sess), "127.0.0.1:0", NetCfg::default())
+    };
+
+    // arm 1: fault-free baseline over a clean wire
+    let clean = match bind(ctx.engine().deploy_cfg(
+        Arc::clone(&merged),
+        Format::Fused,
+        serve_cfg(args)?,
+    )?) {
+        Ok(s) => s,
+        Err(e) => {
+            println!("chaos drill needs a loopback socket: {e:#}");
+            return Ok(());
+        }
+    };
+    let mut base_ok = 0usize;
+    {
+        let mut c = NetClient::connect(clean.addr())?;
+        for i in 0..requests {
+            if matches!(c.infer_deadline(&pool[i % pool.len()], None, None), Ok(Ok(_))) {
+                base_ok += 1;
+            }
+        }
+    }
+    clean.shutdown();
+
+    // arm 2: injected backend faults + a flaky wire, retrying client.
+    // The backend fires per dispatched op, so the per-request rate is
+    // compounded down to a per-op rate by the plan depth.
+    let ops = merged.depth().max(1);
+    let p_op = 1.0 - (1.0 - fault_rate).powf(1.0 / ops as f64);
+    let fplan = FaultPlan::random(
+        FaultSpec { fail: p_op * 0.8, panic: p_op * 0.2, delay: 0.0, delay_ms: 0 },
+        seed,
+    );
+    let engine = Engine::with_backend(Arc::new(FaultBackend::wrap(
+        Arc::new(HostBackend::new()),
+        Arc::clone(&fplan),
+    )));
+    let server = bind(engine.deploy_cfg(Arc::clone(&merged), Format::Fused, serve_cfg(args)?)?)
+        .context("chaos drill: rebind for the faulty arm")?;
+    let wire = WireFaults {
+        drop_conn: wire_rate * 0.4,
+        stall: wire_rate * 0.2,
+        stall_ms: 5,
+        truncate: wire_rate * 0.2,
+        corrupt: wire_rate * 0.2,
+    };
+    let proxy = FaultProxy::bind(server.addr(), wire, seed ^ 0x717e)?;
+    println!(
+        "chaos {model} [host backend]: {requests} requests/arm, backend fault rate \
+         {fault_rate:.2}/request ({p_op:.4}/op x {ops} ops), wire fault rate \
+         {wire_rate:.2}/frame, {retries}-attempt retry budget, seed {seed:#x}",
+    );
+    let mut rc = RetryClient::new(proxy.addr())
+        .with_retry(RetryPolicy { attempts: retries, base_ms: 2, cap_ms: 50 })
+        .with_seed(seed ^ 0x2e72);
+    let (mut ok, mut server_err, mut transport_err) = (0usize, 0usize, 0usize);
+    for i in 0..requests {
+        match rc.infer_deadline(&pool[i % pool.len()], None, None) {
+            Ok(Ok(_)) => ok += 1,
+            Ok(Err(_)) => server_err += 1,
+            Err(_) => transport_err += 1,
+        }
+    }
+    let rstats = rc.retry_stats();
+    let fc = fplan.counts();
+    let wc = proxy.counts();
+    let stats = server.session().stats();
+    proxy.shutdown();
+    server.shutdown();
+
+    println!(
+        "  baseline: {base_ok}/{requests} ok | chaos: {ok} ok, {server_err} typed \
+         server errors, {transport_err} transport failures"
+    );
+    println!(
+        "  injected: {} backend faults over {} op events ({} failed, {} panicked); \
+         wire: {} conns, {} forwarded, {} dropped, {} stalled, {} truncated, {} corrupted",
+        fc.injected(), fc.events, fc.failed, fc.panicked,
+        wc.conns, wc.forwarded, wc.dropped, wc.stalled, wc.truncated, wc.corrupted,
+    );
+    println!(
+        "  client: {} attempts, {} retries, {} hedges; server: {} dispatched, {} shed, \
+         {} expired, {} failed batches ({} panicked)",
+        rstats.attempts, rstats.retries, rstats.hedges,
+        stats.requests, stats.shed_requests, stats.expired_requests,
+        stats.failed_batches, stats.panicked_batches,
+    );
+    let resolved = ok + server_err + transport_err;
+    let retention = ok as f64 / (base_ok as f64).max(1.0);
+    println!(
+        "  invariants: {resolved}/{requests} requests resolved exactly once ({}), \
+         panicked <= failed batches ({}), goodput retention {retention:.2} ({})",
+        if resolved == requests { "OK" } else { "VIOLATED" },
+        if stats.panicked_batches <= stats.failed_batches { "OK" } else { "VIOLATED" },
+        if retention >= 0.9 { "OK: >= 0.90" } else { "below 0.90" },
+    );
+    anyhow::ensure!(resolved == requests, "a request vanished without a verdict");
     Ok(())
 }
 

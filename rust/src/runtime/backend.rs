@@ -213,6 +213,14 @@ impl OpHandle {
 /// A runtime backend the lowered execution plans dispatch through.  Both
 /// implementations are `Send + Sync`, so a `CompiledPlan` stays shareable
 /// across serving workers.
+///
+/// Implementations may also be *decorators* over another backend —
+/// [`crate::serve::chaos::FaultBackend`] wraps any inner backend and
+/// injects scheduled failures/delays/panics into [`Backend::run`] while
+/// delegating everything else.  Callers must therefore assume `run` can
+/// return an error **or panic** on any dispatch; the serving tier
+/// isolates both per batch (`dispatch_batch` catches the unwind and
+/// converts it into typed per-ticket errors).
 pub trait Backend: Send + Sync {
     fn name(&self) -> &'static str;
 

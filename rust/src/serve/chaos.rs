@@ -1,0 +1,710 @@
+//! `serve::chaos` — deterministic fault injection for the serving tier.
+//!
+//! The serving stack has a typed failure surface (every bad outcome is a
+//! [`super::ServeError`] or a typed wire code) and recovery machinery
+//! (panic isolation per batch, poison-recovering locks, the retrying
+//! [`super::net::RetryClient`], the fleet's rung supervisor).  This
+//! module *exercises* all of it on purpose, reproducibly:
+//!
+//! * [`FaultPlan`] — one deterministic decision stream, driven by the
+//!   repo's seeded [`Rng`].  Seed it explicitly or from the
+//!   `LM_CHAOS_SEED` environment variable so a failing soak run replays
+//!   bit-identically.  Two modes: random faults at configured rates, or
+//!   a fault pinned to exactly the Nth event (the generalization of the
+//!   ad-hoc "panic on batch 2" mocks in `tests/serve_net.rs`).
+//! * [`FaultBackend`] — a [`Backend`] decorator that fails, delays, or
+//!   panics `run` dispatches on the plan's schedule while delegating
+//!   everything else (uploads keep their packed layouts, transfer
+//!   counters stay honest).
+//! * [`wrap_fn`] — the same injection at the session-dispatch layer, for
+//!   `Session::from_fn` / `Fleet::deploy_fn` mocks.
+//! * [`FaultProxy`] — a loopback TCP proxy that drops, stalls,
+//!   truncates, or byte-corrupts request frames *before* forwarding, so
+//!   every injected wire fault is retry-safe by construction (a faulted
+//!   request never reached the server).
+//!
+//! Everything is deterministic given a seed **except** wall-clock
+//! interleaving — the decision streams (which events fault, which bytes
+//! corrupt) replay exactly; thread scheduling around them does not.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::plock;
+use crate::runtime::{Backend, OpDesc, OpHandle, Value};
+use crate::util::rng::{seed_from_env, Rng};
+use crate::util::tensor::Tensor;
+
+/// The environment variable chaos runs take their seed from.
+pub const CHAOS_SEED_ENV: &str = "LM_CHAOS_SEED";
+
+/// The seed for this chaos run: `LM_CHAOS_SEED` (decimal or `0x` hex)
+/// when set, else `default`.
+pub fn env_seed(default: u64) -> u64 {
+    seed_from_env(CHAOS_SEED_ENV, default)
+}
+
+// ---------------------------------------------------------------------------
+// FaultPlan
+// ---------------------------------------------------------------------------
+
+/// One injected fault.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    /// The dispatch returns an error (`BackendFailed` downstream).
+    Fail,
+    /// The dispatch panics (must be caught by the batch isolation).
+    Panic,
+    /// The dispatch is delayed by this much before running normally.
+    Delay(Duration),
+}
+
+/// Per-event fault rates for [`FaultPlan::random`].  Rates are
+/// probabilities in `[0, 1]` and are applied disjointly, in order
+/// (`fail`, then `panic`, then `delay`), from a single uniform draw per
+/// event — so `fail + panic + delay` must be ≤ 1.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultSpec {
+    /// Probability an event errors.
+    pub fail: f64,
+    /// Probability an event panics.
+    pub panic: f64,
+    /// Probability an event is delayed by `delay_ms`.
+    pub delay: f64,
+    /// Injected delay length, ms.
+    pub delay_ms: u64,
+}
+
+impl FaultSpec {
+    /// No faults at all (the control arm of an experiment).
+    pub const NONE: FaultSpec = FaultSpec { fail: 0.0, panic: 0.0, delay: 0.0, delay_ms: 0 };
+
+    /// Errors only, at rate `p`.
+    pub fn failing(p: f64) -> FaultSpec {
+        FaultSpec { fail: p, ..FaultSpec::NONE }
+    }
+}
+
+enum Mode {
+    /// Independent per-event draws at the spec's rates.
+    Random(FaultSpec),
+    /// Exactly one fault, on 0-based event `n`.
+    Nth { n: u64, fault: Fault },
+}
+
+/// Monotonic injection tallies (what the plan actually did — invariant
+/// suites compare these against the observed typed failures).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultCounts {
+    /// Events seen (faulted or not).
+    pub events: usize,
+    pub failed: usize,
+    pub panicked: usize,
+    pub delayed: usize,
+}
+
+impl FaultCounts {
+    /// Total events that had a fault injected.
+    pub fn injected(&self) -> usize {
+        self.failed + self.panicked + self.delayed
+    }
+}
+
+/// A deterministic schedule of faults: each call to [`FaultPlan::next`]
+/// is one event (one backend dispatch, one session batch, one proxied
+/// frame) and yields the fault to inject, if any.  Decisions come from
+/// one seeded [`Rng`] stream behind a mutex, so the *sequence* of
+/// decisions is reproducible even when the events race (which event gets
+/// which decision then depends on scheduling — the counts and the
+/// invariants do not).
+pub struct FaultPlan {
+    mode: Mode,
+    rng: Mutex<Rng>,
+    events: AtomicU64,
+    failed: AtomicUsize,
+    panicked: AtomicUsize,
+    delayed: AtomicUsize,
+}
+
+impl FaultPlan {
+    /// Random faults at the spec's rates, seeded explicitly.
+    pub fn random(spec: FaultSpec, seed: u64) -> Arc<FaultPlan> {
+        let total = spec.fail + spec.panic + spec.delay;
+        assert!(
+            (0.0..=1.0).contains(&total),
+            "fault rates must sum into [0, 1], got {total}"
+        );
+        Arc::new(FaultPlan {
+            mode: Mode::Random(spec),
+            rng: Mutex::new(Rng::new(seed)),
+            events: AtomicU64::new(0),
+            failed: AtomicUsize::new(0),
+            panicked: AtomicUsize::new(0),
+            delayed: AtomicUsize::new(0),
+        })
+    }
+
+    /// Random faults seeded from `LM_CHAOS_SEED` (else `default_seed`).
+    pub fn random_env(spec: FaultSpec, default_seed: u64) -> Arc<FaultPlan> {
+        FaultPlan::random(spec, env_seed(default_seed))
+    }
+
+    /// Exactly one `fault`, injected on the 0-based `n`th event — the
+    /// deterministic "error/panic/slow on the Nth dispatch" schedule the
+    /// serve tests use.
+    pub fn nth(n: u64, fault: Fault) -> Arc<FaultPlan> {
+        Arc::new(FaultPlan {
+            mode: Mode::Nth { n, fault },
+            rng: Mutex::new(Rng::new(0)),
+            events: AtomicU64::new(0),
+            failed: AtomicUsize::new(0),
+            panicked: AtomicUsize::new(0),
+            delayed: AtomicUsize::new(0),
+        })
+    }
+
+    /// A plan that never faults (control arm; keeps call sites uniform).
+    pub fn none() -> Arc<FaultPlan> {
+        FaultPlan::random(FaultSpec::NONE, 0)
+    }
+
+    /// Decide the fault for the next event, tallying the decision.
+    pub fn next(&self) -> Option<Fault> {
+        let event = self.events.fetch_add(1, Ordering::Relaxed);
+        let fault = match &self.mode {
+            Mode::Nth { n, fault } => (event == *n).then_some(*fault),
+            Mode::Random(spec) => {
+                let u = plock(&self.rng).uniform();
+                if u < spec.fail {
+                    Some(Fault::Fail)
+                } else if u < spec.fail + spec.panic {
+                    Some(Fault::Panic)
+                } else if u < spec.fail + spec.panic + spec.delay {
+                    Some(Fault::Delay(Duration::from_millis(spec.delay_ms)))
+                } else {
+                    None
+                }
+            }
+        };
+        match fault {
+            Some(Fault::Fail) => drop(self.failed.fetch_add(1, Ordering::Relaxed)),
+            Some(Fault::Panic) => drop(self.panicked.fetch_add(1, Ordering::Relaxed)),
+            Some(Fault::Delay(_)) => drop(self.delayed.fetch_add(1, Ordering::Relaxed)),
+            None => {}
+        }
+        fault
+    }
+
+    /// What this plan has injected so far.
+    pub fn counts(&self) -> FaultCounts {
+        FaultCounts {
+            events: self.events.load(Ordering::Relaxed) as usize,
+            failed: self.failed.load(Ordering::Relaxed),
+            panicked: self.panicked.load(Ordering::Relaxed),
+            delayed: self.delayed.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Apply one decided fault at a dispatch site: sleep for delays, panic
+/// for panics, error for failures.  Returns `Ok(())` when the dispatch
+/// should proceed (possibly after a delay).
+fn apply(fault: Option<Fault>, what: &str) -> Result<()> {
+    match fault {
+        None => Ok(()),
+        Some(Fault::Delay(d)) => {
+            std::thread::sleep(d);
+            Ok(())
+        }
+        Some(Fault::Fail) => Err(anyhow::anyhow!("chaos: injected {what} failure")),
+        Some(Fault::Panic) => panic!("chaos: injected {what} panic"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Backend-layer injection
+// ---------------------------------------------------------------------------
+
+/// A [`Backend`] decorator that injects the plan's faults into `run`
+/// dispatches and delegates everything else untouched — uploads keep the
+/// inner backend's packed weight layouts, `supports`/`lower_op` resolve
+/// against the real implementation, and the transfer counters are the
+/// inner backend's.  One fault event per `run` call (i.e. per lowered
+/// op, not per batch — a D-step plan draws D events per forward).
+pub struct FaultBackend {
+    inner: Arc<dyn Backend>,
+    plan: Arc<FaultPlan>,
+}
+
+impl FaultBackend {
+    pub fn wrap(inner: Arc<dyn Backend>, plan: Arc<FaultPlan>) -> FaultBackend {
+        FaultBackend { inner, plan }
+    }
+
+    /// The injection schedule (for asserting tallies after a run).
+    pub fn plan(&self) -> &Arc<FaultPlan> {
+        &self.plan
+    }
+}
+
+impl Backend for FaultBackend {
+    fn name(&self) -> &'static str {
+        "chaos"
+    }
+
+    fn upload(&self, t: &Tensor) -> Result<Value> {
+        self.inner.upload(t)
+    }
+
+    fn upload_weight(&self, desc: &OpDesc, w: &Tensor) -> Result<Value> {
+        self.inner.upload_weight(desc, w)
+    }
+
+    fn download(&self, v: &Value) -> Result<Tensor> {
+        self.inner.download(v)
+    }
+
+    fn supports(&self, desc: &OpDesc) -> bool {
+        self.inner.supports(desc)
+    }
+
+    fn lower_op(&self, desc: &OpDesc) -> Result<OpHandle> {
+        self.inner.lower_op(desc)
+    }
+
+    fn run(&self, op: &OpHandle, args: &[&Value]) -> Result<Value> {
+        apply(self.plan.next(), "backend")?;
+        self.inner.run(op, args)
+    }
+
+    fn uploads(&self) -> usize {
+        self.inner.uploads()
+    }
+
+    fn downloads(&self) -> usize {
+        self.inner.downloads()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Session-dispatch-layer injection
+// ---------------------------------------------------------------------------
+
+/// Wrap a session/fleet dispatch function with the plan's faults: one
+/// event per batch dispatch.  Hand the result to `Session::from_fn` or
+/// `Fleet::deploy_fn` — injected panics are caught by the batch
+/// isolation in `dispatch_batch` and poison only their own tickets.
+pub fn wrap_fn<F>(
+    plan: Arc<FaultPlan>,
+    f: F,
+) -> impl Fn(&Tensor, Option<&Tensor>) -> Result<Tensor> + Send + Sync + 'static
+where
+    F: Fn(&Tensor, Option<&Tensor>) -> Result<Tensor> + Send + Sync + 'static,
+{
+    move |x, t| {
+        apply(plan.next(), "dispatch")?;
+        f(x, t)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Wire-layer injection: the loopback fault proxy
+// ---------------------------------------------------------------------------
+
+/// Per-frame wire fault rates for [`FaultProxy`].  Applied disjointly in
+/// order (`drop_conn`, `stall`, `truncate`, `corrupt`) from one uniform
+/// draw per client→server frame; their sum must be ≤ 1.  All faults hit
+/// a request frame **before** it is forwarded, so a faulted request
+/// never reaches the server — every wire fault is retry-safe.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WireFaults {
+    /// Discard the frame and close both sides (connection reset).
+    pub drop_conn: f64,
+    /// Hold the frame for `stall_ms` before forwarding (slow network;
+    /// trips client read timeouts when longer than them).
+    pub stall: f64,
+    pub stall_ms: u64,
+    /// Forward the length prefix and half the body, then close — the
+    /// server's mid-frame stall budget cleans it up.
+    pub truncate: f64,
+    /// Flip a byte in the frame preamble before forwarding — the server
+    /// sees a non-protocol frame and closes the connection.
+    pub corrupt: f64,
+}
+
+impl WireFaults {
+    /// A clean pass-through proxy.
+    pub const NONE: WireFaults =
+        WireFaults { drop_conn: 0.0, stall: 0.0, stall_ms: 0, truncate: 0.0, corrupt: 0.0 };
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum WireFault {
+    Drop,
+    Stall(Duration),
+    Truncate,
+    Corrupt,
+}
+
+/// Monotonic proxy tallies.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WireCounts {
+    /// Client connections accepted.
+    pub conns: usize,
+    /// Request frames forwarded intact (stalled frames count here too).
+    pub forwarded: usize,
+    pub dropped: usize,
+    pub stalled: usize,
+    pub truncated: usize,
+    pub corrupted: usize,
+}
+
+struct ProxyShared {
+    upstream: SocketAddr,
+    faults: WireFaults,
+    rng: Mutex<Rng>,
+    shutdown: AtomicBool,
+    conns: AtomicUsize,
+    forwarded: AtomicUsize,
+    dropped: AtomicUsize,
+    stalled: AtomicUsize,
+    truncated: AtomicUsize,
+    corrupted: AtomicUsize,
+}
+
+/// A tiny loopback TCP proxy between a [`super::net::NetClient`] and a
+/// [`super::net::NetServer`] that injects frame-level faults on the
+/// request path.  Frame-aware in the client→server direction (it reads
+/// whole `u32 LE length + body` frames and decides per frame); the
+/// response path is a raw byte pump.  Deterministic per seed: each
+/// accepted connection forks its decision stream from the proxy's seeded
+/// [`Rng`] by connection index.
+pub struct FaultProxy {
+    shared: Arc<ProxyShared>,
+    addr: SocketAddr,
+    acceptor: Option<JoinHandle<()>>,
+}
+
+impl FaultProxy {
+    /// Bind an ephemeral loopback port in front of `upstream`.
+    pub fn bind(upstream: SocketAddr, faults: WireFaults, seed: u64) -> Result<FaultProxy> {
+        let total = faults.drop_conn + faults.stall + faults.truncate + faults.corrupt;
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&total),
+            "wire fault rates must sum into [0, 1], got {total}"
+        );
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shared = Arc::new(ProxyShared {
+            upstream,
+            faults,
+            rng: Mutex::new(Rng::new(seed)),
+            shutdown: AtomicBool::new(false),
+            conns: AtomicUsize::new(0),
+            forwarded: AtomicUsize::new(0),
+            dropped: AtomicUsize::new(0),
+            stalled: AtomicUsize::new(0),
+            truncated: AtomicUsize::new(0),
+            corrupted: AtomicUsize::new(0),
+        });
+        let sh = Arc::clone(&shared);
+        let acceptor = std::thread::Builder::new()
+            .name("lm-chaos-proxy".into())
+            .spawn(move || accept_loop(&sh, listener))?;
+        Ok(FaultProxy { shared, addr, acceptor: Some(acceptor) })
+    }
+
+    /// The proxy's listen address — point the client here.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn counts(&self) -> WireCounts {
+        WireCounts {
+            conns: self.shared.conns.load(Ordering::Relaxed),
+            forwarded: self.shared.forwarded.load(Ordering::Relaxed),
+            dropped: self.shared.dropped.load(Ordering::Relaxed),
+            stalled: self.shared.stalled.load(Ordering::Relaxed),
+            truncated: self.shared.truncated.load(Ordering::Relaxed),
+            corrupted: self.shared.corrupted.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Stop accepting and join the acceptor.  Live connection pumps
+    /// notice the flag at their next poll tick and exit.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for FaultProxy {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn accept_loop(shared: &Arc<ProxyShared>, listener: TcpListener) {
+    loop {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        match listener.accept() {
+            Ok((client, _)) => {
+                let idx = shared.conns.fetch_add(1, Ordering::Relaxed) as u64;
+                let rng = plock(&shared.rng).fork(idx);
+                let sh = Arc::clone(shared);
+                let _ = std::thread::Builder::new()
+                    .name("lm-chaos-pump".into())
+                    .spawn(move || pump_conn(&sh, client, rng));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(2)),
+        }
+    }
+}
+
+/// One proxied connection: dial upstream, pump responses raw on a side
+/// thread, pump request frames with fault decisions here.
+fn pump_conn(shared: &Arc<ProxyShared>, client: TcpStream, rng: Rng) {
+    let Ok(server) = TcpStream::connect(shared.upstream) else {
+        let _ = client.shutdown(Shutdown::Both);
+        return;
+    };
+    let _ = client.set_nodelay(true);
+    let _ = server.set_nodelay(true);
+    // short read timeouts make both pumps poll the shutdown flag
+    let _ = client.set_read_timeout(Some(Duration::from_millis(25)));
+    let _ = server.set_read_timeout(Some(Duration::from_millis(25)));
+    let (c2, s2) = match (client.try_clone(), server.try_clone()) {
+        (Ok(c), Ok(s)) => (c, s),
+        _ => {
+            let _ = client.shutdown(Shutdown::Both);
+            let _ = server.shutdown(Shutdown::Both);
+            return;
+        }
+    };
+    let sh = Arc::clone(shared);
+    let resp = std::thread::Builder::new()
+        .name("lm-chaos-resp".into())
+        .spawn(move || pump_raw(&sh, s2, c2));
+    pump_frames(shared, client, server, rng);
+    if let Ok(h) = resp {
+        let _ = h.join();
+    }
+}
+
+/// Read a full buffer, retrying timeout ticks until shutdown; `false` on
+/// EOF/error/shutdown.
+fn read_full(shared: &ProxyShared, s: &mut TcpStream, buf: &mut [u8]) -> bool {
+    let mut got = 0usize;
+    while got < buf.len() {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return false;
+        }
+        match s.read(&mut buf[got..]) {
+            Ok(0) => return false,
+            Ok(n) => got += n,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => return false,
+        }
+    }
+    true
+}
+
+/// The faulting request pump: one frame, one decision.
+fn pump_frames(shared: &ProxyShared, mut client: TcpStream, mut server: TcpStream, mut rng: Rng) {
+    loop {
+        let mut lb = [0u8; 4];
+        if !read_full(shared, &mut client, &mut lb) {
+            break;
+        }
+        let len = u32::from_le_bytes(lb) as usize;
+        if len > super::proto::MAX_FRAME {
+            // hostile length: forward the prefix verbatim and let the
+            // server apply its own defense, then stop proxying
+            let _ = server.write_all(&lb);
+            break;
+        }
+        let mut body = vec![0u8; len];
+        if !read_full(shared, &mut client, &mut body) {
+            break;
+        }
+        let fault = {
+            let f = &shared.faults;
+            let u = rng.uniform();
+            if u < f.drop_conn {
+                Some(WireFault::Drop)
+            } else if u < f.drop_conn + f.stall {
+                Some(WireFault::Stall(Duration::from_millis(f.stall_ms)))
+            } else if u < f.drop_conn + f.stall + f.truncate {
+                Some(WireFault::Truncate)
+            } else if u < f.drop_conn + f.stall + f.truncate + f.corrupt {
+                Some(WireFault::Corrupt)
+            } else {
+                None
+            }
+        };
+        match fault {
+            Some(WireFault::Drop) => {
+                // the frame is discarded before the server sees it:
+                // from the client this is a connection reset mid-request
+                shared.dropped.fetch_add(1, Ordering::Relaxed);
+                break;
+            }
+            Some(WireFault::Truncate) => {
+                shared.truncated.fetch_add(1, Ordering::Relaxed);
+                let half = len / 2;
+                let _ = server.write_all(&lb);
+                let _ = server.write_all(&body[..half]);
+                break;
+            }
+            Some(WireFault::Corrupt) => {
+                // flip a preamble byte: the server sees a non-protocol
+                // frame, refuses it, and closes — never executes it
+                shared.corrupted.fetch_add(1, Ordering::Relaxed);
+                if !body.is_empty() {
+                    let i = rng.below(body.len().min(4));
+                    body[i] ^= 0xff;
+                }
+                if server.write_all(&lb).is_err() || server.write_all(&body).is_err() {
+                    break;
+                }
+            }
+            Some(WireFault::Stall(d)) => {
+                shared.stalled.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(d);
+                shared.forwarded.fetch_add(1, Ordering::Relaxed);
+                if server.write_all(&lb).is_err() || server.write_all(&body).is_err() {
+                    break;
+                }
+            }
+            None => {
+                shared.forwarded.fetch_add(1, Ordering::Relaxed);
+                if server.write_all(&lb).is_err() || server.write_all(&body).is_err() {
+                    break;
+                }
+            }
+        }
+        let _ = server.flush();
+    }
+    let _ = client.shutdown(Shutdown::Both);
+    let _ = server.shutdown(Shutdown::Both);
+}
+
+/// Raw response pump (server → client), no faults.
+fn pump_raw(shared: &ProxyShared, mut from: TcpStream, mut to: TcpStream) {
+    let mut buf = [0u8; 8192];
+    loop {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        match from.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => {
+                if to.write_all(&buf[..n]).is_err() {
+                    break;
+                }
+                let _ = to.flush();
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => break,
+        }
+    }
+    let _ = from.shutdown(Shutdown::Both);
+    let _ = to.shutdown(Shutdown::Both);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_plan_is_deterministic_per_seed() {
+        let spec = FaultSpec { fail: 0.2, panic: 0.1, delay: 0.1, delay_ms: 1 };
+        let a = FaultPlan::random(spec, 42);
+        let b = FaultPlan::random(spec, 42);
+        let sa: Vec<_> = (0..200).map(|_| a.next()).collect();
+        let sb: Vec<_> = (0..200).map(|_| b.next()).collect();
+        assert_eq!(sa, sb);
+        assert!(a.counts().injected() > 0, "rates this high must inject");
+        assert_eq!(a.counts(), b.counts());
+        let c = FaultPlan::random(spec, 43);
+        let sc: Vec<_> = (0..200).map(|_| c.next()).collect();
+        assert_ne!(sa, sc, "different seeds must differ somewhere");
+    }
+
+    #[test]
+    fn nth_plan_fires_exactly_once() {
+        let p = FaultPlan::nth(3, Fault::Panic);
+        let seq: Vec<_> = (0..10).map(|_| p.next()).collect();
+        let hits: Vec<usize> =
+            seq.iter().enumerate().filter(|(_, f)| f.is_some()).map(|(i, _)| i).collect();
+        assert_eq!(hits, vec![3]);
+        assert_eq!(p.counts().panicked, 1);
+        assert_eq!(p.counts().events, 10);
+    }
+
+    #[test]
+    fn rates_partition_roughly() {
+        let spec = FaultSpec { fail: 0.05, panic: 0.0, delay: 0.0, delay_ms: 0 };
+        let p = FaultPlan::random(spec, 0x5eed);
+        let n = 4000;
+        let injected = (0..n).filter(|_| p.next().is_some()).count();
+        let rate = injected as f64 / n as f64;
+        assert!((0.03..0.07).contains(&rate), "5% target, got {rate}");
+        assert_eq!(p.counts().failed, injected);
+    }
+
+    #[test]
+    fn wrap_fn_injects_typed_failures() {
+        let p = FaultPlan::nth(1, Fault::Fail);
+        let f = wrap_fn(Arc::clone(&p), |x: &Tensor, _| Ok(x.clone()));
+        let x = Tensor::zeros(&[1, 2]);
+        assert!(f(&x, None).is_ok());
+        let err = f(&x, None).expect_err("second dispatch must fail");
+        assert!(err.to_string().contains("chaos"), "{err}");
+        assert!(f(&x, None).is_ok());
+    }
+
+    #[test]
+    fn fault_backend_delegates_transfers() {
+        use crate::runtime::HostBackend;
+        let inner: Arc<dyn Backend> = Arc::new(HostBackend::new());
+        let fb = FaultBackend::wrap(Arc::clone(&inner), FaultPlan::none());
+        let t = Tensor::new(vec![2, 3], (0..6).map(|i| i as f32).collect());
+        let v = fb.upload(&t).unwrap();
+        let back = fb.download(&v).unwrap();
+        assert_eq!(back.data, t.data);
+        assert_eq!(fb.uploads(), inner.uploads());
+        assert_eq!(fb.downloads(), inner.downloads());
+        assert_eq!(fb.name(), "chaos");
+    }
+}

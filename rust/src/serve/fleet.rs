@@ -33,6 +33,18 @@
 //!   submit time, so in-flight work completes on the *old* plan
 //!   bit-identically while new submits land on the new plan — zero
 //!   drops across the boundary, no drain pause.
+//!
+//! * **Rung supervision.**  Worker panics are already isolated per batch
+//!   (caught in [`super::dispatch_batch`], converted to typed per-ticket
+//!   errors — the worker thread itself survives and its locks recover
+//!   from poisoning via `super::plock`).  On top of that, a per-rung
+//!   `RungHealth` supervisor watches each rung's failed/panicked batch
+//!   outcomes: [`FleetCfg::quarantine_after`] consecutive failures
+//!   quarantine the rung (the router stops offering it and requests fall
+//!   back up the ladder), [`FleetCfg::quarantine_cooldown_ms`] later one
+//!   probation probe is admitted, and a clean probe re-admits the rung.
+//!   If *every* rung of a tenant is quarantined the full ladder is
+//!   offered anyway — a sick ladder must degrade, not brick.
 
 use std::collections::BTreeMap;
 use std::collections::VecDeque;
@@ -48,8 +60,9 @@ use crate::util::tensor::Tensor;
 
 use super::router::{Route, Router, RouterStats, RungCost, RungView};
 use super::{
-    dispatch_batch, fulfill, BatchCtl, BatchPolicy, Dispatch, Engine, LoadReport, Outcomes,
-    Request, ServeError, ServeResult, ServeStats, Ticket, TicketInner, OPEN_LOOP_WAIT_CAP,
+    dispatch_batch, fulfill, plock, pwait, pwait_timeout, BatchCtl, BatchPolicy, Dispatch,
+    Engine, LoadReport, Outcomes, Request, ServeError, ServeResult, ServeStats, Ticket,
+    TicketInner, OPEN_LOOP_WAIT_CAP,
 };
 
 // ---------------------------------------------------------------------------
@@ -70,6 +83,12 @@ pub struct FleetCfg {
     /// DRR credit quantum in rows: each top-up round grants every
     /// backlogged tenant `quantum_rows × weight` rows of credit.
     pub quantum_rows: usize,
+    /// Consecutive failed (or panicked) batches on one rung before the
+    /// supervisor quarantines it.  0 disables quarantine entirely.
+    pub quarantine_after: usize,
+    /// How long a quarantined rung is bypassed before one probation
+    /// probe is admitted, ms.
+    pub quarantine_cooldown_ms: u64,
 }
 
 impl Default for FleetCfg {
@@ -78,6 +97,8 @@ impl Default for FleetCfg {
             workers: par::max_threads().min(4),
             queue_cap: 256,
             quantum_rows: 4,
+            quarantine_after: 3,
+            quarantine_cooldown_ms: 500,
         }
     }
 }
@@ -119,6 +140,85 @@ struct FleetReq {
     batch: usize,
 }
 
+/// Supervisor state of one rung.  Healthy → (`quarantine_after`
+/// consecutive failed batches) → Quarantined(until) → (cooldown expires,
+/// next routing decision admits one probe) → Probation → Healthy on a
+/// clean batch, straight back to Quarantined on a dirty one.
+enum HealthState {
+    Healthy { fails: usize },
+    Quarantined { until: Instant },
+    Probation,
+}
+
+/// Per-rung failure supervisor.  Written by the dispatch path (batch
+/// outcomes), read by the routing path (offer/bypass), hence its own
+/// lock — never held together with the scheduler lock's critical work.
+struct RungHealth {
+    state: Mutex<HealthState>,
+    /// Consecutive failures before quarantine; 0 disables.
+    after: usize,
+    cooldown: Duration,
+}
+
+impl RungHealth {
+    fn new(after: usize, cooldown: Duration) -> RungHealth {
+        RungHealth {
+            state: Mutex::new(HealthState::Healthy { fails: 0 }),
+            after,
+            cooldown,
+        }
+    }
+
+    /// Whether the router should offer this rung right now.  An expired
+    /// quarantine flips to probation here — the caller's request becomes
+    /// the probe.
+    fn offered(&self, now: Instant) -> bool {
+        let mut g = plock(&self.state);
+        match &*g {
+            HealthState::Healthy { .. } | HealthState::Probation => true,
+            HealthState::Quarantined { until } => {
+                if now >= *until {
+                    *g = HealthState::Probation;
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// Fold one dispatched batch's outcome into the state machine.
+    fn note_batch(&self, failed: bool, now: Instant) {
+        if self.after == 0 {
+            return; // supervision disabled
+        }
+        let mut g = plock(&self.state);
+        *g = match (&*g, failed) {
+            (_, false) => HealthState::Healthy { fails: 0 },
+            // a dirty probe (or a batch raced into a quarantined rung)
+            // re-arms the full cooldown
+            (HealthState::Probation | HealthState::Quarantined { .. }, true) => {
+                HealthState::Quarantined { until: now + self.cooldown }
+            }
+            (HealthState::Healthy { fails }, true) => {
+                if fails + 1 >= self.after {
+                    HealthState::Quarantined { until: now + self.cooldown }
+                } else {
+                    HealthState::Healthy { fails: fails + 1 }
+                }
+            }
+        };
+    }
+
+    fn name(&self) -> &'static str {
+        match &*plock(&self.state) {
+            HealthState::Healthy { .. } => "healthy",
+            HealthState::Quarantined { .. } => "quarantined",
+            HealthState::Probation => "probation",
+        }
+    }
+}
+
 /// One deployed budget point of a tenant's ladder.
 struct Rung {
     dispatch: Dispatch,
@@ -126,6 +226,7 @@ struct Rung {
     gen: u64,
     batch: usize,
     cost: Arc<RungCost>,
+    health: Arc<RungHealth>,
     queue: VecDeque<FleetReq>,
     rows_queued: usize,
 }
@@ -164,6 +265,8 @@ struct FleetShared {
     workers: usize,
     queue_cap: usize,
     quantum_rows: usize,
+    quarantine_after: usize,
+    quarantine_cooldown: Duration,
     router: Router,
     cache: WeightCache,
 }
@@ -217,6 +320,8 @@ impl Fleet {
             workers: cfg.workers.max(1),
             queue_cap: cfg.queue_cap.max(1),
             quantum_rows: cfg.quantum_rows.max(1),
+            quarantine_after: cfg.quarantine_after,
+            quarantine_cooldown: Duration::from_millis(cfg.quarantine_cooldown_ms.max(1)),
             router: Router::new(),
             cache: WeightCache::new(),
         });
@@ -228,7 +333,7 @@ impl Fleet {
     /// Register a tenant (no rungs yet — deploy its ladder next).  Errors
     /// on a duplicate name.
     pub fn add_tenant(&self, cfg: TenantCfg) -> Result<()> {
-        let mut g = self.shared.state.lock().unwrap();
+        let mut g = plock(&self.shared.state);
         anyhow::ensure!(
             !g.tenants.contains_key(&cfg.name),
             "fleet: tenant {:?} already exists",
@@ -325,7 +430,7 @@ impl Fleet {
         needs_t: bool,
         seed_svc_us: u64,
     ) -> Result<usize> {
-        let mut g = self.shared.state.lock().unwrap();
+        let mut g = plock(&self.shared.state);
         let t = g
             .tenants
             .get_mut(tenant)
@@ -349,6 +454,10 @@ impl Fleet {
             gen: 0,
             batch,
             cost: Arc::new(RungCost::new(seed_svc_us)),
+            health: Arc::new(RungHealth::new(
+                self.shared.quarantine_after,
+                self.shared.quarantine_cooldown,
+            )),
             queue: VecDeque::new(),
             rows_queued: 0,
         });
@@ -400,7 +509,7 @@ impl Fleet {
         F: Fn(&Tensor, Option<&Tensor>) -> Result<Tensor> + Send + Sync + 'static,
     {
         let (in_tail, needs_t) = {
-            let g = self.shared.state.lock().unwrap();
+            let g = plock(&self.shared.state);
             let t = g
                 .tenants
                 .get(tenant)
@@ -419,7 +528,7 @@ impl Fleet {
         in_tail: Vec<usize>,
         needs_t: bool,
     ) -> Result<()> {
-        let mut g = self.shared.state.lock().unwrap();
+        let mut g = plock(&self.shared.state);
         anyhow::ensure!(!g.closed, "fleet: cannot swap after close");
         let t = g
             .tenants
@@ -489,7 +598,7 @@ impl Fleet {
             ));
         }
         let rows = x.dims[0];
-        let mut g = self.shared.state.lock().unwrap();
+        let mut g = plock(&self.shared.state);
         if g.closed {
             return Err(ServeError::ShuttingDown);
         }
@@ -507,7 +616,7 @@ impl Fleet {
         if let Some(d) = deadline {
             if now >= d {
                 drop(g);
-                stats.lock().unwrap().expired_requests += 1;
+                plock(&stats).expired_requests += 1;
                 return Err(ServeError::DeadlineExceeded);
             }
         }
@@ -515,7 +624,7 @@ impl Fleet {
         if queued >= self.shared.queue_cap {
             let queued_rows: usize = ten.rungs.iter().map(|r| r.rows_queued).sum();
             drop(g);
-            stats.lock().unwrap().shed_requests += 1;
+            plock(&stats).shed_requests += 1;
             return Err(ServeError::Shed {
                 queued_rows,
                 predicted_us: u64::MAX,
@@ -548,6 +657,7 @@ impl Fleet {
                             queued_rows: r.rows_queued,
                             batch: r.batch,
                             svc_us: r.cost.svc_us(),
+                            healthy: r.health.offered(now),
                         });
                     }
                 }
@@ -566,7 +676,7 @@ impl Fleet {
                         let queued_rows: usize =
                             ten.rungs.iter().map(|r| r.rows_queued).sum();
                         drop(g);
-                        stats.lock().unwrap().shed_requests += 1;
+                        plock(&stats).shed_requests += 1;
                         return Err(ServeError::Shed {
                             queued_rows,
                             predicted_us,
@@ -594,7 +704,7 @@ impl Fleet {
         let depth = ten.queued_requests();
         drop(g);
         {
-            let mut st = stats.lock().unwrap();
+            let mut st = plock(&stats);
             st.max_queue = st.max_queue.max(depth);
         }
         self.shared.work.notify_one();
@@ -605,29 +715,29 @@ impl Fleet {
     /// tenant); `cur_window_us` reflects the tenant's live batch window.
     pub fn tenant_stats(&self, tenant: &str) -> Option<ServeStats> {
         let (stats, ctl) = {
-            let g = self.shared.state.lock().unwrap();
+            let g = plock(&self.shared.state);
             let t = g.tenants.get(tenant)?;
             (Arc::clone(&t.stats), Arc::clone(&t.ctl))
         };
-        let mut s = *stats.lock().unwrap();
+        let mut s = *plock(&stats);
         s.cur_window_us = ctl.window_us() as usize;
         Some(s)
     }
 
     /// Tenant names in DRR order.
     pub fn tenants(&self) -> Vec<String> {
-        self.shared.state.lock().unwrap().order.clone()
+        plock(&self.shared.state).order.clone()
     }
 
     /// Requests currently queued for `tenant` (0 for unknown tenants).
     pub fn queue_depth(&self, tenant: &str) -> usize {
-        let g = self.shared.state.lock().unwrap();
+        let g = plock(&self.shared.state);
         g.tenants.get(tenant).map_or(0, Tenant::queued_requests)
     }
 
     /// Ladder size of `tenant` (0 for unknown tenants).
     pub fn rungs(&self, tenant: &str) -> usize {
-        let g = self.shared.state.lock().unwrap();
+        let g = plock(&self.shared.state);
         g.tenants.get(tenant).map_or(0, |t| t.rungs.len())
     }
 
@@ -639,7 +749,7 @@ impl Fleet {
     /// sum of every tenant's counters.
     pub fn stats(&self) -> FleetStats {
         let (tenants, rungs, stats_handles): (usize, usize, Vec<Arc<Mutex<ServeStats>>>) = {
-            let g = self.shared.state.lock().unwrap();
+            let g = plock(&self.shared.state);
             (
                 g.tenants.len(),
                 g.tenants.values().map(|t| t.rungs.len()).sum(),
@@ -648,7 +758,7 @@ impl Fleet {
         };
         let total = stats_handles
             .iter()
-            .map(|s| *s.lock().unwrap())
+            .map(|s| *plock(s))
             .fold(ServeStats::default(), |a, b| a + b);
         FleetStats {
             unique_weight_bytes: self.shared.cache.unique_bytes(),
@@ -660,9 +770,18 @@ impl Fleet {
         }
     }
 
+    /// Per-rung supervisor states for `tenant`, in ladder order:
+    /// `"healthy"`, `"quarantined"`, or `"probation"` (`None` for an
+    /// unknown tenant).  Telemetry for tests and the stats endpoint.
+    pub fn rung_states(&self, tenant: &str) -> Option<Vec<&'static str>> {
+        let g = plock(&self.shared.state);
+        let t = g.tenants.get(tenant)?;
+        Some(t.rungs.iter().map(|r| r.health.name()).collect())
+    }
+
     /// Stop accepting new requests; already-admitted work is still served.
     pub fn close(&self) {
-        self.shared.state.lock().unwrap().closed = true;
+        plock(&self.shared.state).closed = true;
         self.shared.work.notify_all();
     }
 
@@ -728,6 +847,7 @@ enum Pick {
         reqs: Vec<Request>,
         expired_window: bool,
         cost: Arc<RungCost>,
+        health: Arc<RungHealth>,
         ctl: Arc<BatchCtl>,
         stats: Arc<Mutex<ServeStats>>,
     },
@@ -873,6 +993,7 @@ fn scan(shared: &FleetShared, g: &mut FleetState) -> Pick {
                 }
             }
             let cost = Arc::clone(&r.cost);
+            let health = Arc::clone(&r.health);
             t.deficit -= took;
             if t.queued_requests() == 0 {
                 t.deficit = 0; // drained: no banking credit while idle
@@ -883,6 +1004,7 @@ fn scan(shared: &FleetShared, g: &mut FleetState) -> Pick {
                 reqs,
                 expired_window,
                 cost,
+                health,
                 ctl: Arc::clone(&t.ctl),
                 stats: Arc::clone(&t.stats),
             };
@@ -912,7 +1034,7 @@ fn scan(shared: &FleetShared, g: &mut FleetState) -> Pick {
 fn worker_loop(shared: &FleetShared) {
     loop {
         let pick = {
-            let mut g = shared.state.lock().unwrap();
+            let mut g = plock(&shared.state);
             loop {
                 match scan(shared, &mut g) {
                     Pick::Idle { wake } => {
@@ -922,13 +1044,13 @@ fn worker_loop(shared: &FleetShared) {
                                 if now >= w {
                                     continue; // window elapsed during scan
                                 }
-                                shared.work.wait_timeout(g, w - now).unwrap().0
+                                pwait_timeout(&shared.work, g, w - now)
                             }
                             None => {
                                 if g.closed {
                                     return;
                                 }
-                                shared.work.wait(g).unwrap()
+                                pwait(&shared.work, g)
                             }
                         };
                     }
@@ -939,7 +1061,7 @@ fn worker_loop(shared: &FleetShared) {
         };
         match pick {
             Pick::Dead { reqs, stats } => {
-                stats.lock().unwrap().expired_requests += reqs.len();
+                plock(&stats).expired_requests += reqs.len();
                 for r in reqs {
                     fulfill(&r.ticket, Err(ServeError::DeadlineExceeded));
                 }
@@ -951,12 +1073,13 @@ fn worker_loop(shared: &FleetShared) {
                 reqs,
                 expired_window,
                 cost,
+                health,
                 ctl,
                 stats,
             } => {
                 let done = dispatch_batch(&dispatch, batch, reqs);
                 {
-                    let mut st = stats.lock().unwrap();
+                    let mut st = plock(&stats);
                     st.batches += 1;
                     st.padded_rows += done.padded;
                     st.requests += done.requests;
@@ -965,7 +1088,11 @@ fn worker_loop(shared: &FleetShared) {
                     st.queue_wait_us += done.queue_wait_us;
                     st.service_us += done.svc_us as usize;
                     st.failed_batches += usize::from(done.failed);
+                    st.panicked_batches += usize::from(done.panicked);
                 }
+                // the supervisor sees every batch outcome: consecutive
+                // failures quarantine the rung, a clean one re-admits it
+                health.note_batch(done.failed, Instant::now());
                 ctl.note_batch(batch, done.rows, done.svc_us);
                 cost.observe(done.svc_us);
                 shared.work.notify_one();
@@ -1080,6 +1207,43 @@ mod tests {
     fn fleet_cfg_default_is_sane() {
         let c = FleetCfg::default();
         assert!(c.workers >= 1 && c.queue_cap >= 1 && c.quantum_rows >= 1);
+        assert!(c.quarantine_after >= 1 && c.quarantine_cooldown_ms >= 1);
+    }
+
+    #[test]
+    fn rung_health_state_machine() {
+        let h = RungHealth::new(2, Duration::from_millis(10));
+        let t0 = Instant::now();
+        assert!(h.offered(t0));
+        h.note_batch(true, t0);
+        assert_eq!(h.name(), "healthy", "one failure of two is tolerated");
+        h.note_batch(true, t0);
+        assert_eq!(h.name(), "quarantined");
+        assert!(!h.offered(t0), "quarantined rungs are bypassed");
+        // a success anywhere resets the streak
+        let h2 = RungHealth::new(2, Duration::from_millis(10));
+        h2.note_batch(true, t0);
+        h2.note_batch(false, t0);
+        h2.note_batch(true, t0);
+        assert_eq!(h2.name(), "healthy");
+        // cooldown expiry: the next routing decision admits the probe
+        let later = t0 + Duration::from_millis(11);
+        assert!(h.offered(later));
+        assert_eq!(h.name(), "probation");
+        // a dirty probe goes straight back to quarantine...
+        h.note_batch(true, later);
+        assert_eq!(h.name(), "quarantined");
+        // ...and a clean one re-admits
+        assert!(h.offered(later + Duration::from_millis(11)));
+        h.note_batch(false, later);
+        assert_eq!(h.name(), "healthy");
+        // quarantine_after = 0 disables supervision entirely
+        let off = RungHealth::new(0, Duration::from_millis(10));
+        for _ in 0..16 {
+            off.note_batch(true, t0);
+        }
+        assert!(off.offered(t0));
+        assert_eq!(off.name(), "healthy");
     }
 
     #[test]

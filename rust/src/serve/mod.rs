@@ -61,6 +61,16 @@
 //! [`Ticket::wait_timeout`] bounds every wait so a wedged batch can never
 //! block a caller forever.  [`net`] puts a TCP socket in front of all of
 //! this ([`proto`] defines the wire frames).
+//!
+//! Every lock in the serving tier goes through the poison-recovering
+//! [`plock`]/[`pwait`]/[`pwait_timeout`] helpers: a thread that panics
+//! while holding a serve mutex poisons it, but the guarded state is
+//! still coherent (critical sections here are short counter/queue
+//! updates with no panicking calls inside), so other handler threads
+//! recover the guard and keep serving instead of cascading
+//! poisoned-lock panics across the whole session.  [`chaos`] provides
+//! the deterministic fault-injection layer (backend, dispatch, and wire
+//! faults) that exercises all of this on purpose.
 
 use std::collections::VecDeque;
 use std::fmt;
@@ -78,10 +88,54 @@ use crate::runtime::{Backend, HostBackend, LatencyStats, PjrtBackend, Runtime};
 use crate::util::par;
 use crate::util::tensor::Tensor;
 
+pub mod chaos;
 pub mod fleet;
 pub mod net;
 pub mod proto;
 pub mod router;
+
+// ---------------------------------------------------------------------------
+// Poison-recovering lock helpers
+// ---------------------------------------------------------------------------
+
+/// Lock a serve-tier mutex, recovering the guard if a previous holder
+/// panicked.  Serve critical sections are short counter/queue updates
+/// that cannot leave the state half-written across a panic point, so
+/// recovery is always sound here — and without it a single injected
+/// panic in one handler thread would cascade `PoisonError` panics into
+/// every other thread sharing the session.
+pub(crate) fn plock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Condvar wait with the same poison recovery as [`plock`].
+pub(crate) fn pwait<'a, T>(
+    cv: &Condvar,
+    g: std::sync::MutexGuard<'a, T>,
+) -> std::sync::MutexGuard<'a, T> {
+    cv.wait(g).unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Timed condvar wait with the same poison recovery as [`plock`]
+/// (callers re-check their predicate and the clock, so the timed-out
+/// flag is not surfaced).
+pub(crate) fn pwait_timeout<'a, T>(
+    cv: &Condvar,
+    g: std::sync::MutexGuard<'a, T>,
+    d: Duration,
+) -> std::sync::MutexGuard<'a, T> {
+    match cv.wait_timeout(g, d) {
+        Ok((g, _)) => g,
+        Err(p) => p.into_inner().0,
+    }
+}
+
+/// `Mutex::into_inner` with poison recovery — drivers collecting results
+/// from scoped worker threads use it so one panicked client thread
+/// cannot void the whole run's tally.
+pub(crate) fn punwrap<T>(m: Mutex<T>) -> T {
+    m.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
 
 // ---------------------------------------------------------------------------
 // Typed serving errors
@@ -394,6 +448,10 @@ pub struct ServeStats {
     /// Dispatched batches that errored or panicked; each poisoned only
     /// its own tickets ([`ServeError::BackendFailed`]).
     pub failed_batches: usize,
+    /// The subset of `failed_batches` that failed by *panicking* (caught
+    /// and converted per-ticket).  The fleet supervisor watches this and
+    /// `failed_batches` per rung to decide quarantine.
+    pub panicked_batches: usize,
 }
 
 impl ServeStats {
@@ -438,6 +496,7 @@ impl std::ops::Sub for ServeStats {
             shed_requests: self.shed_requests - before.shed_requests,
             expired_requests: self.expired_requests - before.expired_requests,
             failed_batches: self.failed_batches - before.failed_batches,
+            panicked_batches: self.panicked_batches - before.panicked_batches,
         }
     }
 }
@@ -462,6 +521,7 @@ impl std::ops::Add for ServeStats {
             shed_requests: self.shed_requests + o.shed_requests,
             expired_requests: self.expired_requests + o.expired_requests,
             failed_batches: self.failed_batches + o.failed_batches,
+            panicked_batches: self.panicked_batches + o.panicked_batches,
         }
     }
 }
@@ -514,12 +574,12 @@ impl Ticket {
     /// result was posted — the completion timestamp the open-loop load
     /// driver needs.
     pub(crate) fn wait_done(self) -> (ServeResult<Tensor>, Instant) {
-        let mut g = self.inner.slot.lock().unwrap();
+        let mut g = plock(&self.inner.slot);
         loop {
             if let Some(done) = g.take() {
                 return done;
             }
-            g = self.inner.cv.wait(g).unwrap();
+            g = pwait(&self.inner.cv, g);
         }
     }
 
@@ -529,7 +589,7 @@ impl Ticket {
         d: Duration,
     ) -> std::result::Result<(ServeResult<Tensor>, Instant), Ticket> {
         let deadline = Instant::now() + d;
-        let mut g = self.inner.slot.lock().unwrap();
+        let mut g = plock(&self.inner.slot);
         loop {
             if let Some(done) = g.take() {
                 return Ok(done);
@@ -539,13 +599,13 @@ impl Ticket {
                 drop(g);
                 return Err(self);
             }
-            g = self.inner.cv.wait_timeout(g, deadline - now).unwrap().0;
+            g = pwait_timeout(&self.inner.cv, g, deadline - now);
         }
     }
 
     /// Non-blocking poll; returns the result if the batch has completed.
     pub fn try_wait(self) -> std::result::Result<Result<Tensor>, Ticket> {
-        let done = self.inner.slot.lock().unwrap().take();
+        let done = plock(&self.inner.slot).take();
         match done {
             Some((r, _)) => Ok(r.map_err(anyhow::Error::from)),
             None => Err(self),
@@ -554,7 +614,13 @@ impl Ticket {
 }
 
 fn fulfill(t: &TicketInner, r: ServeResult<Tensor>) {
-    *t.slot.lock().unwrap() = Some((r, Instant::now()));
+    let mut slot = plock(&t.slot);
+    // exactly-once resolution: the dead/taken split in the worker loop is
+    // disjoint, so a slot is never written twice — the chaos invariant
+    // suite leans on this
+    debug_assert!(slot.is_none(), "ticket fulfilled twice");
+    *slot = Some((r, Instant::now()));
+    drop(slot);
     t.cv.notify_all();
 }
 
@@ -647,7 +713,7 @@ impl BatchCtl {
     pub(crate) fn note_batch(&self, b: usize, rows: usize, svc_us: u64) {
         // one controller step per batch; the lock serializes racing
         // workers so no batch's signal is lost to a concurrent RMW
-        let mut ctl = self.ctl.lock().unwrap();
+        let mut ctl = plock(&self.ctl);
         let occ_ppm = (rows * 1_000_000 / b.max(1)) as u64;
         let occ = if ctl.ewma_occ_ppm == 0 {
             occ_ppm
@@ -828,7 +894,7 @@ impl Session {
     /// stats lock, so no field can reflect a batch completion another
     /// field missed.
     pub fn stats(&self) -> ServeStats {
-        let mut s = *self.shared.stats.lock().unwrap();
+        let mut s = *plock(&self.shared.stats);
         s.cur_window_us = self.shared.ctl.window_us() as usize;
         s
     }
@@ -847,7 +913,7 @@ impl Session {
 
     /// Requests currently queued (not yet taken by a worker).
     pub fn queue_depth(&self) -> usize {
-        self.shared.state.lock().unwrap().items.len()
+        plock(&self.shared.state).items.len()
     }
 
     /// Synchronous one-shot inference: full `[B, ..]` input, no queue.
@@ -857,7 +923,7 @@ impl Session {
     pub fn infer(&self, x: &Tensor, t: Option<&Tensor>) -> Result<Tensor> {
         let started = Instant::now();
         let out = self.backend.run(x, t);
-        let mut st = self.shared.stats.lock().unwrap();
+        let mut st = plock(&self.shared.stats);
         st.requests += 1;
         st.batches += 1;
         st.rows += x.dims.first().copied().unwrap_or(0);
@@ -937,13 +1003,13 @@ impl Session {
         let now = Instant::now();
         if let Some(d) = deadline {
             if now >= d {
-                self.shared.stats.lock().unwrap().expired_requests += 1;
+                plock(&self.shared.stats).expired_requests += 1;
                 return Err(ServeError::DeadlineExceeded);
             }
         }
         let ticket = Arc::new(TicketInner::default());
         {
-            let mut g = self.shared.state.lock().unwrap();
+            let mut g = plock(&self.shared.state);
             loop {
                 if g.closed {
                     return Err(ServeError::ShuttingDown);
@@ -954,14 +1020,14 @@ impl Session {
                 if deadline.is_some() || self.shared.slo_us > 0 {
                     // a deadlined request must not block into its own
                     // deadline: shed at the door instead
-                    self.shared.stats.lock().unwrap().shed_requests += 1;
+                    plock(&self.shared.stats).shed_requests += 1;
                     return Err(ServeError::Shed {
                         queued_rows: g.rows_queued,
                         predicted_us: u64::MAX,
                         budget_us: self.budget_us(deadline, now),
                     });
                 }
-                g = self.shared.not_full.wait(g).unwrap();
+                g = pwait(&self.shared.not_full, g);
             }
             // admission control: shed when the predicted wait exceeds the
             // deadline/SLO budget (needs an EWMA signal — the first
@@ -973,7 +1039,7 @@ impl Session {
                     ((g.rows_queued + rows + self.batch - 1) / self.batch) as u64;
                 let predicted_us = batches_ahead * svc / self.shared.workers as u64;
                 if predicted_us > budget_us {
-                    self.shared.stats.lock().unwrap().shed_requests += 1;
+                    plock(&self.shared.stats).shed_requests += 1;
                     return Err(ServeError::Shed {
                         queued_rows: g.rows_queued,
                         predicted_us,
@@ -990,7 +1056,7 @@ impl Session {
             });
             g.rows_queued += rows;
             let depth = g.items.len();
-            let mut st = self.shared.stats.lock().unwrap();
+            let mut st = plock(&self.shared.stats);
             st.max_queue = st.max_queue.max(depth);
         }
         self.shared.not_empty.notify_one();
@@ -1010,7 +1076,7 @@ impl Session {
     /// Stop accepting new requests.  Already-queued requests are still
     /// served; workers exit once the queue drains.
     pub fn close(&self) {
-        self.shared.state.lock().unwrap().closed = true;
+        plock(&self.shared.state).closed = true;
         self.shared.not_empty.notify_all();
         self.shared.not_full.notify_all();
     }
@@ -1057,13 +1123,13 @@ fn worker_loop(shared: &Shared, backend: &Dispatch, b: usize) {
     loop {
         let mut expired = false;
         let (taken, dead) = {
-            let mut g = shared.state.lock().unwrap();
+            let mut g = plock(&shared.state);
             loop {
                 if g.items.is_empty() {
                     if g.closed {
                         return;
                     }
-                    g = shared.not_empty.wait(g).unwrap();
+                    g = pwait(&shared.not_empty, g);
                     continue;
                 }
                 let now = Instant::now();
@@ -1089,7 +1155,7 @@ fn worker_loop(shared: &Shared, backend: &Dispatch, b: usize) {
                     expired = true;
                     break;
                 }
-                g = shared.not_empty.wait_timeout(g, wake - now).unwrap().0;
+                g = pwait_timeout(&shared.not_empty, g, wake - now);
             }
             // coalesce whole requests (submit bounds each to <= b rows),
             // failing past-deadline requests fast instead of batching them
@@ -1118,7 +1184,7 @@ fn worker_loop(shared: &Shared, backend: &Dispatch, b: usize) {
         };
         shared.not_full.notify_all();
         if !dead.is_empty() {
-            shared.stats.lock().unwrap().expired_requests += dead.len();
+            plock(&shared.stats).expired_requests += dead.len();
             for r in dead {
                 fulfill(&r.ticket, Err(ServeError::DeadlineExceeded));
             }
@@ -1145,6 +1211,8 @@ pub(crate) struct BatchDone {
     pub(crate) svc_us: u64,
     /// Whether the dispatch failed (every ticket got `BackendFailed`).
     pub(crate) failed: bool,
+    /// Whether the failure was a caught panic (subset of `failed`).
+    pub(crate) panicked: bool,
 }
 
 /// Session wrapper over [`dispatch_batch`]: dispatch, then fold the
@@ -1153,7 +1221,7 @@ pub(crate) struct BatchDone {
 fn run_batch(shared: &Shared, backend: &Dispatch, b: usize, reqs: Vec<Request>, expired: bool) {
     let done = dispatch_batch(backend, b, reqs);
     {
-        let mut st = shared.stats.lock().unwrap();
+        let mut st = plock(&shared.stats);
         st.batches += 1;
         st.padded_rows += done.padded;
         st.requests += done.requests;
@@ -1162,6 +1230,7 @@ fn run_batch(shared: &Shared, backend: &Dispatch, b: usize, reqs: Vec<Request>, 
         st.queue_wait_us += done.queue_wait_us;
         st.service_us += done.svc_us as usize;
         st.failed_batches += usize::from(done.failed);
+        st.panicked_batches += usize::from(done.panicked);
     }
     shared.ctl.note_batch(b, done.rows, done.svc_us);
 }
@@ -1214,8 +1283,10 @@ pub(crate) fn dispatch_batch(backend: &Dispatch, b: usize, reqs: Vec<Request>) -
             backend.run(&xb, tb.as_ref())
         }
     };
+    let mut panicked = false;
     let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(dispatch))
         .unwrap_or_else(|p| {
+            panicked = true;
             let msg = p
                 .downcast_ref::<&str>()
                 .map(|s| s.to_string())
@@ -1231,6 +1302,7 @@ pub(crate) fn dispatch_batch(backend: &Dispatch, b: usize, reqs: Vec<Request>) -
         queue_wait_us: queue_wait_us as usize,
         svc_us: svc_us as u64,
         failed: false,
+        panicked,
     };
     match out {
         Ok(y) if y.dims.first() == Some(&b) && y.data.len() % b == 0 => {
@@ -1507,19 +1579,18 @@ where
                         .submit_deadline(x, t, None)
                         .and_then(Ticket::wait_coded);
                     match res {
-                        Ok(_) => lat
-                            .lock()
-                            .unwrap()
-                            .push(tq.elapsed().as_secs_f64() * 1e3),
-                        Err(e) => out.lock().unwrap().note(&e),
+                        Ok(_) => {
+                            plock(lat).push(tq.elapsed().as_secs_f64() * 1e3)
+                        }
+                        Err(e) => plock(out).note(&e),
                     }
                 }
             });
         }
     });
     let wall_s = t0.elapsed().as_secs_f64();
-    let lat = lat.into_inner().unwrap();
-    let out = out.into_inner().unwrap();
+    let lat = punwrap(lat);
+    let out = punwrap(out);
     let rows = rows.load(Ordering::Relaxed);
     LoadReport::from_outcomes(lat, out, rows, wall_s, before, session.stats(), clients, 0.0)
 }

@@ -48,7 +48,11 @@ use super::fleet::Fleet;
 use super::proto::{
     self, DecodeError, ErrCode, Request, Response, MAX_FRAME,
 };
-use super::{LoadReport, Outcomes, ServeError, ServeResult, ServeStats, Session, Ticket};
+use super::{
+    plock, punwrap, pwait, LoadReport, Outcomes, ServeError, ServeResult, ServeStats,
+    Session, Ticket,
+};
+use crate::util::rng::Rng;
 
 // ---------------------------------------------------------------------------
 // Config
@@ -299,7 +303,7 @@ impl NetServer {
             p.join(); // handlers notice the flag at their next idle tick
         }
         // connections that never reached a handler get a typed goodbye
-        let stragglers = std::mem::take(&mut *self.inner.conns.lock().unwrap());
+        let stragglers = std::mem::take(&mut *plock(&self.inner.conns));
         for mut s in stragglers {
             let _ = s.set_write_timeout(Some(Duration::from_millis(
                 self.inner.cfg.write_timeout_ms.max(1),
@@ -327,7 +331,7 @@ fn accept_loop(inner: &NetInner, listener: TcpListener) {
         match listener.accept() {
             Ok((stream, _peer)) => {
                 inner.stats.accepted.fetch_add(1, Ordering::Relaxed);
-                let mut g = inner.conns.lock().unwrap();
+                let mut g = plock(&inner.conns);
                 if g.len() >= inner.cfg.backlog.max(1) {
                     drop(g);
                     inner.stats.refused.fetch_add(1, Ordering::Relaxed);
@@ -371,7 +375,7 @@ fn refuse(inner: &NetInner, mut stream: TcpStream) {
 fn handler_loop(inner: &NetInner) {
     loop {
         let stream = {
-            let mut g = inner.conns.lock().unwrap();
+            let mut g = plock(&inner.conns);
             loop {
                 if let Some(s) = g.pop() {
                     break s;
@@ -379,7 +383,7 @@ fn handler_loop(inner: &NetInner) {
                 if inner.shutdown.load(Ordering::SeqCst) {
                     return;
                 }
-                g = inner.conn_cv.wait(g).unwrap();
+                g = pwait(&inner.conn_cv, g);
             }
         };
         // fault isolation: a panic while serving one connection is
@@ -729,6 +733,7 @@ fn stats_fields(s: &ServeStats) -> Vec<(&'static str, Json)> {
         ("shed_requests", Json::num(s.shed_requests as f64)),
         ("expired_requests", Json::num(s.expired_requests as f64)),
         ("failed_batches", Json::num(s.failed_batches as f64)),
+        ("panicked_batches", Json::num(s.panicked_batches as f64)),
     ]
 }
 
@@ -815,6 +820,62 @@ fn stats_json(inner: &NetInner) -> String {
 // Client
 // ---------------------------------------------------------------------------
 
+/// Client-side transport timeouts.  Every socket wait a [`NetClient`]
+/// can block on is bounded by one of these; a bound that expires
+/// surfaces as the typed [`ClientError::TimedOut`] (downcastable from
+/// the `anyhow` chain), not a raw io error.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NetClientCfg {
+    pub connect_timeout: Duration,
+    pub read_timeout: Duration,
+    pub write_timeout: Duration,
+}
+
+impl Default for NetClientCfg {
+    fn default() -> Self {
+        NetClientCfg {
+            connect_timeout: Duration::from_secs(5),
+            read_timeout: Duration::from_secs(60),
+            write_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+/// Typed client-side transport failures.  Retrieve with
+/// `err.downcast_ref::<ClientError>()` on the transport-level `Result`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClientError {
+    /// A connect/read/write exceeded its [`NetClientCfg`] bound.  For an
+    /// idempotent inference this is retry-safe *while deadline budget
+    /// remains* — the reply may still be in flight, but re-asking cannot
+    /// corrupt anything.
+    TimedOut,
+    /// The retry client's circuit breaker is open for this endpoint.
+    CircuitOpen,
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::TimedOut => write!(f, "client transport timed out"),
+            ClientError::CircuitOpen => write!(f, "endpoint circuit breaker is open"),
+        }
+    }
+}
+
+impl std::error::Error for ClientError {}
+
+/// Map an io failure to the typed client error where a timeout is
+/// involved, keeping everything downcastable.
+fn client_io_err(e: io::Error, what: &str) -> anyhow::Error {
+    if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) {
+        anyhow::Error::new(ClientError::TimedOut)
+            .context(format!("serve-net client: {what} timed out"))
+    } else {
+        anyhow::Error::new(e).context(format!("serve-net client: {what}"))
+    }
+}
+
 /// Minimal blocking client for the wire protocol — one request in flight
 /// per connection (send, then wait for the matching reply).
 pub struct NetClient {
@@ -823,25 +884,32 @@ pub struct NetClient {
 }
 
 impl NetClient {
+    /// Connect with [`NetClientCfg::default`] timeouts.
     pub fn connect(addr: SocketAddr) -> Result<NetClient> {
-        let stream = TcpStream::connect(addr)
+        NetClient::connect_cfg(addr, NetClientCfg::default())
+    }
+
+    /// Connect with explicit transport timeouts.
+    pub fn connect_cfg(addr: SocketAddr, cfg: NetClientCfg) -> Result<NetClient> {
+        let stream = TcpStream::connect_timeout(&addr, cfg.connect_timeout.max(Duration::from_millis(1)))
+            .map_err(|e| client_io_err(e, "connect"))
             .with_context(|| format!("serve-net client: connect {addr}"))?;
         let _ = stream.set_nodelay(true);
         stream
-            .set_read_timeout(Some(Duration::from_secs(60)))
+            .set_read_timeout(Some(cfg.read_timeout.max(Duration::from_millis(1))))
             .context("serve-net client: read timeout")?;
         stream
-            .set_write_timeout(Some(Duration::from_secs(10)))
+            .set_write_timeout(Some(cfg.write_timeout.max(Duration::from_millis(1))))
             .context("serve-net client: write timeout")?;
         Ok(NetClient { stream, next_id: 1 })
     }
 
     fn roundtrip(&mut self, req: &Request) -> Result<Response> {
         write_frame(&mut self.stream, &proto::encode_request(req))
-            .context("serve-net client: write")?;
+            .map_err(|e| client_io_err(e, "write"))?;
         loop {
             let body = read_frame_blocking(&mut self.stream)
-                .context("serve-net client: read")?
+                .map_err(|e| client_io_err(e, "read"))?
                 .context("server closed the connection")?;
             let resp = proto::decode_response(&body)
                 .map_err(|e| anyhow::anyhow!("bad response frame: {e}"))?;
@@ -912,6 +980,387 @@ impl NetClient {
             Response::Tensor { .. } => {
                 anyhow::bail!("serve-net client: tensor reply to a stats request")
             }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Retrying / hedging client
+// ---------------------------------------------------------------------------
+
+/// Bounded retry with decorrelated-jitter backoff (AWS-style: each sleep
+/// is uniform in `[base, prev * 3]`, capped) — successive retries neither
+/// synchronize with other clients nor pile onto a recovering server.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Total attempts, including the first (1 = no retries).
+    pub attempts: usize,
+    /// Backoff floor, ms.
+    pub base_ms: u64,
+    /// Backoff ceiling, ms.
+    pub cap_ms: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { attempts: 4, base_ms: 5, cap_ms: 200 }
+    }
+}
+
+/// Per-endpoint circuit breaker knobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BreakerCfg {
+    /// Consecutive transport/retry-safe failures that open the circuit.
+    pub failure_threshold: usize,
+    /// How long an open circuit rejects before letting one probe through.
+    pub cooldown: Duration,
+}
+
+impl Default for BreakerCfg {
+    fn default() -> Self {
+        BreakerCfg { failure_threshold: 5, cooldown: Duration::from_millis(500) }
+    }
+}
+
+/// Closed → (threshold consecutive failures) → Open → (cooldown) →
+/// half-open probe → Closed on success / Open again on failure.
+enum BreakerState {
+    Closed { fails: usize },
+    Open { until: Instant },
+}
+
+struct Breaker {
+    cfg: BreakerCfg,
+    state: BreakerState,
+}
+
+impl Breaker {
+    fn new(cfg: BreakerCfg) -> Breaker {
+        Breaker { cfg, state: BreakerState::Closed { fails: 0 } }
+    }
+
+    /// May a request go out now?  An expired cooldown admits exactly the
+    /// caller as the half-open probe (state flips on its outcome).
+    fn allow(&self, now: Instant) -> bool {
+        match &self.state {
+            BreakerState::Closed { .. } => true,
+            BreakerState::Open { until } => now >= *until,
+        }
+    }
+
+    fn on_success(&mut self) {
+        self.state = BreakerState::Closed { fails: 0 };
+    }
+
+    fn on_failure(&mut self, now: Instant) {
+        let open = match &self.state {
+            // a failed half-open probe re-arms the cooldown immediately
+            BreakerState::Open { .. } => true,
+            BreakerState::Closed { fails } => fails + 1 >= self.cfg.failure_threshold.max(1),
+        };
+        self.state = if open {
+            BreakerState::Open { until: now + self.cfg.cooldown }
+        } else {
+            let fails = match &self.state {
+                BreakerState::Closed { fails } => fails + 1,
+                BreakerState::Open { .. } => unreachable!(),
+            };
+            BreakerState::Closed { fails }
+        };
+    }
+
+    fn name(&self, now: Instant) -> &'static str {
+        match &self.state {
+            BreakerState::Closed { .. } => "closed",
+            BreakerState::Open { until } if now >= *until => "half-open",
+            BreakerState::Open { .. } => "open",
+        }
+    }
+}
+
+/// What the retry client did (cumulative; for tests and load reports).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RetryStats {
+    /// Wire attempts actually sent (≥ logical requests).
+    pub attempts: usize,
+    /// Attempts that were retries of an earlier failure.
+    pub retries: usize,
+    /// Hedge legs launched.
+    pub hedges: usize,
+    /// Requests rejected locally because the breaker was open.
+    pub breaker_rejections: usize,
+}
+
+/// A [`NetClient`] wrapper that survives transient faults instead of
+/// converting them into lost goodput:
+///
+/// * **Bounded retries** on *retry-safe* outcomes only: [`ErrCode::Shed`],
+///   [`ErrCode::ShuttingDown`], connection resets, and (while deadline
+///   budget remains) client-side timeouts.  A spent deadline is never
+///   retried — the answer could only arrive late.  `BadFrame` and
+///   `BackendFailed` verdicts are *not* retried: the request executed (or
+///   the protocol is broken) and re-asking burns server capacity.
+/// * **Optional hedging**: after [`RetryClient::with_hedge`]'s delay with
+///   no reply, a second identical request is raced on a fresh connection;
+///   first verdict wins, the loser is abandoned.
+/// * **A per-endpoint circuit breaker**: consecutive failures open it,
+///   open means local typed rejection ([`ClientError::CircuitOpen`], no
+///   socket traffic), one probe per cooldown re-closes it on success.
+///
+/// Backoff jitter comes from the deterministic seeded [`Rng`], so a
+/// chaos-run's retry schedule replays exactly.
+pub struct RetryClient {
+    addr: SocketAddr,
+    cfg: NetClientCfg,
+    retry: RetryPolicy,
+    hedge_after: Option<Duration>,
+    tenant: String,
+    rng: Rng,
+    breaker: Breaker,
+    conn: Option<NetClient>,
+    stats: RetryStats,
+}
+
+impl RetryClient {
+    pub fn new(addr: SocketAddr) -> RetryClient {
+        RetryClient {
+            addr,
+            cfg: NetClientCfg::default(),
+            retry: RetryPolicy::default(),
+            hedge_after: None,
+            tenant: String::new(),
+            rng: Rng::new(0x9e37_79b9),
+            breaker: Breaker::new(BreakerCfg::default()),
+            conn: None,
+            stats: RetryStats::default(),
+        }
+    }
+
+    pub fn with_cfg(mut self, cfg: NetClientCfg) -> RetryClient {
+        self.cfg = cfg;
+        self
+    }
+
+    pub fn with_retry(mut self, retry: RetryPolicy) -> RetryClient {
+        self.retry = retry;
+        self
+    }
+
+    /// Hedge a request onto a second connection after `d` without a
+    /// verdict.  Hedged mode opens a fresh connection per leg.
+    pub fn with_hedge(mut self, d: Duration) -> RetryClient {
+        self.hedge_after = Some(d);
+        self
+    }
+
+    pub fn with_breaker(mut self, cfg: BreakerCfg) -> RetryClient {
+        self.breaker = Breaker::new(cfg);
+        self
+    }
+
+    /// Address every request to a named fleet tenant.
+    pub fn with_tenant(mut self, tenant: &str) -> RetryClient {
+        self.tenant = tenant.to_string();
+        self
+    }
+
+    /// Seed the backoff-jitter stream (deterministic replay).
+    pub fn with_seed(mut self, seed: u64) -> RetryClient {
+        self.rng = Rng::new(seed);
+        self
+    }
+
+    pub fn retry_stats(&self) -> RetryStats {
+        self.stats
+    }
+
+    /// Current breaker state: `"closed"`, `"open"`, or `"half-open"`.
+    pub fn breaker_state(&self) -> &'static str {
+        self.breaker.name(Instant::now())
+    }
+
+    /// One logical inference, retried/hedged per policy.  Same contract
+    /// as [`NetClient::infer_deadline`]: the outer `Result` is
+    /// transport-level (after all attempts), the inner one the server's
+    /// typed verdict.
+    pub fn infer_deadline(
+        &mut self,
+        x: &Tensor,
+        t: Option<&Tensor>,
+        deadline: Option<Duration>,
+    ) -> Result<std::result::Result<Tensor, (ErrCode, String)>> {
+        let start = Instant::now();
+        let mut prev_sleep = self.retry.base_ms.max(1);
+        let mut last: Option<Result<std::result::Result<Tensor, (ErrCode, String)>>> = None;
+        for attempt in 0..self.retry.attempts.max(1) {
+            let now = Instant::now();
+            if !self.breaker.allow(now) {
+                self.stats.breaker_rejections += 1;
+                return Err(anyhow::Error::new(ClientError::CircuitOpen)
+                    .context(format!("serve-net client: {} circuit open", self.addr)));
+            }
+            // never start an attempt past a spent deadline
+            let remaining = match deadline {
+                None => None,
+                Some(d) => match d.checked_sub(start.elapsed()) {
+                    Some(r) if r > Duration::ZERO => Some(r),
+                    _ => {
+                        return Ok(Err((
+                            ErrCode::DeadlineExceeded,
+                            "deadline spent before another attempt".into(),
+                        )))
+                    }
+                },
+            };
+            self.stats.attempts += 1;
+            if attempt > 0 {
+                self.stats.retries += 1;
+            }
+            let verdict = self.one_attempt(x, t, remaining);
+            match &verdict {
+                Ok(Ok(_)) => {
+                    self.breaker.on_success();
+                    return verdict;
+                }
+                Ok(Err((code, _))) => match code {
+                    // retry-safe: the request never executed
+                    ErrCode::Shed | ErrCode::ShuttingDown => {
+                        self.breaker.on_failure(Instant::now());
+                    }
+                    // the deadline verdict is final by definition
+                    ErrCode::DeadlineExceeded => return verdict,
+                    // executed-and-failed (or protocol breakage): final
+                    ErrCode::BadFrame | ErrCode::BackendFailed => {
+                        self.breaker.on_failure(Instant::now());
+                        return verdict;
+                    }
+                },
+                Err(e) => {
+                    // transport fault: drop the connection, maybe retry
+                    self.conn = None;
+                    self.breaker.on_failure(Instant::now());
+                    let timed_out = e.downcast_ref::<ClientError>()
+                        == Some(&ClientError::TimedOut);
+                    if timed_out && deadline.is_none() {
+                        // no budget to judge "still in flight" against:
+                        // surface it rather than guess
+                        return verdict;
+                    }
+                }
+            }
+            last = Some(verdict);
+            if attempt + 1 < self.retry.attempts {
+                // decorrelated jitter, clipped to the remaining budget
+                let hi = prev_sleep.saturating_mul(3).max(self.retry.base_ms.max(1) + 1);
+                let mut sleep = self.retry.base_ms.max(1)
+                    + self.rng.below((hi - self.retry.base_ms.max(1)) as usize + 1) as u64;
+                sleep = sleep.min(self.retry.cap_ms.max(1));
+                prev_sleep = sleep;
+                let mut d = Duration::from_millis(sleep);
+                if let Some(dl) = deadline {
+                    d = d.min(dl.saturating_sub(start.elapsed()));
+                }
+                std::thread::sleep(d);
+            }
+        }
+        last.unwrap_or_else(|| {
+            Err(anyhow::anyhow!("serve-net client: no attempts were made"))
+        })
+    }
+
+    /// One wire attempt — direct on the kept connection, or hedged over
+    /// fresh connections when [`RetryClient::with_hedge`] is armed.
+    fn one_attempt(
+        &mut self,
+        x: &Tensor,
+        t: Option<&Tensor>,
+        remaining: Option<Duration>,
+    ) -> Result<std::result::Result<Tensor, (ErrCode, String)>> {
+        match self.hedge_after {
+            None => {
+                if self.conn.is_none() {
+                    self.conn = Some(NetClient::connect_cfg(self.addr, self.cfg)?);
+                }
+                let conn = self.conn.as_mut().expect("connection just established");
+                conn.infer_tenant(&self.tenant, x, t, remaining)
+            }
+            Some(hedge_after) => self.hedged(x, t, remaining, hedge_after),
+        }
+    }
+
+    fn hedged(
+        &mut self,
+        x: &Tensor,
+        t: Option<&Tensor>,
+        remaining: Option<Duration>,
+        hedge_after: Duration,
+    ) -> Result<std::result::Result<Tensor, (ErrCode, String)>> {
+        type Verdict = Result<std::result::Result<Tensor, (ErrCode, String)>>;
+        fn leg(
+            tx: std::sync::mpsc::Sender<Verdict>,
+            addr: SocketAddr,
+            cfg: NetClientCfg,
+            tenant: String,
+            x: Tensor,
+            t: Option<Tensor>,
+            deadline: Option<Duration>,
+        ) {
+            let _ = std::thread::Builder::new().name("lm-hedge".into()).spawn(move || {
+                let verdict = NetClient::connect_cfg(addr, cfg)
+                    .and_then(|mut c| c.infer_tenant(&tenant, &x, t.as_ref(), deadline));
+                let _ = tx.send(verdict); // the loser's send fails silently
+            });
+        }
+        let (tx, rx) = std::sync::mpsc::channel::<Verdict>();
+        leg(
+            tx.clone(),
+            self.addr,
+            self.cfg,
+            self.tenant.clone(),
+            x.clone(),
+            t.cloned(),
+            remaining,
+        );
+        // the hard cap on waiting for any leg: the deadline budget plus
+        // slack, or the read timeout
+        let cap = remaining
+            .map(|r| r + Duration::from_millis(250))
+            .unwrap_or(self.cfg.read_timeout)
+            .max(Duration::from_millis(1));
+        let first = match rx.recv_timeout(hedge_after.min(cap)) {
+            Ok(v) => return v,
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                // primary is slow: race a second leg on a fresh socket
+                self.stats.hedges += 1;
+                leg(
+                    tx,
+                    self.addr,
+                    self.cfg,
+                    self.tenant.clone(),
+                    x.clone(),
+                    t.cloned(),
+                    remaining,
+                );
+                match rx.recv_timeout(cap) {
+                    Ok(v) => v,
+                    Err(_) => {
+                        return Err(anyhow::Error::new(ClientError::TimedOut)
+                            .context("serve-net client: both hedge legs timed out"))
+                    }
+                }
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                return Err(anyhow::anyhow!("serve-net client: hedge leg lost"))
+            }
+        };
+        // a success wins outright; on failure give the other leg the
+        // rest of the cap to do better
+        if matches!(&first, Ok(Ok(_))) {
+            return first;
+        }
+        match rx.recv_timeout(cap) {
+            Ok(second) if matches!(&second, Ok(Ok(_))) => second,
+            _ => first,
         }
     }
 }
@@ -1042,14 +1491,13 @@ where
                     );
                     let sent = Instant::now();
                     match client.infer_tenant(tenant, &x, t.as_ref(), deadline) {
-                        Ok(Ok(_y)) => lat
-                            .lock()
-                            .unwrap()
-                            .push(sent.elapsed().as_secs_f64() * 1e3),
-                        Ok(Err((code, _))) => out.lock().unwrap().note_code(code),
+                        Ok(Ok(_y)) => {
+                            plock(&lat).push(sent.elapsed().as_secs_f64() * 1e3)
+                        }
+                        Ok(Err((code, _))) => plock(&out).note_code(code),
                         Err(_) => {
                             // transport fault: count it, reconnect, go on
-                            out.lock().unwrap().note_code(ErrCode::BackendFailed);
+                            plock(&out).note_code(ErrCode::BackendFailed);
                             client = NetClient::connect(addr)?;
                         }
                     }
@@ -1063,8 +1511,8 @@ where
         Ok(())
     })?;
     let wall_s = t0.elapsed().as_secs_f64();
-    let lat = lat.into_inner().unwrap();
-    let out = out.into_inner().unwrap();
+    let lat = punwrap(lat);
+    let out = punwrap(out);
     // the server's engine counters are not reachable from the client side
     // of the socket, so the shared assembler sees a zero delta there; the
     // client-observable fields are what NetLoadReport republishes

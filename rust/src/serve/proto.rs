@@ -768,4 +768,118 @@ mod tests {
         assert_eq!(peek_kind(&body), Some(KIND_STATS));
         assert_eq!(peek_kind(&[0, 1, 2]), None);
     }
+
+    /// Every valid v1/v2 frame this suite can produce, as mutation bases
+    /// for the totality property below.
+    fn frame_corpus() -> Vec<Vec<u8>> {
+        let mut bases = vec![
+            encode_request(&Request::Stats { id: 3 }),
+            encode_request(&Request::Infer {
+                id: 9,
+                deadline_us: 25_000,
+                tenant: "edge".into(),
+                x: x23(),
+                t: None,
+            }),
+            encode_request(&Request::Infer {
+                id: 10,
+                deadline_us: 0,
+                tenant: String::new(),
+                x: x23(),
+                t: Some(Tensor::new(vec![2], vec![100.0, 200.0])),
+            }),
+            encode_response(&Response::Tensor { id: 1, y: x23() }),
+            encode_response(&Response::Stats { id: 2, json: "{\"requests\":3}".into() }),
+            encode_response(&Response::Error {
+                id: 4,
+                code: ErrCode::Shed,
+                msg: "queue full".into(),
+            }),
+        ];
+        // a wire-v1 lookalike (same framing, version byte 1): mutations
+        // of legacy traffic must be exactly as harmless
+        let mut v1 = encode_request(&Request::Stats { id: 7 });
+        v1[4] = 1; // the version byte follows the u32 magic
+        bases.push(v1);
+        bases
+    }
+
+    /// The decoder is a *total function*: any byte-flip / truncate /
+    /// extend mutation of a valid frame yields `Ok` or a typed
+    /// [`DecodeError`] — never a panic.  (`DecodeError` has only the
+    /// `NotOurs`/`Malformed`/`Legacy` variants, so "no panic" IS the
+    /// whole property; the mutation space is what makes it bite.)
+    #[test]
+    fn prop_mutated_frames_never_panic_the_decoders() {
+        let bases = frame_corpus();
+        crate::util::prop::check_res(
+            "mutated v1/v2 frames decode totally",
+            800,
+            |r| {
+                let mut b = bases[r.below(bases.len())].clone();
+                match r.below(4) {
+                    0 => {
+                        // flip up to 3 bits anywhere (magic, kind, dims,
+                        // lengths, payload...)
+                        for _ in 0..=r.below(3) {
+                            if !b.is_empty() {
+                                let i = r.below(b.len());
+                                b[i] ^= 1 << r.below(8);
+                            }
+                        }
+                    }
+                    1 => {
+                        let keep = r.below(b.len() + 1);
+                        b.truncate(keep);
+                    }
+                    2 => {
+                        for _ in 0..=r.below(16) {
+                            b.push((r.next_u64() & 0xff) as u8);
+                        }
+                    }
+                    _ => {
+                        // corrupt *and* truncate
+                        if !b.is_empty() {
+                            let i = r.below(b.len());
+                            b[i] ^= 0xff;
+                        }
+                        let keep = r.below(b.len() + 1);
+                        b.truncate(keep);
+                    }
+                }
+                b
+            },
+            |bytes| {
+                let got = std::panic::catch_unwind(|| {
+                    let _ = peek_kind(bytes);
+                    let req = decode_request(bytes);
+                    let resp = decode_response(bytes);
+                    // totality, spelled out: each result is a frame or a
+                    // typed error
+                    matches!(req, Ok(_) | Err(_)) && matches!(resp, Ok(_) | Err(_))
+                });
+                match got {
+                    Ok(true) => Ok(()),
+                    Ok(false) => Err("non-total decode result".into()),
+                    Err(_) => Err("decoder panicked".into()),
+                }
+            },
+        );
+    }
+
+    /// Unmutated corpus frames decode cleanly (guards the corpus itself:
+    /// a base that is already invalid would weaken the mutation test).
+    #[test]
+    fn frame_corpus_bases_decode() {
+        for (i, b) in frame_corpus().iter().enumerate() {
+            let req = decode_request(b);
+            let resp = decode_response(b);
+            assert!(
+                req.is_ok()
+                    || resp.is_ok()
+                    || matches!(req, Err(DecodeError::Legacy(_))),
+                "corpus frame {i} decodes as neither request, response, nor legacy"
+            );
+        }
+    }
 }

@@ -65,6 +65,11 @@ pub struct RungView {
     pub batch: usize,
     /// Current EWMA per-batch service time, µs ([`RungCost::svc_us`]).
     pub svc_us: u64,
+    /// Whether the fleet's rung supervisor currently offers this rung
+    /// (healthy or on a probation probe).  A quarantined rung is skipped
+    /// — unless *every* rung is quarantined, in which case the whole
+    /// ladder is offered rather than bricking the tenant.
+    pub healthy: bool,
 }
 
 impl RungView {
@@ -149,6 +154,9 @@ impl Router {
     /// deployment order; `workers` is the fleet pool draining it.
     ///
     /// Semantics:
+    /// * Only rungs the supervisor offers ([`RungView::healthy`]) are
+    ///   candidates; when *none* are offered, the full ladder is (no
+    ///   healthy rung must not mean no service at all).
     /// * Candidates are scanned **cheapest-first by service EWMA** (the
     ///   deployment order is not trusted — online refinement may have
     ///   reordered the real costs).
@@ -159,7 +167,10 @@ impl Router {
     /// * If no rung fits a finite budget, the request sheds.
     pub fn route(&self, rungs: &[RungView], rows: usize, budget_us: u64, workers: usize) -> Route {
         assert!(!rungs.is_empty(), "route: tenant has an empty ladder");
-        let mut order: Vec<usize> = (0..rungs.len()).collect();
+        let mut order: Vec<usize> = (0..rungs.len()).filter(|&i| rungs[i].healthy).collect();
+        if order.is_empty() {
+            order = (0..rungs.len()).collect();
+        }
         order.sort_by_key(|&i| (rungs[i].svc_us, i));
         if budget_us == u64::MAX {
             // no deadline: minimize predicted completion outright
@@ -205,7 +216,30 @@ mod tests {
     use super::*;
 
     fn view(queued_rows: usize, batch: usize, svc_us: u64) -> RungView {
-        RungView { queued_rows, batch, svc_us }
+        RungView { queued_rows, batch, svc_us, healthy: true }
+    }
+
+    #[test]
+    fn quarantined_rung_is_bypassed() {
+        let r = Router::new();
+        // the cheapest rung is quarantined: the router must route around
+        // it even though it would otherwise win
+        let mut rungs = [view(0, 8, 100), view(0, 8, 300)];
+        rungs[0].healthy = false;
+        assert_eq!(r.route(&rungs, 1, 10_000, 1), Route::Hit(1));
+        // re-admitted: it wins again
+        rungs[0].healthy = true;
+        assert_eq!(r.route(&rungs, 1, 10_000, 1), Route::Hit(0));
+    }
+
+    #[test]
+    fn all_quarantined_offers_the_full_ladder() {
+        let r = Router::new();
+        let mut rungs = [view(0, 8, 100), view(0, 8, 300)];
+        rungs[0].healthy = false;
+        rungs[1].healthy = false;
+        // no healthy rung must not brick the tenant
+        assert_eq!(r.route(&rungs, 1, 10_000, 1), Route::Hit(0));
     }
 
     #[test]

@@ -77,7 +77,7 @@ fn rows(n: usize, seed: f32) -> Tensor {
 }
 
 fn cfg(workers: usize) -> FleetCfg {
-    FleetCfg { workers, queue_cap: 512, quantum_rows: 4 }
+    FleetCfg { workers, queue_cap: 512, quantum_rows: 4, ..FleetCfg::default() }
 }
 
 // ---------------------------------------------------------------------------

@@ -31,6 +31,28 @@ cargo test -q --test serve_net
 echo "== cargo test -q --test fleet =="
 cargo test -q --test fleet
 
+# chaos suite by name: exactly-once tickets under injected faults, the
+# retrying/hedging client through a flaky wire, rung quarantine +
+# re-admission (loopback-unavailable environments self-skip)
+echo "== cargo test -q --test chaos =="
+cargo test -q --test chaos
+
+# a short fixed-seed chaos soak through the CLI drill: the whole stack
+# (FaultBackend engine -> TCP tier -> FaultProxy -> RetryClient) under a
+# pinned seed, so the invariant report is reproducible run to run
+echo "== LM_CHAOS_SEED pinned chaos soak (CLI drill) =="
+LM_CHAOS_SEED=0x5eedc4a0 cargo run --release --quiet -- chaos \
+    --backend host --model hostnet-tiny --requests 40
+
+# serving hot paths must use the poison-recovering lock helpers
+# (serve::plock / pwait / pwait_timeout / punwrap), never a bare
+# `.lock().unwrap()` that turns one poisoned batch into a cascade
+echo "== serve lock-hygiene lint =="
+if grep -rn --include='*.rs' -e '\.lock()\.unwrap()' -e '\.lock()\.expect(' src/serve/; then
+    echo "error: bare lock().unwrap()/expect() in src/serve/ — use serve::plock and friends" >&2
+    exit 1
+fi
+
 if [ "${CI_SKIP_CLIPPY:-0}" != "1" ] && cargo clippy --version >/dev/null 2>&1; then
     echo "== cargo clippy --all-targets -- -D warnings =="
     cargo clippy --all-targets -- -D warnings
