@@ -17,7 +17,7 @@
 use std::collections::BTreeSet;
 use std::sync::Arc;
 
-use layermerge::bench::{bench, bench_iters, smoke, BenchStats};
+use layermerge::bench::{bench, bench_iters, smoke, stats_json};
 use layermerge::exec::{CompiledPlan, Format, Plan};
 use layermerge::ir::synth;
 use layermerge::kernels::{gemm, gemm_packed, PackedB};
@@ -31,17 +31,6 @@ use layermerge::util::tensor::Tensor;
 fn randt(rng: &mut Rng, dims: &[usize]) -> Tensor {
     let n: usize = dims.iter().product();
     Tensor::new(dims.to_vec(), (0..n).map(|_| rng.normal()).collect())
-}
-
-fn stats_json(s: &BenchStats) -> Json {
-    Json::obj(vec![
-        ("name", Json::str(&s.name)),
-        ("iters", Json::num(s.iters as f64)),
-        ("mean_ms", Json::num(s.mean_ms)),
-        ("p50_ms", Json::num(s.p50_ms)),
-        ("p95_ms", Json::num(s.p95_ms)),
-        ("min_ms", Json::num(s.min_ms)),
-    ])
 }
 
 fn main() -> anyhow::Result<()> {
@@ -273,48 +262,14 @@ fn main() -> anyhow::Result<()> {
         return Ok(());
     }
 
-    // read-modify-write: the serving bench owns the `serve *` rows and
-    // `serving_*` derived keys, the runtime_dispatch bench owns the
-    // `resident/dispatch forward *` rows and `resident_*`/`dispatch_*`
-    // keys — preserve them so the benches can be re-run in any order
-    // without clobbering each other's record
-    let path = std::env::var("BENCH_OUT").unwrap_or_else(|_| {
-        format!("{}/../BENCH_merge.json", env!("CARGO_MANIFEST_DIR"))
-    });
-    if let Ok(text) = std::fs::read_to_string(&path) {
-        if let Ok(prev) = Json::parse(&text) {
-            if let Some(prev_rows) = prev.get("rows").and_then(|r| r.as_arr()) {
-                for r in prev_rows {
-                    let name = r.get("name").and_then(|n| n.as_str()).unwrap_or("");
-                    if name.starts_with("serve ")
-                        || name.starts_with("resident forward ")
-                        || name.starts_with("dispatch forward ")
-                    {
-                        rows.push(r.clone());
-                    }
-                }
-            }
-            if let Some(prev_d) = prev.get("derived").and_then(|d| d.as_obj()) {
-                for (k, v) in prev_d {
-                    if k.starts_with("serving_")
-                        || k.starts_with("resident_")
-                        || k.starts_with("dispatch_")
-                    {
-                        derived.push((k.clone(), v.clone()));
-                    }
-                }
-            }
-        }
-    }
-    let out = Json::obj(vec![
-        ("schema", Json::str("layermerge.bench.merge.v1")),
-        ("rows", Json::Arr(rows)),
-        (
-            "derived",
-            Json::obj(derived.iter().map(|(k, v)| (k.as_str(), v.clone())).collect()),
-        ),
-    ]);
-    std::fs::write(&path, out.to_string())?;
-    println!("wrote {path}");
-    Ok(())
+    // shared RMW: replace only what this bench owns, preserve the rest
+    layermerge::bench::record(
+        &[
+            "merge_kernels_", "merge_inverted_residual", "span_merge ",
+            "forward ", "gemm_axpy ", "packed_gemm ", "par ", "steady_forward ",
+        ],
+        &["merge_", "forward_", "packed_gemm_", "pool_", "steady_"],
+        rows,
+        derived,
+    )
 }

@@ -14,7 +14,7 @@
 
 use std::sync::Arc;
 
-use layermerge::bench::{bench, smoke};
+use layermerge::bench::{bench, smoke, stats_json};
 use layermerge::exec::{Format, Plan};
 use layermerge::ir::synth;
 use layermerge::runtime::{Backend, HostBackend};
@@ -22,17 +22,6 @@ use layermerge::serve::Engine;
 use layermerge::util::json::Json;
 use layermerge::util::rng::Rng;
 use layermerge::util::tensor::Tensor;
-
-fn stats_json(s: &layermerge::bench::BenchStats) -> Json {
-    Json::obj(vec![
-        ("name", Json::str(&s.name)),
-        ("iters", Json::num(s.iters as f64)),
-        ("mean_ms", Json::num(s.mean_ms)),
-        ("p50_ms", Json::num(s.p50_ms)),
-        ("p95_ms", Json::num(s.p95_ms)),
-        ("min_ms", Json::num(s.min_ms)),
-    ])
-}
 
 fn main() -> anyhow::Result<()> {
     let mut rows: Vec<Json> = Vec::new();
@@ -145,48 +134,12 @@ fn main() -> anyhow::Result<()> {
         return Ok(());
     }
 
-    // read-modify-write BENCH_merge.json: this bench owns the
-    // "resident forward *" / "dispatch forward *" rows and the
-    // resident_* / dispatch_* derived keys; everything else is preserved
-    let path = std::env::var("BENCH_OUT").unwrap_or_else(|_| {
-        format!("{}/../BENCH_merge.json", env!("CARGO_MANIFEST_DIR"))
-    });
-    let (mut all_rows, mut all_derived): (Vec<Json>, Vec<(String, Json)>) =
-        (Vec::new(), Vec::new());
-    if let Ok(text) = std::fs::read_to_string(&path) {
-        if let Ok(prev) = Json::parse(&text) {
-            if let Some(prev_rows) = prev.get("rows").and_then(|r| r.as_arr()) {
-                for r in prev_rows {
-                    let name = r.get("name").and_then(|n| n.as_str()).unwrap_or("");
-                    if !name.starts_with("resident forward ")
-                        && !name.starts_with("dispatch forward ")
-                    {
-                        all_rows.push(r.clone());
-                    }
-                }
-            }
-            if let Some(prev_d) = prev.get("derived").and_then(|d| d.as_obj()) {
-                for (k, v) in prev_d {
-                    if !k.starts_with("resident_") && !k.starts_with("dispatch_") {
-                        all_derived.push((k.clone(), v.clone()));
-                    }
-                }
-            }
-        }
-    }
-    all_rows.extend(rows);
-    all_derived.extend(derived);
-    let out = Json::obj(vec![
-        ("schema", Json::str("layermerge.bench.merge.v1")),
-        ("rows", Json::Arr(all_rows)),
-        (
-            "derived",
-            Json::obj(
-                all_derived.iter().map(|(k, v)| (k.as_str(), v.clone())).collect(),
-            ),
-        ),
-    ]);
-    std::fs::write(&path, out.to_string())?;
-    println!("wrote {path}");
-    Ok(())
+    // shared RMW: this bench owns the "resident/dispatch forward *" rows
+    // and the resident_* / dispatch_* derived keys
+    layermerge::bench::record(
+        &["resident forward ", "dispatch forward "],
+        &["resident_", "dispatch_"],
+        rows,
+        derived,
+    )
 }

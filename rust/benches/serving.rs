@@ -788,54 +788,12 @@ fn main() -> anyhow::Result<()> {
         return Ok(());
     }
 
-    // merge into BENCH_merge.json: keep every non-serving row and derived
-    // key from previous bench runs, replace the serving ones
-    let path = std::env::var("BENCH_OUT").unwrap_or_else(|_| {
-        format!("{}/../BENCH_merge.json", env!("CARGO_MANIFEST_DIR"))
-    });
-    let (mut all_rows, mut all_derived): (Vec<Json>, Vec<(String, Json)>) =
-        (Vec::new(), Vec::new());
-    if let Ok(text) = std::fs::read_to_string(&path) {
-        if let Ok(prev) = Json::parse(&text) {
-            if let Some(prev_rows) = prev.get("rows").and_then(|r| r.as_arr()) {
-                for r in prev_rows {
-                    let name = r.get("name").and_then(|n| n.as_str()).unwrap_or("");
-                    if !name.starts_with("serve ")
-                        && !name.starts_with("fleet ")
-                        && !name.starts_with("chaos ")
-                    {
-                        all_rows.push(r.clone());
-                    }
-                }
-            }
-            if let Some(prev_d) = prev.get("derived").and_then(|d| d.as_obj()) {
-                for (k, v) in prev_d {
-                    if !k.starts_with("serving_")
-                        && !k.starts_with("fleet_")
-                        && !k.starts_with("chaos_")
-                    {
-                        all_derived.push((k.clone(), v.clone()));
-                    }
-                }
-            }
-        }
-    }
-    all_rows.extend(rows);
-    all_derived.extend(derived);
-    let out = Json::obj(vec![
-        ("schema", Json::str("layermerge.bench.merge.v1")),
-        ("rows", Json::Arr(all_rows)),
-        (
-            "derived",
-            Json::obj(
-                all_derived
-                    .iter()
-                    .map(|(k, v)| (k.as_str(), v.clone()))
-                    .collect(),
-            ),
-        ),
-    ]);
-    std::fs::write(&path, out.to_string())?;
-    println!("wrote {path}");
-    Ok(())
+    // shared RMW: this bench owns the serve/fleet/chaos rows and the
+    // serving_*/fleet_*/chaos_* derived keys
+    layermerge::bench::record(
+        &["serve ", "fleet ", "chaos "],
+        &["serving_", "fleet_", "chaos_"],
+        rows,
+        derived,
+    )
 }

@@ -1,12 +1,23 @@
 //! Bench: the paper's solver complexity claims (Sec. 3.4 — "the DP
 //! algorithm is highly efficient, typically completing within a few
-//! seconds on CPU").  Times Algorithm 1, the LayerOnly knapsack (Eq. 8)
-//! and the \hat{C}_{ijk} selection (Eq. 3) at paper-scale instances
-//! (L = 17..34, P = 10 * T0 as in App. C).
+//! seconds on CPU").  Times Algorithm 1, the LayerOnly knapsack (Eq. 8),
+//! and the predecessor's two-stage DP (`baselines::twostage`) on the
+//! *same* instances at paper-scale (L = 17..34, P = 10 * T0 as in
+//! App. C), then runs the offline `e2e_host` loop once and records the
+//! predicted-vs-actual latency error of the measured tables.
+//!
+//! Extends `BENCH_merge.json` (schema `layermerge.bench.merge.v1`) with
+//! the `solver *` rows and the `solver_*`/`twostage_*`/`e2e_*` derived
+//! keys via the shared read-modify-write (`bench::record`).
+//! `BENCH_SMOKE=1` runs one tiny instance and skips the JSON write.
 
-use layermerge::bench::bench;
+use layermerge::baselines::twostage;
+use layermerge::bench::{bench, smoke, stats_json};
+use layermerge::pipeline::{self, PipelineCfg};
 use layermerge::solver::dp::{self, DpInput, SpanArc};
 use layermerge::solver::layeronly::{self, KnapsackInput};
+use layermerge::tables::{BuildCfg, LatencyMode};
+use layermerge::util::json::Json;
 use layermerge::util::rng::Rng;
 
 fn synthetic_arcs(l: usize, seg: usize, rng: &mut Rng) -> Vec<Vec<SpanArc>> {
@@ -29,26 +40,65 @@ fn synthetic_arcs(l: usize, seg: usize, rng: &mut Rng) -> Vec<Vec<SpanArc>> {
     arcs
 }
 
-fn main() {
-    println!("== solver benches (paper Sec. 3.4 complexity) ==");
+fn main() -> anyhow::Result<()> {
+    let mut rows: Vec<Json> = Vec::new();
+    let mut derived: Vec<(String, Json)> = Vec::new();
     let mut rng = Rng::new(42);
-    for (l, p) in [(17usize, 1000usize), (34, 1000), (34, 10000), (64, 10000)] {
+
+    println!("== solver benches (paper Sec. 3.4 complexity) ==");
+    let sizes: &[(usize, usize)] = if smoke() {
+        &[(17, 1000)]
+    } else {
+        &[(17usize, 1000usize), (34, 1000), (34, 10000), (64, 10000)]
+    };
+    let budget_ms = if smoke() { 20.0 } else { 400.0 };
+    // Alg. 1 vs the predecessor's two-stage DP on identical instances:
+    // same objective (pinned by tests/baselines.rs), different solve time
+    for &(l, p) in sizes {
         let arcs = synthetic_arcs(l, 8, &mut rng);
         let n_arcs: usize = arcs.iter().map(|a| a.len()).sum();
         let input = DpInput { l_max: l, budget_ms: 10.0, p, arcs };
-        let s = bench(
-            &format!("alg1_dp L={l} P={p} arcs={n_arcs}"),
+        let s1 = bench(
+            &format!("solver alg1_dp L={l} P={p} arcs={n_arcs}"),
             2,
-            400.0,
+            budget_ms,
             || {
-                let sol = dp::solve(&input);
-                std::hint::black_box(&sol);
+                std::hint::black_box(dp::solve(&input));
             },
         );
-        println!("{}", s.row());
+        println!("{}", s1.row());
+        let s2 = bench(
+            &format!("solver twostage_dp L={l} P={p} arcs={n_arcs}"),
+            2,
+            budget_ms,
+            || {
+                std::hint::black_box(twostage::solve(&input));
+            },
+        );
+        let front: usize = twostage::collapse(&input).iter().map(|a| a.len()).sum();
+        println!(
+            "{}  ({:.2}x vs alg1; fronts {front}/{n_arcs} arcs)",
+            s2.row(),
+            s1.p50_ms / s2.p50_ms
+        );
+        rows.push(stats_json(&s1));
+        rows.push(stats_json(&s2));
+        let o1 = dp::solve(&input).map(|s| s.objective).unwrap_or(0.0);
+        let o2 = twostage::solve(&input).map(|s| s.objective).unwrap_or(0.0);
+        if l == sizes.last().unwrap().0 {
+            derived.push((
+                "twostage_vs_dp_obj_ratio".into(),
+                Json::num(if o1.abs() > 1e-12 { o2 / o1 } else { 1.0 }),
+            ));
+            derived.push((
+                "twostage_vs_dp_solve_speedup".into(),
+                Json::num(s1.p50_ms / s2.p50_ms.max(1e-9)),
+            ));
+        }
     }
 
-    for l in [17usize, 34, 64] {
+    let knap_sizes: &[usize] = if smoke() { &[17] } else { &[17usize, 34, 64] };
+    for &l in knap_sizes {
         let mut rng2 = Rng::new(7);
         let input = KnapsackInput {
             lat_ms: std::iter::once(0.0)
@@ -63,10 +113,55 @@ fn main() {
             budget_ms: 8.0,
             p: 10000,
         };
-        let s = bench(&format!("layeronly_knapsack L={l} P=10000"), 2, 300.0, || {
+        let s = bench(&format!("solver layeronly_knapsack L={l} P=10000"), 2, budget_ms, || {
             std::hint::black_box(layeronly::solve(&input));
         });
         println!("{}", s.row());
+        rows.push(stats_json(&s));
     }
-    println!("done");
+
+    // the offline paper loop: measured host tables -> DP -> deploy ->
+    // measure; record how well the table sum predicts the deployed plan
+    println!("== e2e host loop (profile -> solve -> merge -> measure) ==");
+    let cfg = PipelineCfg {
+        build: BuildCfg {
+            mode: LatencyMode::Measured,
+            warmup: if smoke() { 1 } else { 3 },
+            iters: if smoke() { 3 } else { 15 },
+            force: true,
+            ..BuildCfg::default()
+        },
+        lat_warmup: if smoke() { 1 } else { 3 },
+        lat_iters: if smoke() { 3 } else { 15 },
+        ..PipelineCfg::default()
+    };
+    let cache = std::env::temp_dir().join("lm_solvers_bench");
+    let r = pipeline::e2e_host("hostchain-tiny", 0.6, &cfg, &cache)?;
+    println!(
+        "e2e hostchain-tiny: pred {:.4}ms actual {:.4}ms (err {:.1}%), \
+         speedup pred {:.2}x actual {:.2}x, depth {} -> {}",
+        r.pred_merged_ms,
+        r.actual_merged_ms,
+        r.rel_err() * 100.0,
+        r.pred_speedup(),
+        r.actual_speedup(),
+        r.depth_before,
+        r.depth_after
+    );
+    derived.push(("e2e_pred_vs_actual_err".into(), Json::num(r.rel_err())));
+    derived.push(("e2e_actual_speedup".into(), Json::num(r.actual_speedup())));
+
+    if smoke() {
+        println!("(BENCH_SMOKE=1: skipping BENCH_merge.json write)");
+        return Ok(());
+    }
+
+    // shared RMW: this bench owns the "solver *" rows and the
+    // solver_*/twostage_*/e2e_* derived keys
+    layermerge::bench::record(
+        &["solver "],
+        &["solver_", "twostage_", "e2e_"],
+        rows,
+        derived,
+    )
 }

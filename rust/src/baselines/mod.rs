@@ -5,8 +5,12 @@
 //!                    diffusion model).
 //! * [`sequential`] — the Table-6 ablation: Depth then LayerOnly,
 //!                    optimized independently.
+//! * [`twostage`]   — Kim et al. 2023's two-stage DP (the predecessor
+//!                    paper), solving the same surrogate problem on the
+//!                    same tables for objective/solve-time comparison.
 //! * Knowledge distillation lives in `train::train_distill` (Table 10/11)
 //!   plus the cross-architecture KD artifact for the smaller student.
 
 pub mod channel;
 pub mod sequential;
+pub mod twostage;

@@ -1,0 +1,163 @@
+//! Two-stage DP baseline — "Efficient Latency-Aware CNN Depth Compression
+//! via Two-Stage Dynamic Programming" (Kim et al. 2023), LayerMerge's
+//! direct predecessor, adapted to our arc formulation:
+//!
+//! * **Stage 1** collapses every span's per-kernel-size choices into a
+//!   small Pareto front over (discretized cost, importance).  Among arcs
+//!   with the same source boundary and the same floored cost, only the
+//!   best-importance one can appear in an optimum; and a costlier arc
+//!   that gains no importance is dominated outright — the chain DP's
+//!   budget-monotonicity pass makes the cheaper arc at least as good at
+//!   every budget level.
+//! * **Stage 2** runs the chain DP over the pruned fronts — the identical
+//!   recurrence of Algorithm 1, just over far fewer arcs.
+//!
+//! Under the shared floor discretization (`unit = budget / P`) the
+//! collapse is lossless, so the **objective equals
+//! [`crate::solver::dp::solve`]'s** on the same input — pinned by the
+//! property test in `tests/baselines.rs`.  The trade the predecessor
+//! paper makes is solve time: stage 1 is a linear sweep, and stage 2's
+//! cost scales with the front size instead of the raw kernel-option
+//! count, which is where `benches/solvers.rs` compares the two.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::solver::dp::{self, DpInput, DpSolution, SpanArc};
+
+/// Stage 1: Pareto-collapse each arc set under the input's discretization.
+/// Exposed separately so tests and benches can measure the reduction.
+pub fn collapse(input: &DpInput) -> Vec<Vec<SpanArc>> {
+    let unit = input.budget_ms / input.p as f64;
+    let mut out = Vec::with_capacity(input.arcs.len());
+    for set in &input.arcs {
+        if unit <= 0.0 {
+            out.push(set.clone());
+            continue;
+        }
+        // best arc per (source boundary, floored cost); ties keep the
+        // truly cheaper arc so latency_est stays honest
+        let mut best: BTreeMap<(usize, usize), SpanArc> = BTreeMap::new();
+        for &arc in set {
+            let cost = (arc.lat_ms / unit).floor() as usize;
+            if cost > input.p {
+                continue; // can never fit the budget
+            }
+            let e = best.entry((arc.i, cost)).or_insert(arc);
+            if arc.imp > e.imp || (arc.imp == e.imp && arc.lat_ms < e.lat_ms) {
+                *e = arc;
+            }
+        }
+        // Pareto prune per source: the BTreeMap iterates (i, cost)
+        // ascending, so within each source costs ascend — keep only
+        // strictly increasing importance.
+        let mut front: Vec<SpanArc> = Vec::new();
+        let mut cur_src = usize::MAX;
+        let mut best_imp = f64::NEG_INFINITY;
+        for ((i, _cost), arc) in best {
+            if i != cur_src {
+                cur_src = i;
+                best_imp = f64::NEG_INFINITY;
+            }
+            if arc.imp > best_imp {
+                best_imp = arc.imp;
+                front.push(arc);
+            }
+        }
+        out.push(front);
+    }
+    out
+}
+
+/// Solve Problem (5) by the predecessor's two-stage scheme.  Same
+/// feasibility and objective as [`dp::solve`]; `solve_ms` covers both
+/// stages.
+pub fn solve(input: &DpInput) -> Option<DpSolution> {
+    let t0 = Instant::now();
+    let arcs = collapse(input);
+    let mut sol = dp::solve(&DpInput {
+        l_max: input.l_max,
+        budget_ms: input.budget_ms,
+        p: input.p,
+        arcs,
+    })?;
+    sol.solve_ms = t0.elapsed().as_secs_f64() * 1e3;
+    Some(sol)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inst(arcs: Vec<Vec<SpanArc>>, budget: f64) -> DpInput {
+        let l_max = arcs.len() - 1;
+        DpInput { l_max, budget_ms: budget, p: 100, arcs }
+    }
+
+    #[test]
+    fn collapse_drops_dominated_kernel_choices() {
+        // three kernel choices for the same span: one strictly best, one
+        // same-cost-worse-imp, one costlier-no-gain
+        let input = inst(
+            vec![
+                vec![],
+                vec![
+                    SpanArc { i: 0, k: 3, lat_ms: 0.50, imp: 2.0 },
+                    SpanArc { i: 0, k: 5, lat_ms: 0.51, imp: 1.0 }, // same bucket, worse
+                    SpanArc { i: 0, k: 7, lat_ms: 0.90, imp: 1.5 }, // costlier, no gain
+                ],
+            ],
+            1.0,
+        );
+        let fronts = collapse(&input);
+        assert_eq!(fronts[1].len(), 1);
+        assert_eq!((fronts[1][0].k, fronts[1][0].imp), (3, 2.0));
+    }
+
+    #[test]
+    fn collapse_keeps_genuine_tradeoffs() {
+        // paying more cost for more importance must survive
+        let input = inst(
+            vec![
+                vec![],
+                vec![
+                    SpanArc { i: 0, k: 1, lat_ms: 0.10, imp: 0.5 },
+                    SpanArc { i: 0, k: 3, lat_ms: 0.50, imp: 2.0 },
+                    SpanArc { i: 1, k: 3, lat_ms: 0.50, imp: 1.0 }, // other source
+                ],
+            ],
+            1.0,
+        );
+        let fronts = collapse(&input);
+        assert_eq!(fronts[1].len(), 3, "two tradeoff arcs + the other source");
+    }
+
+    #[test]
+    fn agrees_with_alg1_on_a_simple_chain() {
+        let input = inst(
+            vec![
+                vec![],
+                vec![SpanArc { i: 0, k: 3, lat_ms: 1.0, imp: 1.0 }],
+                vec![
+                    SpanArc { i: 1, k: 3, lat_ms: 1.0, imp: 1.0 },
+                    SpanArc { i: 0, k: 5, lat_ms: 1.2, imp: 2.5 },
+                ],
+            ],
+            1.5,
+        );
+        let two = solve(&input).unwrap();
+        let one = dp::solve(&input).unwrap();
+        assert!((two.objective - one.objective).abs() < 1e-9);
+        assert_eq!(two.spans, vec![(0, 2, 5)]);
+    }
+
+    #[test]
+    fn infeasible_stays_infeasible() {
+        let input = inst(
+            vec![vec![], vec![SpanArc { i: 0, k: 3, lat_ms: 2.0, imp: 1.0 }]],
+            0.5,
+        );
+        assert!(solve(&input).is_none());
+        assert!(dp::solve(&input).is_none());
+    }
+}

@@ -6,6 +6,8 @@
 
 use std::time::Instant;
 
+use crate::util::json::Json;
+
 #[derive(Debug, Clone)]
 pub struct BenchStats {
     pub name: String,
@@ -83,6 +85,80 @@ pub fn bench_iters<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F
     summarize(name, timed_iters(iters.max(1), &mut f))
 }
 
+/// One bench result as a `BENCH_merge.json` row (the v1 schema's
+/// `{name, iters, mean_ms, p50_ms, p95_ms, min_ms}` shape).
+pub fn stats_json(s: &BenchStats) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(&s.name)),
+        ("iters", Json::num(s.iters as f64)),
+        ("mean_ms", Json::num(s.mean_ms)),
+        ("p50_ms", Json::num(s.p50_ms)),
+        ("p95_ms", Json::num(s.p95_ms)),
+        ("min_ms", Json::num(s.min_ms)),
+    ])
+}
+
+/// Where the shared perf record lives: `BENCH_merge.json` at the repo
+/// root, overridable with `BENCH_OUT` (tests point it at a scratch file).
+pub fn record_path() -> String {
+    std::env::var("BENCH_OUT")
+        .unwrap_or_else(|_| format!("{}/../BENCH_merge.json", env!("CARGO_MANIFEST_DIR")))
+}
+
+/// Read-modify-write the shared `BENCH_merge.json` perf record (schema
+/// `layermerge.bench.merge.v1`).
+///
+/// Every bench target *owns* a set of row-name prefixes (`own_rows`) and
+/// derived-key prefixes (`own_keys`): rows and keys from the previous
+/// record that match an owned prefix are replaced by this run's `rows` /
+/// `derived`, everything else is preserved verbatim — so the benches can
+/// be re-run in any order without clobbering each other, and a new bench
+/// target's keys survive without the older benches listing them.
+pub fn record(
+    own_rows: &[&str],
+    own_keys: &[&str],
+    rows: Vec<Json>,
+    derived: Vec<(String, Json)>,
+) -> anyhow::Result<()> {
+    let path = record_path();
+    let mut all_rows: Vec<Json> = Vec::new();
+    let mut all_derived: Vec<(String, Json)> = Vec::new();
+    if let Ok(text) = std::fs::read_to_string(&path) {
+        if let Ok(prev) = Json::parse(&text) {
+            if let Some(prev_rows) = prev.get("rows").and_then(|r| r.as_arr()) {
+                for r in prev_rows {
+                    let name = r.get("name").and_then(|n| n.as_str()).unwrap_or("");
+                    if !own_rows.iter().any(|p| name.starts_with(p)) {
+                        all_rows.push(r.clone());
+                    }
+                }
+            }
+            if let Some(prev_d) = prev.get("derived").and_then(|d| d.as_obj()) {
+                for (k, v) in prev_d {
+                    if !own_keys.iter().any(|p| k.starts_with(p)) {
+                        all_derived.push((k.clone(), v.clone()));
+                    }
+                }
+            }
+        }
+    }
+    all_rows.extend(rows);
+    all_derived.extend(derived);
+    let out = Json::obj(vec![
+        ("schema", Json::str("layermerge.bench.merge.v1")),
+        ("rows", Json::Arr(all_rows)),
+        (
+            "derived",
+            Json::obj(
+                all_derived.iter().map(|(k, v)| (k.as_str(), v.clone())).collect(),
+            ),
+        ),
+    ]);
+    std::fs::write(&path, out.to_string())?;
+    println!("wrote {path}");
+    Ok(())
+}
+
 /// Render a paper-style table to stdout and return it as markdown lines.
 pub struct TableOut {
     pub title: String,
@@ -132,6 +208,52 @@ mod tests {
         });
         assert!(s.iters >= 5);
         assert!(s.p50_ms >= 0.0 && s.mean_ms >= s.min_ms);
+    }
+
+    #[test]
+    fn record_preserves_unowned_and_replaces_owned() {
+        let path = std::env::temp_dir().join(format!(
+            "lm_bench_record_{}.json",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        std::env::set_var("BENCH_OUT", &path);
+        // someone else's run: a "serve x" row + serving_* key
+        record(
+            &["serve "],
+            &["serving_"],
+            vec![Json::obj(vec![("name", Json::str("serve x")), ("p50_ms", Json::num(1.0))])],
+            vec![("serving_tps".into(), Json::num(9.0))],
+        )
+        .unwrap();
+        // our run owns solver rows/keys; the serving record must survive
+        record(
+            &["solver "],
+            &["solver_", "twostage_"],
+            vec![Json::obj(vec![("name", Json::str("solver dp")), ("p50_ms", Json::num(2.0))])],
+            vec![("twostage_vs_dp_obj_ratio".into(), Json::num(1.0))],
+        )
+        .unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.get("schema").and_then(|s| s.as_str()), Some("layermerge.bench.merge.v1"));
+        let names: Vec<&str> = j
+            .get("rows")
+            .and_then(|r| r.as_arr())
+            .unwrap()
+            .iter()
+            .filter_map(|r| r.get("name").and_then(|n| n.as_str()))
+            .collect();
+        assert!(names.contains(&"serve x") && names.contains(&"solver dp"), "{names:?}");
+        let d = j.get("derived").unwrap();
+        assert!(d.get("serving_tps").is_some());
+        assert!(d.get("twostage_vs_dp_obj_ratio").is_some());
+        // re-running the owner replaces, never duplicates
+        record(&["solver "], &["solver_", "twostage_"], vec![], vec![]).unwrap();
+        let j2 = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let rows2 = j2.get("rows").and_then(|r| r.as_arr()).unwrap();
+        assert_eq!(rows2.len(), 1, "solver row dropped, serve row kept");
+        std::env::remove_var("BENCH_OUT");
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

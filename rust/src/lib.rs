@@ -21,6 +21,7 @@ pub mod kernels;
 pub mod merge;
 pub mod model;
 pub mod pipeline;
+pub mod profile;
 pub mod report;
 pub mod runtime;
 pub mod serve;
@@ -34,6 +35,7 @@ pub mod prelude {
     pub use crate::ir::{Gates, Spec, Task};
     pub use crate::model::{Batch, Manifest, Model};
     pub use crate::pipeline::{Pipeline, PipelineCfg};
+    pub use crate::profile::Profiler;
     pub use crate::runtime::{Backend, HostBackend, LatencyStats, Runtime, Value};
     pub use crate::serve::{BatchPolicy, Engine, ServeCfg, Session, Ticket};
     pub use crate::solver::Solution;

@@ -1,8 +1,15 @@
 //! `layermerge` — CLI entrypoint for the LayerMerge reproduction.
 //!
 //! Subcommands:
-//!   compress --model M --budget F [--method layermerge|depth|layeronly]
+//!   compress --model M --budget F [--method layermerge|depth|layeronly|twostage]
 //!   tables   --model M                 build lookup tables
+//!   e2e      --model M --budget F      offline paper loop on the host
+//!                                      backend: profile -> solve ->
+//!                                      merge -> deploy -> measure,
+//!                                      predicted vs actual latency
+//!   frontier --model M                 budget sweep: speedup-vs-quality
+//!                                      frontier for every method on
+//!                                      shared host-measured tables
 //!   table1..table11, fig1..fig5, all   regenerate paper tables/figures
 //!   verify   --model M                 merged-vs-pruned numerics report
 //!   profile  --model M                 per-format latency breakdown
@@ -79,8 +86,19 @@ fn usage() -> &'static str {
     "layermerge <cmd> [flags]\n\
      \n\
      commands:\n\
-       compress   --model M --budget F [--method layermerge|depth|layeronly]\n\
+       compress   --model M --budget F [--method layermerge|depth|layeronly|twostage]\n\
        tables     --model M              build/load lookup tables\n\
+       solve      --model M --budget F   solve on existing/host tables and\n\
+                                         print the chosen spans (no\n\
+                                         fine-tuning; works on both backends)\n\
+       e2e        --model M --budget F   offline paper loop (host backend):\n\
+                                         profile -> solve -> merge -> deploy\n\
+                                         -> measure, reports predicted vs\n\
+                                         actual latency + speedup\n\
+       frontier   --model M --budgets F,F,..  sweep budget fractions for\n\
+                                         LayerMerge / TwoStage / LayerOnly /\n\
+                                         Channel on shared host tables and\n\
+                                         record the frontier to EXPERIMENTS.md\n\
        verify     --model M              merged-vs-pruned numerics check\n\
        profile    --model M              per-format latency breakdown\n\
        serve      --model M              micro-batched serving load test\n\
@@ -98,10 +116,12 @@ fn usage() -> &'static str {
        fig1..fig5                        regenerate a paper figure\n\
        all                               every table and figure\n\
      flags:\n\
-       --backend pjrt|host  execution backend (default pjrt).  host runs\n\
-                         the native kernels: no artifacts, no XLA —\n\
-                         serve/profile work from a fresh checkout over\n\
-                         the synthetic specs (hostnet, hostnet-tiny,\n\
+       --backend pjrt|host  execution backend.  Default: host when the\n\
+                         artifacts dir has no manifest.json (fresh\n\
+                         checkout), else pjrt.  host runs the native\n\
+                         kernels: no artifacts, no XLA — tables/solve/\n\
+                         e2e/frontier/serve/profile work over the\n\
+                         synthetic specs (hostnet, hostnet-tiny,\n\
                          hostchain, hostchain-tiny)\n\
        --artifacts DIR   (default ./artifacts)\n\
        --fast            analytical latency + short schedules (CI)\n\
@@ -154,6 +174,17 @@ fn usage() -> &'static str {
                          (default 25; 0 = none)\n"
 }
 
+/// `--method` flag shared by compress/solve on both backends.
+fn parse_method(args: &Args) -> Result<Method> {
+    match args.get("method").unwrap_or("layermerge") {
+        "layermerge" => Ok(Method::LayerMerge),
+        "depth" => Ok(Method::Depth),
+        "layeronly" => Ok(Method::LayerOnly),
+        "twostage" => Ok(Method::TwoStage),
+        m => bail!("unknown method {m} (expected layermerge|depth|layeronly|twostage)"),
+    }
+}
+
 fn build_cfg(args: &Args) -> PipelineCfg {
     let mut cfg = PipelineCfg::default();
     cfg.seed = args.usize_or("seed", 0) as u64;
@@ -191,10 +222,13 @@ fn main() -> Result<()> {
         args.get("artifacts").unwrap_or("artifacts"),
     );
     let cfg = build_cfg(&args);
-    let host = match args.get("backend").unwrap_or("pjrt") {
-        "host" => true,
-        "pjrt" => false,
-        b => bail!("unknown backend {b} (expected host|pjrt)"),
+    let host = match args.get("backend") {
+        Some("host") => true,
+        Some("pjrt") => false,
+        Some(b) => bail!("unknown backend {b} (expected host|pjrt)"),
+        // no flag: prefer the backend that can actually run — host when
+        // the artifacts dir is absent (fresh checkout), pjrt otherwise
+        None => !artifacts.join("manifest.json").exists(),
     };
     if host {
         // deployment-side commands on the native host backend: no
@@ -207,9 +241,14 @@ fn main() -> Result<()> {
             "fleet" => fleet_host(&ctx, model, &args),
             "chaos" => chaos_host(&ctx, model, &args),
             "profile" => profile_host(&ctx, model),
+            "tables" => tables_host(&ctx, model).map(|_| ()),
+            "solve" => solve_host(&ctx, model, &args),
+            "e2e" => e2e_cmd(&ctx, model, &args),
+            "frontier" => frontier_cmd(&ctx, model, &args),
             other => bail!(
-                "{other} needs the PJRT backend (gated graph / tables); \
-                 --backend host supports serve, serve-net, fleet, chaos, and profile"
+                "{other} needs the PJRT backend (gated graph / training); \
+                 --backend host supports tables, solve, e2e, frontier, \
+                 serve, serve-net, fleet, chaos, and profile"
             ),
         };
     }
@@ -219,12 +258,7 @@ fn main() -> Result<()> {
         "compress" => {
             let model = args.get("model").context("--model required")?;
             let budget = args.f64_or("budget", 0.65);
-            let method = match args.get("method").unwrap_or("layermerge") {
-                "layermerge" => Method::LayerMerge,
-                "depth" => Method::Depth,
-                "layeronly" => Method::LayerOnly,
-                m => bail!("unknown method {m}"),
-            };
+            let method = parse_method(&args)?;
             let mut pipe = ctx.pipeline(model)?;
             let c = pipe.run(method, budget)?;
             println!(
@@ -245,6 +279,12 @@ fn main() -> Result<()> {
                 t.entries.len(), t.orig_ms(), t.fixed_ms, t.lat_build_s, t.imp_build_s
             );
         }
+        "solve" => {
+            let model = args.get("model").context("--model required")?;
+            let mut pipe = ctx.pipeline(model)?;
+            let sol = pipe.solve(parse_method(&args)?, args.f64_or("budget", 0.65))?;
+            println!("{}", sol.summary());
+        }
         "verify" => {
             let model = args.get("model").context("--model required")?;
             verify(&ctx, model, args.f64_or("budget", 0.65))?;
@@ -261,7 +301,9 @@ fn main() -> Result<()> {
             let model = args.get("model").context("--model required")?;
             serve_net_pjrt(&ctx, model, &args)?;
         }
-        "fleet" => bail!("fleet runs on the native backend: pass --backend host"),
+        "fleet" | "e2e" | "frontier" => {
+            bail!("{} runs on the native backend: pass --backend host", args.cmd)
+        }
         "table1" => exp_tables::table1(&ctx)?,
         "table2" => exp_tables::table2(&ctx)?,
         "table3" => exp_tables::table3(&ctx)?,
@@ -671,13 +713,23 @@ fn fleet_host(ctx: &Ctx, model: &str, args: &Args) -> Result<()> {
     let engine = ctx.engine();
     let (spec, orig, merged) = host_plans(model)?;
     let fleet = Fleet::new(FleetCfg::default());
-    // seeds for the router's per-rung cost EWMA: rough priors in the
-    // right order (merged cheaper than original); online refinement from
-    // real dispatches takes over within a few batches
+    // seed the router's per-rung cost EWMA from the measured latency
+    // tables (cached under the repo root), so the very first request
+    // routes off real per-span costs; the online EWMA then refines the
+    // seed from live dispatches
+    let (_, flat) = layermerge::ir::synth::by_name(model).expect("checked by host_plans");
+    let t = layermerge::tables::build_host(
+        &spec, &flat, engine.backend(), &ctx.cfg.build, &ctx.repo,
+    )?;
+    println!(
+        "  rung cost seeds from tables: merged {}us, original {}us",
+        t.plan_seed_us(&merged),
+        t.plan_seed_us(&orig),
+    );
     for (name, weight) in [("interactive", 3usize), ("batch", 1)] {
         fleet.add_tenant(TenantCfg::new(name, weight, serve_policy(args)?))?;
-        fleet.deploy(name, &engine, &merged, Format::Fused, 300)?;
-        fleet.deploy(name, &engine, &orig, Format::Fused, 1_500)?;
+        fleet.deploy_seeded(name, &engine, &merged, Format::Fused, &t)?;
+        fleet.deploy_seeded(name, &engine, &orig, Format::Fused, &t)?;
     }
     let fs = fleet.stats();
     println!(
@@ -871,6 +923,96 @@ fn chaos_host(ctx: &Ctx, model: &str, args: &Args) -> Result<()> {
         if retention >= 0.9 { "OK: >= 0.90" } else { "below 0.90" },
     );
     anyhow::ensure!(resolved == requests, "a request vanished without a verdict");
+    Ok(())
+}
+
+/// `tables --backend host`: build (or load from cache) the lookup tables
+/// for a synthetic spec by measuring real span kernels on the native
+/// backend — the same `(i, j, k)` surrogate the PJRT arm builds, with no
+/// artifacts and no XLA.  Returns the tables for `solve`/`frontier`.
+fn tables_host(ctx: &Ctx, model: &str) -> Result<layermerge::tables::Tables> {
+    use layermerge::runtime::HostBackend;
+    let (spec, flat) = layermerge::ir::synth::by_name(model).with_context(|| {
+        format!(
+            "--backend host builds tables for synthetic specs ({}); {model} unknown",
+            layermerge::ir::synth::NAMES.join(", ")
+        )
+    })?;
+    let backend: Arc<dyn layermerge::runtime::Backend> = Arc::new(HostBackend::new());
+    let t = layermerge::tables::build_host(&spec, &flat, &backend, &ctx.cfg.build, &ctx.repo)?;
+    println!(
+        "{model} [host backend]: {} entries, orig ~{:.2}ms (fixed {:.2}ms), \
+         built lat {:.1}s imp {:.1}s",
+        t.entries.len(), t.orig_ms(), t.fixed_ms, t.lat_build_s, t.imp_build_s
+    );
+    Ok(t)
+}
+
+/// `solve --backend host`: solve the surrogate problem on host-built
+/// tables and print the chosen spans — no training anywhere in the loop.
+fn solve_host(ctx: &Ctx, model: &str, args: &Args) -> Result<()> {
+    let t = tables_host(ctx, model)?;
+    let (spec, _) = layermerge::ir::synth::by_name(model).expect("checked by tables_host");
+    let method = parse_method(args)?;
+    let sol = layermerge::pipeline::solve_tables(
+        &spec, &t, method, args.f64_or("budget", 0.65), ctx.cfg.p_disc,
+    )?;
+    println!("{} {}", method.name(), sol.summary());
+    Ok(())
+}
+
+/// `e2e --backend host`: the full offline paper loop — profile real span
+/// kernels into tables, solve Algorithm 1 (and the predecessor's
+/// two-stage DP on the same instance), merge, deploy, and measure the
+/// deployed plan — then report how well the table-sum prediction matched
+/// the measured latency.
+fn e2e_cmd(ctx: &Ctx, model: &str, args: &Args) -> Result<()> {
+    let budget = args.f64_or("budget", 0.65);
+    let r = layermerge::pipeline::e2e_host(model, budget, &ctx.cfg, &ctx.repo)?;
+    println!(
+        "e2e {model} @{budget} [host backend]{}:",
+        ctx.mode_tag()
+    );
+    println!(
+        "  original  : pred {:.4}ms  actual {:.4}ms  depth {}",
+        r.pred_orig_ms, r.actual_orig_ms, r.depth_before
+    );
+    println!(
+        "  merged    : pred {:.4}ms  actual {:.4}ms  depth {}  spans {:?}",
+        r.pred_merged_ms, r.actual_merged_ms, r.depth_after, r.spans
+    );
+    println!(
+        "  speedup   : pred {:.2}x  actual {:.2}x  (pred-vs-actual err {:.1}%)",
+        r.pred_speedup(), r.actual_speedup(), r.rel_err() * 100.0
+    );
+    println!(
+        "  solvers   : alg1 obj {:.4} in {:.2}ms | two-stage obj {:.4} in {:.2}ms",
+        r.dp_objective, r.dp_solve_ms, r.twostage_objective, r.twostage_solve_ms
+    );
+    Ok(())
+}
+
+/// `frontier --backend host`: sweep `--budgets` and emit the
+/// speedup-vs-quality frontier (LayerMerge / TwoStage / LayerOnly on
+/// shared host tables, plus the channel-pruning reference) to stdout and
+/// EXPERIMENTS.md.
+fn frontier_cmd(ctx: &Ctx, model: &str, args: &Args) -> Result<()> {
+    let fracs: Vec<f64> = match args.get("budgets") {
+        Some(s) => s
+            .split(',')
+            .map(|p| p.trim().parse::<f64>().with_context(|| format!("bad budget {p:?}")))
+            .collect::<Result<_>>()?,
+        None => vec![0.4, 0.5, 0.6, 0.7, 0.8, 0.9],
+    };
+    anyhow::ensure!(!fracs.is_empty(), "--budgets parsed to an empty list");
+    let pts = layermerge::report::frontier::emit(
+        model, &fracs, &ctx.cfg.build, ctx.cfg.p_disc, &ctx.repo, &ctx.experiments_md(),
+    )?;
+    let feasible = pts.iter().filter(|p| p.feasible).count();
+    println!(
+        "frontier {model}: {} points ({} feasible) -> {}",
+        pts.len(), feasible, ctx.experiments_md().display()
+    );
     Ok(())
 }
 

@@ -3,14 +3,17 @@
 //! sits on top of this module.
 
 use std::collections::BTreeSet;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
+use crate::baselines::twostage;
 use crate::exec::{Format, Plan};
-use crate::ir::{Gates, Task};
+use crate::ir::{Gates, Spec, Task};
 use crate::model::Model;
+use crate::profile::Profiler;
+use crate::runtime::{Backend, HostBackend};
 use crate::serve::Engine;
 use crate::solver::{self, depth, dp, layeronly};
 use crate::tables::{self, BuildCfg, Tables};
@@ -26,6 +29,9 @@ pub enum Method {
     Depth,
     /// Our layer-pruning variant (Eq. 8 knapsack).
     LayerOnly,
+    /// Kim et al. 2023's two-stage DP on the same tables
+    /// (`baselines::twostage`): identical objective, different solver.
+    TwoStage,
 }
 
 impl Method {
@@ -34,6 +40,7 @@ impl Method {
             Method::LayerMerge => "LayerMerge",
             Method::Depth => "Depth",
             Method::LayerOnly => "LayerOnly",
+            Method::TwoStage => "TwoStage",
         }
     }
 }
@@ -174,12 +181,13 @@ impl Pipeline {
         })
     }
 
-    /// Build or load the lookup tables (Sec. 3.2).
+    /// Build or load the lookup tables (Sec. 3.2) — latency measured
+    /// through the engine's backend, whatever it is.
     pub fn ensure_tables(&mut self) -> Result<&Tables> {
         if self.tables.is_none() {
             let t = tables::build(
                 &self.model,
-                self.engine.manifest(),
+                self.engine.backend(),
                 &self.gen,
                 &self.pretrained,
                 &self.cfg.build,
@@ -196,58 +204,7 @@ impl Pipeline {
         self.ensure_tables()?;
         let spec = self.model.spec.clone();
         let t = self.tables.as_ref().unwrap();
-        let l_max = spec.len();
-        let budget = budget_frac * t.orig_ms() - t.fixed_ms;
-        anyhow::ensure!(budget > 0.0, "budget below fixed costs");
-
-        match method {
-            Method::LayerMerge | Method::Depth => {
-                let arcs = t.arcs(l_max);
-                let sol = if method == Method::LayerMerge {
-                    dp::solve(&dp::DpInput { l_max, budget_ms: budget, p: p_disc, arcs })
-                } else {
-                    depth::solve(&spec, l_max, budget, p_disc, &arcs)
-                }
-                .with_context(|| format!("{:?}: no solution at {budget_frac}", method))?;
-                // C* = union of per-span kept sets (Sec. 3.2)
-                let mut c: BTreeSet<usize> = BTreeSet::new();
-                for &(i, j, k) in &sol.spans {
-                    c.extend(&t.entries[&(i, j, k)].kept);
-                }
-                if method == Method::Depth {
-                    c = (1..=l_max).collect(); // Depth keeps every conv
-                }
-                Ok(solver::Solution {
-                    a: sol.a,
-                    c,
-                    spans: sol.spans,
-                    objective: sol.objective,
-                    latency_est: sol.latency_est + t.fixed_ms,
-                })
-            }
-            Method::LayerOnly => {
-                let forced: Vec<bool> = std::iter::once(false)
-                    .chain((1..=l_max).map(|l| !spec.conv(l).conv_gated))
-                    .collect();
-                let sol = layeronly::solve(&layeronly::KnapsackInput {
-                    lat_ms: t.layer_lat.clone(),
-                    imp: t.layer_imp.clone(),
-                    forced,
-                    budget_ms: budget,
-                    p: p_disc,
-                })
-                .context("LayerOnly: no solution")?;
-                let a = layeronly::deploy_a(&spec, &sol.kept);
-                let spans = layeronly::deploy_spans(&spec, &sol.kept);
-                Ok(solver::Solution {
-                    a,
-                    c: sol.kept,
-                    spans,
-                    objective: sol.objective,
-                    latency_est: sol.latency_est + t.fixed_ms,
-                })
-            }
-        }
+        solve_tables(&spec, t, method, budget_frac, p_disc)
     }
 
     /// Fine-tune the pruned network, merge, deploy, and measure — the tail
@@ -386,6 +343,181 @@ impl Pipeline {
         );
         self.finetune_and_deploy(method, budget_frac, &sol, None, false)
     }
+}
+
+/// Solve for (A*, C*) on prebuilt tables — the method dispatch shared by
+/// [`Pipeline::solve`] and the offline host paths ([`e2e_host`], the
+/// frontier sweep).  `budget_frac` scales the table-estimated original
+/// latency; fixed costs are subtracted before and re-added to
+/// `latency_est` after, so every method optimizes the same budget.
+pub fn solve_tables(
+    spec: &Spec,
+    t: &Tables,
+    method: Method,
+    budget_frac: f64,
+    p_disc: usize,
+) -> Result<solver::Solution> {
+    let l_max = spec.len();
+    let budget = budget_frac * t.orig_ms() - t.fixed_ms;
+    anyhow::ensure!(budget > 0.0, "budget below fixed costs");
+
+    match method {
+        Method::LayerMerge | Method::Depth | Method::TwoStage => {
+            let arcs = t.arcs(l_max);
+            let input = dp::DpInput { l_max, budget_ms: budget, p: p_disc, arcs };
+            let sol = match method {
+                Method::LayerMerge => dp::solve(&input),
+                Method::TwoStage => twostage::solve(&input),
+                Method::Depth => {
+                    depth::solve(spec, l_max, budget, p_disc, &input.arcs)
+                }
+                Method::LayerOnly => unreachable!(),
+            }
+            .with_context(|| format!("{:?}: no solution at {budget_frac}", method))?;
+            // C* = union of per-span kept sets (Sec. 3.2)
+            let mut c: BTreeSet<usize> = BTreeSet::new();
+            for &(i, j, k) in &sol.spans {
+                c.extend(&t.entries[&(i, j, k)].kept);
+            }
+            if method == Method::Depth {
+                c = (1..=l_max).collect(); // Depth keeps every conv
+            }
+            Ok(solver::Solution {
+                a: sol.a,
+                c,
+                spans: sol.spans,
+                objective: sol.objective,
+                latency_est: sol.latency_est + t.fixed_ms,
+            })
+        }
+        Method::LayerOnly => {
+            let forced: Vec<bool> = std::iter::once(false)
+                .chain((1..=l_max).map(|l| !spec.conv(l).conv_gated))
+                .collect();
+            let sol = layeronly::solve(&layeronly::KnapsackInput {
+                lat_ms: t.layer_lat.clone(),
+                imp: t.layer_imp.clone(),
+                forced,
+                budget_ms: budget,
+                p: p_disc,
+            })
+            .context("LayerOnly: no solution")?;
+            let a = layeronly::deploy_a(spec, &sol.kept);
+            let spans = layeronly::deploy_spans(spec, &sol.kept);
+            Ok(solver::Solution {
+                a,
+                c: sol.kept,
+                spans,
+                objective: sol.objective,
+                latency_est: sol.latency_est + t.fixed_ms,
+            })
+        }
+    }
+}
+
+/// Outcome of one offline paper loop: profile → solve → merge → deploy →
+/// measure, all on one backend, with the table-predicted and
+/// actually-measured latencies side by side.
+#[derive(Debug, Clone)]
+pub struct E2eReport {
+    pub model: String,
+    pub budget_frac: f64,
+    /// Table-predicted latency of the original network (sum approximation).
+    pub pred_orig_ms: f64,
+    /// Table-predicted latency of the chosen plan (solver's estimate).
+    pub pred_merged_ms: f64,
+    /// Measured latency of the deployed original plan.
+    pub actual_orig_ms: f64,
+    /// Measured latency of the deployed merged plan.
+    pub actual_merged_ms: f64,
+    pub depth_before: usize,
+    pub depth_after: usize,
+    pub spans: Vec<(usize, usize, usize)>,
+    pub dp_objective: f64,
+    pub dp_solve_ms: f64,
+    pub twostage_objective: f64,
+    pub twostage_solve_ms: f64,
+}
+
+impl E2eReport {
+    /// Relative error of the table prediction against the deployed
+    /// measurement — the number the paper's whole premise rides on.
+    pub fn rel_err(&self) -> f64 {
+        (self.pred_merged_ms - self.actual_merged_ms).abs()
+            / self.actual_merged_ms.max(1e-9)
+    }
+
+    pub fn pred_speedup(&self) -> f64 {
+        self.pred_orig_ms / self.pred_merged_ms.max(1e-9)
+    }
+
+    pub fn actual_speedup(&self) -> f64 {
+        self.actual_orig_ms / self.actual_merged_ms.max(1e-9)
+    }
+}
+
+/// The full paper loop offline: build measured tables for a synthetic
+/// spec on the host backend, solve with Algorithm 1 **and** the two-stage
+/// baseline on the identical tables, deploy the DP's plan, and measure
+/// predicted-vs-actual latency.  No XLA, no artifacts, no Python.
+pub fn e2e_host(
+    model: &str,
+    budget_frac: f64,
+    cfg: &PipelineCfg,
+    cache_root: &Path,
+) -> Result<E2eReport> {
+    let (spec, flat) = crate::ir::synth::by_name(model)
+        .with_context(|| format!("unknown synthetic spec {model}"))?;
+    let backend: Arc<dyn Backend> = Arc::new(HostBackend::new());
+    let t = tables::build_host(&spec, &flat, &backend, &cfg.build, cache_root)?;
+
+    let l_max = spec.len();
+    let budget = budget_frac * t.orig_ms() - t.fixed_ms;
+    anyhow::ensure!(budget > 0.0, "budget below fixed costs");
+    let input = dp::DpInput {
+        l_max,
+        budget_ms: budget,
+        p: cfg.p_disc,
+        arcs: t.arcs(l_max),
+    };
+    let dp_sol = dp::solve(&input)
+        .with_context(|| format!("Algorithm 1 infeasible at {budget_frac}"))?;
+    let two_sol = twostage::solve(&input)
+        .with_context(|| format!("two-stage DP infeasible at {budget_frac}"))?;
+
+    let mut c: BTreeSet<usize> = BTreeSet::new();
+    for &(i, j, k) in &dp_sol.spans {
+        c.extend(&t.entries[&(i, j, k)].kept);
+    }
+    let merged = Arc::new(Plan::from_solution(&spec, &flat, &dp_sol.a, &c, &dp_sol.spans)?);
+    let orig = Arc::new(Plan::original(&spec, &flat)?);
+
+    // deploy + measure both plans through the same protocol that built
+    // the tables (Eager format — the per-op dispatch the entries model)
+    let prof = Profiler::new(
+        Arc::clone(&backend),
+        cfg.build.mode,
+        cfg.lat_warmup,
+        cfg.lat_iters,
+    );
+    let actual_merged_ms = prof.measure_plan(Arc::clone(&merged), Format::Eager)?.p50_ms;
+    let actual_orig_ms = prof.measure_plan(Arc::clone(&orig), Format::Eager)?.p50_ms;
+
+    Ok(E2eReport {
+        model: model.to_string(),
+        budget_frac,
+        pred_orig_ms: t.orig_ms(),
+        pred_merged_ms: dp_sol.latency_est + t.fixed_ms,
+        actual_orig_ms,
+        actual_merged_ms,
+        depth_before: orig.depth(),
+        depth_after: merged.depth(),
+        spans: dp_sol.spans,
+        dp_objective: dp_sol.objective,
+        dp_solve_ms: dp_sol.solve_ms,
+        twostage_objective: two_sol.objective,
+        twostage_solve_ms: two_sol.solve_ms,
+    })
 }
 
 /// The budget relaxation ladder behind [`Pipeline::solve_relaxed`]: try

@@ -1,6 +1,9 @@
 //! Experiment reporting: renders paper-style tables and appends them to
 //! EXPERIMENTS.md with a stable section marker per experiment, so reruns
-//! replace rather than duplicate.
+//! replace rather than duplicate.  [`frontier`] sweeps budget fractions
+//! into speedup-vs-quality frontiers on host-built tables.
+
+pub mod frontier;
 
 use std::path::Path;
 

@@ -55,6 +55,7 @@ use anyhow::{Context, Result};
 
 use crate::exec::{CompiledPlan, Format, Plan, WeightCache};
 use crate::ir::Task;
+use crate::tables::Tables;
 use crate::util::par;
 use crate::util::tensor::Tensor;
 
@@ -393,6 +394,23 @@ impl Fleet {
             Some(&self.shared.cache),
         )?;
         self.deploy_compiled(tenant, Arc::new(cp), seed_svc_us)
+    }
+
+    /// [`Fleet::deploy`] with the routing cost seeded from measured
+    /// latency tables: the seed is [`Tables::plan_seed_us`] — summing the
+    /// same per-span entries the DP solver optimized over — so the router
+    /// ranks the ladder correctly on the *first* request, before any
+    /// online EWMA signal exists.  The EWMA then refines (never replaces)
+    /// this seed as real service times arrive.
+    pub fn deploy_seeded(
+        &self,
+        tenant: &str,
+        engine: &Engine,
+        plan: &Arc<Plan>,
+        fmt: Format,
+        tables: &Tables,
+    ) -> Result<usize> {
+        self.deploy(tenant, engine, plan, fmt, tables.plan_seed_us(plan))
     }
 
     /// Deploy an arbitrary host function as a rung — the fleet analogue

@@ -1,11 +1,14 @@
 //! Lookup-table construction — the paper's Sec. 3.2 machinery.
 //!
 //! * Latency table T[i,j,k]: wall-clock of the merged layer's conv module,
-//!   measured through PJRT with the warm-up/average protocol (App. C), or
-//!   an analytical roofline model (fast mode / CI).
+//!   measured through any [`crate::runtime::Backend`] via
+//!   [`crate::profile::Profiler`] with the warm-up/average protocol
+//!   (App. C), or an analytical roofline model (fast mode / CI).
 //! * Importance table I[i,j,k] (Eq. 4): fine-tune the gated network for a
 //!   few steps with the (A~_ij, C~_ijk) gate configuration on a proxy data
-//!   stream, evaluate, and exponentiate the perf delta.
+//!   stream, evaluate, and exponentiate the perf delta ([`build`], which
+//!   needs the AOT gated graph); or a deterministic weight-magnitude
+//!   proxy for synthetic specs ([`build_host`], no artifacts at all).
 //! * Per-layer tables for the LayerOnly baseline (Eq. 8).
 //!
 //! Construction is embarrassingly parallel (the paper parallelizes across
@@ -14,20 +17,20 @@
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use crate::exec::Plan;
 use crate::ir::Spec;
-use crate::model::{sig_str, Manifest, Model};
-use crate::runtime::measure;
+use crate::model::Model;
+use crate::profile::Profiler;
+use crate::runtime::Backend;
 use crate::solver::csel;
 use crate::solver::dp::SpanArc;
 use crate::train::{proxy_perf, Gen};
 use crate::util::json::Json;
-use crate::util::rng::Rng;
-use crate::util::tensor::Tensor;
 
 /// One (i, j, k) table entry.
 #[derive(Debug, Clone)]
@@ -117,26 +120,55 @@ impl Tables {
         Ok(())
     }
 
+    /// Load a cached table set.  `None` means "rebuild", but the three
+    /// causes are no longer conflated: a missing file is the quiet
+    /// first-run path, a corrupt file is logged **and deleted** (so the
+    /// next build re-measures instead of re-hitting the same bad bytes),
+    /// and a fingerprint mismatch (different weights or measurement
+    /// protocol) is logged and left in place — it is a valid cache for
+    /// whoever built it.
     pub fn load(path: &Path, expect_fingerprint: u64) -> Option<Tables> {
         let text = std::fs::read_to_string(path).ok()?;
-        let j = Json::parse(&text).ok()?;
-        if j.req("fingerprint").as_f64()? as u64 != expect_fingerprint {
-            return None;
+        let parsed = Json::parse(&text).ok().and_then(|j| Tables::from_json(&j));
+        match parsed {
+            None => {
+                eprintln!(
+                    "[tables] corrupt cache {} — deleting it",
+                    path.display()
+                );
+                let _ = std::fs::remove_file(path);
+                None
+            }
+            Some((_, fp)) if fp != expect_fingerprint => {
+                eprintln!(
+                    "[tables] cache {} has fingerprint {fp:#x}, want {expect_fingerprint:#x} — rebuilding",
+                    path.display()
+                );
+                None
+            }
+            Some((t, _)) => Some(t),
         }
+    }
+
+    /// Parse the cache JSON; `None` on any structural defect (a missing
+    /// or mistyped key means the file is corrupt, not merely stale —
+    /// `get`, never the panicking `req`).
+    fn from_json(j: &Json) -> Option<(Tables, u64)> {
+        let fp = j.get("fingerprint")?.as_f64()? as u64;
         let mut entries = BTreeMap::new();
-        for e in j.req("entries").as_arr()? {
+        for e in j.get("entries")?.as_arr()? {
             let key = (
-                e.req("i").as_usize()?,
-                e.req("j").as_usize()?,
-                e.req("k").as_usize()?,
+                e.get("i")?.as_usize()?,
+                e.get("j")?.as_usize()?,
+                e.get("k")?.as_usize()?,
             );
             entries.insert(
                 key,
                 Entry {
-                    lat_ms: e.req("lat").as_f64()?,
-                    imp: e.req("imp").as_f64()?,
+                    lat_ms: e.get("lat")?.as_f64()?,
+                    imp: e.get("imp")?.as_f64()?,
                     kept: e
-                        .req("kept")
+                        .get("kept")?
                         .as_arr()?
                         .iter()
                         .filter_map(|v| v.as_usize())
@@ -144,26 +176,48 @@ impl Tables {
                 },
             );
         }
-        Some(Tables {
-            model: j.req("model").as_str()?.to_string(),
-            entries,
-            layer_lat: j
-                .req("layer_lat")
-                .as_arr()?
-                .iter()
-                .filter_map(|v| v.as_f64())
-                .collect(),
-            layer_imp: j
-                .req("layer_imp")
-                .as_arr()?
-                .iter()
-                .filter_map(|v| v.as_f64())
-                .collect(),
-            fixed_ms: j.req("fixed_ms").as_f64()?,
-            base_perf: j.req("base_perf").as_f64()?,
-            lat_build_s: j.req("lat_build_s").as_f64()?,
-            imp_build_s: j.req("imp_build_s").as_f64()?,
-        })
+        Some((
+            Tables {
+                model: j.get("model")?.as_str()?.to_string(),
+                entries,
+                layer_lat: j
+                    .get("layer_lat")?
+                    .as_arr()?
+                    .iter()
+                    .filter_map(|v| v.as_f64())
+                    .collect(),
+                layer_imp: j
+                    .get("layer_imp")?
+                    .as_arr()?
+                    .iter()
+                    .filter_map(|v| v.as_f64())
+                    .collect(),
+                fixed_ms: j.get("fixed_ms")?.as_f64()?,
+                base_perf: j.get("base_perf")?.as_f64()?,
+                lat_build_s: j.get("lat_build_s")?.as_f64()?,
+                imp_build_s: j.get("imp_build_s")?.as_f64()?,
+            },
+            fp,
+        ))
+    }
+
+    /// Table-predicted latency of a deployed plan, in microseconds (≥ 1)
+    /// — the measured seed for a serving rung's cost model.  Each step
+    /// takes its (i, j, k) entry's latency, falling back to the sum of
+    /// the member layers' solo latencies when that exact entry was never
+    /// tabulated (e.g. the original network's singleton spans with k
+    /// other than the tabulated options); fixed costs are added once.
+    pub fn plan_seed_us(&self, plan: &Plan) -> u64 {
+        let mut ms = self.fixed_ms;
+        for s in &plan.steps {
+            ms += match self.entries.get(&(s.i, s.j, s.merged.k)) {
+                Some(e) => e.lat_ms,
+                None => (s.i + 1..=s.j)
+                    .map(|l| self.layer_lat.get(l).copied().unwrap_or(0.0))
+                    .sum(),
+            };
+        }
+        ((ms * 1e3).round() as u64).max(1)
     }
 }
 
@@ -252,126 +306,15 @@ pub fn analytical_conv_ms(
     (flops / GFLOPS).max(bytes / GBPS) * 1e3 + DISPATCH_MS
 }
 
-/// Measure (or model) one conv signature's latency.
-fn conv_latency(
-    model: &Model,
-    man: &Manifest,
-    cfg: &BuildCfg,
-    b: usize,
-    h: usize,
-    w: usize,
-    ci: usize,
-    co: usize,
-    k: usize,
-    s: usize,
-    dw: bool,
-    act: &str,
-) -> Result<f64> {
-    if cfg.mode == LatencyMode::Analytical {
-        return Ok(analytical_conv_ms(b, h, w, ci, co, k, s, dw));
-    }
-    // Measure the `plain` module — the op the Eager ("PyTorch format")
-    // deployment actually dispatches.  (On XLA-CPU the act-fused variants
-    // compile to loop fusions that bypass the fast Eigen conv path, which
-    // would skew T against exactly the layers the solver merges.)
-    let _ = act;
-    let sig = sig_str(b, h, w, ci, co, k, s, dw);
-    let rel = man
-        .conv_art(&sig, "plain")
-        .with_context(|| format!("no conv artifact for {sig}"))?;
-    let exec = model.rt.load(&rel)?;
-    let mut rng = Rng::new(0x1a7e ^ (k as u64) << 8 ^ ci as u64);
-    let x = rand_tensor(&mut rng, &[b, h, w, ci]);
-    let wgt = rand_tensor(&mut rng, &[co, if dw { 1 } else { ci }, k, k]);
-    let bias = rand_tensor(&mut rng, &[co]);
-    let stats = measure(&exec, &[&x, &wgt, &bias], cfg.warmup, cfg.iters)?;
-    Ok(stats.p50_ms)
-}
-
-fn rand_tensor(rng: &mut Rng, dims: &[usize]) -> Tensor {
-    let n: usize = dims.iter().product();
-    Tensor::new(dims.to_vec(), (0..n).map(|_| rng.normal()).collect())
-}
-
-/// Fixed (non-conv) latency of a model: head / attention / upsample /
-/// group-norm / residual-add ops, summed once.
-fn fixed_latency(model: &Model, man: &Manifest, cfg: &BuildCfg) -> Result<f64> {
-    let sp = &model.spec;
-    let b = sp.batch;
-    if cfg.mode == LatencyMode::Analytical {
-        // ops are bandwidth-bound elementwise kernels
-        let mut ms = 0.0;
-        for c in &sp.convs {
-            let bytes = 4.0 * (b * c.h_out() * c.w_out() * c.cout) as f64;
-            if c.add_from.is_some() {
-                ms += bytes * 2.0 / 25.0e9 * 1e3 + 0.02;
-            }
-            if c.gn {
-                ms += bytes * 2.0 / 25.0e9 * 1e3 + 0.02;
-            }
-            if c.barrier_reason == "attention" || c.barrier_reason == "upsample" {
-                ms += bytes * 3.0 / 25.0e9 * 1e3 + 0.05;
-            }
-        }
-        return Ok(ms + 0.05);
-    }
-    let mut ms = 0.0;
-    let mut rng = Rng::new(0xf1);
-    // classifier head
-    if sp.num_classes > 0 {
-        if let Some(rel) = man.ew_art(&format!("head_{}", sp.name)) {
-            let exec = model.rt.load(&rel)?;
-            let last = sp.convs.last().unwrap();
-            let x = rand_tensor(&mut rng, &[b, last.h_out(), last.w_out(), sp.head_hidden]);
-            let w = rand_tensor(&mut rng, &[sp.head_hidden, sp.num_classes]);
-            let bias = rand_tensor(&mut rng, &[sp.num_classes]);
-            ms += measure(&exec, &[&x, &w, &bias], cfg.warmup, cfg.iters)?.p50_ms;
-        }
-    }
-    for c in &sp.convs {
-        let shape = [b, c.h_out(), c.w_out(), c.cout];
-        let base = format!("b{}h{}w{}c{}", b, c.h_out(), c.w_out(), c.cout);
-        if c.add_from.is_some() {
-            if let Some(rel) = man.ew_art(&format!("add_{base}")) {
-                let exec = model.rt.load(&rel)?;
-                let x = rand_tensor(&mut rng, &shape);
-                let y = rand_tensor(&mut rng, &shape);
-                ms += measure(&exec, &[&x, &y], cfg.warmup, cfg.iters)?.p50_ms;
-            }
-        }
-        if c.gn {
-            if let Some(rel) = man.ew_art(&format!("gn{}_{base}", c.gn_groups)) {
-                let exec = model.rt.load(&rel)?;
-                let x = rand_tensor(&mut rng, &shape);
-                let s1 = rand_tensor(&mut rng, &[c.cout]);
-                let s2 = rand_tensor(&mut rng, &[c.cout]);
-                ms += measure(&exec, &[&x, &s1, &s2], cfg.warmup, cfg.iters)?.p50_ms;
-            }
-        }
-        if c.barrier_reason == "attention" {
-            if let Some(rel) = man.ew_art(&format!("attn_{base}")) {
-                let exec = model.rt.load(&rel)?;
-                let x = rand_tensor(&mut rng, &shape);
-                let q = rand_tensor(&mut rng, &[c.cout, 3 * c.cout]);
-                let o = rand_tensor(&mut rng, &[c.cout, c.cout]);
-                ms += measure(&exec, &[&x, &q, &o], cfg.warmup, cfg.iters)?.p50_ms;
-            }
-        }
-        if c.barrier_reason == "upsample" {
-            if let Some(rel) = man.ew_art(&format!("up_{base}")) {
-                let exec = model.rt.load(&rel)?;
-                let x = rand_tensor(&mut rng, &shape);
-                ms += measure(&exec, &[&x], cfg.warmup, cfg.iters)?.p50_ms;
-            }
-        }
-    }
-    Ok(ms)
-}
-
 /// Build (or load from cache) the full table set for a model.
+///
+/// Latency is measured through `backend` (any [`Backend`] — span/layer
+/// signatures are lowered as minimal single-step plans by
+/// [`Profiler`]); importance runs the paper's gated-network proxy
+/// training, which needs the AOT gated graph and training stream.
 pub fn build(
     model: &Model,
-    man: &Manifest,
+    backend: &Arc<dyn Backend>,
     gen: &Gen,
     pretrained: &[f32],
     cfg: &BuildCfg,
@@ -393,34 +336,22 @@ pub fn build(
     }
     let sp = &model.spec;
     let l_max = sp.len();
+    let prof = Profiler::from_cfg(Arc::clone(backend), cfg);
 
     // ---- latency ----------------------------------------------------------
     let t0 = Instant::now();
     let mut layer_lat = vec![0.0f64; l_max + 1];
     for c in &sp.convs {
-        layer_lat[c.idx] = conv_latency(
-            model, man, cfg, sp.batch, c.h_in, c.w_in, c.cin, c.cout, c.k,
-            c.stride, c.depthwise, if c.act == "none" { "none" } else { &c.act },
-        )?;
+        layer_lat[c.idx] = prof.layer_ms(sp, c.idx)?;
     }
-    let fixed_ms = fixed_latency(model, man, cfg)?;
+    let fixed_ms = prof.fixed_ms(sp)?;
 
     // span entries
     let spans = sp.spans();
     let mut lat_map: BTreeMap<(usize, usize, usize), f64> = BTreeMap::new();
     for &(i, j) in &spans {
-        let first = sp.conv(i + 1);
-        let act = {
-            let cj = sp.conv(j);
-            if cj.act == "none" { "relu" } else { cj.act.as_str() }
-        };
         for k in sp.kernel_options(i, j) {
-            let lat = conv_latency(
-                model, man, cfg, sp.batch, first.h_in, first.w_in, first.cin,
-                sp.conv(j).cout, k, sp.span_stride(i, j),
-                sp.span_depthwise(i, j), act,
-            )?;
-            lat_map.insert((i, j, k), lat);
+            lat_map.insert((i, j, k), prof.measure_span(sp, i, j, k)?);
         }
     }
     let lat_build_s = t0.elapsed().as_secs_f64();
@@ -524,6 +455,116 @@ pub fn build(
     Ok(tables)
 }
 
+/// Build (or load from cache) tables for a bare `(spec, flat)` pair
+/// against any backend — no manifest, no gated graph, no training stream.
+///
+/// This is the offline paper loop's entry point: latency is genuinely
+/// measured (or modeled) through [`Profiler`], while importance uses a
+/// deterministic weight-magnitude proxy instead of proxy training —
+/// dropping convs costs their share of the network's total conv L1 mass
+/// (the same saliency [`csel`] ranks kept sets by):
+/// `imp(i,j,k) = exp(-dropped_l1 / total_l1)`, and per-layer
+/// keep-importance for LayerOnly is `exp(l1_l / total_l1)`.  The gated
+/// proxy-training importance of [`build`] remains the PJRT path.
+pub fn build_host(
+    spec: &Spec,
+    flat: &[f32],
+    backend: &Arc<dyn Backend>,
+    cfg: &BuildCfg,
+    cache_root: &Path,
+) -> Result<Tables> {
+    // distinct fingerprint domain from `build`: keyed by the measurement
+    // protocol (warmup/iters) rather than proxy-training steps
+    let fp = fingerprint(flat)
+        ^ (cfg.warmup as u64) << 48
+        ^ (cfg.iters as u64) << 16
+        ^ 0x5eed;
+    let cache = Tables::cache_path(cache_root, &spec.name, cfg.mode);
+    if !cfg.force {
+        if let Some(t) = Tables::load(&cache, fp) {
+            eprintln!(
+                "[tables] {}: loaded cache ({} entries)",
+                spec.name,
+                t.entries.len()
+            );
+            return Ok(t);
+        }
+    }
+    let l_max = spec.len();
+    let prof = Profiler::from_cfg(Arc::clone(backend), cfg);
+
+    // ---- latency ----------------------------------------------------------
+    let t0 = Instant::now();
+    let mut layer_lat = vec![0.0f64; l_max + 1];
+    for c in &spec.convs {
+        layer_lat[c.idx] = prof.layer_ms(spec, c.idx)?;
+    }
+    let fixed_ms = prof.fixed_ms(spec)?;
+    let lat_build_s = t0.elapsed().as_secs_f64();
+
+    // ---- entries (latency measured, importance from L1 mass) --------------
+    let t1 = Instant::now();
+    let l1 = csel::layer_l1_norms(spec, flat);
+    let total_l1: f64 = spec
+        .convs
+        .iter()
+        .filter(|c| c.conv_gated)
+        .map(|c| l1[c.idx])
+        .sum::<f64>()
+        .max(1e-12);
+    let mut entries: BTreeMap<(usize, usize, usize), Entry> = BTreeMap::new();
+    for &(i, j) in &spec.spans() {
+        for k in spec.kernel_options(i, j) {
+            let kept = csel::select(spec, &l1, i, j, k)
+                .with_context(|| format!("csel infeasible ({i},{j},{k})"))?;
+            let dropped: f64 = ((i + 1)..=j)
+                .filter(|&l| spec.conv(l).conv_gated && !kept.contains(&l))
+                .map(|l| l1[l])
+                .sum();
+            let imp = (-dropped / total_l1).exp();
+            // identical elision rule to `build`: a span whose every conv
+            // is dropped deploys as a pure identity
+            let elidable = kept.is_empty()
+                && spec.conv(j).add_from.is_none()
+                && !spec.conv(j).gn
+                && spec.conv(j).barrier_reason.is_empty();
+            let lat = if elidable {
+                0.0
+            } else {
+                prof.measure_span(spec, i, j, k)?
+            };
+            entries.insert((i, j, k), Entry { lat_ms: lat, imp, kept });
+        }
+    }
+    let mut layer_imp = vec![0.0f64; l_max + 1];
+    for c in &spec.convs {
+        if c.conv_gated {
+            layer_imp[c.idx] = (l1[c.idx] / total_l1).exp();
+        }
+    }
+    let imp_build_s = t1.elapsed().as_secs_f64();
+
+    let tables = Tables {
+        model: spec.name.clone(),
+        entries,
+        layer_lat,
+        layer_imp,
+        fixed_ms,
+        base_perf: 0.0,
+        lat_build_s,
+        imp_build_s,
+    };
+    tables.save(&cache, fp)?;
+    eprintln!(
+        "[tables] {}: {} entries on {} backend, lat {:.1}s",
+        spec.name,
+        tables.entries.len(),
+        backend.name(),
+        lat_build_s
+    );
+    Ok(tables)
+}
+
 /// The paper's diffusion normalization (App. A): divide negative diffusion
 /// loss by the pretrained loss.  Classification metrics pass through.
 fn normalize_perf(spec: &Spec, metric: f32, base_metric: f32) -> f32 {
@@ -577,5 +618,150 @@ mod tests {
         let b = fingerprint(&[1.0, 2.0, 3.0001]);
         assert_ne!(a, b);
         assert_eq!(a, fingerprint(&[1.0, 2.0, 3.0]));
+    }
+
+    fn scratch_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("lm_tables_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn tiny_tables() -> Tables {
+        let mut entries = BTreeMap::new();
+        entries.insert(
+            (0, 1, 3),
+            Entry { lat_ms: 1.25, imp: 0.9, kept: [1].into_iter().collect() },
+        );
+        entries.insert(
+            (1, 2, 1),
+            Entry { lat_ms: 0.5, imp: 0.7, kept: BTreeSet::new() },
+        );
+        Tables {
+            model: "tiny".into(),
+            entries,
+            layer_lat: vec![0.0, 1.5, 0.75],
+            layer_imp: vec![0.0, 1.1, 1.05],
+            fixed_ms: 0.25,
+            base_perf: 0.5,
+            lat_build_s: 0.0,
+            imp_build_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn cache_round_trip_preserves_tables() {
+        let dir = scratch_dir("roundtrip");
+        let t = tiny_tables();
+        let path = dir.join("tiny.tables.json");
+        t.save(&path, 0xfeed).unwrap();
+        let got = Tables::load(&path, 0xfeed).expect("round trip");
+        assert_eq!(got.model, t.model);
+        assert_eq!(got.entries.len(), t.entries.len());
+        let e = &got.entries[&(0, 1, 3)];
+        assert!((e.lat_ms - 1.25).abs() < 1e-12 && (e.imp - 0.9).abs() < 1e-12);
+        assert_eq!(e.kept, [1].into_iter().collect());
+        assert_eq!(got.layer_lat, t.layer_lat);
+        assert!((got.fixed_ms - 0.25).abs() < 1e-12);
+        assert!((got.orig_ms() - t.orig_ms()).abs() < 1e-12);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fingerprint_mismatch_keeps_the_file() {
+        let dir = scratch_dir("mismatch");
+        let path = dir.join("tiny.tables.json");
+        tiny_tables().save(&path, 1).unwrap();
+        assert!(Tables::load(&path, 2).is_none());
+        assert!(path.exists(), "a valid cache for other weights must survive");
+        assert!(Tables::load(&path, 1).is_some(), "still loadable by its owner");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_cache_is_deleted() {
+        let dir = scratch_dir("corrupt");
+        for garbage in ["{not json", r#"{"fingerprint": 3}"#] {
+            let path = dir.join("tiny.tables.json");
+            std::fs::write(&path, garbage).unwrap();
+            assert!(Tables::load(&path, 3).is_none());
+            assert!(!path.exists(), "corrupt file must be removed: {garbage}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_cache_is_quietly_none() {
+        let dir = scratch_dir("missing");
+        let path = dir.join("absent.tables.json");
+        assert!(Tables::load(&path, 0).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn plan_seed_us_prefers_entries_and_falls_back() {
+        let (spec, flat) = crate::ir::synth::by_name("hostchain-tiny").unwrap();
+        let dir = scratch_dir("seed");
+        let cfg = BuildCfg {
+            mode: LatencyMode::Analytical,
+            force: true,
+            ..BuildCfg::default()
+        };
+        let backend: Arc<dyn Backend> = Arc::new(crate::runtime::HostBackend::new());
+        let t = build_host(&spec, &flat, &backend, &cfg, &dir).unwrap();
+        let mut plan = Plan::original(&spec, &flat).unwrap();
+        // every singleton span of the original plan is tabulated
+        let expect_ms: f64 = plan
+            .steps
+            .iter()
+            .map(|s| t.entries[&(s.i, s.j, s.merged.k)].lat_ms)
+            .sum::<f64>()
+            + t.fixed_ms;
+        assert_eq!(
+            t.plan_seed_us(&plan),
+            ((expect_ms * 1e3).round() as u64).max(1)
+        );
+        // an untabulated kernel size falls back to the member layers' sum
+        plan.steps[0].merged.k = 99;
+        let fb_ms: f64 = t.layer_lat[1]
+            + plan.steps[1..]
+                .iter()
+                .map(|s| t.entries[&(s.i, s.j, s.merged.k)].lat_ms)
+                .sum::<f64>()
+            + t.fixed_ms;
+        assert_eq!(
+            t.plan_seed_us(&plan),
+            ((fb_ms * 1e3).round() as u64).max(1)
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn build_host_importance_ranks_by_l1_mass() {
+        let (spec, flat) = crate::ir::synth::by_name("hostchain-tiny").unwrap();
+        let dir = scratch_dir("imp");
+        let cfg = BuildCfg {
+            mode: LatencyMode::Analytical,
+            force: true,
+            ..BuildCfg::default()
+        };
+        let backend: Arc<dyn Backend> = Arc::new(crate::runtime::HostBackend::new());
+        let t = build_host(&spec, &flat, &backend, &cfg, &dir).unwrap();
+        // keeping everything loses nothing; dropping layers costs mass
+        for (&(i, j, _), e) in &t.entries {
+            assert!(e.imp > 0.0 && e.imp <= 1.0 + 1e-12, "imp {} at ({i},{j})", e.imp);
+        }
+        // the full-keep singleton entry has imp exactly 1
+        let full = &t.entries[&(1, 2, 3)];
+        assert_eq!(full.kept, [2].into_iter().collect());
+        assert!((full.imp - 1.0).abs() < 1e-12);
+        // gated layers get positive keep-importance for LayerOnly
+        for c in &spec.convs {
+            if c.conv_gated {
+                assert!(t.layer_imp[c.idx] > 1.0, "layer {}", c.idx);
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -1,0 +1,130 @@
+//! Baseline-solver equivalence: the predecessor's two-stage DP
+//! (`baselines::twostage`, Kim et al. 2023) must agree with Algorithm 1
+//! (`solver::dp`) on the *objective* for every instance — both solve the
+//! same surrogate problem on the same tables; only the recursion shape
+//! (and therefore the solve time) differs.  This pins the claim the
+//! solvers bench and `e2e` report build on: the obj ratio in
+//! BENCH_merge.json is exactly 1, only `twostage_vs_dp_solve_speedup`
+//! is interesting.
+
+use layermerge::baselines::twostage;
+use layermerge::solver::dp::{self, DpInput, SpanArc};
+use layermerge::util::prop::check_res;
+use layermerge::util::rng::Rng;
+
+fn gen_instance(r: &mut Rng) -> DpInput {
+    let l = 2 + r.below(4);
+    let p = 40 + r.below(60);
+    let mut arcs = vec![Vec::new(); l + 1];
+    for j in 1..=l {
+        for i in 0..j {
+            for k in [1usize, 3, 5] {
+                if r.uniform() < 0.7 {
+                    arcs[j].push(SpanArc {
+                        i,
+                        k,
+                        lat_ms: r.range(0.1, 2.0) as f64,
+                        imp: r.uniform() * 3.0,
+                    });
+                }
+            }
+        }
+    }
+    DpInput { l_max: l, budget_ms: r.range(0.5, 5.0) as f64, p, arcs }
+}
+
+/// Both DPs round arcs to the same latency grid, so objective equality is
+/// exact (up to float noise), and feasibility must agree too.
+#[test]
+fn twostage_matches_alg1_objective() {
+    check_res("twostage == alg1 objective", 120, gen_instance, |inst| {
+        match (dp::solve(inst), twostage::solve(inst)) {
+            (None, None) => Ok(()),
+            (Some(a), Some(b)) => {
+                if (a.objective - b.objective).abs() > 1e-9 {
+                    return Err(format!(
+                        "objective {} (alg1) vs {} (twostage)",
+                        a.objective, b.objective
+                    ));
+                }
+                // both reconstructions must be real chains 0 -> L whose
+                // spans exist in the instance
+                for sol in [&a, &b] {
+                    let mut at = 0usize;
+                    for &(i, j, k) in &sol.spans {
+                        if i != at || j <= i {
+                            return Err(format!("broken chain {:?}", sol.spans));
+                        }
+                        if !inst.arcs[j].iter().any(|x| x.i == i && x.k == k) {
+                            return Err(format!("span ({i},{j},{k}) has no arc"));
+                        }
+                        at = j;
+                    }
+                    if at != inst.l_max {
+                        return Err(format!("chain stops at {at} of {}", inst.l_max));
+                    }
+                }
+                Ok(())
+            }
+            (a, b) => Err(format!(
+                "feasibility mismatch: alg1 {:?} vs twostage {:?}",
+                a.map(|s| s.objective),
+                b.map(|s| s.objective)
+            )),
+        }
+    });
+}
+
+/// The collapse step may only ever *remove* dominated arcs — the fronts
+/// it keeps are a subset of the input, and every kept arc is undominated
+/// within its (j, i) group.
+#[test]
+fn collapse_keeps_undominated_subsets() {
+    check_res("collapse fronts are undominated", 80, gen_instance, |inst| {
+        let fronts = twostage::collapse(inst);
+        if fronts.len() != inst.arcs.len() {
+            return Err("front shape mismatch".into());
+        }
+        for (j, front) in fronts.iter().enumerate() {
+            for a in front {
+                if !inst.arcs[j]
+                    .iter()
+                    .any(|x| x.i == a.i && x.k == a.k && (x.lat_ms - a.lat_ms).abs() < 1e-12)
+                {
+                    return Err(format!("front arc {a:?} not in input arcs[{j}]"));
+                }
+                // undominated: no same-span arc that is both cheaper (in
+                // rounded latency) and at least as valuable
+                let unit = inst.budget_ms / inst.p as f64;
+                let cost = |l: f64| (l / unit).floor() as usize;
+                if front.iter().any(|x| {
+                    x.i == a.i
+                        && !(x.k == a.k && (x.lat_ms - a.lat_ms).abs() < 1e-12)
+                        && cost(x.lat_ms) <= cost(a.lat_ms)
+                        && x.imp > a.imp + 1e-12
+                }) {
+                    return Err(format!("dominated arc {a:?} survived collapse at j={j}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// A fixed instance where the two-stage structure is visible: the fronts
+/// shrink the arc set but the winner is still found.
+#[test]
+fn twostage_picks_the_known_optimum() {
+    let arcs = vec![
+        vec![],
+        vec![SpanArc { i: 0, k: 3, lat_ms: 1.0, imp: 1.0 }],
+        vec![
+            SpanArc { i: 1, k: 3, lat_ms: 1.0, imp: 1.0 },
+            SpanArc { i: 0, k: 5, lat_ms: 1.2, imp: 2.5 },
+        ],
+    ];
+    let inst = DpInput { l_max: 2, budget_ms: 1.5, p: 100, arcs };
+    let sol = twostage::solve(&inst).unwrap();
+    assert_eq!(sol.spans, vec![(0, 2, 5)]);
+    assert!((sol.objective - 2.5).abs() < 1e-9);
+}

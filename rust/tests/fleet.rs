@@ -279,6 +279,78 @@ fn hot_swap_completes_in_flight_on_old_plan_with_zero_drops() {
 }
 
 // ---------------------------------------------------------------------------
+// Table-seeded routing
+// ---------------------------------------------------------------------------
+
+/// Rung costs seeded from measured latency tables
+/// ([`Fleet::deploy_seeded`]): with real deployed plans and **zero**
+/// warmup traffic, the very first request must route to the merged
+/// (cheaper) rung — even though the expensive rung was deployed first,
+/// so correct routing proves the table seed, not ladder order.
+/// Attribution is by bit-exact output comparison against each plan's
+/// direct forward on the same backend.
+#[test]
+fn table_seeded_router_picks_merged_rung_on_first_request() {
+    use layermerge::ir::synth;
+    use layermerge::tables::{self, BuildCfg, LatencyMode};
+
+    let (spec, flat) = synth::by_name("hostchain-tiny").unwrap();
+    let engine = Engine::host();
+    let bcfg = BuildCfg {
+        mode: LatencyMode::Measured,
+        warmup: 1,
+        iters: 3,
+        force: true,
+        ..BuildCfg::default()
+    };
+    let cache = std::env::temp_dir().join(format!("lm_fleet_seed_{}", std::process::id()));
+    std::fs::create_dir_all(&cache).unwrap();
+    let t = tables::build_host(&spec, &flat, engine.backend(), &bcfg, &cache).unwrap();
+
+    let orig = Arc::new(Plan::original(&spec, &flat).unwrap());
+    let (a, c, spans) = layermerge::solver::depth::greedy_full_solution(&spec);
+    let merged = Arc::new(Plan::from_solution(&spec, &flat, &a, &c, &spans).unwrap());
+    assert!(
+        t.plan_seed_us(&merged) < t.plan_seed_us(&orig),
+        "table seeds must rank the merged plan cheaper: {}us vs {}us",
+        t.plan_seed_us(&merged),
+        t.plan_seed_us(&orig),
+    );
+
+    let fleet = Fleet::new(cfg(1));
+    fleet.add_tenant(TenantCfg::new("t", 1, BatchPolicy::Greedy)).unwrap();
+    // expensive rung FIRST: a correct first route proves the seed
+    fleet.deploy_seeded("t", &engine, &orig, Format::Fused, &t).unwrap();
+    fleet.deploy_seeded("t", &engine, &merged, Format::Fused, &t).unwrap();
+
+    // one full-batch request (no padding, no prior traffic)
+    let n: usize = spec.batch * spec.h * spec.w * spec.c;
+    let x = Tensor::new(
+        vec![spec.batch, spec.h, spec.w, spec.c],
+        (0..n).map(|i| (i as f32 * 0.37).sin()).collect(),
+    );
+    let y = fleet
+        .submit("t", x.clone(), None, None)
+        .unwrap()
+        .wait_coded()
+        .expect("first request must be served");
+
+    let y_merged = engine.infer(&merged, &x, None, Format::Fused).unwrap();
+    let y_orig = engine.infer(&orig, &x, None, Format::Fused).unwrap();
+    assert_eq!(
+        y.data, y_merged.data,
+        "first request must run on the table-seeded cheapest (merged) rung"
+    );
+    if y_orig.data != y_merged.data {
+        assert_ne!(y.data, y_orig.data, "output matches the expensive rung");
+    }
+    let rs = fleet.router_stats();
+    assert!(rs.hits >= 1, "router stats: {rs:?}");
+    assert_eq!(rs.sheds, 0, "router stats: {rs:?}");
+    fleet.shutdown();
+}
+
+// ---------------------------------------------------------------------------
 // Pool lifecycle
 // ---------------------------------------------------------------------------
 

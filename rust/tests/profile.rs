@@ -1,0 +1,186 @@
+//! Backend-generic profiling layer, end to end on the host backend:
+//! `Profiler::measure_span` must agree with deploying the same span as a
+//! real single-step plan, and the whole offline loop
+//! (`pipeline::e2e_host` — profile -> solve -> merge -> deploy ->
+//! measure) must predict the deployed plan's latency within a generous
+//! bound.  No artifacts and no XLA anywhere in this file.
+
+use std::sync::Arc;
+
+use layermerge::exec::{CompiledPlan, Format, Plan, Step};
+use layermerge::ir::synth;
+use layermerge::merge::MergedConv;
+use layermerge::pipeline::{self, PipelineCfg};
+use layermerge::profile::Profiler;
+use layermerge::runtime::{Backend, HostBackend};
+use layermerge::tables::{BuildCfg, LatencyMode};
+use layermerge::util::rng::Rng;
+use layermerge::util::tensor::Tensor;
+
+fn scratch(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("lm_profile_it_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn host_profiler(iters: usize) -> Profiler {
+    Profiler::new(Arc::new(HostBackend::new()), LatencyMode::Measured, 1, iters)
+}
+
+/// Build the span (i, j] at kernel `k` as a standalone one-step plan —
+/// the deployment-side realization of the signature `measure_span` times.
+fn single_span_plan(sp: &layermerge::ir::Spec, i: usize, j: usize, k: usize) -> Plan {
+    let first = sp.conv(i + 1);
+    let (ci, co) = (first.cin, sp.conv(j).cout);
+    let (s, dw) = (sp.span_stride(i, j), sp.span_depthwise(i, j));
+    let mut rng = Rng::new(0x7e57);
+    let wn = co * if dw { 1 } else { ci } * k * k;
+    let weight = Tensor::new(
+        vec![co, if dw { 1 } else { ci }, k, k],
+        (0..wn).map(|_| rng.normal()).collect(),
+    );
+    let step = Step {
+        i: 0,
+        j: 1,
+        merged: MergedConv {
+            i: 0,
+            j: 1,
+            weight,
+            bias: (0..co).map(|_| rng.normal()).collect(),
+            k,
+            stride: s,
+            depthwise: dw,
+        },
+        h_in: first.h_in,
+        w_in: first.w_in,
+        cin: ci,
+        act: None,
+        gn: None,
+        res: None,
+        concat: None,
+        time_bias: None,
+        stash_as: None,
+        post: vec![],
+    };
+    Plan {
+        spec_name: format!("test-span-{i}-{j}-{k}"),
+        task: layermerge::ir::Task::Classify,
+        batch: sp.batch,
+        steps: vec![step],
+        head: None,
+        temb: None,
+        l_total: 1,
+    }
+}
+
+/// `measure_span` and a deployed single-span plan time the same kernel
+/// through the same protocol, so they must land within timing noise of
+/// each other.  The bound is deliberately generous (8x either way) —
+/// this guards against *structural* mismatches (wrong geometry, wrong
+/// stride, wrong format), not scheduler jitter.
+#[test]
+fn measure_span_agrees_with_deployed_single_span_plan() {
+    let (sp, _) = synth::by_name("hostchain-tiny").unwrap();
+    let prof = host_profiler(5);
+    for (i, j, k) in [(0usize, 2usize, 3usize), (1, 3, 3), (2, 4, 3)] {
+        let span_ms = prof.measure_span(&sp, i, j, k).unwrap();
+        let plan = single_span_plan(&sp, i, j, k);
+        let backend: Arc<dyn Backend> = Arc::clone(prof.backend());
+        let cp = CompiledPlan::lower(Arc::new(plan), backend, Format::Eager).unwrap();
+        let plan_ms = cp.measure(1, 5).unwrap().p50_ms;
+        assert!(span_ms > 0.0 && plan_ms > 0.0, "({i},{j},{k}): {span_ms} / {plan_ms}");
+        let ratio = span_ms / plan_ms;
+        assert!(
+            (0.125..=8.0).contains(&ratio),
+            "span ({i},{j},{k}): measure_span {span_ms:.5}ms vs deployed {plan_ms:.5}ms \
+             (ratio {ratio:.2}) — structural mismatch, not noise"
+        );
+    }
+}
+
+/// The profiler must be able to measure a full deployed plan too — the
+/// "actual" side of the e2e report — and a merged plan of the same spec
+/// must not come out slower than ~the original by more than noise.
+#[test]
+fn measure_plan_runs_on_original_and_merged() {
+    let (sp, flat) = synth::by_name("hostchain-tiny").unwrap();
+    let prof = host_profiler(5);
+    let orig = Arc::new(Plan::original(&sp, &flat).unwrap());
+    let (a, c, spans) = layermerge::solver::depth::greedy_full_solution(&sp);
+    let merged = Arc::new(Plan::from_solution(&sp, &flat, &a, &c, &spans).unwrap());
+    let o = prof.measure_plan(orig, Format::Eager).unwrap();
+    let m = prof.measure_plan(merged, Format::Eager).unwrap();
+    assert!(o.p50_ms > 0.0 && m.p50_ms > 0.0);
+    assert_eq!(o.iters, 5);
+    assert!(
+        m.p50_ms < o.p50_ms * 4.0,
+        "greedy-merged ({:.4}ms) wildly slower than original ({:.4}ms)",
+        m.p50_ms,
+        o.p50_ms
+    );
+}
+
+/// The full offline loop: measured host tables -> Algorithm 1 -> merge ->
+/// deploy -> measure.  The table-sum prediction and the measured deployed
+/// latency are different protocols over the same kernels, so the relative
+/// error is pinned only under a generous bound; the structural facts
+/// (depth shrinks, both solvers agree, everything positive) are exact.
+#[test]
+fn e2e_host_prediction_tracks_measurement() {
+    let cfg = PipelineCfg {
+        build: BuildCfg {
+            mode: LatencyMode::Measured,
+            warmup: 1,
+            iters: 3,
+            force: true,
+            ..BuildCfg::default()
+        },
+        lat_warmup: 1,
+        lat_iters: 3,
+        ..PipelineCfg::default()
+    };
+    let r = pipeline::e2e_host("hostchain-tiny", 0.6, &cfg, &scratch("e2e")).unwrap();
+    assert!(r.pred_orig_ms > 0.0 && r.actual_orig_ms > 0.0);
+    assert!(r.pred_merged_ms > 0.0 && r.actual_merged_ms > 0.0);
+    assert!(r.depth_after <= r.depth_before, "{} -> {}", r.depth_before, r.depth_after);
+    assert!(!r.spans.is_empty());
+    // predicted merged latency respects the budget the DP solved for, up
+    // to the floor-discretization slack (<= l_max/p of the budget)
+    assert!(r.pred_merged_ms <= r.pred_orig_ms * 0.6 * 1.05 + 1e-6);
+    // the two DPs solve the identical instance: same objective exactly
+    assert!(
+        (r.dp_objective - r.twostage_objective).abs() < 1e-9,
+        "alg1 {} vs twostage {}",
+        r.dp_objective,
+        r.twostage_objective
+    );
+    // generous: the sum-approximation plus per-dispatch noise on a tiny
+    // spec; catches order-of-magnitude modeling bugs, not jitter
+    assert!(
+        r.rel_err() < 2.5,
+        "table prediction off by {:.0}% (pred {:.4}ms vs actual {:.4}ms)",
+        r.rel_err() * 100.0,
+        r.pred_merged_ms,
+        r.actual_merged_ms
+    );
+}
+
+/// Frontier emission over host tables: every (method, budget) point lands
+/// in EXPERIMENTS.md exactly once, under the stable section marker.
+#[test]
+fn frontier_emits_to_experiments_md() {
+    let dir = scratch("frontier");
+    let md = dir.join("EXPERIMENTS.md");
+    let _ = std::fs::remove_file(&md);
+    let cfg = BuildCfg { mode: LatencyMode::Analytical, force: true, ..BuildCfg::default() };
+    let pts =
+        layermerge::report::frontier::emit("hostchain-tiny", &[0.7], &cfg, 100, &dir, &md)
+            .unwrap();
+    assert_eq!(pts.len(), layermerge::report::frontier::METHODS.len() + 1);
+    let s = std::fs::read_to_string(&md).unwrap();
+    assert!(s.contains("<!-- exp:frontier:hostchain-tiny -->"), "missing marker:\n{s}");
+    // re-emitting replaces the section instead of appending a duplicate
+    layermerge::report::frontier::emit("hostchain-tiny", &[0.7], &cfg, 100, &dir, &md).unwrap();
+    let s2 = std::fs::read_to_string(&md).unwrap();
+    assert_eq!(s2.matches("exp:frontier:hostchain-tiny").count(), 2, "begin + end only");
+}

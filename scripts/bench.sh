@@ -14,6 +14,10 @@
 #     shed rate, p99-of-admitted; skips cleanly with no loopback),
 #     and the multi-tenant fleet (`fleet_*`: weight-dedup bytes,
 #     routed-vs-pinned-biggest goodput) (read-modify-write)
+#   * solvers          — Algorithm 1 vs the predecessor's two-stage DP
+#     vs the LayerOnly knapsack at paper scale
+#     (`twostage_vs_dp_*`), plus one offline e2e loop on measured
+#     host tables (`e2e_pred_vs_actual_err`) (read-modify-write)
 #
 # Usage:
 #   scripts/bench.sh              # host-only benches, no artifacts needed
@@ -28,3 +32,4 @@ cd "$(dirname "$0")/../rust"
 cargo bench --bench merge_ops ${1:+"$@"}
 cargo bench --bench runtime_dispatch
 cargo bench --bench serving
+cargo bench --bench solvers

@@ -37,6 +37,23 @@ cargo test -q --test fleet
 echo "== cargo test -q --test chaos =="
 cargo test -q --test chaos
 
+# solver-baseline equivalence by name: the predecessor's two-stage DP
+# must match Algorithm 1's objective on every random instance
+echo "== cargo test -q --test baselines =="
+cargo test -q --test baselines
+
+# backend-generic profiling layer by name: measure_span vs a deployed
+# single-span plan, plus the offline e2e loop's pred-vs-actual bound
+echo "== cargo test -q --test profile =="
+cargo test -q --test profile
+
+# the offline paper loop through the CLI: measured host tables -> DP ->
+# merge -> deploy -> measure, no artifacts and no XLA anywhere
+echo "== e2e smoke (host backend) =="
+BENCH_SMOKE=1 cargo run --release --quiet -- e2e \
+    --backend host --model hostchain-tiny --budget 0.6 \
+    --lat-warmup 1 --lat-iters 3 --force
+
 # a short fixed-seed chaos soak through the CLI drill: the whole stack
 # (FaultBackend engine -> TCP tier -> FaultProxy -> RetryClient) under a
 # pinned seed, so the invariant report is reproducible run to run
