@@ -20,7 +20,9 @@ use std::sync::Arc;
 use layermerge::bench::{bench, bench_iters, smoke, stats_json};
 use layermerge::exec::{CompiledPlan, Format, Plan};
 use layermerge::ir::synth;
-use layermerge::kernels::{gemm, gemm_packed, PackedB};
+use layermerge::kernels::{
+    gemm, gemm_packed, gemm_packed_epi_i8, gemm_packed_epi_isa, Isa, PackedB, PackedBI8,
+};
 use layermerge::merge::{dirac, expand_depthwise, merge_kernels, merge_kernels_ref};
 use layermerge::runtime::{Backend, HostBackend};
 use layermerge::util::json::Json;
@@ -176,7 +178,10 @@ fn main() -> anyhow::Result<()> {
 
     // register-blocked micro-kernel over packed panels vs the axpy GEMM
     // (acceptance target: packed beats axpy at >= 256^3)
-    println!("== GEMM micro-kernel (packed panels) vs axpy ==");
+    println!(
+        "== GEMM micro-kernel (packed panels) vs axpy [isa {}] ==",
+        layermerge::kernels::isa().name()
+    );
     let gemm_dims: &[usize] = if smoke() { &[48] } else { &[128, 256, 384] };
     for &d in gemm_dims {
         let a: Vec<f32> = (0..d * d).map(|_| rng.normal()).collect();
@@ -202,6 +207,45 @@ fn main() -> anyhow::Result<()> {
                 "packed_gemm_speedup_256".into(),
                 Json::num(axpy.p50_ms / packed.p50_ms),
             ));
+        }
+
+        // SIMD win vs the scalar-forced kernel, and int8 win vs f32-SIMD,
+        // at the acceptance shape (every shape in smoke so CI exercises
+        // the forced-ISA and quantized bench paths)
+        if d == 256 || smoke() {
+            let scalar = bench(&format!("scalar_gemm {d}x{d}x{d}"), 2, budget_ms, || {
+                c.fill(0.0);
+                gemm_packed_epi_isa(Isa::Scalar, d, &a, &bp, &mut c, None);
+                std::hint::black_box(&c);
+            });
+            println!(
+                "{}  (simd {:.2}x vs scalar)",
+                scalar.row(),
+                scalar.p50_ms / packed.p50_ms
+            );
+            let bpi = PackedBI8::pack(d, d, &b);
+            let int8 = bench(&format!("int8_gemm {d}x{d}x{d}"), 2, budget_ms, || {
+                c.fill(0.0);
+                gemm_packed_epi_i8(d, &a, &bpi, &mut c, None, None);
+                std::hint::black_box(&c);
+            });
+            println!(
+                "{}  (int8 {:.2}x vs f32-simd)",
+                int8.row(),
+                packed.p50_ms / int8.p50_ms
+            );
+            rows.push(stats_json(&scalar));
+            rows.push(stats_json(&int8));
+            if d == 256 {
+                derived.push((
+                    "packed_gemm_simd_speedup".into(),
+                    Json::num(scalar.p50_ms / packed.p50_ms),
+                ));
+                derived.push((
+                    "int8_speedup".into(),
+                    Json::num(packed.p50_ms / int8.p50_ms),
+                ));
+            }
         }
     }
 
@@ -266,9 +310,10 @@ fn main() -> anyhow::Result<()> {
     layermerge::bench::record(
         &[
             "merge_kernels_", "merge_inverted_residual", "span_merge ",
-            "forward ", "gemm_axpy ", "packed_gemm ", "par ", "steady_forward ",
+            "forward ", "gemm_axpy ", "packed_gemm ", "scalar_gemm ",
+            "int8_gemm ", "par ", "steady_forward ",
         ],
-        &["merge_", "forward_", "packed_gemm_", "pool_", "steady_"],
+        &["merge_", "forward_", "packed_gemm_", "int8_", "pool_", "steady_"],
         rows,
         derived,
     )

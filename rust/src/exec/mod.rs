@@ -46,7 +46,7 @@ use anyhow::{Context, Result};
 use crate::ir::{Spec, Task};
 use crate::kernels::{self, Act};
 use crate::merge::{span_merge, MergedConv};
-use crate::runtime::{Backend, LatencyStats, OpDesc, OpHandle, Value};
+use crate::runtime::{Backend, LatencyStats, OpDesc, OpHandle, Value, WeightFormat};
 use crate::util::par;
 use crate::util::tensor::Tensor;
 
@@ -302,8 +302,9 @@ impl Plan {
 /// every repeated operand becomes an `Arc` refcount bump instead of a
 /// fresh upload.  Keys are a 64-bit FNV-1a over (layout tag, dims, f32
 /// bits): the layout tag separates plain uploads from `upload_weight`
-/// packings (plain vs depthwise conv pack), so two tensors with equal
-/// bytes but different execution layouts never alias.
+/// packings (plain vs depthwise vs int8-quantized dense conv pack, per
+/// the backend's [`WeightFormat`]), so two tensors with equal bytes but
+/// different execution layouts never alias.
 ///
 /// Byte accounting feeds `serve::fleet::FleetStats`:
 /// [`WeightCache::unique_bytes`] is what the deduped fleet actually
@@ -357,7 +358,15 @@ impl WeightCache {
     ) -> Result<Value> {
         let tag = match desc {
             None => 0u8,
-            Some(OpDesc::Conv { depthwise, .. }) => 1 + u8::from(*depthwise),
+            Some(OpDesc::Conv { depthwise, .. }) => {
+                // dense convs lower per the backend's weight format;
+                // depthwise stays f32 in every format (see upload_weight)
+                if !*depthwise && be.weight_format() == WeightFormat::Int8 {
+                    4
+                } else {
+                    1 + u8::from(*depthwise)
+                }
+            }
             Some(_) => 3,
         };
         let k = Self::key(tag, t);
@@ -717,6 +726,7 @@ impl CompiledPlan {
             None => None,
         };
         let input_slot = plan.steps.first().and_then(|f| slot_of.get(&f.i).copied());
+        let weight_format = backend.weight_format();
         Ok(CompiledPlan {
             fmt,
             task: plan.task,
@@ -727,6 +737,7 @@ impl CompiledPlan {
             input_slot,
             n_slots: slot_of.len(),
             n_stash: stash_of.len(),
+            weight_format,
             backend,
             plan,
         })
@@ -853,6 +864,9 @@ pub struct CompiledPlan {
     input_slot: Option<usize>,
     n_slots: usize,
     n_stash: usize,
+    /// The backend's weight format at lower time — recorded so serving
+    /// stats / reports stay attributable even through backend decorators.
+    weight_format: WeightFormat,
 }
 
 fn run_op(
@@ -883,6 +897,11 @@ impl CompiledPlan {
     /// here — see `Backend::uploads` / `Backend::downloads`).
     pub fn backend(&self) -> &Arc<dyn Backend> {
         &self.backend
+    }
+
+    /// The weight format this plan's operands were lowered into.
+    pub fn weight_format(&self) -> WeightFormat {
+        self.weight_format
     }
 
     /// Expected input tensor dims `[batch, h, w, c]` (None: empty plan).
@@ -1105,6 +1124,9 @@ mod tests {
         // same bytes under a different execution layout must not alias
         assert_ne!(WeightCache::key(0, &a), WeightCache::key(1, &a));
         assert_ne!(WeightCache::key(1, &a), WeightCache::key(2, &a));
+        // the int8 dense-conv layout is its own key space too
+        assert_ne!(WeightCache::key(4, &a), WeightCache::key(1, &a));
+        assert_ne!(WeightCache::key(4, &a), WeightCache::key(0, &a));
         // same bytes, different shape must not alias
         let c = Tensor::new(vec![3, 2], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
         assert_ne!(WeightCache::key(0, &a), WeightCache::key(0, &c));

@@ -31,6 +31,9 @@ use crate::util::arena::Arena;
 use crate::util::par;
 use crate::util::tensor::Tensor;
 
+mod simd;
+pub use simd::{available_isas, isa, Isa};
+
 /// Below this many FLOPs a GEMM runs serially — pool dispatch is cheap
 /// but a small product finishes before a parked worker wakes.
 const PAR_FLOP_MIN: usize = 1 << 21;
@@ -181,8 +184,41 @@ pub fn gemm_packed(m: usize, a: &[f32], bp: &PackedB, c: &mut [f32]) {
 
 /// [`gemm_packed`] with the epilogue fused into the tile loop: each row
 /// block gets bias/activation/residual applied right after its last
-/// panel, instead of a second pass over C from memory.
+/// panel, instead of a second pass over C from memory.  The inner tile
+/// sweep dispatches on the process-wide [`isa()`] (AVX2+FMA / NEON /
+/// scalar), selected once at first use.
 pub fn gemm_packed_epi(m: usize, a: &[f32], bp: &PackedB, c: &mut [f32], epi: Option<&Epilogue>) {
+    gemm_packed_epi_inner(isa(), m, a, bp, c, epi);
+}
+
+/// [`gemm_packed_epi`] with the inner-kernel ISA forced instead of
+/// detected — the hook parity tests and the `packed_gemm_simd_speedup`
+/// bench use to compare kernels inside one process.  Panics if `isa_sel`
+/// is not in [`available_isas`] (the SIMD kernels are `unsafe` precisely
+/// because the caller vouches for hardware support).
+pub fn gemm_packed_epi_isa(
+    isa_sel: Isa,
+    m: usize,
+    a: &[f32],
+    bp: &PackedB,
+    c: &mut [f32],
+    epi: Option<&Epilogue>,
+) {
+    assert!(
+        available_isas().contains(&isa_sel),
+        "ISA {isa_sel:?} is not available on this host"
+    );
+    gemm_packed_epi_inner(isa_sel, m, a, bp, c, epi);
+}
+
+fn gemm_packed_epi_inner(
+    isa_sel: Isa,
+    m: usize,
+    a: &[f32],
+    bp: &PackedB,
+    c: &mut [f32],
+    epi: Option<&Epilogue>,
+) {
     let (k, n) = (bp.k, bp.n);
     assert_eq!(a.len(), m * k, "A is {m}x{k}");
     assert_eq!(c.len(), m * n, "C is {m}x{n}");
@@ -201,12 +237,39 @@ pub fn gemm_packed_epi(m: usize, a: &[f32], bp: &PackedB, c: &mut [f32], epi: Op
         let r0 = ci * rows_per;
         let rows = chunk.len() / n;
         if k > 0 {
-            gemm_packed_rows(r0, rows, k, n, a, &bp.data, chunk);
+            gemm_packed_rows_isa(isa_sel, r0, rows, k, n, a, &bp.data, chunk);
         }
         if let Some(e) = epi {
             epilogue_rows(chunk, n, r0, e);
         }
     });
+}
+
+/// Route one row-chunk tile sweep to the selected inner kernel.  The
+/// vector arms only exist on their architecture; anything else (including
+/// a foreign `Isa` value on the wrong arch, which `gemm_packed_epi_isa`
+/// already rejects) lands on the scalar reference kernel.
+#[allow(clippy::too_many_arguments)]
+fn gemm_packed_rows_isa(
+    isa_sel: Isa,
+    r0: usize,
+    rows: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    bdata: &[f32],
+    c_chunk: &mut [f32],
+) {
+    match isa_sel {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Isa::Avx2 is only produced by runtime feature detection
+        // (isa() / available_isas()), which verified avx2+fma.
+        Isa::Avx2 => unsafe { simd::x86::gemm_rows_f32(r0, rows, k, n, a, bdata, c_chunk) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: Isa::Neon is only produced by runtime feature detection.
+        Isa::Neon => unsafe { simd::arm::gemm_rows_f32(r0, rows, k, n, a, bdata, c_chunk) },
+        _ => gemm_packed_rows(r0, rows, k, n, a, bdata, c_chunk),
+    }
 }
 
 /// Serial micro-kernel sweep: rows `[r0, r0 + rows)` of C against every
@@ -272,6 +335,262 @@ fn gemm_packed_rows(
 }
 
 // ---------------------------------------------------------------------------
+// int8 per-channel quantized panels
+// ---------------------------------------------------------------------------
+
+/// `B` quantized to int8 with **symmetric per-output-column scales** and
+/// packed into the same NR-wide zero-padded panel layout as [`PackedB`].
+/// `deq(q[kk][j]) = q * scales[j]`; zero-max columns get scale 1.0 so
+/// dequantization is always well-defined.  Weights are quantized once
+/// (at `CompiledPlan::lower` via `Backend::upload_weight`); activations
+/// stay f32 and are quantized dynamically per row at GEMM time.
+pub struct PackedBI8 {
+    k: usize,
+    n: usize,
+    data: Vec<i8>,
+    scales: Vec<f32>,
+}
+
+impl PackedBI8 {
+    pub fn pack(k: usize, n: usize, b: &[f32]) -> PackedBI8 {
+        assert_eq!(b.len(), k * n, "B is {k}x{n}");
+        let mut scales = vec![1.0f32; n];
+        for (j, s) in scales.iter_mut().enumerate() {
+            let mut mx = 0.0f32;
+            for kk in 0..k {
+                mx = mx.max(b[kk * n + j].abs());
+            }
+            if mx > 0.0 {
+                *s = mx / 127.0;
+            }
+        }
+        let np = n.div_ceil(GEMM_NR.max(1));
+        let mut data = vec![0i8; np * k * GEMM_NR];
+        for p in 0..np {
+            let j0 = p * GEMM_NR;
+            let w = GEMM_NR.min(n - j0);
+            let panel = &mut data[p * k * GEMM_NR..(p + 1) * k * GEMM_NR];
+            for kk in 0..k {
+                for j in 0..w {
+                    let q = (b[kk * n + j0 + j] / scales[j0 + j]).round();
+                    panel[kk * GEMM_NR + j] = q.clamp(-127.0, 127.0) as i8;
+                }
+            }
+        }
+        PackedBI8 { k, n, data, scales }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Per-output-column dequantization scales (length n).
+    pub fn scales(&self) -> &[f32] {
+        &self.scales
+    }
+}
+
+/// View the first `len` bytes of an f32 scratch buffer as i8 — the arena
+/// only vends `Vec<f32>`, and the quantized-A scratch must come from it
+/// to keep the steady-state forward allocation-free.  Sound: i8 has
+/// alignment 1 and no validity niche, and the arena hands back
+/// initialized memory.
+fn as_i8_mut(v: &mut [f32], len: usize) -> &mut [i8] {
+    assert!(len <= v.len() * 4, "i8 view larger than backing f32 buffer");
+    unsafe { std::slice::from_raw_parts_mut(v.as_mut_ptr() as *mut i8, len) }
+}
+
+/// `C += deq(quant(A) · Bq)` over int8 panels, epilogue fused — the
+/// quantized twin of [`gemm_packed_epi`].  Each parallel row-chunk
+/// quantizes **its own** A rows (symmetric per-row scale, scratch from
+/// the worker's arena shard), sweeps the int8 tiles with i32
+/// accumulators, and dequantizes into C at tile-store time while the
+/// accumulators are still in registers; bias/act/residual then run on
+/// the cache-hot chunk.  `arena: None` falls back to heap scratch.
+pub fn gemm_packed_epi_i8(
+    m: usize,
+    a: &[f32],
+    bp: &PackedBI8,
+    c: &mut [f32],
+    epi: Option<&Epilogue>,
+    arena: Option<&Arena>,
+) {
+    gemm_packed_epi_i8_inner(isa(), m, a, bp, c, epi, arena);
+}
+
+/// [`gemm_packed_epi_i8`] with the inner-kernel ISA forced — see
+/// [`gemm_packed_epi_isa`].
+pub fn gemm_packed_epi_i8_isa(
+    isa_sel: Isa,
+    m: usize,
+    a: &[f32],
+    bp: &PackedBI8,
+    c: &mut [f32],
+    epi: Option<&Epilogue>,
+    arena: Option<&Arena>,
+) {
+    assert!(
+        available_isas().contains(&isa_sel),
+        "ISA {isa_sel:?} is not available on this host"
+    );
+    gemm_packed_epi_i8_inner(isa_sel, m, a, bp, c, epi, arena);
+}
+
+fn gemm_packed_epi_i8_inner(
+    isa_sel: Isa,
+    m: usize,
+    a: &[f32],
+    bp: &PackedBI8,
+    c: &mut [f32],
+    epi: Option<&Epilogue>,
+    arena: Option<&Arena>,
+) {
+    let (k, n) = (bp.k, bp.n);
+    assert_eq!(a.len(), m * k, "A is {m}x{k}");
+    assert_eq!(c.len(), m * n, "C is {m}x{n}");
+    if let Some(e) = epi {
+        assert_eq!(e.bias.len(), n, "epilogue bias length vs n");
+        if let Some(r) = e.res {
+            assert_eq!(r.len(), m * n, "epilogue residual vs C");
+        }
+    }
+    if m == 0 || n == 0 {
+        return;
+    }
+    let threads = gemm_threads(2 * m * k.max(1) * n);
+    let rows_per = m.div_ceil(threads * 4).max(1);
+    par::par_chunks_mut(c, rows_per * n, threads, |ci, chunk| {
+        let r0 = ci * rows_per;
+        let rows = chunk.len() / n;
+        if k > 0 {
+            let mut aqbuf = take_buf(arena, (rows * k).div_ceil(4), false);
+            let mut asc = take_buf(arena, rows, false);
+            let aq = as_i8_mut(&mut aqbuf, rows * k);
+            for i in 0..rows {
+                let arow = &a[(r0 + i) * k..][..k];
+                let mut mx = 0.0f32;
+                for &v in arow {
+                    mx = mx.max(v.abs());
+                }
+                let s = if mx > 0.0 { mx / 127.0 } else { 1.0 };
+                asc[i] = s;
+                let inv = 1.0 / s;
+                for (kk, &v) in arow.iter().enumerate() {
+                    aq[i * k + kk] = (v * inv).round().clamp(-127.0, 127.0) as i8;
+                }
+            }
+            gemm_packed_rows_i8_isa(isa_sel, rows, k, n, aq, &asc, &bp.data, &bp.scales, chunk);
+            give_buf(arena, aqbuf);
+            give_buf(arena, asc);
+        }
+        if let Some(e) = epi {
+            epilogue_rows(chunk, n, r0, e);
+        }
+    });
+}
+
+/// Route one int8 row-chunk sweep: AVX2 on x86-64, scalar everywhere
+/// else (including NEON — see `simd::arm`).
+#[allow(clippy::too_many_arguments)]
+fn gemm_packed_rows_i8_isa(
+    isa_sel: Isa,
+    rows: usize,
+    k: usize,
+    n: usize,
+    aq: &[i8],
+    ascale: &[f32],
+    bdata: &[i8],
+    bscale: &[f32],
+    c_chunk: &mut [f32],
+) {
+    match isa_sel {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Isa::Avx2 is only produced by runtime feature detection.
+        Isa::Avx2 => unsafe {
+            simd::x86::gemm_rows_i8(rows, k, n, aq, ascale, bdata, bscale, c_chunk)
+        },
+        _ => gemm_packed_rows_i8(rows, k, n, aq, ascale, bdata, bscale, c_chunk),
+    }
+}
+
+/// Scalar int8 micro-kernel sweep (reference fallback and parity
+/// oracle): full MR×NR tiles accumulate in i32 registers, edge rows run
+/// a per-row sweep; dequantization (`* ascale[row] * bscale[col]`) is
+/// applied at the clipped store.  `aq` / `ascale` are chunk-local.
+#[allow(clippy::too_many_arguments)]
+fn gemm_packed_rows_i8(
+    rows: usize,
+    k: usize,
+    n: usize,
+    aq: &[i8],
+    ascale: &[f32],
+    bdata: &[i8],
+    bscale: &[f32],
+    c_chunk: &mut [f32],
+) {
+    let np = n.div_ceil(GEMM_NR);
+    let mut i0 = 0;
+    while i0 < rows {
+        let mr = GEMM_MR.min(rows - i0);
+        for p in 0..np {
+            let j0 = p * GEMM_NR;
+            let nw = GEMM_NR.min(n - j0);
+            let panel = &bdata[p * k * GEMM_NR..(p + 1) * k * GEMM_NR];
+            if mr == GEMM_MR {
+                let a0 = &aq[i0 * k..][..k];
+                let a1 = &aq[(i0 + 1) * k..][..k];
+                let a2 = &aq[(i0 + 2) * k..][..k];
+                let a3 = &aq[(i0 + 3) * k..][..k];
+                let mut acc = [[0i32; GEMM_NR]; GEMM_MR];
+                for kk in 0..k {
+                    let b = &panel[kk * GEMM_NR..kk * GEMM_NR + GEMM_NR];
+                    let (v0, v1, v2, v3) =
+                        (a0[kk] as i32, a1[kk] as i32, a2[kk] as i32, a3[kk] as i32);
+                    for j in 0..GEMM_NR {
+                        let bv = b[j] as i32;
+                        acc[0][j] += v0 * bv;
+                        acc[1][j] += v1 * bv;
+                        acc[2][j] += v2 * bv;
+                        acc[3][j] += v3 * bv;
+                    }
+                }
+                for (i, arow) in acc.iter().enumerate() {
+                    let s = ascale[i0 + i];
+                    let crow = &mut c_chunk[(i0 + i) * n + j0..][..nw];
+                    for (j, cv) in crow.iter_mut().enumerate() {
+                        *cv += arow[j] as f32 * s * bscale[j0 + j];
+                    }
+                }
+            } else {
+                for i in 0..mr {
+                    let arow = &aq[(i0 + i) * k..][..k];
+                    let mut acc = [0i32; GEMM_NR];
+                    for (kk, &av) in arow.iter().enumerate() {
+                        if av != 0 {
+                            let b = &panel[kk * GEMM_NR..kk * GEMM_NR + nw];
+                            let av = av as i32;
+                            for (j, &bv) in b.iter().enumerate() {
+                                acc[j] += av * bv as i32;
+                            }
+                        }
+                    }
+                    let s = ascale[i0 + i];
+                    let crow = &mut c_chunk[(i0 + i) * n + j0..][..nw];
+                    for (j, cv) in crow.iter_mut().enumerate() {
+                        *cv += acc[j] as f32 * s * bscale[j0 + j];
+                    }
+                }
+            }
+        }
+        i0 += mr;
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Packed convolution weights
 // ---------------------------------------------------------------------------
 
@@ -283,6 +602,7 @@ fn gemm_packed_rows(
 /// pay the transpose once per weight instead of once per call.
 pub enum PackedConv {
     Dense { co: usize, ci: usize, k: usize, panels: PackedB },
+    DenseI8 { co: usize, ci: usize, k: usize, panels: PackedBI8 },
     Depthwise { c: usize, k: usize, wt: Vec<f32> },
 }
 
@@ -320,21 +640,54 @@ impl PackedConv {
         }
     }
 
+    /// Dense conv weight lowered to **int8 per-output-channel quantized**
+    /// panels ([`PackedBI8`]): same im2col transpose as [`pack`], then
+    /// symmetric per-`co`-column quantization.  Depthwise weights stay
+    /// f32 (their direct kernel never goes through the GEMM) — callers
+    /// gate on `!depthwise` and fall back to [`pack`].
+    ///
+    /// [`pack`]: PackedConv::pack
+    pub fn pack_i8(w: &Tensor) -> PackedConv {
+        assert_eq!(w.dims[2], w.dims[3], "square kernels only");
+        let (co, ci, k) = (w.dims[0], w.dims[1], w.dims[2]);
+        let kk = k * k * ci;
+        let mut wt = vec![0.0f32; kk * co];
+        for o in 0..co {
+            for c in 0..ci {
+                for a in 0..k {
+                    for b in 0..k {
+                        wt[((a * k + b) * ci + c) * co + o] =
+                            w.data[((o * ci + c) * k + a) * k + b];
+                    }
+                }
+            }
+        }
+        PackedConv::DenseI8 { co, ci, k, panels: PackedBI8::pack(kk, co, &wt) }
+    }
+
     pub fn k(&self) -> usize {
         match self {
-            PackedConv::Dense { k, .. } | PackedConv::Depthwise { k, .. } => *k,
+            PackedConv::Dense { k, .. }
+            | PackedConv::DenseI8 { k, .. }
+            | PackedConv::Depthwise { k, .. } => *k,
         }
     }
 
     pub fn out_channels(&self) -> usize {
         match self {
-            PackedConv::Dense { co, .. } => *co,
+            PackedConv::Dense { co, .. } | PackedConv::DenseI8 { co, .. } => *co,
             PackedConv::Depthwise { c, .. } => *c,
         }
     }
 
     pub fn depthwise(&self) -> bool {
         matches!(self, PackedConv::Depthwise { .. })
+    }
+
+    /// True for the int8-quantized dense layout — what the weight-cache
+    /// key and `/stats` attribution discriminate on.
+    pub fn quantized(&self) -> bool {
+        matches!(self, PackedConv::DenseI8 { .. })
     }
 
     /// VALID conv with this packed weight — the one-shot helper for
@@ -383,49 +736,86 @@ pub fn conv2d_valid_packed(
     assert!(stride >= 1);
     match pc {
         PackedConv::Dense { co, ci, k, panels } => {
-            let (co, ci, k) = (*co, *ci, *k);
-            let (bn, h, wd, cx) = (x.dims[0], x.dims[1], x.dims[2], x.dims[3]);
-            assert_eq!(cx, ci, "channel mismatch: x {:?} vs packed ci {ci}", x.dims);
-            assert!(h >= k && wd >= k, "input {h}x{wd} smaller than kernel {k}");
-            let ho = (h - k) / stride + 1;
-            let wo = (wd - k) / stride + 1;
-            let rows = bn * ho * wo;
-            if k == 1 && stride == 1 {
-                let mut y =
-                    Tensor::new(vec![bn, ho, wo, co], take_buf(arena, rows * co, true));
-                gemm_packed_epi(rows, &x.data, panels, &mut y.data, epi);
-                return y;
-            }
-            let kk = k * k * ci;
-            // im2col: one contiguous k*ci run per kernel row a.  Rows are
-            // batched per parallel chunk (like gemm's row blocks) so the
-            // claim overhead stays negligible next to the memcpys.
-            let mut cols = take_buf(arena, rows * kk, false);
-            let threads = gemm_threads(rows * kk * 4);
-            let rows_per = rows.div_ceil(threads * 4).max(1);
-            par::par_chunks_mut(&mut cols, rows_per * kk, threads, |chunk_idx, dst| {
-                let row0 = chunk_idx * rows_per;
-                for (ri, drow) in dst.chunks_mut(kk).enumerate() {
-                    let row = row0 + ri;
-                    let n = row / (ho * wo);
-                    let r = row % (ho * wo);
-                    let (p, q) = (r / wo, r % wo);
-                    for a in 0..k {
-                        let src = ((n * h + p * stride + a) * wd + q * stride) * cx;
-                        drow[a * k * cx..(a + 1) * k * cx]
-                            .copy_from_slice(&x.data[src..src + k * cx]);
-                    }
-                }
-            });
-            let mut y = Tensor::new(vec![bn, ho, wo, co], take_buf(arena, rows * co, true));
-            gemm_packed_epi(rows, &cols, panels, &mut y.data, epi);
-            give_buf(arena, cols);
-            y
+            dense_conv_valid(x, *co, *ci, *k, DensePanels::F32(panels), stride, epi, arena)
+        }
+        PackedConv::DenseI8 { co, ci, k, panels } => {
+            dense_conv_valid(x, *co, *ci, *k, DensePanels::I8(panels), stride, epi, arena)
         }
         PackedConv::Depthwise { c, k, wt } => {
             depthwise_conv2d_valid_packed(x, *c, *k, wt, stride, epi, arena)
         }
     }
+}
+
+/// The two dense panel layouts share one im2col driver; only the final
+/// GEMM call differs (f32 micro-kernel vs int8 quantize-sweep-dequant).
+enum DensePanels<'a> {
+    F32(&'a PackedB),
+    I8(&'a PackedBI8),
+}
+
+impl DensePanels<'_> {
+    fn gemm_epi(
+        &self,
+        rows: usize,
+        a: &[f32],
+        c: &mut [f32],
+        epi: Option<&Epilogue>,
+        arena: Option<&Arena>,
+    ) {
+        match self {
+            DensePanels::F32(panels) => gemm_packed_epi(rows, a, panels, c, epi),
+            DensePanels::I8(panels) => gemm_packed_epi_i8(rows, a, panels, c, epi, arena),
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn dense_conv_valid(
+    x: &Tensor,
+    co: usize,
+    ci: usize,
+    k: usize,
+    panels: DensePanels,
+    stride: usize,
+    epi: Option<&Epilogue>,
+    arena: Option<&Arena>,
+) -> Tensor {
+    let (bn, h, wd, cx) = (x.dims[0], x.dims[1], x.dims[2], x.dims[3]);
+    assert_eq!(cx, ci, "channel mismatch: x {:?} vs packed ci {ci}", x.dims);
+    assert!(h >= k && wd >= k, "input {h}x{wd} smaller than kernel {k}");
+    let ho = (h - k) / stride + 1;
+    let wo = (wd - k) / stride + 1;
+    let rows = bn * ho * wo;
+    if k == 1 && stride == 1 {
+        let mut y = Tensor::new(vec![bn, ho, wo, co], take_buf(arena, rows * co, true));
+        panels.gemm_epi(rows, &x.data, &mut y.data, epi, arena);
+        return y;
+    }
+    let kk = k * k * ci;
+    // im2col: one contiguous k*ci run per kernel row a.  Rows are
+    // batched per parallel chunk (like gemm's row blocks) so the
+    // claim overhead stays negligible next to the memcpys.
+    let mut cols = take_buf(arena, rows * kk, false);
+    let threads = gemm_threads(rows * kk * 4);
+    let rows_per = rows.div_ceil(threads * 4).max(1);
+    par::par_chunks_mut(&mut cols, rows_per * kk, threads, |chunk_idx, dst| {
+        let row0 = chunk_idx * rows_per;
+        for (ri, drow) in dst.chunks_mut(kk).enumerate() {
+            let row = row0 + ri;
+            let n = row / (ho * wo);
+            let r = row % (ho * wo);
+            let (p, q) = (r / wo, r % wo);
+            for a in 0..k {
+                let src = ((n * h + p * stride + a) * wd + q * stride) * cx;
+                drow[a * k * cx..(a + 1) * k * cx].copy_from_slice(&x.data[src..src + k * cx]);
+            }
+        }
+    });
+    let mut y = Tensor::new(vec![bn, ho, wo, co], take_buf(arena, rows * co, true));
+    panels.gemm_epi(rows, &cols, &mut y.data, epi, arena);
+    give_buf(arena, cols);
+    y
 }
 
 /// VALID conv on host tensors — packs the weight per call and runs the
@@ -1302,5 +1692,139 @@ mod tests {
         let y = mean_pool_dense(&x, &w, &[0.5, -0.5]);
         assert_eq!(y.dims, vec![1, 2]);
         assert!((y.data[0] - 2.5).abs() < 1e-6 && (y.data[1] - 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn isa_name_tags_are_stable() {
+        assert_eq!((Isa::Scalar.name(), Isa::Scalar.tag()), ("scalar", 0));
+        assert_eq!((Isa::Avx2.name(), Isa::Avx2.tag()), ("avx2", 1));
+        assert_eq!((Isa::Neon.name(), Isa::Neon.tag()), ("neon", 2));
+        let avail = available_isas();
+        assert_eq!(avail[0], Isa::Scalar, "scalar must always be available");
+        assert!(avail.contains(&isa()) || isa() == Isa::Scalar);
+    }
+
+    #[test]
+    fn forced_isa_kernels_match_scalar_with_epilogue() {
+        // every hardware ISA against the scalar kernel, with the fused
+        // epilogue engaged — FMA reassociation allows small drift
+        let mut r = Rng::new(41);
+        for &(m, k, n) in &[(1, 1, 1), (4, 16, 16), (5, 7, 17), (63, 129, 33), (96, 40, 64)] {
+            let a: Vec<f32> = (0..m * k).map(|_| r.normal()).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| r.normal()).collect();
+            let bias: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+            let res: Vec<f32> = (0..m * n).map(|_| r.normal()).collect();
+            let bp = PackedB::pack(k, n, &b);
+            let epi = Epilogue { bias: &bias, act: Some(Act::Swish), res: Some(&res[..]) };
+            let mut want = vec![0.0f32; m * n];
+            gemm_packed_epi_isa(Isa::Scalar, m, &a, &bp, &mut want, Some(&epi));
+            for isa_sel in available_isas() {
+                let mut got = vec![0.0f32; m * n];
+                gemm_packed_epi_isa(isa_sel, m, &a, &bp, &mut got, Some(&epi));
+                let diff = want
+                    .iter()
+                    .zip(&got)
+                    .map(|(x, y)| (x - y).abs())
+                    .fold(0.0f32, f32::max);
+                assert!(diff < 1e-3, "{isa_sel:?} ({m},{k},{n}) diff {diff}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_bi8_quantizes_per_column() {
+        // col 0 spans [-2, 4] -> scale 4/127, col 1 all zero -> scale 1.0
+        let b = vec![4.0f32, 0.0, -2.0, 0.0, 1.0, 0.0];
+        let bp = PackedBI8::pack(3, 2, &b);
+        assert_eq!((bp.k(), bp.n()), (3, 2));
+        assert!((bp.scales()[0] - 4.0 / 127.0).abs() < 1e-7);
+        assert_eq!(bp.scales()[1], 1.0);
+        // the column max must quantize to exactly 127
+        assert_eq!(bp.data[0], 127);
+    }
+
+    #[test]
+    fn int8_gemm_tracks_f32_within_quant_tolerance() {
+        let mut r = Rng::new(42);
+        for &(m, k, n) in &[(1, 1, 1), (4, 16, 16), (5, 7, 17), (63, 129, 33)] {
+            let a: Vec<f32> = (0..m * k).map(|_| r.normal()).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| r.normal()).collect();
+            let mut want = vec![0.0f32; m * n];
+            gemm_ref(m, k, n, &a, &b, &mut want);
+            let bp = PackedBI8::pack(k, n, &b);
+            let mut got = vec![0.0f32; m * n];
+            gemm_packed_epi_i8(m, &a, &bp, &mut got, None, None);
+            let diff = want
+                .iter()
+                .zip(&got)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0f32, f32::max);
+            // two symmetric 8-bit quantizations, errors growing ~sqrt(k)
+            let tol = 0.15 * (k as f32).sqrt() + 0.01;
+            assert!(diff < tol, "int8 ({m},{k},{n}) diff {diff} > {tol}");
+        }
+    }
+
+    #[test]
+    fn int8_isa_kernels_match_scalar_int8_exactly() {
+        // integer accumulation + identical dequant expression: every ISA
+        // must agree with the scalar int8 kernel to f32 ulps, not just
+        // within quantization noise
+        let mut r = Rng::new(43);
+        for &(m, k, n) in &[(3, 5, 17), (17, 129, 63), (64, 128, 48)] {
+            let a: Vec<f32> = (0..m * k).map(|_| r.normal()).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| r.normal()).collect();
+            let bp = PackedBI8::pack(k, n, &b);
+            let mut want = vec![0.0f32; m * n];
+            gemm_packed_epi_i8_isa(Isa::Scalar, m, &a, &bp, &mut want, None, None);
+            for isa_sel in available_isas() {
+                let mut got = vec![0.0f32; m * n];
+                gemm_packed_epi_i8_isa(isa_sel, m, &a, &bp, &mut got, None, None);
+                let diff = want
+                    .iter()
+                    .zip(&got)
+                    .map(|(x, y)| (x - y).abs())
+                    .fold(0.0f32, f32::max);
+                assert!(diff < 1e-6, "{isa_sel:?} int8 ({m},{k},{n}) diff {diff}");
+            }
+        }
+    }
+
+    #[test]
+    fn int8_conv_matches_f32_conv_within_tolerance() {
+        let mut r = Rng::new(44);
+        for &(b, h, ci, co, k, s) in &[(1, 8, 3, 4, 3, 1), (2, 9, 2, 5, 3, 2), (2, 7, 3, 2, 1, 1)] {
+            let x = randt(&mut r, &[b, h, h, ci]);
+            let w = randt(&mut r, &[co, ci, k, k]);
+            let pc8 = PackedConv::pack_i8(&w);
+            assert!(pc8.quantized() && !pc8.depthwise());
+            assert_eq!((pc8.k(), pc8.out_channels()), (k, co));
+            let want = conv2d_same(&x, &w, s, false);
+            let got = conv2d_same_packed(&x, &pc8, s, None, None);
+            assert_eq!(got.dims, want.dims);
+            let scale = want.data.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            let diff = got.max_abs_diff(&want);
+            assert!(diff < 0.05 * scale + 0.01, "(b{b} h{h} ci{ci} co{co} k{k} s{s}) diff {diff}");
+        }
+    }
+
+    #[test]
+    fn int8_conv_with_arena_hits_on_second_call() {
+        use crate::util::arena::Arena;
+        let mut r = Rng::new(45);
+        let x = randt(&mut r, &[1, 9, 9, 3]);
+        let w = randt(&mut r, &[4, 3, 3, 3]);
+        let pc = PackedConv::pack_i8(&w);
+        let arena = Arena::new();
+        let bias = vec![0.0f32; 4];
+        let epi = Epilogue { bias: &bias, act: None, res: None };
+        let y1 = conv2d_same_packed(&x, &pc, 1, Some(&epi), Some(&arena));
+        let m1 = arena.misses();
+        assert!(m1 > 0, "first call must populate the arena");
+        arena.give(y1.data);
+        let y2 = conv2d_same_packed(&x, &pc, 1, Some(&epi), Some(&arena));
+        assert_eq!(arena.misses(), m1, "second int8 call must be allocation-free");
+        assert!(arena.hits() > 0);
+        arena.give(y2.data);
     }
 }

@@ -1,0 +1,375 @@
+//! Runtime-detected SIMD inner kernels for the packed micro-kernel GEMM.
+//!
+//! The panel layout of [`super::PackedB`] (NR-wide, k-major, zero-padded)
+//! was designed for exactly this: the full-tile inner loop is MR
+//! broadcast-FMA sweeps over two (AVX2) or four (NEON) vector registers
+//! per row, and the zero padding means edge *columns* never need masked
+//! loads — only the final store is clipped to the real width.
+//!
+//! ISA selection happens **once per process** ([`isa`]), not per call:
+//! `is_x86_feature_detected!` reads cpuid behind a cache but still costs
+//! a branch + call on the hot path, and the selected ISA must be stable
+//! anyway so measured latency tables stay attributable to one kernel
+//! config (the `Tables` fingerprint mixes [`Isa::tag`] in).  Setting
+//! `LM_FORCE_SCALAR=1` before first use pins the dispatcher to the scalar
+//! reference kernel — the troubleshooting escape hatch when a SIMD result
+//! looks wrong on some exotic core.
+//!
+//! The forced-ISA entry points (`gemm_packed_epi_isa` in the parent
+//! module) exist so parity tests and the `packed_gemm_simd_speedup` bench
+//! can run scalar and vector kernels against each other inside one
+//! process; [`available_isas`] reports what the host can actually run
+//! (ignoring `LM_FORCE_SCALAR`, which only changes the *default*).
+
+use std::sync::OnceLock;
+
+/// Instruction set the packed-GEMM inner kernels dispatch on.  `Scalar`
+/// is the portable register-blocked loop (`gemm_packed_rows`), always
+/// available and kept bit-identical as the reference fallback.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Isa {
+    Scalar,
+    Avx2,
+    Neon,
+}
+
+impl Isa {
+    /// Stable lowercase spelling, used in `profile` / `e2e` / `/stats`
+    /// output and in bench record attribution.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+        }
+    }
+
+    /// Small stable integer for fingerprint mixing (`tables::`): a cached
+    /// measured table must not survive a kernel-config change.
+    pub fn tag(&self) -> u64 {
+        match self {
+            Isa::Scalar => 0,
+            Isa::Avx2 => 1,
+            Isa::Neon => 2,
+        }
+    }
+}
+
+static ISA: OnceLock<Isa> = OnceLock::new();
+
+/// The process-wide kernel ISA, detected once on first use: AVX2+FMA on
+/// x86-64, NEON on aarch64, scalar otherwise — or scalar unconditionally
+/// when `LM_FORCE_SCALAR=1`.
+pub fn isa() -> Isa {
+    *ISA.get_or_init(|| {
+        if std::env::var("LM_FORCE_SCALAR").as_deref() == Ok("1") {
+            return Isa::Scalar;
+        }
+        best_hw_isa()
+    })
+}
+
+/// Every ISA this host can execute, scalar first.  Hardware capability
+/// only — `LM_FORCE_SCALAR` does not shrink this list, so parity suites
+/// exercise the vector kernels even in a scalar-pinned CI run.
+pub fn available_isas() -> Vec<Isa> {
+    let mut v = vec![Isa::Scalar];
+    if best_hw_isa() != Isa::Scalar {
+        v.push(best_hw_isa());
+    }
+    v
+}
+
+fn best_hw_isa() -> Isa {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            return Isa::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return Isa::Neon;
+        }
+    }
+    Isa::Scalar
+}
+
+/// AVX2+FMA inner kernels.  Layout contract is identical to the scalar
+/// `gemm_packed_rows`: NR = 16 columns per panel = two `__m256`, MR = 4
+/// rows of C accumulated in 8 ymm registers per full tile.
+#[cfg(target_arch = "x86_64")]
+pub(super) mod x86 {
+    use super::super::{GEMM_MR, GEMM_NR};
+    use std::arch::x86_64::*;
+
+    /// f32 micro-kernel sweep for C rows `[r0, r0 + rows)` (`c_chunk`),
+    /// accumulating (`+=`) like the scalar kernel.  Full tiles keep 4x16
+    /// accumulators in registers; edge rows (< MR) run a 2-register
+    /// per-row sweep over the same zero-padded panel; ragged panel tails
+    /// spill to a stack tile and clip the store to `nw`.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 and FMA support (`Isa::Avx2` is
+    /// only ever produced by runtime detection).
+    #[allow(clippy::too_many_arguments, clippy::needless_range_loop)]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn gemm_rows_f32(
+        r0: usize,
+        rows: usize,
+        k: usize,
+        n: usize,
+        a: &[f32],
+        bdata: &[f32],
+        c_chunk: &mut [f32],
+    ) {
+        let np = n.div_ceil(GEMM_NR);
+        let mut i0 = 0;
+        while i0 < rows {
+            let mr = GEMM_MR.min(rows - i0);
+            for p in 0..np {
+                let j0 = p * GEMM_NR;
+                let nw = GEMM_NR.min(n - j0);
+                let panel = &bdata[p * k * GEMM_NR..(p + 1) * k * GEMM_NR];
+                if mr == GEMM_MR {
+                    let mut acc = [[_mm256_setzero_ps(); 2]; GEMM_MR];
+                    for kk in 0..k {
+                        let b0 = _mm256_loadu_ps(panel.as_ptr().add(kk * GEMM_NR));
+                        let b1 = _mm256_loadu_ps(panel.as_ptr().add(kk * GEMM_NR + 8));
+                        for i in 0..GEMM_MR {
+                            let av = _mm256_set1_ps(*a.get_unchecked((r0 + i0 + i) * k + kk));
+                            acc[i][0] = _mm256_fmadd_ps(av, b0, acc[i][0]);
+                            acc[i][1] = _mm256_fmadd_ps(av, b1, acc[i][1]);
+                        }
+                    }
+                    if nw == GEMM_NR {
+                        for i in 0..GEMM_MR {
+                            let cp = c_chunk.as_mut_ptr().add((i0 + i) * n + j0);
+                            _mm256_storeu_ps(cp, _mm256_add_ps(_mm256_loadu_ps(cp), acc[i][0]));
+                            let cp8 = cp.add(8);
+                            _mm256_storeu_ps(cp8, _mm256_add_ps(_mm256_loadu_ps(cp8), acc[i][1]));
+                        }
+                    } else {
+                        let mut tmp = [0.0f32; GEMM_NR];
+                        for i in 0..GEMM_MR {
+                            _mm256_storeu_ps(tmp.as_mut_ptr(), acc[i][0]);
+                            _mm256_storeu_ps(tmp.as_mut_ptr().add(8), acc[i][1]);
+                            let crow = &mut c_chunk[(i0 + i) * n + j0..][..nw];
+                            for (cv, &av) in crow.iter_mut().zip(&tmp[..nw]) {
+                                *cv += av;
+                            }
+                        }
+                    }
+                } else {
+                    for i in 0..mr {
+                        let arow = &a[(r0 + i0 + i) * k..][..k];
+                        let mut acc0 = _mm256_setzero_ps();
+                        let mut acc1 = _mm256_setzero_ps();
+                        for (kk, &av) in arow.iter().enumerate() {
+                            let avv = _mm256_set1_ps(av);
+                            let b0 = _mm256_loadu_ps(panel.as_ptr().add(kk * GEMM_NR));
+                            let b1 = _mm256_loadu_ps(panel.as_ptr().add(kk * GEMM_NR + 8));
+                            acc0 = _mm256_fmadd_ps(avv, b0, acc0);
+                            acc1 = _mm256_fmadd_ps(avv, b1, acc1);
+                        }
+                        let mut tmp = [0.0f32; GEMM_NR];
+                        _mm256_storeu_ps(tmp.as_mut_ptr(), acc0);
+                        _mm256_storeu_ps(tmp.as_mut_ptr().add(8), acc1);
+                        let crow = &mut c_chunk[(i0 + i) * n + j0..][..nw];
+                        for (cv, &av) in crow.iter_mut().zip(&tmp[..nw]) {
+                            *cv += av;
+                        }
+                    }
+                }
+            }
+            i0 += mr;
+        }
+    }
+
+    /// int8 micro-kernel sweep with i32 accumulation and dequantization
+    /// fused into the tile store: `c[i][j] += acc_i32 * ascale[i] *
+    /// bscale[j]`.  `aq` / `ascale` are chunk-local (row 0 = first row of
+    /// `c_chunk`).
+    ///
+    /// Two k-steps per iteration: the two 16-wide i8 panel rows widen to
+    /// i16 (`cvtepi8_epi16`) and interleave per 128-bit lane
+    /// (`unpacklo/hi_epi16`), so one `madd_epi16` against a broadcast
+    /// (a_k, a_k+1) i16 pair yields 8 i32 per-column dot-pair sums.  The
+    /// lane interleave permutes columns: acc0 holds {0..3, 8..11}, acc1
+    /// holds {4..7, 12..15}; the spill loop un-permutes.  |acc| grows by
+    /// at most 2*127^2 per k-pair, so i32 is safe for any k the im2col
+    /// path can produce (overflow needs k > 2^31 / 127^2 ≈ 133k).
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support.
+    #[allow(clippy::too_many_arguments, clippy::needless_range_loop)]
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gemm_rows_i8(
+        rows: usize,
+        k: usize,
+        n: usize,
+        aq: &[i8],
+        ascale: &[f32],
+        bdata: &[i8],
+        bscale: &[f32],
+        c_chunk: &mut [f32],
+    ) {
+        let np = n.div_ceil(GEMM_NR);
+        let mut i0 = 0;
+        while i0 < rows {
+            let mr = GEMM_MR.min(rows - i0);
+            for p in 0..np {
+                let j0 = p * GEMM_NR;
+                let nw = GEMM_NR.min(n - j0);
+                let panel = &bdata[p * k * GEMM_NR..(p + 1) * k * GEMM_NR];
+                let mut acc = [[_mm256_setzero_si256(); 2]; GEMM_MR];
+                let mut kk = 0;
+                while kk < k {
+                    let b0 = _mm256_cvtepi8_epi16(_mm_loadu_si128(
+                        panel.as_ptr().add(kk * GEMM_NR) as *const __m128i,
+                    ));
+                    let b1 = if kk + 1 < k {
+                        _mm256_cvtepi8_epi16(_mm_loadu_si128(
+                            panel.as_ptr().add((kk + 1) * GEMM_NR) as *const __m128i,
+                        ))
+                    } else {
+                        _mm256_setzero_si256()
+                    };
+                    let lo = _mm256_unpacklo_epi16(b0, b1);
+                    let hi = _mm256_unpackhi_epi16(b0, b1);
+                    for i in 0..mr {
+                        let a0 = *aq.get_unchecked((i0 + i) * k + kk) as i16 as u16 as u32;
+                        let a1 = if kk + 1 < k {
+                            *aq.get_unchecked((i0 + i) * k + kk + 1) as i16 as u16 as u32
+                        } else {
+                            0
+                        };
+                        let pair = _mm256_set1_epi32(((a1 << 16) | a0) as i32);
+                        acc[i][0] = _mm256_add_epi32(acc[i][0], _mm256_madd_epi16(lo, pair));
+                        acc[i][1] = _mm256_add_epi32(acc[i][1], _mm256_madd_epi16(hi, pair));
+                    }
+                    kk += 2;
+                }
+                for i in 0..mr {
+                    let mut t0 = [0i32; 8];
+                    let mut t1 = [0i32; 8];
+                    _mm256_storeu_si256(t0.as_mut_ptr() as *mut __m256i, acc[i][0]);
+                    _mm256_storeu_si256(t1.as_mut_ptr() as *mut __m256i, acc[i][1]);
+                    let s = ascale[i0 + i];
+                    let crow = &mut c_chunk[(i0 + i) * n + j0..][..nw];
+                    for (j, cv) in crow.iter_mut().enumerate() {
+                        // un-permute the unpack lane order (see above)
+                        let v = match j {
+                            0..=3 => t0[j],
+                            4..=7 => t1[j - 4],
+                            8..=11 => t0[j - 4],
+                            _ => t1[j - 8],
+                        };
+                        *cv += v as f32 * s * bscale[j0 + j];
+                    }
+                }
+            }
+            i0 += mr;
+        }
+    }
+}
+
+/// NEON inner kernels (aarch64).  f32 only: the int8 path falls back to
+/// the scalar i32-accumulating kernel on aarch64 — the f32 kernel is
+/// where the panel layout pays off, and the scalar i8 loop is already
+/// auto-vectorizable; a hand-written `vmlal_s8` kernel can land once it
+/// can be benchmarked on real hardware.
+#[cfg(target_arch = "aarch64")]
+pub(super) mod arm {
+    use super::super::{GEMM_MR, GEMM_NR};
+    use std::arch::aarch64::*;
+
+    /// f32 micro-kernel sweep, NEON: NR = 16 columns = four `float32x4_t`
+    /// per row, MR = 4 rows in 16 q-register accumulators per full tile.
+    /// Same accumulate / spill / clip contract as the AVX2 kernel.
+    ///
+    /// # Safety
+    /// Caller must have verified NEON support.
+    #[allow(clippy::too_many_arguments, clippy::needless_range_loop)]
+    #[target_feature(enable = "neon")]
+    pub unsafe fn gemm_rows_f32(
+        r0: usize,
+        rows: usize,
+        k: usize,
+        n: usize,
+        a: &[f32],
+        bdata: &[f32],
+        c_chunk: &mut [f32],
+    ) {
+        let np = n.div_ceil(GEMM_NR);
+        let mut i0 = 0;
+        while i0 < rows {
+            let mr = GEMM_MR.min(rows - i0);
+            for p in 0..np {
+                let j0 = p * GEMM_NR;
+                let nw = GEMM_NR.min(n - j0);
+                let panel = &bdata[p * k * GEMM_NR..(p + 1) * k * GEMM_NR];
+                if mr == GEMM_MR {
+                    let mut acc = [[vdupq_n_f32(0.0); 4]; GEMM_MR];
+                    for kk in 0..k {
+                        let bp = panel.as_ptr().add(kk * GEMM_NR);
+                        let b = [
+                            vld1q_f32(bp),
+                            vld1q_f32(bp.add(4)),
+                            vld1q_f32(bp.add(8)),
+                            vld1q_f32(bp.add(12)),
+                        ];
+                        for i in 0..GEMM_MR {
+                            let av = vdupq_n_f32(*a.get_unchecked((r0 + i0 + i) * k + kk));
+                            for q in 0..4 {
+                                acc[i][q] = vfmaq_f32(acc[i][q], b[q], av);
+                            }
+                        }
+                    }
+                    if nw == GEMM_NR {
+                        for i in 0..GEMM_MR {
+                            let cp = c_chunk.as_mut_ptr().add((i0 + i) * n + j0);
+                            for q in 0..4 {
+                                let cq = cp.add(4 * q);
+                                vst1q_f32(cq, vaddq_f32(vld1q_f32(cq), acc[i][q]));
+                            }
+                        }
+                    } else {
+                        let mut tmp = [0.0f32; GEMM_NR];
+                        for i in 0..GEMM_MR {
+                            for q in 0..4 {
+                                vst1q_f32(tmp.as_mut_ptr().add(4 * q), acc[i][q]);
+                            }
+                            let crow = &mut c_chunk[(i0 + i) * n + j0..][..nw];
+                            for (cv, &av) in crow.iter_mut().zip(&tmp[..nw]) {
+                                *cv += av;
+                            }
+                        }
+                    }
+                } else {
+                    for i in 0..mr {
+                        let arow = &a[(r0 + i0 + i) * k..][..k];
+                        let mut acc = [vdupq_n_f32(0.0); 4];
+                        for (kk, &av) in arow.iter().enumerate() {
+                            let avv = vdupq_n_f32(av);
+                            let bp = panel.as_ptr().add(kk * GEMM_NR);
+                            for q in 0..4 {
+                                acc[q] = vfmaq_f32(acc[q], vld1q_f32(bp.add(4 * q)), avv);
+                            }
+                        }
+                        let mut tmp = [0.0f32; GEMM_NR];
+                        for q in 0..4 {
+                            vst1q_f32(tmp.as_mut_ptr().add(4 * q), acc[q]);
+                        }
+                        let crow = &mut c_chunk[(i0 + i) * n + j0..][..nw];
+                        for (cv, &av) in crow.iter_mut().zip(&tmp[..nw]) {
+                            *cv += av;
+                        }
+                    }
+                }
+            }
+            i0 += mr;
+        }
+    }
+}

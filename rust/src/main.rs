@@ -127,6 +127,11 @@ fn usage() -> &'static str {
        --fast            analytical latency + short schedules (CI)\n\
        --measured        pin measured latency (overrides --fast)\n\
        --force           ignore cached pretrained weights and tables\n\
+       --weight-format f32|int8  host-backend weight format: int8\n\
+                         quantizes dense conv weights per output channel\n\
+                         at lowering (activations stay f32).  Also\n\
+                         settable via LM_WEIGHT_FORMAT; set\n\
+                         LM_FORCE_SCALAR=1 to pin the scalar kernels\n\
        --workers N       importance-table worker threads\n\
        --lat-warmup N --lat-iters N      deployed-plan latency protocol\n\
        --eval-batches N                  eval-stream batches per metric\n\
@@ -185,7 +190,7 @@ fn parse_method(args: &Args) -> Result<Method> {
     }
 }
 
-fn build_cfg(args: &Args) -> PipelineCfg {
+fn build_cfg(args: &Args) -> Result<PipelineCfg> {
     let mut cfg = PipelineCfg::default();
     cfg.seed = args.usize_or("seed", 0) as u64;
     cfg.pretrain_steps = args.usize_or("pretrain", cfg.pretrain_steps);
@@ -208,7 +213,14 @@ fn build_cfg(args: &Args) -> PipelineCfg {
         cfg.force = true;
         cfg.build.force = true;
     }
-    cfg
+    if let Some(wf) = args.get("weight-format") {
+        // validated here, then carried by env like LM_FAST/LM_MEASURED:
+        // HostBackend::new() reads LM_WEIGHT_FORMAT at construction
+        layermerge::runtime::WeightFormat::parse(wf)
+            .with_context(|| format!("unknown weight format {wf} (expected f32|int8)"))?;
+        std::env::set_var("LM_WEIGHT_FORMAT", wf);
+    }
+    Ok(cfg)
 }
 
 fn main() -> Result<()> {
@@ -221,7 +233,7 @@ fn main() -> Result<()> {
     let artifacts = PathBuf::from(
         args.get("artifacts").unwrap_or("artifacts"),
     );
-    let cfg = build_cfg(&args);
+    let cfg = build_cfg(&args)?;
     let host = match args.get("backend") {
         Some("host") => true,
         Some("pjrt") => false,
@@ -974,6 +986,10 @@ fn e2e_cmd(ctx: &Ctx, model: &str, args: &Args) -> Result<()> {
         ctx.mode_tag()
     );
     println!(
+        "  kernels   : isa {}  weight-format {}",
+        r.isa, r.weight_format
+    );
+    println!(
         "  original  : pred {:.4}ms  actual {:.4}ms  depth {}",
         r.pred_orig_ms, r.actual_orig_ms, r.depth_before
     );
@@ -1024,7 +1040,11 @@ fn profile_host(ctx: &Ctx, model: &str) -> Result<()> {
     let engine = ctx.engine();
     let (_, orig, merged) = host_plans(model)?;
     let (w, it) = (ctx.cfg.lat_warmup, ctx.cfg.lat_iters);
-    println!("profile {model} [host backend] ({w} warmup, {it} iters):");
+    println!(
+        "profile {model} [host backend, isa {}, weights {}] ({w} warmup, {it} iters):",
+        layermerge::kernels::isa().name(),
+        engine.backend().weight_format().name(),
+    );
     for (name, plan) in [("original", &orig), ("greedy-merged", &merged)] {
         for fmt in [Format::Eager, Format::Fused] {
             let cp = engine.lower(plan, fmt)?;

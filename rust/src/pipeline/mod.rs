@@ -437,6 +437,11 @@ pub struct E2eReport {
     pub dp_solve_ms: f64,
     pub twostage_objective: f64,
     pub twostage_solve_ms: f64,
+    /// Active SIMD kernel ISA (`kernels::isa().name()`) the run executed
+    /// with — latency numbers are meaningless without it.
+    pub isa: String,
+    /// Weight format the deployed plans lowered into (`"f32"`/`"int8"`).
+    pub weight_format: String,
 }
 
 impl E2eReport {
@@ -517,6 +522,8 @@ pub fn e2e_host(
         dp_solve_ms: dp_sol.solve_ms,
         twostage_objective: two_sol.objective,
         twostage_solve_ms: two_sol.solve_ms,
+        isa: crate::kernels::isa().name().to_string(),
+        weight_format: backend.weight_format().name().to_string(),
     })
 }
 

@@ -210,6 +210,57 @@ impl OpHandle {
     }
 }
 
+/// The numeric format a backend lowers **weights** into at
+/// `upload_weight` time.  Activations are f32 in every format — `Int8`
+/// means dense conv weights are symmetric per-output-channel quantized
+/// at lowering ([`crate::kernels::PackedConv::pack_i8`]) and dequantized
+/// inside the GEMM epilogue, so everything above the kernel boundary
+/// (exec, serve, fleet, chaos) is format-oblivious.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WeightFormat {
+    #[default]
+    F32,
+    Int8,
+}
+
+impl WeightFormat {
+    /// Stable lowercase spelling ("f32" / "int8") for CLI flags, profile
+    /// / e2e output and the serve `/stats` frame.
+    pub fn name(&self) -> &'static str {
+        match self {
+            WeightFormat::F32 => "f32",
+            WeightFormat::Int8 => "int8",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<WeightFormat> {
+        match s {
+            "f32" => Some(WeightFormat::F32),
+            "int8" => Some(WeightFormat::Int8),
+            _ => None,
+        }
+    }
+
+    /// Process default: `LM_WEIGHT_FORMAT` (set by the `--weight-format`
+    /// CLI flag), falling back to f32.  An unknown value falls back to
+    /// f32 rather than erroring — the env var is a deployment knob, not
+    /// an API.
+    pub fn from_env() -> WeightFormat {
+        std::env::var("LM_WEIGHT_FORMAT")
+            .ok()
+            .and_then(|v| WeightFormat::parse(&v))
+            .unwrap_or_default()
+    }
+
+    /// Small stable integer for fingerprint mixing and weight-cache keys.
+    pub fn tag(&self) -> u64 {
+        match self {
+            WeightFormat::F32 => 0,
+            WeightFormat::Int8 => 1,
+        }
+    }
+}
+
 /// A runtime backend the lowered execution plans dispatch through.  Both
 /// implementations are `Send + Sync`, so a `CompiledPlan` stays shareable
 /// across serving workers.
@@ -236,6 +287,14 @@ pub trait Backend: Send + Sync {
     fn upload_weight(&self, desc: &OpDesc, w: &Tensor) -> Result<Value> {
         let _ = desc;
         self.upload(w)
+    }
+
+    /// The weight format `upload_weight` lowers into.  Default f32; the
+    /// host backend returns its construction-time knob.  Decorators must
+    /// delegate so weight-cache keys and `/stats` attribution see the
+    /// real format.
+    fn weight_format(&self) -> WeightFormat {
+        WeightFormat::F32
     }
 
     /// Backend-resident buffer -> host tensor.  Counted.
@@ -433,6 +492,16 @@ mod tests {
         assert_eq!(arena.cached(), 1, "last drop recycles the buffer");
         let buf = arena.take(6);
         assert_eq!((buf.len(), arena.hits()), (6, 1));
+    }
+
+    #[test]
+    fn weight_format_names_round_trip() {
+        for fmt in [WeightFormat::F32, WeightFormat::Int8] {
+            assert_eq!(WeightFormat::parse(fmt.name()), Some(fmt));
+        }
+        assert_eq!(WeightFormat::parse("bf16"), None);
+        assert_eq!(WeightFormat::default(), WeightFormat::F32);
+        assert_ne!(WeightFormat::F32.tag(), WeightFormat::Int8.tag());
     }
 
     #[test]

@@ -29,12 +29,13 @@ use std::sync::Arc;
 use anyhow::{Context, Result};
 
 use crate::kernels::{self, Epilogue};
-use crate::runtime::backend::{Backend, OpDesc, OpHandle, Value};
+use crate::runtime::backend::{Backend, OpDesc, OpHandle, Value, WeightFormat};
 use crate::util::arena::Arena;
 use crate::util::tensor::Tensor;
 
 pub struct HostBackend {
     per_dispatch: bool,
+    format: WeightFormat,
     arena: Arc<Arena>,
     uploads: AtomicUsize,
     downloads: AtomicUsize,
@@ -42,10 +43,20 @@ pub struct HostBackend {
 
 impl HostBackend {
     /// Resident mode: values flow between ops as shared handles, scratch
-    /// and activations recycle through the arena.
+    /// and activations recycle through the arena.  The weight format
+    /// comes from `LM_WEIGHT_FORMAT` (the `--weight-format` CLI knob) so
+    /// every construction site — engine, e2e loop, tables, benches —
+    /// deploys the same lowering without signature churn; tests that
+    /// need a specific format use [`HostBackend::with_format`].
     pub fn new() -> HostBackend {
+        HostBackend::with_format(WeightFormat::from_env())
+    }
+
+    /// Resident mode with an explicit weight format.
+    pub fn with_format(format: WeightFormat) -> HostBackend {
         HostBackend {
             per_dispatch: false,
+            format,
             arena: Arc::new(Arena::new()),
             uploads: AtomicUsize::new(0),
             downloads: AtomicUsize::new(0),
@@ -54,9 +65,10 @@ impl HostBackend {
 
     /// Per-dispatch mode: every op round-trips all operands through the
     /// (counted, memcpy'd) transfer boundary — the pre-residency cost
-    /// model, kept as a measurable baseline.
+    /// model, kept as a measurable baseline.  Always f32: unpacked,
+    /// re-transposed weights are part of the old cost shape.
     pub fn per_dispatch() -> HostBackend {
-        HostBackend { per_dispatch: true, ..HostBackend::new() }
+        HostBackend { per_dispatch: true, ..HostBackend::with_format(WeightFormat::F32) }
     }
 
     /// The scratch arena (hit/miss counters pin the zero-allocation
@@ -94,6 +106,10 @@ impl Backend for HostBackend {
         }
     }
 
+    fn weight_format(&self) -> WeightFormat {
+        self.format
+    }
+
     fn upload_weight(&self, desc: &OpDesc, w: &Tensor) -> Result<Value> {
         // per-dispatch keeps the old cost shape: unpacked weight, re-
         // transposed inside every conv call
@@ -102,7 +118,14 @@ impl Backend for HostBackend {
         }
         if let OpDesc::Conv { depthwise, .. } = desc {
             self.uploads.fetch_add(1, Ordering::Relaxed);
-            Ok(Value::packed(kernels::PackedConv::pack(w, *depthwise), w.dims.clone()))
+            // int8 lowers dense convs to per-channel quantized panels;
+            // depthwise stays f32 (its direct kernel never hits the GEMM)
+            let pc = if self.format == WeightFormat::Int8 && !*depthwise {
+                kernels::PackedConv::pack_i8(w)
+            } else {
+                kernels::PackedConv::pack(w, *depthwise)
+            };
+            Ok(Value::packed(pc, w.dims.clone()))
         } else {
             self.upload(w)
         }
@@ -327,5 +350,49 @@ mod tests {
             "packed vs fallback diff {}",
             y_packed.max_abs_diff(&y_plain)
         );
+    }
+
+    #[test]
+    fn int8_backend_tracks_f32_backend_within_quant_tolerance() {
+        use crate::util::rng::Rng;
+        let mut r = Rng::new(78);
+        let (b, h, w, cin, cout, k) = (1usize, 8usize, 8usize, 4usize, 6usize, 3usize);
+        let x = Tensor::new(
+            vec![b, h, w, cin],
+            (0..b * h * w * cin).map(|_| r.normal()).collect(),
+        );
+        let wt = Tensor::new(
+            vec![cout, cin, k, k],
+            (0..cout * cin * k * k).map(|_| r.normal()).collect(),
+        );
+        let bias = Tensor::new(vec![cout], (0..cout).map(|_| r.normal()).collect());
+        let desc = OpDesc::Conv {
+            b,
+            h,
+            w,
+            cin,
+            cout,
+            k,
+            stride: 1,
+            depthwise: false,
+            act: None,
+            residual: false,
+        };
+        let f32be = HostBackend::with_format(WeightFormat::F32);
+        let i8be = HostBackend::with_format(WeightFormat::Int8);
+        assert_eq!(f32be.weight_format(), WeightFormat::F32);
+        assert_eq!(i8be.weight_format(), WeightFormat::Int8);
+        let mut outs = Vec::new();
+        for be in [&f32be, &i8be] {
+            let op = be.lower_op(&desc).unwrap();
+            let xb = be.upload(&x).unwrap();
+            let bb = be.upload(&bias).unwrap();
+            let wb = be.upload_weight(&desc, &wt).unwrap();
+            outs.push(be.download(&be.run(&op, &[&xb, &wb, &bb]).unwrap()).unwrap());
+        }
+        assert_eq!(outs[0].dims, outs[1].dims);
+        let scale = outs[0].data.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let diff = outs[0].max_abs_diff(&outs[1]);
+        assert!(diff < 0.05 * scale + 0.01, "int8 vs f32 conv diff {diff}");
     }
 }

@@ -33,7 +33,7 @@ use crate::util::tensor::Tensor;
 pub mod backend;
 pub mod host;
 
-pub use backend::{Backend, OpDesc, OpHandle, PjrtBackend, Value};
+pub use backend::{Backend, OpDesc, OpHandle, PjrtBackend, Value, WeightFormat};
 pub use host::HostBackend;
 
 /// A compiled executable plus its artifact identity.

@@ -266,6 +266,10 @@ impl Backend for FaultBackend {
         self.inner.upload_weight(desc, w)
     }
 
+    fn weight_format(&self) -> crate::runtime::WeightFormat {
+        self.inner.weight_format()
+    }
+
     fn download(&self, v: &Value) -> Result<Tensor> {
         self.inner.download(v)
     }

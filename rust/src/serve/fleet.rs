@@ -747,6 +747,21 @@ impl Fleet {
         plock(&self.shared.state).order.clone()
     }
 
+    /// Weight format the fleet's deployed plans execute with, taken from
+    /// the first deployed rung in DRR order (all rungs of a fleet lower
+    /// through the same backend, so one answer covers the ladder).  An
+    /// empty fleet reports the process-default format.
+    pub fn weight_format(&self) -> crate::runtime::WeightFormat {
+        let g = plock(&self.shared.state);
+        g.order
+            .iter()
+            .filter_map(|name| g.tenants.get(name))
+            .flat_map(|t| t.rungs.first())
+            .map(|r| r.dispatch.weight_format())
+            .next()
+            .unwrap_or_else(crate::runtime::WeightFormat::from_env)
+    }
+
     /// Requests currently queued for `tenant` (0 for unknown tenants).
     pub fn queue_depth(&self, tenant: &str) -> usize {
         let g = plock(&self.shared.state);

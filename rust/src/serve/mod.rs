@@ -84,7 +84,7 @@ use anyhow::{Context, Result};
 use crate::exec::{CompiledPlan, Format, Plan};
 use crate::ir::Task;
 use crate::model::{Manifest, Model};
-use crate::runtime::{Backend, HostBackend, LatencyStats, PjrtBackend, Runtime};
+use crate::runtime::{Backend, HostBackend, LatencyStats, PjrtBackend, Runtime, WeightFormat};
 use crate::util::par;
 use crate::util::tensor::Tensor;
 
@@ -781,6 +781,16 @@ impl Dispatch {
             Dispatch::Fn(f) => f(x, t),
         }
     }
+
+    /// Weight format this dispatch executes with.  Plans recorded theirs
+    /// at lower time; bare host functions have no lowered operands, so
+    /// they report the process-default format.
+    fn weight_format(&self) -> WeightFormat {
+        match self {
+            Dispatch::Plan(cp) => cp.weight_format(),
+            Dispatch::Fn(_) => WeightFormat::from_env(),
+        }
+    }
 }
 
 /// A deployed network: `'static`, `Send + Sync`, shareable across client
@@ -914,6 +924,14 @@ impl Session {
     /// Requests currently queued (not yet taken by a worker).
     pub fn queue_depth(&self) -> usize {
         plock(&self.shared.state).items.len()
+    }
+
+    /// Weight format of the deployed plan (recorded at lower time —
+    /// [`crate::exec::CompiledPlan::weight_format`]); surfaced in serve
+    /// `/stats` so a running deployment is attributable to its kernel
+    /// configuration.
+    pub fn weight_format(&self) -> WeightFormat {
+        self.backend.weight_format()
     }
 
     /// Synchronous one-shot inference: full `[B, ..]` input, no queue.

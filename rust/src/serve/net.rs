@@ -739,7 +739,8 @@ fn stats_fields(s: &ServeStats) -> Vec<(&'static str, Json)> {
 
 /// The `/stats` reply: [`super::ServeStats`] totals (one coherent
 /// snapshot — every counter from the same lock acquisition) plus the
-/// net-tier counters and live queue telemetry, as one JSON object.  A
+/// net-tier counters, live queue telemetry, and a `kernel` object (the
+/// active SIMD ISA and deployed weight format), as one JSON object.  A
 /// fleet-backed server additionally reports a `tenants` object (the same
 /// counter schema per tenant, each its own coherent snapshot) and a
 /// `fleet` object with weight-dedup bytes and router telemetry.
@@ -792,6 +793,17 @@ fn stats_json(inner: &NetInner) -> String {
             f
         }
     };
+    let wf = match &inner.target {
+        ServeTarget::Session(sess) => sess.weight_format(),
+        ServeTarget::Fleet(fleet) => fleet.weight_format(),
+    };
+    fields.push((
+        "kernel",
+        Json::obj(vec![
+            ("isa", Json::str(crate::kernels::isa().name())),
+            ("weight_format", Json::str(wf.name())),
+        ]),
+    ));
     fields.push((
         "net",
         Json::obj(vec![

@@ -280,6 +280,16 @@ impl Default for BuildCfg {
     }
 }
 
+/// Kernel-configuration fingerprint component: the active SIMD ISA and
+/// the backend's weight format both change measured latencies, so cached
+/// tables must invalidate when either flips (e.g. `LM_FORCE_SCALAR=1`
+/// runs, or `--weight-format int8`).  Mixed with a 64-bit odd constant so
+/// the small tag space spreads across the fingerprint domain.
+fn kernel_fp(backend: &Arc<dyn Backend>) -> u64 {
+    let kfp = (crate::kernels::isa().tag() << 8) | backend.weight_format().tag();
+    kfp.wrapping_mul(0x9e37_79b9_97f4_a7c5)
+}
+
 /// Analytical per-op latency: max(compute, bandwidth) + dispatch overhead.
 /// Calibrated once against CPU-XLA convs; the *shape* (k^2 growth, per-op
 /// overhead rewarding depth reduction) is what the solver consumes.
@@ -322,7 +332,8 @@ pub fn build(
 ) -> Result<Tables> {
     let fp = fingerprint(pretrained)
         ^ (cfg.proxy_steps as u64) << 32
-        ^ cfg.iters as u64;
+        ^ cfg.iters as u64
+        ^ kernel_fp(backend);
     let cache = Tables::cache_path(cache_root, &model.name, cfg.mode);
     if !cfg.force {
         if let Some(t) = Tables::load(&cache, fp) {
@@ -478,7 +489,8 @@ pub fn build_host(
     let fp = fingerprint(flat)
         ^ (cfg.warmup as u64) << 48
         ^ (cfg.iters as u64) << 16
-        ^ 0x5eed;
+        ^ 0x5eed
+        ^ kernel_fp(backend);
     let cache = Tables::cache_path(cache_root, &spec.name, cfg.mode);
     if !cfg.force {
         if let Some(t) = Tables::load(&cache, fp) {

@@ -3,7 +3,10 @@
 //! strided) — the load-bearing guarantee that the fast host path computes
 //! the paper's Sec. 2 operator exactly.  Host-only: no artifacts needed.
 
-use layermerge::kernels::{conv2d_valid, conv2d_valid_ref, gemm, gemm_packed, gemm_ref, PackedB};
+use layermerge::kernels::{
+    available_isas, conv2d_valid, conv2d_valid_ref, gemm, gemm_packed, gemm_packed_epi_i8_isa,
+    gemm_packed_epi_isa, gemm_ref, Isa, PackedB, PackedBI8,
+};
 use layermerge::merge::{expand_depthwise, merge_kernels, merge_kernels_ref};
 use layermerge::util::prop::check_res;
 use layermerge::util::rng::Rng;
@@ -73,6 +76,78 @@ fn packed_gemm_matches_naive_over_random_shapes() {
             }
         },
     );
+}
+
+/// Every SIMD kernel this host can run matches the scalar micro-kernel
+/// (itself pinned against `gemm_ref` above) at shapes that are **not**
+/// multiples of MR=4 / NR=16 — the edge-tile paths where a vector kernel
+/// most plausibly diverges.  `available_isas` reports hardware capability
+/// regardless of `LM_FORCE_SCALAR`, so the CI scalar-pinned run still
+/// exercises the vector kernels here.
+#[test]
+fn every_available_isa_matches_scalar_at_ragged_shapes() {
+    let mut r = Rng::new(0x15a0);
+    for &m in &[1usize, 3, 17, 63] {
+        for &n in &[1usize, 3, 17, 63] {
+            for &k in &[1usize, 5, 128, 129] {
+                let a: Vec<f32> = (0..m * k).map(|_| r.normal()).collect();
+                let b: Vec<f32> = (0..k * n).map(|_| r.normal()).collect();
+                let mut want = vec![0.0f32; m * n];
+                gemm_ref(m, k, n, &a, &b, &mut want);
+                let bp = PackedB::pack(k, n, &b);
+                for isa in available_isas() {
+                    let mut got = vec![0.0f32; m * n];
+                    gemm_packed_epi_isa(isa, m, &a, &bp, &mut got, None);
+                    let diff = want
+                        .iter()
+                        .zip(&got)
+                        .map(|(x, y)| (x - y).abs())
+                        .fold(0.0f32, f32::max);
+                    assert!(diff < 1e-3, "{isa:?} ({m},{k},{n}) diff {diff}");
+                }
+            }
+        }
+    }
+}
+
+/// The int8 kernels across ISAs at the same ragged grid: the scalar int8
+/// kernel must track the f32 reference within quantization tolerance, and
+/// every vector int8 kernel must match the scalar int8 kernel *bitwise*
+/// (integer accumulation is order-independent and the dequantization
+/// expression is identical, so there is no reassociation slack to allow).
+#[test]
+fn int8_isas_agree_and_track_f32_at_ragged_shapes() {
+    let mut r = Rng::new(0x18a8);
+    for &m in &[1usize, 3, 17, 63] {
+        for &n in &[1usize, 3, 17, 63] {
+            for &k in &[1usize, 5, 128, 129] {
+                let a: Vec<f32> = (0..m * k).map(|_| r.normal()).collect();
+                let b: Vec<f32> = (0..k * n).map(|_| r.normal()).collect();
+                let mut want = vec![0.0f32; m * n];
+                gemm_ref(m, k, n, &a, &b, &mut want);
+                let bp = PackedBI8::pack(k, n, &b);
+                let mut scalar = vec![0.0f32; m * n];
+                gemm_packed_epi_i8_isa(Isa::Scalar, m, &a, &bp, &mut scalar, None, None);
+                let tol = 0.15 * (k as f32).sqrt() + 0.01;
+                let qdiff = want
+                    .iter()
+                    .zip(&scalar)
+                    .map(|(x, y)| (x - y).abs())
+                    .fold(0.0f32, f32::max);
+                assert!(qdiff < tol, "int8 scalar ({m},{k},{n}) diff {qdiff} > {tol}");
+                for isa in available_isas() {
+                    let mut got = vec![0.0f32; m * n];
+                    gemm_packed_epi_i8_isa(isa, m, &a, &bp, &mut got, None, None);
+                    let diff = scalar
+                        .iter()
+                        .zip(&got)
+                        .map(|(x, y)| (x - y).abs())
+                        .fold(0.0f32, f32::max);
+                    assert!(diff < 1e-6, "int8 {isa:?} ({m},{k},{n}) diff {diff}");
+                }
+            }
+        }
+    }
 }
 
 #[test]

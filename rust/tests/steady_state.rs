@@ -9,14 +9,18 @@
 //! * 100 steady-state forwards spawn zero threads — the compute pool's
 //!   monotonic spawn counter does not move;
 //! * batch-parallel attention equals per-batch serial composition;
-//! * a warmed serving worker serves every request allocation-free.
+//! * a warmed serving worker serves every request allocation-free;
+//! * the int8 weight format reaches the same zero-allocation steady
+//!   state (its per-row activation quantization scratch comes from the
+//!   arena) and its forward tracks the f32 forward within quantization
+//!   tolerance end to end.
 
 use std::sync::Arc;
 
 use layermerge::exec::{CompiledPlan, Format, Plan};
 use layermerge::ir::synth;
 use layermerge::kernels::{self, gemm_packed, gemm_ref, PackedB};
-use layermerge::runtime::{Backend, HostBackend};
+use layermerge::runtime::{Backend, HostBackend, WeightFormat};
 use layermerge::serve::{ServeCfg, Session};
 use layermerge::util::par;
 use layermerge::util::rng::Rng;
@@ -54,9 +58,21 @@ fn micro_kernel_parity_at_ragged_shapes() {
 }
 
 fn lowered_chain(name: &str, fmt: Format) -> (Arc<HostBackend>, CompiledPlan, Tensor) {
+    lowered_chain_wf(name, fmt, WeightFormat::F32)
+}
+
+/// [`lowered_chain`] with an explicit weight format — the int8 suite
+/// lowers the same spec through `HostBackend::with_format`.  The input is
+/// seeded identically regardless of format, so two chains over the same
+/// spec see the same activations.
+fn lowered_chain_wf(
+    name: &str,
+    fmt: Format,
+    wf: WeightFormat,
+) -> (Arc<HostBackend>, CompiledPlan, Tensor) {
     let (spec, params) = synth::by_name(name).unwrap();
     let plan = Arc::new(Plan::original(&spec, &params).unwrap());
-    let be = Arc::new(HostBackend::new());
+    let be = Arc::new(HostBackend::with_format(wf));
     let bedyn: Arc<dyn Backend> = be.clone();
     let cp = CompiledPlan::lower(plan, bedyn, fmt).unwrap();
     let mut rng = Rng::new(0xa11c);
@@ -87,6 +103,59 @@ fn steady_state_forward_is_allocation_free() {
             "{fmt:?}: steady-state forwards must be served from the arena"
         );
     }
+}
+
+/// The int8 path must reach the same steady state as f32: the dynamic
+/// per-row activation quantization buffers come from the arena, so from
+/// forward 2 on the miss counter is flat — zero allocations per forward.
+#[test]
+fn int8_steady_state_forward_is_allocation_free() {
+    for fmt in [Format::Eager, Format::Fused] {
+        let (be, cp, x) = lowered_chain_wf("hostchain-tiny", fmt, WeightFormat::Int8);
+        assert_eq!(cp.weight_format(), WeightFormat::Int8);
+        let first = cp.forward(&x, None).unwrap();
+        let arena = be.arena();
+        assert!(arena.misses() > 0, "{fmt:?}: first int8 forward must charge the arena");
+        let (h0, m0) = (arena.hits(), arena.misses());
+        for _ in 0..5 {
+            let out = cp.forward(&x, None).unwrap();
+            assert_eq!(out.dims, first.dims);
+            assert!(out.max_abs_diff(&first) < 1e-6, "steady int8 forwards must agree");
+        }
+        assert_eq!(
+            arena.misses(),
+            m0,
+            "{fmt:?}: steady-state int8 forwards must perform zero buffer allocations"
+        );
+        assert!(
+            arena.hits() > h0,
+            "{fmt:?}: steady-state int8 forwards must be served from the arena"
+        );
+    }
+}
+
+/// End-to-end accuracy gate for the int8 weight format: lowering hostnet
+/// with int8 dense-conv weights must track the f32 forward within
+/// quantization tolerance — per-channel weight scales plus dynamic
+/// per-row activation scales keep the deployed network's outputs close,
+/// not just each GEMM's.
+#[test]
+fn int8_forward_tracks_f32_forward_on_hostnet() {
+    let (_bef, cpf, x) = lowered_chain_wf("hostnet", Format::Fused, WeightFormat::F32);
+    let (_bei, cpi, _) = lowered_chain_wf("hostnet", Format::Fused, WeightFormat::Int8);
+    assert_eq!(cpf.weight_format(), WeightFormat::F32);
+    assert_eq!(cpi.weight_format(), WeightFormat::Int8);
+    let want = cpf.forward(&x, None).unwrap();
+    let got = cpi.forward(&x, None).unwrap();
+    assert_eq!(want.dims, got.dims);
+    let scale = want.data.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    assert!(scale > 0.0, "f32 forward produced all zeros — gate is vacuous");
+    let diff = want.max_abs_diff(&got);
+    let tol = 0.05 * scale + 0.05;
+    assert!(
+        diff < tol,
+        "int8 forward deviates from f32 by {diff} (tolerance {tol}, output scale {scale})"
+    );
 }
 
 #[test]

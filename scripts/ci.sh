@@ -47,6 +47,21 @@ cargo test -q --test baselines
 echo "== cargo test -q --test profile =="
 cargo test -q --test profile
 
+# kernel parity twice: once on the natively detected ISA, once with the
+# process pinned to the scalar kernels.  available_isas() ignores
+# LM_FORCE_SCALAR, so the pinned run still cross-checks the vector
+# kernels against the scalar oracle — both dispatch configurations are
+# exercised no matter which machine CI lands on.
+echo "== cargo test -q --test gemm_parity (native ISA) =="
+cargo test -q --test gemm_parity
+echo "== LM_FORCE_SCALAR=1 cargo test -q --test gemm_parity =="
+LM_FORCE_SCALAR=1 cargo test -q --test gemm_parity
+
+# int8 weight-format gates by name: end-to-end accuracy delta vs the f32
+# forward and the zero-allocation steady state on the quantized path
+echo "== cargo test -q --test steady_state =="
+cargo test -q --test steady_state
+
 # the offline paper loop through the CLI: measured host tables -> DP ->
 # merge -> deploy -> measure, no artifacts and no XLA anywhere
 echo "== e2e smoke (host backend) =="
